@@ -1,0 +1,77 @@
+//! Long-context scenario (the paper's §2.4 motivation): a burst of
+//! 100k-token-class prompts hits a co-located serving system while a pool
+//! of chat requests is decoding. Shows (a) Orca stalling decode, (b)
+//! chunked prefill fixing TBT but paying expert-reload traffic, (c)
+//! layered and hybrid keeping both — and prints the per-request stall
+//! profile of the worst-affected decode request.
+//!
+//! Run: cargo run --release --example long_context
+
+use layered_prefill::config::{
+    Dataset, HardwareDesc, ModelDesc, Policy, SchedulerConfig, WorkloadSpec,
+};
+use layered_prefill::simulator::{simulate, SimOptions};
+use layered_prefill::workload::{Request, Trace, WorkloadGen};
+
+fn main() {
+    // Background: 30 chat-like requests (ShareGPT lengths) from t=0.
+    let mut spec = WorkloadSpec::new(Dataset::ShareGpt, 6.0, 30);
+    spec.seed = 7;
+    let mut reqs = WorkloadGen::new(spec).generate().requests;
+    // Foreground: three 32k-token monsters arriving at t = 2, 4, 6 s.
+    for (i, t) in [(0u64, 2.0f64), (1, 4.0), (2, 6.0)] {
+        reqs.push(Request {
+            id: 1000 + i,
+            arrival_s: t,
+            input_len: 32_768,
+            output_len: 64,
+        });
+    }
+    let trace = Trace::new(reqs);
+    let model = ModelDesc::qwen3_30b_a3b();
+
+    println!("long-context burst: 30 chat requests + 3×32k-token prompts\n");
+    println!(
+        "{:<10} {:>12} {:>12} {:>14} {:>12} {:>12}",
+        "policy", "TBT p99(ms)", "TBT max(ms)", "chat TTFT(s)", "32k TTFT(s)", "expert TB"
+    );
+    for policy in [Policy::Orca, Policy::Chunked, Policy::Layered, Policy::Hybrid] {
+        let cfg = SchedulerConfig::preset(policy);
+        let (m, _) = simulate(
+            model.clone(),
+            HardwareDesc::h100x2(),
+            &cfg,
+            &trace,
+            SimOptions::default(),
+        );
+        let mut tbt = m.tbt_samples();
+        let chat_ttft: f64 = m
+            .requests
+            .iter()
+            .filter(|r| r.id < 1000)
+            .map(|r| r.ttft_s)
+            .sum::<f64>()
+            / 30.0;
+        let big_ttft: f64 = m
+            .requests
+            .iter()
+            .filter(|r| r.id >= 1000)
+            .map(|r| r.ttft_s)
+            .sum::<f64>()
+            / 3.0;
+        println!(
+            "{:<10} {:>12.1} {:>12.1} {:>14.2} {:>12.2} {:>12.1}",
+            policy.name(),
+            tbt.p99() * 1e3,
+            tbt.max() * 1e3,
+            chat_ttft,
+            big_ttft,
+            m.traffic.expert_bytes / 1e12,
+        );
+    }
+    println!(
+        "\n(expected: orca's TBT max explodes on 32k prefills; chunked fixes TBT but\n\
+         loads the most expert weights; layered/hybrid keep TBT bounded at the\n\
+         lowest traffic — the paper's §4.3 long-input story)"
+    );
+}

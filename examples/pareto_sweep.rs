@@ -1,0 +1,86 @@
+//! Pareto sweep: the TTFT–TBT frontier the paper's abstract claims layered
+//! prefill improves. Sweeps request rate and chunk size for the chunked
+//! baseline, and rate for layered, printing (TTFT p99, TBT p99) operating
+//! points per configuration so the frontier shift is visible.
+//!
+//! Run: cargo run --release --example pareto_sweep [-- --dataset arxiv]
+
+use layered_prefill::config::{
+    Dataset, HardwareDesc, ModelDesc, Policy, SchedulerConfig, WorkloadSpec,
+};
+use layered_prefill::simulator::{simulate, SimOptions};
+use layered_prefill::util::cli::Args;
+use layered_prefill::util::table::ascii_chart;
+use layered_prefill::workload::WorkloadGen;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let dataset = Dataset::parse(&args.str("dataset", "arxiv")).unwrap_or(Dataset::Arxiv);
+    let n = args.usize("requests", 60);
+    let rates = args.f64_list("rates", &[0.8, 1.1, 1.4, 1.7]);
+    let model = ModelDesc::qwen3_30b_a3b();
+
+    println!("Pareto sweep: Qwen on {} ({} requests/point)", dataset.name(), n);
+    println!(
+        "{:<18} {:>6} {:>12} {:>12} {:>10}",
+        "config", "req/s", "TTFT p99(s)", "TBT p99(ms)", "mJ/tok"
+    );
+
+    let mut frontier: Vec<(&str, Vec<(f64, f64)>)> = Vec::new();
+    let mut run = |label: &'static str, cfg: SchedulerConfig, pts: &mut Vec<(f64, f64)>| {
+        for &rate in &rates {
+            let mut spec = WorkloadSpec::new(dataset, rate, n);
+            spec.seed = 0xA11CE;
+            let trace = WorkloadGen::new(spec).generate();
+            let (m, _) = simulate(
+                model.clone(),
+                HardwareDesc::h100x2(),
+                &cfg,
+                &trace,
+                SimOptions::default(),
+            );
+            let ttft = m.ttft_samples().p99();
+            let tbt = m.tbt_samples().p99() * 1e3;
+            println!(
+                "{:<18} {:>6.2} {:>12.2} {:>12.1} {:>10.1}",
+                label,
+                rate,
+                ttft,
+                tbt,
+                m.energy_per_token_mj()
+            );
+            pts.push((ttft, tbt));
+        }
+    };
+
+    for (label, chunk) in [
+        ("chunked-512", 512u32),
+        ("chunked-1024", 1024),
+        ("chunked-2048", 2048),
+    ] {
+        let mut cfg = SchedulerConfig::preset(Policy::Chunked);
+        cfg.chunk_size = chunk;
+        let mut pts = Vec::new();
+        run(label, cfg, &mut pts);
+        frontier.push((label, pts));
+    }
+    let mut pts = Vec::new();
+    run("layered", SchedulerConfig::preset(Policy::Layered), &mut pts);
+    frontier.push(("layered", pts));
+
+    let series: Vec<(&str, Vec<(f64, f64)>)> = frontier
+        .iter()
+        .map(|(l, p)| (*l, p.clone()))
+        .collect();
+    println!();
+    print!(
+        "{}",
+        ascii_chart(
+            "TTFT p99 (x, s) vs TBT p99 (y, ms) — lower-left dominates",
+            &series,
+            64,
+            16,
+        )
+    );
+    println!("(paper abstract: layered prefill consistently improves the TTFT-TBT Pareto frontier)");
+}

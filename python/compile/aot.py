@@ -1,0 +1,302 @@
+"""AOT compile path: lower TinyMoE per-layer functions to HLO text artifacts.
+
+Run once via `make artifacts`; python never appears on the request path.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what the
+published `xla` 0.1.6 rust crate links) rejects (`proto.id() <= INT_MAX`).
+The text parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/README.md.
+
+Outputs (in --out, default ../artifacts):
+  <name>.hlo.txt   one per (op-kind, shape-variant); weights are runtime args
+  weights.bin      flat little-endian f32: emb, layer0..layer7 (10 tensors
+                   each, layer_weight_specs order), final_norm, w_out
+  manifest.json    model config + tensor offsets + artifact arg signatures
+  golden.json      prompt -> expected greedy tokens, computed through the
+                   same chunked per-layer path the rust server executes
+"""
+
+import argparse
+import functools
+import json
+import os
+import struct
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import CFG, embed, init_weights, layer_decode, layer_prefill, lm_head
+
+F32 = "f32"
+I32 = "i32"
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def chunk_plan(length, chunks=CFG.prefill_chunks):
+    """Split a prompt into supported chunk sizes; pad the tail to the
+    smallest variant that fits. Mirrors rust sched::chunk_plan — keep in sync.
+    Returns [(chunk_size, real_tokens)]."""
+    biggest = max(chunks)
+    plan = []
+    rem = length
+    while rem >= biggest:
+        plan.append((biggest, biggest))
+        rem -= biggest
+    if rem > 0:
+        fit = min(c for c in chunks if c >= rem)
+        plan.append((fit, rem))
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Artifact definitions
+# ---------------------------------------------------------------------------
+
+
+def build_artifacts():
+    """Return [(name, jitted_fn, arg_specs)] for every exported executable."""
+    D, V = CFG.d_model, CFG.vocab
+    P, M, Hk, dh = CFG.pool_slots, CFG.max_seq, CFG.n_kv_heads, CFG.head_dim
+    pool = spec((P, M, Hk, dh))
+
+    lw_specs = [(n, spec(s)) for n, s in CFG.layer_weight_specs()]
+    n_lw = len(lw_specs)
+
+    arts = []
+
+    for T in CFG.embed_sizes:
+        def embed_fn(emb, ids):
+            return (embed(emb, ids),)
+
+        arts.append(
+            (
+                f"embed_t{T}",
+                embed_fn,
+                [("emb", spec((V, D)))] + [("ids", spec((T,), jnp.int32))],
+            )
+        )
+
+    for S in CFG.prefill_chunks:
+        def prefill_fn(*args):
+            w = args[:n_lw]
+            h, kp, vp, slot, pos = args[n_lw:]
+            return layer_prefill(w, h, kp, vp, slot, pos)
+
+        arts.append(
+            (
+                f"layer_prefill_s{S}",
+                prefill_fn,
+                lw_specs
+                + [
+                    ("h", spec((S, D))),
+                    ("k_pool", pool),
+                    ("v_pool", pool),
+                    ("slot", spec((1,), jnp.int32)),
+                    ("pos", spec((1,), jnp.int32)),
+                ],
+            )
+        )
+
+    for B in CFG.decode_batches:
+        def decode_fn(*args):
+            w = args[:n_lw]
+            h, kp, vp, slots, lens = args[n_lw:]
+            return layer_decode(w, h, kp, vp, slots, lens)
+
+        arts.append(
+            (
+                f"layer_decode_b{B}",
+                decode_fn,
+                lw_specs
+                + [
+                    ("h", spec((B, D))),
+                    ("k_pool", pool),
+                    ("v_pool", pool),
+                    ("slots", spec((B,), jnp.int32)),
+                    ("lens", spec((B,), jnp.int32)),
+                ],
+            )
+        )
+
+    for B in CFG.decode_batches:
+        def head_fn(final_norm, w_out, h):
+            return lm_head(final_norm, w_out, h)
+
+        arts.append(
+            (
+                f"lm_head_b{B}",
+                head_fn,
+                [
+                    ("final_norm", spec((D,))),
+                    ("w_out", spec((D, V))),
+                    ("h", spec((B, D))),
+                ],
+            )
+        )
+
+    return arts
+
+
+# ---------------------------------------------------------------------------
+# Weights + manifest
+# ---------------------------------------------------------------------------
+
+
+def dump_weights(weights, path):
+    """Flat little-endian f32 dump; returns tensor table with offsets."""
+    tensors = []
+    offset = 0
+    chunks = []
+
+    def push(name, arr):
+        nonlocal offset
+        arr = np.asarray(arr, dtype=np.float32)
+        tensors.append(
+            {"name": name, "shape": list(arr.shape), "offset": offset, "size": arr.size}
+        )
+        chunks.append(arr.tobytes())
+        offset += arr.size
+
+    push("emb", weights["emb"])
+    for li, layer in enumerate(weights["layers"]):
+        for (name, _), arr in zip(CFG.layer_weight_specs(), layer):
+            push(f"layer{li}.{name}", arr)
+    push("final_norm", weights["final_norm"])
+    push("w_out", weights["w_out"])
+
+    with open(path, "wb") as f:
+        for c in chunks:
+            f.write(c)
+    return tensors
+
+
+def make_golden(weights):
+    """Greedy generation through the exact chunked per-layer path rust runs."""
+    P, M, Hk, dh = CFG.pool_slots, CFG.max_seq, CFG.n_kv_heads, CFG.head_dim
+    rng = np.random.RandomState(42)
+    prompt = rng.randint(1, CFG.vocab, size=70).astype(np.int32)
+    n_decode = 8
+
+    k_pools = [jnp.zeros((P, M, Hk, dh)) for _ in range(CFG.n_layers)]
+    v_pools = [jnp.zeros((P, M, Hk, dh)) for _ in range(CFG.n_layers)]
+    slot = jnp.array([0], jnp.int32)
+
+    pos = 0
+    last_h = None
+    for size, real in chunk_plan(len(prompt)):
+        ids = np.zeros(size, np.int32)
+        ids[:real] = prompt[pos : pos + real]
+        h = embed(weights["emb"], jnp.asarray(ids))
+        for li in range(CFG.n_layers):
+            h, k_pools[li], v_pools[li] = layer_prefill(
+                weights["layers"][li], h, k_pools[li], v_pools[li],
+                slot, jnp.array([pos], jnp.int32),
+            )
+        pos += real
+        last_h = h[real - 1 : real]
+
+    _, tok = lm_head(weights["final_norm"], weights["w_out"], last_h)
+    out = [int(tok[0])]
+    cur = len(prompt)
+    for _ in range(n_decode - 1):
+        h = embed(weights["emb"], tok)
+        for li in range(CFG.n_layers):
+            h, k_pools[li], v_pools[li] = layer_decode(
+                weights["layers"][li], h, k_pools[li], v_pools[li],
+                jnp.array([0], jnp.int32), jnp.array([cur], jnp.int32),
+            )
+        _, tok = lm_head(weights["final_norm"], weights["w_out"], h)
+        out.append(int(tok[0]))
+        cur += 1
+
+    return {
+        "prompt": [int(t) for t in prompt],
+        "n_decode": n_decode,
+        "tokens": out,
+        "chunk_plan": [[s, r] for s, r in chunk_plan(len(prompt))],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--skip-golden", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    weights = init_weights(seed=0)
+    tensors = dump_weights(weights, os.path.join(args.out, "weights.bin"))
+    print(f"weights.bin: {tensors[-1]['offset'] + tensors[-1]['size']} floats")
+
+    manifest_arts = []
+    for name, fn, arg_specs in build_artifacts():
+        lowered = jax.jit(fn).lower(*[s for _, s in arg_specs])
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest_arts.append(
+            {
+                "name": name,
+                "file": fname,
+                "args": [
+                    {
+                        "name": n,
+                        "shape": list(s.shape),
+                        "dtype": I32 if s.dtype == jnp.int32 else F32,
+                    }
+                    for n, s in arg_specs
+                ],
+            }
+        )
+        print(f"  {fname}: {len(text)} chars")
+
+    manifest = {
+        "model": {
+            "vocab": CFG.vocab,
+            "d_model": CFG.d_model,
+            "n_layers": CFG.n_layers,
+            "n_heads": CFG.n_heads,
+            "n_kv_heads": CFG.n_kv_heads,
+            "head_dim": CFG.head_dim,
+            "n_experts": CFG.n_experts,
+            "top_k": CFG.top_k,
+            "d_ff": CFG.d_ff,
+            "max_seq": CFG.max_seq,
+            "pool_slots": CFG.pool_slots,
+            "prefill_chunks": list(CFG.prefill_chunks),
+            "decode_batches": list(CFG.decode_batches),
+            "embed_sizes": list(CFG.embed_sizes),
+        },
+        "tensors": tensors,
+        "artifacts": manifest_arts,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    if not args.skip_golden:
+        golden = make_golden(weights)
+        with open(os.path.join(args.out, "golden.json"), "w") as f:
+            json.dump(golden, f)
+        print(f"golden tokens: {golden['tokens']}")
+
+    print(f"wrote {len(manifest_arts)} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Pallas kernels: causal GQA attention (prefill chunk + batched decode).
+
+FlashAttention-3 on the paper's H100s streams KV through shared memory per
+threadblock; here the analogous HBM->VMEM schedule is expressed with
+BlockSpecs: the grid walks query heads (prefill) or (request, head) pairs
+(decode), and each step stages the matching GQA KV-head slice of the cache
+into VMEM. Softmax is computed in full rows (M=max_seq is small for the
+TinyMoE testbed); a production TPU kernel would tile M and keep an online
+softmax accumulator in VMEM scratch — DESIGN.md §Perf estimates that
+variant's footprint.
+
+Kernels are lowered interpret=True (see moe_ffn.py for why).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def attn_prefill(q, k_cache, v_cache, pos, *, interpret=True):
+    """Causal attention for a prefill chunk at absolute offset `pos`.
+
+    q:        [S, H, dh]   rope'd chunk queries
+    k_cache:  [M, Hk, dh]  cache with the chunk's keys already written
+    v_cache:  [M, Hk, dh]
+    pos:      [1] int32    absolute position of the chunk's first token
+    returns:  [S, H, dh]
+    """
+    S, H, dh = q.shape
+    M, Hk, _ = k_cache.shape
+    rep = H // Hk
+
+    def kernel(q_ref, k_ref, v_ref, pos_ref, o_ref):
+        qh = q_ref[:, 0, :]  # [S, dh]
+        k = k_ref[:, 0, :]  # [M, dh]
+        v = v_ref[:, 0, :]
+        scores = jnp.dot(qh, k.T) / jnp.sqrt(jnp.float32(dh))  # [S, M]
+        rows = jax.lax.broadcasted_iota(jnp.int32, (S, M), 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (S, M), 1)
+        allowed = cols <= (pos_ref[0] + rows)
+        scores = jnp.where(allowed, scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1)
+        o_ref[:, 0, :] = jnp.dot(p, v)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(H,),
+        in_specs=[
+            pl.BlockSpec((S, 1, dh), lambda h: (0, h, 0)),
+            # GQA: query head h reads kv head h // rep.
+            pl.BlockSpec((M, 1, dh), lambda h: (0, h // rep, 0)),
+            pl.BlockSpec((M, 1, dh), lambda h: (0, h // rep, 0)),
+            pl.BlockSpec((1,), lambda h: (0,)),
+        ],
+        out_specs=pl.BlockSpec((S, 1, dh), lambda h: (0, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, H, dh), q.dtype),
+        interpret=interpret,
+    )(q, k_cache, v_cache, pos)
+
+
+def attn_decode(q, k_cache, v_cache, lens, *, interpret=True):
+    """Batched single-token decode attention.
+
+    q:        [B, H, dh]      rope'd queries (one new token per request)
+    k_cache:  [B, M, Hk, dh]  per-request caches, new key at lens[b]
+    v_cache:  [B, M, Hk, dh]
+    lens:     [B] int32       new-token index; attend to 0..lens[b]
+    returns:  [B, H, dh]
+    """
+    B, H, dh = q.shape
+    M, Hk = k_cache.shape[1], k_cache.shape[2]
+    rep = H // Hk
+
+    def kernel(q_ref, k_ref, v_ref, len_ref, o_ref):
+        qh = q_ref[0, 0, :]  # [dh]
+        k = k_ref[0, :, 0, :]  # [M, dh]
+        v = v_ref[0, :, 0, :]
+        scores = jnp.dot(k, qh) / jnp.sqrt(jnp.float32(dh))  # [M]
+        cols = jax.lax.broadcasted_iota(jnp.int32, (M,), 0)
+        scores = jnp.where(cols <= len_ref[0], scores, NEG_INF)
+        p = jax.nn.softmax(scores)
+        o_ref[0, 0, :] = jnp.dot(p, v)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H),
+        in_specs=[
+            pl.BlockSpec((1, 1, dh), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((1, M, 1, dh), lambda b, h: (b, 0, h // rep, 0)),
+            pl.BlockSpec((1, M, 1, dh), lambda b, h: (b, 0, h // rep, 0)),
+            pl.BlockSpec((1,), lambda b, h: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, dh), lambda b, h: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, dh), q.dtype),
+        interpret=interpret,
+    )(q, k_cache, v_cache, lens)

@@ -1,0 +1,81 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its `ref_*` counterpart to float32 tolerance across the shape/dtype
+sweeps in python/tests/. They are also used by model.py's reference path to
+build a whole-model oracle for the rust runtime golden test.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_moe_ffn(x, topk_idx, topk_w, w1, w3, w2):
+    """Mixture-of-Experts SwiGLU FFN, dense reference.
+
+    x:        [T, D]   token hidden states
+    topk_idx: [T, K]   int32 expert ids per token
+    topk_w:   [T, K]   float routing weights per token (already normalized)
+    w1,w3:    [E, D, F]  per-expert up/gate projections
+    w2:       [E, F, D]  per-expert down projection
+    returns:  [T, D]
+    """
+    E = w1.shape[0]
+    # Dense: compute every expert for every token, weight by routing mass.
+    up = jnp.einsum("td,edf->etf", x, w1)  # [E, T, F]
+    gate = jnp.einsum("td,edf->etf", x, w3)
+    act = jax.nn.silu(up) * gate
+    y = jnp.einsum("etf,efd->etd", act, w2)  # [E, T, D]
+    # routing weight of expert e for token t = sum_k w[t,k] * [idx[t,k]==e]
+    onehot = jax.nn.one_hot(topk_idx, E, dtype=x.dtype)  # [T, K, E]
+    wmass = jnp.einsum("tke,tk->et", onehot, topk_w)  # [E, T]
+    return jnp.einsum("etd,et->td", y, wmass)
+
+
+def ref_attn_prefill(q, k_cache, v_cache, pos):
+    """Causal GQA attention for a prefill chunk at sequence offset `pos`.
+
+    q:        [S, H, dh]  queries for the chunk (already rope'd)
+    k_cache:  [M, Hk, dh] key cache (chunk keys already written at pos..pos+S)
+    v_cache:  [M, Hk, dh]
+    pos:      scalar int  absolute position of the chunk's first token
+    returns:  [S, H, dh]
+    """
+    S, H, dh = q.shape
+    M, Hk, _ = k_cache.shape
+    rep = H // Hk
+    kvh = jnp.arange(H) // rep  # query head -> kv head
+    k = k_cache[:, kvh, :]  # [M, H, dh]
+    v = v_cache[:, kvh, :]
+    scores = jnp.einsum("shd,mhd->hsm", q, k) / jnp.sqrt(jnp.float32(dh))
+    rows = jnp.arange(S)[:, None]  # chunk-local row
+    cols = jnp.arange(M)[None, :]
+    allowed = cols <= (pos + rows)  # causal at absolute positions
+    scores = jnp.where(allowed[None, :, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hsm,mhd->shd", p, v)
+
+
+def ref_attn_decode(q, k_cache, v_cache, lens):
+    """Batched single-token GQA decode attention.
+
+    q:        [B, H, dh]      one query per request (already rope'd)
+    k_cache:  [B, M, Hk, dh]  per-request key cache (new key at lens[b])
+    v_cache:  [B, M, Hk, dh]
+    lens:     [B] int32       index of the NEW token; attends to 0..lens[b]
+    returns:  [B, H, dh]
+    """
+    B, H, dh = q.shape
+    Hk = k_cache.shape[2]
+    rep = H // Hk
+    kvh = jnp.arange(H) // rep
+    k = k_cache[:, :, kvh, :]  # [B, M, H, dh]
+    v = v_cache[:, :, kvh, :]
+    scores = jnp.einsum("bhd,bmhd->bhm", q, k) / jnp.sqrt(jnp.float32(dh))
+    cols = jnp.arange(k.shape[1])[None, None, :]
+    allowed = cols <= lens[:, None, None]
+    scores = jnp.where(allowed, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhm,bmhd->bhd", p, v)

@@ -1,0 +1,277 @@
+"""L2: TinyMoE decoder model in JAX, calling the Pallas kernels.
+
+The model is a small Qwen3-style MoE decoder (RMSNorm, RoPE GQA attention,
+SwiGLU MoE FFN with a softmax-over-topk router). It is deliberately factored
+into *per-layer, per-phase* apply functions so the rust coordinator can
+schedule individual layer groups — the structural requirement of layered
+prefill. Weights are runtime arguments (never baked into HLO), so one
+compiled executable per (op-kind, shape-variant) serves every layer.
+
+KV caches live in a device-resident pool of P request slots per layer:
+  k_pool, v_pool: [P, M, Hk, dh]
+Prefill writes a chunk into one slot at offset `pos`; decode gathers B slots,
+appends one token each, and scatters the rows back. The pool flows through
+each executable as input -> output, staying on device between iterations.
+
+Shape naming: V vocab, D model dim, L layers, H query heads, Hk kv heads,
+dh head dim, E experts, K top-k, F expert ff dim, M max seq, P pool slots.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import attn_decode, attn_prefill
+from .kernels.moe_ffn import moe_ffn
+from .kernels import ref as kref
+
+
+class TinyMoeConfig:
+    """Static architecture description; must match manifest.json."""
+
+    vocab = 256
+    d_model = 64
+    n_layers = 8
+    n_heads = 4
+    n_kv_heads = 2
+    head_dim = 16
+    n_experts = 4
+    top_k = 2
+    d_ff = 128
+    max_seq = 160
+    pool_slots = 10  # 8 active + 1 spare + 1 padding scratch (slot P-1)
+    rope_theta = 10000.0
+
+    prefill_chunks = (16, 32, 64)
+    decode_batches = (1, 2, 4, 8)
+    embed_sizes = (1, 2, 4, 8, 16, 32, 64)
+
+    # Per-layer weight tensors, in manifest/flattening order.
+    @classmethod
+    def layer_weight_specs(cls):
+        D, H, Hk, dh = cls.d_model, cls.n_heads, cls.n_kv_heads, cls.head_dim
+        E, F = cls.n_experts, cls.d_ff
+        return [
+            ("ln1", (D,)),
+            ("wq", (D, H * dh)),
+            ("wk", (D, Hk * dh)),
+            ("wv", (D, Hk * dh)),
+            ("wo", (H * dh, D)),
+            ("ln2", (D,)),
+            ("router", (D, E)),
+            ("w1", (E, D, F)),
+            ("w3", (E, D, F)),
+            ("w2", (E, F, D)),
+        ]
+
+
+CFG = TinyMoeConfig
+
+
+def rmsnorm(x, w, eps=1e-6):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x, positions, theta=CFG.rope_theta):
+    """Rotary embedding. x: [..., n_heads, dh], positions: [...] (leading dims)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., half]
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def route_topk(h, router_w):
+    """Softmax-over-topk router (Qwen3 style). h: [T, D] -> idx/w [T, K].
+
+    Implemented as iterative argmax + mask rather than jax.lax.top_k: jax
+    >= 0.6 lowers top_k to the `topk` HLO instruction whose text form the
+    crate's XLA 0.5.1 parser rejects; argmax lowers to plain reduces that
+    round-trip through HLO text cleanly. Equivalent for distinct logits.
+    """
+    logits = h @ router_w  # [T, E]
+    masked = logits
+    idxs, vals = [], []
+    for _ in range(CFG.top_k):
+        i = jnp.argmax(masked, axis=-1)  # [T]
+        v = jnp.max(masked, axis=-1)
+        idxs.append(i.astype(jnp.int32))
+        vals.append(v)
+        masked = jnp.where(
+            jax.nn.one_hot(i, logits.shape[-1], dtype=bool), -jnp.inf, masked
+        )
+    topk_idx = jnp.stack(idxs, axis=-1)
+    topk_w = jax.nn.softmax(jnp.stack(vals, axis=-1), axis=-1)
+    return topk_idx, topk_w
+
+
+def _attn_qkv(h, wq, wk, wv, positions):
+    """Project + rope. h: [T, D] -> q [T,H,dh], k/v [T,Hk,dh]."""
+    T = h.shape[0]
+    q = (h @ wq).reshape(T, CFG.n_heads, CFG.head_dim)
+    k = (h @ wk).reshape(T, CFG.n_kv_heads, CFG.head_dim)
+    v = (h @ wv).reshape(T, CFG.n_kv_heads, CFG.head_dim)
+    return rope(q, positions), rope(k, positions), v
+
+
+def layer_prefill(weights, h, k_pool, v_pool, slot, pos, *, use_pallas=True):
+    """One decoder layer over a prefill chunk at offset `pos` in `slot`.
+
+    weights: tuple of 10 per-layer tensors (see layer_weight_specs)
+    h:       [S, D]          chunk hidden states
+    k_pool:  [P, M, Hk, dh]  device-resident KV pool (v_pool alike)
+    slot:    [1] int32       pool slot of this request
+    pos:     [1] int32       absolute offset of the chunk's first token
+    returns (h', k_pool', v_pool')
+    """
+    ln1, wq, wk, wv, wo, ln2, router, w1, w3, w2 = weights
+    S = h.shape[0]
+    positions = pos[0] + jnp.arange(S)
+
+    hn = rmsnorm(h, ln1)
+    q, k, v = _attn_qkv(hn, wq, wk, wv, positions)
+
+    # Write the chunk's keys/values into the slot at offset pos.
+    krow = jax.lax.dynamic_slice_in_dim(k_pool, slot[0], 1, axis=0)[0]
+    vrow = jax.lax.dynamic_slice_in_dim(v_pool, slot[0], 1, axis=0)[0]
+    krow = jax.lax.dynamic_update_slice(krow, k, (pos[0], 0, 0))
+    vrow = jax.lax.dynamic_update_slice(vrow, v, (pos[0], 0, 0))
+    k_pool = jax.lax.dynamic_update_slice(k_pool, krow[None], (slot[0], 0, 0, 0))
+    v_pool = jax.lax.dynamic_update_slice(v_pool, vrow[None], (slot[0], 0, 0, 0))
+
+    attn_fn = attn_prefill if use_pallas else (
+        lambda q, kc, vc, p: kref.ref_attn_prefill(q, kc, vc, p[0])
+    )
+    o = attn_fn(q, krow, vrow, pos)  # [S, H, dh]
+    h = h + o.reshape(S, -1) @ wo
+
+    hn = rmsnorm(h, ln2)
+    idx, wts = route_topk(hn, router)
+    moe_fn = moe_ffn if use_pallas else kref.ref_moe_ffn
+    h = h + moe_fn(hn, idx, wts, w1, w3, w2)
+    return h, k_pool, v_pool
+
+
+def layer_decode(weights, h, k_pool, v_pool, slots, lens, *, use_pallas=True):
+    """One decoder layer for a batch of single-token decode steps.
+
+    h:      [B, D]        hidden state of each request's newest token
+    slots:  [B] int32     pool slot per request (pad rows -> scratch slot)
+    lens:   [B] int32     current context length (index where the new
+                          token's KV is written; it attends to 0..lens[b])
+    returns (h', k_pool', v_pool')
+    """
+    ln1, wq, wk, wv, wo, ln2, router, w1, w3, w2 = weights
+    B = h.shape[0]
+
+    hn = rmsnorm(h, ln1)
+    q, k, v = _attn_qkv(hn, wq, wk, wv, lens)  # positions = lens
+
+    kc = k_pool[slots]  # [B, M, Hk, dh] gather
+    vc = v_pool[slots]
+
+    def write_row(row, kv, ln):
+        return jax.lax.dynamic_update_slice(row, kv[None], (ln, 0, 0))
+
+    kc = jax.vmap(write_row)(kc, k, lens)
+    vc = jax.vmap(write_row)(vc, v, lens)
+
+    # Scatter updated rows back (pad rows all target the scratch slot; the
+    # last write wins there, which is harmless by construction).
+    k_pool = k_pool.at[slots].set(kc)
+    v_pool = v_pool.at[slots].set(vc)
+
+    attn_fn = attn_decode if use_pallas else kref.ref_attn_decode
+    o = attn_fn(q, kc, vc, lens)  # [B, H, dh]
+    h = h + o.reshape(B, -1) @ wo
+
+    hn = rmsnorm(h, ln2)
+    idx, wts = route_topk(hn, router)
+    moe_fn = moe_ffn if use_pallas else kref.ref_moe_ffn
+    h = h + moe_fn(hn, idx, wts, w1, w3, w2)
+    return h, k_pool, v_pool
+
+
+def embed(emb, ids):
+    """Token embedding. ids: [T] int32 -> [T, D]."""
+    return emb[ids]
+
+
+def lm_head(final_norm, w_out, h):
+    """Final RMSNorm + output projection. h: [B, D] -> (logits [B,V], argmax [B])."""
+    hn = rmsnorm(h, final_norm)
+    logits = hn @ w_out
+    return logits, jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model reference (used for goldens + python tests, never exported).
+# ---------------------------------------------------------------------------
+
+
+def init_weights(seed=0):
+    """Deterministic weight init; the same bytes land in weights.bin."""
+    key = jax.random.PRNGKey(seed)
+    specs = CFG.layer_weight_specs()
+    weights = {"emb": None, "layers": [], "final_norm": None, "w_out": None}
+    key, k = jax.random.split(key)
+    weights["emb"] = jax.random.normal(k, (CFG.vocab, CFG.d_model)) * 0.5
+    for _ in range(CFG.n_layers):
+        layer = []
+        for name, shape in specs:
+            key, k = jax.random.split(key)
+            if name.startswith("ln"):
+                layer.append(jnp.ones(shape))
+            else:
+                scale = 0.3 / jnp.sqrt(jnp.float32(shape[-2] if len(shape) > 1 else 1))
+                layer.append(jax.random.normal(k, shape) * scale)
+        weights["layers"].append(tuple(layer))
+    weights["final_norm"] = jnp.ones((CFG.d_model,))
+    key, k = jax.random.split(key)
+    weights["w_out"] = jax.random.normal(k, (CFG.vocab, CFG.d_model)).T * 0.2
+    return weights
+
+
+def full_forward_ref(weights, prompt_ids, n_decode, *, use_pallas=False):
+    """Reference autoregressive run: prefill whole prompt then greedy decode.
+
+    Returns the generated token ids ([n_decode] int32). Drives the per-layer
+    apply functions exactly the way the rust server does (chunked through
+    the pool), so it doubles as the golden for runtime_golden.rs.
+    """
+    P, M, Hk, dh = CFG.pool_slots, CFG.max_seq, CFG.n_kv_heads, CFG.head_dim
+    k_pools = [jnp.zeros((P, M, Hk, dh)) for _ in range(CFG.n_layers)]
+    v_pools = [jnp.zeros((P, M, Hk, dh)) for _ in range(CFG.n_layers)]
+    slot = jnp.array([0], jnp.int32)
+
+    L = prompt_ids.shape[0]
+    h = embed(weights["emb"], prompt_ids)
+    pos = jnp.array([0], jnp.int32)
+    for li in range(CFG.n_layers):
+        h, k_pools[li], v_pools[li] = layer_prefill(
+            weights["layers"][li], h, k_pools[li], v_pools[li], slot, pos,
+            use_pallas=use_pallas,
+        )
+    last = h[L - 1 : L]
+    _, tok = lm_head(weights["final_norm"], weights["w_out"], last)
+
+    out = [int(tok[0])]
+    cur_len = L
+    for _ in range(n_decode - 1):
+        h = embed(weights["emb"], tok)
+        slots = jnp.array([0], jnp.int32)
+        lens = jnp.array([cur_len], jnp.int32)
+        for li in range(CFG.n_layers):
+            h, k_pools[li], v_pools[li] = layer_decode(
+                weights["layers"][li], h, k_pools[li], v_pools[li], slots, lens,
+                use_pallas=use_pallas,
+            )
+        _, tok = lm_head(weights["final_norm"], weights["w_out"], h)
+        out.append(int(tok[0]))
+        cur_len += 1
+    return out

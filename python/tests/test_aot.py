@@ -1,0 +1,110 @@
+"""AOT artifact integrity: manifest <-> weights.bin <-> HLO text consistency.
+
+These tests run against the build_artifacts() definitions (no files needed)
+plus, when artifacts/ exists, the emitted files themselves.
+"""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import build_artifacts, chunk_plan, dump_weights, to_hlo_text
+from compile.model import CFG, init_weights
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_artifact_inventory_complete():
+    names = {name for name, _, _ in build_artifacts()}
+    for t in CFG.embed_sizes:
+        assert f"embed_t{t}" in names
+    for s in CFG.prefill_chunks:
+        assert f"layer_prefill_s{s}" in names
+    for b in CFG.decode_batches:
+        assert f"layer_decode_b{b}" in names
+        assert f"lm_head_b{b}" in names
+    assert len(names) == len(CFG.embed_sizes) + len(CFG.prefill_chunks) + 2 * len(
+        CFG.decode_batches
+    )
+
+
+def test_layer_arg_signature_order():
+    """The rust runtime hard-codes: 10 layer weights, then data args."""
+    arts = {name: args for name, _, args in build_artifacts()}
+    spec_names = [n for n, _ in CFG.layer_weight_specs()]
+    for s in CFG.prefill_chunks:
+        args = arts[f"layer_prefill_s{s}"]
+        assert [a[0] for a in args[:10]] == spec_names
+        assert [a[0] for a in args[10:]] == ["h", "k_pool", "v_pool", "slot", "pos"]
+    for b in CFG.decode_batches:
+        args = arts[f"layer_decode_b{b}"]
+        assert [a[0] for a in args[:10]] == spec_names
+        assert [a[0] for a in args[10:]] == ["h", "k_pool", "v_pool", "slots", "lens"]
+
+
+def test_weights_dump_roundtrip(tmp_path):
+    weights = init_weights(seed=0)
+    path = tmp_path / "w.bin"
+    tensors = dump_weights(weights, str(path))
+    total = tensors[-1]["offset"] + tensors[-1]["size"]
+    raw = np.fromfile(str(path), dtype="<f4")
+    assert raw.size == total
+    # Spot-check a few tensors against the in-memory values.
+    table = {t["name"]: t for t in tensors}
+    emb = table["emb"]
+    got = raw[emb["offset"] : emb["offset"] + emb["size"]].reshape(emb["shape"])
+    np.testing.assert_array_equal(got, np.asarray(weights["emb"], np.float32))
+    l3w2 = table["layer3.w2"]
+    got = raw[l3w2["offset"] : l3w2["offset"] + l3w2["size"]].reshape(l3w2["shape"])
+    np.testing.assert_array_equal(got, np.asarray(weights["layers"][3][9], np.float32))
+
+
+def test_weights_dump_deterministic(tmp_path):
+    a, b = tmp_path / "a.bin", tmp_path / "b.bin"
+    dump_weights(init_weights(seed=0), str(a))
+    dump_weights(init_weights(seed=0), str(b))
+    assert a.read_bytes() == b.read_bytes()
+
+
+def test_hlo_text_parses_and_names_params():
+    """Lower one tiny artifact and sanity-check the HLO text shape strings."""
+    name, fn, arg_specs = next(
+        a for a in build_artifacts() if a[0] == "lm_head_b2"
+    )
+    import jax
+
+    lowered = jax.jit(fn).lower(*[s for _, s in arg_specs])
+    text = to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "f32[2,256]" in text  # logits out for B=2, vocab 256
+    assert "parameter(2)" in text  # h is the third arg
+
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts/ not built",
+)
+
+
+@needs_artifacts
+def test_manifest_matches_files():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        m = json.load(f)
+    assert m["model"]["n_layers"] == CFG.n_layers
+    assert m["model"]["pool_slots"] == CFG.pool_slots
+    for art in m["artifacts"]:
+        assert os.path.exists(os.path.join(ART, art["file"])), art["file"]
+    total = m["tensors"][-1]["offset"] + m["tensors"][-1]["size"]
+    assert os.path.getsize(os.path.join(ART, "weights.bin")) == 4 * total
+
+
+@needs_artifacts
+def test_golden_exists_and_consistent():
+    with open(os.path.join(ART, "golden.json")) as f:
+        g = json.load(f)
+    assert len(g["tokens"]) == g["n_decode"]
+    assert g["chunk_plan"] == [[s, r] for s, r in chunk_plan(len(g["prompt"]))]
+    assert all(0 <= t < CFG.vocab for t in g["tokens"])

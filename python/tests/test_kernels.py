@@ -1,0 +1,216 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes/masks; every property failure here means the HLO
+the rust runtime executes is wrong, so these are the core numerics signal.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import attn_decode, attn_prefill
+from compile.kernels.moe_ffn import moe_ffn, moe_ffn_bytes_loaded
+from compile.kernels.ref import ref_attn_decode, ref_attn_prefill, ref_moe_ffn
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(key, shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# MoE FFN kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.sampled_from([1, 2, 5, 16, 33]),
+    e=st.sampled_from([2, 4, 8]),
+    k=st.sampled_from([1, 2]),
+    d=st.sampled_from([8, 16, 64]),
+    f=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_moe_ffn_matches_ref(t, e, k, d, f, seed):
+    if k > e:
+        k = e
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    x = rand(ks[0], (t, d))
+    idx = jax.random.randint(ks[1], (t, k), 0, e).astype(jnp.int32)
+    w = jax.nn.softmax(rand(ks[2], (t, k)), axis=-1)
+    w1 = rand(ks[3], (e, d, f), 0.2)
+    w3 = rand(ks[4], (e, d, f), 0.2)
+    w2 = rand(ks[5], (e, f, d), 0.2)
+    out = moe_ffn(x, idx, w, w1, w3, w2)
+    ref = ref_moe_ffn(x, idx, w, w1, w3, w2)
+    np.testing.assert_allclose(out, ref, **TOL)
+
+
+def test_moe_ffn_all_tokens_one_expert():
+    """Degenerate routing: every token to expert 0 with weight 1."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    t, e, d, f = 8, 4, 16, 32
+    x = rand(ks[0], (t, d))
+    idx = jnp.zeros((t, 2), jnp.int32)
+    w = jnp.concatenate([jnp.ones((t, 1)), jnp.zeros((t, 1))], axis=1)
+    w1, w3, w2 = rand(ks[1], (e, d, f)), rand(ks[2], (e, d, f)), rand(ks[3], (e, f, d))
+    out = moe_ffn(x, idx, w, w1, w3, w2)
+    # Equivalent dense SwiGLU through expert 0 only.
+    expect = (jax.nn.silu(x @ w1[0]) * (x @ w3[0])) @ w2[0]
+    np.testing.assert_allclose(out, expect, **TOL)
+
+
+def test_moe_ffn_empty_expert_contributes_nothing():
+    """Experts receiving no tokens must not perturb the output."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    t, e, d, f = 6, 4, 16, 32
+    x = rand(ks[0], (t, d))
+    idx = jnp.ones((t, 2), jnp.int32)  # only expert 1 used
+    w = jnp.full((t, 2), 0.5)
+    w1, w3, w2 = rand(ks[1], (e, d, f)), rand(ks[2], (e, d, f)), rand(ks[3], (e, f, d))
+    out = moe_ffn(x, idx, w, w1, w3, w2)
+    # Scrambling unused experts' weights must not change anything.
+    w1b = w1.at[0].set(99.0).at[2].set(-7.0)
+    out_b = moe_ffn(x, idx, w, w1b, w3, w2)
+    np.testing.assert_allclose(out, out_b, **TOL)
+
+
+def test_moe_ffn_weight_linearity():
+    """Output is linear in the routing weights."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    t, e, d, f = 4, 4, 16, 32
+    x = rand(ks[0], (t, d))
+    idx = jax.random.randint(ks[1], (t, 2), 0, e).astype(jnp.int32)
+    w = jax.nn.softmax(rand(ks[2], (t, 2)), axis=-1)
+    w1, w3, w2 = rand(ks[3], (e, d, f)), rand(ks[4], (e, f // 2 * 2, f))[:, :d, :], rand(
+        ks[4], (e, f, d)
+    )
+    w3 = rand(ks[4], (e, d, f))
+    half = moe_ffn(x, idx, w * 0.5, w1, w3, w2)
+    full = moe_ffn(x, idx, w, w1, w3, w2)
+    np.testing.assert_allclose(full * 0.5, half, **TOL)
+
+
+def test_moe_bytes_accounting():
+    assert moe_ffn_bytes_loaded(3, 64, 128) == 3 * 3 * 64 * 128 * 4
+
+
+# ---------------------------------------------------------------------------
+# Prefill attention kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    s=st.sampled_from([1, 4, 16, 32]),
+    h=st.sampled_from([2, 4]),
+    hk=st.sampled_from([1, 2]),
+    dh=st.sampled_from([4, 8, 16]),
+    m=st.sampled_from([40, 64]),
+    pos=st.integers(0, 30),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attn_prefill_matches_ref(s, h, hk, dh, m, pos, seed):
+    if h % hk:
+        hk = 1
+    if pos + s > m:
+        pos = m - s
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = rand(ks[0], (s, h, dh))
+    kc = rand(ks[1], (m, hk, dh))
+    vc = rand(ks[2], (m, hk, dh))
+    out = attn_prefill(q, kc, vc, jnp.array([pos], jnp.int32))
+    ref = ref_attn_prefill(q, kc, vc, pos)
+    np.testing.assert_allclose(out, ref, **TOL)
+
+
+def test_attn_prefill_causality():
+    """Future keys (beyond pos+i) must not influence row i."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    s, h, hk, dh, m, pos = 8, 4, 2, 8, 40, 10
+    q = rand(ks[0], (s, h, dh))
+    kc = rand(ks[1], (m, hk, dh))
+    vc = rand(ks[2], (m, hk, dh))
+    base = attn_prefill(q, kc, vc, jnp.array([pos], jnp.int32))
+    # Perturb all cache entries strictly after the last visible position.
+    kc2 = kc.at[pos + s :].set(123.0)
+    vc2 = vc.at[pos + s :].set(-55.0)
+    pert = attn_prefill(q, kc2, vc2, jnp.array([pos], jnp.int32))
+    np.testing.assert_allclose(base, pert, **TOL)
+
+
+def test_attn_prefill_row_i_sees_exactly_prefix():
+    """Row i equals decode attention with len=pos+i."""
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    s, h, hk, dh, m, pos = 4, 4, 2, 8, 32, 6
+    q = rand(ks[0], (s, h, dh))
+    kc = rand(ks[1], (m, hk, dh))
+    vc = rand(ks[2], (m, hk, dh))
+    out = attn_prefill(q, kc, vc, jnp.array([pos], jnp.int32))
+    for i in range(s):
+        dec = ref_attn_decode(
+            q[i : i + 1], kc[None], vc[None], jnp.array([pos + i], jnp.int32)
+        )
+        np.testing.assert_allclose(out[i : i + 1], dec, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 4, 8]),
+    h=st.sampled_from([2, 4]),
+    hk=st.sampled_from([1, 2]),
+    dh=st.sampled_from([4, 16]),
+    m=st.sampled_from([24, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attn_decode_matches_ref(b, h, hk, dh, m, seed):
+    if h % hk:
+        hk = 1
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = rand(ks[0], (b, h, dh))
+    kc = rand(ks[1], (b, m, hk, dh))
+    vc = rand(ks[2], (b, m, hk, dh))
+    lens = jax.random.randint(ks[3], (b,), 0, m).astype(jnp.int32)
+    out = attn_decode(q, kc, vc, lens)
+    ref = ref_attn_decode(q, kc, vc, lens)
+    np.testing.assert_allclose(out, ref, **TOL)
+
+
+def test_attn_decode_len_isolation():
+    """Entries beyond lens[b] must not matter; batch rows are independent."""
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    b, h, hk, dh, m = 4, 4, 2, 8, 32
+    q = rand(ks[0], (b, h, dh))
+    kc = rand(ks[1], (b, m, hk, dh))
+    vc = rand(ks[2], (b, m, hk, dh))
+    lens = jnp.array([3, 10, 0, 31], jnp.int32)
+    base = attn_decode(q, kc, vc, lens)
+    kc2 = kc.at[0, 4:].set(77.0).at[2, 1:].set(-3.0)
+    pert = attn_decode(q, kc2, vc, lens)
+    np.testing.assert_allclose(base, pert, **TOL)
+    # Independence: changing row 1 entirely leaves rows 0,2,3 unchanged.
+    kc3 = kc.at[1].set(9.0)
+    out3 = attn_decode(q, kc3, vc, lens)
+    keep = np.array([0, 2, 3])
+    np.testing.assert_allclose(base[keep], out3[keep], **TOL)
+
+
+def test_attn_decode_len_zero_attends_only_self():
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    b, h, hk, dh, m = 1, 2, 1, 4, 16
+    q = rand(ks[0], (b, h, dh))
+    kc = rand(ks[1], (b, m, hk, dh))
+    vc = rand(ks[2], (b, m, hk, dh))
+    out = attn_decode(q, kc, vc, jnp.array([0], jnp.int32))
+    # softmax over a single allowed position -> output == v[0]
+    np.testing.assert_allclose(out[0, 0], vc[0, 0, 0], **TOL)
+    np.testing.assert_allclose(out[0, 1], vc[0, 0, 0], **TOL)

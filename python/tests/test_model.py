@@ -1,0 +1,257 @@
+"""L2 correctness: TinyMoE layer functions, chunk/decode equivalences.
+
+Key invariant proved here: prefilling a prompt in several chunks at the
+correct offsets produces the same hidden states and the same greedy tokens as
+prefilling it in one shot — this is what makes both chunked and layered
+scheduling *correct* (they only change WHEN work runs, never the math).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.model import (
+    CFG,
+    embed,
+    init_weights,
+    layer_decode,
+    layer_prefill,
+    lm_head,
+    rmsnorm,
+    rope,
+    route_topk,
+)
+from compile.aot import chunk_plan
+
+TOL = dict(rtol=3e-5, atol=3e-5)
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return init_weights(seed=0)
+
+
+def pools():
+    P, M, Hk, dh = CFG.pool_slots, CFG.max_seq, CFG.n_kv_heads, CFG.head_dim
+    return jnp.zeros((P, M, Hk, dh)), jnp.zeros((P, M, Hk, dh))
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def test_rmsnorm_unit_scale():
+    x = jnp.array([[3.0, 4.0]])
+    out = rmsnorm(x, jnp.ones(2))
+    rms = np.sqrt((9 + 16) / 2)
+    np.testing.assert_allclose(out, x / rms, rtol=1e-5)
+
+
+def test_rope_preserves_norm():
+    x = jax.random.normal(jax.random.PRNGKey(0), (5, 4, 16))
+    out = rope(x, jnp.arange(5))
+    np.testing.assert_allclose(
+        jnp.linalg.norm(out, axis=-1), jnp.linalg.norm(x, axis=-1), rtol=1e-5
+    )
+
+
+def test_rope_position_zero_is_identity():
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 2, 8))
+    out = rope(x, jnp.zeros(3, jnp.int32))
+    np.testing.assert_allclose(out, x, atol=1e-6)
+
+
+def test_rope_relative_shift_invariance():
+    """Dot products of rope'd q/k depend only on relative offset."""
+    key = jax.random.PRNGKey(2)
+    q = jax.random.normal(key, (1, 1, 16))
+    k = jax.random.normal(jax.random.PRNGKey(3), (1, 1, 16))
+    d1 = jnp.sum(rope(q, jnp.array([7])) * rope(k, jnp.array([3])))
+    d2 = jnp.sum(rope(q, jnp.array([24])) * rope(k, jnp.array([20])))
+    np.testing.assert_allclose(d1, d2, rtol=1e-4)
+
+
+def test_router_topk_weights_normalized(weights):
+    h = jax.random.normal(jax.random.PRNGKey(4), (12, CFG.d_model))
+    idx, w = route_topk(h, weights["layers"][0][6])
+    assert idx.shape == (12, CFG.top_k)
+    np.testing.assert_allclose(jnp.sum(w, axis=-1), jnp.ones(12), rtol=1e-5)
+    assert int(idx.min()) >= 0 and int(idx.max()) < CFG.n_experts
+
+
+# ---------------------------------------------------------------------------
+# Chunked == monolithic prefill
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000), split=st.integers(1, 47))
+def test_prefill_chunking_equivalence(weights, seed, split):
+    """Prefill [0..48) in one chunk vs two chunks at offsets 0 and `split`."""
+    lw = weights["layers"][0]
+    S = 48
+    rng = np.random.RandomState(seed)
+    ids = jnp.asarray(rng.randint(1, CFG.vocab, size=S), jnp.int32)
+    h = embed(weights["emb"], ids)
+    slot = jnp.array([0], jnp.int32)
+
+    kp, vp = pools()
+    h_full, kp_f, vp_f = layer_prefill(
+        lw, h, kp, vp, slot, jnp.array([0], jnp.int32), use_pallas=False
+    )
+
+    kp, vp = pools()
+    h1, kp, vp = layer_prefill(
+        lw, h[:split], kp, vp, slot, jnp.array([0], jnp.int32), use_pallas=False
+    )
+    h2, kp, vp = layer_prefill(
+        lw, h[split:], kp, vp, slot, jnp.array([split], jnp.int32), use_pallas=False
+    )
+    np.testing.assert_allclose(jnp.concatenate([h1, h2]), h_full, **TOL)
+    np.testing.assert_allclose(kp, kp_f, **TOL)
+    np.testing.assert_allclose(vp, vp_f, **TOL)
+
+
+def test_prefill_pallas_vs_ref_path(weights):
+    """The exported (pallas) layer matches the pure-jnp layer."""
+    lw = weights["layers"][3]
+    ids = jnp.asarray(np.arange(1, 33), jnp.int32)
+    h = embed(weights["emb"], ids)
+    kp, vp = pools()
+    slot, pos = jnp.array([2], jnp.int32), jnp.array([0], jnp.int32)
+    a = layer_prefill(lw, h, kp, vp, slot, pos, use_pallas=True)
+    b = layer_prefill(lw, h, kp, vp, slot, pos, use_pallas=False)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(x, y, **TOL)
+
+
+def test_decode_pallas_vs_ref_path(weights):
+    lw = weights["layers"][5]
+    B = 4
+    kp, vp = pools()
+    kp = kp + jax.random.normal(jax.random.PRNGKey(7), kp.shape) * 0.1
+    vp = vp + jax.random.normal(jax.random.PRNGKey(8), vp.shape) * 0.1
+    h = jax.random.normal(jax.random.PRNGKey(9), (B, CFG.d_model))
+    slots = jnp.array([0, 1, 2, 3], jnp.int32)
+    lens = jnp.array([5, 0, 17, 40], jnp.int32)
+    a = layer_decode(lw, h, kp, vp, slots, lens, use_pallas=True)
+    b = layer_decode(lw, h, kp, vp, slots, lens, use_pallas=False)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(x, y, **TOL)
+
+
+def test_decode_equals_prefill_of_one(weights):
+    """Decoding token at position p == prefilling a 1-token chunk at p."""
+    lw = weights["layers"][0]
+    # Build a context of 10 tokens first.
+    ids = jnp.asarray(np.arange(1, 11), jnp.int32)
+    h = embed(weights["emb"], ids)
+    kp, vp = pools()
+    slot = jnp.array([0], jnp.int32)
+    _, kp, vp = layer_prefill(lw, h, kp, vp, slot, jnp.array([0], jnp.int32),
+                              use_pallas=False)
+    nxt = embed(weights["emb"], jnp.array([42], jnp.int32))
+    d_h, d_kp, d_vp = layer_decode(
+        lw, nxt, kp, vp, jnp.array([0], jnp.int32), jnp.array([10], jnp.int32),
+        use_pallas=False,
+    )
+    p_h, p_kp, p_vp = layer_prefill(
+        lw, nxt, kp, vp, slot, jnp.array([10], jnp.int32), use_pallas=False
+    )
+    np.testing.assert_allclose(d_h, p_h, **TOL)
+    np.testing.assert_allclose(d_kp, p_kp, **TOL)
+    np.testing.assert_allclose(d_vp, p_vp, **TOL)
+
+
+def test_decode_batch_order_invariance(weights):
+    """Permuting requests within a decode batch permutes outputs identically."""
+    lw = weights["layers"][1]
+    B = 4
+    kp, vp = pools()
+    kp = kp + 0.05
+    h = jax.random.normal(jax.random.PRNGKey(10), (B, CFG.d_model))
+    slots = jnp.array([0, 1, 2, 3], jnp.int32)
+    lens = jnp.array([4, 9, 2, 30], jnp.int32)
+    perm = jnp.array([2, 0, 3, 1])
+    a_h, a_kp, a_vp = layer_decode(lw, h, kp, vp, slots, lens, use_pallas=False)
+    b_h, b_kp, b_vp = layer_decode(
+        lw, h[perm], kp, vp, slots[perm], lens[perm], use_pallas=False
+    )
+    np.testing.assert_allclose(a_h[perm], b_h, **TOL)
+    np.testing.assert_allclose(a_kp, b_kp, **TOL)
+
+
+def test_pad_rows_do_not_corrupt_active_slots(weights):
+    """Padding a decode batch (dummy rows -> scratch slot) must leave all
+    active slots' pools and outputs unchanged — the exact guarantee the rust
+    server relies on when it pads B up to a compiled variant."""
+    lw = weights["layers"][2]
+    kp, vp = pools()
+    kp = kp + 0.03
+    h2 = jax.random.normal(jax.random.PRNGKey(11), (2, CFG.d_model))
+    slots2 = jnp.array([0, 1], jnp.int32)
+    lens2 = jnp.array([6, 12], jnp.int32)
+    a_h, a_kp, a_vp = layer_decode(lw, h2, kp, vp, slots2, lens2, use_pallas=False)
+
+    scratch = CFG.pool_slots - 1
+    h4 = jnp.concatenate([h2, jnp.zeros((2, CFG.d_model))])
+    slots4 = jnp.array([0, 1, scratch, scratch], jnp.int32)
+    lens4 = jnp.array([6, 12, 0, 0], jnp.int32)
+    b_h, b_kp, b_vp = layer_decode(lw, h4, kp, vp, slots4, lens4, use_pallas=False)
+
+    np.testing.assert_allclose(a_h, b_h[:2], **TOL)
+    np.testing.assert_allclose(a_kp[:scratch], b_kp[:scratch], **TOL)
+    np.testing.assert_allclose(a_vp[:scratch], b_vp[:scratch], **TOL)
+
+
+def test_slot_isolation(weights):
+    """Prefilling slot 0 must not disturb slot 1's cache."""
+    lw = weights["layers"][0]
+    kp, vp = pools()
+    kp = kp.at[1].set(3.14)
+    ids = jnp.asarray(np.arange(1, 17), jnp.int32)
+    h = embed(weights["emb"], ids)
+    _, kp2, _ = layer_prefill(
+        lw, h, kp, vp, jnp.array([0], jnp.int32), jnp.array([0], jnp.int32),
+        use_pallas=False,
+    )
+    np.testing.assert_allclose(kp2[1], kp[1], **TOL)
+
+
+# ---------------------------------------------------------------------------
+# chunk_plan (shared with rust sched::chunk_plan — semantics locked here)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(length=st.integers(1, 600))
+def test_chunk_plan_covers_exactly(length):
+    plan = chunk_plan(length)
+    assert sum(r for _, r in plan) == length
+    for size, real in plan:
+        assert size in CFG.prefill_chunks
+        assert 0 < real <= size
+    # only the last chunk may be padded
+    for size, real in plan[:-1]:
+        assert real == size
+
+
+def test_chunk_plan_examples():
+    assert chunk_plan(70) == [(64, 64), (16, 6)]
+    assert chunk_plan(64) == [(64, 64)]
+    assert chunk_plan(1) == [(16, 1)]
+    assert chunk_plan(200) == [(64, 64), (64, 64), (64, 64), (16, 8)]
+
+
+# ---------------------------------------------------------------------------
+# lm_head
+# ---------------------------------------------------------------------------
+
+
+def test_lm_head_argmax_matches_logits(weights):
+    h = jax.random.normal(jax.random.PRNGKey(12), (4, CFG.d_model))
+    logits, tok = lm_head(weights["final_norm"], weights["w_out"], h)
+    np.testing.assert_array_equal(np.argmax(np.asarray(logits), axis=-1), tok)

@@ -1,0 +1,37 @@
+//! Ablation: sensitivity of layered prefill to the group-size target
+//! (G(L) = ceil(L / target)). The paper fixes target=512 to mirror the
+//! chunked baseline; this sweep shows the TTFT/TBT/traffic trade-off the
+//! choice embodies (DESIGN.md §3 ablation index).
+use std::time::Instant;
+
+use layered_prefill::config::{Dataset, HardwareDesc, ModelDesc, Policy, SchedulerConfig, WorkloadSpec};
+use layered_prefill::simulator::{simulate, SimOptions};
+use layered_prefill::workload::WorkloadGen;
+
+fn main() {
+    let n = std::env::var("LP_BENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(60);
+    let t0 = Instant::now();
+    let trace = WorkloadGen::new(WorkloadSpec::new(Dataset::Arxiv, 1.3, n)).generate();
+    println!("== ablation: layered group token target (Qwen, arXiv @1.3) ==");
+    println!("{:>7} {:>10} {:>10} {:>12} {:>14}", "target", "TTFT(s)", "TBTp99(ms)", "avg groups", "expert TB");
+    for target in [128u32, 256, 512, 1024, 2048] {
+        let mut cfg = SchedulerConfig::preset(Policy::Layered);
+        cfg.group_token_target = target;
+        let (m, _) = simulate(
+            ModelDesc::qwen3_30b_a3b(),
+            HardwareDesc::h100x2(),
+            &cfg,
+            &trace,
+            SimOptions::default(),
+        );
+        println!(
+            "{:>7} {:>10.2} {:>10.1} {:>12.1} {:>14.1}",
+            target,
+            m.ttft_samples().mean(),
+            m.tbt_samples().p99() * 1e3,
+            9194.0 / target as f64, // mean G for mean arXiv prompt
+            m.traffic.expert_bytes / 1e12,
+        );
+    }
+    println!("[bench_ablation_groups] done in {:.2}s (n={n})", t0.elapsed().as_secs_f64());
+}

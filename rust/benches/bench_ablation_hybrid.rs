@@ -1,0 +1,36 @@
+//! Ablation: §4.3 hybrid chunked+layered — hybrid chunk size sweep vs pure
+//! chunked and pure layered. Shows hybrid approaching layered's traffic
+//! while bounding in-flight prefill state for very long prompts.
+use std::time::Instant;
+
+use layered_prefill::config::{Dataset, HardwareDesc, ModelDesc, Policy, SchedulerConfig, WorkloadSpec};
+use layered_prefill::simulator::{simulate, SimOptions};
+use layered_prefill::workload::WorkloadGen;
+
+fn main() {
+    let n = std::env::var("LP_BENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(60);
+    let t0 = Instant::now();
+    let trace = WorkloadGen::new(WorkloadSpec::new(Dataset::Arxiv, 1.3, n)).generate();
+    let hw = HardwareDesc::h100x2;
+    let qwen = ModelDesc::qwen3_30b_a3b;
+    println!("== ablation: hybrid chunk size (Qwen, arXiv @1.3) ==");
+    println!("{:>16} {:>10} {:>12} {:>12}", "config", "TTFT(s)", "TBTp99(ms)", "expert TB");
+    let mut run = |label: String, cfg: SchedulerConfig| {
+        let (m, _) = simulate(qwen(), hw(), &cfg, &trace, SimOptions::default());
+        println!(
+            "{:>16} {:>10.2} {:>12.1} {:>12.1}",
+            label,
+            m.ttft_samples().mean(),
+            m.tbt_samples().p99() * 1e3,
+            m.traffic.expert_bytes / 1e12
+        );
+    };
+    run("chunked-512".into(), SchedulerConfig::preset(Policy::Chunked));
+    for hc in [2048u32, 4096, 8192] {
+        let mut cfg = SchedulerConfig::preset(Policy::Hybrid);
+        cfg.hybrid_chunk_size = hc;
+        run(format!("hybrid-{hc}"), cfg);
+    }
+    run("layered".into(), SchedulerConfig::preset(Policy::Layered));
+    println!("[bench_ablation_hybrid] done in {:.2}s (n={n})", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,9 @@
+//! Bench: regenerate paper Fig 2 (MoE load & runtime vs chunk size).
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let out = layered_prefill::report::figures::fig2();
+    println!("{out}");
+    println!("[bench_fig2] regenerated in {:.3}s", t0.elapsed().as_secs_f64());
+}

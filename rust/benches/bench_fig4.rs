@@ -1,0 +1,10 @@
+//! Bench: regenerate paper Fig 4 (TTFT/TBT attainment breakdown).
+use std::time::Instant;
+
+fn main() {
+    let n = std::env::var("LP_BENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(50);
+    let t0 = Instant::now();
+    let out = layered_prefill::report::figures::fig4(n);
+    println!("{out}");
+    println!("[bench_fig4] regenerated in {:.3}s (n={n})", t0.elapsed().as_secs_f64());
+}

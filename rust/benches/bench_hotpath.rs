@@ -1,0 +1,89 @@
+//! L3 hot-path micro/macro benchmarks (the §Perf targets):
+//!   - simulator iterations/second on a saturated serving run
+//!   - scheduler plan() cost per call
+//!   - cost-model group_layer() per call
+//!   - real PJRT step latency (if artifacts are built)
+use std::time::Instant;
+
+use layered_prefill::config::{Dataset, HardwareDesc, ModelDesc, Policy, SchedulerConfig, WorkloadSpec};
+use layered_prefill::model::WorkAnalytics;
+use layered_prefill::simulator::{simulate, SimOptions};
+use layered_prefill::workload::WorkloadGen;
+
+fn main() {
+    // --- simulator throughput ---
+    let trace = WorkloadGen::new(WorkloadSpec::new(Dataset::ShareGpt, 6.0, 200)).generate();
+    for policy in [Policy::Chunked, Policy::Layered] {
+        let cfg = SchedulerConfig::preset(policy);
+        let t0 = Instant::now();
+        let (m, _) = simulate(
+            ModelDesc::qwen3_30b_a3b(),
+            HardwareDesc::h100x2(),
+            &cfg,
+            &trace,
+            SimOptions::default(),
+        );
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "[hotpath] sim {}: {} iterations in {:.3}s -> {:.0} iter/s wall",
+            policy.name(),
+            m.iterations,
+            dt,
+            m.iterations as f64 / dt
+        );
+    }
+
+    // --- cost model per-call ---
+    let analytics = WorkAnalytics::new(ModelDesc::qwen3_30b_a3b());
+    let ctx: Vec<u64> = (0..64).map(|i| 1000 + i * 37).collect();
+    let prefills = [(512u64, 4096u64)];
+    let t0 = Instant::now();
+    let iters = 100_000;
+    let mut acc = 0.0;
+    for _ in 0..iters {
+        acc += analytics.group_layer(&prefills, &ctx).bytes();
+    }
+    println!(
+        "[hotpath] group_layer(64 decodes + 1 prefill): {:.0} ns/call (acc {:.1e})",
+        t0.elapsed().as_secs_f64() / iters as f64 * 1e9,
+        acc
+    );
+
+    // --- real PJRT step latency (artifacts gated) ---
+    if layered_prefill::runtime::artifacts_available() {
+        let engine =
+            layered_prefill::runtime::RuntimeEngine::load(&layered_prefill::runtime::artifacts_dir())
+                .expect("engine");
+        let mut pools = engine.new_pools().unwrap();
+        let h = engine.embed(&[1i32; 16]).unwrap();
+        // warmup
+        for l in 0..engine.n_layers() {
+            let _ = engine.layer_prefill(l, 16, &h, &mut pools, 0, 0).unwrap();
+        }
+        let t0 = Instant::now();
+        let reps = 50;
+        for _ in 0..reps {
+            let mut hh = h.clone();
+            for l in 0..engine.n_layers() {
+                hh = engine.layer_prefill(l, 16, &hh, &mut pools, 0, 0).unwrap();
+            }
+        }
+        let per_layer = t0.elapsed().as_secs_f64() / (reps * engine.n_layers()) as f64;
+        println!("[hotpath] PJRT layer_prefill s16: {:.2} ms/layer-step", per_layer * 1e3);
+
+        let hd = engine.embed(&[1i32; 8]).unwrap();
+        let slots = [0i32, 1, 2, 3, 4, 5, 6, 7];
+        let lens = [16i32; 8];
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let mut hh = hd.clone();
+            for l in 0..engine.n_layers() {
+                hh = engine.layer_decode(l, &hh, &mut pools, &slots, &lens).unwrap();
+            }
+        }
+        let per_layer = t0.elapsed().as_secs_f64() / (reps * engine.n_layers()) as f64;
+        println!("[hotpath] PJRT layer_decode b8: {:.2} ms/layer-step", per_layer * 1e3);
+    } else {
+        println!("[hotpath] artifacts not built; skipping PJRT step bench");
+    }
+}

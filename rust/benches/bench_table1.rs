@@ -1,0 +1,22 @@
+//! Bench: regenerate paper Table 1 (expert coverage vs decode batch size)
+//! and time the coverage model + Monte-Carlo router.
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let out = layered_prefill::report::tables::table1(50);
+    let dt = t0.elapsed();
+    println!("{out}");
+    println!("[bench_table1] regenerated in {:.3}s", dt.as_secs_f64());
+
+    // Hot-path timing: analytic coverage lookups (used every sim iteration).
+    let m = layered_prefill::moe::coverage::CoverageModel::paper(128, 8);
+    let t0 = Instant::now();
+    let iters = 200_000u64;
+    let mut acc = 0.0;
+    for i in 0..iters {
+        acc += m.coverage(1 + (i % 512));
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("[bench_table1] coverage(): {:.0} ns/call (acc {acc:.1})", per * 1e9);
+}

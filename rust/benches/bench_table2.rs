@@ -1,0 +1,10 @@
+//! Bench: regenerate paper Table 2 (chunk-size trade-offs with rate search).
+use std::time::Instant;
+
+fn main() {
+    let n = std::env::var("LP_BENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(50);
+    let t0 = Instant::now();
+    let out = layered_prefill::report::tables::table2(n);
+    println!("{out}");
+    println!("[bench_table2] regenerated in {:.3}s (n={n})", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,10 @@
+//! Bench: regenerate paper Table 6 (Qwen/arXiv @1.3 req/s latency stats).
+use std::time::Instant;
+
+fn main() {
+    let n = std::env::var("LP_BENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(80);
+    let t0 = Instant::now();
+    let out = layered_prefill::report::tables::table6(n);
+    println!("{out}");
+    println!("[bench_table6] regenerated in {:.3}s (n={n})", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,10 @@
+//! Bench: regenerate paper Table 7 (expert-load TB over 100 requests).
+use std::time::Instant;
+
+fn main() {
+    let n = std::env::var("LP_BENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(100);
+    let t0 = Instant::now();
+    let out = layered_prefill::report::tables::table7(n);
+    println!("{out}");
+    println!("[bench_table7] regenerated in {:.3}s (n={n})", t0.elapsed().as_secs_f64());
+}

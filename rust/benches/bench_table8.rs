@@ -1,0 +1,10 @@
+//! Bench: regenerate paper Table 8 (energy per token at SLO-max rates).
+use std::time::Instant;
+
+fn main() {
+    let n = std::env::var("LP_BENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(50);
+    let t0 = Instant::now();
+    let out = layered_prefill::report::tables::table8(n);
+    println!("{out}");
+    println!("[bench_table8] regenerated in {:.3}s (n={n})", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,173 @@
+//! Configuration: model descriptors, hardware descriptors, SLOs, scheduler
+//! and workload specs. Presets mirror the paper's evaluation setup (§5.1,
+//! Tables 3–5) and can be overridden from the CLI via `--key value` flags.
+
+pub mod hardware;
+pub mod model;
+pub mod slo;
+
+pub use hardware::HardwareDesc;
+pub use model::ModelDesc;
+pub use slo::SloSpec;
+
+/// Which scheduling policy the coordinator runs (paper §2.3, §4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// FasterTransformer-style fixed batches, run-to-completion.
+    Static,
+    /// Orca continuous batching: whole-prompt prefill inserted between decodes.
+    Orca,
+    /// Sarathi-Serve chunked prefill (token-axis splitting).
+    Chunked,
+    /// The paper: layered prefill (layer-axis splitting).
+    Layered,
+    /// §4.3 generalization: chunked + layered combined.
+    Hybrid,
+}
+
+impl Policy {
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s.to_ascii_lowercase().as_str() {
+            "static" => Some(Policy::Static),
+            "orca" | "continuous" => Some(Policy::Orca),
+            "chunked" | "sarathi" => Some(Policy::Chunked),
+            "layered" => Some(Policy::Layered),
+            "hybrid" => Some(Policy::Hybrid),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Static => "static",
+            Policy::Orca => "orca",
+            Policy::Chunked => "chunked",
+            Policy::Layered => "layered",
+            Policy::Hybrid => "hybrid",
+        }
+    }
+}
+
+/// Scheduler knobs (paper §4.4 + Sarathi config).
+#[derive(Clone, Debug)]
+pub struct SchedulerConfig {
+    pub policy: Policy,
+    /// Chunked prefill: tokens per chunk (Sarathi: typically 256–512).
+    pub chunk_size: u32,
+    /// Layered prefill: per-iteration prefill work target; G(L) =
+    /// max(1, ceil(L / group_token_target)) (paper uses 512).
+    pub group_token_target: u32,
+    /// Hybrid: chunk size applied before layering (large, e.g. 4096+).
+    pub hybrid_chunk_size: u32,
+    /// Max concurrent decode requests (batch cap).
+    pub max_batch: usize,
+    /// Static batching batch size.
+    pub static_batch: usize,
+    /// Merge concurrently-arrived small prompts into one admission
+    /// (paper §4.4 "merge them into a single batch").
+    pub merge_small_prefills: bool,
+}
+
+impl SchedulerConfig {
+    pub fn preset(policy: Policy) -> Self {
+        SchedulerConfig {
+            policy,
+            chunk_size: 512,
+            group_token_target: 512,
+            hybrid_chunk_size: 4096,
+            max_batch: 256,
+            static_batch: 16,
+            merge_small_prefills: true,
+        }
+    }
+}
+
+/// Workload: arrival process + dataset length model (paper Table 4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dataset {
+    /// Multi-turn conversations: wide input spread, output ≈ input/6.
+    ShareGpt,
+    /// Long-document summarization: input ≈ 40× output.
+    Arxiv,
+    /// Fixed lengths (microbenchmarks).
+    Fixed,
+}
+
+impl Dataset {
+    pub fn parse(s: &str) -> Option<Dataset> {
+        match s.to_ascii_lowercase().as_str() {
+            "sharegpt" => Some(Dataset::ShareGpt),
+            "arxiv" => Some(Dataset::Arxiv),
+            "fixed" => Some(Dataset::Fixed),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataset::ShareGpt => "sharegpt",
+            Dataset::Arxiv => "arxiv",
+            Dataset::Fixed => "fixed",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    pub dataset: Dataset,
+    /// Poisson arrival rate (requests/second).
+    pub rate: f64,
+    /// Number of requests to generate.
+    pub n_requests: usize,
+    pub seed: u64,
+    /// For Dataset::Fixed.
+    pub fixed_input: u32,
+    pub fixed_output: u32,
+}
+
+impl WorkloadSpec {
+    pub fn new(dataset: Dataset, rate: f64, n_requests: usize) -> Self {
+        WorkloadSpec {
+            dataset,
+            rate,
+            n_requests,
+            seed: 0xA11CE,
+            fixed_input: 2048,
+            fixed_output: 256,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in [
+            Policy::Static,
+            Policy::Orca,
+            Policy::Chunked,
+            Policy::Layered,
+            Policy::Hybrid,
+        ] {
+            assert_eq!(Policy::parse(p.name()), Some(p));
+        }
+        assert_eq!(Policy::parse("sarathi"), Some(Policy::Chunked));
+        assert_eq!(Policy::parse("nope"), None);
+    }
+
+    #[test]
+    fn dataset_parse() {
+        assert_eq!(Dataset::parse("arxiv"), Some(Dataset::Arxiv));
+        assert_eq!(Dataset::parse("ShareGPT"), Some(Dataset::ShareGpt));
+        assert_eq!(Dataset::parse("?"), None);
+    }
+
+    #[test]
+    fn preset_defaults_match_paper() {
+        let c = SchedulerConfig::preset(Policy::Layered);
+        assert_eq!(c.chunk_size, 512);
+        assert_eq!(c.group_token_target, 512);
+    }
+}

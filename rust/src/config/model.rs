@@ -1,0 +1,194 @@
+//! Model descriptors: the two paper evaluation models (Table 3) plus the
+//! AOT-compiled TinyMoE testbed model. All byte/flop analytics in
+//! `crate::model::analytics` derive from these fields.
+
+/// Architecture description of a decoder-only MoE transformer.
+#[derive(Clone, Debug)]
+pub struct ModelDesc {
+    pub name: &'static str,
+    pub n_layers: u32,
+    pub d_model: u32,
+    pub n_heads: u32,
+    pub n_kv_heads: u32,
+    pub head_dim: u32,
+    pub n_experts: u32,
+    pub top_k: u32,
+    /// Per-expert FFN intermediate dim (SwiGLU: w1/w3 [D,F], w2 [F,D]).
+    pub d_ff_expert: u32,
+    pub vocab: u32,
+    /// Weight/activation dtype width (paper: bf16 = 2).
+    pub dtype_bytes: u32,
+    /// KV-cache bytes per token across the whole model (paper Table 3).
+    pub kv_bytes_per_token: u64,
+}
+
+impl ModelDesc {
+    /// Qwen3-30B-A3B ("Qwen" in the paper): 128 experts, top-8.
+    pub fn qwen3_30b_a3b() -> Self {
+        ModelDesc {
+            name: "qwen3-30b-a3b",
+            n_layers: 48,
+            d_model: 2048,
+            n_heads: 32,
+            n_kv_heads: 4,
+            head_dim: 128,
+            n_experts: 128,
+            top_k: 8,
+            d_ff_expert: 768,
+            vocab: 151_936,
+            dtype_bytes: 2,
+            kv_bytes_per_token: 48 * 1024, // Table 3
+        }
+    }
+
+    /// GPT-OSS-20B ("GPT" in the paper): 32 experts, top-4.
+    pub fn gpt_oss_20b() -> Self {
+        ModelDesc {
+            name: "gpt-oss-20b",
+            n_layers: 24,
+            d_model: 2880,
+            n_heads: 64,
+            n_kv_heads: 8,
+            head_dim: 64,
+            n_experts: 32,
+            top_k: 4,
+            d_ff_expert: 2880,
+            vocab: 201_088,
+            dtype_bytes: 2,
+            kv_bytes_per_token: 34 * 1024, // Table 3: "<34 KB"
+        }
+    }
+
+    /// The AOT-compiled CPU testbed model (python/compile/model.py CFG).
+    pub fn tinymoe() -> Self {
+        ModelDesc {
+            name: "tinymoe",
+            n_layers: 8,
+            d_model: 64,
+            n_heads: 4,
+            n_kv_heads: 2,
+            head_dim: 16,
+            n_experts: 4,
+            top_k: 2,
+            d_ff_expert: 128,
+            vocab: 256,
+            dtype_bytes: 4, // f32 on CPU PJRT
+            kv_bytes_per_token: (8 * 2 * 2 * 16 * 4) as u64, // L*Hk*{K,V}*dh*4B
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ModelDesc> {
+        match s.to_ascii_lowercase().as_str() {
+            "qwen" | "qwen3-30b-a3b" | "qwen3" => Some(Self::qwen3_30b_a3b()),
+            "gpt" | "gpt-oss-20b" | "gptoss" => Some(Self::gpt_oss_20b()),
+            "tinymoe" | "tiny" => Some(Self::tinymoe()),
+            _ => None,
+        }
+    }
+
+    // ---- derived quantities (parameters per layer, bytes) ----
+
+    /// Attention projection parameters per layer (wq, wk, wv, wo).
+    pub fn attn_params_per_layer(&self) -> u64 {
+        let d = self.d_model as u64;
+        let q = d * (self.n_heads * self.head_dim) as u64;
+        let kv = 2 * d * (self.n_kv_heads * self.head_dim) as u64;
+        let o = (self.n_heads * self.head_dim) as u64 * d;
+        q + kv + o
+    }
+
+    /// One expert's parameters (SwiGLU: w1 + w3 + w2).
+    pub fn params_per_expert(&self) -> u64 {
+        3 * self.d_model as u64 * self.d_ff_expert as u64
+    }
+
+    /// Router parameters per layer.
+    pub fn router_params_per_layer(&self) -> u64 {
+        self.d_model as u64 * self.n_experts as u64
+    }
+
+    /// Dense (always-loaded) parameters per layer: attention + router + norms.
+    pub fn dense_params_per_layer(&self) -> u64 {
+        self.attn_params_per_layer() + self.router_params_per_layer() + 2 * self.d_model as u64
+    }
+
+    /// All-experts parameters per layer.
+    pub fn expert_params_per_layer(&self) -> u64 {
+        self.n_experts as u64 * self.params_per_expert()
+    }
+
+    /// Total parameter count (embeddings + layers + head).
+    pub fn total_params(&self) -> u64 {
+        let emb = 2 * self.vocab as u64 * self.d_model as u64; // embed + lm head
+        emb + self.n_layers as u64
+            * (self.dense_params_per_layer() + self.expert_params_per_layer())
+    }
+
+    pub fn bytes_per_expert(&self) -> u64 {
+        self.params_per_expert() * self.dtype_bytes as u64
+    }
+
+    /// KV bytes per token per layer.
+    pub fn kv_bytes_per_token_layer(&self) -> f64 {
+        self.kv_bytes_per_token as f64 / self.n_layers as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qwen_total_params_near_30b() {
+        let m = ModelDesc::qwen3_30b_a3b();
+        let p = m.total_params() as f64;
+        assert!(
+            (27e9..33e9).contains(&p),
+            "qwen params = {:.1}B",
+            p / 1e9
+        );
+    }
+
+    #[test]
+    fn gpt_total_params_near_20b() {
+        let m = ModelDesc::gpt_oss_20b();
+        let p = m.total_params() as f64;
+        assert!(
+            (18e9..24e9).contains(&p),
+            "gpt params = {:.1}B",
+            p / 1e9
+        );
+    }
+
+    #[test]
+    fn experts_to_topk_ratio_matches_table3() {
+        let q = ModelDesc::qwen3_30b_a3b();
+        assert_eq!(q.n_experts / q.top_k, 16); // 16:1
+        let g = ModelDesc::gpt_oss_20b();
+        assert_eq!(g.n_experts / g.top_k, 8); // 8:1
+    }
+
+    #[test]
+    fn expert_bytes_sane() {
+        let q = ModelDesc::qwen3_30b_a3b();
+        // 3 * 2048 * 768 * 2B ≈ 9.4 MB per expert
+        assert_eq!(q.bytes_per_expert(), 3 * 2048 * 768 * 2);
+    }
+
+    #[test]
+    fn parse_aliases() {
+        assert_eq!(ModelDesc::parse("Qwen").unwrap().name, "qwen3-30b-a3b");
+        assert_eq!(ModelDesc::parse("gpt").unwrap().name, "gpt-oss-20b");
+        assert_eq!(ModelDesc::parse("tiny").unwrap().name, "tinymoe");
+        assert!(ModelDesc::parse("llama").is_none());
+    }
+
+    #[test]
+    fn tinymoe_matches_python_cfg() {
+        let t = ModelDesc::tinymoe();
+        assert_eq!(t.n_layers, 8);
+        assert_eq!(t.n_experts, 4);
+        assert_eq!(t.top_k, 2);
+        assert_eq!(t.d_model, 64);
+    }
+}

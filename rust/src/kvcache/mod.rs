@@ -1,0 +1,221 @@
+//! Paged KV-cache manager (vLLM-style): fixed-size blocks, per-request block
+//! tables, a free list, and capacity-aware admission. The simulator uses it
+//! to gate request admission (a request cannot start prefill unless its
+//! worst-case block demand fits); the real server uses the slot allocator.
+
+/// Block-granular KV allocator.
+#[derive(Clone, Debug)]
+pub struct KvCacheManager {
+    /// Tokens per block.
+    pub block_size: u32,
+    /// Total blocks in the pool.
+    pub n_blocks: u32,
+    free: Vec<u32>,
+    /// request id -> allocated blocks (in allocation order).
+    tables: std::collections::BTreeMap<u64, Vec<u32>>,
+    /// request id -> tokens stored.
+    lens: std::collections::BTreeMap<u64, u32>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvError {
+    OutOfBlocks,
+    UnknownRequest,
+    AlreadyRegistered,
+}
+
+impl KvCacheManager {
+    pub fn new(n_blocks: u32, block_size: u32) -> Self {
+        assert!(block_size > 0 && n_blocks > 0);
+        KvCacheManager {
+            block_size,
+            n_blocks,
+            free: (0..n_blocks).rev().collect(),
+            tables: Default::default(),
+            lens: Default::default(),
+        }
+    }
+
+    /// Size a pool from an HBM budget.
+    pub fn from_capacity(bytes: f64, kv_bytes_per_token: u64, block_size: u32) -> Self {
+        let tokens = (bytes / kv_bytes_per_token as f64) as u64;
+        let blocks = (tokens / block_size as u64).max(1) as u32;
+        Self::new(blocks, block_size)
+    }
+
+    pub fn free_blocks(&self) -> u32 {
+        self.free.len() as u32
+    }
+
+    pub fn used_blocks(&self) -> u32 {
+        self.n_blocks - self.free_blocks()
+    }
+
+    pub fn blocks_for(&self, tokens: u32) -> u32 {
+        tokens.div_ceil(self.block_size)
+    }
+
+    /// Can a request with `total_tokens` eventual footprint be admitted now
+    /// (conservative: full reservation)?
+    pub fn can_admit(&self, total_tokens: u32) -> bool {
+        self.blocks_for(total_tokens) <= self.free_blocks()
+    }
+
+    /// Register a request and reserve blocks for `initial_tokens`.
+    pub fn register(&mut self, id: u64, initial_tokens: u32) -> Result<(), KvError> {
+        if self.tables.contains_key(&id) {
+            return Err(KvError::AlreadyRegistered);
+        }
+        let need = self.blocks_for(initial_tokens);
+        if need > self.free_blocks() {
+            return Err(KvError::OutOfBlocks);
+        }
+        let mut blocks = Vec::with_capacity(need as usize);
+        for _ in 0..need {
+            blocks.push(self.free.pop().unwrap());
+        }
+        self.tables.insert(id, blocks);
+        self.lens.insert(id, initial_tokens);
+        Ok(())
+    }
+
+    /// Append `tokens` to a request, allocating blocks as needed.
+    pub fn append(&mut self, id: u64, tokens: u32) -> Result<(), KvError> {
+        let len = *self.lens.get(&id).ok_or(KvError::UnknownRequest)?;
+        let new_len = len + tokens;
+        let have = self.tables[&id].len() as u32;
+        let need = self.blocks_for(new_len);
+        if need > have {
+            let extra = need - have;
+            if extra > self.free_blocks() {
+                return Err(KvError::OutOfBlocks);
+            }
+            let table = self.tables.get_mut(&id).unwrap();
+            for _ in 0..extra {
+                table.push(self.free.pop().unwrap());
+            }
+        }
+        self.lens.insert(id, new_len);
+        Ok(())
+    }
+
+    /// Release all blocks of a finished request.
+    pub fn release(&mut self, id: u64) -> Result<u32, KvError> {
+        let blocks = self.tables.remove(&id).ok_or(KvError::UnknownRequest)?;
+        self.lens.remove(&id);
+        let n = blocks.len() as u32;
+        self.free.extend(blocks);
+        Ok(n)
+    }
+
+    pub fn len_of(&self, id: u64) -> Option<u32> {
+        self.lens.get(&id).copied()
+    }
+
+    pub fn table_of(&self, id: u64) -> Option<&[u32]> {
+        self.tables.get(&id).map(Vec::as_slice)
+    }
+
+    pub fn active_requests(&self) -> usize {
+        self.tables.len()
+    }
+
+    /// Invariant check used by property tests: no block is double-owned and
+    /// free + owned == total.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut seen = vec![false; self.n_blocks as usize];
+        for b in &self.free {
+            if seen[*b as usize] {
+                return Err(format!("block {b} duplicated in free list"));
+            }
+            seen[*b as usize] = true;
+        }
+        for (id, table) in &self.tables {
+            for b in table {
+                if seen[*b as usize] {
+                    return Err(format!("block {b} double-owned (req {id})"));
+                }
+                seen[*b as usize] = true;
+            }
+            let len = self.lens[id];
+            if table.len() as u32 != self.blocks_for(len) && len > 0 {
+                return Err(format!(
+                    "req {id}: {} blocks but len {len} needs {}",
+                    table.len(),
+                    self.blocks_for(len)
+                ));
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err("leaked block (neither free nor owned)".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_append_release_cycle() {
+        let mut kv = KvCacheManager::new(10, 16);
+        kv.register(1, 20).unwrap(); // 2 blocks
+        assert_eq!(kv.used_blocks(), 2);
+        kv.append(1, 12).unwrap(); // 32 tokens total -> still 2 blocks
+        assert_eq!(kv.used_blocks(), 2);
+        kv.append(1, 1).unwrap(); // 33 -> 3 blocks
+        assert_eq!(kv.used_blocks(), 3);
+        assert_eq!(kv.release(1).unwrap(), 3);
+        assert_eq!(kv.free_blocks(), 10);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn admission_respects_capacity() {
+        let mut kv = KvCacheManager::new(4, 16);
+        assert!(kv.can_admit(64));
+        assert!(!kv.can_admit(65));
+        kv.register(1, 48).unwrap(); // 3 blocks
+        assert!(kv.can_admit(16));
+        assert!(!kv.can_admit(17));
+        assert_eq!(kv.register(2, 32), Err(KvError::OutOfBlocks));
+    }
+
+    #[test]
+    fn append_out_of_blocks_fails_cleanly() {
+        let mut kv = KvCacheManager::new(2, 16);
+        kv.register(1, 16).unwrap();
+        kv.register(2, 16).unwrap();
+        assert_eq!(kv.append(1, 16), Err(KvError::OutOfBlocks));
+        // State unchanged after failure.
+        assert_eq!(kv.len_of(1), Some(16));
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn unknown_and_duplicate_requests() {
+        let mut kv = KvCacheManager::new(4, 16);
+        assert_eq!(kv.append(9, 1), Err(KvError::UnknownRequest));
+        assert_eq!(kv.release(9), Err(KvError::UnknownRequest));
+        kv.register(1, 1).unwrap();
+        assert_eq!(kv.register(1, 1), Err(KvError::AlreadyRegistered));
+    }
+
+    #[test]
+    fn from_capacity_sizing() {
+        // 1 GB at 48 KB/token -> 20345 tokens -> 1271 blocks of 16 tokens
+        let kv = KvCacheManager::from_capacity(1e9, 48 * 1024, 16);
+        assert_eq!(kv.n_blocks, 1271);
+    }
+
+    #[test]
+    fn zero_token_register_takes_no_blocks() {
+        let mut kv = KvCacheManager::new(4, 16);
+        kv.register(1, 0).unwrap();
+        assert_eq!(kv.used_blocks(), 0);
+        kv.append(1, 1).unwrap();
+        assert_eq!(kv.used_blocks(), 1);
+        kv.check_invariants().unwrap();
+    }
+}

@@ -1,0 +1,34 @@
+//! # layered-prefill
+//!
+//! Reproduction of *"From Tokens to Layers: Redefining Stall-Free Scheduling
+//! for LLM Serving with Layered Prefill"* (Lee et al., 2025) as a
+//! three-layer rust + JAX + Pallas serving stack:
+//!
+//! * **L3 (this crate)** — the scheduling contribution: layered prefill and
+//!   its baselines (chunked prefill / Orca / static batching / the §4.3
+//!   hybrid), a discrete-event roofline simulator calibrated to the paper's
+//!   2×H100 testbed, MoE expert-load traffic + energy accounting, a paged
+//!   KV-cache manager, workload generators fitted to the paper's datasets,
+//!   and a real serving engine executing the AOT-compiled TinyMoE model via
+//!   PJRT (`runtime` + `server`).
+//! * **L2** — `python/compile/model.py`: JAX per-layer model functions,
+//!   lowered once to HLO text artifacts by `python/compile/aot.py`.
+//! * **L1** — `python/compile/kernels/`: Pallas MoE expert-FFN and attention
+//!   kernels (interpret mode), verified against pure-jnp oracles.
+//!
+//! Python never runs on the request path: `make artifacts` is the only
+//! build-time python invocation; the rust binary then loads
+//! `artifacts/*.hlo.txt` through the PJRT C API (`xla` crate).
+
+pub mod config;
+pub mod kvcache;
+pub mod metrics;
+pub mod model;
+pub mod moe;
+pub mod report;
+pub mod runtime;
+pub mod sched;
+pub mod server;
+pub mod simulator;
+pub mod util;
+pub mod workload;

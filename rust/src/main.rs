@@ -1,0 +1,288 @@
+//! lpserve — CLI for the layered-prefill serving stack.
+//!
+//! Subcommands:
+//!   report <table1|fig2|table2|fig3|fig4|table6|table7|fig5|table8|all>
+//!       Regenerate paper tables/figures via the calibrated simulator.
+//!   simulate --model qwen --dataset arxiv --policy layered --rate 1.3
+//!       One simulation run with a metrics summary.
+//!   sweep --model qwen --dataset arxiv --rates 1.1,1.3,1.5
+//!       SLO attainment sweep (chunked vs layered).
+//!   serve --policy layered --requests 12 --rate 2.0
+//!       REAL serving: run the AOT-compiled TinyMoE via PJRT (needs
+//!       `make artifacts`).
+//!   info
+//!       Print model/hardware descriptors and artifact status.
+
+use layered_prefill::config::{
+    Dataset, HardwareDesc, ModelDesc, Policy, SloSpec,
+};
+use layered_prefill::report;
+use layered_prefill::report::common::RunSpec;
+use layered_prefill::runtime::{artifacts_available, artifacts_dir, RuntimeEngine};
+use layered_prefill::server::{RealServer, ServeOptions};
+use layered_prefill::util::cli::Args;
+use layered_prefill::util::table::{f1, f2, f3, pct, Table};
+use layered_prefill::workload::{WorkloadGen};
+use layered_prefill::config::WorkloadSpec;
+
+fn main() {
+    layered_prefill::util::logging::init_from_env();
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+        return;
+    }
+    let cmd = argv.remove(0);
+    let args = Args::parse(argv);
+    match cmd.as_str() {
+        "report" => cmd_report(&args),
+        "simulate" => cmd_simulate(&args),
+        "sweep" => cmd_sweep(&args),
+        "serve" => cmd_serve(&args),
+        "trace" => cmd_trace(&args),
+        "info" => cmd_info(),
+        _ => usage(),
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "usage: lpserve <report|simulate|sweep|serve|trace|info> [--flags]\n\
+         try: lpserve report all | lpserve simulate --policy layered --rate 1.3"
+    );
+}
+
+fn model_arg(args: &Args) -> ModelDesc {
+    ModelDesc::parse(&args.str("model", "qwen")).unwrap_or_else(|| {
+        eprintln!("unknown model; using qwen3-30b-a3b");
+        ModelDesc::qwen3_30b_a3b()
+    })
+}
+
+fn dataset_arg(args: &Args) -> Dataset {
+    Dataset::parse(&args.str("dataset", "arxiv")).unwrap_or(Dataset::Arxiv)
+}
+
+fn policy_arg(args: &Args) -> Policy {
+    Policy::parse(&args.str("policy", "layered")).unwrap_or(Policy::Layered)
+}
+
+fn cmd_report(args: &Args) {
+    let n = args.usize("requests", 100);
+    let which = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all");
+    let out = match which {
+        "table1" => report::tables::table1(n),
+        "fig2" => report::figures::fig2(),
+        "table2" => report::tables::table2(n),
+        "fig3" => report::figures::fig3(n),
+        "fig4" => report::figures::fig4(n),
+        "table6" => report::tables::table6(n),
+        "table7" => report::tables::table7(n),
+        "fig5" => report::figures::fig5(n),
+        "table8" => report::tables::table8(n),
+        "all" => report::all(n),
+        other => {
+            eprintln!("unknown report '{other}'");
+            return;
+        }
+    };
+    println!("{out}");
+}
+
+fn cmd_simulate(args: &Args) {
+    let mut spec = RunSpec::new(
+        model_arg(args),
+        dataset_arg(args),
+        policy_arg(args),
+        args.f64("rate", 1.3),
+    );
+    spec.n_requests = args.usize("requests", 100);
+    spec.chunk_size = args.usize("chunk", 512) as u32;
+    spec.seed = args.u64("seed", 0xA11CE);
+    let slo = spec.slo();
+    let (m, _) = spec.run();
+    let sum = m.slo(&slo);
+    let mut t = Table::new(&format!(
+        "simulate — {} on {} ({}, {} req/s, n={})",
+        spec.model.name,
+        spec.dataset.name(),
+        spec.policy.name(),
+        spec.rate,
+        spec.n_requests
+    ))
+    .header(&["metric", "value"]);
+    t.row(&["TTFT mean (s)".into(), f3(m.ttft_samples().mean())]);
+    t.row(&["TTFT p99 (s)".into(), f3(m.ttft_samples().p99())]);
+    t.row(&["TBT mean (ms)".into(), f2(m.tbt_samples().mean() * 1e3)]);
+    t.row(&["TBT p99 (ms)".into(), f2(m.tbt_samples().p99() * 1e3)]);
+    t.row(&["E2E mean (s)".into(), f2(m.e2e_samples().mean())]);
+    t.row(&["SLO attainment".into(), pct(sum.full)]);
+    t.row(&["  TTFT component".into(), pct(sum.ttft_only)]);
+    t.row(&["  TBT component".into(), pct(sum.tbt_only)]);
+    t.row(&["expert loads (TB)".into(), f2(m.traffic.expert_bytes / 1e12)]);
+    t.row(&["HBM traffic (TB)".into(), f2(m.traffic.expert_bytes / 1e12 + m.traffic.dense_bytes / 1e12 + m.traffic.kv_bytes / 1e12 + m.traffic.act_bytes / 1e12)]);
+    t.row(&["energy (kJ)".into(), f2(m.energy.total_j() / 1e3)]);
+    t.row(&["energy / token (mJ)".into(), f1(m.energy_per_token_mj())]);
+    t.row(&["gen throughput (tok/s)".into(), f1(m.gen_throughput())]);
+    t.row(&["avg decode batch".into(), f1(m.avg_decode_batch)]);
+    t.row(&["iterations".into(), m.iterations.to_string()]);
+    t.row(&["makespan (s)".into(), f1(m.makespan_s)]);
+    t.print();
+}
+
+fn cmd_sweep(args: &Args) {
+    let model = model_arg(args);
+    let dataset = dataset_arg(args);
+    let rates = args.f64_list("rates", &[1.1, 1.3, 1.5, 1.7]);
+    let n = args.usize("requests", 100);
+    println!(
+        "{}",
+        report::figures::fig3_panel(&model, dataset, &rates, n)
+    );
+}
+
+fn cmd_serve(args: &Args) {
+    if !artifacts_available() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let n = args.usize("requests", 8);
+    let rate = args.f64("rate", 2.0);
+    let policy = policy_arg(args);
+    println!("loading PJRT engine from {} ...", artifacts_dir().display());
+    let engine = RuntimeEngine::load(&artifacts_dir()).expect("engine load");
+    println!("platform: {}", engine.platform());
+
+    let mut wspec = WorkloadSpec::new(Dataset::ShareGpt, rate, n);
+    wspec.seed = args.u64("seed", 42);
+    let trace = WorkloadGen::new(wspec).generate_scaled(32.0, 140);
+    let opts = ServeOptions {
+        policy,
+        realtime: !args.bool("batch"),
+        ..Default::default()
+    };
+    let server = RealServer::new(&engine, opts).unwrap();
+    let rep = server.serve(&trace).expect("serve");
+    let m = &rep.metrics;
+    let mut t = Table::new(&format!(
+        "real serve — TinyMoE via PJRT ({}, {} requests @ {}/s)",
+        policy.name(),
+        n,
+        rate
+    ))
+    .header(&["metric", "value"]);
+    t.row(&["TTFT mean (ms)".into(), f1(m.ttft_samples().mean() * 1e3)]);
+    t.row(&["TTFT p99 (ms)".into(), f1(m.ttft_samples().p99() * 1e3)]);
+    t.row(&["TBT mean (ms)".into(), f1(m.tbt_samples().mean() * 1e3)]);
+    t.row(&["TBT p99 (ms)".into(), f1(m.tbt_samples().p99() * 1e3)]);
+    t.row(&["throughput (tok/s)".into(), f1(m.gen_throughput())]);
+    t.row(&["iterations".into(), rep.iterations.to_string()]);
+    t.row(&["runtime steps".into(), rep.steps.to_string()]);
+    t.row(&["makespan (s)".into(), f2(m.makespan_s)]);
+    t.print();
+}
+
+/// Record a workload trace to CSV, or replay one through the simulator.
+///
+///   lpserve trace --out arxiv13.csv --dataset arxiv --rate 1.3 --requests 100
+///   lpserve trace --replay arxiv13.csv --policy layered
+fn cmd_trace(args: &Args) {
+    use layered_prefill::simulator::{simulate, SimOptions};
+    if let Some(path) = args.opt("replay") {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("cannot read {path}: {e}");
+                std::process::exit(1);
+            }
+        };
+        let trace = match layered_prefill::workload::Trace::from_csv(&text) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("bad trace csv: {e}");
+                std::process::exit(1);
+            }
+        };
+        let model = model_arg(args);
+        let policy = policy_arg(args);
+        let cfg = layered_prefill::config::SchedulerConfig::preset(policy);
+        let (m, _) = simulate(
+            model.clone(),
+            HardwareDesc::h100x2(),
+            &cfg,
+            &trace,
+            SimOptions::default(),
+        );
+        println!(
+            "replayed {} requests ({}): TTFT mean {:.3}s p99 {:.3}s | TBT mean {:.1}ms p99 {:.1}ms | {:.1} mJ/tok | expert {:.2} TB",
+            trace.len(),
+            policy.name(),
+            m.ttft_samples().mean(),
+            m.ttft_samples().p99(),
+            m.tbt_samples().mean() * 1e3,
+            m.tbt_samples().p99() * 1e3,
+            m.energy_per_token_mj(),
+            m.traffic.expert_bytes / 1e12,
+        );
+        return;
+    }
+    let mut spec = WorkloadSpec::new(
+        dataset_arg(args),
+        args.f64("rate", 1.3),
+        args.usize("requests", 100),
+    );
+    spec.seed = args.u64("seed", 0xA11CE);
+    let trace = WorkloadGen::new(spec).generate();
+    let csv = trace.to_csv();
+    match args.opt("out") {
+        Some(path) => {
+            std::fs::write(path, &csv).expect("write trace");
+            println!("wrote {} requests to {path}", trace.len());
+        }
+        None => print!("{csv}"),
+    }
+}
+
+fn cmd_info() {
+    let mut t = Table::new("models").header(&[
+        "name", "layers", "experts", "top-k", "params (B)", "KB KV/tok",
+    ]);
+    for m in [
+        ModelDesc::qwen3_30b_a3b(),
+        ModelDesc::gpt_oss_20b(),
+        ModelDesc::tinymoe(),
+    ] {
+        t.row(&[
+            m.name.to_string(),
+            m.n_layers.to_string(),
+            m.n_experts.to_string(),
+            m.top_k.to_string(),
+            f1(m.total_params() as f64 / 1e9),
+            f1(m.kv_bytes_per_token as f64 / 1024.0),
+        ]);
+    }
+    t.print();
+    let hw = HardwareDesc::h100x2();
+    println!(
+        "\nhardware: {} — {:.0} TFLOP/s, {:.1} TB/s, ridge {:.0} Op/B",
+        hw.name,
+        hw.peak_flops / 1e12,
+        hw.peak_bw / 1e12,
+        hw.ridge_point()
+    );
+    let q = ModelDesc::qwen3_30b_a3b();
+    let slo = SloSpec::paper(&q, Dataset::Arxiv);
+    println!("SLO (qwen/arxiv): TTFT {}s, TBT {}ms", slo.ttft_s, slo.tbt_s * 1e3);
+    println!(
+        "artifacts: {}",
+        if artifacts_available() {
+            format!("present at {}", artifacts_dir().display())
+        } else {
+            "NOT built (run `make artifacts`)".into()
+        }
+    );
+}

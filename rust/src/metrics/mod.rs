@@ -1,0 +1,200 @@
+//! Serving metrics: per-request latency records, run-level aggregates, SLO
+//! attainment (full + TTFT/TBT breakdown, paper Figs 3–4), token timelines
+//! (Fig 5), traffic and energy summaries (Tables 2/7/8).
+
+use crate::config::slo::{evaluate, SloSpec};
+use crate::moe::TrafficCounter;
+use crate::simulator::energy::EnergyMeter;
+use crate::util::stats::Samples;
+
+/// Finalized latency record of one request.
+#[derive(Clone, Debug)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub arrival_s: f64,
+    pub input_len: u32,
+    pub output_len: u32,
+    /// Time from arrival to first token (queue + prefill).
+    pub ttft_s: f64,
+    /// Inter-token gaps for tokens 2..N.
+    pub tbts_s: Vec<f64>,
+    pub finish_s: f64,
+}
+
+impl RequestRecord {
+    pub fn e2e_s(&self) -> f64 {
+        self.finish_s - self.arrival_s
+    }
+}
+
+/// Aggregated outcome of one serving run.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub requests: Vec<RequestRecord>,
+    pub traffic: TrafficCounter,
+    pub energy: EnergyMeter,
+    /// Wall-clock span of the run (first arrival to last completion).
+    pub makespan_s: f64,
+    /// Time-weighted mean decode batch size (Fig 3 dotted line).
+    pub avg_decode_batch: f64,
+    /// Iterations executed.
+    pub iterations: u64,
+    /// (time, cumulative tokens emitted) — global generation timeline.
+    pub token_timeline: Vec<(f64, u64)>,
+}
+
+/// SLO attainment split (paper Fig 4): full = both, plus per-component.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SloSummary {
+    pub full: f64,
+    pub ttft_only: f64,
+    pub tbt_only: f64,
+    pub n: usize,
+}
+
+impl RunMetrics {
+    pub fn total_tokens(&self) -> u64 {
+        self.requests
+            .iter()
+            .map(|r| (r.input_len + r.output_len) as u64)
+            .sum()
+    }
+
+    pub fn generated_tokens(&self) -> u64 {
+        self.requests.iter().map(|r| r.output_len as u64).sum()
+    }
+
+    pub fn ttft_samples(&self) -> Samples {
+        let mut s = Samples::new();
+        for r in &self.requests {
+            s.push(r.ttft_s);
+        }
+        s
+    }
+
+    pub fn tbt_samples(&self) -> Samples {
+        let mut s = Samples::new();
+        for r in &self.requests {
+            for &t in &r.tbts_s {
+                s.push(t);
+            }
+        }
+        s
+    }
+
+    pub fn e2e_samples(&self) -> Samples {
+        let mut s = Samples::new();
+        for r in &self.requests {
+            s.push(r.e2e_s());
+        }
+        s
+    }
+
+    pub fn slo(&self, slo: &SloSpec) -> SloSummary {
+        let mut full = 0usize;
+        let mut ttft = 0usize;
+        let mut tbt = 0usize;
+        for r in &self.requests {
+            let a = evaluate(r.ttft_s, &r.tbts_s, slo);
+            full += a.full() as usize;
+            ttft += a.ttft_ok as usize;
+            tbt += a.tbt_ok as usize;
+        }
+        let n = self.requests.len().max(1);
+        SloSummary {
+            full: full as f64 / n as f64,
+            ttft_only: ttft as f64 / n as f64,
+            tbt_only: tbt as f64 / n as f64,
+            n: self.requests.len(),
+        }
+    }
+
+    /// Energy per (prompt + generated) token in mJ (paper Tables 2/8).
+    pub fn energy_per_token_mj(&self) -> f64 {
+        self.energy.per_token_mj(self.total_tokens())
+    }
+
+    /// Throughput in generated tokens/second over the makespan.
+    pub fn gen_throughput(&self) -> f64 {
+        if self.makespan_s <= 0.0 {
+            return 0.0;
+        }
+        self.generated_tokens() as f64 / self.makespan_s
+    }
+
+    /// Cumulative token timeline for one request (Fig 5).
+    pub fn request_timeline(&self, id: u64, token_times: &[(u64, Vec<f64>)]) -> Vec<(f64, u64)> {
+        token_times
+            .iter()
+            .find(|(rid, _)| *rid == id)
+            .map(|(_, times)| {
+                times
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &t)| (t, i as u64 + 1))
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, ttft: f64, tbts: Vec<f64>) -> RequestRecord {
+        let finish = ttft + tbts.iter().sum::<f64>();
+        RequestRecord {
+            id,
+            arrival_s: 0.0,
+            input_len: 100,
+            output_len: tbts.len() as u32 + 1,
+            ttft_s: ttft,
+            tbts_s: tbts,
+            finish_s: finish,
+        }
+    }
+
+    #[test]
+    fn slo_breakdown_counts() {
+        let mut m = RunMetrics::default();
+        m.requests.push(rec(1, 0.5, vec![0.01; 5])); // both ok
+        m.requests.push(rec(2, 9.0, vec![0.01; 5])); // ttft violation
+        m.requests.push(rec(3, 0.5, vec![0.2; 5])); // tbt violation
+        let slo = SloSpec {
+            ttft_s: 5.0,
+            tbt_s: 0.125,
+        };
+        let s = m.slo(&slo);
+        assert!((s.full - 1.0 / 3.0).abs() < 1e-9);
+        assert!((s.ttft_only - 2.0 / 3.0).abs() < 1e-9);
+        assert!((s.tbt_only - 2.0 / 3.0).abs() < 1e-9);
+        assert_eq!(s.n, 3);
+    }
+
+    #[test]
+    fn e2e_is_ttft_plus_tbts() {
+        let r = rec(1, 1.0, vec![0.1, 0.2]);
+        assert!((r.e2e_s() - 1.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn totals_and_throughput() {
+        let mut m = RunMetrics::default();
+        m.requests.push(rec(1, 0.5, vec![0.01; 9])); // output 10
+        m.requests.push(rec(2, 0.5, vec![0.01; 4])); // output 5
+        m.makespan_s = 5.0;
+        assert_eq!(m.generated_tokens(), 15);
+        assert_eq!(m.total_tokens(), 215);
+        assert!((m.gen_throughput() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn samples_extraction() {
+        let mut m = RunMetrics::default();
+        m.requests.push(rec(1, 1.0, vec![0.1, 0.3]));
+        let mut tbt = m.tbt_samples();
+        assert_eq!(tbt.len(), 2);
+        assert!((tbt.percentile(1.0) - 0.3).abs() < 1e-12);
+    }
+}

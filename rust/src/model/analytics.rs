@@ -1,0 +1,301 @@
+//! Per-layer flops/bytes analytics for a decoder-only MoE transformer.
+//!
+//! These formulas feed the simulator's roofline cost model (time =
+//! max(flops/F, bytes/B)) and the energy model, and they are what the
+//! paper's §2.5 / §3 analysis reasons with: arithmetic intensity of expert
+//! GEMMs vs the device ridge point, KV-scan bytes, dense-weight streaming.
+
+use crate::config::ModelDesc;
+use crate::moe::coverage::CoverageModel;
+
+/// Work of ONE transformer layer for one iteration slice.
+///
+/// Flops are split by phase (attention-side vs MoE) because the two execute
+/// as separate kernels with different achievable bandwidth: dense/attention
+/// traffic streams near peak, while the MoE grouped GEMM's expert staging is
+/// scatter-dominated at serving batch sizes (the paper's §3.2 microbench
+/// shows MoE alone exceeding half the prefill runtime at chunk 512).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LayerWork {
+    pub attn_flops: f64,
+    pub moe_flops: f64,
+    /// HBM bytes moved, split by class for traffic/energy accounting.
+    pub dense_weight_bytes: f64,
+    pub expert_weight_bytes: f64,
+    pub kv_bytes: f64,
+    pub act_bytes: f64,
+}
+
+impl LayerWork {
+    pub fn flops(&self) -> f64 {
+        self.attn_flops + self.moe_flops
+    }
+
+    pub fn bytes(&self) -> f64 {
+        self.dense_weight_bytes + self.expert_weight_bytes + self.kv_bytes + self.act_bytes
+    }
+
+    /// Non-expert bytes (streamed at dense efficiency).
+    pub fn dense_bytes(&self) -> f64 {
+        self.dense_weight_bytes + self.kv_bytes + self.act_bytes
+    }
+
+    pub fn add(&mut self, other: &LayerWork) {
+        self.attn_flops += other.attn_flops;
+        self.moe_flops += other.moe_flops;
+        self.dense_weight_bytes += other.dense_weight_bytes;
+        self.expert_weight_bytes += other.expert_weight_bytes;
+        self.kv_bytes += other.kv_bytes;
+        self.act_bytes += other.act_bytes;
+    }
+
+    /// Arithmetic intensity (Op/B) — compare against hardware ridge point.
+    pub fn intensity(&self) -> f64 {
+        self.flops() / self.bytes().max(1.0)
+    }
+}
+
+/// Analytics calculator bound to a model + routing skew.
+#[derive(Clone, Debug)]
+pub struct WorkAnalytics {
+    pub model: ModelDesc,
+    pub coverage: CoverageModel,
+}
+
+impl WorkAnalytics {
+    pub fn new(model: ModelDesc) -> Self {
+        let coverage = CoverageModel::paper(model.n_experts, model.top_k);
+        WorkAnalytics { model, coverage }
+    }
+
+    pub fn with_uniform_routing(model: ModelDesc) -> Self {
+        let coverage = CoverageModel::uniform(model.n_experts, model.top_k);
+        WorkAnalytics { model, coverage }
+    }
+
+    /// Work of one layer processing a prefill slice of `n_tokens` whose
+    /// first token sits at absolute position `pos` (context = pos tokens
+    /// already cached). Weights are charged once per invocation.
+    pub fn prefill_layer(&self, n_tokens: u64, pos: u64) -> LayerWork {
+        let m = &self.model;
+        let n = n_tokens as f64;
+        let d = m.d_model as f64;
+        let dt = m.dtype_bytes as f64;
+
+        // Projections + output: 2 flops per param per token.
+        let attn_proj_flops = 2.0 * n * m.attn_params_per_layer() as f64;
+        // Scores + weighted sum over (pos + avg causal span) keys:
+        // token i attends pos + i + 1 keys; sum_i = n*pos + n(n+1)/2.
+        let kv_len_total = n * pos as f64 + n * (n + 1.0) / 2.0;
+        let attn_score_flops =
+            4.0 * kv_len_total * (m.n_heads * m.head_dim) as f64;
+        // Router + MoE: each token through top_k experts.
+        let router_flops = 2.0 * n * m.router_params_per_layer() as f64;
+        let moe_flops = 2.0 * n * m.top_k as f64 * m.params_per_expert() as f64;
+
+        let covered = self.coverage.covered_experts(n_tokens);
+        let expert_weight_bytes = covered * m.bytes_per_expert() as f64;
+        let dense_weight_bytes = m.dense_params_per_layer() as f64 * dt;
+        // FlashAttention streams all visible KV once per chunk + writes n.
+        let kv_bytes = (pos as f64 + n + n) * self.model.kv_bytes_per_token_layer();
+        let act_bytes = 6.0 * n * d * dt;
+
+        LayerWork {
+            attn_flops: attn_proj_flops + attn_score_flops + router_flops,
+            moe_flops,
+            dense_weight_bytes,
+            expert_weight_bytes,
+            kv_bytes,
+            act_bytes,
+        }
+    }
+
+    /// Work of one layer for a decode batch: `ctx_lens` = context length per
+    /// request. Dense weights charged once; expert coverage computed over
+    /// the decode token count; KV scan = full context per request.
+    pub fn decode_layer(&self, ctx_lens: &[u64]) -> LayerWork {
+        let m = &self.model;
+        let b = ctx_lens.len() as f64;
+        if ctx_lens.is_empty() {
+            return LayerWork::default();
+        }
+        let d = m.d_model as f64;
+        let dt = m.dtype_bytes as f64;
+        let total_ctx: f64 = ctx_lens.iter().map(|&c| c as f64).sum();
+
+        let attn_proj_flops = 2.0 * b * m.attn_params_per_layer() as f64;
+        let attn_score_flops = 4.0 * total_ctx * (m.n_heads * m.head_dim) as f64;
+        let router_flops = 2.0 * b * m.router_params_per_layer() as f64;
+        let moe_flops = 2.0 * b * m.top_k as f64 * m.params_per_expert() as f64;
+
+        let covered = self.coverage.covered_experts(ctx_lens.len() as u64);
+        let expert_weight_bytes = covered * m.bytes_per_expert() as f64;
+        let dense_weight_bytes = m.dense_params_per_layer() as f64 * dt;
+        let kv_bytes = (total_ctx + b) * m.kv_bytes_per_token_layer();
+        let act_bytes = 6.0 * b * d * dt;
+
+        LayerWork {
+            attn_flops: attn_proj_flops + attn_score_flops + router_flops,
+            moe_flops,
+            dense_weight_bytes,
+            expert_weight_bytes,
+            kv_bytes,
+            act_bytes,
+        }
+    }
+
+    /// Combined hybrid-batch layer work (chunked prefill co-scheduled with
+    /// decode in the same kernel launch): weights charged ONCE, expert
+    /// coverage over the union token count (prefill dominates).
+    pub fn hybrid_layer(&self, prefill_tokens: u64, pos: u64, ctx_lens: &[u64]) -> LayerWork {
+        let m = &self.model;
+        if prefill_tokens == 0 {
+            return self.decode_layer(ctx_lens);
+        }
+        let mut w = self.prefill_layer(prefill_tokens, pos);
+        if !ctx_lens.is_empty() {
+            let dec = self.decode_layer(ctx_lens);
+            w.attn_flops += dec.attn_flops;
+            w.moe_flops += dec.moe_flops;
+            w.kv_bytes += dec.kv_bytes;
+            w.act_bytes += dec.act_bytes;
+            // Dense weights already charged once by the prefill side.
+            // Expert coverage: union batch = prefill tokens + decode tokens.
+            let union = prefill_tokens + ctx_lens.len() as u64;
+            w.expert_weight_bytes =
+                self.coverage.covered_experts(union) * m.bytes_per_expert() as f64;
+        }
+        w
+    }
+
+    /// Work of ONE layer within a scheduled layer group: any number of
+    /// co-scheduled prefill slices plus a decode batch. Dense weights are
+    /// charged once; expert coverage is computed over the union token count
+    /// (prefill tokens + one token per decode request) — the hybrid-batch
+    /// union the paper's §3.1 analysis describes.
+    pub fn group_layer(&self, prefills: &[(u64, u64)], ctx_lens: &[u64]) -> LayerWork {
+        let m = &self.model;
+        let mut w = LayerWork::default();
+        for &(tokens, pos) in prefills {
+            let p = self.prefill_layer(tokens, pos);
+            w.attn_flops += p.attn_flops;
+            w.moe_flops += p.moe_flops;
+            w.kv_bytes += p.kv_bytes;
+            w.act_bytes += p.act_bytes;
+        }
+        if !ctx_lens.is_empty() {
+            let d = self.decode_layer(ctx_lens);
+            w.attn_flops += d.attn_flops;
+            w.moe_flops += d.moe_flops;
+            w.kv_bytes += d.kv_bytes;
+            w.act_bytes += d.act_bytes;
+        }
+        let union_tokens: u64 = prefills.iter().map(|&(t, _)| t).sum::<u64>()
+            + ctx_lens.len() as u64;
+        if union_tokens > 0 {
+            w.dense_weight_bytes = m.dense_params_per_layer() as f64 * m.dtype_bytes as f64;
+            w.expert_weight_bytes =
+                self.coverage.covered_experts(union_tokens) * m.bytes_per_expert() as f64;
+        }
+        w
+    }
+
+    /// MoE expert-load bytes of a full prefill executed as `n_chunks` chunks
+    /// (the Fig. 2 microbench quantity), across all layers.
+    pub fn prefill_expert_bytes_chunked(&self, input_len: u64, chunk: u64) -> f64 {
+        let m = &self.model;
+        let mut total = 0.0;
+        let mut remaining = input_len;
+        while remaining > 0 {
+            let n = remaining.min(chunk);
+            total += self.coverage.covered_experts(n) * m.bytes_per_expert() as f64;
+            remaining -= n;
+        }
+        total * m.n_layers as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn qwen() -> WorkAnalytics {
+        WorkAnalytics::new(ModelDesc::qwen3_30b_a3b())
+    }
+
+    #[test]
+    fn decode_empty_batch_is_zero() {
+        let a = qwen();
+        assert_eq!(a.decode_layer(&[]), LayerWork::default());
+    }
+
+    #[test]
+    fn prefill_flops_scale_superlinearly_with_context() {
+        let a = qwen();
+        let w0 = a.prefill_layer(512, 0);
+        let w1 = a.prefill_layer(512, 7680); // same tokens, deep context
+        assert!(w1.flops() > w0.flops()); // attention quadratic term
+        assert!(w1.kv_bytes > w0.kv_bytes); // rescans prior KV
+        assert_eq!(w1.expert_weight_bytes, w0.expert_weight_bytes);
+    }
+
+    #[test]
+    fn small_chunk_moe_is_memory_bound_large_chunk_compute_bound() {
+        // Paper §2.5/§3.2: expert GEMMs at 512-token chunks sit far below
+        // the H100 ridge point; at 8192 they approach/exceed it.
+        let a = qwen();
+        let hw = crate::config::HardwareDesc::h100x2();
+        let moe_intensity = |chunk: u64| {
+            let w = a.prefill_layer(chunk, 0);
+            let moe_flops =
+                2.0 * chunk as f64 * a.model.top_k as f64 * a.model.params_per_expert() as f64;
+            moe_flops / w.expert_weight_bytes
+        };
+        assert!(moe_intensity(512) < hw.ridge_point());
+        assert!(moe_intensity(8192) > 0.8 * hw.ridge_point());
+    }
+
+    #[test]
+    fn chunked_expert_bytes_match_fig2_shape() {
+        // Fig 2: at 8192-token input, MoE weight load falls roughly inversely
+        // with chunk size and drops below ~100 GB by chunk 4096-8192.
+        let a = qwen();
+        let gb = |chunk| a.prefill_expert_bytes_chunked(8192, chunk) / 1e9;
+        let c512 = gb(512);
+        let c2048 = gb(2048);
+        let c8192 = gb(8192);
+        assert!(c512 > c2048 && c2048 > c8192);
+        assert!(c8192 < 100.0, "8192-chunk load {c8192:.0} GB");
+        assert!(c512 / c8192 > 3.0, "ratio {:.1}", c512 / c8192);
+    }
+
+    #[test]
+    fn decode_kv_scan_dominates_long_context() {
+        let a = qwen();
+        let short = a.decode_layer(&[128; 8]);
+        let long = a.decode_layer(&[16384; 8]);
+        assert!(long.kv_bytes > 50.0 * short.kv_bytes);
+    }
+
+    #[test]
+    fn hybrid_charges_dense_weights_once() {
+        let a = qwen();
+        let hybrid = a.hybrid_layer(512, 0, &[1024; 16]);
+        let pre = a.prefill_layer(512, 0);
+        let dec = a.decode_layer(&[1024; 16]);
+        assert!((hybrid.dense_weight_bytes - pre.dense_weight_bytes).abs() < 1.0);
+        // But flops add up.
+        assert!((hybrid.flops() - (pre.flops() + dec.flops())).abs() / hybrid.flops() < 1e-9);
+        // Union coverage >= prefill-only coverage.
+        assert!(hybrid.expert_weight_bytes >= pre.expert_weight_bytes);
+        assert!(hybrid.expert_weight_bytes <= pre.expert_weight_bytes + dec.expert_weight_bytes);
+    }
+
+    #[test]
+    fn intensity_increases_with_batch() {
+        let a = qwen();
+        let w1 = a.decode_layer(&[512; 1]);
+        let w64 = a.decode_layer(&[512; 64]);
+        assert!(w64.intensity() > w1.intensity());
+    }
+}

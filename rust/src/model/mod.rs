@@ -1,0 +1,5 @@
+//! Model analytics: flops/bytes arithmetic used by the roofline cost model.
+
+pub mod analytics;
+
+pub use analytics::{LayerWork, WorkAnalytics};

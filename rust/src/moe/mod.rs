@@ -1,0 +1,9 @@
+//! MoE expert activation modeling: coverage-vs-batch-size (paper Table 1,
+//! the "sparsity erosion" analysis of §3.1) and expert-weight load traffic
+//! accounting (§5.4, Table 7).
+
+pub mod coverage;
+pub mod traffic;
+
+pub use coverage::{CoverageModel, MonteCarloRouter};
+pub use traffic::TrafficCounter;

@@ -1,0 +1,133 @@
+//! Shared plumbing for the table/figure regenerators.
+
+use crate::config::{
+    Dataset, HardwareDesc, ModelDesc, Policy, SchedulerConfig, SloSpec, WorkloadSpec,
+};
+use crate::metrics::RunMetrics;
+use crate::simulator::{simulate, SimExtra, SimOptions};
+use crate::workload::{Trace, WorkloadGen};
+
+/// Default request count for report-quality runs (benches may shrink it).
+pub const REPORT_N: usize = 100;
+
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    pub model: ModelDesc,
+    pub dataset: Dataset,
+    pub policy: Policy,
+    pub rate: f64,
+    pub n_requests: usize,
+    pub chunk_size: u32,
+    pub seed: u64,
+    pub record_tokens: bool,
+}
+
+impl RunSpec {
+    pub fn new(model: ModelDesc, dataset: Dataset, policy: Policy, rate: f64) -> Self {
+        RunSpec {
+            model,
+            dataset,
+            policy,
+            rate,
+            n_requests: REPORT_N,
+            chunk_size: 512,
+            seed: 0xA11CE,
+            record_tokens: false,
+        }
+    }
+
+    pub fn trace(&self) -> Trace {
+        let mut spec = WorkloadSpec::new(self.dataset, self.rate, self.n_requests);
+        spec.seed = self.seed;
+        WorkloadGen::new(spec).generate()
+    }
+
+    pub fn run(&self) -> (RunMetrics, SimExtra) {
+        let mut cfg = SchedulerConfig::preset(self.policy);
+        cfg.chunk_size = self.chunk_size;
+        let opts = SimOptions {
+            horizon_s: 0.0,
+            record_token_times: self.record_tokens,
+        };
+        simulate(
+            self.model.clone(),
+            HardwareDesc::h100x2(),
+            &cfg,
+            &self.trace(),
+            opts,
+        )
+    }
+
+    pub fn slo(&self) -> SloSpec {
+        SloSpec::paper(&self.model, self.dataset)
+    }
+}
+
+/// Find the highest rate in [lo, hi] whose run satisfies `ok` (bisection on
+/// a monotone-ish attainment curve; resolution `tol` req/s).
+pub fn max_rate_where<F>(mut lo: f64, mut hi: f64, tol: f64, mut ok: F) -> f64
+where
+    F: FnMut(f64) -> bool,
+{
+    if !ok(lo) {
+        return lo;
+    }
+    while hi - lo > tol {
+        let mid = 0.5 * (lo + hi);
+        if ok(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// Find a rate whose run produces `target(rate)` ≈ 0 (increasing in rate),
+/// e.g. "mean TTFT minus 2.5 s". Returns the bracketing lower rate.
+pub fn rate_for_target<F>(mut lo: f64, mut hi: f64, tol: f64, mut over: F) -> f64
+where
+    F: FnMut(f64) -> bool,
+{
+    // `over(rate)` = true if the metric exceeds the target at this rate.
+    if over(lo) {
+        return lo;
+    }
+    while hi - lo > tol {
+        let mid = 0.5 * (lo + hi);
+        if over(mid) {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bisection_helpers() {
+        // ok(rate) = rate <= 1.7 -> max rate found ≈ 1.7
+        let r = max_rate_where(0.5, 3.0, 0.01, |x| x <= 1.7);
+        assert!((r - 1.7).abs() < 0.02, "{r}");
+        // over(rate) = rate > 2.5
+        let r = rate_for_target(0.5, 4.0, 0.01, |x| x > 2.5);
+        assert!((r - 2.5).abs() < 0.02, "{r}");
+    }
+
+    #[test]
+    fn runspec_runs() {
+        let mut s = RunSpec::new(
+            ModelDesc::qwen3_30b_a3b(),
+            Dataset::ShareGpt,
+            Policy::Layered,
+            3.0,
+        );
+        s.n_requests = 10;
+        let (m, _) = s.run();
+        assert_eq!(m.requests.len(), 10);
+    }
+}

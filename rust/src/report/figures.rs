@@ -1,0 +1,290 @@
+//! Regenerators for the paper's FIGURES (2, 3, 4, 5) as text series +
+//! ASCII charts.
+
+use crate::config::{Dataset, HardwareDesc, ModelDesc, Policy};
+use crate::model::WorkAnalytics;
+use crate::report::common::RunSpec;
+use crate::sched::{GroupPlan, IterationPlan, PrefillWork};
+use crate::simulator::cost::CostModel;
+use crate::util::table::{ascii_chart, f1, f2, pct, Table};
+
+/// Fig 2: MoE weight load + kernel runtime vs prefill chunk size
+/// (input fixed at 8192 tokens, Qwen).
+pub fn fig2() -> String {
+    let model = ModelDesc::qwen3_30b_a3b();
+    let analytics = WorkAnalytics::new(model.clone());
+    let cost = CostModel::new(HardwareDesc::h100x2(), analytics.clone());
+    let input = 8192u64;
+
+    let mut t = Table::new("Fig 2 — MoE load & prefill runtime vs chunk size (input 8192, Qwen)")
+        .header(&[
+            "chunk", "MoE load (GB)", "prefill runtime (ms)", "MoE time (ms)", "MoE share",
+        ]);
+    let mut load_series = Vec::new();
+    let mut runtime_series = Vec::new();
+    for &chunk in &[512u64, 1024, 2048, 4096, 8192] {
+        let moe_gb = analytics.prefill_expert_bytes_chunked(input, chunk) / 1e9;
+        // Total prefill runtime = sum over chunk iterations.
+        let mut total = 0.0;
+        let mut moe_time = 0.0;
+        let mut pos = 0u64;
+        while pos < input {
+            let n = chunk.min(input - pos);
+            let plan = IterationPlan {
+                groups: vec![GroupPlan {
+                    n_layers: model.n_layers,
+                    prefill: vec![PrefillWork {
+                        req: 1,
+                        tokens: n as u32,
+                        pos: pos as u32,
+                        completes: false,
+                    }],
+                    decode: vec![],
+                }],
+            };
+            total += cost.iteration(&plan).duration_s;
+            // MoE-phase time alone:
+            let w = analytics.prefill_layer(n, pos);
+            let moe = (w.moe_flops / cost.hw.eff_flops()).max(
+                w.expert_weight_bytes / (cost.hw.peak_bw * crate::simulator::cost::MOE_BW_EFF),
+            );
+            moe_time += moe * model.n_layers as f64;
+            pos += n;
+        }
+        t.row(&[
+            chunk.to_string(),
+            f1(moe_gb),
+            f1(total * 1e3),
+            f1(moe_time * 1e3),
+            pct(moe_time / total),
+        ]);
+        load_series.push((chunk as f64, moe_gb));
+        runtime_series.push((chunk as f64, total * 1e3));
+    }
+    let mut out = t.render();
+    out.push_str(&ascii_chart(
+        "Fig 2 (left): MoE weight load GB vs chunk",
+        &[("load GB", load_series)],
+        60,
+        10,
+    ));
+    out.push_str(&ascii_chart(
+        "Fig 2 (right): prefill runtime ms vs chunk",
+        &[("runtime ms", runtime_series)],
+        60,
+        10,
+    ));
+    out.push_str(
+        "# paper: >500ms & MoE>50% at chunk 512; load <100GB and runtime ~200ms by 4096-8192\n",
+    );
+    out
+}
+
+/// One Fig-3 panel: SLO attainment vs request rate for a model+dataset.
+pub fn fig3_panel(
+    model: &ModelDesc,
+    dataset: Dataset,
+    rates: &[f64],
+    n_requests: usize,
+) -> String {
+    let mut t = Table::new(&format!(
+        "Fig 3 — SLO attainment vs rate ({}, {})",
+        model.name,
+        dataset.name()
+    ))
+    .header(&["req/s", "chunked", "layered", "avg decode batch (c)", "avg decode batch (l)"]);
+    let mut series_c = Vec::new();
+    let mut series_l = Vec::new();
+    for &rate in rates {
+        let mut vals = Vec::new();
+        let mut batches = Vec::new();
+        for policy in [Policy::Chunked, Policy::Layered] {
+            let mut s = RunSpec::new(model.clone(), dataset, policy, rate);
+            s.n_requests = n_requests;
+            let slo = s.slo();
+            let (m, _) = s.run();
+            vals.push(m.slo(&slo).full);
+            batches.push(m.avg_decode_batch);
+        }
+        series_c.push((rate, vals[0] * 100.0));
+        series_l.push((rate, vals[1] * 100.0));
+        t.row(&[
+            f2(rate),
+            pct(vals[0]),
+            pct(vals[1]),
+            f1(batches[0]),
+            f1(batches[1]),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(&ascii_chart(
+        "attainment % (90% = SLO threshold)",
+        &[("chunked", series_c), ("layered", series_l)],
+        60,
+        12,
+    ));
+    out
+}
+
+/// All four Fig-3 panels with the paper's rate ranges.
+pub fn fig3(n_requests: usize) -> String {
+    let mut out = String::new();
+    out.push_str(&fig3_panel(
+        &ModelDesc::qwen3_30b_a3b(),
+        Dataset::Arxiv,
+        &[1.1, 1.3, 1.5, 1.7, 1.8],
+        n_requests,
+    ));
+    out.push_str(&fig3_panel(
+        &ModelDesc::gpt_oss_20b(),
+        Dataset::Arxiv,
+        &[2.1, 2.3, 2.5, 2.7],
+        n_requests,
+    ));
+    out.push_str(&fig3_panel(
+        &ModelDesc::qwen3_30b_a3b(),
+        Dataset::ShareGpt,
+        &[4.0, 4.4, 4.8, 5.2],
+        n_requests,
+    ));
+    out.push_str(&fig3_panel(
+        &ModelDesc::gpt_oss_20b(),
+        Dataset::ShareGpt,
+        &[5.8, 6.2, 6.6],
+        n_requests,
+    ));
+    out
+}
+
+/// Fig 4: attainment decomposed into TTFT-only and TBT-only components.
+pub fn fig4(n_requests: usize) -> String {
+    let mut out = String::new();
+    for (model, dataset, rates) in [
+        (
+            ModelDesc::qwen3_30b_a3b(),
+            Dataset::Arxiv,
+            vec![1.1, 1.3, 1.5, 1.7],
+        ),
+        (
+            ModelDesc::gpt_oss_20b(),
+            Dataset::ShareGpt,
+            vec![5.8, 6.2, 6.6],
+        ),
+    ] {
+        let mut t = Table::new(&format!(
+            "Fig 4 — attainment breakdown ({}, {})",
+            model.name,
+            dataset.name()
+        ))
+        .header(&[
+            "req/s", "c TTFT", "c TBT", "l TTFT", "l TBT",
+        ]);
+        for &rate in &rates {
+            let mut row = vec![f2(rate)];
+            for policy in [Policy::Chunked, Policy::Layered] {
+                let mut s = RunSpec::new(model.clone(), dataset, policy, rate);
+                s.n_requests = n_requests;
+                let slo = s.slo();
+                let (m, _) = s.run();
+                let sum = m.slo(&slo);
+                row.push(pct(sum.ttft_only));
+                row.push(pct(sum.tbt_only));
+            }
+            t.row(&row);
+        }
+        out.push_str(&t.render());
+    }
+    out.push_str("# paper: TBT near-100% for both schedulers; layered sustains TTFT attainment\n");
+    out.push_str("# to higher rates (TTFT is the binding constraint).\n");
+    out
+}
+
+/// Fig 5: cumulative token output over time for a single request
+/// (Qwen, arXiv, 1.3 req/s) + end-to-end latency comparison.
+pub fn fig5(n_requests: usize) -> String {
+    let mut out = String::new();
+    let mut series = Vec::new();
+    let mut e2e = Vec::new();
+    for policy in [Policy::Chunked, Policy::Layered] {
+        let mut s = RunSpec::new(
+            ModelDesc::qwen3_30b_a3b(),
+            Dataset::Arxiv,
+            policy,
+            1.3,
+        );
+        s.n_requests = n_requests;
+        s.record_tokens = true;
+        let (m, extra) = s.run();
+        // Pick a mid-trace request with a decent output length.
+        let pick = m
+            .requests
+            .iter()
+            .filter(|r| r.output_len >= 100 && r.id > 5)
+            .min_by_key(|r| r.id)
+            .map(|r| r.id)
+            .unwrap_or(m.requests[m.requests.len() / 2].id);
+        let arrival = m.requests.iter().find(|r| r.id == pick).unwrap().arrival_s;
+        let tl: Vec<(f64, f64)> = extra
+            .token_times
+            .iter()
+            .find(|(id, _)| *id == pick)
+            .map(|(_, times)| {
+                times
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &t)| (t - arrival, (i + 1) as f64))
+                    .collect()
+            })
+            .unwrap_or_default();
+        series.push((policy.name(), tl));
+        e2e.push(m.e2e_samples().mean());
+    }
+    out.push_str(&ascii_chart(
+        "Fig 5 — cumulative tokens vs time since arrival (one request)",
+        &[
+            (series[0].0, series[0].1.clone()),
+            (series[1].0, series[1].1.clone()),
+        ],
+        64,
+        14,
+    ));
+    let drop = 1.0 - e2e[1] / e2e[0];
+    out.push_str(&format!(
+        "mean E2E latency: chunked {:.2}s, layered {:.2}s ({:.0}% lower)\n",
+        e2e[0],
+        e2e[1],
+        drop * 100.0
+    ));
+    out.push_str("# paper: 9.4s -> 5.5s (-41%)\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_renders() {
+        let out = fig2();
+        assert!(out.contains("8192"));
+        assert!(out.contains("MoE load"));
+    }
+
+    #[test]
+    fn fig3_panel_small() {
+        let out = fig3_panel(
+            &ModelDesc::qwen3_30b_a3b(),
+            Dataset::Arxiv,
+            &[1.0, 1.6],
+            10,
+        );
+        assert!(out.contains("chunked"));
+        assert!(out.contains("1.60"));
+    }
+
+    #[test]
+    fn fig5_small() {
+        let out = fig5(12);
+        assert!(out.contains("E2E"));
+    }
+}

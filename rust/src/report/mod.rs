@@ -1,0 +1,29 @@
+//! Regenerators for every table and figure in the paper's evaluation
+//! (DESIGN.md §3 maps each to its module + bench target).
+
+pub mod common;
+pub mod figures;
+pub mod tables;
+
+/// Run every regenerator, in paper order.
+pub fn all(n_requests: usize) -> String {
+    let mut out = String::new();
+    out.push_str(&tables::table1(n_requests));
+    out.push('\n');
+    out.push_str(&figures::fig2());
+    out.push('\n');
+    out.push_str(&tables::table2(n_requests));
+    out.push('\n');
+    out.push_str(&figures::fig3(n_requests));
+    out.push('\n');
+    out.push_str(&figures::fig4(n_requests));
+    out.push('\n');
+    out.push_str(&tables::table6(n_requests));
+    out.push('\n');
+    out.push_str(&tables::table7(n_requests));
+    out.push('\n');
+    out.push_str(&figures::fig5(n_requests));
+    out.push('\n');
+    out.push_str(&tables::table8(n_requests));
+    out
+}

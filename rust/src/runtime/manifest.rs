@@ -1,0 +1,269 @@
+//! artifacts/manifest.json parsing: model config, weight tensor table, and
+//! artifact signatures emitted by python/compile/aot.py.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub args: Vec<ArgSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Offset and size in f32 elements within weights.bin.
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// TinyMoE architecture constants (must match python CFG).
+#[derive(Clone, Debug)]
+pub struct TinyModelCfg {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub pool_slots: usize,
+    pub prefill_chunks: Vec<usize>,
+    pub decode_batches: Vec<usize>,
+    pub embed_sizes: Vec<usize>,
+}
+
+impl TinyModelCfg {
+    /// The padding scratch slot (pool's last slot, never allocated).
+    pub fn scratch_slot(&self) -> usize {
+        self.pool_slots - 1
+    }
+
+    /// Usable request slots (all but the scratch slot).
+    pub fn usable_slots(&self) -> usize {
+        self.pool_slots - 1
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: TinyModelCfg,
+    pub tensors: Vec<TensorEntry>,
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+fn usize_field(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .with_context(|| format!("manifest: missing numeric '{key}'"))
+}
+
+fn usize_list(j: &Json, key: &str) -> Result<Vec<usize>> {
+    Ok(j.get(key)
+        .and_then(Json::as_arr)
+        .with_context(|| format!("manifest: missing list '{key}'"))?
+        .iter()
+        .filter_map(Json::as_usize)
+        .collect())
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        Self::parse_str(&text, dir)
+    }
+
+    pub fn parse_str(text: &str, dir: &Path) -> Result<Manifest> {
+        let j = parse(text).map_err(|e| anyhow::anyhow!("manifest json: {e}"))?;
+        let mj = j.get("model").context("manifest: missing 'model'")?;
+        let model = TinyModelCfg {
+            vocab: usize_field(mj, "vocab")?,
+            d_model: usize_field(mj, "d_model")?,
+            n_layers: usize_field(mj, "n_layers")?,
+            n_heads: usize_field(mj, "n_heads")?,
+            n_kv_heads: usize_field(mj, "n_kv_heads")?,
+            head_dim: usize_field(mj, "head_dim")?,
+            n_experts: usize_field(mj, "n_experts")?,
+            top_k: usize_field(mj, "top_k")?,
+            d_ff: usize_field(mj, "d_ff")?,
+            max_seq: usize_field(mj, "max_seq")?,
+            pool_slots: usize_field(mj, "pool_slots")?,
+            prefill_chunks: usize_list(mj, "prefill_chunks")?,
+            decode_batches: usize_list(mj, "decode_batches")?,
+            embed_sizes: usize_list(mj, "embed_sizes")?,
+        };
+
+        let mut tensors = Vec::new();
+        for t in j
+            .get("tensors")
+            .and_then(Json::as_arr)
+            .context("manifest: missing 'tensors'")?
+        {
+            tensors.push(TensorEntry {
+                name: t
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .context("tensor name")?
+                    .to_string(),
+                shape: t
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .context("tensor shape")?
+                    .iter()
+                    .filter_map(Json::as_usize)
+                    .collect(),
+                offset: usize_field(t, "offset")?,
+                size: usize_field(t, "size")?,
+            });
+        }
+
+        let mut artifacts = Vec::new();
+        for a in j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest: missing 'artifacts'")?
+        {
+            let mut args = Vec::new();
+            for arg in a.get("args").and_then(Json::as_arr).context("artifact args")? {
+                let dtype = match arg.get("dtype").and_then(Json::as_str) {
+                    Some("f32") => DType::F32,
+                    Some("i32") => DType::I32,
+                    other => bail!("artifact arg dtype {other:?}"),
+                };
+                args.push(ArgSpec {
+                    name: arg
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .context("arg name")?
+                        .to_string(),
+                    shape: arg
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .context("arg shape")?
+                        .iter()
+                        .filter_map(Json::as_usize)
+                        .collect(),
+                    dtype,
+                });
+            }
+            artifacts.push(ArtifactEntry {
+                name: a
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .context("artifact name")?
+                    .to_string(),
+                file: dir.join(a.get("file").and_then(Json::as_str).context("artifact file")?),
+                args,
+            });
+        }
+
+        // Sanity: tensor table must be contiguous.
+        let mut expect = 0usize;
+        for t in &tensors {
+            if t.offset != expect {
+                bail!("tensor {} offset {} != expected {}", t.name, t.offset, expect);
+            }
+            let numel: usize = t.shape.iter().product();
+            if numel != t.size {
+                bail!("tensor {} shape/size mismatch", t.name);
+            }
+            expect += t.size;
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            model,
+            tensors,
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))
+    }
+
+    pub fn tensor(&self, name: &str) -> Result<&TensorEntry> {
+        self.tensors
+            .iter()
+            .find(|t| t.name == name)
+            .with_context(|| format!("tensor '{name}' not in manifest"))
+    }
+
+    pub fn total_floats(&self) -> usize {
+        self.tensors.last().map(|t| t.offset + t.size).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "model": {"vocab": 256, "d_model": 64, "n_layers": 8, "n_heads": 4,
+                "n_kv_heads": 2, "head_dim": 16, "n_experts": 4, "top_k": 2,
+                "d_ff": 128, "max_seq": 160, "pool_slots": 10,
+                "prefill_chunks": [16, 32, 64], "decode_batches": [1,2,4,8],
+                "embed_sizes": [1,2,4,8,16,32,64]},
+      "tensors": [
+        {"name": "emb", "shape": [256, 64], "offset": 0, "size": 16384},
+        {"name": "layer0.ln1", "shape": [64], "offset": 16384, "size": 64}
+      ],
+      "artifacts": [
+        {"name": "embed_t1", "file": "embed_t1.hlo.txt",
+         "args": [{"name": "emb", "shape": [256, 64], "dtype": "f32"},
+                  {"name": "ids", "shape": [1], "dtype": "i32"}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse_str(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.model.n_layers, 8);
+        assert_eq!(m.model.scratch_slot(), 9);
+        assert_eq!(m.tensors.len(), 2);
+        assert_eq!(m.total_floats(), 16384 + 64);
+        let a = m.artifact("embed_t1").unwrap();
+        assert_eq!(a.args[1].dtype, DType::I32);
+        assert_eq!(a.file, Path::new("/tmp/a/embed_t1.hlo.txt"));
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_gap_in_tensor_table() {
+        let bad = SAMPLE.replace("\"offset\": 16384", "\"offset\": 16385");
+        assert!(Manifest::parse_str(&bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_shape_size_mismatch() {
+        let bad = SAMPLE.replace("\"size\": 64}", "\"size\": 65}");
+        assert!(Manifest::parse_str(&bad, Path::new("/tmp")).is_err());
+    }
+}

@@ -1,0 +1,26 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts (see
+//! python/compile/aot.py) and executes them on the PJRT CPU client via the
+//! `xla` crate. Python never runs here — the artifacts directory is the
+//! entire L2/L1 interface.
+
+pub mod engine;
+pub mod manifest;
+pub mod weights;
+
+pub use engine::{KvPools, RuntimeEngine};
+pub use manifest::{Manifest, TinyModelCfg};
+pub use weights::WeightStore;
+
+use std::path::PathBuf;
+
+/// Locate the artifacts directory: $LP_ARTIFACTS or ./artifacts.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("LP_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// True if AOT artifacts are present (tests skip gracefully otherwise).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}

@@ -1,0 +1,95 @@
+//! weights.bin loading: flat little-endian f32 tensor store with
+//! manifest-driven offsets, exposed as cached XLA literals.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::Manifest;
+
+/// In-memory weight store.
+pub struct WeightStore {
+    data: Vec<f32>,
+}
+
+impl WeightStore {
+    pub fn load(manifest: &Manifest) -> Result<WeightStore> {
+        let path = manifest.dir.join("weights.bin");
+        Self::load_from(&path, manifest.total_floats())
+    }
+
+    pub fn load_from(path: &Path, expect_floats: usize) -> Result<WeightStore> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() != expect_floats * 4 {
+            bail!(
+                "{}: {} bytes, expected {} ({} f32)",
+                path.display(),
+                bytes.len(),
+                expect_floats * 4,
+                expect_floats
+            );
+        }
+        let mut data = Vec::with_capacity(expect_floats);
+        for chunk in bytes.chunks_exact(4) {
+            data.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+        }
+        Ok(WeightStore { data })
+    }
+
+    pub fn slice(&self, offset: usize, size: usize) -> &[f32] {
+        &self.data[offset..offset + size]
+    }
+
+    /// Build an XLA literal for a named tensor.
+    pub fn literal(&self, manifest: &Manifest, name: &str) -> Result<xla::Literal> {
+        let t = manifest.tensor(name)?;
+        let flat = xla::Literal::vec1(self.slice(t.offset, t.size));
+        let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+        Ok(flat.reshape(&dims)?)
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// The per-layer weight tensor names, in artifact argument order. Must match
+/// python CFG.layer_weight_specs().
+pub const LAYER_WEIGHT_NAMES: [&str; 10] = [
+    "ln1", "wq", "wk", "wv", "wo", "ln2", "router", "w1", "w3", "w2",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_wrong_size() {
+        let dir = std::env::temp_dir().join("lp_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("w.bin");
+        std::fs::write(&p, [0u8; 12]).unwrap();
+        assert!(WeightStore::load_from(&p, 3).is_ok());
+        assert!(WeightStore::load_from(&p, 4).is_err());
+    }
+
+    #[test]
+    fn little_endian_decode() {
+        let dir = std::env::temp_dir().join("lp_weights_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("w.bin");
+        let vals: [f32; 2] = [1.5, -2.25];
+        let mut bytes = Vec::new();
+        for v in vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&p, &bytes).unwrap();
+        let w = WeightStore::load_from(&p, 2).unwrap();
+        assert_eq!(w.slice(0, 2), &vals);
+    }
+}

@@ -1,0 +1,178 @@
+//! Chunked prefill (Sarathi-Serve, the paper's primary baseline).
+//!
+//! Token-axis scheduling: each iteration forms one *hybrid batch* = all
+//! ongoing decodes + up to `chunk_size` prompt tokens taken FCFS from
+//! admitted prefills, executed through ALL layers. Long prompts therefore
+//! traverse the full layer stack once per chunk — the source of the MoE
+//! expert-reload amplification the paper eliminates (§3).
+
+use crate::config::SchedulerConfig;
+use crate::sched::{EngineState, GroupPlan, IterationPlan, PrefillWork, Scheduler};
+
+pub struct ChunkedPrefill {
+    cfg: SchedulerConfig,
+}
+
+impl ChunkedPrefill {
+    pub fn new(cfg: SchedulerConfig) -> Self {
+        ChunkedPrefill { cfg }
+    }
+
+    /// Admit waiting requests while the engine has decode slots + KV room.
+    fn admit_waiting(&self, state: &mut EngineState) {
+        while let Some(&head) = state.waiting.first() {
+            let active = state.prefilling.len() + state.decoding.len();
+            if active >= state.max_batch.min(self.cfg.max_batch) {
+                break;
+            }
+            if !state.admit(head) {
+                break; // KV full: FCFS head-of-line blocks (no bypass)
+            }
+        }
+    }
+}
+
+impl Scheduler for ChunkedPrefill {
+    fn name(&self) -> &'static str {
+        "chunked"
+    }
+
+    fn plan(&mut self, state: &mut EngineState) -> Option<IterationPlan> {
+        self.admit_waiting(state);
+
+        let decode = state.decode_set();
+
+        // Fill the chunk token budget FCFS across admitted prefills
+        // (Sarathi coalesces short requests into one chunk).
+        let mut budget = self.cfg.chunk_size;
+        let mut prefill = Vec::new();
+        for &id in &state.prefilling {
+            if budget == 0 {
+                break;
+            }
+            let r = &state.reqs[&id];
+            let remaining = r.remaining_prefill();
+            if remaining == 0 {
+                continue;
+            }
+            let take = remaining.min(budget);
+            prefill.push(PrefillWork {
+                req: id,
+                tokens: take,
+                pos: r.prefill_done,
+                completes: take == remaining,
+            });
+            budget -= take;
+        }
+
+        if prefill.is_empty() && decode.is_empty() {
+            return None;
+        }
+
+        // Token-axis policy: one group spanning the whole layer stack.
+        Some(IterationPlan {
+            groups: vec![GroupPlan {
+                n_layers: state.model.n_layers,
+                prefill,
+                decode,
+            }],
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelDesc, Policy};
+    use crate::kvcache::KvCacheManager;
+    use crate::workload::Request;
+
+    fn setup(chunk: u32) -> (ChunkedPrefill, EngineState) {
+        let mut cfg = SchedulerConfig::preset(Policy::Chunked);
+        cfg.chunk_size = chunk;
+        let state = EngineState::new(
+            ModelDesc::qwen3_30b_a3b(),
+            KvCacheManager::new(10_000, 16),
+            256,
+        );
+        (ChunkedPrefill::new(cfg), state)
+    }
+
+    fn req(id: u64, input: u32, output: u32) -> Request {
+        Request {
+            id,
+            arrival_s: 0.0,
+            input_len: input,
+            output_len: output,
+        }
+    }
+
+    #[test]
+    fn splits_long_prompt_into_chunks() {
+        let (mut s, mut st) = setup(512);
+        st.arrive(req(1, 1300, 10));
+        let p1 = s.plan(&mut st).unwrap();
+        assert_eq!(p1.groups.len(), 1);
+        assert_eq!(p1.groups[0].prefill[0].tokens, 512);
+        assert!(!p1.groups[0].prefill[0].completes);
+        // Engine would update progress; emulate it.
+        st.reqs.get_mut(&1).unwrap().prefill_done = 512;
+        let p2 = s.plan(&mut st).unwrap();
+        assert_eq!(p2.groups[0].prefill[0].pos, 512);
+        st.reqs.get_mut(&1).unwrap().prefill_done = 1024;
+        let p3 = s.plan(&mut st).unwrap();
+        assert_eq!(p3.groups[0].prefill[0].tokens, 276);
+        assert!(p3.groups[0].prefill[0].completes);
+    }
+
+    #[test]
+    fn coalesces_small_prompts_into_one_chunk() {
+        let (mut s, mut st) = setup(512);
+        st.arrive(req(1, 100, 5));
+        st.arrive(req(2, 200, 5));
+        st.arrive(req(3, 300, 5));
+        let p = s.plan(&mut st).unwrap();
+        let pf = &p.groups[0].prefill;
+        // 100 + 200 fill 300; then 212 of request 3.
+        assert_eq!(pf.len(), 3);
+        assert_eq!(pf[0].tokens, 100);
+        assert!(pf[0].completes);
+        assert_eq!(pf[1].tokens, 200);
+        assert!(pf[1].completes);
+        assert_eq!(pf[2].tokens, 212);
+        assert!(!pf[2].completes);
+        let total: u32 = pf.iter().map(|w| w.tokens).sum();
+        assert_eq!(total, 512);
+    }
+
+    #[test]
+    fn decode_only_plan_when_no_prefill() {
+        let (mut s, mut st) = setup(512);
+        st.arrive(req(1, 10, 5));
+        st.admit(1);
+        let r = st.reqs.get_mut(&1).unwrap();
+        r.prefill_done = 10;
+        r.generated = 1;
+        r.phase = crate::sched::Phase::Decoding;
+        st.prefilling.clear();
+        st.decoding.push(1);
+        let p = s.plan(&mut st).unwrap();
+        assert!(p.groups[0].prefill.is_empty());
+        assert_eq!(p.groups[0].decode.len(), 1);
+    }
+
+    #[test]
+    fn none_when_idle() {
+        let (mut s, mut st) = setup(512);
+        assert!(s.plan(&mut st).is_none());
+    }
+
+    #[test]
+    fn single_group_spans_all_layers() {
+        let (mut s, mut st) = setup(512);
+        st.arrive(req(1, 600, 5));
+        let p = s.plan(&mut st).unwrap();
+        assert_eq!(p.total_layers(), st.model.n_layers);
+        assert_eq!(p.groups.len(), 1);
+    }
+}

@@ -1,0 +1,200 @@
+//! Hybrid chunked + layered prefill (paper §4.3).
+//!
+//! The two axes are orthogonal: the prompt is split along the token axis at
+//! a LARGE chunk size (default 4096+, enough to push MoE expert GEMMs into
+//! the compute-bound regime), and each chunk is then scheduled along the
+//! layer axis like layered prefill (G groups, one group per iteration).
+//! This inherits chunked-pipeline-parallel's ability to bound in-flight
+//! prefill state for very long prompts while retaining layered prefill's
+//! single-visit-per-layer expert loading per chunk.
+
+use crate::config::SchedulerConfig;
+use crate::sched::{
+    groups_for_len, partition_layers, EngineState, GroupPlan, IterationPlan, PrefillWork,
+    Scheduler,
+};
+
+pub struct HybridChunkedLayered {
+    cfg: SchedulerConfig,
+    n_layers: u32,
+    /// Active request and its current chunk state.
+    active: Option<ChunkState>,
+}
+
+struct ChunkState {
+    req: u64,
+    /// Chunk token span [start, start+len).
+    start: u32,
+    len: u32,
+    /// True if this is the prompt's final chunk.
+    last_chunk: bool,
+    group_sizes: Vec<u32>,
+    cursor: usize,
+}
+
+impl HybridChunkedLayered {
+    pub fn new(cfg: SchedulerConfig, n_layers: u32) -> Self {
+        HybridChunkedLayered {
+            cfg,
+            n_layers,
+            active: None,
+        }
+    }
+
+    fn next_chunk(&mut self, state: &mut EngineState) {
+        debug_assert!(self.active.is_none());
+        // Continue the current prefilling request if it has tokens left,
+        // else admit the next waiting one.
+        let id = state
+            .prefilling
+            .iter()
+            .copied()
+            .find(|id| state.reqs[id].remaining_prefill() > 0)
+            .or_else(|| {
+                let head = *state.waiting.first()?;
+                let active = state.prefilling.len() + state.decoding.len();
+                if active >= state.max_batch.min(self.cfg.max_batch) {
+                    return None;
+                }
+                state.admit(head).then_some(head)
+            });
+        let Some(id) = id else { return };
+        let r = &state.reqs[&id];
+        let start = r.prefill_done;
+        let len = r.remaining_prefill().min(self.cfg.hybrid_chunk_size);
+        let last_chunk = len == r.remaining_prefill();
+        let g = groups_for_len(len, self.cfg.group_token_target).min(self.n_layers);
+        self.active = Some(ChunkState {
+            req: id,
+            start,
+            len,
+            last_chunk,
+            group_sizes: partition_layers(self.n_layers, g),
+            cursor: 0,
+        });
+    }
+}
+
+impl Scheduler for HybridChunkedLayered {
+    fn name(&self) -> &'static str {
+        "hybrid"
+    }
+
+    fn plan(&mut self, state: &mut EngineState) -> Option<IterationPlan> {
+        if self.active.is_none() {
+            self.next_chunk(state);
+        }
+
+        let decode = state.decode_set();
+        let Some(chunk) = &mut self.active else {
+            if decode.is_empty() {
+                return None;
+            }
+            return Some(IterationPlan {
+                groups: vec![GroupPlan {
+                    n_layers: self.n_layers,
+                    prefill: Vec::new(),
+                    decode,
+                }],
+            });
+        };
+
+        let last_group = chunk.cursor == chunk.group_sizes.len() - 1;
+        let mut groups = Vec::with_capacity(chunk.group_sizes.len());
+        for (gi, &gsize) in chunk.group_sizes.iter().enumerate() {
+            let prefill = if gi == chunk.cursor {
+                vec![PrefillWork {
+                    req: chunk.req,
+                    tokens: chunk.len,
+                    pos: chunk.start,
+                    // First token emitted only when the final chunk clears
+                    // the final group.
+                    completes: last_group && chunk.last_chunk,
+                }]
+            } else {
+                Vec::new()
+            };
+            groups.push(GroupPlan {
+                n_layers: gsize,
+                prefill,
+                decode: decode.clone(),
+            });
+        }
+        chunk.cursor += 1;
+        if last_group {
+            self.active = None;
+        }
+        Some(IterationPlan { groups })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelDesc, Policy};
+    use crate::kvcache::KvCacheManager;
+    use crate::workload::Request;
+
+    fn setup(hybrid_chunk: u32) -> (HybridChunkedLayered, EngineState) {
+        let mut cfg = SchedulerConfig::preset(Policy::Hybrid);
+        cfg.hybrid_chunk_size = hybrid_chunk;
+        let model = ModelDesc::qwen3_30b_a3b();
+        let n = model.n_layers;
+        let st = EngineState::new(model, KvCacheManager::new(100_000, 16), 256);
+        (HybridChunkedLayered::new(cfg, n), st)
+    }
+
+    fn req(id: u64, input: u32) -> Request {
+        Request {
+            id,
+            arrival_s: 0.0,
+            input_len: input,
+            output_len: 5,
+        }
+    }
+
+    #[test]
+    fn chunks_then_layers() {
+        let (mut s, mut st) = setup(4096);
+        st.arrive(req(1, 6000));
+        // Chunk 1: 4096 tokens, G = 8 -> 8 iterations, no completion.
+        for it in 0..8 {
+            let p = s.plan(&mut st).unwrap();
+            assert_eq!(p.prefill_groups(), 1, "iter {it}");
+            let w = p
+                .groups
+                .iter()
+                .find_map(|g| g.prefill.first())
+                .copied()
+                .unwrap();
+            assert_eq!(w.tokens, 4096);
+            assert_eq!(w.pos, 0);
+            assert!(!w.completes);
+        }
+        // Engine would record chunk-1 progress.
+        st.reqs.get_mut(&1).unwrap().prefill_done = 4096;
+        // Chunk 2: 1904 tokens, G = 4 -> completes on 4th.
+        for it in 0..4 {
+            let p = s.plan(&mut st).unwrap();
+            let w = p
+                .groups
+                .iter()
+                .find_map(|g| g.prefill.first())
+                .copied()
+                .unwrap();
+            assert_eq!(w.tokens, 1904);
+            assert_eq!(w.pos, 4096);
+            assert_eq!(w.completes, it == 3);
+        }
+    }
+
+    #[test]
+    fn short_prompt_one_chunk_g_groups() {
+        let (mut s, mut st) = setup(4096);
+        st.arrive(req(1, 1024));
+        let p = s.plan(&mut st).unwrap();
+        assert_eq!(p.groups.len(), 2); // G = ceil(1024/512) = 2
+        let _ = s.plan(&mut st).unwrap();
+        assert!(s.active.is_none());
+    }
+}

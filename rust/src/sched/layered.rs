@@ -1,0 +1,302 @@
+//! Layered prefill — the paper's contribution (§4).
+//!
+//! The model is vertically partitioned into G contiguous layer groups
+//! (G = max(1, ceil(L / 512)), adapted to the admitted prompt length,
+//! §4.4). Each iteration, exactly ONE designated group co-schedules the
+//! prefill of the admitted cohort with the ongoing decode batch; every other
+//! group runs decode-only. The prefill cursor advances one group per
+//! iteration, so an admission completes in exactly G iterations (I4) while
+//! decode never stalls (I3). Each prompt token traverses each layer's
+//! prefill path exactly once (I2) — eliminating the chunk-amplified MoE
+//! expert reloads of token-axis scheduling.
+//!
+//! Concurrently-arrived small prompts are merged into a single admission
+//! cohort (§4.4).
+
+use crate::config::SchedulerConfig;
+use crate::sched::{
+    groups_for_len, partition_layers, EngineState, GroupPlan, IterationPlan, PrefillWork,
+    Scheduler,
+};
+
+pub struct LayeredPrefill {
+    cfg: SchedulerConfig,
+    n_layers: u32,
+    /// Active admission cohort (request ids), empty when none in flight.
+    cohort: Vec<u64>,
+    /// Contiguous layer-group sizes for the active cohort.
+    group_sizes: Vec<u32>,
+    /// Next group to run prefill (0-based). cohort complete when
+    /// cursor == group_sizes.len().
+    cursor: usize,
+}
+
+impl LayeredPrefill {
+    pub fn new(cfg: SchedulerConfig, n_layers: u32) -> Self {
+        LayeredPrefill {
+            cfg,
+            n_layers,
+            cohort: Vec::new(),
+            group_sizes: Vec::new(),
+            cursor: 0,
+        }
+    }
+
+    pub fn active_groups(&self) -> usize {
+        self.group_sizes.len()
+    }
+
+    fn cohort_active(&self) -> bool {
+        !self.cohort.is_empty() && self.cursor < self.group_sizes.len()
+    }
+
+    /// Admit the next cohort: FCFS head, merging further waiting requests
+    /// while the combined prompt stays within the per-iteration work target
+    /// (so merged admissions still cost about one 512-token chunk per
+    /// iteration) and capacity allows.
+    fn admit_cohort(&mut self, state: &mut EngineState) {
+        debug_assert!(!self.cohort_active());
+        self.cohort.clear();
+        let mut total_tokens: u32 = 0;
+        loop {
+            let Some(&head) = state.waiting.first() else {
+                break;
+            };
+            let active = state.prefilling.len() + state.decoding.len();
+            if active >= state.max_batch.min(self.cfg.max_batch) {
+                break;
+            }
+            let head_len = state.reqs[&head].req.input_len;
+            if !self.cohort.is_empty() {
+                if !self.cfg.merge_small_prefills {
+                    break;
+                }
+                // Merge only while the cohort stays "small" (one group's
+                // worth of work per §4.4's merged-batch rule).
+                if total_tokens + head_len > self.cfg.group_token_target {
+                    break;
+                }
+            }
+            if !state.admit(head) {
+                break;
+            }
+            total_tokens += head_len;
+            self.cohort.push(head);
+        }
+        if !self.cohort.is_empty() {
+            let g = groups_for_len(total_tokens, self.cfg.group_token_target)
+                .min(self.n_layers);
+            self.group_sizes = partition_layers(self.n_layers, g);
+            self.cursor = 0;
+        }
+    }
+}
+
+impl Scheduler for LayeredPrefill {
+    fn name(&self) -> &'static str {
+        "layered"
+    }
+
+    fn plan(&mut self, state: &mut EngineState) -> Option<IterationPlan> {
+        if !self.cohort_active() {
+            self.cohort.clear();
+            self.group_sizes.clear();
+            self.admit_cohort(state);
+        }
+
+        let decode = state.decode_set();
+        if !self.cohort_active() && decode.is_empty() {
+            return None;
+        }
+
+        let mut groups = Vec::new();
+        if self.cohort_active() {
+            let last = self.cursor == self.group_sizes.len() - 1;
+            for (gi, &gsize) in self.group_sizes.iter().enumerate() {
+                let prefill = if gi == self.cursor {
+                    // One-group-per-iteration rule (I1): the designated group
+                    // prefills the ENTIRE cohort prompt through its layers.
+                    self.cohort
+                        .iter()
+                        .map(|&id| PrefillWork {
+                            req: id,
+                            tokens: state.reqs[&id].req.input_len,
+                            pos: 0,
+                            completes: last,
+                        })
+                        .collect()
+                } else {
+                    Vec::new()
+                };
+                groups.push(GroupPlan {
+                    n_layers: gsize,
+                    prefill,
+                    decode: decode.clone(),
+                });
+            }
+            self.cursor += 1;
+            if last {
+                // Cohort completes this iteration; next plan() admits anew.
+                self.cohort.clear();
+                self.group_sizes.clear();
+                self.cursor = 0;
+            }
+        } else {
+            // Decode-only iteration: a single full-stack group.
+            groups.push(GroupPlan {
+                n_layers: self.n_layers,
+                prefill: Vec::new(),
+                decode,
+            });
+        }
+
+        Some(IterationPlan { groups })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelDesc, Policy};
+    use crate::kvcache::KvCacheManager;
+    use crate::workload::Request;
+
+    fn setup() -> (LayeredPrefill, EngineState) {
+        let cfg = SchedulerConfig::preset(Policy::Layered);
+        let model = ModelDesc::qwen3_30b_a3b();
+        let n_layers = model.n_layers;
+        let state = EngineState::new(model, KvCacheManager::new(100_000, 16), 256);
+        (LayeredPrefill::new(cfg, n_layers), state)
+    }
+
+    fn req(id: u64, input: u32, output: u32) -> Request {
+        Request {
+            id,
+            arrival_s: 0.0,
+            input_len: input,
+            output_len: output,
+        }
+    }
+
+    #[test]
+    fn one_group_prefills_per_iteration() {
+        let (mut s, mut st) = setup();
+        st.arrive(req(1, 8192, 10));
+        // G = ceil(8192/512) = 16 (paper example).
+        for it in 0..16 {
+            let p = s.plan(&mut st).unwrap();
+            assert_eq!(p.prefill_groups(), 1, "iter {it}");
+            assert_eq!(p.groups.len(), 16);
+            assert_eq!(p.total_layers(), 48);
+            let prefill_group = p.groups.iter().position(|g| !g.prefill.is_empty());
+            assert_eq!(prefill_group, Some(it), "cursor advances one group/iter");
+            let completes = p.groups[it].prefill[0].completes;
+            assert_eq!(completes, it == 15, "completes only on last group (I4)");
+        }
+    }
+
+    #[test]
+    fn prefill_covers_each_layer_exactly_once() {
+        let (mut s, mut st) = setup();
+        st.arrive(req(1, 4000, 10));
+        let mut layer_visits = 0u32;
+        loop {
+            let Some(p) = s.plan(&mut st) else { break };
+            let mut done = false;
+            for g in &p.groups {
+                if !g.prefill.is_empty() {
+                    layer_visits += g.n_layers;
+                    done = g.prefill[0].completes;
+                }
+            }
+            if done {
+                break;
+            }
+        }
+        assert_eq!(layer_visits, 48, "I2: each layer prefilled exactly once");
+    }
+
+    #[test]
+    fn short_prompt_single_group() {
+        let (mut s, mut st) = setup();
+        st.arrive(req(1, 300, 10));
+        let p = s.plan(&mut st).unwrap();
+        // G = 1: whole stack in one group, prefill completes immediately.
+        assert_eq!(p.groups.len(), 1);
+        assert!(p.groups[0].prefill[0].completes);
+    }
+
+    #[test]
+    fn merges_small_concurrent_prompts() {
+        let (mut s, mut st) = setup();
+        st.arrive(req(1, 100, 5));
+        st.arrive(req(2, 150, 5));
+        st.arrive(req(3, 200, 5));
+        st.arrive(req(4, 400, 5)); // would exceed 512 merged target
+        let p = s.plan(&mut st).unwrap();
+        let pf: Vec<u64> = p.groups[0].prefill.iter().map(|w| w.req).collect();
+        assert_eq!(pf, vec![1, 2, 3], "merged cohort = small prompts only");
+        assert_eq!(st.waiting, vec![4]);
+    }
+
+    #[test]
+    fn decode_present_in_every_group() {
+        let (mut s, mut st) = setup();
+        // Set up one decoding request.
+        st.arrive(req(9, 10, 50));
+        st.admit(9);
+        {
+            let r = st.reqs.get_mut(&9).unwrap();
+            r.prefill_done = 10;
+            r.generated = 1;
+            r.phase = crate::sched::Phase::Decoding;
+        }
+        st.prefilling.clear();
+        st.decoding.push(9);
+        // And one long prefill.
+        st.arrive(req(1, 2048, 10));
+        let p = s.plan(&mut st).unwrap();
+        assert!(p.groups.len() > 1);
+        for g in &p.groups {
+            assert_eq!(g.decode.len(), 1, "I3: decode in every group");
+            assert_eq!(g.decode[0].0, 9);
+        }
+    }
+
+    #[test]
+    fn next_cohort_waits_for_current() {
+        let (mut s, mut st) = setup();
+        st.arrive(req(1, 2048, 10)); // G = 4
+        let _ = s.plan(&mut st).unwrap();
+        st.arrive(req(2, 1000, 10));
+        // Request 2 must not enter prefill until request 1's cohort is done.
+        for _ in 0..3 {
+            let p = s.plan(&mut st).unwrap();
+            let ids: Vec<u64> = p
+                .groups
+                .iter()
+                .flat_map(|g| g.prefill.iter().map(|w| w.req))
+                .collect();
+            assert_eq!(ids, vec![1]);
+        }
+        // Cohort finished; next plan admits request 2.
+        let p = s.plan(&mut st).unwrap();
+        let ids: Vec<u64> = p
+            .groups
+            .iter()
+            .flat_map(|g| g.prefill.iter().map(|w| w.req))
+            .collect();
+        assert_eq!(ids, vec![2]);
+    }
+
+    #[test]
+    fn groups_capped_by_layer_count() {
+        let cfg = SchedulerConfig::preset(Policy::Layered);
+        let model = ModelDesc::tinymoe(); // 8 layers
+        let mut st = EngineState::new(model, KvCacheManager::new(100_000, 16), 256);
+        let mut s = LayeredPrefill::new(cfg, 8);
+        st.arrive(req(1, 30_000, 10)); // ceil(30000/512) = 59 > 8 layers
+        let p = s.plan(&mut st).unwrap();
+        assert_eq!(p.groups.len(), 8, "G clamped to n_layers");
+    }
+}

@@ -1,0 +1,168 @@
+//! Scheduling: the paper's contribution (layered prefill) plus the baselines
+//! it is evaluated against (chunked prefill / Orca continuous batching /
+//! static batching) and the §4.3 hybrid generalization.
+//!
+//! A `Scheduler` plans one engine iteration at a time over mutable
+//! `EngineState`. The plan is expressed per *layer group* so that layer-axis
+//! policies are first-class: token-axis policies simply emit a single group
+//! covering all layers.
+//!
+//! Normative invariants (checked by property tests):
+//!  I1  at most one group performs prefill per iteration (layered);
+//!  I2  a prompt token visits each layer's prefill path exactly once;
+//!  I3  every running decode request decodes exactly once per iteration;
+//!  I4  a layered admission cohort completes in exactly G iterations.
+
+pub mod chunked;
+pub mod hybrid;
+pub mod layered;
+pub mod orca;
+pub mod static_batch;
+pub mod state;
+
+pub use state::{EngineState, Phase, SimReq};
+
+use crate::config::{Policy, SchedulerConfig};
+
+/// Prefill work for one request within one layer group this iteration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PrefillWork {
+    pub req: u64,
+    /// Number of prompt tokens processed through this group's layers.
+    pub tokens: u32,
+    /// Absolute position of the slice's first token (context already cached
+    /// *in these layers* before the slice).
+    pub pos: u32,
+    /// True if this work completes the request's prefill (first token is
+    /// emitted at the end of this iteration).
+    pub completes: bool,
+}
+
+/// One layer group's work within an iteration.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct GroupPlan {
+    /// Number of contiguous layers in this group.
+    pub n_layers: u32,
+    /// Prefill slices co-scheduled on this group (empty for decode-only).
+    pub prefill: Vec<PrefillWork>,
+    /// Requests decoding through this group (context length at plan time).
+    pub decode: Vec<(u64, u32)>,
+}
+
+/// Complete plan for one engine iteration.
+#[derive(Clone, Debug, Default)]
+pub struct IterationPlan {
+    pub groups: Vec<GroupPlan>,
+}
+
+impl IterationPlan {
+    pub fn total_layers(&self) -> u32 {
+        self.groups.iter().map(|g| g.n_layers).sum()
+    }
+
+    pub fn has_work(&self) -> bool {
+        self.groups
+            .iter()
+            .any(|g| !g.prefill.is_empty() || !g.decode.is_empty())
+    }
+
+    pub fn prefill_groups(&self) -> usize {
+        self.groups.iter().filter(|g| !g.prefill.is_empty()).count()
+    }
+}
+
+/// A scheduling policy: plans the next iteration over engine state.
+/// Returns None when it has nothing to run (engine then advances time to
+/// the next arrival).
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+    fn plan(&mut self, state: &mut EngineState) -> Option<IterationPlan>;
+}
+
+/// Build a scheduler from config.
+pub fn build(config: &SchedulerConfig, n_layers: u32) -> Box<dyn Scheduler> {
+    match config.policy {
+        Policy::Static => Box::new(static_batch::StaticBatching::new(config.clone())),
+        Policy::Orca => Box::new(orca::ContinuousBatching::new(config.clone())),
+        Policy::Chunked => Box::new(chunked::ChunkedPrefill::new(config.clone())),
+        Policy::Layered => Box::new(layered::LayeredPrefill::new(config.clone(), n_layers)),
+        Policy::Hybrid => Box::new(hybrid::HybridChunkedLayered::new(config.clone(), n_layers)),
+    }
+}
+
+/// Partition `n_layers` into `g` contiguous groups with sizes differing by
+/// at most one (paper §4.1; future-work note on non-divisible counts).
+pub fn partition_layers(n_layers: u32, g: u32) -> Vec<u32> {
+    let g = g.clamp(1, n_layers.max(1));
+    let base = n_layers / g;
+    let extra = n_layers % g;
+    (0..g)
+        .map(|i| base + if i < extra { 1 } else { 0 })
+        .collect()
+}
+
+/// Paper §4.4: number of layer groups for a prompt of length `len`,
+/// targeting per-iteration prefill work comparable to a `target`-token chunk:
+/// G(L) = max(1, ceil(L / target)).
+pub fn groups_for_len(len: u32, target: u32) -> u32 {
+    (len.div_ceil(target.max(1))).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_covers_all_layers() {
+        for n in [1u32, 7, 8, 48] {
+            for g in 1..=n {
+                let p = partition_layers(n, g);
+                assert_eq!(p.iter().sum::<u32>(), n);
+                assert_eq!(p.len(), g as usize);
+                let mx = *p.iter().max().unwrap();
+                let mn = *p.iter().min().unwrap();
+                assert!(mx - mn <= 1, "n={n} g={g} p={p:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn partition_clamps_excess_groups() {
+        let p = partition_layers(4, 9);
+        assert_eq!(p.len(), 4);
+        assert!(p.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn groups_for_len_matches_paper() {
+        // Paper §4.4: L=8192 -> G=16; L=512 -> G=1 (target 512).
+        assert_eq!(groups_for_len(8192, 512), 16);
+        assert_eq!(groups_for_len(512, 512), 1);
+        assert_eq!(groups_for_len(513, 512), 2);
+        assert_eq!(groups_for_len(1, 512), 1);
+    }
+
+    #[test]
+    fn plan_helpers() {
+        let mut p = IterationPlan::default();
+        assert!(!p.has_work());
+        p.groups.push(GroupPlan {
+            n_layers: 4,
+            prefill: vec![],
+            decode: vec![(1, 10)],
+        });
+        p.groups.push(GroupPlan {
+            n_layers: 4,
+            prefill: vec![PrefillWork {
+                req: 2,
+                tokens: 64,
+                pos: 0,
+                completes: false,
+            }],
+            decode: vec![(1, 10)],
+        });
+        assert!(p.has_work());
+        assert_eq!(p.total_layers(), 8);
+        assert_eq!(p.prefill_groups(), 1);
+    }
+}

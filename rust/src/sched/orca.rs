@@ -1,0 +1,115 @@
+//! Orca-style continuous batching (iteration-level scheduling, no chunking).
+//!
+//! New requests are admitted at iteration boundaries and their ENTIRE prompt
+//! is prefilled in one hybrid iteration alongside ongoing decodes. This
+//! fixes static batching's head-of-line TTFT problem but stalls decode
+//! behind long prefills (the TBT-spike failure mode chunked/layered prefill
+//! were designed to remove — §2.3).
+
+use crate::config::SchedulerConfig;
+use crate::sched::{EngineState, GroupPlan, IterationPlan, PrefillWork, Scheduler};
+
+pub struct ContinuousBatching {
+    cfg: SchedulerConfig,
+}
+
+impl ContinuousBatching {
+    pub fn new(cfg: SchedulerConfig) -> Self {
+        ContinuousBatching { cfg }
+    }
+}
+
+impl Scheduler for ContinuousBatching {
+    fn name(&self) -> &'static str {
+        "orca"
+    }
+
+    fn plan(&mut self, state: &mut EngineState) -> Option<IterationPlan> {
+        // Admit as many waiting requests as capacity allows.
+        while let Some(&head) = state.waiting.first() {
+            let active = state.prefilling.len() + state.decoding.len();
+            if active >= state.max_batch.min(self.cfg.max_batch) {
+                break;
+            }
+            if !state.admit(head) {
+                break;
+            }
+        }
+
+        // Whole-prompt prefill for everything admitted this iteration.
+        let mut prefill = Vec::new();
+        for &id in &state.prefilling {
+            let r = &state.reqs[&id];
+            if r.remaining_prefill() == 0 {
+                continue;
+            }
+            prefill.push(PrefillWork {
+                req: id,
+                tokens: r.remaining_prefill(),
+                pos: r.prefill_done,
+                completes: true,
+            });
+        }
+
+        let decode = state.decode_set();
+        if prefill.is_empty() && decode.is_empty() {
+            return None;
+        }
+        Some(IterationPlan {
+            groups: vec![GroupPlan {
+                n_layers: state.model.n_layers,
+                prefill,
+                decode,
+            }],
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelDesc, Policy};
+    use crate::kvcache::KvCacheManager;
+    use crate::workload::Request;
+
+    fn req(id: u64, input: u32) -> Request {
+        Request {
+            id,
+            arrival_s: 0.0,
+            input_len: input,
+            output_len: 10,
+        }
+    }
+
+    #[test]
+    fn whole_prompt_in_one_iteration() {
+        let mut s = ContinuousBatching::new(SchedulerConfig::preset(Policy::Orca));
+        let mut st = EngineState::new(
+            ModelDesc::qwen3_30b_a3b(),
+            KvCacheManager::new(10_000, 16),
+            256,
+        );
+        st.arrive(req(1, 9000));
+        let p = s.plan(&mut st).unwrap();
+        assert_eq!(p.groups[0].prefill[0].tokens, 9000);
+        assert!(p.groups[0].prefill[0].completes);
+    }
+
+    #[test]
+    fn admits_multiple_up_to_cap() {
+        let mut cfg = SchedulerConfig::preset(Policy::Orca);
+        cfg.max_batch = 2;
+        let mut s = ContinuousBatching::new(cfg);
+        let mut st = EngineState::new(
+            ModelDesc::qwen3_30b_a3b(),
+            KvCacheManager::new(10_000, 16),
+            256,
+        );
+        st.arrive(req(1, 100));
+        st.arrive(req(2, 100));
+        st.arrive(req(3, 100));
+        let p = s.plan(&mut st).unwrap();
+        assert_eq!(p.groups[0].prefill.len(), 2);
+        assert_eq!(st.waiting, vec![3]);
+    }
+}

@@ -1,0 +1,199 @@
+//! Engine-side request state shared between the simulator and the
+//! schedulers. The engine owns canonical progress; schedulers read it and
+//! perform admissions (waiting -> prefilling) against the KV manager.
+
+use std::collections::BTreeMap;
+
+use crate::config::ModelDesc;
+use crate::kvcache::KvCacheManager;
+use crate::workload::Request;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Waiting,
+    Prefilling,
+    Decoding,
+    Finished,
+}
+
+/// Mutable per-request progress tracked by the engine.
+#[derive(Clone, Debug)]
+pub struct SimReq {
+    pub req: Request,
+    pub phase: Phase,
+    /// Prompt tokens fully prefilled **through all layers** (chunked /
+    /// token-axis progress).
+    pub prefill_done: u32,
+    /// Prefill token·layer units processed (I2 accounting: equals
+    /// input_len × n_layers exactly when prefill completes).
+    pub token_layers_done: u64,
+    /// Tokens generated so far (including the first token from prefill).
+    pub generated: u32,
+    /// Timestamps for metrics.
+    pub first_token_s: Option<f64>,
+    pub finish_s: Option<f64>,
+    /// Inter-token gaps (decode TBTs).
+    pub tbts: Vec<f64>,
+    pub token_times: Vec<f64>,
+}
+
+impl SimReq {
+    pub fn new(req: Request) -> Self {
+        SimReq {
+            req,
+            phase: Phase::Waiting,
+            prefill_done: 0,
+            token_layers_done: 0,
+            generated: 0,
+            first_token_s: None,
+            finish_s: None,
+            tbts: Vec::new(),
+            token_times: Vec::new(),
+        }
+    }
+
+    pub fn remaining_prefill(&self) -> u32 {
+        self.req.input_len - self.prefill_done
+    }
+
+    pub fn ctx_len(&self) -> u32 {
+        // Context visible to the next decode step: full prompt + generated.
+        self.req.input_len + self.generated
+    }
+
+    pub fn done_decoding(&self) -> bool {
+        self.generated >= self.req.output_len
+    }
+}
+
+/// Engine state visible to schedulers.
+pub struct EngineState {
+    pub model: ModelDesc,
+    pub now_s: f64,
+    /// Arrived but not admitted (FCFS order).
+    pub waiting: Vec<u64>,
+    /// Admitted, prefill in progress.
+    pub prefilling: Vec<u64>,
+    /// Prefill complete, generating.
+    pub decoding: Vec<u64>,
+    pub reqs: BTreeMap<u64, SimReq>,
+    pub kv: KvCacheManager,
+    /// Scheduler-visible cap on concurrent decodes.
+    pub max_batch: usize,
+}
+
+impl EngineState {
+    pub fn new(model: ModelDesc, kv: KvCacheManager, max_batch: usize) -> Self {
+        EngineState {
+            model,
+            now_s: 0.0,
+            waiting: Vec::new(),
+            prefilling: Vec::new(),
+            decoding: Vec::new(),
+            reqs: BTreeMap::new(),
+            kv,
+            max_batch,
+        }
+    }
+
+    pub fn arrive(&mut self, req: Request) {
+        let id = req.id;
+        self.reqs.insert(id, SimReq::new(req));
+        self.waiting.push(id);
+    }
+
+    /// Admit a waiting request (FCFS position `idx` in waiting) into
+    /// prefilling, reserving KV for its full footprint. Returns false if KV
+    /// capacity does not allow admission.
+    pub fn admit(&mut self, id: u64) -> bool {
+        let Some(pos) = self.waiting.iter().position(|&w| w == id) else {
+            return false;
+        };
+        let footprint = {
+            let r = &self.reqs[&id];
+            r.req.input_len + r.req.output_len
+        };
+        if !self.kv.can_admit(footprint) {
+            return false;
+        }
+        self.kv.register(id, footprint).expect("can_admit checked");
+        self.waiting.remove(pos);
+        self.prefilling.push(id);
+        self.reqs.get_mut(&id).unwrap().phase = Phase::Prefilling;
+        true
+    }
+
+    /// Total decode slots in use (prefilling requests don't decode yet).
+    pub fn decode_batch_size(&self) -> usize {
+        self.decoding.len()
+    }
+
+    pub fn ctx_lens_of(&self, ids: &[u64]) -> Vec<u64> {
+        ids.iter()
+            .map(|id| self.reqs[id].ctx_len() as u64)
+            .collect()
+    }
+
+    /// Decode set for planning: every decoding request (I3: all decode every
+    /// iteration), as (id, ctx_len) pairs.
+    pub fn decode_set(&self) -> Vec<(u64, u32)> {
+        self.decoding
+            .iter()
+            .map(|id| (*id, self.reqs[id].ctx_len()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state() -> EngineState {
+        EngineState::new(
+            ModelDesc::qwen3_30b_a3b(),
+            KvCacheManager::new(100, 16),
+            256,
+        )
+    }
+
+    fn req(id: u64, input: u32, output: u32) -> Request {
+        Request {
+            id,
+            arrival_s: 0.0,
+            input_len: input,
+            output_len: output,
+        }
+    }
+
+    #[test]
+    fn arrive_admit_flow() {
+        let mut s = state();
+        s.arrive(req(1, 100, 10));
+        assert_eq!(s.waiting, vec![1]);
+        assert!(s.admit(1));
+        assert_eq!(s.waiting.len(), 0);
+        assert_eq!(s.prefilling, vec![1]);
+        assert_eq!(s.reqs[&1].phase, Phase::Prefilling);
+        // KV reserved for input+output
+        assert_eq!(s.kv.len_of(1), Some(110));
+    }
+
+    #[test]
+    fn admit_blocked_by_kv() {
+        let mut s = state();
+        s.arrive(req(1, 100 * 16, 500 * 16)); // way beyond 100 blocks
+        assert!(!s.admit(1));
+        assert_eq!(s.waiting, vec![1]);
+    }
+
+    #[test]
+    fn ctx_len_accounts_generated() {
+        let mut r = SimReq::new(req(1, 50, 10));
+        assert_eq!(r.ctx_len(), 50);
+        r.generated = 3;
+        assert_eq!(r.ctx_len(), 53);
+        assert_eq!(r.remaining_prefill(), 50);
+        r.prefill_done = 20;
+        assert_eq!(r.remaining_prefill(), 30);
+    }
+}

@@ -1,0 +1,137 @@
+//! Static (FasterTransformer-style) batching: fixed batches processed
+//! run-to-completion. New arrivals wait for the whole batch to finish —
+//! stall-free decode and stable TBT, but TTFT inflates with batch makespan
+//! (§2.3). Included as the historical baseline.
+
+use crate::config::SchedulerConfig;
+use crate::sched::{EngineState, GroupPlan, IterationPlan, PrefillWork, Scheduler};
+
+pub struct StaticBatching {
+    cfg: SchedulerConfig,
+    /// The in-flight batch; no admissions until it fully drains.
+    batch: Vec<u64>,
+}
+
+impl StaticBatching {
+    pub fn new(cfg: SchedulerConfig) -> Self {
+        StaticBatching {
+            cfg,
+            batch: Vec::new(),
+        }
+    }
+
+    fn batch_done(&self, state: &EngineState) -> bool {
+        self.batch.iter().all(|id| {
+            state
+                .reqs
+                .get(id)
+                .map(|r| r.phase == crate::sched::Phase::Finished)
+                .unwrap_or(true)
+        })
+    }
+}
+
+impl Scheduler for StaticBatching {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn plan(&mut self, state: &mut EngineState) -> Option<IterationPlan> {
+        if self.batch_done(state) {
+            self.batch.clear();
+            // Form the next fixed batch.
+            while self.batch.len() < self.cfg.static_batch {
+                let Some(&head) = state.waiting.first() else {
+                    break;
+                };
+                if !state.admit(head) {
+                    break;
+                }
+                self.batch.push(head);
+            }
+            if self.batch.is_empty() {
+                return None;
+            }
+        }
+
+        // Phase 1: prefill every batch member (single big iteration each).
+        let mut prefill = Vec::new();
+        for &id in &state.prefilling {
+            let r = &state.reqs[&id];
+            if r.remaining_prefill() > 0 {
+                prefill.push(PrefillWork {
+                    req: id,
+                    tokens: r.remaining_prefill(),
+                    pos: r.prefill_done,
+                    completes: true,
+                });
+            }
+        }
+        let decode = state.decode_set();
+        if prefill.is_empty() && decode.is_empty() {
+            return None;
+        }
+        Some(IterationPlan {
+            groups: vec![GroupPlan {
+                n_layers: state.model.n_layers,
+                prefill,
+                decode,
+            }],
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelDesc, Policy};
+    use crate::kvcache::KvCacheManager;
+    use crate::sched::Phase;
+    use crate::workload::Request;
+
+    fn req(id: u64) -> Request {
+        Request {
+            id,
+            arrival_s: 0.0,
+            input_len: 100,
+            output_len: 4,
+        }
+    }
+
+    #[test]
+    fn no_admission_until_batch_drains() {
+        let mut cfg = SchedulerConfig::preset(Policy::Static);
+        cfg.static_batch = 2;
+        let mut s = StaticBatching::new(cfg);
+        let mut st = EngineState::new(
+            ModelDesc::qwen3_30b_a3b(),
+            KvCacheManager::new(10_000, 16),
+            256,
+        );
+        st.arrive(req(1));
+        st.arrive(req(2));
+        st.arrive(req(3));
+        let p = s.plan(&mut st).unwrap();
+        assert_eq!(p.groups[0].prefill.len(), 2);
+        assert_eq!(st.waiting, vec![3]);
+        // Batch members still active -> request 3 keeps waiting.
+        for id in [1u64, 2] {
+            let r = st.reqs.get_mut(&id).unwrap();
+            r.prefill_done = 100;
+            r.generated = 1;
+            r.phase = Phase::Decoding;
+        }
+        st.prefilling.clear();
+        st.decoding = vec![1, 2];
+        let _ = s.plan(&mut st).unwrap();
+        assert_eq!(st.waiting, vec![3]);
+        // Finish the batch; next plan admits request 3.
+        for id in [1u64, 2] {
+            st.reqs.get_mut(&id).unwrap().phase = Phase::Finished;
+        }
+        st.decoding.clear();
+        let p = s.plan(&mut st).unwrap();
+        assert_eq!(p.groups[0].prefill.len(), 1);
+        assert_eq!(p.groups[0].prefill[0].req, 3);
+    }
+}

@@ -1,0 +1,16 @@
+//! Real serving engine: executes the SAME scheduler policies the simulator
+//! uses (`sched::ChunkedPrefill` / `sched::LayeredPrefill`) against the
+//! AOT-compiled TinyMoE model through the PJRT runtime, measuring wall-clock
+//! TTFT / TBT / throughput. This is the end-to-end proof that layered
+//! prefill is implementable on a real three-layer stack: the plans that
+//! drive HLO executables are produced by the identical policy code that the
+//! paper-scale simulation validates.
+//!
+//! Scale mapping: the TinyMoE testbed uses a 16-token scheduling quantum
+//! where the paper uses 512 (chunk size and G(L) target both scale by the
+//! same factor), so policy behaviour — chunk counts, group counts, one-
+//! group-per-iteration cadence — is structurally identical.
+
+pub mod engine;
+
+pub use engine::{RealServer, ServeOptions, ServeReport};

@@ -1,0 +1,133 @@
+//! Tiny CLI argument parser (no clap offline): subcommands + `--key value` /
+//! `--key=value` flags + positional args, with typed getters and defaults.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (after the subcommand). `--flag` with no value stores "true".
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(
+            self.flags.get(key).map(String::as_str),
+            Some("true") | Some("1") | Some("yes")
+        )
+    }
+
+    /// Comma-separated f64 list, e.g. `--rates 1.0,1.3,1.6`.
+    pub fn f64_list(&self, key: &str, default: &[f64]) -> Vec<f64> {
+        match self.flags.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter_map(|s| s.trim().parse().ok())
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_key_value_styles() {
+        let a = Args::parse(argv(&["pos1", "--rate", "1.3", "--model=qwen", "--verbose"]));
+        assert_eq!(a.f64("rate", 0.0), 1.3);
+        assert_eq!(a.str("model", ""), "qwen");
+        assert!(a.bool("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(argv(&[]));
+        assert_eq!(a.f64("missing", 2.5), 2.5);
+        assert_eq!(a.usize("n", 7), 7);
+        assert!(!a.bool("flag"));
+    }
+
+    #[test]
+    fn negative_number_value() {
+        let a = Args::parse(argv(&["--offset", "-3.5"]));
+        assert_eq!(a.f64("offset", 0.0), -3.5);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse(argv(&["--rates", "1.0, 2.0,3"]));
+        assert_eq!(a.f64_list("rates", &[]), vec![1.0, 2.0, 3.0]);
+        assert_eq!(a.f64_list("other", &[9.0]), vec![9.0]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = Args::parse(argv(&["--a", "--b", "x"]));
+        assert!(a.bool("a"));
+        assert_eq!(a.str("b", ""), "x");
+    }
+}

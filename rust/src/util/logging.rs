@@ -1,0 +1,87 @@
+//! Minimal leveled logger with a monotonic elapsed-time prefix.
+//! Controlled by `LP_LOG` env var (`error|warn|info|debug|trace`, default info).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(2);
+static START: OnceLock<Instant> = OnceLock::new();
+
+pub fn init_from_env() {
+    let lvl = match std::env::var("LP_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
+    };
+    set_level(lvl);
+}
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+    let _ = START.set(Instant::now());
+}
+
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(l: Level, msg: std::fmt::Arguments<'_>) {
+    if !enabled(l) {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+    let tag = match l {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    eprintln!("[{t:9.3}s {tag}] {msg}");
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($t:tt)+) => { $crate::util::logging::log($crate::util::logging::Level::Info, format_args!($($t)+)) };
+}
+#[macro_export]
+macro_rules! log_warn {
+    ($($t:tt)+) => { $crate::util::logging::log($crate::util::logging::Level::Warn, format_args!($($t)+)) };
+}
+#[macro_export]
+macro_rules! log_error {
+    ($($t:tt)+) => { $crate::util::logging::log($crate::util::logging::Level::Error, format_args!($($t)+)) };
+}
+#[macro_export]
+macro_rules! log_debug {
+    ($($t:tt)+) => { $crate::util::logging::log($crate::util::logging::Level::Debug, format_args!($($t)+)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+    }
+}

@@ -1,0 +1,11 @@
+//! Substrate utilities — hand-rolled because the offline build has no crates
+//! beyond `xla`/`anyhow`: PRNG + distributions, stats, JSON, CLI parsing,
+//! logging, table formatting, and a mini property-testing framework.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;

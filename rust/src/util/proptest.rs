@@ -1,0 +1,233 @@
+//! Mini property-testing framework (proptest is not available offline).
+//!
+//! Provides seeded random-input property checks with failure reporting and
+//! simple integer shrinking. Usage:
+//!
+//! ```ignore
+//! check("prefill conserves tokens", 200, |g| {
+//!     let len = g.int(1, 20_000) as u32;
+//!     let plan = chunk_plan(len);
+//!     prop_assert!(plan.iter().map(|c| c.real).sum::<u32>() == len);
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Rng;
+
+pub type PropResult = Result<(), String>;
+
+/// Value generator handed to each property iteration.
+pub struct Gen {
+    pub rng: Rng,
+    /// Log of drawn ints (for shrink replay).
+    draws: Vec<i64>,
+    /// When replaying a shrink candidate, values come from here.
+    replay: Option<Vec<i64>>,
+    replay_idx: usize,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Gen {
+            rng: Rng::new(seed),
+            draws: Vec::new(),
+            replay: None,
+            replay_idx: 0,
+        }
+    }
+
+    /// Integer in [lo, hi] inclusive. The primitive all other draws build on;
+    /// recorded so failures can be shrunk.
+    pub fn int(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(hi >= lo);
+        let v = if let Some(replay) = &self.replay {
+            let v = replay
+                .get(self.replay_idx)
+                .copied()
+                .unwrap_or_else(|| lo + (self.rng.below((hi - lo + 1) as u64) as i64));
+            self.replay_idx += 1;
+            v.clamp(lo, hi)
+        } else {
+            lo + self.rng.below((hi - lo + 1) as u64) as i64
+        };
+        self.draws.push(v);
+        v
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.int(lo as i64, hi as i64) as usize
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        // Derive from an int draw so shrinking applies.
+        let steps = 1_000_000;
+        let t = self.int(0, steps) as f64 / steps as f64;
+        lo + t * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.int(0, 1) == 1
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize(0, xs.len() - 1)]
+    }
+
+    pub fn vec_int(&mut self, len_max: usize, lo: i64, hi: i64) -> Vec<i64> {
+        let n = self.usize(0, len_max);
+        (0..n).map(|_| self.int(lo, hi)).collect()
+    }
+}
+
+/// Run `iters` random cases of `prop`. On failure, attempt to shrink the
+/// drawn integers toward their lower bounds and report the minimal case.
+/// Panics (test failure) with the seed + draws so the case can be replayed.
+pub fn check<F>(name: &str, iters: u64, prop: F)
+where
+    F: Fn(&mut Gen) -> PropResult,
+{
+    check_seeded(name, iters, 0xC0FFEE, prop)
+}
+
+pub fn check_seeded<F>(name: &str, iters: u64, base_seed: u64, prop: F)
+where
+    F: Fn(&mut Gen) -> PropResult,
+{
+    for i in 0..iters {
+        let seed = base_seed ^ (i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            // Shrink: repeatedly try halving each recorded draw toward 0.
+            let mut best = g.draws.clone();
+            let mut best_msg = msg;
+            let mut improved = true;
+            let mut budget = 400;
+            while improved && budget > 0 {
+                improved = false;
+                for idx in 0..best.len() {
+                    if best[idx] == 0 {
+                        continue;
+                    }
+                    for cand_v in [0, best[idx] / 2, best[idx] - best[idx].signum()] {
+                        if cand_v == best[idx] {
+                            continue;
+                        }
+                        budget -= 1;
+                        let mut cand = best.clone();
+                        cand[idx] = cand_v;
+                        let mut g2 = Gen::new(seed);
+                        g2.replay = Some(cand.clone());
+                        if let Err(m2) = prop(&mut g2) {
+                            best = g2.draws.clone();
+                            best_msg = m2;
+                            improved = true;
+                            break;
+                        }
+                        if budget == 0 {
+                            break;
+                        }
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property '{name}' failed (iter {i}, seed {seed:#x})\n  draws: {best:?}\n  {best_msg}"
+            );
+        }
+    }
+}
+
+/// Assertion helpers returning Err instead of panicking (so shrinking works).
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "assertion failed: {} == {} ({:?} != {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_iters() {
+        let mut count = std::cell::Cell::new(0u64);
+        let count_ref = &mut count;
+        check("trivially true", 50, |g| {
+            let _ = g.int(0, 10);
+            count_ref.set(count_ref.get() + 1);
+            Ok(())
+        });
+        assert_eq!(count.get(), 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails' failed")]
+    fn failing_property_panics() {
+        check("always fails", 10, |g| {
+            let x = g.int(5, 100);
+            prop_assert!(x < 5, "x={x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shrinking_finds_small_case() {
+        let result = std::panic::catch_unwind(|| {
+            check("fails for >= 10", 50, |g| {
+                let x = g.int(0, 1000);
+                prop_assert!(x < 10, "x={x}");
+                Ok(())
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // The shrinker should reduce to exactly the boundary 10.
+        assert!(msg.contains("x=10"), "shrunk message: {msg}");
+    }
+
+    #[test]
+    fn gen_pick_and_vec() {
+        let mut g = Gen::new(1);
+        let choices = [1, 2, 3];
+        for _ in 0..20 {
+            assert!(choices.contains(g.pick(&choices)));
+        }
+        let v = g.vec_int(5, -2, 2);
+        assert!(v.len() <= 5);
+        assert!(v.iter().all(|&x| (-2..=2).contains(&x)));
+    }
+
+    #[test]
+    fn f64_bounded() {
+        let mut g = Gen::new(2);
+        for _ in 0..100 {
+            let x = g.f64(1.5, 2.5);
+            assert!((1.5..=2.5).contains(&x));
+        }
+    }
+}

@@ -1,0 +1,338 @@
+//! Deterministic PRNG + sampling distributions.
+//!
+//! No external crates are available in this offline build, so we implement
+//! the generators the serving stack needs: xoshiro256++ seeded via
+//! splitmix64, plus exponential / Poisson / lognormal / normal / categorical
+//! samplers. Everything is reproducible from a `u64` seed, which the
+//! simulator and workload generator rely on for trace replay.
+
+/// splitmix64 — used to expand a single u64 seed into xoshiro state.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256++ PRNG (Blackman & Vigna). Fast, 256-bit state, good quality.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut s = [0u64; 4];
+        for slot in &mut s {
+            *slot = splitmix64(&mut sm);
+        }
+        // Avoid the all-zero state (cannot occur from splitmix64, but be safe).
+        if s == [0, 0, 0, 0] {
+            s[0] = 1;
+        }
+        Rng { s }
+    }
+
+    /// Derive an independent stream (for per-component RNGs).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 high bits -> [0,1) with full double precision.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in (0, 1] — safe for ln().
+    #[inline]
+    pub fn f64_open(&mut self) -> f64 {
+        1.0 - self.f64()
+    }
+
+    /// Uniform integer in [0, n). Lemire's method without bias for our sizes.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // 128-bit multiply rejection-free approximation is fine here; use
+        // simple rejection to be exactly unbiased.
+        let zone = u64::MAX - (u64::MAX % n);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return v % n;
+            }
+        }
+    }
+
+    #[inline]
+    pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi > lo);
+        lo + self.below((hi - lo) as u64) as usize
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Exponential with rate `lambda` (mean 1/lambda).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        debug_assert!(lambda > 0.0);
+        -self.f64_open().ln() / lambda
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64_open();
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Normal with mean/std.
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Lognormal parameterized by the *underlying* normal's mu/sigma.
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Poisson-distributed count (Knuth for small mean, PTRS-like normal
+    /// approximation for large mean).
+    pub fn poisson(&mut self, mean: f64) -> u64 {
+        debug_assert!(mean >= 0.0);
+        if mean <= 0.0 {
+            return 0;
+        }
+        if mean < 30.0 {
+            let l = (-mean).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        }
+        // Normal approximation with continuity correction (fine for rates
+        // used in serving sims).
+        let v = self.normal_ms(mean, mean.sqrt()).round();
+        if v < 0.0 {
+            0
+        } else {
+            v as u64
+        }
+    }
+
+    /// Sample an index from unnormalized weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        debug_assert!(total > 0.0);
+        let mut x = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x < 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Sample `k` distinct indices from weights (routing top-k without
+    /// replacement, used by the Monte-Carlo expert router).
+    pub fn weighted_distinct(&mut self, weights: &[f64], k: usize, out: &mut Vec<usize>) {
+        out.clear();
+        debug_assert!(k <= weights.len());
+        let mut w = weights.to_vec();
+        for _ in 0..k {
+            let i = self.categorical(&w);
+            out.push(i);
+            w[i] = 0.0;
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Solve (mu, sigma) of a lognormal from target mean and p90.
+///
+/// mean = exp(mu + sigma^2/2), p90 = exp(mu + 1.2816 * sigma).
+/// Used to fit the paper's Table 4 dataset statistics.
+pub fn lognormal_from_mean_p90(mean: f64, p90: f64) -> (f64, f64) {
+    const Z90: f64 = 1.281_551_565_544_6;
+    // ln(p90) - ln(mean) = z*sigma - sigma^2/2  -> solve quadratic in sigma.
+    let d = p90.ln() - mean.ln();
+    // sigma^2/2 - z*sigma + d = 0 -> sigma = z - sqrt(z^2 - 2d)
+    let disc = (Z90 * Z90 - 2.0 * d).max(0.0);
+    let sigma = (Z90 - disc.sqrt()).max(1e-6);
+    let mu = mean.ln() - sigma * sigma / 2.0;
+    (mu, sigma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_is_bounded_and_hits_all() {
+        let mut r = Rng::new(4);
+        let mut seen = [false; 7];
+        for _ in 0..10_000 {
+            seen[r.below(7) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::new(5);
+        let n = 200_000;
+        let mean: f64 = (0..n).map(|_| r.exponential(2.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(6);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn poisson_small_and_large_mean() {
+        let mut r = Rng::new(7);
+        for &m in &[0.5, 3.0, 80.0] {
+            let n = 50_000;
+            let mean = (0..n).map(|_| r.poisson(m)).sum::<u64>() as f64 / n as f64;
+            assert!((mean - m).abs() / m < 0.05, "target={m} got={mean}");
+        }
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Rng::new(8);
+        let w = [1.0, 0.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..40_000 {
+            counts[r.categorical(&w)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let ratio = counts[2] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.3, "ratio={ratio}");
+    }
+
+    #[test]
+    fn weighted_distinct_no_dupes() {
+        let mut r = Rng::new(9);
+        let w = vec![1.0; 16];
+        let mut out = Vec::new();
+        for _ in 0..500 {
+            r.weighted_distinct(&w, 8, &mut out);
+            let mut sorted = out.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 8);
+        }
+    }
+
+    #[test]
+    fn lognormal_fit_matches_targets_arxiv() {
+        // Paper Table 4: arXiv input mean 9194, p90 17152 — exactly
+        // representable by a lognormal (p90/mean < exp(z90^2/2)).
+        let (mu, sigma) = lognormal_from_mean_p90(9194.0, 17152.0);
+        let mut r = Rng::new(10);
+        let n = 300_000;
+        let mut xs: Vec<f64> = (0..n).map(|_| r.lognormal(mu, sigma)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p90 = xs[(0.9 * n as f64) as usize];
+        assert!((mean - 9194.0).abs() / 9194.0 < 0.03, "mean={mean}");
+        assert!((p90 - 17152.0).abs() / 17152.0 < 0.03, "p90={p90}");
+    }
+
+    #[test]
+    fn lognormal_fit_sharegpt_clamps_sigma() {
+        // ShareGPT's p90/mean = 2.43 exceeds the lognormal maximum
+        // exp(z90^2/2) = 2.27, so the fit clamps sigma = z90 and matches the
+        // mean exactly while p90 lands as close as the family allows (~7%).
+        let (mu, sigma) = lognormal_from_mean_p90(2340.0, 5696.0);
+        assert!((sigma - 1.2815515655446).abs() < 1e-9);
+        let mut r = Rng::new(10);
+        let n = 300_000;
+        let mut xs: Vec<f64> = (0..n).map(|_| r.lognormal(mu, sigma)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p90 = xs[(0.9 * n as f64) as usize];
+        assert!((mean - 2340.0).abs() / 2340.0 < 0.03, "mean={mean}");
+        assert!((p90 - 5696.0).abs() / 5696.0 < 0.10, "p90={p90}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(11);
+        let mut xs: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

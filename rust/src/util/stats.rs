@@ -1,0 +1,250 @@
+//! Latency/throughput statistics: exact percentiles, streaming moments,
+//! and fixed-bin histograms. Used by the metrics recorders and reports.
+
+/// Collects samples and answers mean/percentile queries exactly.
+///
+/// Serving sims produce at most a few million samples per run, so exact
+/// (sort-on-demand, cached) percentiles are both simplest and correct —
+/// p99 tail behaviour is the paper's headline metric, and approximate
+/// sketches would add avoidable error.
+#[derive(Clone, Debug, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn extend_from(&mut self, other: &Samples) {
+        self.xs.extend_from_slice(&other.xs);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.xs.iter().sum()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.xs.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.xs.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / self.xs.len() as f64)
+            .sqrt()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.xs
+                .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            self.sorted = true;
+        }
+    }
+
+    /// Percentile with linear interpolation (q in [0,1]).
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.ensure_sorted();
+        let n = self.xs.len();
+        if n == 1 {
+            return self.xs[0];
+        }
+        let pos = q.clamp(0.0, 1.0) * (n - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        let frac = pos - lo as f64;
+        self.xs[lo] * (1.0 - frac) + self.xs[hi] * frac
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(0.50)
+    }
+    pub fn p90(&mut self) -> f64 {
+        self.percentile(0.90)
+    }
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(0.99)
+    }
+
+    /// Fraction of samples <= threshold (SLO attainment per metric).
+    pub fn fraction_leq(&mut self, threshold: f64) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.ensure_sorted();
+        let idx = self.xs.partition_point(|&x| x <= threshold);
+        idx as f64 / self.xs.len() as f64
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.xs
+    }
+}
+
+/// Streaming mean/count without storing samples (hot-loop friendly).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Running {
+    pub n: u64,
+    pub sum: f64,
+    pub max: f64,
+}
+
+impl Running {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        if x > self.max || self.n == 1 {
+            self.max = x;
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+}
+
+/// Fixed-width histogram over [lo, hi); overflow/underflow clamp to edges.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, n_bins: usize) -> Self {
+        assert!(hi > lo && n_bins > 0);
+        Histogram {
+            lo,
+            hi,
+            bins: vec![0; n_bins],
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        let n = self.bins.len();
+        let t = ((x - self.lo) / (self.hi - self.lo) * n as f64) as i64;
+        let idx = t.clamp(0, n as i64 - 1) as usize;
+        self.bins[idx] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.bins.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_exact_small() {
+        let mut s = Samples::new();
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.push(x);
+        }
+        assert_eq!(s.p50(), 3.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(1.0), 5.0);
+        assert!((s.percentile(0.25) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let mut s = Samples::new();
+        s.push(0.0);
+        s.push(10.0);
+        assert!((s.percentile(0.75) - 7.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_std() {
+        let mut s = Samples::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.std() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fraction_leq_matches_naive() {
+        let mut s = Samples::new();
+        for i in 0..100 {
+            s.push(i as f64);
+        }
+        assert!((s.fraction_leq(49.0) - 0.5).abs() < 1e-12);
+        assert_eq!(s.fraction_leq(-1.0), 0.0);
+        assert_eq!(s.fraction_leq(1000.0), 1.0);
+    }
+
+    #[test]
+    fn push_after_percentile_resorts() {
+        let mut s = Samples::new();
+        s.push(5.0);
+        s.push(1.0);
+        assert_eq!(s.p50(), 3.0);
+        s.push(100.0);
+        assert_eq!(s.percentile(1.0), 100.0);
+    }
+
+    #[test]
+    fn histogram_clamps() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.push(-5.0);
+        h.push(0.5);
+        h.push(9.99);
+        h.push(50.0);
+        assert_eq!(h.bins[0], 2);
+        assert_eq!(h.bins[9], 2);
+        assert_eq!(h.total(), 4);
+    }
+
+    #[test]
+    fn running_mean_max() {
+        let mut r = Running::default();
+        for x in [1.0, -2.0, 3.0] {
+            r.push(x);
+        }
+        assert!((r.mean() - (2.0 / 3.0)).abs() < 1e-12);
+        assert_eq!(r.max, 3.0);
+        assert_eq!(r.n, 3);
+    }
+}

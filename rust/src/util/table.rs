@@ -1,0 +1,204 @@
+//! Aligned text table / series printers for report output.
+//!
+//! Every paper table and figure regenerator formats through this module so
+//! the output is consistent and diffable (report_regression.rs snapshots).
+
+/// Column-aligned table builder.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str) -> Self {
+        Table {
+            title: title.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn header(mut self, cols: &[&str]) -> Self {
+        self.header = cols.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn rows_len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self
+            .header
+            .len()
+            .max(self.rows.iter().map(|r| r.len()).max().unwrap_or(0));
+        let mut widths = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = widths[i].max(h.len());
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (i, w) in widths.iter().enumerate() {
+                let cell = cells.get(i).map(String::as_str).unwrap_or("");
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{cell:>w$}", w = w));
+            }
+            line.push('\n');
+            line
+        };
+        if !self.header.is_empty() {
+            out.push_str(&fmt_row(&self.header, &widths));
+            let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+            out.push_str(&"-".repeat(total));
+            out.push('\n');
+        }
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format helpers used throughout reports.
+pub fn f1(x: f64) -> String {
+    format!("{x:.1}")
+}
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+pub fn gb(bytes: f64) -> String {
+    format!("{:.1}", bytes / 1e9)
+}
+pub fn tb(bytes: f64) -> String {
+    format!("{:.1}", bytes / 1e12)
+}
+pub fn ms(seconds: f64) -> String {
+    format!("{:.1}", seconds * 1e3)
+}
+
+/// Simple ASCII line chart for "figure" reproductions (e.g. Fig 5 token
+/// generation over time). `series` = (label, points(x, y)).
+pub fn ascii_chart(
+    title: &str,
+    series: &[(&str, Vec<(f64, f64)>)],
+    width: usize,
+    height: usize,
+) -> String {
+    let mut out = format!("== {title} ==\n");
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for (_, pts) in series {
+        for &(x, y) in pts {
+            xmin = xmin.min(x);
+            xmax = xmax.max(x);
+            ymin = ymin.min(y);
+            ymax = ymax.max(y);
+        }
+    }
+    if !xmin.is_finite() || xmax <= xmin {
+        return out + "(no data)\n";
+    }
+    if ymax <= ymin {
+        ymax = ymin + 1.0;
+    }
+    let marks = ['*', '+', 'o', 'x', '#'];
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        for &(x, y) in pts {
+            let cx = (((x - xmin) / (xmax - xmin)) * (width - 1) as f64).round() as usize;
+            let cy = (((y - ymin) / (ymax - ymin)) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            grid[row][cx.min(width - 1)] = marks[si % marks.len()];
+        }
+    }
+    for (si, (label, _)) in series.iter().enumerate() {
+        out.push_str(&format!("  {} = {}\n", marks[si % marks.len()], label));
+    }
+    out.push_str(&format!("y: {ymin:.1} .. {ymax:.1}\n"));
+    for row in grid {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str(&format!("x: {xmin:.2} .. {xmax:.2}\n"));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aligns_columns() {
+        let mut t = Table::new("t").header(&["a", "longcol"]);
+        t.row(&["1".into(), "2".into()]);
+        t.row(&["333".into(), "4".into()]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert!(lines[1].contains("  a  longcol"));
+        assert!(lines[3].ends_with("      2"));
+        // All data lines have the same width.
+        assert_eq!(lines[3].len(), lines[4].len());
+    }
+
+    #[test]
+    fn handles_ragged_rows() {
+        let mut t = Table::new("").header(&["a", "b", "c"]);
+        t.row(&["1".into()]);
+        let r = t.render();
+        assert!(r.contains('1'));
+    }
+
+    #[test]
+    fn chart_renders_points() {
+        let s = vec![("up", vec![(0.0, 0.0), (1.0, 1.0)])];
+        let c = ascii_chart("test", &s, 20, 5);
+        assert!(c.contains('*'));
+        assert!(c.contains("x: 0.00 .. 1.00"));
+    }
+
+    #[test]
+    fn chart_empty_series_safe() {
+        let s: Vec<(&str, Vec<(f64, f64)>)> = vec![("e", vec![])];
+        let c = ascii_chart("t", &s, 10, 3);
+        assert!(c.contains("no data"));
+    }
+
+    #[test]
+    fn format_helpers() {
+        assert_eq!(f2(1.234), "1.23");
+        assert_eq!(pct(0.905), "90.5%");
+        assert_eq!(tb(2.5e12), "2.5");
+        assert_eq!(ms(0.0325), "32.5");
+    }
+}

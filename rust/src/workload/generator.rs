@@ -1,0 +1,223 @@
+//! Workload generator: Poisson arrival process + dataset length models.
+//!
+//! The paper evaluates on ShareGPT (multi-turn chat) and arXiv Summarization
+//! (long-document) with the Table 4 statistics:
+//!
+//! | dataset  | in mean | in p90 | in std | out mean | out p90 | out std |
+//! |----------|---------|--------|--------|----------|---------|---------|
+//! | ShareGPT |   2340  |  5696  |  2088  |   438    |   834   |   265   |
+//! | arXiv    |   9194  | 17152  |  5754  |   231    |   386   |   104   |
+//!
+//! Input lengths are lognormal fitted to (mean, p90); output lengths are
+//! lognormal fitted likewise, clamped to sane ranges. Arrivals are Poisson
+//! (exponential inter-arrival gaps), the paper's traffic model (§5.1).
+
+use crate::config::{Dataset, WorkloadSpec};
+use crate::util::rng::{lognormal_from_mean_p90, Rng};
+use crate::workload::trace::{Request, Trace};
+
+/// Length model of one dataset (lognormal in/out with clamps).
+#[derive(Clone, Copy, Debug)]
+pub struct DatasetModel {
+    pub in_mu: f64,
+    pub in_sigma: f64,
+    pub out_mu: f64,
+    pub out_sigma: f64,
+    pub in_min: u32,
+    pub in_max: u32,
+    pub out_min: u32,
+    pub out_max: u32,
+}
+
+impl DatasetModel {
+    pub fn for_dataset(dataset: Dataset) -> DatasetModel {
+        match dataset {
+            Dataset::ShareGpt => {
+                let (im, is) = lognormal_from_mean_p90(2340.0, 5696.0);
+                let (om, os) = lognormal_from_mean_p90(438.0, 834.0);
+                DatasetModel {
+                    in_mu: im,
+                    in_sigma: is,
+                    out_mu: om,
+                    out_sigma: os,
+                    in_min: 16,
+                    in_max: 16384,
+                    out_min: 8,
+                    out_max: 2048,
+                }
+            }
+            Dataset::Arxiv => {
+                let (im, is) = lognormal_from_mean_p90(9194.0, 17152.0);
+                let (om, os) = lognormal_from_mean_p90(231.0, 386.0);
+                DatasetModel {
+                    in_mu: im,
+                    in_sigma: is,
+                    out_mu: om,
+                    out_sigma: os,
+                    in_min: 512,
+                    in_max: 32768,
+                    out_min: 16,
+                    out_max: 1024,
+                }
+            }
+            Dataset::Fixed => DatasetModel {
+                in_mu: 0.0,
+                in_sigma: 0.0,
+                out_mu: 0.0,
+                out_sigma: 0.0,
+                in_min: 1,
+                in_max: u32::MAX,
+                out_min: 1,
+                out_max: u32::MAX,
+            },
+        }
+    }
+
+    pub fn sample_input(&self, rng: &mut Rng) -> u32 {
+        let x = rng.lognormal(self.in_mu, self.in_sigma);
+        (x.round() as u32).clamp(self.in_min, self.in_max)
+    }
+
+    pub fn sample_output(&self, rng: &mut Rng) -> u32 {
+        let x = rng.lognormal(self.out_mu, self.out_sigma);
+        (x.round() as u32).clamp(self.out_min, self.out_max)
+    }
+}
+
+/// Generator producing a deterministic trace from a `WorkloadSpec`.
+#[derive(Clone, Debug)]
+pub struct WorkloadGen {
+    pub spec: WorkloadSpec,
+}
+
+impl WorkloadGen {
+    pub fn new(spec: WorkloadSpec) -> Self {
+        WorkloadGen { spec }
+    }
+
+    pub fn generate(&self) -> Trace {
+        let mut rng = Rng::new(self.spec.seed);
+        let model = DatasetModel::for_dataset(self.spec.dataset);
+        let mut t = 0.0;
+        let mut reqs = Vec::with_capacity(self.spec.n_requests);
+        for id in 0..self.spec.n_requests as u64 {
+            if id > 0 {
+                t += rng.exponential(self.spec.rate);
+            }
+            let (input_len, output_len) = match self.spec.dataset {
+                Dataset::Fixed => (self.spec.fixed_input, self.spec.fixed_output),
+                _ => (model.sample_input(&mut rng), model.sample_output(&mut rng)),
+            };
+            reqs.push(Request {
+                id,
+                arrival_s: t,
+                input_len,
+                output_len,
+            });
+        }
+        Trace::new(reqs)
+    }
+
+    /// Generate a trace scaled to the TinyMoE testbed: same *shape* as the
+    /// dataset but lengths divided by `scale` and clamped to the runtime's
+    /// max sequence budget. Used by the real-serving example.
+    pub fn generate_scaled(&self, scale: f64, max_total: u32) -> Trace {
+        let mut trace = self.generate();
+        for r in &mut trace.requests {
+            r.input_len = ((r.input_len as f64 / scale).round() as u32).max(4);
+            r.output_len = ((r.output_len as f64 / scale).round() as u32).max(2);
+            // Keep input + output within the pool's max_seq.
+            if r.input_len + r.output_len > max_total {
+                let over = r.input_len + r.output_len - max_total;
+                r.input_len = r.input_len.saturating_sub(over).max(4);
+                if r.input_len + r.output_len > max_total {
+                    r.output_len = max_total - r.input_len;
+                }
+            }
+        }
+        trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(dataset: Dataset, rate: f64, n: usize) -> WorkloadSpec {
+        WorkloadSpec::new(dataset, rate, n)
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = WorkloadGen::new(spec(Dataset::ShareGpt, 2.0, 100));
+        let a = g.generate();
+        let b = g.generate();
+        assert_eq!(a.requests, b.requests);
+    }
+
+    #[test]
+    fn arrival_rate_matches() {
+        let n = 20_000;
+        let g = WorkloadGen::new(spec(Dataset::Arxiv, 1.3, n));
+        let t = g.generate();
+        let measured = (n - 1) as f64 / t.duration_s();
+        assert!(
+            (measured - 1.3).abs() / 1.3 < 0.05,
+            "rate = {measured:.3}"
+        );
+    }
+
+    #[test]
+    fn sharegpt_length_stats_match_table4() {
+        let g = WorkloadGen::new(spec(Dataset::ShareGpt, 1.0, 30_000));
+        let t = g.generate();
+        let mean_in = t.total_input_tokens() as f64 / t.len() as f64;
+        let mean_out = t.total_output_tokens() as f64 / t.len() as f64;
+        // clamping trims the tail a bit; allow 12%
+        assert!((mean_in - 2340.0).abs() / 2340.0 < 0.12, "in={mean_in}");
+        assert!((mean_out - 438.0).abs() / 438.0 < 0.12, "out={mean_out}");
+        // ratio input:output ≈ 6:1 (paper §5.1)
+        let ratio = mean_in / mean_out;
+        assert!((4.0..8.0).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn arxiv_ratio_about_forty() {
+        let g = WorkloadGen::new(spec(Dataset::Arxiv, 1.0, 30_000));
+        let t = g.generate();
+        let mean_in = t.total_input_tokens() as f64 / t.len() as f64;
+        let mean_out = t.total_output_tokens() as f64 / t.len() as f64;
+        let ratio = mean_in / mean_out;
+        // Paper: "input length is about forty times the output length".
+        assert!((25.0..55.0).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn arxiv_p90_close_to_table4() {
+        let g = WorkloadGen::new(spec(Dataset::Arxiv, 1.0, 30_000));
+        let t = g.generate();
+        let mut ins: Vec<f64> = t.requests.iter().map(|r| r.input_len as f64).collect();
+        ins.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p90 = ins[(0.9 * ins.len() as f64) as usize];
+        assert!((p90 - 17152.0).abs() / 17152.0 < 0.15, "p90={p90}");
+    }
+
+    #[test]
+    fn fixed_dataset_uses_spec_lengths() {
+        let mut s = spec(Dataset::Fixed, 1.0, 10);
+        s.fixed_input = 777;
+        s.fixed_output = 33;
+        let t = WorkloadGen::new(s).generate();
+        assert!(t.requests.iter().all(|r| r.input_len == 777 && r.output_len == 33));
+    }
+
+    #[test]
+    fn scaled_trace_fits_budget() {
+        let g = WorkloadGen::new(spec(Dataset::Arxiv, 5.0, 200));
+        let t = g.generate_scaled(128.0, 150);
+        for r in &t.requests {
+            assert!(r.input_len + r.output_len <= 150);
+            assert!(r.input_len >= 4 && r.output_len >= 1);
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Workload generation: Poisson arrivals + dataset length models fitted to
+//! the paper's Table 4 statistics, with deterministic trace record/replay.
+
+pub mod generator;
+pub mod trace;
+
+pub use generator::{DatasetModel, WorkloadGen};
+pub use trace::{Request, Trace};

@@ -1,0 +1,123 @@
+//! Request traces: the unit of work every scheduler consumes.
+
+/// One inference request as the coordinator sees it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time (seconds from trace start).
+    pub arrival_s: f64,
+    /// Prompt length in tokens.
+    pub input_len: u32,
+    /// Number of tokens to generate (oracle for simulation; the real server
+    /// uses it as max_new_tokens).
+    pub output_len: u32,
+}
+
+/// An ordered-by-arrival batch of requests.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub requests: Vec<Request>,
+}
+
+impl Trace {
+    pub fn new(requests: Vec<Request>) -> Self {
+        let mut t = Trace { requests };
+        t.requests
+            .sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        t
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    pub fn total_input_tokens(&self) -> u64 {
+        self.requests.iter().map(|r| r.input_len as u64).sum()
+    }
+
+    pub fn total_output_tokens(&self) -> u64 {
+        self.requests.iter().map(|r| r.output_len as u64).sum()
+    }
+
+    pub fn duration_s(&self) -> f64 {
+        self.requests.last().map(|r| r.arrival_s).unwrap_or(0.0)
+    }
+
+    /// Serialize to a simple CSV (id,arrival,input,output) for replay.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("id,arrival_s,input_len,output_len\n");
+        for r in &self.requests {
+            s.push_str(&format!(
+                "{},{:.6},{},{}\n",
+                r.id, r.arrival_s, r.input_len, r.output_len
+            ));
+        }
+        s
+    }
+
+    pub fn from_csv(text: &str) -> Result<Trace, String> {
+        let mut reqs = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            if i == 0 || line.trim().is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = line.split(',').collect();
+            if parts.len() != 4 {
+                return Err(format!("line {i}: expected 4 fields"));
+            }
+            reqs.push(Request {
+                id: parts[0].parse().map_err(|e| format!("line {i}: {e}"))?,
+                arrival_s: parts[1].parse().map_err(|e| format!("line {i}: {e}"))?,
+                input_len: parts[2].parse().map_err(|e| format!("line {i}: {e}"))?,
+                output_len: parts[3].parse().map_err(|e| format!("line {i}: {e}"))?,
+            });
+        }
+        Ok(Trace::new(reqs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, t: f64) -> Request {
+        Request {
+            id,
+            arrival_s: t,
+            input_len: 10,
+            output_len: 5,
+        }
+    }
+
+    #[test]
+    fn sorts_by_arrival() {
+        let t = Trace::new(vec![req(0, 2.0), req(1, 1.0)]);
+        assert_eq!(t.requests[0].id, 1);
+        assert_eq!(t.duration_s(), 2.0);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let t = Trace::new(vec![req(3, 0.25), req(4, 1.5)]);
+        let csv = t.to_csv();
+        let t2 = Trace::from_csv(&csv).unwrap();
+        assert_eq!(t.requests, t2.requests);
+    }
+
+    #[test]
+    fn csv_rejects_malformed() {
+        assert!(Trace::from_csv("id,arrival_s,input_len,output_len\n1,2\n").is_err());
+        assert!(Trace::from_csv("id,arrival_s,input_len,output_len\nx,0,1,1\n").is_err());
+    }
+
+    #[test]
+    fn totals() {
+        let t = Trace::new(vec![req(0, 0.0), req(1, 1.0)]);
+        assert_eq!(t.total_input_tokens(), 20);
+        assert_eq!(t.total_output_tokens(), 10);
+    }
+}

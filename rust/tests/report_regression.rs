@@ -1,0 +1,77 @@
+//! Report regression: the table/figure regenerators must (a) run, (b) keep
+//! the paper's directional claims true at reduced n, (c) be deterministic.
+
+use layered_prefill::report;
+
+#[test]
+fn table1_matches_paper_direction() {
+    let out = report::tables::table1(10);
+    // Coverage must increase monotonically down the printed rows.
+    let vals: Vec<f64> = out
+        .lines()
+        .skip(2)
+        .filter(|l| !l.trim_start().starts_with('#'))
+        .filter_map(|l| {
+            let cols: Vec<&str> = l.split_whitespace().collect();
+            if cols.len() >= 3 {
+                cols[2].parse().ok()
+            } else {
+                None
+            }
+        })
+        .collect();
+    assert!(vals.len() >= 9, "rows: {vals:?}");
+    for w in vals.windows(2) {
+        assert!(w[1] >= w[0] - 1e-9, "coverage not monotone: {vals:?}");
+    }
+    assert!((vals[0] - 6.25).abs() < 0.1, "batch-1 coverage {}", vals[0]);
+}
+
+#[test]
+fn fig2_load_decreases_with_chunk_size() {
+    let out = report::figures::fig2();
+    let loads: Vec<f64> = out
+        .lines()
+        .filter(|l| {
+            let c: Vec<&str> = l.split_whitespace().collect();
+            c.len() >= 5 && c[0].chars().all(|ch| ch.is_ascii_digit())
+        })
+        .filter_map(|l| l.split_whitespace().nth(1)?.parse().ok())
+        .collect();
+    assert_eq!(loads.len(), 5, "{out}");
+    for w in loads.windows(2) {
+        assert!(w[1] < w[0], "MoE load must fall with chunk size: {loads:?}");
+    }
+    // Paper: below ~100 GB by 4096-8192.
+    assert!(loads[4] < 100.0, "8192-chunk load {} GB", loads[4]);
+}
+
+#[test]
+fn reports_are_deterministic() {
+    let a = report::tables::table6(15);
+    let b = report::tables::table6(15);
+    assert_eq!(a, b);
+    let f = report::figures::fig5(12);
+    let g = report::figures::fig5(12);
+    assert_eq!(f, g);
+}
+
+#[test]
+fn fig5_layered_lower_e2e() {
+    let out = report::figures::fig5(25);
+    // "mean E2E latency: chunked X, layered Y (Z% lower)"
+    let line = out
+        .lines()
+        .find(|l| l.starts_with("mean E2E"))
+        .expect("E2E line")
+        .split_once(':')
+        .unwrap()
+        .1; // strip the label ("E2E" itself contains a digit)
+    let nums: Vec<f64> = line
+        .split(|c: char| !c.is_ascii_digit() && c != '.')
+        .filter(|s| !s.is_empty())
+        .filter_map(|s| s.parse().ok())
+        .collect();
+    assert!(nums.len() >= 2, "{line}");
+    assert!(nums[1] < nums[0], "layered must lower E2E: {line}");
+}

@@ -1,0 +1,163 @@
+//! Runtime numerics: replay artifacts/golden.json through the compiled
+//! executables and require EXACT greedy-token agreement with the python
+//! reference (which ran the same chunked per-layer path in JAX).
+//!
+//! Gated on `make artifacts` having been run.
+
+use layered_prefill::runtime::{artifacts_available, artifacts_dir, RuntimeEngine};
+use layered_prefill::util::json::{parse, Json};
+
+fn load_golden() -> Option<(Vec<i32>, usize, Vec<i32>, Vec<(usize, usize)>)> {
+    let path = artifacts_dir().join("golden.json");
+    let text = std::fs::read_to_string(path).ok()?;
+    let j = parse(&text).ok()?;
+    let prompt: Vec<i32> = j
+        .get("prompt")?
+        .as_arr()?
+        .iter()
+        .filter_map(Json::as_i64)
+        .map(|x| x as i32)
+        .collect();
+    let n_decode = j.get("n_decode")?.as_usize()?;
+    let tokens: Vec<i32> = j
+        .get("tokens")?
+        .as_arr()?
+        .iter()
+        .filter_map(Json::as_i64)
+        .map(|x| x as i32)
+        .collect();
+    let plan: Vec<(usize, usize)> = j
+        .get("chunk_plan")?
+        .as_arr()?
+        .iter()
+        .filter_map(|p| {
+            let a = p.as_arr()?;
+            Some((a[0].as_usize()?, a[1].as_usize()?))
+        })
+        .collect();
+    Some((prompt, n_decode, tokens, plan))
+}
+
+#[test]
+fn golden_generation_matches_python() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+    let (prompt, n_decode, expect, plan) = load_golden().expect("golden.json");
+    let engine = RuntimeEngine::load(&artifacts_dir()).expect("engine load");
+    let mut pools = engine.new_pools().unwrap();
+    let n_layers = engine.n_layers();
+
+    // Prefill, chunk by chunk, each chunk through all layers (slot 0).
+    let mut pos = 0usize;
+    let mut last_hidden = None;
+    for (size, real) in plan {
+        let mut ids = vec![0i32; size];
+        ids[..real].copy_from_slice(&prompt[pos..pos + real]);
+        let mut h = engine.embed(&ids).unwrap();
+        for li in 0..n_layers {
+            h = engine
+                .layer_prefill(li, size, &h, &mut pools, 0, pos as i32)
+                .unwrap();
+        }
+        pos += real;
+        last_hidden = Some(engine.hidden_row(&h, real - 1).unwrap());
+    }
+
+    let h1 = engine.stack_rows(&[last_hidden.unwrap()], 1).unwrap();
+    let first = engine.lm_head(&h1).unwrap()[0];
+    let mut got = vec![first];
+
+    // Greedy decode.
+    let mut cur_len = prompt.len() as i32;
+    let mut tok = first;
+    for _ in 0..n_decode - 1 {
+        let h = engine.embed(&[tok]).unwrap();
+        let mut h = h;
+        for li in 0..n_layers {
+            h = engine
+                .layer_decode(li, &h, &mut pools, &[0], &[cur_len])
+                .unwrap();
+        }
+        tok = engine.lm_head(&h).unwrap()[0];
+        got.push(tok);
+        cur_len += 1;
+    }
+
+    assert_eq!(got, expect, "greedy tokens must match python exactly");
+}
+
+#[test]
+fn engine_rejects_uncompiled_shapes() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let engine = RuntimeEngine::load(&artifacts_dir()).expect("engine load");
+    assert!(engine.embed(&[1i32; 3]).is_err()); // 3 not a compiled size
+    let mut pools = engine.new_pools().unwrap();
+    let h = engine.embed(&[1i32; 16]).unwrap();
+    // chunk size 17 not compiled
+    assert!(engine.layer_prefill(0, 17, &h, &mut pools, 0, 0).is_err());
+}
+
+#[test]
+fn decode_batch_variants_agree_with_single() {
+    // Running two independent requests as a batch of 2 must produce the
+    // same tokens as two runs of batch 1 (slot isolation + padding proof).
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let engine = RuntimeEngine::load(&artifacts_dir()).expect("engine load");
+    let n_layers = engine.n_layers();
+    let scratch = engine.manifest.model.scratch_slot() as i32;
+
+    let prompts: [Vec<i32>; 2] = [
+        (1..17).collect::<Vec<i32>>(),
+        (40..56).collect::<Vec<i32>>(),
+    ];
+
+    // Path A: each request alone (fresh pools), batch-1 decode.
+    let mut solo_tokens = Vec::new();
+    for p in &prompts {
+        let mut pools = engine.new_pools().unwrap();
+        let mut h = engine.embed(p).unwrap();
+        for li in 0..n_layers {
+            h = engine.layer_prefill(li, 16, &h, &mut pools, 0, 0).unwrap();
+        }
+        let hrow = engine.hidden_row(&h, 15).unwrap();
+        let t0 = engine.lm_head(&engine.stack_rows(&[hrow], 1).unwrap()).unwrap()[0];
+        let mut h = engine.embed(&[t0]).unwrap();
+        for li in 0..n_layers {
+            h = engine.layer_decode(li, &h, &mut pools, &[0], &[16]).unwrap();
+        }
+        let t1 = engine.lm_head(&h).unwrap()[0];
+        solo_tokens.push((t0, t1));
+    }
+
+    // Path B: both in one pool (slots 0 and 1), decode as padded batch of 4.
+    let mut pools = engine.new_pools().unwrap();
+    for (slot, p) in prompts.iter().enumerate() {
+        let mut h = engine.embed(p).unwrap();
+        for li in 0..n_layers {
+            h = engine
+                .layer_prefill(li, 16, &h, &mut pools, slot as i32, 0)
+                .unwrap();
+        }
+        let hrow = engine.hidden_row(&h, 15).unwrap();
+        let t0 = engine.lm_head(&engine.stack_rows(&[hrow], 1).unwrap()).unwrap()[0];
+        assert_eq!(t0, solo_tokens[slot].0, "first token slot {slot}");
+    }
+    let ids = [solo_tokens[0].0, solo_tokens[1].0, 0, 0];
+    let mut h = engine.embed(&ids).unwrap();
+    let slots = [0, 1, scratch, scratch];
+    let lens = [16, 16, 0, 0];
+    for li in 0..n_layers {
+        h = engine.layer_decode(li, &h, &mut pools, &slots, &lens).unwrap();
+    }
+    let toks = engine.lm_head(&h).unwrap();
+    assert_eq!(toks[0], solo_tokens[0].1, "batched decode row 0");
+    assert_eq!(toks[1], solo_tokens[1].1, "batched decode row 1");
+}

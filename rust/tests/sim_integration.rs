@@ -1,0 +1,188 @@
+//! End-to-end simulator integration: chunked vs layered prefill on
+//! paper-scale workloads. These tests assert the *directional* results the
+//! paper reports (who wins, roughly by how much), not exact numbers.
+
+use layered_prefill::config::{
+    Dataset, ModelDesc, Policy, SchedulerConfig, SloSpec, WorkloadSpec,
+};
+use layered_prefill::config::HardwareDesc;
+use layered_prefill::simulator::{simulate, SimOptions};
+use layered_prefill::workload::WorkloadGen;
+
+fn run(
+    model: ModelDesc,
+    dataset: Dataset,
+    policy: Policy,
+    rate: f64,
+    n: usize,
+) -> layered_prefill::metrics::RunMetrics {
+    let trace = WorkloadGen::new(WorkloadSpec::new(dataset, rate, n)).generate();
+    let cfg = SchedulerConfig::preset(policy);
+    let (m, _) = simulate(
+        model,
+        HardwareDesc::h100x2(),
+        &cfg,
+        &trace,
+        SimOptions::default(),
+    );
+    m
+}
+
+#[test]
+fn all_requests_complete_and_conserve_tokens() {
+    for policy in [
+        Policy::Chunked,
+        Policy::Layered,
+        Policy::Hybrid,
+        Policy::Orca,
+        Policy::Static,
+    ] {
+        let m = run(ModelDesc::qwen3_30b_a3b(), Dataset::ShareGpt, policy, 2.0, 60);
+        assert_eq!(m.requests.len(), 60, "{policy:?} lost requests");
+        for r in &m.requests {
+            assert_eq!(
+                r.tbts_s.len() as u32 + 1,
+                r.output_len,
+                "{policy:?} req {} token count",
+                r.id
+            );
+            assert!(r.ttft_s > 0.0 && r.finish_s >= r.arrival_s);
+        }
+    }
+}
+
+#[test]
+fn simulation_is_deterministic() {
+    let a = run(ModelDesc::qwen3_30b_a3b(), Dataset::Arxiv, Policy::Layered, 1.3, 40);
+    let b = run(ModelDesc::qwen3_30b_a3b(), Dataset::Arxiv, Policy::Layered, 1.3, 40);
+    assert_eq!(a.requests.len(), b.requests.len());
+    for (x, y) in a.requests.iter().zip(&b.requests) {
+        assert_eq!(x.ttft_s, y.ttft_s);
+        assert_eq!(x.finish_s, y.finish_s);
+    }
+    assert_eq!(a.energy.total_j(), b.energy.total_j());
+}
+
+#[test]
+fn table6_direction_layered_beats_chunked_on_arxiv() {
+    // Paper Table 6 (Qwen, arXiv, 1.3 req/s): layered more than halves mean
+    // TTFT (2.803 -> 1.237 s) and cuts mean TBT (32.9 -> 21.5 ms).
+    let chunked = run(ModelDesc::qwen3_30b_a3b(), Dataset::Arxiv, Policy::Chunked, 1.3, 100);
+    let layered = run(ModelDesc::qwen3_30b_a3b(), Dataset::Arxiv, Policy::Layered, 1.3, 100);
+
+    let c_ttft = chunked.ttft_samples().mean();
+    let l_ttft = layered.ttft_samples().mean();
+    assert!(
+        l_ttft < 0.75 * c_ttft,
+        "layered TTFT {l_ttft:.2}s vs chunked {c_ttft:.2}s"
+    );
+
+    let c_tbt = chunked.tbt_samples().mean();
+    let l_tbt = layered.tbt_samples().mean();
+    assert!(
+        l_tbt < c_tbt,
+        "layered TBT {:.1}ms vs chunked {:.1}ms",
+        l_tbt * 1e3,
+        c_tbt * 1e3
+    );
+}
+
+#[test]
+fn table7_direction_expert_traffic_reduction() {
+    // Paper Table 7: layered cuts expert loads by 39% on arXiv, 12% on
+    // ShareGPT (100 requests). Require >=25% and >=5% respectively, and the
+    // arXiv reduction must exceed the ShareGPT one.
+    let qwen = ModelDesc::qwen3_30b_a3b;
+    let c_arxiv = run(qwen(), Dataset::Arxiv, Policy::Chunked, 1.3, 100);
+    let l_arxiv = run(qwen(), Dataset::Arxiv, Policy::Layered, 1.3, 100);
+    let red_arxiv = 1.0 - l_arxiv.traffic.expert_bytes / c_arxiv.traffic.expert_bytes;
+
+    let c_sg = run(qwen(), Dataset::ShareGpt, Policy::Chunked, 4.0, 100);
+    let l_sg = run(qwen(), Dataset::ShareGpt, Policy::Layered, 4.0, 100);
+    let red_sg = 1.0 - l_sg.traffic.expert_bytes / c_sg.traffic.expert_bytes;
+
+    assert!(red_arxiv > 0.25, "arXiv expert reduction {red_arxiv:.2}");
+    assert!(red_sg > 0.05, "ShareGPT expert reduction {red_sg:.2}");
+    assert!(
+        red_arxiv > red_sg,
+        "arXiv ({red_arxiv:.2}) should beat ShareGPT ({red_sg:.2})"
+    );
+}
+
+#[test]
+fn energy_direction_layered_cheaper_per_token() {
+    // Table 8: at the same rate, layered reduces energy/token by ~8-9%.
+    let c = run(ModelDesc::qwen3_30b_a3b(), Dataset::Arxiv, Policy::Chunked, 1.3, 100);
+    let l = run(ModelDesc::qwen3_30b_a3b(), Dataset::Arxiv, Policy::Layered, 1.3, 100);
+    let ce = c.energy_per_token_mj();
+    let le = l.energy_per_token_mj();
+    assert!(le < ce, "layered {le:.1} vs chunked {ce:.1} mJ/tok");
+}
+
+#[test]
+fn slo_attainment_layered_wider_operating_region() {
+    // Fig 3(a) direction: at a rate where chunked collapses, layered holds.
+    let model = ModelDesc::qwen3_30b_a3b();
+    let slo = SloSpec::paper(&model, Dataset::Arxiv);
+    let c = run(model.clone(), Dataset::Arxiv, Policy::Chunked, 1.6, 120);
+    let l = run(model, Dataset::Arxiv, Policy::Layered, 1.6, 120);
+    let cs = c.slo(&slo);
+    let ls = l.slo(&slo);
+    assert!(
+        ls.full >= cs.full,
+        "layered {:.2} vs chunked {:.2} at 1.6 req/s",
+        ls.full,
+        cs.full
+    );
+}
+
+#[test]
+fn orca_suffers_tbt_spikes_on_long_prompts() {
+    // §2.3: whole-prompt prefill stalls decode -> p99 TBT far above
+    // chunked/layered on long-prompt workloads.
+    let model = ModelDesc::qwen3_30b_a3b();
+    let o = run(model.clone(), Dataset::Arxiv, Policy::Orca, 1.0, 60);
+    let l = run(model, Dataset::Arxiv, Policy::Layered, 1.0, 60);
+    // Stalls are rare relative to total decode steps (so p99 can miss them)
+    // but their MAGNITUDE is the whole-prompt prefill time: compare the
+    // worst-case stall against layered's bounded iterations.
+    let o_max = o.tbt_samples().max();
+    let l_max = l.tbt_samples().max();
+    assert!(
+        o_max > 2.5 * l_max,
+        "orca max TBT {:.0}ms vs layered {:.0}ms",
+        o_max * 1e3,
+        l_max * 1e3
+    );
+}
+
+#[test]
+fn hybrid_matches_layered_traffic_with_bounded_iterations() {
+    // §4.3: hybrid with a large chunk keeps expert traffic near layered
+    // (far below chunked-512) while splitting very long prompts.
+    let qwen = ModelDesc::qwen3_30b_a3b;
+    let c = run(qwen(), Dataset::Arxiv, Policy::Chunked, 1.0, 60);
+    let h = run(qwen(), Dataset::Arxiv, Policy::Hybrid, 1.0, 60);
+    let l = run(qwen(), Dataset::Arxiv, Policy::Layered, 1.0, 60);
+    assert!(h.traffic.expert_bytes < 0.7 * c.traffic.expert_bytes);
+    assert!(h.traffic.expert_bytes < 1.6 * l.traffic.expert_bytes);
+}
+
+#[test]
+fn gpt_model_also_improves() {
+    // Fig 3(b)/(d): GPT-OSS-20B shows the same direction.
+    let gpt = ModelDesc::gpt_oss_20b;
+    let c = run(gpt(), Dataset::Arxiv, Policy::Chunked, 2.1, 80);
+    let l = run(gpt(), Dataset::Arxiv, Policy::Layered, 2.1, 80);
+    assert!(l.ttft_samples().mean() < c.ttft_samples().mean());
+    assert!(l.traffic.expert_bytes < c.traffic.expert_bytes);
+}
+
+#[test]
+fn makespan_and_throughput_sane() {
+    let m = run(ModelDesc::qwen3_30b_a3b(), Dataset::ShareGpt, Policy::Layered, 3.0, 100);
+    assert!(m.makespan_s > 30.0); // 100 reqs at 3/s >= ~33s
+    assert!(m.gen_throughput() > 0.0);
+    assert!(m.avg_decode_batch > 0.0);
+    assert!(m.iterations > 100);
+}
