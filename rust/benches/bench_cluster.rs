@@ -1,0 +1,48 @@
+//! Bench: router + cluster-core overhead per engine iteration at 1/4/16
+//! replicas. Runs the same ShareGPT-style load per replica through each
+//! router and reports wall-clock per fleet iteration and per routed
+//! request — the cost the cluster layer adds on top of the engines.
+
+use std::time::Instant;
+
+use layered_prefill::cluster::{build_router, Cluster, ReplicaSpec};
+use layered_prefill::config::{Dataset, HardwareDesc, ModelDesc, Policy, WorkloadSpec};
+use layered_prefill::workload::WorkloadGen;
+
+fn main() {
+    let model = ModelDesc::qwen3_30b_a3b();
+    let hw = HardwareDesc::h100x2();
+    println!("replicas router      reqs  fleet-iters   wall (s)  us/iter  us/request");
+    for &n_replicas in &[1usize, 4, 16] {
+        for router_name in ["rr", "least-kv", "slo"] {
+            // Constant per-replica load: 25 requests at 1.5 req/s each.
+            let n_requests = 25 * n_replicas;
+            let rate = 1.5 * n_replicas as f64;
+            let mut wspec = WorkloadSpec::new(Dataset::ShareGpt, rate, n_requests);
+            wspec.seed = 0xBE7C;
+            let trace = WorkloadGen::new(wspec).generate();
+
+            let spec = ReplicaSpec::new(model.clone(), hw.clone(), Policy::Layered);
+            let router = build_router(router_name).expect("router name");
+            let cluster = Cluster::homogeneous(n_replicas, spec, router);
+
+            let t0 = Instant::now();
+            let rep = cluster.run(&trace);
+            let wall = t0.elapsed().as_secs_f64();
+
+            assert_eq!(rep.fleet.requests.len(), n_requests);
+            let iters = rep.fleet.iterations.max(1);
+            println!(
+                "{:8} {:10} {:5} {:12} {:10.3} {:8.2} {:11.2}",
+                n_replicas,
+                router_name,
+                n_requests,
+                iters,
+                wall,
+                wall / iters as f64 * 1e6,
+                wall / n_requests as f64 * 1e6,
+            );
+        }
+    }
+    println!("[bench_cluster] done");
+}

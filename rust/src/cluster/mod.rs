@@ -1,0 +1,362 @@
+//! Multi-replica cluster layer: N independent engine replicas fed by a
+//! request [`Router`], co-simulated against one global arrival stream.
+//!
+//! Each replica is a full engine — its own scheduler policy, engine state,
+//! KV manager, and [`SimExecutor`] clock — running the shared core loop.
+//! The cluster advances every replica to each request's arrival instant
+//! (`EngineCore::run_until`), snapshots replica load into [`ReplicaView`]s,
+//! lets the router pick a target, and queues the request there; after the
+//! last arrival, all replicas drain. Routing decisions therefore see the
+//! true engine state at arrival time, exactly like a production front-end
+//! polling its backends.
+//!
+//! Fleets may be heterogeneous (e.g. layered-prefill replicas for long
+//! prompts next to chunked replicas for short ones, steered by
+//! [`SloAware`]); per-replica and fleet-aggregated [`RunMetrics`] come out
+//! the other end. With one replica and any router, the cluster path is
+//! bit-identical to `simulator::simulate` — the acceptance anchor for the
+//! shared core.
+
+pub mod router;
+
+pub use router::{build_router, LeastOutstandingKv, ReplicaView, RoundRobin, Router, SloAware};
+
+use crate::config::{HardwareDesc, ModelDesc, Policy, SchedulerConfig};
+use crate::engine::{CoreOptions, EngineCore, SimExecutor};
+use crate::metrics::RunMetrics;
+use crate::model::WorkAnalytics;
+use crate::sched::{EngineState, Scheduler};
+use crate::simulator::cost::CostModel;
+use crate::simulator::{default_engine_state, SimOptions};
+use crate::workload::Trace;
+
+/// Blueprint for one replica engine.
+#[derive(Clone, Debug)]
+pub struct ReplicaSpec {
+    pub model: ModelDesc,
+    pub hw: HardwareDesc,
+    pub sched: SchedulerConfig,
+}
+
+impl ReplicaSpec {
+    /// Paper-preset replica: the given policy on the given model/hardware.
+    pub fn new(model: ModelDesc, hw: HardwareDesc, policy: Policy) -> Self {
+        ReplicaSpec {
+            model,
+            hw,
+            sched: SchedulerConfig::preset(policy),
+        }
+    }
+}
+
+/// One live replica: scheduler + engine state + simulated executor + core.
+struct Replica {
+    policy: Policy,
+    sched: Box<dyn Scheduler>,
+    state: EngineState,
+    exec: SimExecutor,
+    core: EngineCore,
+}
+
+impl Replica {
+    fn new(spec: &ReplicaSpec, opts: &SimOptions) -> Self {
+        let state = default_engine_state(&spec.model, &spec.hw, &spec.sched);
+        let sched = crate::sched::build(&spec.sched, spec.model.n_layers);
+        let cost = CostModel::new(spec.hw.clone(), WorkAnalytics::new(spec.model.clone()));
+        Replica {
+            policy: spec.sched.policy,
+            sched,
+            state,
+            exec: SimExecutor::new(cost),
+            core: EngineCore::new(CoreOptions {
+                horizon_s: opts.horizon_s,
+                record_token_times: opts.record_token_times,
+                immediate_arrivals: false,
+            }),
+        }
+    }
+
+    fn run_until(&mut self, t: f64) {
+        self.core
+            .run_until(&mut self.exec, self.sched.as_mut(), &mut self.state, Some(t))
+            .expect("sim executor is infallible");
+    }
+
+    fn drain(&mut self) {
+        self.core
+            .drain(&mut self.exec, self.sched.as_mut(), &mut self.state)
+            .expect("sim executor is infallible");
+    }
+
+    fn view(&self, id: usize) -> ReplicaView {
+        let footprint = |ids: &[u64]| -> u64 {
+            ids.iter()
+                .map(|i| {
+                    let r = &self.state.reqs[i].req;
+                    (r.input_len + r.output_len) as u64
+                })
+                .sum()
+        };
+        let in_engine = footprint(&self.state.waiting)
+            + footprint(&self.state.prefilling)
+            + footprint(&self.state.decoding);
+        ReplicaView {
+            id,
+            policy: self.policy,
+            queued: self.core.pending_len(),
+            active: self.state.prefilling.len() + self.state.decoding.len(),
+            outstanding_kv_tokens: self.core.pending_footprint() + in_engine,
+            kv_free_blocks: self.state.kv.free_blocks(),
+            now_s: self.exec.now(),
+        }
+    }
+
+    fn finish(self) -> (RunMetrics, Vec<(u64, Vec<f64>)>) {
+        let Replica { core, mut exec, .. } = self;
+        core.finish(&mut exec)
+    }
+}
+
+/// Outcome of a cluster run.
+#[derive(Clone, Debug)]
+pub struct ClusterReport {
+    /// Per-replica metrics, index-aligned with the fleet's replicas.
+    pub per_replica: Vec<RunMetrics>,
+    /// Policy each replica ran (for heterogeneous-fleet reporting).
+    pub policies: Vec<Policy>,
+    /// (request id, replica index) routing decisions, in arrival order.
+    pub assignments: Vec<(u64, usize)>,
+    /// Fleet-aggregated metrics (requests merged, traffic/energy summed).
+    pub fleet: RunMetrics,
+    /// Per-request token timestamps, fleet-wide (request ids are unique
+    /// across replicas). Populated only under
+    /// `SimOptions::record_token_times`.
+    pub token_times: Vec<(u64, Vec<f64>)>,
+}
+
+impl ClusterReport {
+    /// Requests routed to each replica.
+    pub fn assignment_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.per_replica.len()];
+        for &(_, idx) in &self.assignments {
+            counts[idx] += 1;
+        }
+        counts
+    }
+}
+
+/// N replica engines behind one router.
+pub struct Cluster {
+    specs: Vec<ReplicaSpec>,
+    router: Box<dyn Router>,
+    opts: SimOptions,
+}
+
+impl Cluster {
+    pub fn new(specs: Vec<ReplicaSpec>, router: Box<dyn Router>) -> Self {
+        assert!(!specs.is_empty(), "cluster needs at least one replica");
+        Cluster {
+            specs,
+            router,
+            opts: SimOptions::default(),
+        }
+    }
+
+    /// N identical replicas.
+    pub fn homogeneous(n: usize, spec: ReplicaSpec, router: Box<dyn Router>) -> Self {
+        Cluster::new(vec![spec; n.max(1)], router)
+    }
+
+    pub fn with_options(mut self, opts: SimOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn router_name(&self) -> &'static str {
+        self.router.name()
+    }
+
+    /// Serve `trace` across the fleet: route each arrival against live
+    /// replica state, then drain every replica.
+    pub fn run(mut self, trace: &Trace) -> ClusterReport {
+        let mut replicas: Vec<Replica> = self
+            .specs
+            .iter()
+            .map(|s| Replica::new(s, &self.opts))
+            .collect();
+        let mut assignments = Vec::with_capacity(trace.len());
+
+        for req in &trace.requests {
+            // Advance every replica to this arrival instant so the router
+            // observes true load (iteration-boundary granularity).
+            for r in replicas.iter_mut() {
+                r.run_until(req.arrival_s);
+            }
+            let views: Vec<ReplicaView> =
+                replicas.iter().enumerate().map(|(i, r)| r.view(i)).collect();
+            let idx = self.router.route(req, &views) % replicas.len();
+            replicas[idx].core.push(*req);
+            assignments.push((req.id, idx));
+        }
+
+        for r in replicas.iter_mut() {
+            r.drain();
+        }
+
+        let policies: Vec<Policy> = replicas.iter().map(|r| r.policy).collect();
+        let mut per_replica = Vec::with_capacity(replicas.len());
+        let mut token_times = Vec::new();
+        for r in replicas {
+            let (metrics, times) = r.finish();
+            per_replica.push(metrics);
+            token_times.extend(times);
+        }
+        let fleet = merge_metrics(&per_replica);
+        ClusterReport {
+            per_replica,
+            policies,
+            assignments,
+            fleet,
+            token_times,
+        }
+    }
+}
+
+/// Aggregate per-replica run metrics into fleet metrics: request records
+/// merged (so TTFT/TBT percentiles are fleet-wide), traffic and energy
+/// summed, makespan = max, decode batch averaged busy-time-weighted (each
+/// replica's average is busy-weighted, so the fleet mean must re-weight by
+/// busy seconds, not iteration counts), token timelines merged into one
+/// fleet-cumulative series.
+pub fn merge_metrics(runs: &[RunMetrics]) -> RunMetrics {
+    let mut fleet = RunMetrics::default();
+    let mut batch_weight = 0.0f64;
+    for m in runs {
+        fleet.requests.extend(m.requests.iter().cloned());
+        fleet.traffic.merge(&m.traffic);
+        fleet.energy.merge(&m.energy);
+        fleet.makespan_s = fleet.makespan_s.max(m.makespan_s);
+        fleet.busy_s += m.busy_s;
+        fleet.iterations += m.iterations;
+        batch_weight += m.avg_decode_batch * m.busy_s;
+    }
+    fleet.avg_decode_batch = if fleet.busy_s > 0.0 {
+        batch_weight / fleet.busy_s
+    } else {
+        0.0
+    };
+    fleet.token_timeline = merge_timelines(runs);
+    fleet.requests.sort_by_key(|r| r.id);
+    fleet
+}
+
+/// Merge per-replica cumulative token timelines into one fleet-cumulative
+/// timeline: a time-ordered walk summing each replica's latest count.
+fn merge_timelines(runs: &[RunMetrics]) -> Vec<(f64, u64)> {
+    let mut idx = vec![0usize; runs.len()];
+    let mut last = vec![0u64; runs.len()];
+    let total_events: usize = runs.iter().map(|m| m.token_timeline.len()).sum();
+    let mut out = Vec::with_capacity(total_events);
+    loop {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, m) in runs.iter().enumerate() {
+            if let Some(&(t, _)) = m.token_timeline.get(idx[i]) {
+                let better = match best {
+                    None => true,
+                    Some((_, bt)) => t < bt,
+                };
+                if better {
+                    best = Some((i, t));
+                }
+            }
+        }
+        let Some((i, t)) = best else { break };
+        last[i] = runs[i].token_timeline[idx[i]].1;
+        idx[i] += 1;
+        out.push((t, last.iter().sum()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Dataset;
+    use crate::config::WorkloadSpec;
+    use crate::workload::WorkloadGen;
+
+    fn sharegpt_trace(n: usize, rate: f64) -> Trace {
+        WorkloadGen::new(WorkloadSpec::new(Dataset::ShareGpt, rate, n)).generate()
+    }
+
+    #[test]
+    fn round_robin_spreads_requests_evenly() {
+        let spec = ReplicaSpec::new(
+            ModelDesc::qwen3_30b_a3b(),
+            HardwareDesc::h100x2(),
+            Policy::Layered,
+        );
+        let cluster = Cluster::homogeneous(4, spec, Box::new(RoundRobin::new()));
+        let trace = sharegpt_trace(24, 4.0);
+        let rep = cluster.run(&trace);
+        assert_eq!(rep.assignment_counts(), vec![6, 6, 6, 6]);
+        assert_eq!(rep.fleet.requests.len(), 24);
+        // Every request completes exactly once, fleet-wide.
+        let ids: Vec<u64> = rep.fleet.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..24u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fleet_aggregates_sum_replica_parts() {
+        let spec = ReplicaSpec::new(
+            ModelDesc::qwen3_30b_a3b(),
+            HardwareDesc::h100x2(),
+            Policy::Chunked,
+        );
+        let cluster = Cluster::homogeneous(2, spec, Box::new(RoundRobin::new()));
+        let trace = sharegpt_trace(12, 3.0);
+        let rep = cluster.run(&trace);
+        let n_sum: usize = rep.per_replica.iter().map(|m| m.requests.len()).sum();
+        assert_eq!(rep.fleet.requests.len(), n_sum);
+        let it_sum: u64 = rep.per_replica.iter().map(|m| m.iterations).sum();
+        assert_eq!(rep.fleet.iterations, it_sum);
+        let expert_sum: f64 = rep.per_replica.iter().map(|m| m.traffic.expert_bytes).sum();
+        assert!((rep.fleet.traffic.expert_bytes - expert_sum).abs() < 1e-3);
+        let energy_sum: f64 = rep.per_replica.iter().map(|m| m.energy.total_j()).sum();
+        assert!((rep.fleet.energy.total_j() - energy_sum).abs() < 1e-6);
+        // Timeline is time-sorted and ends at the fleet's total emissions.
+        let tl = &rep.fleet.token_timeline;
+        assert!(tl.windows(2).all(|w| w[0].0 <= w[1].0));
+        let total: u64 = rep
+            .fleet
+            .requests
+            .iter()
+            .map(|r| r.output_len as u64)
+            .sum();
+        assert_eq!(tl.last().unwrap().1, total);
+    }
+
+    #[test]
+    fn heterogeneous_fleet_with_slo_router_completes() {
+        let model = ModelDesc::qwen3_30b_a3b();
+        let hw = HardwareDesc::h100x2();
+        let specs = vec![
+            ReplicaSpec::new(model.clone(), hw.clone(), Policy::Layered),
+            ReplicaSpec::new(model.clone(), hw.clone(), Policy::Chunked),
+        ];
+        let cluster = Cluster::new(specs, Box::new(SloAware::new(2048)));
+        let trace = sharegpt_trace(16, 3.0);
+        let rep = cluster.run(&trace);
+        assert_eq!(rep.fleet.requests.len(), 16);
+        // Long prompts landed on the layered replica, short on chunked.
+        for (rid, idx) in &rep.assignments {
+            let req = trace.requests.iter().find(|r| r.id == *rid).unwrap();
+            let want = if req.input_len >= 2048 { 0 } else { 1 };
+            assert_eq!(*idx, want, "req {rid} len {}", req.input_len);
+        }
+    }
+}

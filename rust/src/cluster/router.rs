@@ -1,0 +1,237 @@
+//! Request routers: pick which replica engine serves each arriving request.
+//!
+//! Routers see a lightweight [`ReplicaView`] snapshot of every replica at
+//! the request's arrival instant (queue depth, outstanding KV footprint,
+//! scheduling policy, local clock) — the information a production front-end
+//! has — and return a replica index.
+
+use crate::config::Policy;
+use crate::workload::Request;
+
+/// Snapshot of one replica at a routing decision point.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplicaView {
+    pub id: usize,
+    /// Scheduling policy this replica's engine runs.
+    pub policy: Policy,
+    /// Requests routed to the replica but not yet delivered to its engine.
+    pub queued: usize,
+    /// Requests admitted or waiting inside the engine (not finished).
+    pub active: usize,
+    /// Outstanding KV footprint in tokens: Σ (input + output) over queued,
+    /// waiting, prefilling, and decoding requests.
+    pub outstanding_kv_tokens: u64,
+    /// Free KV blocks in the replica's cache manager.
+    pub kv_free_blocks: u32,
+    /// Replica-local engine clock.
+    pub now_s: f64,
+}
+
+/// A routing policy over replica snapshots.
+pub trait Router {
+    fn name(&self) -> &'static str;
+    /// Pick the replica for `req`. `replicas` is non-empty; the returned
+    /// index is taken modulo the replica count.
+    fn route(&mut self, req: &Request, replicas: &[ReplicaView]) -> usize;
+}
+
+/// Cycle through replicas in arrival order, ignoring load.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl RoundRobin {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Router for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn route(&mut self, _req: &Request, replicas: &[ReplicaView]) -> usize {
+        let i = self.next % replicas.len();
+        self.next = self.next.wrapping_add(1);
+        i
+    }
+}
+
+/// Send each request to the replica with the smallest outstanding KV
+/// footprint (queued + in-engine), the classic least-outstanding-work
+/// balancer. Ties break toward the lowest replica id.
+#[derive(Debug, Default)]
+pub struct LeastOutstandingKv;
+
+impl LeastOutstandingKv {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+fn argmin_outstanding(replicas: &[ReplicaView], allow: impl Fn(&ReplicaView) -> bool) -> usize {
+    let mut best: Option<&ReplicaView> = None;
+    for v in replicas.iter().filter(|v| allow(v)) {
+        best = match best {
+            None => Some(v),
+            Some(b) if v.outstanding_kv_tokens < b.outstanding_kv_tokens => Some(v),
+            Some(b) => Some(b),
+        };
+    }
+    best.map(|v| v.id).unwrap_or(0)
+}
+
+impl Router for LeastOutstandingKv {
+    fn name(&self) -> &'static str {
+        "least-kv"
+    }
+
+    fn route(&mut self, _req: &Request, replicas: &[ReplicaView]) -> usize {
+        argmin_outstanding(replicas, |_| true)
+    }
+}
+
+/// SLO-aware routing for heterogeneous fleets (the FlowPrefill-style
+/// split): long prompts go to layer-axis replicas (layered/hybrid), whose
+/// stall-free prefill keeps fleet TBT flat, while short prompts go to
+/// token-axis replicas (chunked/orca/static), which finish them in one or
+/// two chunks without paying the G-iteration layered cadence. Within the
+/// preferred set, least-outstanding-KV balances load; an empty preferred
+/// set falls back to the whole fleet.
+#[derive(Debug)]
+pub struct SloAware {
+    /// Prompts at least this long are "long" (paper §4.4 uses the chunk
+    /// target 512 as the natural scale; default 4× that).
+    pub long_prompt_threshold: u32,
+}
+
+impl SloAware {
+    pub fn new(long_prompt_threshold: u32) -> Self {
+        SloAware {
+            long_prompt_threshold,
+        }
+    }
+}
+
+impl Default for SloAware {
+    fn default() -> Self {
+        SloAware::new(2048)
+    }
+}
+
+fn is_layer_axis(p: Policy) -> bool {
+    matches!(p, Policy::Layered | Policy::Hybrid)
+}
+
+impl Router for SloAware {
+    fn name(&self) -> &'static str {
+        "slo-aware"
+    }
+
+    fn route(&mut self, req: &Request, replicas: &[ReplicaView]) -> usize {
+        let want_layered = req.input_len >= self.long_prompt_threshold;
+        let preferred = |v: &ReplicaView| is_layer_axis(v.policy) == want_layered;
+        if replicas.iter().any(|v| preferred(v)) {
+            argmin_outstanding(replicas, preferred)
+        } else {
+            argmin_outstanding(replicas, |_| true)
+        }
+    }
+}
+
+/// Build a router by name: `rr`/`round-robin`, `least-kv`/`kv`,
+/// `slo`/`slo-aware`.
+pub fn build_router(name: &str) -> Option<Box<dyn Router>> {
+    match name.to_ascii_lowercase().as_str() {
+        "rr" | "round-robin" | "roundrobin" => Some(Box::new(RoundRobin::new())),
+        "least-kv" | "kv" | "least-outstanding" => Some(Box::new(LeastOutstandingKv::new())),
+        "slo" | "slo-aware" => Some(Box::new(SloAware::new(2048))),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(id: usize, policy: Policy, outstanding: u64) -> ReplicaView {
+        ReplicaView {
+            id,
+            policy,
+            queued: 0,
+            active: 0,
+            outstanding_kv_tokens: outstanding,
+            kv_free_blocks: 100,
+            now_s: 0.0,
+        }
+    }
+
+    fn req(input: u32) -> Request {
+        Request {
+            id: 1,
+            arrival_s: 0.0,
+            input_len: input,
+            output_len: 10,
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let views = [
+            view(0, Policy::Layered, 0),
+            view(1, Policy::Layered, 0),
+            view(2, Policy::Layered, 0),
+        ];
+        let mut r = RoundRobin::new();
+        let picks: Vec<usize> = (0..6).map(|_| r.route(&req(100), &views)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_kv_picks_min_and_breaks_ties_low() {
+        let views = [
+            view(0, Policy::Layered, 500),
+            view(1, Policy::Layered, 100),
+            view(2, Policy::Layered, 100),
+        ];
+        let mut r = LeastOutstandingKv::new();
+        assert_eq!(r.route(&req(100), &views), 1);
+    }
+
+    #[test]
+    fn slo_aware_splits_by_prompt_length() {
+        let views = [
+            view(0, Policy::Chunked, 900),
+            view(1, Policy::Layered, 50),
+            view(2, Policy::Layered, 20),
+            view(3, Policy::Chunked, 100),
+        ];
+        let mut r = SloAware::new(2048);
+        // Long prompt -> least-loaded layered replica.
+        assert_eq!(r.route(&req(8000), &views), 2);
+        // Short prompt -> least-loaded chunked replica.
+        assert_eq!(r.route(&req(100), &views), 3);
+    }
+
+    #[test]
+    fn slo_aware_falls_back_to_whole_fleet() {
+        let views = [view(0, Policy::Chunked, 30), view(1, Policy::Chunked, 10)];
+        let mut r = SloAware::new(2048);
+        // No layered replica exists: long prompts use least-kv over all.
+        assert_eq!(r.route(&req(9000), &views), 1);
+    }
+
+    #[test]
+    fn build_router_names() {
+        for (n, want) in [
+            ("rr", "round-robin"),
+            ("least-kv", "least-kv"),
+            ("slo", "slo-aware"),
+        ] {
+            assert_eq!(build_router(n).unwrap().name(), want);
+        }
+        assert!(build_router("nope").is_none());
+    }
+}

@@ -1,0 +1,407 @@
+//! The engine core: ONE canonical iteration loop shared by the discrete-event
+//! simulator, the real PJRT server, and the multi-replica cluster layer.
+//!
+//! Every serving run is the same cycle —
+//!
+//! ```text
+//!   plan     the scheduler policy emits an IterationPlan over EngineState
+//!   execute  an Executor runs the plan (roofline cost model or PJRT step)
+//!   account  traffic/energy/latency metrics accrue from the iteration cost
+//!   advance  plan effects apply to request state (prefill progress, token
+//!            emissions, completions), the engine clock moves forward
+//! ```
+//!
+//! — and only the *execute* step differs between a simulated and a real run.
+//! [`EngineCore`] owns the loop, arrival delivery, invariant validation
+//! (I1–I3 checked every iteration; I4 at the policy level), and metrics
+//! bookkeeping; the [`Executor`] trait abstracts the backend:
+//!
+//! * [`SimExecutor`] — roofline [`CostModel`](crate::simulator::cost::CostModel)
+//!   + [`EnergyMeter`](crate::simulator::energy::EnergyMeter) on a simulated
+//!   clock (time jumps over idle gaps).
+//! * [`RealExecutor`] — the AOT-compiled TinyMoE through PJRT on the wall
+//!   clock (idle waits sleep).
+//!
+//! The core is resumable: [`EngineCore::run_until`] executes iterations only
+//! up to a target engine time, which is what lets `cluster::Cluster`
+//! co-simulate N replica engines against one global arrival stream.
+
+pub mod real;
+pub mod sim;
+
+pub use real::RealExecutor;
+pub use sim::SimExecutor;
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+use anyhow::Result;
+
+use crate::metrics::{RequestRecord, RunMetrics};
+use crate::sched::{EngineState, IterationPlan, Phase, Scheduler};
+use crate::simulator::cost::IterationCost;
+use crate::workload::{Request, Trace};
+
+/// Backend that executes one planned iteration and owns the engine clock.
+pub trait Executor {
+    fn name(&self) -> &'static str;
+
+    /// Engine time "now" in seconds (simulated clock or wall clock since
+    /// run start). Monotone; advanced by `execute` and `idle_until`.
+    fn now(&self) -> f64;
+
+    /// Execute one planned iteration, advancing the clock past it. Returns
+    /// the iteration's cost/traffic accounting (a real backend measures
+    /// `duration_s` and reports zero modeled traffic).
+    fn execute(&mut self, plan: &IterationPlan, state: &EngineState) -> Result<IterationCost>;
+
+    /// No runnable work before engine time `t`: advance toward it. The
+    /// simulator jumps exactly to `t` (charging idle energy); the real
+    /// backend sleeps a bounded slice and lets the caller re-check.
+    fn idle_until(&mut self, t: f64);
+
+    /// Fold executor-side accounting (e.g. the energy meter) into the final
+    /// metrics.
+    fn finish(&mut self, metrics: &mut RunMetrics);
+}
+
+/// Knobs for one core run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CoreOptions {
+    /// Stop after this much engine time (0 = run to drain).
+    pub horizon_s: f64,
+    /// Record per-request token timestamps (costs memory).
+    pub record_token_times: bool,
+    /// Deliver queued requests immediately, ignoring their arrival stamps
+    /// (the real server's batch mode).
+    pub immediate_arrivals: bool,
+}
+
+/// Outcome of [`EngineCore::run_until`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CoreStatus {
+    /// Reached the requested engine time with work (possibly) remaining.
+    Ran,
+    /// No queued work left and nothing runnable: drained (or past horizon).
+    Drained,
+}
+
+/// The canonical iteration loop. Owns arrival queueing and all run-level
+/// metric accumulation; borrows the executor, scheduler, and engine state
+/// per call so callers (simulator, server, cluster replicas) keep ownership.
+pub struct EngineCore {
+    opts: CoreOptions,
+    /// Requests not yet delivered to the engine, in arrival order.
+    pending: VecDeque<Request>,
+    metrics: RunMetrics,
+    token_times: Vec<(u64, Vec<f64>)>,
+    /// Engine-time of each in-flight request's latest emission (first token
+    /// or last decode token) — the TBT reference point.
+    last_emit_s: BTreeMap<u64, f64>,
+    emitted_total: u64,
+    decode_batch_weighted: f64,
+    busy_s: f64,
+    /// Set once the horizon is exceeded; the run is over.
+    halted: bool,
+}
+
+impl EngineCore {
+    pub fn new(opts: CoreOptions) -> Self {
+        EngineCore {
+            opts,
+            pending: VecDeque::new(),
+            metrics: RunMetrics::default(),
+            token_times: Vec::new(),
+            last_emit_s: BTreeMap::new(),
+            emitted_total: 0,
+            decode_batch_weighted: 0.0,
+            busy_s: 0.0,
+            halted: false,
+        }
+    }
+
+    /// Queue one request (callers push in global arrival order).
+    pub fn push(&mut self, req: Request) {
+        self.pending.push_back(req);
+    }
+
+    /// Queue an entire trace (already arrival-sorted by `Trace::new`).
+    pub fn push_trace(&mut self, trace: &Trace) {
+        for r in &trace.requests {
+            self.push(*r);
+        }
+    }
+
+    /// Undelivered request count (cluster routers read this as queue depth).
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Total KV footprint (input + output tokens) of undelivered requests —
+    /// the router-visible share of a replica's outstanding work.
+    pub fn pending_footprint(&self) -> u64 {
+        self.pending
+            .iter()
+            .map(|r| (r.input_len + r.output_len) as u64)
+            .sum()
+    }
+
+    /// Iterations executed so far.
+    pub fn iterations(&self) -> u64 {
+        self.metrics.iterations
+    }
+
+    /// Run to drain: no pending arrivals and the scheduler has no work.
+    pub fn drain(
+        &mut self,
+        exec: &mut dyn Executor,
+        sched: &mut dyn Scheduler,
+        state: &mut EngineState,
+    ) -> Result<CoreStatus> {
+        self.run_until(exec, sched, state, None)
+    }
+
+    /// Run iterations until engine time reaches `until_s` (None = drain).
+    /// Idle gaps advance the clock via the executor; the loop never spins.
+    pub fn run_until(
+        &mut self,
+        exec: &mut dyn Executor,
+        sched: &mut dyn Scheduler,
+        state: &mut EngineState,
+        until_s: Option<f64>,
+    ) -> Result<CoreStatus> {
+        loop {
+            if self.halted {
+                return Ok(CoreStatus::Drained);
+            }
+            let now = exec.now();
+            state.now_s = now;
+
+            // Deliver arrivals up to the current clock.
+            while let Some(head) = self.pending.front() {
+                if self.opts.immediate_arrivals || head.arrival_s <= now + 1e-12 {
+                    let r = *head;
+                    self.pending.pop_front();
+                    state.arrive(r);
+                } else {
+                    break;
+                }
+            }
+
+            if let Some(t) = until_s {
+                if now >= t {
+                    return Ok(CoreStatus::Ran);
+                }
+            }
+
+            let Some(plan) = sched.plan(state) else {
+                // Idle: advance to the next arrival or the pacing target —
+                // whichever comes first — or finish the run.
+                match (self.pending.front().map(|r| r.arrival_s), until_s) {
+                    (Some(t_arr), Some(t)) => exec.idle_until(t_arr.min(t)),
+                    (Some(t_arr), None) => exec.idle_until(t_arr),
+                    (None, Some(t)) => exec.idle_until(t),
+                    (None, None) => return Ok(CoreStatus::Drained),
+                }
+                continue;
+            };
+
+            validate_plan(&plan, state);
+
+            let cost = exec.execute(&plan, state)?;
+            let now = exec.now();
+            state.now_s = now;
+            self.account(&cost);
+            self.advance(state, &plan, now, cost.duration_s);
+
+            if self.opts.horizon_s > 0.0 && now > self.opts.horizon_s {
+                self.halted = true;
+                return Ok(CoreStatus::Drained);
+            }
+        }
+    }
+
+    /// Finalize: fold executor accounting in and return the run's metrics
+    /// plus recorded per-request token timestamps.
+    pub fn finish(mut self, exec: &mut dyn Executor) -> (RunMetrics, Vec<(u64, Vec<f64>)>) {
+        self.metrics.makespan_s = exec.now();
+        self.metrics.busy_s = self.busy_s;
+        self.metrics.avg_decode_batch = if self.busy_s > 0.0 {
+            self.decode_batch_weighted / self.busy_s
+        } else {
+            0.0
+        };
+        exec.finish(&mut self.metrics);
+        self.metrics.requests.sort_by_key(|r| r.id);
+        (self.metrics, self.token_times)
+    }
+
+    /// account: accrue the iteration's cost into run metrics.
+    fn account(&mut self, cost: &IterationCost) {
+        self.busy_s += cost.duration_s;
+        self.metrics.iterations += 1;
+        self.metrics.traffic.iterations += 1;
+        self.metrics.traffic.expert_bytes += cost.expert_bytes;
+        self.metrics.traffic.dense_bytes += cost.dense_bytes;
+        self.metrics.traffic.kv_bytes += cost.kv_bytes;
+        self.metrics.traffic.act_bytes += cost.act_bytes;
+    }
+
+    /// advance: apply the plan's effects to request state at engine time
+    /// `now` — prefill progress (I2 accounting), first-token emissions,
+    /// decode emissions, completions, and retirement.
+    fn advance(
+        &mut self,
+        state: &mut EngineState,
+        plan: &IterationPlan,
+        now: f64,
+        duration_s: f64,
+    ) {
+        let n_layers = state.model.n_layers;
+        let mut finished: Vec<u64> = Vec::new();
+
+        // Prefill progress. Layer-axis policies emit the same (req, tokens)
+        // slice against successive groups across iterations; token-axis
+        // progress (prefill_done) advances only when the slice completes or
+        // when the group set covers the whole stack in one iteration.
+        let mut completed_prefills: Vec<u64> = Vec::new();
+        {
+            // Per-request (tokens, layer_sum, completes) this iteration.
+            let mut per_req: BTreeMap<u64, (u32, u32, bool)> = BTreeMap::new();
+            for g in &plan.groups {
+                for w in &g.prefill {
+                    let e = per_req.entry(w.req).or_insert((w.tokens, 0, false));
+                    e.1 += g.n_layers;
+                    e.2 |= w.completes;
+                }
+            }
+            for (id, (tokens, layer_sum, completes)) in per_req {
+                let r = state.reqs.get_mut(&id).unwrap();
+                // I2 accounting: token·layer units processed this iteration.
+                r.token_layers_done += tokens as u64 * layer_sum as u64;
+                if completes {
+                    debug_assert_eq!(
+                        r.token_layers_done,
+                        r.req.input_len as u64 * n_layers as u64,
+                        "I2 violated for req {id}"
+                    );
+                    r.prefill_done = r.req.input_len;
+                    completed_prefills.push(id);
+                } else {
+                    // Token-axis progress = tokens fully through the stack.
+                    // Exact at chunk boundaries for every policy; mid-cohort
+                    // fractions are conservative and never read by the
+                    // layer-axis policies.
+                    r.prefill_done = (r.token_layers_done / n_layers as u64) as u32;
+                }
+            }
+        }
+
+        for id in completed_prefills {
+            let r = state.reqs.get_mut(&id).unwrap();
+            r.generated = 1; // first token from prefill
+            r.first_token_s = Some(now);
+            if self.opts.record_token_times {
+                r.token_times.push(now);
+            }
+            self.emitted_total += 1;
+            self.last_emit_s.insert(id, now);
+            state.prefilling.retain(|&x| x != id);
+            if r.done_decoding() {
+                // output_len == 1: the request finishes at prefill.
+                r.phase = Phase::Finished;
+                r.finish_s = Some(now);
+                finished.push(id);
+            } else {
+                r.phase = Phase::Decoding;
+                state.decoding.push(id);
+            }
+        }
+
+        // Decode progress: each decoding request scheduled this iteration
+        // emits exactly one token (I3).
+        let decode_ids: Vec<u64> = {
+            let mut set = BTreeSet::new();
+            for g in &plan.groups {
+                for &(id, _) in &g.decode {
+                    set.insert(id);
+                }
+            }
+            set.into_iter().collect()
+        };
+        self.decode_batch_weighted += decode_ids.len() as f64 * duration_s;
+        for id in decode_ids {
+            let r = state.reqs.get_mut(&id).unwrap();
+            if r.done_decoding() {
+                continue; // finished at an earlier iteration boundary
+            }
+            r.generated += 1;
+            let last = self.last_emit_s.insert(id, now).unwrap_or(now);
+            r.tbts.push(now - last);
+            if self.opts.record_token_times {
+                r.token_times.push(now);
+            }
+            self.emitted_total += 1;
+            if r.done_decoding() {
+                r.phase = Phase::Finished;
+                r.finish_s = Some(now);
+                finished.push(id);
+            }
+        }
+
+        for id in finished {
+            state.decoding.retain(|&x| x != id);
+            let _ = state.kv.release(id);
+            self.last_emit_s.remove(&id);
+            let r = &state.reqs[&id];
+            self.metrics.requests.push(RequestRecord {
+                id,
+                arrival_s: r.req.arrival_s,
+                input_len: r.req.input_len,
+                output_len: r.req.output_len,
+                ttft_s: r.first_token_s.unwrap() - r.req.arrival_s,
+                tbts_s: r.tbts.clone(),
+                finish_s: r.finish_s.unwrap(),
+            });
+            if self.opts.record_token_times {
+                self.token_times.push((id, r.token_times.clone()));
+            }
+        }
+
+        self.metrics.token_timeline.push((now, self.emitted_total));
+    }
+}
+
+/// Plan-level invariant checks (debug builds): I1 — at most one group
+/// prefills per iteration; I3 — every decoding request is scheduled, in
+/// groups totalling the full layer stack. Release builds skip the whole
+/// scan — it exists only to feed the debug assertions.
+pub fn validate_plan(plan: &IterationPlan, state: &EngineState) {
+    if !cfg!(debug_assertions) {
+        return;
+    }
+    let n_layers = state.model.n_layers;
+    debug_assert!(
+        plan.prefill_groups() <= 1,
+        "I1 violated: {} groups prefill in one iteration",
+        plan.prefill_groups()
+    );
+    let mut decode_layers: BTreeMap<u64, u32> = BTreeMap::new();
+    for g in &plan.groups {
+        for &(id, _) in &g.decode {
+            *decode_layers.entry(id).or_insert(0) += g.n_layers;
+        }
+    }
+    for (&id, &layers) in &decode_layers {
+        debug_assert_eq!(
+            layers, n_layers,
+            "I3 violated: decode req {id} covers {layers}/{n_layers} layers"
+        );
+    }
+    for &id in &state.decoding {
+        debug_assert!(
+            decode_layers.contains_key(&id),
+            "I3 violated: decoding req {id} not scheduled"
+        );
+    }
+    let _ = (n_layers, decode_layers);
+}

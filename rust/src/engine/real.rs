@@ -1,0 +1,282 @@
+//! Real executor: runs iteration plans against the AOT-compiled TinyMoE
+//! model through the PJRT runtime, on the wall clock. The plan → HLO-step
+//! mapping (chunk padding, per-group layer sweeps, batched decode) lives
+//! here; the loop around it is the shared engine core.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::Executor;
+use crate::metrics::RunMetrics;
+use crate::runtime::{KvPools, RuntimeEngine, TinyModelCfg};
+use crate::sched::{EngineState, IterationPlan};
+use crate::simulator::cost::IterationCost;
+use crate::util::rng::Rng;
+use crate::workload::Trace;
+
+/// Per-request prefill runtime state (hidden frontier between iterations).
+struct PrefillRt {
+    /// (padded_size, real_tokens, pos) sub-chunks of the current slice.
+    chunks: Vec<(usize, usize, usize)>,
+    /// Hidden literal per sub-chunk at the current layer frontier.
+    hiddens: Vec<xla::Literal>,
+    layers_done: usize,
+}
+
+pub struct RealExecutor<'e> {
+    engine: &'e RuntimeEngine,
+    m: TinyModelCfg,
+    pools: KvPools,
+    /// Synthetic prompts, deterministic per request id.
+    prompts: BTreeMap<u64, Vec<i32>>,
+    prefill_rt: BTreeMap<u64, PrefillRt>,
+    /// Generated token ids per request (for output verification).
+    pub outputs: BTreeMap<u64, Vec<i32>>,
+    start: Instant,
+}
+
+impl<'e> RealExecutor<'e> {
+    /// Build an executor for one serve run: fresh KV pools, synthetic
+    /// prompts for every trace request, wall clock starting now.
+    pub fn new(engine: &'e RuntimeEngine, trace: &Trace, seed: u64) -> Result<Self> {
+        let m = engine.manifest.model.clone();
+        let mut prompts = BTreeMap::new();
+        for r in &trace.requests {
+            let mut rng = Rng::new(seed ^ r.id.wrapping_mul(0x9E37));
+            prompts.insert(
+                r.id,
+                (0..r.input_len)
+                    .map(|_| rng.range_usize(1, m.vocab) as i32)
+                    .collect::<Vec<i32>>(),
+            );
+        }
+        Ok(RealExecutor {
+            engine,
+            m,
+            pools: engine.new_pools()?,
+            prompts,
+            prefill_rt: BTreeMap::new(),
+            outputs: BTreeMap::new(),
+            start: Instant::now(),
+        })
+    }
+
+    /// A request's pool slot = its single KV block id.
+    fn slot_of(&self, state: &EngineState, id: u64) -> Result<usize> {
+        let table = state
+            .kv
+            .table_of(id)
+            .with_context(|| format!("req {id} has no KV block"))?;
+        Ok(table[0] as usize)
+    }
+}
+
+impl Executor for RealExecutor<'_> {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn now(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    fn execute(&mut self, plan: &IterationPlan, state: &EngineState) -> Result<IterationCost> {
+        let t0 = self.now();
+        let m = &self.m;
+
+        // Decode side: embed the last emitted token of each decoding
+        // request once, then thread the hidden batch through every group.
+        let decode_ids: Vec<u64> = plan
+            .groups
+            .iter()
+            .flat_map(|g| g.decode.iter().map(|&(id, _)| id))
+            .collect::<BTreeSet<_>>()
+            .into_iter()
+            .collect();
+        let mut decode_h: Option<xla::Literal> = None;
+        let (mut slots_vec, mut lens_vec) = (Vec::new(), Vec::new());
+        let mut batch_b = 0usize;
+        if !decode_ids.is_empty() {
+            let b = *m
+                .decode_batches
+                .iter()
+                .find(|&&v| v >= decode_ids.len())
+                .context("decode batch too large for compiled variants")?;
+            batch_b = b;
+            let scratch = m.scratch_slot() as i32;
+            let mut ids_tok = vec![0i32; b];
+            slots_vec = vec![scratch; b];
+            lens_vec = vec![0i32; b];
+            for (i, rid) in decode_ids.iter().enumerate() {
+                let r = &state.reqs[rid];
+                let out = self.outputs.get(rid).expect("decoding req has outputs");
+                ids_tok[i] = *out.last().unwrap();
+                slots_vec[i] = self.slot_of(state, *rid)? as i32;
+                // Position where the new token's KV goes = current ctx.
+                lens_vec[i] = r.ctx_len() as i32 - 1;
+            }
+            decode_h = Some(self.engine.embed(&ids_tok)?);
+        }
+
+        // Execute the plan, group by group, in layer order.
+        let mut layer_off = 0usize;
+        let mut completed: Vec<(u64, i32)> = Vec::new(); // (req, first token)
+        for g in &plan.groups {
+            let l_begin = layer_off;
+            let l_end = layer_off + g.n_layers as usize;
+            layer_off = l_end;
+
+            // Prefill slices through this group's layers.
+            for w in &g.prefill {
+                let rid = w.req;
+                let prompt = &self.prompts[&rid];
+                let slot = self.slot_of(state, rid)? as i32;
+                let rt = self.prefill_rt.entry(rid).or_insert_with(|| PrefillRt {
+                    chunks: Vec::new(),
+                    hiddens: Vec::new(),
+                    layers_done: 0,
+                });
+                if rt.hiddens.is_empty() {
+                    // New slice: split into compiled chunk sizes & embed.
+                    rt.chunks = chunk_plan(w.tokens as usize, w.pos as usize, &m.prefill_chunks);
+                    rt.layers_done = 0;
+                    for &(size, real, pos) in &rt.chunks {
+                        let mut ids = vec![0i32; size];
+                        ids[..real].copy_from_slice(&prompt[pos..pos + real]);
+                        rt.hiddens.push(self.engine.embed(&ids)?);
+                    }
+                }
+                debug_assert_eq!(rt.layers_done, l_begin);
+                for layer in l_begin..l_end {
+                    for (ci, &(size, _real, pos)) in rt.chunks.iter().enumerate() {
+                        let h = self.engine.layer_prefill(
+                            layer,
+                            size,
+                            &rt.hiddens[ci],
+                            &mut self.pools,
+                            slot,
+                            pos as i32,
+                        )?;
+                        rt.hiddens[ci] = h;
+                    }
+                }
+                rt.layers_done = l_end;
+
+                if rt.layers_done == m.n_layers {
+                    if w.completes {
+                        // First token: lm_head over the last REAL row.
+                        let &(_, real, _) = rt.chunks.last().unwrap();
+                        let row = self
+                            .engine
+                            .hidden_row(rt.hiddens.last().unwrap(), real - 1)?;
+                        let h1 = self.engine.stack_rows(&[row], 1)?;
+                        let tok = self.engine.lm_head(&h1)?[0];
+                        completed.push((rid, tok));
+                    }
+                    self.prefill_rt.remove(&rid);
+                }
+            }
+
+            // Decode through this group's layers.
+            if let Some(h) = decode_h.take() {
+                let mut h = h;
+                for layer in l_begin..l_end {
+                    h = self.engine.layer_decode(
+                        layer,
+                        &h,
+                        &mut self.pools,
+                        &slots_vec,
+                        &lens_vec,
+                    )?;
+                }
+                decode_h = Some(h);
+            }
+        }
+
+        // Decode lm_head: one new token per decoding request.
+        if let Some(h) = decode_h {
+            debug_assert!(batch_b > 0);
+            let toks = self.engine.lm_head(&h)?;
+            for (i, rid) in decode_ids.iter().enumerate() {
+                self.outputs.get_mut(rid).unwrap().push(toks[i]);
+            }
+        }
+
+        for (rid, tok) in completed {
+            self.outputs.insert(rid, vec![tok]);
+        }
+
+        Ok(IterationCost {
+            duration_s: self.now() - t0,
+            ..Default::default()
+        })
+    }
+
+    fn idle_until(&mut self, t: f64) {
+        // Bounded sleep: the core re-checks arrivals against the wall clock.
+        let wait = t - self.now();
+        if wait > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(wait.min(0.005)));
+        }
+    }
+
+    fn finish(&mut self, _metrics: &mut RunMetrics) {}
+}
+
+/// Split `tokens` prompt tokens starting at absolute `pos` into compiled
+/// chunk sizes, padding only the final sub-chunk. Mirrors python
+/// compile.aot.chunk_plan (semantics locked by python tests).
+pub fn chunk_plan(tokens: usize, pos: usize, sizes: &[usize]) -> Vec<(usize, usize, usize)> {
+    let biggest = *sizes.iter().max().unwrap();
+    let mut out = Vec::new();
+    let mut rem = tokens;
+    let mut p = pos;
+    while rem >= biggest {
+        out.push((biggest, biggest, p));
+        rem -= biggest;
+        p += biggest;
+    }
+    if rem > 0 {
+        let fit = *sizes.iter().filter(|&&s| s >= rem).min().unwrap();
+        out.push((fit, rem, p));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_plan_matches_python_semantics() {
+        let sizes = [16usize, 32, 64];
+        assert_eq!(chunk_plan(70, 0, &sizes), vec![(64, 64, 0), (16, 6, 64)]);
+        assert_eq!(chunk_plan(64, 0, &sizes), vec![(64, 64, 0)]);
+        assert_eq!(chunk_plan(1, 10, &sizes), vec![(16, 1, 10)]);
+        assert_eq!(
+            chunk_plan(200, 0, &sizes),
+            vec![(64, 64, 0), (64, 64, 64), (64, 64, 128), (16, 8, 192)]
+        );
+        // offset propagates
+        assert_eq!(chunk_plan(20, 5, &sizes), vec![(32, 20, 5)]);
+    }
+
+    #[test]
+    fn chunk_plan_total_conservation() {
+        let sizes = [16usize, 32, 64];
+        for tokens in 1..400usize {
+            let plan = chunk_plan(tokens, 3, &sizes);
+            let total: usize = plan.iter().map(|&(_, r, _)| r).sum();
+            assert_eq!(total, tokens);
+            // contiguous positions
+            let mut p = 3;
+            for &(size, real, pos) in &plan {
+                assert_eq!(pos, p);
+                assert!(real <= size);
+                p += real;
+            }
+        }
+    }
+}

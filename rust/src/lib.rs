@@ -2,15 +2,43 @@
 //!
 //! Reproduction of *"From Tokens to Layers: Redefining Stall-Free Scheduling
 //! for LLM Serving with Layered Prefill"* (Lee et al., 2025) as a
-//! three-layer rust + JAX + Pallas serving stack:
+//! three-layer rust + JAX + Pallas serving stack, grown toward a
+//! production-scale multi-replica serving system.
 //!
-//! * **L3 (this crate)** — the scheduling contribution: layered prefill and
-//!   its baselines (chunked prefill / Orca / static batching / the §4.3
-//!   hybrid), a discrete-event roofline simulator calibrated to the paper's
-//!   2×H100 testbed, MoE expert-load traffic + energy accounting, a paged
-//!   KV-cache manager, workload generators fitted to the paper's datasets,
-//!   and a real serving engine executing the AOT-compiled TinyMoE model via
-//!   PJRT (`runtime` + `server`).
+//! ## Architecture: one engine core, many backends
+//!
+//! Every serving run — simulated, real, or fleet — is the SAME iteration
+//! cycle, owned by [`engine::EngineCore`]:
+//!
+//! ```text
+//!   plan     a sched policy emits an IterationPlan over EngineState
+//!   execute  an engine::Executor runs it (roofline model or PJRT step)
+//!   account  traffic / energy / latency metrics accrue
+//!   advance  plan effects apply to request state; the clock moves
+//! ```
+//!
+//! * **`sched`** — the paper's contribution (layered prefill) and its
+//!   baselines (chunked / Orca / static / §4.3 hybrid), planning per *layer
+//!   group* so layer-axis policies are first-class. Invariants I1–I4 are
+//!   validated by the core each iteration and property-tested.
+//! * **`engine`** — the shared core loop plus its two executors:
+//!   [`engine::SimExecutor`] (roofline `CostModel` + `EnergyMeter`,
+//!   virtual clock) and [`engine::RealExecutor`] (AOT-compiled TinyMoE via
+//!   PJRT, wall clock).
+//! * **`simulator`** — discrete-event facade over the core: calibrated
+//!   2×H100 roofline, MoE expert-load traffic + energy accounting.
+//! * **`server`** — the real serving engine: identical policies and core
+//!   loop, executing HLO artifacts through the PJRT C API (`runtime`).
+//! * **`cluster`** — N replica engines co-simulated behind a request
+//!   `Router` (round-robin, least-outstanding-KV, SLO-aware long/short
+//!   prompt steering), with per-replica and fleet-aggregated metrics; a
+//!   1-replica cluster is bit-identical to the single-engine simulator.
+//! * **`kvcache` / `workload` / `metrics` / `report`** — paged KV manager,
+//!   paper-fitted workload generators with record/replay, latency/SLO/
+//!   traffic metrics, and regenerators for every paper table and figure.
+//!
+//! ## The lower layers
+//!
 //! * **L2** — `python/compile/model.py`: JAX per-layer model functions,
 //!   lowered once to HLO text artifacts by `python/compile/aot.py`.
 //! * **L1** — `python/compile/kernels/`: Pallas MoE expert-FFN and attention
@@ -18,9 +46,12 @@
 //!
 //! Python never runs on the request path: `make artifacts` is the only
 //! build-time python invocation; the rust binary then loads
-//! `artifacts/*.hlo.txt` through the PJRT C API (`xla` crate).
+//! `artifacts/*.hlo.txt` through the PJRT C API (`xla` crate — the offline
+//! build vendors a stub; see `rust/vendor/xla`).
 
+pub mod cluster;
 pub mod config;
+pub mod engine;
 pub mod kvcache;
 pub mod metrics;
 pub mod model;

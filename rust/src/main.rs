@@ -10,6 +10,9 @@
 //!   serve --policy layered --requests 12 --rate 2.0
 //!       REAL serving: run the AOT-compiled TinyMoE via PJRT (needs
 //!       `make artifacts`).
+//!   cluster --replicas 4 --router slo --policies layered,chunked --rate 6.0
+//!       Multi-replica fleet simulation: N engine replicas behind a
+//!       request router, per-replica + fleet-aggregated metrics.
 //!   info
 //!       Print model/hardware descriptors and artifact status.
 
@@ -39,6 +42,7 @@ fn main() {
         "simulate" => cmd_simulate(&args),
         "sweep" => cmd_sweep(&args),
         "serve" => cmd_serve(&args),
+        "cluster" => cmd_cluster(&args),
         "trace" => cmd_trace(&args),
         "info" => cmd_info(),
         _ => usage(),
@@ -47,8 +51,9 @@ fn main() {
 
 fn usage() {
     eprintln!(
-        "usage: lpserve <report|simulate|sweep|serve|trace|info> [--flags]\n\
-         try: lpserve report all | lpserve simulate --policy layered --rate 1.3"
+        "usage: lpserve <report|simulate|sweep|serve|cluster|trace|info> [--flags]\n\
+         try: lpserve report all | lpserve simulate --policy layered --rate 1.3\n\
+         \x20    | lpserve cluster --replicas 4 --router slo --policies layered,chunked"
     );
 }
 
@@ -184,6 +189,113 @@ fn cmd_serve(args: &Args) {
     t.row(&["runtime steps".into(), rep.steps.to_string()]);
     t.row(&["makespan (s)".into(), f2(m.makespan_s)]);
     t.print();
+}
+
+/// Multi-replica fleet simulation: N replica engines behind a request
+/// router, reporting per-replica and fleet-aggregated latency/traffic.
+///
+///   lpserve cluster --replicas 4 --router rr --rate 6.0 --requests 200
+///   lpserve cluster --replicas 4 --router slo --policies layered,chunked
+fn cmd_cluster(args: &Args) {
+    use layered_prefill::cluster::{build_router, Cluster, ReplicaSpec};
+
+    let model = model_arg(args);
+    let dataset = dataset_arg(args);
+    let n_replicas = args.usize("replicas", 4).max(1);
+    let rate = args.f64("rate", 1.3 * n_replicas as f64);
+    let n = args.usize("requests", 100);
+    let router_name = args.str("router", "rr");
+    let Some(router) = build_router(&router_name) else {
+        eprintln!("unknown router '{router_name}' (rr | least-kv | slo)");
+        return;
+    };
+
+    // Per-replica policies: comma list cycled over the fleet. Reject typos
+    // instead of silently changing the fleet composition.
+    let policy_arg = args.str("policies", &args.str("policy", "layered"));
+    let mut policy_list: Vec<Policy> = Vec::new();
+    for s in policy_arg.split(',') {
+        match Policy::parse(s.trim()) {
+            Some(p) => policy_list.push(p),
+            None => {
+                eprintln!(
+                    "unknown policy '{}' (static | orca | chunked | layered | hybrid)",
+                    s.trim()
+                );
+                return;
+            }
+        }
+    }
+    let specs: Vec<ReplicaSpec> = (0..n_replicas)
+        .map(|i| {
+            ReplicaSpec::new(
+                model.clone(),
+                HardwareDesc::h100x2(),
+                policy_list[i % policy_list.len()],
+            )
+        })
+        .collect();
+
+    let mut wspec = WorkloadSpec::new(dataset, rate, n);
+    wspec.seed = args.u64("seed", 0xA11CE);
+    let trace = WorkloadGen::new(wspec).generate();
+    let slo = SloSpec::paper(&model, dataset);
+
+    let cluster = Cluster::new(specs, router);
+    let router_name = cluster.router_name();
+    let rep = cluster.run(&trace);
+
+    let mut t = Table::new(&format!(
+        "cluster — {} replicas, {} router, {} on {} ({} req/s, n={})",
+        n_replicas,
+        router_name,
+        model.name,
+        dataset.name(),
+        rate,
+        n
+    ))
+    .header(&[
+        "replica",
+        "policy",
+        "reqs",
+        "TTFT p50 (s)",
+        "TTFT p99 (s)",
+        "TBT p99 (ms)",
+        "SLO",
+        "iters",
+    ]);
+    let counts = rep.assignment_counts();
+    for (i, m) in rep.per_replica.iter().enumerate() {
+        t.row(&[
+            format!("#{i}"),
+            rep.policies[i].name().to_string(),
+            counts[i].to_string(),
+            f3(m.ttft_samples().p50()),
+            f3(m.ttft_samples().p99()),
+            f2(m.tbt_samples().p99() * 1e3),
+            pct(m.slo(&slo).full),
+            m.iterations.to_string(),
+        ]);
+    }
+    let fm = &rep.fleet;
+    t.row(&[
+        "fleet".to_string(),
+        "-".to_string(),
+        fm.requests.len().to_string(),
+        f3(fm.ttft_samples().p50()),
+        f3(fm.ttft_samples().p99()),
+        f2(fm.tbt_samples().p99() * 1e3),
+        pct(fm.slo(&slo).full),
+        fm.iterations.to_string(),
+    ]);
+    t.print();
+    println!(
+        "fleet: e2e mean {:.2}s | gen throughput {:.1} tok/s | expert loads {:.2} TB | energy/token {:.1} mJ",
+        fm.e2e_samples().mean(),
+        fm.gen_throughput(),
+        fm.traffic.expert_bytes / 1e12,
+        fm.energy_per_token_mj()
+    );
 }
 
 /// Record a workload trace to CSV, or replay one through the simulator.

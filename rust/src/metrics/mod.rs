@@ -35,6 +35,8 @@ pub struct RunMetrics {
     pub energy: EnergyMeter,
     /// Wall-clock span of the run (first arrival to last completion).
     pub makespan_s: f64,
+    /// Engine time spent executing iterations (makespan minus idle gaps).
+    pub busy_s: f64,
     /// Time-weighted mean decode batch size (Fig 3 dotted line).
     pub avg_decode_batch: f64,
     /// Iterations executed.

@@ -20,6 +20,9 @@ pub mod orca;
 pub mod static_batch;
 pub mod state;
 
+#[cfg(test)]
+mod properties;
+
 pub use state::{EngineState, Phase, SimReq};
 
 use crate::config::{Policy, SchedulerConfig};
@@ -92,8 +95,16 @@ pub fn build(config: &SchedulerConfig, n_layers: u32) -> Box<dyn Scheduler> {
 
 /// Partition `n_layers` into `g` contiguous groups with sizes differing by
 /// at most one (paper §4.1; future-work note on non-divisible counts).
+/// `g` is clamped to `[1, n_layers]`.
+///
+/// A zero-layer model partitions into the EMPTY group list — there is
+/// nothing to schedule, and callers iterate over no groups — rather than
+/// the former silent `[0]` single empty group the `max(1)` clamp produced.
 pub fn partition_layers(n_layers: u32, g: u32) -> Vec<u32> {
-    let g = g.clamp(1, n_layers.max(1));
+    if n_layers == 0 {
+        return Vec::new();
+    }
+    let g = g.clamp(1, n_layers);
     let base = n_layers / g;
     let extra = n_layers % g;
     (0..g)
@@ -103,7 +114,9 @@ pub fn partition_layers(n_layers: u32, g: u32) -> Vec<u32> {
 
 /// Paper §4.4: number of layer groups for a prompt of length `len`,
 /// targeting per-iteration prefill work comparable to a `target`-token chunk:
-/// G(L) = max(1, ceil(L / target)).
+/// G(L) = max(1, ceil(L / target)). An empty prompt (`len == 0`) still
+/// occupies one scheduling slot: G(0) = 1 (its admission completes in a
+/// single no-op iteration rather than never).
 pub fn groups_for_len(len: u32, target: u32) -> u32 {
     (len.div_ceil(target.max(1))).max(1)
 }
@@ -134,12 +147,32 @@ mod tests {
     }
 
     #[test]
+    fn partition_zero_layers_is_explicitly_empty() {
+        // No layers -> no groups (documented), never a silent [0] group.
+        for g in [0u32, 1, 5, 100] {
+            assert_eq!(partition_layers(0, g), Vec::<u32>::new());
+        }
+        // And g = 0 on a real stack still yields one full-stack group.
+        assert_eq!(partition_layers(7, 0), vec![7]);
+    }
+
+    #[test]
     fn groups_for_len_matches_paper() {
         // Paper §4.4: L=8192 -> G=16; L=512 -> G=1 (target 512).
         assert_eq!(groups_for_len(8192, 512), 16);
         assert_eq!(groups_for_len(512, 512), 1);
         assert_eq!(groups_for_len(513, 512), 2);
         assert_eq!(groups_for_len(1, 512), 1);
+    }
+
+    #[test]
+    fn groups_for_len_degenerate_inputs() {
+        // G(0) = 1: an empty prompt completes in one scheduling slot.
+        assert_eq!(groups_for_len(0, 512), 1);
+        assert_eq!(groups_for_len(0, 1), 1);
+        // Zero target clamps to per-token grouping instead of dividing by 0.
+        assert_eq!(groups_for_len(5, 0), 5);
+        assert_eq!(groups_for_len(0, 0), 1);
     }
 
     #[test]

@@ -1,18 +1,22 @@
 //! The serving loop: wall-clock request admission, iteration planning via
-//! the L3 scheduler policies, and plan execution on the PJRT runtime.
+//! the L3 scheduler policies, and plan execution on the PJRT runtime — all
+//! driven by the shared engine core (`crate::engine`), so the real server
+//! runs the IDENTICAL plan → execute → account → advance loop the simulator
+//! validates, with a [`RealExecutor`] backend instead of the cost model.
 
 use std::collections::BTreeMap;
-use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 use crate::config::{ModelDesc, Policy, SchedulerConfig};
+use crate::engine::{CoreOptions, EngineCore, RealExecutor};
 use crate::kvcache::KvCacheManager;
-use crate::metrics::{RequestRecord, RunMetrics};
+use crate::metrics::RunMetrics;
 use crate::runtime::RuntimeEngine;
-use crate::sched::{self, EngineState, Phase};
-use crate::util::rng::Rng;
+use crate::sched::{self, EngineState};
 use crate::workload::Trace;
+
+pub use crate::engine::real::chunk_plan;
 
 /// Serving configuration for the real TinyMoE backend.
 #[derive(Clone, Debug)]
@@ -52,15 +56,6 @@ pub struct ServeReport {
     pub iterations: u64,
 }
 
-/// Per-request prefill runtime state (hidden frontier between iterations).
-struct PrefillRt {
-    /// (padded_size, real_tokens, pos) sub-chunks of the current slice.
-    chunks: Vec<(usize, usize, usize)>,
-    /// Hidden literal per sub-chunk at the current layer frontier.
-    hiddens: Vec<xla::Literal>,
-    layers_done: usize,
-}
-
 pub struct RealServer<'e> {
     pub engine: &'e RuntimeEngine,
     opts: ServeOptions,
@@ -70,7 +65,11 @@ impl<'e> RealServer<'e> {
     pub fn new(engine: &'e RuntimeEngine, opts: ServeOptions) -> Result<Self> {
         let m = &engine.manifest.model;
         if opts.max_batch > m.usable_slots() {
-            bail!("max_batch {} exceeds usable slots {}", opts.max_batch, m.usable_slots());
+            bail!(
+                "max_batch {} exceeds usable slots {}",
+                opts.max_batch,
+                m.usable_slots()
+            );
         }
         if opts.max_batch > *m.decode_batches.iter().max().unwrap() {
             bail!("max_batch {} exceeds largest decode variant", opts.max_batch);
@@ -84,6 +83,12 @@ impl<'e> RealServer<'e> {
         let m = self.engine.manifest.model.clone();
         let pad_slack = *m.prefill_chunks.iter().min().unwrap() - 1;
         for r in &trace.requests {
+            // The real backend needs at least one prompt token to seed the
+            // first-token lm_head (the simulator tolerates empty prompts;
+            // PJRT has no row to project).
+            if r.input_len == 0 {
+                bail!("request {} has an empty prompt (real backend needs >= 1 token)", r.id);
+            }
             // KV writes reach max(input + final-chunk padding, input+output);
             // padded tail tokens must not wrap past max_seq (they'd clamp
             // and corrupt real cache entries).
@@ -105,331 +110,24 @@ impl<'e> RealServer<'e> {
         let mut state = EngineState::new(ModelDesc::tinymoe(), kv, self.opts.max_batch);
         let mut policy = sched::build(&sched_cfg, m.n_layers as u32);
 
-        // Synthetic prompts (deterministic per request id).
-        let mut prompts: BTreeMap<u64, Vec<i32>> = BTreeMap::new();
-        for r in &trace.requests {
-            let mut rng = Rng::new(self.opts.seed ^ r.id.wrapping_mul(0x9E37));
-            prompts.insert(
-                r.id,
-                (0..r.input_len)
-                    .map(|_| rng.range_usize(1, m.vocab) as i32)
-                    .collect(),
-            );
-        }
-
-        let mut pools = self.engine.new_pools()?;
-        let mut prefill_rt: BTreeMap<u64, PrefillRt> = BTreeMap::new();
-        let mut outputs: BTreeMap<u64, Vec<i32>> = BTreeMap::new();
-        let mut records: Vec<RequestRecord> = Vec::new();
-        let mut last_token_wall: BTreeMap<u64, f64> = BTreeMap::new();
-
-        let start = Instant::now();
+        let mut exec = RealExecutor::new(self.engine, trace, self.opts.seed)?;
         let t0_steps = self.engine.steps.get();
-        let mut next_arrival = 0usize;
-        let mut iterations = 0u64;
 
-        loop {
-            let now = start.elapsed().as_secs_f64();
-            // Admit arrivals (wall clock in realtime mode; all at once else).
-            while next_arrival < trace.requests.len()
-                && (!self.opts.realtime
-                    || trace.requests[next_arrival].arrival_s <= now)
-            {
-                state.arrive(trace.requests[next_arrival]);
-                next_arrival += 1;
-            }
+        let mut core = EngineCore::new(CoreOptions {
+            horizon_s: 0.0,
+            record_token_times: false,
+            immediate_arrivals: !self.opts.realtime,
+        });
+        core.push_trace(trace);
+        core.drain(&mut exec, policy.as_mut(), &mut state)?;
+        let (metrics, _token_times) = core.finish(&mut exec);
 
-            let Some(plan) = policy.plan(&mut state) else {
-                if next_arrival < trace.requests.len() {
-                    // Idle until next arrival.
-                    let wait = trace.requests[next_arrival].arrival_s - now;
-                    if wait > 0.0 {
-                        std::thread::sleep(std::time::Duration::from_secs_f64(
-                            wait.min(0.005),
-                        ));
-                    }
-                    state.now_s = start.elapsed().as_secs_f64();
-                    continue;
-                }
-                break;
-            };
-            iterations += 1;
-
-            // ---- execute the plan, group by group, in layer order ----
-
-            // Decode side: embed last token of each decoding request once.
-            let decode_ids: Vec<u64> = plan
-                .groups
-                .iter()
-                .flat_map(|g| g.decode.iter().map(|&(id, _)| id))
-                .collect::<std::collections::BTreeSet<_>>()
-                .into_iter()
-                .collect();
-            let mut decode_h: Option<xla::Literal> = None;
-            let (mut slots_vec, mut lens_vec) = (Vec::new(), Vec::new());
-            let mut batch_b = 0usize;
-            if !decode_ids.is_empty() {
-                let b = *m
-                    .decode_batches
-                    .iter()
-                    .find(|&&v| v >= decode_ids.len())
-                    .context("decode batch too large for compiled variants")?;
-                batch_b = b;
-                let scratch = m.scratch_slot() as i32;
-                let mut ids_tok = vec![0i32; b];
-                slots_vec = vec![scratch; b];
-                lens_vec = vec![0i32; b];
-                for (i, rid) in decode_ids.iter().enumerate() {
-                    let r = &state.reqs[rid];
-                    let out = outputs.get(rid).expect("decoding req has outputs");
-                    ids_tok[i] = *out.last().unwrap();
-                    slots_vec[i] = self.slot_of(&state, *rid)? as i32;
-                    // Position where the new token's KV goes = current ctx.
-                    lens_vec[i] = r.ctx_len() as i32 - 1;
-                }
-                decode_h = Some(self.engine.embed(&ids_tok)?);
-            }
-
-            let mut layer_off = 0usize;
-            let mut completed: Vec<(u64, i32)> = Vec::new(); // (req, first token)
-            for g in &plan.groups {
-                let l_begin = layer_off;
-                let l_end = layer_off + g.n_layers as usize;
-                layer_off = l_end;
-
-                // Prefill slices through this group's layers.
-                for w in &g.prefill {
-                    let rid = w.req;
-                    let prompt = &prompts[&rid];
-                    let slot = self.slot_of(&state, rid)? as i32;
-                    let rt = prefill_rt.entry(rid).or_insert_with(|| PrefillRt {
-                        chunks: Vec::new(),
-                        hiddens: Vec::new(),
-                        layers_done: 0,
-                    });
-                    if rt.hiddens.is_empty() {
-                        // New slice: split into compiled chunk sizes & embed.
-                        rt.chunks = chunk_plan(
-                            w.tokens as usize,
-                            w.pos as usize,
-                            &m.prefill_chunks,
-                        );
-                        rt.layers_done = 0;
-                        for &(size, real, pos) in &rt.chunks {
-                            let mut ids = vec![0i32; size];
-                            for i in 0..real {
-                                ids[i] = prompt[pos + i];
-                            }
-                            rt.hiddens.push(self.engine.embed(&ids)?);
-                        }
-                    }
-                    debug_assert_eq!(rt.layers_done, l_begin);
-                    for layer in l_begin..l_end {
-                        for (ci, &(size, _real, pos)) in rt.chunks.iter().enumerate() {
-                            let h = self.engine.layer_prefill(
-                                layer,
-                                size,
-                                &rt.hiddens[ci],
-                                &mut pools,
-                                slot,
-                                pos as i32,
-                            )?;
-                            rt.hiddens[ci] = h;
-                        }
-                    }
-                    rt.layers_done = l_end;
-
-                    if rt.layers_done == m.n_layers {
-                        if w.completes {
-                            // First token: lm_head over the last REAL row.
-                            let &(_, real, _) = rt.chunks.last().unwrap();
-                            let row = self
-                                .engine
-                                .hidden_row(rt.hiddens.last().unwrap(), real - 1)?;
-                            let h1 = self.engine.stack_rows(&[row], 1)?;
-                            let tok = self.engine.lm_head(&h1)?[0];
-                            completed.push((rid, tok));
-                        }
-                        prefill_rt.remove(&rid);
-                    }
-                }
-
-                // Decode through this group's layers.
-                if let Some(h) = decode_h.take() {
-                    let mut h = h;
-                    for layer in l_begin..l_end {
-                        h = self.engine.layer_decode(
-                            layer,
-                            &h,
-                            &mut pools,
-                            &slots_vec,
-                            &lens_vec,
-                        )?;
-                    }
-                    decode_h = Some(h);
-                }
-            }
-
-            let now = start.elapsed().as_secs_f64();
-            state.now_s = now;
-
-            // Decode lm_head: one new token per decoding request.
-            if let Some(h) = decode_h {
-                debug_assert!(batch_b > 0);
-                let toks = self.engine.lm_head(&h)?;
-                for (i, rid) in decode_ids.iter().enumerate() {
-                    let r = state.reqs.get_mut(rid).unwrap();
-                    r.generated += 1;
-                    r.tbts.push(now - last_token_wall[rid]);
-                    last_token_wall.insert(*rid, now);
-                    outputs.get_mut(rid).unwrap().push(toks[i]);
-                    if r.done_decoding() {
-                        r.phase = Phase::Finished;
-                        r.finish_s = Some(now);
-                    }
-                }
-            }
-
-            // Prefill bookkeeping mirrors the simulator: advance progress.
-            {
-                let n_layers = m.n_layers as u32;
-                let mut per_req: BTreeMap<u64, (u32, u32, bool)> = BTreeMap::new();
-                for g in &plan.groups {
-                    for w in &g.prefill {
-                        let e = per_req.entry(w.req).or_insert((w.tokens, 0, false));
-                        e.1 += g.n_layers;
-                        e.2 |= w.completes;
-                    }
-                }
-                for (id, (tokens, layer_sum, completes)) in per_req {
-                    let r = state.reqs.get_mut(&id).unwrap();
-                    r.token_layers_done += tokens as u64 * layer_sum as u64;
-                    if completes {
-                        r.prefill_done = r.req.input_len;
-                    } else {
-                        r.prefill_done = (r.token_layers_done / n_layers as u64) as u32;
-                    }
-                }
-            }
-
-            for (rid, tok) in completed {
-                let r = state.reqs.get_mut(&rid).unwrap();
-                r.phase = Phase::Decoding;
-                r.generated = 1;
-                r.first_token_s = Some(now);
-                last_token_wall.insert(rid, now);
-                outputs.insert(rid, vec![tok]);
-                state.prefilling.retain(|&x| x != rid);
-                if r.done_decoding() {
-                    r.phase = Phase::Finished;
-                    r.finish_s = Some(now);
-                } else {
-                    state.decoding.push(rid);
-                }
-            }
-
-            // Retire finished requests.
-            let done: Vec<u64> = state
-                .decoding
-                .iter()
-                .copied()
-                .filter(|id| state.reqs[id].phase == Phase::Finished)
-                .collect();
-            for id in done {
-                state.decoding.retain(|&x| x != id);
-                let _ = state.kv.release(id);
-                let r = &state.reqs[&id];
-                records.push(RequestRecord {
-                    id,
-                    arrival_s: r.req.arrival_s,
-                    input_len: r.req.input_len,
-                    output_len: r.req.output_len,
-                    ttft_s: r.first_token_s.unwrap() - r.req.arrival_s,
-                    tbts_s: r.tbts.clone(),
-                    finish_s: r.finish_s.unwrap(),
-                });
-            }
-        }
-
-        let mut metrics = RunMetrics::default();
-        metrics.makespan_s = start.elapsed().as_secs_f64();
-        metrics.iterations = iterations;
-        records.sort_by_key(|r| r.id);
-        metrics.requests = records;
+        let iterations = metrics.iterations;
         Ok(ServeReport {
             metrics,
             steps: self.engine.steps.get() - t0_steps,
-            outputs,
+            outputs: exec.outputs,
             iterations,
         })
-    }
-
-    /// A request's pool slot = its single KV block id.
-    fn slot_of(&self, state: &EngineState, id: u64) -> Result<usize> {
-        let table = state
-            .kv
-            .table_of(id)
-            .with_context(|| format!("req {id} has no KV block"))?;
-        Ok(table[0] as usize)
-    }
-}
-
-/// Split `tokens` prompt tokens starting at absolute `pos` into compiled
-/// chunk sizes, padding only the final sub-chunk. Mirrors python
-/// compile.aot.chunk_plan (semantics locked by python tests).
-pub fn chunk_plan(
-    tokens: usize,
-    pos: usize,
-    sizes: &[usize],
-) -> Vec<(usize, usize, usize)> {
-    let biggest = *sizes.iter().max().unwrap();
-    let mut out = Vec::new();
-    let mut rem = tokens;
-    let mut p = pos;
-    while rem >= biggest {
-        out.push((biggest, biggest, p));
-        rem -= biggest;
-        p += biggest;
-    }
-    if rem > 0 {
-        let fit = *sizes.iter().filter(|&&s| s >= rem).min().unwrap();
-        out.push((fit, rem, p));
-    }
-    out
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn chunk_plan_matches_python_semantics() {
-        let sizes = [16usize, 32, 64];
-        assert_eq!(chunk_plan(70, 0, &sizes), vec![(64, 64, 0), (16, 6, 64)]);
-        assert_eq!(chunk_plan(64, 0, &sizes), vec![(64, 64, 0)]);
-        assert_eq!(chunk_plan(1, 10, &sizes), vec![(16, 1, 10)]);
-        assert_eq!(
-            chunk_plan(200, 0, &sizes),
-            vec![(64, 64, 0), (64, 64, 64), (64, 64, 128), (16, 8, 192)]
-        );
-        // offset propagates
-        assert_eq!(chunk_plan(20, 5, &sizes), vec![(32, 20, 5)]);
-    }
-
-    #[test]
-    fn chunk_plan_total_conservation() {
-        let sizes = [16usize, 32, 64];
-        for tokens in 1..400usize {
-            let plan = chunk_plan(tokens, 3, &sizes);
-            let total: usize = plan.iter().map(|&(_, r, _)| r).sum();
-            assert_eq!(total, tokens);
-            // contiguous positions
-            let mut p = 3;
-            for &(size, real, pos) in &plan {
-                assert_eq!(pos, p);
-                assert!(real <= size);
-                p += real;
-            }
-        }
     }
 }

@@ -47,6 +47,14 @@ impl EnergyMeter {
         self.total_j() / total_tokens as f64 * 1e3
     }
 
+    /// Fold another meter's accounting into this one (fleet aggregation).
+    pub fn merge(&mut self, other: &EnergyMeter) {
+        self.static_j += other.static_j;
+        self.memory_j += other.memory_j;
+        self.compute_j += other.compute_j;
+        self.elapsed_s += other.elapsed_s;
+    }
+
     pub fn mean_power_w(&self) -> f64 {
         if self.elapsed_s == 0.0 {
             return 0.0;

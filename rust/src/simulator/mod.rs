@@ -1,47 +1,32 @@
 //! Discrete-event serving simulator.
 //!
-//! Advances in engine iterations (the natural clock of LLM serving): each
-//! step asks the scheduler for an `IterationPlan`, costs it on the roofline
-//! model, charges traffic + energy, and applies the plan's effects to
-//! request state (prefill progress, token emissions, completions). Between
-//! work, time skips to the next arrival (idle energy charged).
-//!
-//! The engine also *validates* the scheduler against the paper's invariants
-//! on every iteration (debug assertions + accounting checks):
-//!   I1 at most one group prefills per iteration,
-//!   I2 token·layer prefill conservation per request,
-//!   I3 each decoding request decodes exactly once per iteration
-//!      (its groups' layer counts sum to n_layers),
-//!   I4 layered cohorts complete in exactly G iterations (tested at the
-//!      policy level).
+//! A thin facade over the shared engine core (`crate::engine`): the
+//! canonical plan → execute → account → advance loop runs in
+//! [`EngineCore`](crate::engine::EngineCore) with a
+//! [`SimExecutor`](crate::engine::SimExecutor) backend that prices each
+//! iteration on the roofline model, charges traffic + energy, and advances
+//! a virtual clock (idle gaps jump to the next arrival, charging idle
+//! energy). The paper's scheduling invariants I1–I3 are validated by the
+//! core on every iteration; I4 is tested at the policy level.
 
 pub mod cost;
 pub mod energy;
 
 use crate::config::HardwareDesc;
-use crate::metrics::{RequestRecord, RunMetrics};
+use crate::engine::{CoreOptions, EngineCore, SimExecutor};
+use crate::metrics::RunMetrics;
 use crate::model::WorkAnalytics;
-use crate::sched::{EngineState, IterationPlan, Phase, Scheduler};
+use crate::sched::{EngineState, Scheduler};
 use crate::workload::Trace;
 use cost::CostModel;
-use energy::EnergyMeter;
 
 /// Options for a simulation run.
-#[derive(Clone, Debug)]
+#[derive(Clone, Copy, Debug, Default)]
 pub struct SimOptions {
     /// Stop after this many seconds of simulated time (0 = run to drain).
     pub horizon_s: f64,
     /// Record per-request token timestamps (Fig 5) — costs memory.
     pub record_token_times: bool,
-}
-
-impl Default for SimOptions {
-    fn default() -> Self {
-        SimOptions {
-            horizon_s: 0.0,
-            record_token_times: false,
-        }
-    }
 }
 
 pub struct Simulator {
@@ -69,232 +54,44 @@ impl Simulator {
         self
     }
 
-    /// Run `sched` over `trace`, returning aggregated metrics.
+    /// Run `sched` over `trace`, returning aggregated metrics. Delegates to
+    /// the shared engine core — the identical loop the real PJRT server and
+    /// the cluster replicas run.
     pub fn run(
         &self,
         sched: &mut dyn Scheduler,
         state: &mut EngineState,
         trace: &Trace,
     ) -> (RunMetrics, SimExtra) {
-        let mut metrics = RunMetrics::default();
-        let mut extra = SimExtra::default();
-        let mut energy = EnergyMeter::new();
-        let mut next_arrival = 0usize;
-        let mut decode_batch_weighted = 0.0f64;
-        let mut busy_time = 0.0f64;
-        let mut emitted_total: u64 = 0;
-        let n_layers = state.model.n_layers;
-
-        loop {
-            // Deliver arrivals up to the current clock.
-            while next_arrival < trace.requests.len()
-                && trace.requests[next_arrival].arrival_s <= state.now_s + 1e-12
-            {
-                state.arrive(trace.requests[next_arrival]);
-                next_arrival += 1;
-            }
-
-            let plan = sched.plan(state);
-            let Some(plan) = plan else {
-                // Idle: jump to next arrival or finish.
-                if next_arrival < trace.requests.len() {
-                    let gap = trace.requests[next_arrival].arrival_s - state.now_s;
-                    if gap > 0.0 {
-                        energy.charge_idle(&self.cost.hw, gap);
-                    }
-                    state.now_s = trace.requests[next_arrival].arrival_s;
-                    continue;
-                }
-                break; // drained
-            };
-
-            self.validate_plan(&plan, state, n_layers);
-
-            let c = self.cost.iteration(&plan);
-            state.now_s += c.duration_s;
-            busy_time += c.duration_s;
-            energy.charge_iteration(&self.cost.hw, &c);
-            metrics.iterations += 1;
-            metrics.traffic.iterations += 1;
-            metrics.traffic.expert_bytes += c.expert_bytes;
-            metrics.traffic.dense_bytes += c.dense_bytes;
-            metrics.traffic.kv_bytes += c.kv_bytes;
-            metrics.traffic.act_bytes += c.act_bytes;
-
-            // ---- apply plan effects ----
-            let now = state.now_s;
-
-            // Prefill progress. Layered policies emit the same (req, tokens)
-            // slice against successive groups across iterations; token-axis
-            // progress (prefill_done) advances only when the slice completes
-            // or when the group set covers the whole stack in one iteration.
-            let mut completed_prefills: Vec<(u64, u32)> = Vec::new();
-            {
-                // Collect per-request (tokens, layer_sum, completes, pos).
-                use std::collections::BTreeMap;
-                let mut per_req: BTreeMap<u64, (u32, u32, bool, u32)> = BTreeMap::new();
-                for g in &plan.groups {
-                    for w in &g.prefill {
-                        let e = per_req.entry(w.req).or_insert((w.tokens, 0, false, w.pos));
-                        e.1 += g.n_layers;
-                        e.2 |= w.completes;
-                        e.3 = w.pos;
-                    }
-                }
-                for (id, (tokens, layer_sum, completes, pos)) in per_req {
-                    let r = state.reqs.get_mut(&id).unwrap();
-                    // I2 accounting: token-layers processed this iteration.
-                    r.token_layers_done += tokens as u64 * layer_sum as u64;
-                    if completes {
-                        debug_assert_eq!(
-                            r.token_layers_done,
-                            r.req.input_len as u64 * n_layers as u64,
-                            "I2 violated for req {id}"
-                        );
-                        r.prefill_done = r.req.input_len;
-                        completed_prefills.push((id, pos));
-                    } else {
-                        // Token-axis progress = tokens fully through the
-                        // stack. Exact at chunk boundaries for every policy:
-                        // chunked advances by the chunk each iteration;
-                        // layered/hybrid reach a whole multiple once their
-                        // group cursor wraps (mid-cohort fractions are
-                        // conservative and never read by those policies).
-                        r.prefill_done =
-                            (r.token_layers_done / n_layers as u64) as u32;
-                    }
-                }
-            }
-
-            for (id, _) in completed_prefills {
-                let r = state.reqs.get_mut(&id).unwrap();
-                r.phase = Phase::Decoding;
-                r.generated = 1; // first token from prefill
-                r.first_token_s = Some(now);
-                if self.opts.record_token_times {
-                    r.token_times.push(now);
-                }
-                emitted_total += 1;
-                state.prefilling.retain(|&x| x != id);
-                state.decoding.push(id);
-            }
-
-            // Decode progress: each decoding request scheduled this
-            // iteration emits exactly one token.
-            let mut decode_ids: Vec<u64> = Vec::new();
-            {
-                use std::collections::BTreeSet;
-                let mut set = BTreeSet::new();
-                for g in &plan.groups {
-                    for &(id, _) in &g.decode {
-                        set.insert(id);
-                    }
-                }
-                decode_ids.extend(set);
-            }
-            decode_batch_weighted += decode_ids.len() as f64 * c.duration_s;
-
-            let mut finished: Vec<u64> = Vec::new();
-            for id in decode_ids {
-                let r = state.reqs.get_mut(&id).unwrap();
-                if r.done_decoding() {
-                    continue; // finished earlier this iteration boundary
-                }
-                r.generated += 1;
-                r.tbts.push(c.duration_s);
-                if self.opts.record_token_times {
-                    r.token_times.push(now);
-                }
-                emitted_total += 1;
-                if r.done_decoding() {
-                    r.phase = Phase::Finished;
-                    r.finish_s = Some(now);
-                    finished.push(id);
-                }
-            }
-            // Requests whose output_len == 1 finish at prefill.
-            let one_shot: Vec<u64> = state
-                .decoding
-                .iter()
-                .copied()
-                .filter(|id| {
-                    let r = &state.reqs[id];
-                    r.done_decoding() && r.phase != Phase::Finished
-                })
-                .collect();
-            for id in one_shot {
-                let r = state.reqs.get_mut(&id).unwrap();
-                r.phase = Phase::Finished;
-                r.finish_s = Some(now);
-                finished.push(id);
-            }
-
-            for id in finished {
-                state.decoding.retain(|&x| x != id);
-                let _ = state.kv.release(id);
-                let r = &state.reqs[&id];
-                metrics.requests.push(RequestRecord {
-                    id,
-                    arrival_s: r.req.arrival_s,
-                    input_len: r.req.input_len,
-                    output_len: r.req.output_len,
-                    ttft_s: r.first_token_s.unwrap() - r.req.arrival_s,
-                    tbts_s: r.tbts.clone(),
-                    finish_s: r.finish_s.unwrap(),
-                });
-                if self.opts.record_token_times {
-                    extra
-                        .token_times
-                        .push((id, state.reqs[&id].token_times.clone()));
-                }
-            }
-
-            metrics.token_timeline.push((now, emitted_total));
-
-            if self.opts.horizon_s > 0.0 && state.now_s > self.opts.horizon_s {
-                break;
-            }
-        }
-
-        metrics.makespan_s = state.now_s;
-        metrics.avg_decode_batch = if busy_time > 0.0 {
-            decode_batch_weighted / busy_time
-        } else {
-            0.0
-        };
-        metrics.energy = energy;
-        metrics.requests.sort_by_key(|r| r.id);
-        (metrics, extra)
+        let mut exec = SimExecutor::new(self.cost.clone()).starting_at(state.now_s);
+        let mut core = EngineCore::new(CoreOptions {
+            horizon_s: self.opts.horizon_s,
+            record_token_times: self.opts.record_token_times,
+            immediate_arrivals: false,
+        });
+        core.push_trace(trace);
+        core.drain(&mut exec, sched, state)
+            .expect("sim executor is infallible");
+        let (metrics, token_times) = core.finish(&mut exec);
+        (metrics, SimExtra { token_times })
     }
+}
 
-    /// Plan-level invariant checks (I1, I3, layer totals).
-    fn validate_plan(&self, plan: &IterationPlan, state: &EngineState, n_layers: u32) {
-        debug_assert!(
-            plan.prefill_groups() <= 1,
-            "I1 violated: {} groups prefill in one iteration",
-            plan.prefill_groups()
-        );
-        // I3: every decoding request appears in groups totalling n_layers.
-        use std::collections::BTreeMap;
-        let mut decode_layers: BTreeMap<u64, u32> = BTreeMap::new();
-        for g in &plan.groups {
-            for &(id, _) in &g.decode {
-                *decode_layers.entry(id).or_insert(0) += g.n_layers;
-            }
-        }
-        for (&id, &layers) in &decode_layers {
-            debug_assert_eq!(
-                layers, n_layers,
-                "I3 violated: decode req {id} covers {layers}/{n_layers} layers"
-            );
-        }
-        for &id in &state.decoding {
-            debug_assert!(
-                decode_layers.contains_key(&id),
-                "I3 violated: decoding req {id} not scheduled"
-            );
-        }
-    }
+/// Default engine state for a (model, hardware, scheduler) combination: KV
+/// pool sized from the HBM left over after model weights. Shared by
+/// `simulate` and the cluster layer so single- and multi-replica runs are
+/// bit-identical at N = 1.
+pub fn default_engine_state(
+    model: &crate::config::ModelDesc,
+    hw: &HardwareDesc,
+    sched_cfg: &crate::config::SchedulerConfig,
+) -> EngineState {
+    use crate::kvcache::KvCacheManager;
+    // KV pool: leave model weights resident, give the rest to KV.
+    let weight_bytes = model.total_params() as f64 * model.dtype_bytes as f64;
+    let kv_budget = (hw.hbm_capacity - weight_bytes).max(1e9) * 0.9;
+    let kv = KvCacheManager::from_capacity(kv_budget, model.kv_bytes_per_token, 16);
+    EngineState::new(model.clone(), kv, sched_cfg.max_batch)
 }
 
 /// Convenience: run one (policy, model, hardware, trace) combination.
@@ -305,13 +102,8 @@ pub fn simulate(
     trace: &Trace,
     opts: SimOptions,
 ) -> (RunMetrics, SimExtra) {
-    use crate::kvcache::KvCacheManager;
     let analytics = WorkAnalytics::new(model.clone());
-    // KV pool: leave model weights resident, give the rest to KV.
-    let weight_bytes = model.total_params() as f64 * model.dtype_bytes as f64;
-    let kv_budget = (hw.hbm_capacity - weight_bytes).max(1e9) * 0.9;
-    let kv = KvCacheManager::from_capacity(kv_budget, model.kv_bytes_per_token, 16);
-    let mut state = EngineState::new(model.clone(), kv, sched_cfg.max_batch);
+    let mut state = default_engine_state(&model, &hw, sched_cfg);
     let mut sched = crate::sched::build(sched_cfg, model.n_layers);
     let sim = Simulator::new(hw, analytics).with_options(opts);
     sim.run(sched.as_mut(), &mut state, trace)

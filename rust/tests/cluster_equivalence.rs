@@ -1,0 +1,139 @@
+//! Cluster / engine-core equivalence: the acceptance anchor for the shared
+//! iteration loop. A 1-replica cluster behind a round-robin router must
+//! reproduce the single-engine simulator EXACTLY (same core, same executor,
+//! same arithmetic), and multi-replica fleets must complete every request
+//! with sane fleet aggregates under the paper's ShareGPT-style traces.
+
+use layered_prefill::cluster::{Cluster, ReplicaSpec, RoundRobin, SloAware};
+use layered_prefill::config::{
+    Dataset, HardwareDesc, ModelDesc, Policy, SchedulerConfig, WorkloadSpec,
+};
+use layered_prefill::simulator::{simulate, SimOptions};
+use layered_prefill::workload::{Trace, WorkloadGen};
+
+fn sharegpt_trace(n: usize, rate: f64, seed: u64) -> Trace {
+    let mut spec = WorkloadSpec::new(Dataset::ShareGpt, rate, n);
+    spec.seed = seed;
+    WorkloadGen::new(spec).generate()
+}
+
+#[test]
+fn n1_round_robin_matches_single_engine_exactly() {
+    let model = ModelDesc::qwen3_30b_a3b();
+    let hw = HardwareDesc::h100x2();
+    for policy in [Policy::Layered, Policy::Chunked, Policy::Hybrid] {
+        let trace = sharegpt_trace(40, 2.0, 0xA11CE);
+        let cfg = SchedulerConfig::preset(policy);
+        let (single, _) = simulate(
+            model.clone(),
+            hw.clone(),
+            &cfg,
+            &trace,
+            SimOptions::default(),
+        );
+
+        let spec = ReplicaSpec::new(model.clone(), hw.clone(), policy);
+        let rep = Cluster::homogeneous(1, spec, Box::new(RoundRobin::new())).run(&trace);
+        let fleet = &rep.fleet;
+
+        assert_eq!(fleet.requests.len(), single.requests.len(), "{policy:?}");
+        assert_eq!(fleet.iterations, single.iterations, "{policy:?}");
+        for (a, b) in fleet.requests.iter().zip(&single.requests) {
+            assert_eq!(a.id, b.id);
+            assert!(
+                (a.ttft_s - b.ttft_s).abs() < 1e-12,
+                "{policy:?} req {}: TTFT {} vs {}",
+                a.id,
+                a.ttft_s,
+                b.ttft_s
+            );
+            assert!((a.finish_s - b.finish_s).abs() < 1e-12);
+            assert_eq!(a.tbts_s.len(), b.tbts_s.len());
+            for (x, y) in a.tbts_s.iter().zip(&b.tbts_s) {
+                assert!((x - y).abs() < 1e-12, "{policy:?} req {} tbt", a.id);
+            }
+        }
+        assert!((fleet.makespan_s - single.makespan_s).abs() < 1e-9);
+        assert!(
+            (fleet.traffic.expert_bytes - single.traffic.expert_bytes).abs()
+                <= 1e-6 * single.traffic.expert_bytes.abs()
+        );
+        assert!(
+            (fleet.energy.total_j() - single.energy.total_j()).abs()
+                <= 1e-9 * single.energy.total_j().abs().max(1.0)
+        );
+        assert!((fleet.avg_decode_batch - single.avg_decode_batch).abs() < 1e-9);
+        // And so the derived percentiles the paper plots agree too.
+        assert!(
+            (fleet.ttft_samples().p99() - single.ttft_samples().p99()).abs() < 1e-12,
+            "{policy:?} TTFT p99"
+        );
+        assert!(
+            (fleet.tbt_samples().p99() - single.tbt_samples().p99()).abs() < 1e-12,
+            "{policy:?} TBT p99"
+        );
+    }
+}
+
+#[test]
+fn four_replica_fleet_serves_paper_trace() {
+    let model = ModelDesc::qwen3_30b_a3b();
+    let hw = HardwareDesc::h100x2();
+    // 4 replicas at 4x single-engine load: the fleet must complete all
+    // requests, and aggregates must be the union of replica parts.
+    let trace = sharegpt_trace(80, 8.0, 7);
+    let spec = ReplicaSpec::new(model, hw, Policy::Layered);
+    let rep = Cluster::homogeneous(4, spec, Box::new(RoundRobin::new())).run(&trace);
+
+    assert_eq!(rep.fleet.requests.len(), 80);
+    assert_eq!(rep.assignment_counts(), vec![20, 20, 20, 20]);
+    let sum: usize = rep.per_replica.iter().map(|m| m.requests.len()).sum();
+    assert_eq!(sum, 80);
+    for r in &rep.fleet.requests {
+        assert!(r.ttft_s > 0.0);
+        assert_eq!(r.tbts_s.len() as u32 + 1, r.output_len);
+    }
+    // Fleet percentiles exist and are ordered.
+    let mut ttft = rep.fleet.ttft_samples();
+    assert!(ttft.p50() <= ttft.p99());
+    assert!(rep.fleet.tbt_samples().mean() > 0.0);
+    // Four replicas sharing the load must beat one replica eating 8 req/s.
+    let (single, _) = simulate(
+        ModelDesc::qwen3_30b_a3b(),
+        HardwareDesc::h100x2(),
+        &SchedulerConfig::preset(Policy::Layered),
+        &trace,
+        SimOptions::default(),
+    );
+    assert!(
+        rep.fleet.ttft_samples().mean() < single.ttft_samples().mean(),
+        "fleet TTFT {:.3}s !< single-engine {:.3}s",
+        rep.fleet.ttft_samples().mean(),
+        single.ttft_samples().mean()
+    );
+}
+
+#[test]
+fn heterogeneous_slo_fleet_serves_and_routes_by_length() {
+    let model = ModelDesc::qwen3_30b_a3b();
+    let hw = HardwareDesc::h100x2();
+    let specs = vec![
+        ReplicaSpec::new(model.clone(), hw.clone(), Policy::Layered),
+        ReplicaSpec::new(model.clone(), hw.clone(), Policy::Layered),
+        ReplicaSpec::new(model.clone(), hw.clone(), Policy::Chunked),
+        ReplicaSpec::new(model.clone(), hw.clone(), Policy::Chunked),
+    ];
+    let trace = sharegpt_trace(60, 6.0, 99);
+    let rep = Cluster::new(specs, Box::new(SloAware::new(2048))).run(&trace);
+    assert_eq!(rep.fleet.requests.len(), 60);
+    for (rid, idx) in &rep.assignments {
+        let req = trace.requests.iter().find(|r| r.id == *rid).unwrap();
+        let on_layered = *idx < 2;
+        assert_eq!(
+            on_layered,
+            req.input_len >= 2048,
+            "req {rid} (len {}) routed to replica {idx}",
+            req.input_len
+        );
+    }
+}

@@ -1,0 +1,135 @@
+//! Vendored minimal `anyhow`-compatible shim.
+//!
+//! The offline build cannot fetch crates.io, so this crate provides the
+//! small API surface `layered-prefill` uses: [`Error`], [`Result`], the
+//! [`Context`] extension trait, and the `anyhow!` / `bail!` macros. Error
+//! values are a flat message string with contexts prepended — no backtrace,
+//! no downcasting. Swapping in the real `anyhow` crate is source-compatible
+//! for this codebase.
+
+use std::fmt;
+
+/// A flat, human-readable error: contexts are prepended as `ctx: cause`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context line, anyhow-style.
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Error {
+        Error {
+            msg: format!("{ctx}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like real anyhow: any std error converts into `Error` (and `Error` itself
+// deliberately does NOT implement `std::error::Error`, so this blanket impl
+// does not overlap the reflexive `From<T> for T`).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to `Result`
+/// and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error {
+            msg: format!("{ctx}: {e}"),
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error {
+            msg: format!("{}: {e}", f()),
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error {
+            msg: ctx.to_string(),
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error {
+            msg: f().to_string(),
+        })
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($t:tt)+) => { $crate::Error::msg(format!($($t)+)) };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)+) => { return Err($crate::anyhow!($($t)+)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn context_chains() {
+        let r: Result<()> = Err(io_err().into());
+        let r = r.context("outer");
+        assert_eq!(format!("{}", r.unwrap_err()), "outer: gone");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let e = none.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "missing 7");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            if x == 0 {
+                bail!("zero ({x})");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(0).unwrap_err().to_string(), "zero (0)");
+        let e = anyhow!("code {}", 42);
+        assert_eq!(e.to_string(), "code 42");
+    }
+}

@@ -1,0 +1,251 @@
+//! Vendored stub of the `xla` (PJRT) crate API surface used by
+//! `layered-prefill`.
+//!
+//! The offline build has no PJRT plugin and no network access, so this crate
+//! provides the exact types and signatures the runtime layer compiles
+//! against, with host-side [`Literal`] buffers implemented for real and
+//! every device operation (`PjRtClient::cpu`, HLO compilation, execution)
+//! returning a descriptive [`Error`]. The serving paths that need PJRT are
+//! all gated on `artifacts_available()`, so the stub is never reached in
+//! tests/CI; to run the real server, point the `xla` path dependency in
+//! `rust/Cargo.toml` at the actual crate — the API below is a strict subset.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+
+    fn unavailable(what: &str) -> Error {
+        Error::new(format!(
+            "{what}: PJRT runtime not available in this build \
+             (vendored xla stub — see rust/vendor/xla)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types [`Literal`] can hold (subset used by the serving stack).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    I32,
+}
+
+/// Marker trait for native element types storable in a [`Literal`].
+pub trait NativeType: Copy {
+    const TYPE: ElementType;
+    fn to_storage(data: &[Self]) -> Storage;
+    fn from_storage(s: &Storage) -> Option<Vec<Self>>;
+}
+
+#[derive(Clone, Debug)]
+pub enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Storage {
+    fn len(&self) -> usize {
+        match self {
+            Storage::F32(v) => v.len(),
+            Storage::I32(v) => v.len(),
+        }
+    }
+}
+
+impl NativeType for f32 {
+    const TYPE: ElementType = ElementType::F32;
+    fn to_storage(data: &[Self]) -> Storage {
+        Storage::F32(data.to_vec())
+    }
+    fn from_storage(s: &Storage) -> Option<Vec<Self>> {
+        match s {
+            Storage::F32(v) => Some(v.clone()),
+            Storage::I32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TYPE: ElementType = ElementType::I32;
+    fn to_storage(data: &[Self]) -> Storage {
+        Storage::I32(data.to_vec())
+    }
+    fn from_storage(s: &Storage) -> Option<Vec<Self>> {
+        match s {
+            Storage::I32(v) => Some(v.clone()),
+            Storage::F32(_) => None,
+        }
+    }
+}
+
+/// Dimensions of an array-shaped literal.
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Host-side tensor value. Fully functional (construction, reshape,
+/// readback); only device transfer/execution requires real PJRT.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    storage: Storage,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a native slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            storage: T::to_storage(data),
+            dims: vec![data.len() as i64],
+        }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let numel: i64 = dims.iter().product();
+        if numel as usize != self.storage.len() {
+            return Err(Error::new(format!(
+                "reshape: {} elements into shape {:?}",
+                self.storage.len(),
+                dims
+            )));
+        }
+        Ok(Literal {
+            storage: self.storage.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape {
+            dims: self.dims.clone(),
+        })
+    }
+
+    /// Read the flat host buffer back.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::from_storage(&self.storage)
+            .ok_or_else(|| Error::new("to_vec: element type mismatch"))
+    }
+
+    /// Destructure a tuple literal. Stub literals are never tuples (tuples
+    /// only arise from PJRT execution results).
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module (stub: never constructible — parsing requires XLA).
+pub struct HloModuleProto {
+    _p: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+pub struct XlaComputation {
+    _p: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _p: () }
+    }
+}
+
+/// PJRT client (stub: construction always fails).
+pub struct PjRtClient {
+    _p: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _p: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+pub struct PjRtBuffer {
+    _p: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(l.array_shape().unwrap().dims(), &[6]);
+        let m = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(m.array_shape().unwrap().dims(), &[2, 3]);
+        assert_eq!(m.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[7]).is_err());
+        assert!(m.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn i32_literals() {
+        let l = Literal::vec1(&[4i32, 5]);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![4, 5]);
+    }
+
+    #[test]
+    fn device_paths_fail_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/nope").is_err());
+        let e = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(e.contains("stub"), "{e}");
+    }
+}
