@@ -6,10 +6,11 @@
 //!
 //! Run: cargo run --release --example cluster_sweep [-- --requests 120 --rate 8]
 
-use layered_prefill::cluster::{build_router, Cluster, ReplicaSpec};
+use layered_prefill::cluster::{build_router, ReplicaSpec};
 use layered_prefill::config::{
     Dataset, HardwareDesc, ModelDesc, Policy, SloSpec, WorkloadSpec,
 };
+use layered_prefill::serve::Session;
 use layered_prefill::util::cli::Args;
 use layered_prefill::util::table::{f1, f2, f3, pct, Table};
 use layered_prefill::workload::WorkloadGen;
@@ -67,7 +68,12 @@ fn main() {
                 .map(|&p| ReplicaSpec::new(model.clone(), hw.clone(), p))
                 .collect();
             let router = build_router(router_name).expect("router");
-            let rep = Cluster::new(specs, router).run(&trace);
+            let rep = Session::builder()
+                .replica_specs(specs)
+                .router(router)
+                .trace(&trace)
+                .run()
+                .expect("sim sessions are infallible");
             let m = &rep.fleet;
             t.row(&[
                 fleet_name.to_string(),

@@ -3,6 +3,9 @@
 //! workload under chunked, layered, and hybrid prefill, measuring
 //! wall-clock TTFT / TBT / throughput — proving all three layers
 //! (Pallas kernels -> JAX model -> rust coordinator) compose.
+//! `RealServer::serve` routes through `serve::Session` with a PJRT
+//! executor factory, so this exercises the same run surface as the
+//! simulator examples.
 //!
 //! Requires `make artifacts`. Run:
 //!   cargo run --release --example e2e_serve [-- --requests 16 --rate 4.0]

@@ -5,10 +5,8 @@
 //!
 //! Run: cargo run --release --example energy_report
 
-use layered_prefill::config::{
-    Dataset, HardwareDesc, ModelDesc, Policy, SchedulerConfig, WorkloadSpec,
-};
-use layered_prefill::simulator::{simulate, SimOptions};
+use layered_prefill::config::{Dataset, ModelDesc, Policy, WorkloadSpec};
+use layered_prefill::serve::Session;
 use layered_prefill::util::table::Table;
 use layered_prefill::workload::WorkloadGen;
 
@@ -28,14 +26,13 @@ fn main() {
             "expert TB", "dense TB", "KV TB",
         ]);
         for policy in [Policy::Chunked, Policy::Layered, Policy::Hybrid] {
-            let cfg = SchedulerConfig::preset(policy);
-            let (m, _) = simulate(
-                model.clone(),
-                HardwareDesc::h100x2(),
-                &cfg,
-                &trace,
-                SimOptions::default(),
-            );
+            let report = Session::builder()
+                .model(model.clone())
+                .policy(policy)
+                .trace(&trace)
+                .run()
+                .expect("sim sessions are infallible");
+            let m = report.fleet;
             t.row(&[
                 policy.name().to_string(),
                 format!("{:.1}", m.energy.static_j / 1e3),

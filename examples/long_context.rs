@@ -7,10 +7,8 @@
 //!
 //! Run: cargo run --release --example long_context
 
-use layered_prefill::config::{
-    Dataset, HardwareDesc, ModelDesc, Policy, SchedulerConfig, WorkloadSpec,
-};
-use layered_prefill::simulator::{simulate, SimOptions};
+use layered_prefill::config::{Dataset, ModelDesc, Policy, WorkloadSpec};
+use layered_prefill::serve::Session;
 use layered_prefill::workload::{Request, Trace, WorkloadGen};
 
 fn main() {
@@ -36,14 +34,13 @@ fn main() {
         "policy", "TBT p99(ms)", "TBT max(ms)", "chat TTFT(s)", "32k TTFT(s)", "expert TB"
     );
     for policy in [Policy::Orca, Policy::Chunked, Policy::Layered, Policy::Hybrid] {
-        let cfg = SchedulerConfig::preset(policy);
-        let (m, _) = simulate(
-            model.clone(),
-            HardwareDesc::h100x2(),
-            &cfg,
-            &trace,
-            SimOptions::default(),
-        );
+        let report = Session::builder()
+            .model(model.clone())
+            .policy(policy)
+            .trace(&trace)
+            .run()
+            .expect("sim sessions are infallible");
+        let m = report.fleet;
         let mut tbt = m.tbt_samples();
         let chat_ttft: f64 = m
             .requests

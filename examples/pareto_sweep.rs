@@ -5,10 +5,8 @@
 //!
 //! Run: cargo run --release --example pareto_sweep [-- --dataset arxiv]
 
-use layered_prefill::config::{
-    Dataset, HardwareDesc, ModelDesc, Policy, SchedulerConfig, WorkloadSpec,
-};
-use layered_prefill::simulator::{simulate, SimOptions};
+use layered_prefill::config::{Dataset, ModelDesc, Policy, SchedulerConfig, WorkloadSpec};
+use layered_prefill::serve::Session;
 use layered_prefill::util::cli::Args;
 use layered_prefill::util::table::ascii_chart;
 use layered_prefill::workload::WorkloadGen;
@@ -32,13 +30,13 @@ fn main() {
             let mut spec = WorkloadSpec::new(dataset, rate, n);
             spec.seed = 0xA11CE;
             let trace = WorkloadGen::new(spec).generate();
-            let (m, _) = simulate(
-                model.clone(),
-                HardwareDesc::h100x2(),
-                &cfg,
-                &trace,
-                SimOptions::default(),
-            );
+            let report = Session::builder()
+                .model(model.clone())
+                .scheduler(cfg.clone())
+                .trace(&trace)
+                .run()
+                .expect("sim sessions are infallible");
+            let m = report.fleet;
             let ttft = m.ttft_samples().p99();
             let tbt = m.tbt_samples().p99() * 1e3;
             println!(

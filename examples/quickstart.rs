@@ -1,16 +1,16 @@
-//! Quickstart: the three things the library does, in ~60 lines.
+//! Quickstart: the serve surface in ~60 lines.
 //!
 //!   1. Model a serving workload (paper-fitted length + arrival models).
-//!   2. Simulate chunked vs layered prefill on the paper's 2×H100 testbed.
-//!   3. Compare the metrics the paper optimizes: TTFT, TBT, expert-load
+//!   2. Declare a `Session` per scheduler policy and run it — the ONE run
+//!      API behind the simulator, the real server, and fleet runs.
+//!   3. Subscribe to the typed `EngineEvent` stream to watch the run, and
+//!      compare the metrics the paper optimizes: TTFT, TBT, expert-load
 //!      traffic, energy per token.
 //!
 //! Run: cargo run --release --example quickstart
 
-use layered_prefill::config::{
-    Dataset, HardwareDesc, ModelDesc, Policy, SchedulerConfig, SloSpec, WorkloadSpec,
-};
-use layered_prefill::simulator::{simulate, SimOptions};
+use layered_prefill::config::{Dataset, ModelDesc, Policy, SloSpec, WorkloadSpec};
+use layered_prefill::serve::{EngineEvent, EventLog, Session};
 use layered_prefill::workload::WorkloadGen;
 
 fn main() {
@@ -25,22 +25,36 @@ fn main() {
         trace.total_output_tokens() as f64 / trace.len() as f64,
     );
 
-    // 2. Serve it under both schedulers on the Qwen3-30B-A3B descriptor.
+    // 2. Serve it under both schedulers on the Qwen3-30B-A3B descriptor
+    //    (the builder's defaults are the paper's 2xH100 testbed).
     let model = ModelDesc::qwen3_30b_a3b();
     let slo = SloSpec::paper(&model, Dataset::Arxiv);
     for policy in [Policy::Chunked, Policy::Layered] {
-        let cfg = SchedulerConfig::preset(policy);
-        let (m, _) = simulate(
-            model.clone(),
-            HardwareDesc::h100x2(),
-            &cfg,
-            &trace,
-            SimOptions::default(),
-        );
+        // 3. Observe the run through the typed event stream.
+        let mut log = EventLog::default();
+        let report = Session::builder()
+            .model(model.clone())
+            .policy(policy)
+            .trace(&trace)
+            .sink(&mut log)
+            .run()
+            .expect("sim sessions are infallible");
+        let m = &report.fleet;
 
-        // 3. The paper's headline metrics.
-        println!("\n--- {} prefill ---", policy.name());
-        println!("  TTFT mean/p99: {:.2}/{:.2} s", m.ttft_samples().mean(), m.ttft_samples().p99());
+        let first_tokens = log.count(|e| matches!(e, EngineEvent::FirstToken { .. }));
+        let tokens = log.count(|e| matches!(e, EngineEvent::TokenEmitted { .. }));
+        let kv_rejects = log.count(|e| matches!(e, EngineEvent::KvRejected { .. }));
+
+        println!("\n--- {} prefill ({:?}) ---", policy.name(), report.status);
+        println!(
+            "  events: {} first tokens, {} decode tokens, {} KV rejections",
+            first_tokens, tokens, kv_rejects
+        );
+        println!(
+            "  TTFT mean/p99: {:.2}/{:.2} s",
+            m.ttft_samples().mean(),
+            m.ttft_samples().p99()
+        );
         println!(
             "  TBT  mean/p99: {:.1}/{:.1} ms",
             m.tbt_samples().mean() * 1e3,

@@ -1,33 +1,28 @@
-//! Multi-replica cluster layer: N independent engine replicas fed by a
-//! request [`Router`], co-simulated against one global arrival stream.
+//! Multi-replica routing layer: [`ReplicaSpec`] fleet blueprints, the
+//! request [`Router`] policies ([`RoundRobin`] / [`LeastOutstandingKv`] /
+//! [`SloAware`]), live [`ReplicaView`] load snapshots, and fleet metric
+//! aggregation ([`merge_metrics`]).
 //!
-//! Each replica is a full engine — its own scheduler policy, engine state,
-//! KV manager, and [`SimExecutor`] clock — running the shared core loop.
-//! The cluster advances every replica to each request's arrival instant
-//! (`EngineCore::run_until`), snapshots replica load into [`ReplicaView`]s,
-//! lets the router pick a target, and queues the request there; after the
-//! last arrival, all replicas drain. Routing decisions therefore see the
-//! true engine state at arrival time, exactly like a production front-end
-//! polling its backends.
+//! The run loop itself lives in [`serve::Session`](crate::serve::Session):
+//! a session advances every replica engine to each arrival instant,
+//! snapshots replica load (queue depth, RESIDENT KV blocks, accumulated
+//! `KvRejected` backpressure) into [`ReplicaView`]s, routes, and drains.
+//! With one replica and any router, a session is bit-identical to the raw
+//! single-engine core — the acceptance anchor locked by
+//! `tests/cluster_equivalence.rs`.
 //!
-//! Fleets may be heterogeneous (e.g. layered-prefill replicas for long
-//! prompts next to chunked replicas for short ones, steered by
-//! [`SloAware`]); per-replica and fleet-aggregated [`RunMetrics`] come out
-//! the other end. With one replica and any router, the cluster path is
-//! bit-identical to `simulator::simulate` — the acceptance anchor for the
-//! shared core.
+//! DEPRECATED entry point: [`Cluster::run`] is a thin shim kept for
+//! signature stability; new code should declare fleets with
+//! `Session::builder().replica_specs(..).router(..)`.
 
 pub mod router;
 
 pub use router::{build_router, LeastOutstandingKv, ReplicaView, RoundRobin, Router, SloAware};
 
 use crate::config::{HardwareDesc, ModelDesc, Policy, SchedulerConfig};
-use crate::engine::{CoreOptions, EngineCore, SimExecutor};
 use crate::metrics::RunMetrics;
-use crate::model::WorkAnalytics;
-use crate::sched::{EngineState, Scheduler};
-use crate::simulator::cost::CostModel;
-use crate::simulator::{default_engine_state, SimOptions};
+use crate::serve::Session;
+use crate::simulator::SimOptions;
 use crate::workload::Trace;
 
 /// Blueprint for one replica engine.
@@ -46,74 +41,6 @@ impl ReplicaSpec {
             hw,
             sched: SchedulerConfig::preset(policy),
         }
-    }
-}
-
-/// One live replica: scheduler + engine state + simulated executor + core.
-struct Replica {
-    policy: Policy,
-    sched: Box<dyn Scheduler>,
-    state: EngineState,
-    exec: SimExecutor,
-    core: EngineCore,
-}
-
-impl Replica {
-    fn new(spec: &ReplicaSpec, opts: &SimOptions) -> Self {
-        let state = default_engine_state(&spec.model, &spec.hw, &spec.sched);
-        let sched = crate::sched::build(&spec.sched, spec.model.n_layers);
-        let cost = CostModel::new(spec.hw.clone(), WorkAnalytics::new(spec.model.clone()));
-        Replica {
-            policy: spec.sched.policy,
-            sched,
-            state,
-            exec: SimExecutor::new(cost),
-            core: EngineCore::new(CoreOptions {
-                horizon_s: opts.horizon_s,
-                record_token_times: opts.record_token_times,
-                immediate_arrivals: false,
-            }),
-        }
-    }
-
-    fn run_until(&mut self, t: f64) {
-        self.core
-            .run_until(&mut self.exec, self.sched.as_mut(), &mut self.state, Some(t))
-            .expect("sim executor is infallible");
-    }
-
-    fn drain(&mut self) {
-        self.core
-            .drain(&mut self.exec, self.sched.as_mut(), &mut self.state)
-            .expect("sim executor is infallible");
-    }
-
-    fn view(&self, id: usize) -> ReplicaView {
-        let footprint = |ids: &[u64]| -> u64 {
-            ids.iter()
-                .map(|i| {
-                    let r = &self.state.reqs[i].req;
-                    (r.input_len + r.output_len) as u64
-                })
-                .sum()
-        };
-        let in_engine = footprint(&self.state.waiting)
-            + footprint(&self.state.prefilling)
-            + footprint(&self.state.decoding);
-        ReplicaView {
-            id,
-            policy: self.policy,
-            queued: self.core.pending_len(),
-            active: self.state.prefilling.len() + self.state.decoding.len(),
-            outstanding_kv_tokens: self.core.pending_footprint() + in_engine,
-            kv_free_blocks: self.state.kv.free_blocks(),
-            now_s: self.exec.now(),
-        }
-    }
-
-    fn finish(self) -> (RunMetrics, Vec<(u64, Vec<f64>)>) {
-        let Replica { core, mut exec, .. } = self;
-        core.finish(&mut exec)
     }
 }
 
@@ -142,6 +69,18 @@ impl ClusterReport {
             counts[idx] += 1;
         }
         counts
+    }
+}
+
+impl From<crate::serve::SessionReport> for ClusterReport {
+    fn from(r: crate::serve::SessionReport) -> Self {
+        ClusterReport {
+            per_replica: r.per_replica,
+            policies: r.policies,
+            assignments: r.assignments,
+            fleet: r.fleet,
+            token_times: r.token_times,
+        }
     }
 }
 
@@ -180,49 +119,19 @@ impl Cluster {
         self.router.name()
     }
 
-    /// Serve `trace` across the fleet: route each arrival against live
-    /// replica state, then drain every replica.
-    pub fn run(mut self, trace: &Trace) -> ClusterReport {
-        let mut replicas: Vec<Replica> = self
-            .specs
-            .iter()
-            .map(|s| Replica::new(s, &self.opts))
-            .collect();
-        let mut assignments = Vec::with_capacity(trace.len());
-
-        for req in &trace.requests {
-            // Advance every replica to this arrival instant so the router
-            // observes true load (iteration-boundary granularity).
-            for r in replicas.iter_mut() {
-                r.run_until(req.arrival_s);
-            }
-            let views: Vec<ReplicaView> =
-                replicas.iter().enumerate().map(|(i, r)| r.view(i)).collect();
-            let idx = self.router.route(req, &views) % replicas.len();
-            replicas[idx].core.push(*req);
-            assignments.push((req.id, idx));
-        }
-
-        for r in replicas.iter_mut() {
-            r.drain();
-        }
-
-        let policies: Vec<Policy> = replicas.iter().map(|r| r.policy).collect();
-        let mut per_replica = Vec::with_capacity(replicas.len());
-        let mut token_times = Vec::new();
-        for r in replicas {
-            let (metrics, times) = r.finish();
-            per_replica.push(metrics);
-            token_times.extend(times);
-        }
-        let fleet = merge_metrics(&per_replica);
-        ClusterReport {
-            per_replica,
-            policies,
-            assignments,
-            fleet,
-            token_times,
-        }
+    /// Serve `trace` across the fleet. DEPRECATED shim: builds and runs a
+    /// [`serve::Session`](crate::serve::Session) — the single run surface —
+    /// and repackages its report.
+    pub fn run(self, trace: &Trace) -> ClusterReport {
+        Session::builder()
+            .replica_specs(self.specs)
+            .router(self.router)
+            .trace(trace)
+            .horizon(self.opts.horizon_s)
+            .record_token_times(self.opts.record_token_times)
+            .run()
+            .expect("sim executors are infallible")
+            .into()
     }
 }
 

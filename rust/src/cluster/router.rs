@@ -18,13 +18,34 @@ pub struct ReplicaView {
     pub queued: usize,
     /// Requests admitted or waiting inside the engine (not finished).
     pub active: usize,
-    /// Outstanding KV footprint in tokens: Σ (input + output) over queued,
-    /// waiting, prefilling, and decoding requests.
-    pub outstanding_kv_tokens: u64,
+    /// Declared KV footprint (Σ input + output tokens) of requests queued
+    /// ahead of admission: routed-but-undelivered plus engine-waiting.
+    pub queued_kv_tokens: u64,
+    /// KV blocks RESIDENT in the replica's cache manager right now
+    /// (`KvCacheManager::used_blocks`) — the in-flight prefill + decode
+    /// reservation the queue-only view used to be blind to.
+    pub kv_used_blocks: u32,
+    /// Tokens per KV block (converts resident blocks to token units).
+    pub kv_block_size: u32,
     /// Free KV blocks in the replica's cache manager.
     pub kv_free_blocks: u32,
+    /// Cumulative KV admission rejections this replica has reported — the
+    /// `KvRejected` backpressure count, visible to routers instead of only
+    /// queue depth.
+    pub kv_rejects: u64,
     /// Replica-local engine clock.
     pub now_s: f64,
+}
+
+impl ReplicaView {
+    /// Outstanding KV work in token units: queued (declared) + resident
+    /// (actually reserved). This is the load metric [`LeastOutstandingKv`]
+    /// ranks by; a draining replica keeps a large resident term until its
+    /// requests retire, so it no longer looks idle the moment its queue
+    /// empties.
+    pub fn outstanding_kv_tokens(&self) -> u64 {
+        self.queued_kv_tokens + self.kv_used_blocks as u64 * self.kv_block_size as u64
+    }
 }
 
 /// A routing policy over replica snapshots.
@@ -76,7 +97,7 @@ fn argmin_outstanding(replicas: &[ReplicaView], allow: impl Fn(&ReplicaView) -> 
     for v in replicas.iter().filter(|v| allow(v)) {
         best = match best {
             None => Some(v),
-            Some(b) if v.outstanding_kv_tokens < b.outstanding_kv_tokens => Some(v),
+            Some(b) if v.outstanding_kv_tokens() < b.outstanding_kv_tokens() => Some(v),
             Some(b) => Some(b),
         };
     }
@@ -156,14 +177,17 @@ pub fn build_router(name: &str) -> Option<Box<dyn Router>> {
 mod tests {
     use super::*;
 
-    fn view(id: usize, policy: Policy, outstanding: u64) -> ReplicaView {
+    fn view(id: usize, policy: Policy, queued_kv: u64) -> ReplicaView {
         ReplicaView {
             id,
             policy,
             queued: 0,
             active: 0,
-            outstanding_kv_tokens: outstanding,
+            queued_kv_tokens: queued_kv,
+            kv_used_blocks: 0,
+            kv_block_size: 16,
             kv_free_blocks: 100,
+            kv_rejects: 0,
             now_s: 0.0,
         }
     }
@@ -198,6 +222,23 @@ mod tests {
         ];
         let mut r = LeastOutstandingKv::new();
         assert_eq!(r.route(&req(100), &views), 1);
+    }
+
+    #[test]
+    fn least_kv_sees_resident_kv_not_just_queue() {
+        // Replica 0 is draining: its routed queue is empty, but its engine
+        // still holds a large resident KV reservation for in-flight
+        // requests. A queue-only load metric would call it idle and
+        // dogpile it; the resident term must steer new work to replica 1.
+        let mut draining = view(0, Policy::Layered, 0);
+        draining.kv_used_blocks = 500; // 500 × 16 = 8000 resident tokens
+        let fresh = view(1, Policy::Layered, 0);
+        assert!(draining.outstanding_kv_tokens() > fresh.outstanding_kv_tokens());
+        let mut r = LeastOutstandingKv::new();
+        assert_eq!(r.route(&req(100), &[draining, fresh]), 1);
+        // Once the resident KV retires, the drained replica wins again.
+        draining.kv_used_blocks = 0;
+        assert_eq!(r.route(&req(100), &[draining, fresh]), 0);
     }
 
     #[test]

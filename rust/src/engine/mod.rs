@@ -23,8 +23,13 @@
 //!   clock (idle waits sleep).
 //!
 //! The core is resumable: [`EngineCore::run_until`] executes iterations only
-//! up to a target engine time, which is what lets `cluster::Cluster`
-//! co-simulate N replica engines against one global arrival stream.
+//! up to a target engine time, which is what lets `serve::Session`
+//! co-simulate N replica engines against one global arrival stream. Every
+//! observable transition — arrival delivery, admission / KV rejection,
+//! prefill group completion, token emission, finish, drain, horizon halt —
+//! is also emitted as a typed [`EngineEvent`](crate::serve::EngineEvent)
+//! through [`EngineCore::run_events`]; `run_until` / `drain` are the
+//! sink-less conveniences.
 
 pub mod real;
 pub mod sim;
@@ -37,7 +42,8 @@ use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use anyhow::Result;
 
 use crate::metrics::{RequestRecord, RunMetrics};
-use crate::sched::{EngineState, IterationPlan, Phase, Scheduler};
+use crate::sched::{Admission, EngineState, IterationPlan, Phase, Scheduler};
+use crate::serve::{EngineEvent, EventSink, NullSink};
 use crate::simulator::cost::IterationCost;
 use crate::workload::{Request, Trace};
 
@@ -81,8 +87,12 @@ pub struct CoreOptions {
 pub enum CoreStatus {
     /// Reached the requested engine time with work (possibly) remaining.
     Ran,
-    /// No queued work left and nothing runnable: drained (or past horizon).
+    /// No queued work left and nothing runnable: genuinely drained.
     Drained,
+    /// The horizon was exceeded with `pending` requests still queued or in
+    /// flight. Horizon-sampled (open-loop) runs normally end here; before
+    /// this variant existed they were mislabelled `Drained`.
+    Halted { pending: usize },
 }
 
 /// The canonical iteration loop. Owns arrival queueing and all run-level
@@ -102,6 +112,10 @@ pub struct EngineCore {
     busy_s: f64,
     /// Set once the horizon is exceeded; the run is over.
     halted: bool,
+    /// Replica index stamped onto emitted events (0 for single engines).
+    replica: usize,
+    /// `ReplicaDrained` already emitted (re-armed by new pushes).
+    drained_notified: bool,
 }
 
 impl EngineCore {
@@ -116,11 +130,20 @@ impl EngineCore {
             decode_batch_weighted: 0.0,
             busy_s: 0.0,
             halted: false,
+            replica: 0,
+            drained_notified: false,
         }
+    }
+
+    /// Tag events from this core with a replica index (cluster sessions).
+    pub fn with_replica(mut self, replica: usize) -> Self {
+        self.replica = replica;
+        self
     }
 
     /// Queue one request (callers push in global arrival order).
     pub fn push(&mut self, req: Request) {
+        self.drained_notified = false;
         self.pending.push_back(req);
     }
 
@@ -157,11 +180,11 @@ impl EngineCore {
         sched: &mut dyn Scheduler,
         state: &mut EngineState,
     ) -> Result<CoreStatus> {
-        self.run_until(exec, sched, state, None)
+        self.run_events(exec, sched, state, None, &mut NullSink)
     }
 
-    /// Run iterations until engine time reaches `until_s` (None = drain).
-    /// Idle gaps advance the clock via the executor; the loop never spins.
+    /// Run iterations until engine time reaches `until_s` (None = drain),
+    /// discarding events. See [`EngineCore::run_events`].
     pub fn run_until(
         &mut self,
         exec: &mut dyn Executor,
@@ -169,9 +192,26 @@ impl EngineCore {
         state: &mut EngineState,
         until_s: Option<f64>,
     ) -> Result<CoreStatus> {
+        self.run_events(exec, sched, state, until_s, &mut NullSink)
+    }
+
+    /// Run iterations until engine time reaches `until_s` (None = drain),
+    /// delivering every observable transition to `sink` as a typed
+    /// [`EngineEvent`]. Idle gaps advance the clock via the executor; the
+    /// loop never spins.
+    pub fn run_events(
+        &mut self,
+        exec: &mut dyn Executor,
+        sched: &mut dyn Scheduler,
+        state: &mut EngineState,
+        until_s: Option<f64>,
+        sink: &mut dyn EventSink,
+    ) -> Result<CoreStatus> {
         loop {
             if self.halted {
-                return Ok(CoreStatus::Drained);
+                return Ok(CoreStatus::Halted {
+                    pending: self.pending_work(state),
+                });
             }
             let now = exec.now();
             state.now_s = now;
@@ -182,6 +222,7 @@ impl EngineCore {
                     let r = *head;
                     self.pending.pop_front();
                     state.arrive(r);
+                    sink.on_event(self.replica, &EngineEvent::Arrived { t_s: now, req: r });
                 } else {
                     break;
                 }
@@ -193,14 +234,27 @@ impl EngineCore {
                 }
             }
 
-            let Some(plan) = sched.plan(state) else {
+            let maybe_plan = sched.plan(state);
+            // Admission outcomes (Admitted / KvRejected) are logged by
+            // EngineState::admit during planning; surface them now.
+            self.flush_admissions(state, now, sink);
+            let Some(plan) = maybe_plan else {
                 // Idle: advance to the next arrival or the pacing target —
                 // whichever comes first — or finish the run.
                 match (self.pending.front().map(|r| r.arrival_s), until_s) {
                     (Some(t_arr), Some(t)) => exec.idle_until(t_arr.min(t)),
                     (Some(t_arr), None) => exec.idle_until(t_arr),
                     (None, Some(t)) => exec.idle_until(t),
-                    (None, None) => return Ok(CoreStatus::Drained),
+                    (None, None) => {
+                        if !self.drained_notified {
+                            self.drained_notified = true;
+                            sink.on_event(
+                                self.replica,
+                                &EngineEvent::ReplicaDrained { t_s: now },
+                            );
+                        }
+                        return Ok(CoreStatus::Drained);
+                    }
                 }
                 continue;
             };
@@ -211,12 +265,35 @@ impl EngineCore {
             let now = exec.now();
             state.now_s = now;
             self.account(&cost);
-            self.advance(state, &plan, now, cost.duration_s);
+            self.advance(state, &plan, now, cost.duration_s, sink);
 
             if self.opts.horizon_s > 0.0 && now > self.opts.horizon_s {
                 self.halted = true;
-                return Ok(CoreStatus::Drained);
+                let pending = self.pending_work(state);
+                sink.on_event(self.replica, &EngineEvent::Halted { t_s: now, pending });
+                return Ok(CoreStatus::Halted { pending });
             }
+        }
+    }
+
+    /// Requests not yet finished: undelivered + waiting + in flight.
+    fn pending_work(&self, state: &EngineState) -> usize {
+        self.pending.len()
+            + state.waiting.len()
+            + state.prefilling.len()
+            + state.decoding.len()
+    }
+
+    /// Translate logged admission outcomes into events.
+    fn flush_admissions(&self, state: &mut EngineState, now: f64, sink: &mut dyn EventSink) {
+        for a in state.admissions.drain(..) {
+            let ev = match a {
+                Admission::Admitted { id } => EngineEvent::Admitted { t_s: now, id },
+                Admission::KvRejected { id, demand, free } => {
+                    EngineEvent::KvRejected { t_s: now, id, demand, free }
+                }
+            };
+            sink.on_event(self.replica, &ev);
         }
     }
 
@@ -248,13 +325,15 @@ impl EngineCore {
 
     /// advance: apply the plan's effects to request state at engine time
     /// `now` — prefill progress (I2 accounting), first-token emissions,
-    /// decode emissions, completions, and retirement.
+    /// decode emissions, completions, and retirement — emitting the
+    /// corresponding typed events as it goes.
     fn advance(
         &mut self,
         state: &mut EngineState,
         plan: &IterationPlan,
         now: f64,
         duration_s: f64,
+        sink: &mut dyn EventSink,
     ) {
         let n_layers = state.model.n_layers;
         let mut finished: Vec<u64> = Vec::new();
@@ -275,6 +354,15 @@ impl EngineCore {
                 }
             }
             for (id, (tokens, layer_sum, completes)) in per_req {
+                sink.on_event(
+                    self.replica,
+                    &EngineEvent::PrefillGroupDone {
+                        t_s: now,
+                        id,
+                        layers: layer_sum,
+                        tokens,
+                    },
+                );
                 let r = state.reqs.get_mut(&id).unwrap();
                 // I2 accounting: token·layer units processed this iteration.
                 r.token_layers_done += tokens as u64 * layer_sum as u64;
@@ -305,6 +393,7 @@ impl EngineCore {
             }
             self.emitted_total += 1;
             self.last_emit_s.insert(id, now);
+            sink.on_event(self.replica, &EngineEvent::FirstToken { t_s: now, id });
             state.prefilling.retain(|&x| x != id);
             if r.done_decoding() {
                 // output_len == 1: the request finishes at prefill.
@@ -341,6 +430,14 @@ impl EngineCore {
                 r.token_times.push(now);
             }
             self.emitted_total += 1;
+            sink.on_event(
+                self.replica,
+                &EngineEvent::TokenEmitted {
+                    t_s: now,
+                    id,
+                    generated: r.generated,
+                },
+            );
             if r.done_decoding() {
                 r.phase = Phase::Finished;
                 r.finish_s = Some(now);
@@ -365,6 +462,7 @@ impl EngineCore {
             if self.opts.record_token_times {
                 self.token_times.push((id, r.token_times.clone()));
             }
+            sink.on_event(self.replica, &EngineEvent::Finished { t_s: now, id });
         }
 
         self.metrics.token_timeline.push((now, self.emitted_total));

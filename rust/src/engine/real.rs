@@ -3,7 +3,9 @@
 //! mapping (chunk padding, per-group layer sweeps, batched decode) lives
 //! here; the loop around it is the shared engine core.
 
+use std::cell::RefCell;
 use std::collections::{BTreeMap, BTreeSet};
+use std::rc::Rc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -14,7 +16,10 @@ use crate::runtime::{KvPools, RuntimeEngine, TinyModelCfg};
 use crate::sched::{EngineState, IterationPlan};
 use crate::simulator::cost::IterationCost;
 use crate::util::rng::Rng;
-use crate::workload::Trace;
+
+/// Shared generated-token map: the server keeps a handle so outputs survive
+/// the executor being consumed by a `serve::Session` run.
+pub type OutputHandle = Rc<RefCell<BTreeMap<u64, Vec<i32>>>>;
 
 /// Per-request prefill runtime state (hidden frontier between iterations).
 struct PrefillRt {
@@ -29,38 +34,39 @@ pub struct RealExecutor<'e> {
     engine: &'e RuntimeEngine,
     m: TinyModelCfg,
     pools: KvPools,
-    /// Synthetic prompts, deterministic per request id.
+    seed: u64,
+    /// Synthetic prompts, deterministic per request id, materialized
+    /// lazily on first prefill touch (streaming sources never declare the
+    /// full request set up front).
     prompts: BTreeMap<u64, Vec<i32>>,
     prefill_rt: BTreeMap<u64, PrefillRt>,
     /// Generated token ids per request (for output verification).
-    pub outputs: BTreeMap<u64, Vec<i32>>,
+    pub outputs: OutputHandle,
     start: Instant,
 }
 
 impl<'e> RealExecutor<'e> {
-    /// Build an executor for one serve run: fresh KV pools, synthetic
-    /// prompts for every trace request, wall clock starting now.
-    pub fn new(engine: &'e RuntimeEngine, trace: &Trace, seed: u64) -> Result<Self> {
+    /// Build an executor for one serve run: fresh KV pools, wall clock
+    /// starting now. Prompts are synthesized lazily per request id.
+    pub fn new(engine: &'e RuntimeEngine, seed: u64) -> Result<Self> {
         let m = engine.manifest.model.clone();
-        let mut prompts = BTreeMap::new();
-        for r in &trace.requests {
-            let mut rng = Rng::new(seed ^ r.id.wrapping_mul(0x9E37));
-            prompts.insert(
-                r.id,
-                (0..r.input_len)
-                    .map(|_| rng.range_usize(1, m.vocab) as i32)
-                    .collect::<Vec<i32>>(),
-            );
-        }
         Ok(RealExecutor {
             engine,
             m,
             pools: engine.new_pools()?,
-            prompts,
+            seed,
+            prompts: BTreeMap::new(),
             prefill_rt: BTreeMap::new(),
-            outputs: BTreeMap::new(),
+            outputs: Rc::new(RefCell::new(BTreeMap::new())),
             start: Instant::now(),
         })
+    }
+
+    /// Write generated tokens into a caller-held map instead of a private
+    /// one (must be installed before the first iteration).
+    pub fn with_output_handle(mut self, handle: OutputHandle) -> Self {
+        self.outputs = handle;
+        self
     }
 
     /// A request's pool slot = its single KV block id.
@@ -109,13 +115,16 @@ impl Executor for RealExecutor<'_> {
             let mut ids_tok = vec![0i32; b];
             slots_vec = vec![scratch; b];
             lens_vec = vec![0i32; b];
-            for (i, rid) in decode_ids.iter().enumerate() {
-                let r = &state.reqs[rid];
-                let out = self.outputs.get(rid).expect("decoding req has outputs");
-                ids_tok[i] = *out.last().unwrap();
-                slots_vec[i] = self.slot_of(state, *rid)? as i32;
-                // Position where the new token's KV goes = current ctx.
-                lens_vec[i] = r.ctx_len() as i32 - 1;
+            {
+                let outs = self.outputs.borrow();
+                for (i, rid) in decode_ids.iter().enumerate() {
+                    let r = &state.reqs[rid];
+                    let out = outs.get(rid).expect("decoding req has outputs");
+                    ids_tok[i] = *out.last().unwrap();
+                    slots_vec[i] = self.slot_of(state, *rid)? as i32;
+                    // Position where the new token's KV goes = current ctx.
+                    lens_vec[i] = r.ctx_len() as i32 - 1;
+                }
             }
             decode_h = Some(self.engine.embed(&ids_tok)?);
         }
@@ -131,6 +140,13 @@ impl Executor for RealExecutor<'_> {
             // Prefill slices through this group's layers.
             for w in &g.prefill {
                 let rid = w.req;
+                // Materialize the synthetic prompt lazily (streaming sources
+                // never declare the full request set up front).
+                let input_len = state.reqs[&rid].req.input_len;
+                let (seed, vocab) = (self.seed, m.vocab);
+                self.prompts
+                    .entry(rid)
+                    .or_insert_with(|| synth_prompt(seed, vocab, rid, input_len));
                 let prompt = &self.prompts[&rid];
                 let slot = self.slot_of(state, rid)? as i32;
                 let rt = self.prefill_rt.entry(rid).or_insert_with(|| PrefillRt {
@@ -176,6 +192,11 @@ impl Executor for RealExecutor<'_> {
                         completed.push((rid, tok));
                     }
                     self.prefill_rt.remove(&rid);
+                    if w.completes {
+                        // The prompt is dead once prefill finishes; prune it
+                        // so streaming sessions don't grow memory unboundedly.
+                        self.prompts.remove(&rid);
+                    }
                 }
             }
 
@@ -199,14 +220,17 @@ impl Executor for RealExecutor<'_> {
         if let Some(h) = decode_h {
             debug_assert!(batch_b > 0);
             let toks = self.engine.lm_head(&h)?;
+            let mut outs = self.outputs.borrow_mut();
             for (i, rid) in decode_ids.iter().enumerate() {
-                self.outputs.get_mut(rid).unwrap().push(toks[i]);
+                outs.get_mut(rid).unwrap().push(toks[i]);
             }
         }
 
+        let mut outs = self.outputs.borrow_mut();
         for (rid, tok) in completed {
-            self.outputs.insert(rid, vec![tok]);
+            outs.insert(rid, vec![tok]);
         }
+        drop(outs);
 
         Ok(IterationCost {
             duration_s: self.now() - t0,
@@ -223,6 +247,15 @@ impl Executor for RealExecutor<'_> {
     }
 
     fn finish(&mut self, _metrics: &mut RunMetrics) {}
+}
+
+/// Deterministic synthetic prompt for request `id` (same derivation the
+/// pre-streaming executor used, so outputs replay identically).
+fn synth_prompt(seed: u64, vocab: usize, id: u64, input_len: u32) -> Vec<i32> {
+    let mut rng = Rng::new(seed ^ id.wrapping_mul(0x9E37));
+    (0..input_len)
+        .map(|_| rng.range_usize(1, vocab) as i32)
+        .collect()
 }
 
 /// Split `tokens` prompt tokens starting at absolute `pos` into compiled

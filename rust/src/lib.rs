@@ -5,18 +5,62 @@
 //! three-layer rust + JAX + Pallas serving stack, grown toward a
 //! production-scale multi-replica serving system.
 //!
+//! ## One serve surface: `Session` + the typed `EngineEvent` stream
+//!
+//! Every serving run — a one-engine simulation, the real PJRT server, an
+//! N-replica fleet, an open-loop streaming workload — is declared with the
+//! [`serve::Session`] builder and observed through one typed event stream:
+//!
+//! ```no_run
+//! use layered_prefill::config::{Dataset, Policy};
+//! use layered_prefill::serve::{EventLog, PoissonSource, Session};
+//!
+//! // Two layered-prefill replicas serving an open-loop Poisson stream for
+//! // 30 seconds of engine time, with every engine transition observed.
+//! let mut log = EventLog::default();
+//! let report = Session::builder()
+//!     .policy(Policy::Layered)
+//!     .replicas(2)
+//!     .workload(PoissonSource::open_loop(Dataset::ShareGpt, 4.0, 7, 30.0))
+//!     .horizon(30.0)
+//!     .sink(&mut log)
+//!     .run()
+//!     .expect("sim sessions are infallible");
+//! println!(
+//!     "{:?}: {} finished, {} events",
+//!     report.status,
+//!     report.fleet.requests.len(),
+//!     log.events.len()
+//! );
+//! ```
+//!
+//! A session compiles down to one [`engine::EngineCore`] loop per replica,
+//! an [`engine::Executor`] backend per core, and a
+//! [`cluster::Router`] picking a replica per arrival. The core emits every
+//! observable transition — `Arrived`, `Admitted`, `KvRejected` (admission
+//! backpressure), `PrefillGroupDone`, `FirstToken`, `TokenEmitted`,
+//! `Finished`, `ReplicaDrained`, `Halted` — as a
+//! [`serve::EngineEvent`] through the [`serve::EventSink`] trait, so
+//! schedulers, routers, metrics, and tests all observe the SAME run.
+//! Workload intake is pull-based ([`serve::WorkloadSource`]): sessions
+//! serve pre-materialized traces or lazily sampled open-loop streams, and
+//! a horizon-cut run ends [`serve::SessionStatus::Halted`] with work still
+//! in flight instead of pretending to drain.
+//!
 //! ## Architecture: one engine core, many backends
 //!
-//! Every serving run — simulated, real, or fleet — is the SAME iteration
-//! cycle, owned by [`engine::EngineCore`]:
+//! Each iteration of any run is the same cycle, owned by
+//! [`engine::EngineCore`]:
 //!
 //! ```text
 //!   plan     a sched policy emits an IterationPlan over EngineState
 //!   execute  an engine::Executor runs it (roofline model or PJRT step)
 //!   account  traffic / energy / latency metrics accrue
-//!   advance  plan effects apply to request state; the clock moves
+//!   advance  plan effects apply; typed events emit; the clock moves
 //! ```
 //!
+//! * **`serve`** — the single public run API: `Session` builder, typed
+//!   `EngineEvent` stream, `WorkloadSource` intake.
 //! * **`sched`** — the paper's contribution (layered prefill) and its
 //!   baselines (chunked / Orca / static / §4.3 hybrid), planning per *layer
 //!   group* so layer-axis policies are first-class. Invariants I1–I4 are
@@ -25,17 +69,22 @@
 //!   [`engine::SimExecutor`] (roofline `CostModel` + `EnergyMeter`,
 //!   virtual clock) and [`engine::RealExecutor`] (AOT-compiled TinyMoE via
 //!   PJRT, wall clock).
-//! * **`simulator`** — discrete-event facade over the core: calibrated
-//!   2×H100 roofline, MoE expert-load traffic + energy accounting.
+//! * **`simulator`** — roofline cost/energy models and the raw single-core
+//!   driver; `simulator::simulate` is a deprecated shim over `Session`.
 //! * **`server`** — the real serving engine: identical policies and core
-//!   loop, executing HLO artifacts through the PJRT C API (`runtime`).
-//! * **`cluster`** — N replica engines co-simulated behind a request
-//!   `Router` (round-robin, least-outstanding-KV, SLO-aware long/short
-//!   prompt steering), with per-replica and fleet-aggregated metrics; a
-//!   1-replica cluster is bit-identical to the single-engine simulator.
+//!   loop, executing HLO artifacts through the PJRT C API (`runtime`);
+//!   `RealServer::serve` is a deprecated shim installing the PJRT executor
+//!   factory into a `Session`.
+//! * **`cluster`** — fleet blueprints ([`cluster::ReplicaSpec`]), request
+//!   routers (round-robin, least-outstanding-KV with RESIDENT-KV
+//!   visibility, SLO-aware prompt steering), and fleet metric aggregation;
+//!   `Cluster::run` is a deprecated shim over a multi-replica `Session`.
+//!   A 1-replica session is bit-identical to the raw single-engine core
+//!   (locked by `tests/cluster_equivalence.rs`).
 //! * **`kvcache` / `workload` / `metrics` / `report`** — paged KV manager,
-//!   paper-fitted workload generators with record/replay, latency/SLO/
-//!   traffic metrics, and regenerators for every paper table and figure.
+//!   paper-fitted workload generators with record/replay plus streaming
+//!   sources, latency/SLO/traffic metrics, and regenerators for every
+//!   paper table and figure.
 //!
 //! ## The lower layers
 //!
@@ -59,6 +108,7 @@ pub mod moe;
 pub mod report;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod server;
 pub mod simulator;
 pub mod util;

@@ -4,7 +4,9 @@
 //!   report <table1|fig2|table2|fig3|fig4|table6|table7|fig5|table8|all>
 //!       Regenerate paper tables/figures via the calibrated simulator.
 //!   simulate --model qwen --dataset arxiv --policy layered --rate 1.3
-//!       One simulation run with a metrics summary.
+//!       One simulation run with a metrics summary. `--open-loop
+//!       --horizon 60` streams a Poisson workload through a serve::Session
+//!       and stops at the horizon (Halted) instead of draining.
 //!   sweep --model qwen --dataset arxiv --rates 1.1,1.3,1.5
 //!       SLO attainment sweep (chunked vs layered).
 //!   serve --policy layered --requests 12 --rate 2.0
@@ -98,7 +100,75 @@ fn cmd_report(args: &Args) {
     println!("{out}");
 }
 
+/// Open-loop streaming simulation: a `serve::Session` fed by a lazily
+/// sampled Poisson source, cut off at `--horizon` seconds of engine time.
+/// The run ends `Halted { pending }` when the horizon catches work still
+/// in flight — the continuous-trace regime a drain-to-empty run can't
+/// express.
+fn cmd_simulate_open_loop(args: &Args) {
+    use layered_prefill::serve::{PoissonSource, Session, SessionStatus};
+
+    let model = model_arg(args);
+    let dataset = dataset_arg(args);
+    let policy = policy_arg(args);
+    let rate = args.f64("rate", 1.3);
+    let horizon = args.f64("horizon", 60.0);
+    let seed = args.u64("seed", 0xA11CE);
+    let replicas = args.usize("replicas", 1);
+
+    // --requests bounds the stream if given; otherwise the source is
+    // open-ended and only the horizon ends it.
+    let source = match args.opt("requests").and_then(|v| v.parse::<usize>().ok()) {
+        Some(n) => {
+            let mut wspec = WorkloadSpec::new(dataset, rate, n);
+            wspec.seed = seed;
+            PoissonSource::new(wspec).with_horizon(horizon)
+        }
+        None => PoissonSource::open_loop(dataset, rate, seed, horizon),
+    };
+
+    let report = Session::builder()
+        .model(model.clone())
+        .policy(policy)
+        .replicas(replicas)
+        .workload(source)
+        .horizon(horizon)
+        .run()
+        .expect("sim sessions are infallible");
+
+    let m = &report.fleet;
+    let status = match report.status {
+        SessionStatus::Drained => "drained".to_string(),
+        SessionStatus::Halted { pending } => format!("halted ({pending} pending)"),
+    };
+    let mut t = Table::new(&format!(
+        "open-loop simulate — {} on {} ({}, {} req/s, horizon {}s, {} replica{})",
+        model.name,
+        dataset.name(),
+        policy.name(),
+        rate,
+        horizon,
+        replicas,
+        if replicas == 1 { "" } else { "s" }
+    ))
+    .header(&["metric", "value"]);
+    t.row(&["status".into(), status]);
+    t.row(&["requests finished".into(), m.requests.len().to_string()]);
+    t.row(&["requests routed".into(), report.assignments.len().to_string()]);
+    t.row(&["TTFT mean (s)".into(), f3(m.ttft_samples().mean())]);
+    t.row(&["TTFT p99 (s)".into(), f3(m.ttft_samples().p99())]);
+    t.row(&["TBT p99 (ms)".into(), f2(m.tbt_samples().p99() * 1e3)]);
+    t.row(&["gen throughput (tok/s)".into(), f1(m.gen_throughput())]);
+    t.row(&["iterations".into(), m.iterations.to_string()]);
+    t.row(&["makespan (s)".into(), f1(m.makespan_s)]);
+    t.print();
+}
+
 fn cmd_simulate(args: &Args) {
+    if args.bool("open-loop") {
+        cmd_simulate_open_loop(args);
+        return;
+    }
     let mut spec = RunSpec::new(
         model_arg(args),
         dataset_arg(args),
@@ -192,12 +262,14 @@ fn cmd_serve(args: &Args) {
 }
 
 /// Multi-replica fleet simulation: N replica engines behind a request
-/// router, reporting per-replica and fleet-aggregated latency/traffic.
+/// router — a `serve::Session` — reporting per-replica and
+/// fleet-aggregated latency/traffic.
 ///
 ///   lpserve cluster --replicas 4 --router rr --rate 6.0 --requests 200
 ///   lpserve cluster --replicas 4 --router slo --policies layered,chunked
 fn cmd_cluster(args: &Args) {
-    use layered_prefill::cluster::{build_router, Cluster, ReplicaSpec};
+    use layered_prefill::cluster::{build_router, ReplicaSpec};
+    use layered_prefill::serve::Session;
 
     let model = model_arg(args);
     let dataset = dataset_arg(args);
@@ -241,9 +313,14 @@ fn cmd_cluster(args: &Args) {
     let trace = WorkloadGen::new(wspec).generate();
     let slo = SloSpec::paper(&model, dataset);
 
-    let cluster = Cluster::new(specs, router);
-    let router_name = cluster.router_name();
-    let rep = cluster.run(&trace);
+    let session = Session::builder()
+        .replica_specs(specs)
+        .router(router)
+        .trace(&trace)
+        .horizon(args.f64("horizon", 0.0))
+        .build();
+    let router_name = session.router_name();
+    let rep = session.run().expect("sim sessions are infallible");
 
     let mut t = Table::new(&format!(
         "cluster — {} replicas, {} router, {} on {} ({} req/s, n={})",

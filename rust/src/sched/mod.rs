@@ -23,7 +23,7 @@ pub mod state;
 #[cfg(test)]
 mod properties;
 
-pub use state::{EngineState, Phase, SimReq};
+pub use state::{Admission, EngineState, Phase, SimReq};
 
 use crate::config::{Policy, SchedulerConfig};
 

@@ -66,6 +66,19 @@ impl SimReq {
     }
 }
 
+/// Outcome of one admission attempt, recorded by [`EngineState::admit`]
+/// for the engine core to translate into the typed event stream
+/// ([`EngineEvent`](crate::serve::EngineEvent)). The sched layer stays
+/// independent of the serve layer by logging this minimal form.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// KV reserved; the request entered prefilling.
+    Admitted { id: u64 },
+    /// KV capacity refused the request's footprint (`demand` blocks needed,
+    /// `free` available) — the admission backpressure signal.
+    KvRejected { id: u64, demand: u32, free: u32 },
+}
+
 /// Engine state visible to schedulers.
 pub struct EngineState {
     pub model: ModelDesc,
@@ -80,6 +93,9 @@ pub struct EngineState {
     pub kv: KvCacheManager,
     /// Scheduler-visible cap on concurrent decodes.
     pub max_batch: usize,
+    /// Admission outcomes since the engine core last drained this log
+    /// (every `EngineState::admit` call appends one entry).
+    pub admissions: Vec<Admission>,
 }
 
 impl EngineState {
@@ -93,6 +109,7 @@ impl EngineState {
             reqs: BTreeMap::new(),
             kv,
             max_batch,
+            admissions: Vec::new(),
         }
     }
 
@@ -114,12 +131,18 @@ impl EngineState {
             r.req.input_len + r.req.output_len
         };
         if !self.kv.can_admit(footprint) {
+            self.admissions.push(Admission::KvRejected {
+                id,
+                demand: self.kv.blocks_for(footprint),
+                free: self.kv.free_blocks(),
+            });
             return false;
         }
         self.kv.register(id, footprint).expect("can_admit checked");
         self.waiting.remove(pos);
         self.prefilling.push(id);
         self.reqs.get_mut(&id).unwrap().phase = Phase::Prefilling;
+        self.admissions.push(Admission::Admitted { id });
         true
     }
 
@@ -184,6 +207,24 @@ mod tests {
         s.arrive(req(1, 100 * 16, 500 * 16)); // way beyond 100 blocks
         assert!(!s.admit(1));
         assert_eq!(s.waiting, vec![1]);
+    }
+
+    #[test]
+    fn admissions_are_logged() {
+        let mut s = state();
+        s.arrive(req(1, 100, 10));
+        s.arrive(req(2, 100 * 16, 500 * 16)); // beyond 100 blocks
+        assert!(s.admit(1));
+        assert!(!s.admit(2));
+        assert_eq!(s.admissions.len(), 2);
+        assert_eq!(s.admissions[0], Admission::Admitted { id: 1 });
+        match s.admissions[1] {
+            Admission::KvRejected { id, demand, free } => {
+                assert_eq!(id, 2);
+                assert!(demand > free);
+            }
+            _ => panic!("expected KvRejected"),
+        }
     }
 
     #[test]

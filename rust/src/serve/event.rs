@@ -1,0 +1,179 @@
+//! The typed engine event stream: every observable state transition of a
+//! serving run, delivered through an [`EventSink`].
+//!
+//! Schedulers, routers, metrics pipelines, and tests all observe the SAME
+//! stream — there is one definition of "a token was emitted" or "admission
+//! was KV-rejected", produced by the engine core itself, instead of each
+//! front end deriving its own view from run metrics after the fact.
+//!
+//! Conservation properties (locked by `tests/serve_events.rs`):
+//! * every `Finished` request has exactly one `FirstToken` and exactly
+//!   `output_len - 1` `TokenEmitted` events;
+//! * `Admitted` + `KvRejected` ≥ `Arrived` over a drained run (each arrival
+//!   is admitted exactly once, possibly after KV rejections).
+
+use crate::workload::Request;
+
+/// One observable engine transition, stamped with engine time `t_s`
+/// (virtual seconds for simulated runs, wall seconds for real runs).
+#[derive(Clone, Debug, PartialEq)]
+pub enum EngineEvent {
+    /// A request was delivered to the engine (entered the waiting queue).
+    Arrived { t_s: f64, req: Request },
+    /// Admission succeeded: KV reserved, prefill may begin.
+    Admitted { t_s: f64, id: u64 },
+    /// Admission failed on KV capacity: the request needed `demand` blocks
+    /// but only `free` were available. This is the backpressure signal the
+    /// cluster router consumes.
+    KvRejected {
+        t_s: f64,
+        id: u64,
+        /// KV blocks the request's full footprint requires.
+        demand: u32,
+        /// Free blocks at rejection time.
+        free: u32,
+    },
+    /// A request's prefill advanced through `layers` layers this iteration
+    /// (`tokens` prompt tokens per layer). Layer-axis policies emit one per
+    /// group visit; token-axis policies one per chunk (full stack).
+    PrefillGroupDone {
+        t_s: f64,
+        id: u64,
+        layers: u32,
+        tokens: u32,
+    },
+    /// Prefill completed and the first token was emitted.
+    FirstToken { t_s: f64, id: u64 },
+    /// A decode step emitted one token (`generated` = tokens so far,
+    /// including the first token).
+    TokenEmitted { t_s: f64, id: u64, generated: u32 },
+    /// The request finished and its KV was released.
+    Finished { t_s: f64, id: u64 },
+    /// The replica ran out of work: queue empty, nothing in flight.
+    ReplicaDrained { t_s: f64 },
+    /// The run horizon was exceeded with `pending` requests still queued
+    /// or in flight (open-loop / horizon-sampled runs).
+    Halted { t_s: f64, pending: usize },
+}
+
+impl EngineEvent {
+    /// Engine timestamp of the event.
+    pub fn t_s(&self) -> f64 {
+        match *self {
+            EngineEvent::Arrived { t_s, .. }
+            | EngineEvent::Admitted { t_s, .. }
+            | EngineEvent::KvRejected { t_s, .. }
+            | EngineEvent::PrefillGroupDone { t_s, .. }
+            | EngineEvent::FirstToken { t_s, .. }
+            | EngineEvent::TokenEmitted { t_s, .. }
+            | EngineEvent::Finished { t_s, .. }
+            | EngineEvent::ReplicaDrained { t_s }
+            | EngineEvent::Halted { t_s, .. } => t_s,
+        }
+    }
+
+    /// Request id the event concerns, if any.
+    pub fn id(&self) -> Option<u64> {
+        match *self {
+            EngineEvent::Arrived { ref req, .. } => Some(req.id),
+            EngineEvent::Admitted { id, .. }
+            | EngineEvent::KvRejected { id, .. }
+            | EngineEvent::PrefillGroupDone { id, .. }
+            | EngineEvent::FirstToken { id, .. }
+            | EngineEvent::TokenEmitted { id, .. }
+            | EngineEvent::Finished { id, .. } => Some(id),
+            EngineEvent::ReplicaDrained { .. } | EngineEvent::Halted { .. } => None,
+        }
+    }
+}
+
+/// Consumer of the event stream. `replica` is the index of the replica
+/// engine that produced the event (0 for single-engine runs).
+pub trait EventSink {
+    fn on_event(&mut self, replica: usize, ev: &EngineEvent);
+}
+
+/// Discards every event (the default sink).
+pub struct NullSink;
+
+impl EventSink for NullSink {
+    fn on_event(&mut self, _replica: usize, _ev: &EngineEvent) {}
+}
+
+/// Collects every event into a vector — the test / debugging sink.
+#[derive(Clone, Debug, Default)]
+pub struct EventLog {
+    pub events: Vec<(usize, EngineEvent)>,
+}
+
+impl EventLog {
+    /// Count events matching a predicate.
+    pub fn count(&self, f: impl Fn(&EngineEvent) -> bool) -> usize {
+        self.events.iter().filter(|(_, e)| f(e)).count()
+    }
+
+    /// Events concerning one request id, in emission order.
+    pub fn for_request(&self, id: u64) -> Vec<&EngineEvent> {
+        self.events
+            .iter()
+            .map(|(_, e)| e)
+            .filter(|e| e.id() == Some(id))
+            .collect()
+    }
+}
+
+impl EventSink for EventLog {
+    fn on_event(&mut self, replica: usize, ev: &EngineEvent) {
+        self.events.push((replica, ev.clone()));
+    }
+}
+
+/// Adapter turning any `FnMut(usize, &EngineEvent)` closure into a sink.
+pub struct FnSink<F: FnMut(usize, &EngineEvent)>(pub F);
+
+impl<F: FnMut(usize, &EngineEvent)> EventSink for FnSink<F> {
+    fn on_event(&mut self, replica: usize, ev: &EngineEvent) {
+        (self.0)(replica, ev)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t: f64) -> EngineEvent {
+        EngineEvent::FirstToken { t_s: t, id: 3 }
+    }
+
+    #[test]
+    fn accessors() {
+        assert_eq!(ev(1.5).t_s(), 1.5);
+        assert_eq!(ev(0.0).id(), Some(3));
+        assert_eq!(EngineEvent::ReplicaDrained { t_s: 2.0 }.id(), None);
+        assert_eq!(
+            EngineEvent::Halted { t_s: 9.0, pending: 4 }.t_s(),
+            9.0
+        );
+    }
+
+    #[test]
+    fn log_collects_and_filters() {
+        let mut log = EventLog::default();
+        log.on_event(0, &ev(1.0));
+        log.on_event(1, &EngineEvent::ReplicaDrained { t_s: 2.0 });
+        assert_eq!(log.events.len(), 2);
+        assert_eq!(log.count(|e| matches!(e, EngineEvent::FirstToken { .. })), 1);
+        assert_eq!(log.for_request(3).len(), 1);
+    }
+
+    #[test]
+    fn closures_are_sinks() {
+        let mut n = 0usize;
+        {
+            let mut sink = FnSink(|_r: usize, _e: &EngineEvent| n += 1);
+            let s: &mut dyn EventSink = &mut sink;
+            s.on_event(0, &ev(0.0));
+        }
+        assert_eq!(n, 1);
+    }
+}

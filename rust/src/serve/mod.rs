@@ -1,0 +1,557 @@
+//! The single public run surface: [`Session`] + the typed [`EngineEvent`]
+//! stream.
+//!
+//! Every serving run — a one-engine simulation, the real PJRT server, an
+//! N-replica fleet, an open-loop streaming workload — is ONE thing: a
+//! session. A session is declared with a builder
+//!
+//! ```text
+//! Session::builder()
+//!     .model(..)        // ModelDesc (default Qwen3-30B-A3B)
+//!     .hardware(..)     // HardwareDesc (default 2xH100)
+//!     .policy(..)       // scheduling policy preset, or .scheduler(cfg)
+//!     .replicas(..)     // N identical replicas (or .replica_specs for mixed)
+//!     .router(..)       // request router for N > 1 (default round-robin)
+//!     .workload(..)     // any WorkloadSource: TraceSource, PoissonSource, ...
+//!     .horizon(..)      // stop after this much engine time (0 = drain)
+//!     .sink(..)         // observe the typed EngineEvent stream
+//!     .run()?
+//! ```
+//!
+//! and compiles down to [`EngineCore`] + [`Executor`] + [`Router`]
+//! internally: one core loop per replica, a router picking a replica per
+//! arrival against live [`ReplicaView`] snapshots (queue depth, resident
+//! KV, accumulated `KvRejected` backpressure), and a single event sink
+//! observing every replica. The legacy entry points —
+//! [`simulator::simulate`](crate::simulator::simulate),
+//! [`server::RealServer::serve`](crate::server::RealServer),
+//! [`cluster::Cluster::run`](crate::cluster::Cluster) — are thin shims over
+//! a session and are kept only for signature stability.
+//!
+//! Workload intake is pull-based through [`WorkloadSource`], so sessions do
+//! not require drain-to-empty: an open-loop [`PoissonSource`] with a
+//! horizon ends the run in [`SessionStatus::Halted`] with work still in
+//! flight, the regime the paper's continuous-trace evaluation needs.
+
+pub mod event;
+
+pub use event::{EngineEvent, EventLog, EventSink, FnSink, NullSink};
+
+pub use crate::workload::source::{PoissonSource, TraceSource, WorkloadSource};
+
+use anyhow::Result;
+
+use crate::cluster::{merge_metrics, ReplicaSpec, ReplicaView, RoundRobin, Router};
+use crate::config::{HardwareDesc, ModelDesc, Policy, SchedulerConfig};
+use crate::engine::{CoreOptions, CoreStatus, EngineCore, Executor, SimExecutor};
+use crate::metrics::RunMetrics;
+use crate::model::WorkAnalytics;
+use crate::sched::{EngineState, Scheduler};
+use crate::simulator::cost::CostModel;
+use crate::simulator::default_engine_state;
+use crate::workload::Trace;
+
+/// Builds one executor per replica. The default factory prices iterations
+/// on the roofline [`CostModel`] ([`SimExecutor`]); the real server
+/// installs a PJRT-backed factory.
+pub type ExecutorFactory<'a> =
+    Box<dyn FnMut(usize, &ReplicaSpec) -> Result<Box<dyn Executor + 'a>> + 'a>;
+
+/// How a session ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SessionStatus {
+    /// Every source request was served to completion.
+    Drained,
+    /// The horizon cut the run off with `pending` requests still queued or
+    /// in flight across the fleet (summed over replicas).
+    Halted { pending: usize },
+}
+
+/// Outcome of a session run.
+#[derive(Clone, Debug)]
+pub struct SessionReport {
+    pub status: SessionStatus,
+    /// Per-replica metrics, index-aligned with the session's replicas.
+    pub per_replica: Vec<RunMetrics>,
+    /// Policy each replica ran (for heterogeneous-fleet reporting).
+    pub policies: Vec<Policy>,
+    /// (request id, replica index) routing decisions, in arrival order.
+    pub assignments: Vec<(u64, usize)>,
+    /// Fleet-aggregated metrics (requests merged, traffic/energy summed).
+    pub fleet: RunMetrics,
+    /// Per-request token timestamps (under `record_token_times`).
+    pub token_times: Vec<(u64, Vec<f64>)>,
+}
+
+impl SessionReport {
+    /// Requests routed to each replica.
+    pub fn assignment_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.per_replica.len()];
+        for &(_, idx) in &self.assignments {
+            counts[idx] += 1;
+        }
+        counts
+    }
+}
+
+/// Declarative description of one serving run. Construct with
+/// [`Session::builder`], execute with [`Session::run`].
+pub struct Session<'a> {
+    specs: Vec<ReplicaSpec>,
+    router: Box<dyn Router + 'a>,
+    source: Box<dyn WorkloadSource + 'a>,
+    factory: ExecutorFactory<'a>,
+    states: Option<Vec<EngineState>>,
+    sink: Option<&'a mut dyn EventSink>,
+    horizon_s: f64,
+    record_token_times: bool,
+    immediate_arrivals: bool,
+}
+
+/// Builder for [`Session`]; all knobs default to the paper's single-engine
+/// simulated setup (Qwen3-30B-A3B on 2xH100, layered prefill, 1 replica,
+/// empty workload).
+pub struct SessionBuilder<'a> {
+    model: ModelDesc,
+    hw: HardwareDesc,
+    sched: SchedulerConfig,
+    replicas: usize,
+    specs: Option<Vec<ReplicaSpec>>,
+    router: Box<dyn Router + 'a>,
+    source: Option<Box<dyn WorkloadSource + 'a>>,
+    factory: Option<ExecutorFactory<'a>>,
+    states: Option<Vec<EngineState>>,
+    sink: Option<&'a mut dyn EventSink>,
+    horizon_s: f64,
+    record_token_times: bool,
+    immediate_arrivals: bool,
+}
+
+impl<'a> SessionBuilder<'a> {
+    fn new() -> Self {
+        SessionBuilder {
+            model: ModelDesc::qwen3_30b_a3b(),
+            hw: HardwareDesc::h100x2(),
+            sched: SchedulerConfig::preset(Policy::Layered),
+            replicas: 1,
+            specs: None,
+            router: Box::new(RoundRobin::new()),
+            source: None,
+            factory: None,
+            states: None,
+            sink: None,
+            horizon_s: 0.0,
+            record_token_times: false,
+            immediate_arrivals: false,
+        }
+    }
+
+    /// Model descriptor for every (homogeneous) replica.
+    pub fn model(mut self, model: ModelDesc) -> Self {
+        self.model = model;
+        self
+    }
+
+    /// Hardware descriptor for every (homogeneous) replica.
+    pub fn hardware(mut self, hw: HardwareDesc) -> Self {
+        self.hw = hw;
+        self
+    }
+
+    /// Scheduling policy (paper preset knobs).
+    pub fn policy(mut self, policy: Policy) -> Self {
+        self.sched = SchedulerConfig::preset(policy);
+        self
+    }
+
+    /// Full scheduler configuration (overrides `policy`).
+    pub fn scheduler(mut self, sched: SchedulerConfig) -> Self {
+        self.sched = sched;
+        self
+    }
+
+    /// N identical replicas of the model/hardware/policy above.
+    pub fn replicas(mut self, n: usize) -> Self {
+        self.replicas = n.max(1);
+        self
+    }
+
+    /// Explicit per-replica blueprints (heterogeneous fleets). Overrides
+    /// `model`/`hardware`/`policy`/`replicas`.
+    pub fn replica_specs(mut self, specs: Vec<ReplicaSpec>) -> Self {
+        assert!(!specs.is_empty(), "session needs at least one replica");
+        self.specs = Some(specs);
+        self
+    }
+
+    /// Request router for multi-replica sessions.
+    pub fn router(mut self, router: Box<dyn Router + 'a>) -> Self {
+        self.router = router;
+        self
+    }
+
+    /// Workload intake: any [`WorkloadSource`].
+    pub fn workload(mut self, source: impl WorkloadSource + 'a) -> Self {
+        self.source = Some(Box::new(source));
+        self
+    }
+
+    /// Convenience: a pre-materialized trace as the workload.
+    pub fn trace(self, trace: &Trace) -> Self {
+        self.workload(TraceSource::new(trace))
+    }
+
+    /// Stop after this much engine time (0 = run to drain). A session cut
+    /// off by the horizon reports [`SessionStatus::Halted`].
+    pub fn horizon(mut self, horizon_s: f64) -> Self {
+        self.horizon_s = horizon_s;
+        self
+    }
+
+    /// Record per-request token timestamps (costs memory).
+    pub fn record_token_times(mut self, on: bool) -> Self {
+        self.record_token_times = on;
+        self
+    }
+
+    /// Deliver requests immediately, ignoring arrival stamps (the real
+    /// server's batch mode).
+    pub fn immediate_arrivals(mut self, on: bool) -> Self {
+        self.immediate_arrivals = on;
+        self
+    }
+
+    /// Observe the run's typed [`EngineEvent`] stream.
+    pub fn sink(mut self, sink: &'a mut dyn EventSink) -> Self {
+        self.sink = Some(sink);
+        self
+    }
+
+    /// Install a custom executor backend (the real server's PJRT factory).
+    pub fn executor_factory(mut self, factory: ExecutorFactory<'a>) -> Self {
+        self.factory = Some(factory);
+        self
+    }
+
+    /// Override the per-replica engine states (custom KV pool layouts).
+    /// Length must match the replica count.
+    pub fn engine_states(mut self, states: Vec<EngineState>) -> Self {
+        self.states = Some(states);
+        self
+    }
+
+    /// Compile the declaration into a runnable [`Session`].
+    pub fn build(self) -> Session<'a> {
+        let specs = self.specs.unwrap_or_else(|| {
+            vec![
+                ReplicaSpec {
+                    model: self.model.clone(),
+                    hw: self.hw.clone(),
+                    sched: self.sched.clone(),
+                };
+                self.replicas
+            ]
+        });
+        let source = self
+            .source
+            .unwrap_or_else(|| Box::new(TraceSource::new(&Trace::default())));
+        let factory: ExecutorFactory<'a> = match self.factory {
+            Some(f) => f,
+            None => Box::new(|_i, spec: &ReplicaSpec| {
+                let cost =
+                    CostModel::new(spec.hw.clone(), WorkAnalytics::new(spec.model.clone()));
+                let exec: Box<dyn Executor + 'a> = Box::new(SimExecutor::new(cost));
+                Ok(exec)
+            }),
+        };
+        Session {
+            specs,
+            router: self.router,
+            source,
+            factory,
+            states: self.states,
+            sink: self.sink,
+            horizon_s: self.horizon_s,
+            record_token_times: self.record_token_times,
+            immediate_arrivals: self.immediate_arrivals,
+        }
+    }
+
+    /// Build and run in one step.
+    pub fn run(self) -> Result<SessionReport> {
+        self.build().run()
+    }
+}
+
+/// Per-replica `KvRejected` tally wrapped around the user sink, so router
+/// views expose admission backpressure, not just queue depth.
+struct Tally<'s> {
+    inner: &'s mut dyn EventSink,
+    kv_rejects: Vec<u64>,
+}
+
+impl EventSink for Tally<'_> {
+    fn on_event(&mut self, replica: usize, ev: &EngineEvent) {
+        if matches!(ev, EngineEvent::KvRejected { .. }) {
+            if let Some(c) = self.kv_rejects.get_mut(replica) {
+                *c += 1;
+            }
+        }
+        self.inner.on_event(replica, ev);
+    }
+}
+
+impl<'a> Session<'a> {
+    pub fn builder() -> SessionBuilder<'a> {
+        SessionBuilder::new()
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn router_name(&self) -> &'static str {
+        self.router.name()
+    }
+
+    /// Execute the session: route every source arrival against live replica
+    /// views, then drain (or halt at the horizon) every replica. Sim-backed
+    /// sessions are infallible; real-executor sessions surface PJRT errors.
+    pub fn run(self) -> Result<SessionReport> {
+        let Session {
+            specs,
+            mut router,
+            mut source,
+            mut factory,
+            states,
+            sink,
+            horizon_s,
+            record_token_times,
+            immediate_arrivals,
+        } = self;
+        let n = specs.len();
+
+        let mut default_sink = NullSink;
+        let user_sink: &mut dyn EventSink = match sink {
+            Some(s) => s,
+            None => &mut default_sink,
+        };
+        let mut sink = Tally {
+            inner: user_sink,
+            kv_rejects: vec![0; n],
+        };
+
+        /// One live replica: scheduler + state + executor + core loop.
+        struct Live<'x> {
+            policy: Policy,
+            sched: Box<dyn Scheduler>,
+            state: EngineState,
+            exec: Box<dyn Executor + 'x>,
+            core: EngineCore,
+        }
+
+        impl Live<'_> {
+            fn view(&self, id: usize, kv_rejects: u64) -> ReplicaView {
+                let waiting_kv: u64 = self
+                    .state
+                    .waiting
+                    .iter()
+                    .map(|i| {
+                        let q = &self.state.reqs[i].req;
+                        (q.input_len + q.output_len) as u64
+                    })
+                    .sum();
+                ReplicaView {
+                    id,
+                    policy: self.policy,
+                    queued: self.core.pending_len(),
+                    active: self.state.prefilling.len() + self.state.decoding.len(),
+                    queued_kv_tokens: self.core.pending_footprint() + waiting_kv,
+                    kv_used_blocks: self.state.kv.used_blocks(),
+                    kv_block_size: self.state.kv.block_size,
+                    kv_free_blocks: self.state.kv.free_blocks(),
+                    kv_rejects,
+                    now_s: self.exec.now(),
+                }
+            }
+        }
+
+        let states: Vec<EngineState> = match states {
+            Some(v) => {
+                assert_eq!(v.len(), n, "engine_states length must match replica count");
+                v
+            }
+            None => specs
+                .iter()
+                .map(|s| default_engine_state(&s.model, &s.hw, &s.sched))
+                .collect(),
+        };
+
+        let mut live: Vec<Live<'a>> = Vec::with_capacity(n);
+        for (i, (spec, state)) in specs.iter().zip(states).enumerate() {
+            live.push(Live {
+                policy: spec.sched.policy,
+                sched: crate::sched::build(&spec.sched, spec.model.n_layers),
+                state,
+                exec: factory(i, spec)?,
+                core: EngineCore::new(CoreOptions {
+                    horizon_s,
+                    record_token_times,
+                    immediate_arrivals,
+                })
+                .with_replica(i),
+            });
+        }
+
+        // Arrival loop: advance every replica to each arrival instant so
+        // the router observes true engine state (iteration-boundary
+        // granularity), route, and queue on the chosen replica.
+        let mut assignments: Vec<(u64, usize)> = Vec::new();
+        while let Some(req) = source.next_request() {
+            if !immediate_arrivals {
+                for r in live.iter_mut() {
+                    r.core.run_events(
+                        r.exec.as_mut(),
+                        r.sched.as_mut(),
+                        &mut r.state,
+                        Some(req.arrival_s),
+                        &mut sink,
+                    )?;
+                }
+            }
+            let views: Vec<ReplicaView> = live
+                .iter()
+                .enumerate()
+                .map(|(i, r)| r.view(i, sink.kv_rejects[i]))
+                .collect();
+            let idx = router.route(&req, &views) % n;
+            live[idx].core.push(req);
+            assignments.push((req.id, idx));
+        }
+
+        // Drain every replica (or halt it at the horizon).
+        let mut any_halted = false;
+        let mut halted_pending = 0usize;
+        for r in live.iter_mut() {
+            let status =
+                r.core
+                    .run_events(r.exec.as_mut(), r.sched.as_mut(), &mut r.state, None, &mut sink)?;
+            if let CoreStatus::Halted { pending } = status {
+                any_halted = true;
+                halted_pending += pending;
+            }
+        }
+        let status = if any_halted {
+            SessionStatus::Halted {
+                pending: halted_pending,
+            }
+        } else {
+            SessionStatus::Drained
+        };
+
+        let policies: Vec<Policy> = live.iter().map(|r| r.policy).collect();
+        let mut per_replica = Vec::with_capacity(n);
+        let mut token_times = Vec::new();
+        for r in live {
+            let Live { core, mut exec, .. } = r;
+            let (metrics, times) = core.finish(exec.as_mut());
+            per_replica.push(metrics);
+            token_times.extend(times);
+        }
+        let fleet = merge_metrics(&per_replica);
+        Ok(SessionReport {
+            status,
+            per_replica,
+            policies,
+            assignments,
+            fleet,
+            token_times,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Dataset, WorkloadSpec};
+    use crate::workload::WorkloadGen;
+
+    fn sharegpt_trace(n: usize, rate: f64, seed: u64) -> Trace {
+        let mut spec = WorkloadSpec::new(Dataset::ShareGpt, rate, n);
+        spec.seed = seed;
+        WorkloadGen::new(spec).generate()
+    }
+
+    #[test]
+    fn empty_session_drains_immediately() {
+        let report = Session::builder().run().expect("sim session");
+        assert_eq!(report.status, SessionStatus::Drained);
+        assert_eq!(report.fleet.requests.len(), 0);
+        assert_eq!(report.per_replica.len(), 1);
+    }
+
+    #[test]
+    fn session_serves_trace_to_completion() {
+        let trace = sharegpt_trace(12, 3.0, 5);
+        let report = Session::builder()
+            .policy(Policy::Layered)
+            .trace(&trace)
+            .run()
+            .expect("sim session");
+        assert_eq!(report.status, SessionStatus::Drained);
+        assert_eq!(report.fleet.requests.len(), 12);
+        assert_eq!(report.assignments.len(), 12);
+        assert!(report.assignments.iter().all(|&(_, idx)| idx == 0));
+    }
+
+    #[test]
+    fn multi_replica_session_round_robins() {
+        let trace = sharegpt_trace(12, 6.0, 5);
+        let report = Session::builder()
+            .replicas(3)
+            .trace(&trace)
+            .run()
+            .expect("sim session");
+        assert_eq!(report.assignment_counts(), vec![4, 4, 4]);
+        assert_eq!(report.fleet.requests.len(), 12);
+    }
+
+    #[test]
+    fn horizon_halts_with_pending_work() {
+        // 60 heavy requests at a rate one engine cannot clear in 15 s of
+        // engine time: the session must stop Halted with work remaining.
+        let mut spec = WorkloadSpec::new(Dataset::Arxiv, 8.0, 60);
+        spec.seed = 11;
+        let trace = WorkloadGen::new(spec).generate();
+        let report = Session::builder()
+            .trace(&trace)
+            .horizon(15.0)
+            .run()
+            .expect("sim session");
+        match report.status {
+            SessionStatus::Halted { pending } => assert!(pending > 0),
+            SessionStatus::Drained => panic!("overloaded horizon run cannot drain"),
+        }
+        // Finished + pending cannot exceed the offered load; some requests
+        // did finish before the horizon.
+        assert!(report.fleet.requests.len() < 60);
+    }
+
+    #[test]
+    fn sink_observes_the_run() {
+        let trace = sharegpt_trace(6, 3.0, 5);
+        let mut log = EventLog::default();
+        let report = Session::builder()
+            .trace(&trace)
+            .sink(&mut log)
+            .run()
+            .expect("sim session");
+        assert_eq!(report.fleet.requests.len(), 6);
+        let arrived = log.count(|e| matches!(e, EngineEvent::Arrived { .. }));
+        let finished = log.count(|e| matches!(e, EngineEvent::Finished { .. }));
+        let drained = log.count(|e| matches!(e, EngineEvent::ReplicaDrained { .. }));
+        assert_eq!(arrived, 6);
+        assert_eq!(finished, 6);
+        assert_eq!(drained, 1);
+    }
+}

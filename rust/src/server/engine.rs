@@ -1,19 +1,28 @@
 //! The serving loop: wall-clock request admission, iteration planning via
 //! the L3 scheduler policies, and plan execution on the PJRT runtime — all
-//! driven by the shared engine core (`crate::engine`), so the real server
-//! runs the IDENTICAL plan → execute → account → advance loop the simulator
-//! validates, with a [`RealExecutor`] backend instead of the cost model.
+//! driven through [`serve::Session`](crate::serve::Session) with a
+//! [`RealExecutor`] factory, so the real server runs the IDENTICAL
+//! plan → execute → account → advance loop (and emits the identical typed
+//! event stream) the simulator validates.
+//!
+//! DEPRECATED entry point: [`RealServer::serve`] is a validation shim over
+//! `Session`; new code can install the PJRT backend directly with
+//! `Session::builder().executor_factory(..)`.
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
+use std::rc::Rc;
 
 use anyhow::{bail, Result};
 
-use crate::config::{ModelDesc, Policy, SchedulerConfig};
-use crate::engine::{CoreOptions, EngineCore, RealExecutor};
+use crate::cluster::ReplicaSpec;
+use crate::config::{HardwareDesc, ModelDesc, Policy, SchedulerConfig};
+use crate::engine::{Executor, RealExecutor};
 use crate::kvcache::KvCacheManager;
 use crate::metrics::RunMetrics;
 use crate::runtime::RuntimeEngine;
-use crate::sched::{self, EngineState};
+use crate::sched::EngineState;
+use crate::serve::Session;
 use crate::workload::Trace;
 
 pub use crate::engine::real::chunk_plan;
@@ -107,26 +116,43 @@ impl<'e> RealServer<'e> {
         sched_cfg.hybrid_chunk_size = (self.opts.quantum * 4).max(64);
         sched_cfg.max_batch = self.opts.max_batch;
         let kv = KvCacheManager::new(m.usable_slots() as u32, m.max_seq as u32);
-        let mut state = EngineState::new(ModelDesc::tinymoe(), kv, self.opts.max_batch);
-        let mut policy = sched::build(&sched_cfg, m.n_layers as u32);
+        let state = EngineState::new(ModelDesc::tinymoe(), kv, self.opts.max_batch);
 
-        let mut exec = RealExecutor::new(self.engine, trace, self.opts.seed)?;
         let t0_steps = self.engine.steps.get();
 
-        let mut core = EngineCore::new(CoreOptions {
-            horizon_s: 0.0,
-            record_token_times: false,
-            immediate_arrivals: !self.opts.realtime,
-        });
-        core.push_trace(trace);
-        core.drain(&mut exec, policy.as_mut(), &mut state)?;
-        let (metrics, _token_times) = core.finish(&mut exec);
+        // One real replica behind the single run surface: a Session with a
+        // PJRT executor factory. Outputs survive the run via the shared
+        // handle.
+        let outputs = Rc::new(RefCell::new(BTreeMap::new()));
+        let handle = outputs.clone();
+        let engine = self.engine;
+        let seed = self.opts.seed;
+        let spec = ReplicaSpec {
+            model: ModelDesc::tinymoe(),
+            hw: HardwareDesc::h100x2(), // unused by the real factory
+            sched: sched_cfg,
+        };
+        let report = Session::builder()
+            .replica_specs(vec![spec])
+            .trace(trace)
+            .immediate_arrivals(!self.opts.realtime)
+            .engine_states(vec![state])
+            .executor_factory(Box::new(move |_i, _spec| {
+                Ok(Box::new(
+                    RealExecutor::new(engine, seed)?.with_output_handle(handle.clone()),
+                ) as Box<dyn Executor + '_>)
+            }))
+            .run()?;
 
+        let metrics = report.fleet;
         let iterations = metrics.iterations;
+        let outputs = Rc::try_unwrap(outputs)
+            .map(RefCell::into_inner)
+            .unwrap_or_else(|rc| rc.borrow().clone());
         Ok(ServeReport {
             metrics,
             steps: self.engine.steps.get() - t0_steps,
-            outputs: exec.outputs,
+            outputs,
             iterations,
         })
     }

@@ -10,6 +10,10 @@
 //! where the paper uses 512 (chunk size and G(L) target both scale by the
 //! same factor), so policy behaviour — chunk counts, group counts, one-
 //! group-per-iteration cadence — is structurally identical.
+//!
+//! DEPRECATED entry point: [`RealServer::serve`] is a shim over
+//! [`serve::Session`](crate::serve::Session) with a PJRT executor factory;
+//! new code should install the backend on a `Session` directly.
 
 pub mod engine;
 

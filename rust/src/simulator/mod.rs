@@ -8,6 +8,13 @@
 //! a virtual clock (idle gaps jump to the next arrival, charging idle
 //! energy). The paper's scheduling invariants I1–I3 are validated by the
 //! core on every iteration; I4 is tested at the policy level.
+//!
+//! DEPRECATED entry point: [`simulate`] is a thin shim over
+//! [`serve::Session`](crate::serve::Session) — the single run surface —
+//! kept for signature stability (reports, benches, tests). [`Simulator`]
+//! remains the RAW single-core driver (push-all-then-drain, caller-owned
+//! state); `tests/cluster_equivalence.rs` locks the session path
+//! bit-identical to it. New code should build a `Session`.
 
 pub mod cost;
 pub mod energy;
@@ -95,6 +102,10 @@ pub fn default_engine_state(
 }
 
 /// Convenience: run one (policy, model, hardware, trace) combination.
+///
+/// DEPRECATED shim: builds a 1-replica
+/// [`serve::Session`](crate::serve::Session) — bit-identical to the raw
+/// [`Simulator`] path (locked by `tests/cluster_equivalence.rs`).
 pub fn simulate(
     model: crate::config::ModelDesc,
     hw: HardwareDesc,
@@ -102,9 +113,20 @@ pub fn simulate(
     trace: &Trace,
     opts: SimOptions,
 ) -> (RunMetrics, SimExtra) {
-    let analytics = WorkAnalytics::new(model.clone());
-    let mut state = default_engine_state(&model, &hw, sched_cfg);
-    let mut sched = crate::sched::build(sched_cfg, model.n_layers);
-    let sim = Simulator::new(hw, analytics).with_options(opts);
-    sim.run(sched.as_mut(), &mut state, trace)
+    let report = crate::serve::Session::builder()
+        .model(model)
+        .hardware(hw)
+        .scheduler(sched_cfg.clone())
+        .replicas(1)
+        .trace(trace)
+        .horizon(opts.horizon_s)
+        .record_token_times(opts.record_token_times)
+        .run()
+        .expect("sim executors are infallible");
+    (
+        report.fleet,
+        SimExtra {
+            token_times: report.token_times,
+        },
+    )
 }

@@ -2,7 +2,9 @@
 //! the paper's Table 4 statistics, with deterministic trace record/replay.
 
 pub mod generator;
+pub mod source;
 pub mod trace;
 
 pub use generator::{DatasetModel, WorkloadGen};
+pub use source::{PoissonSource, TraceSource, WorkloadSource};
 pub use trace::{Request, Trace};

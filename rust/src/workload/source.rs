@@ -1,0 +1,212 @@
+//! Workload sources: the request-intake abstraction behind `serve::Session`.
+//!
+//! A [`WorkloadSource`] yields requests one at a time in nondecreasing
+//! arrival order, which is what lets a session serve BOTH pre-materialized
+//! traces (record/replay, paper tables) and open-loop streaming workloads
+//! (hours-long Poisson processes sampled lazily up to a horizon) through
+//! the same run loop — sessions no longer require drain-to-empty.
+
+use crate::config::{Dataset, WorkloadSpec};
+use crate::util::rng::Rng;
+use crate::workload::generator::DatasetModel;
+use crate::workload::trace::{Request, Trace};
+
+/// A stream of requests in nondecreasing arrival order.
+///
+/// Implementations are pull-based: the session asks for the next request
+/// when it is ready to route it, so open-loop sources never materialize
+/// more than one request ahead.
+pub trait WorkloadSource {
+    /// The next request, or `None` when the source is exhausted (request
+    /// budget spent, or the next arrival would fall past the horizon).
+    fn next_request(&mut self) -> Option<Request>;
+
+    /// Remaining request count, when known (pre-materialized traces).
+    fn size_hint(&self) -> Option<usize> {
+        None
+    }
+}
+
+/// Pre-materialized trace source: yields a [`Trace`]'s requests in order.
+pub struct TraceSource {
+    requests: Vec<Request>,
+    next: usize,
+}
+
+impl TraceSource {
+    pub fn new(trace: &Trace) -> Self {
+        TraceSource {
+            requests: trace.requests.clone(),
+            next: 0,
+        }
+    }
+}
+
+impl From<&Trace> for TraceSource {
+    fn from(trace: &Trace) -> Self {
+        TraceSource::new(trace)
+    }
+}
+
+impl WorkloadSource for TraceSource {
+    fn next_request(&mut self) -> Option<Request> {
+        let r = self.requests.get(self.next).copied()?;
+        self.next += 1;
+        Some(r)
+    }
+
+    fn size_hint(&self) -> Option<usize> {
+        Some(self.requests.len() - self.next)
+    }
+}
+
+/// Open-loop Poisson source: samples exponential inter-arrival gaps and
+/// dataset-model lengths lazily, one request per pull — the streaming
+/// equivalent of [`WorkloadGen`](crate::workload::WorkloadGen), which it
+/// reproduces request-for-request given the same [`WorkloadSpec`].
+///
+/// Termination is by whichever bound hits first: the spec's `n_requests`
+/// budget, or a sampling `horizon_s` (a request whose arrival falls past
+/// the horizon is discarded and the source ends). An open-loop session run
+/// with a horizon therefore terminates with
+/// [`CoreStatus::Halted`](crate::engine::CoreStatus) when work is still in
+/// flight, instead of draining to empty.
+pub struct PoissonSource {
+    spec: WorkloadSpec,
+    model: DatasetModel,
+    rng: Rng,
+    t: f64,
+    next_id: u64,
+    /// Stop sampling arrivals past this time (0 = unbounded).
+    horizon_s: f64,
+    done: bool,
+}
+
+impl PoissonSource {
+    /// Closed source: exactly the spec's `n_requests`, like `WorkloadGen`.
+    pub fn new(spec: WorkloadSpec) -> Self {
+        PoissonSource {
+            model: DatasetModel::for_dataset(spec.dataset),
+            rng: Rng::new(spec.seed),
+            spec,
+            t: 0.0,
+            next_id: 0,
+            horizon_s: 0.0,
+            done: false,
+        }
+    }
+
+    /// Open-loop source: unbounded request count, arrivals sampled up to
+    /// `horizon_s` seconds.
+    pub fn open_loop(dataset: Dataset, rate: f64, seed: u64, horizon_s: f64) -> Self {
+        let mut spec = WorkloadSpec::new(dataset, rate, usize::MAX);
+        spec.seed = seed;
+        let mut s = PoissonSource::new(spec);
+        s.horizon_s = horizon_s;
+        s
+    }
+
+    /// Bound a closed source by a sampling horizon as well.
+    pub fn with_horizon(mut self, horizon_s: f64) -> Self {
+        self.horizon_s = horizon_s;
+        self
+    }
+}
+
+impl WorkloadSource for PoissonSource {
+    fn next_request(&mut self) -> Option<Request> {
+        if self.done || (self.next_id as u128) >= self.spec.n_requests as u128 {
+            return None;
+        }
+        // Sampling order matches WorkloadGen::generate exactly (gap, then
+        // input, then output) so replaying a spec is bit-identical.
+        if self.next_id > 0 {
+            self.t += self.rng.exponential(self.spec.rate);
+        }
+        let (input_len, output_len) = match self.spec.dataset {
+            Dataset::Fixed => (self.spec.fixed_input, self.spec.fixed_output),
+            _ => (
+                self.model.sample_input(&mut self.rng),
+                self.model.sample_output(&mut self.rng),
+            ),
+        };
+        if self.horizon_s > 0.0 && self.t > self.horizon_s {
+            self.done = true;
+            return None;
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        Some(Request {
+            id,
+            arrival_s: self.t,
+            input_len,
+            output_len,
+        })
+    }
+
+    fn size_hint(&self) -> Option<usize> {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::WorkloadGen;
+
+    fn drain(mut s: impl WorkloadSource) -> Vec<Request> {
+        let mut out = Vec::new();
+        while let Some(r) = s.next_request() {
+            out.push(r);
+        }
+        out
+    }
+
+    #[test]
+    fn trace_source_replays_in_order() {
+        let spec = WorkloadSpec::new(Dataset::ShareGpt, 2.0, 20);
+        let trace = WorkloadGen::new(spec).generate();
+        let src = TraceSource::new(&trace);
+        assert_eq!(src.size_hint(), Some(20));
+        let out = drain(src);
+        assert_eq!(out, trace.requests);
+    }
+
+    #[test]
+    fn poisson_source_matches_workload_gen_exactly() {
+        let mut spec = WorkloadSpec::new(Dataset::Arxiv, 1.3, 50);
+        spec.seed = 42;
+        let trace = WorkloadGen::new(spec.clone()).generate();
+        let out = drain(PoissonSource::new(spec));
+        assert_eq!(out, trace.requests);
+    }
+
+    #[test]
+    fn open_loop_stops_at_horizon() {
+        let src = PoissonSource::open_loop(Dataset::ShareGpt, 5.0, 7, 10.0);
+        let out = drain(src);
+        assert!(!out.is_empty());
+        assert!(out.iter().all(|r| r.arrival_s <= 10.0));
+        // ~5 req/s for 10 s: well above a trivial count, well below unbounded.
+        assert!(out.len() > 20 && out.len() < 200, "n = {}", out.len());
+        // Arrivals are nondecreasing and ids sequential.
+        assert!(out.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+        assert!(out.iter().enumerate().all(|(i, r)| r.id == i as u64));
+    }
+
+    #[test]
+    fn open_loop_is_deterministic() {
+        let a = drain(PoissonSource::open_loop(Dataset::ShareGpt, 5.0, 7, 8.0));
+        let b = drain(PoissonSource::open_loop(Dataset::ShareGpt, 5.0, 7, 8.0));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn closed_source_respects_horizon_too() {
+        let mut spec = WorkloadSpec::new(Dataset::ShareGpt, 2.0, 1000);
+        spec.seed = 9;
+        let out = drain(PoissonSource::new(spec).with_horizon(5.0));
+        assert!(out.len() < 1000);
+        assert!(out.iter().all(|r| r.arrival_s <= 5.0));
+    }
+}

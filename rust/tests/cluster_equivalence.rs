@@ -1,14 +1,18 @@
-//! Cluster / engine-core equivalence: the acceptance anchor for the shared
-//! iteration loop. A 1-replica cluster behind a round-robin router must
-//! reproduce the single-engine simulator EXACTLY (same core, same executor,
-//! same arithmetic), and multi-replica fleets must complete every request
-//! with sane fleet aggregates under the paper's ShareGPT-style traces.
+//! Session / engine-core equivalence: the acceptance anchor for the single
+//! serve surface. A 1-replica `serve::Session` (and the deprecated
+//! `Cluster` / `simulate` shims over it) must reproduce the RAW
+//! single-engine core driver (`Simulator::run`) EXACTLY — same core, same
+//! executor, same arithmetic — and multi-replica fleets must complete
+//! every request with sane fleet aggregates under the paper's
+//! ShareGPT-style traces.
 
 use layered_prefill::cluster::{Cluster, ReplicaSpec, RoundRobin, SloAware};
 use layered_prefill::config::{
     Dataset, HardwareDesc, ModelDesc, Policy, SchedulerConfig, WorkloadSpec,
 };
-use layered_prefill::simulator::{simulate, SimOptions};
+use layered_prefill::model::WorkAnalytics;
+use layered_prefill::serve::{PoissonSource, Session, SessionStatus};
+use layered_prefill::simulator::{default_engine_state, simulate, SimOptions, Simulator};
 use layered_prefill::workload::{Trace, WorkloadGen};
 
 fn sharegpt_trace(n: usize, rate: f64, seed: u64) -> Trace {
@@ -73,6 +77,118 @@ fn n1_round_robin_matches_single_engine_exactly() {
             "{policy:?} TBT p99"
         );
     }
+}
+
+/// Run the RAW core driver (push-all-then-drain, caller-owned state) —
+/// the pre-redesign `simulator::simulate` path.
+fn raw_core_run(
+    model: &ModelDesc,
+    hw: &HardwareDesc,
+    cfg: &SchedulerConfig,
+    trace: &Trace,
+) -> layered_prefill::metrics::RunMetrics {
+    let mut state = default_engine_state(model, hw, cfg);
+    let mut sched = layered_prefill::sched::build(cfg, model.n_layers);
+    let sim = Simulator::new(hw.clone(), WorkAnalytics::new(model.clone()));
+    let (m, _) = sim.run(sched.as_mut(), &mut state, trace);
+    m
+}
+
+#[test]
+fn session_n1_is_bit_identical_to_raw_core() {
+    // The golden anchor for the redesign: a 1-replica Session with a Trace
+    // source reproduces the pre-redesign simulator metrics bit-for-bit,
+    // and the `simulate` shim (now routed through Session) agrees with
+    // both exactly.
+    let model = ModelDesc::qwen3_30b_a3b();
+    let hw = HardwareDesc::h100x2();
+    for policy in [Policy::Layered, Policy::Chunked, Policy::Orca] {
+        let trace = sharegpt_trace(40, 2.0, 0xBEEF);
+        let cfg = SchedulerConfig::preset(policy);
+        let raw = raw_core_run(&model, &hw, &cfg, &trace);
+
+        let report = Session::builder()
+            .model(model.clone())
+            .hardware(hw.clone())
+            .scheduler(cfg.clone())
+            .trace(&trace)
+            .run()
+            .expect("sim session");
+        assert_eq!(report.status, SessionStatus::Drained, "{policy:?}");
+        let (shim, _) = simulate(model.clone(), hw.clone(), &cfg, &trace, SimOptions::default());
+
+        for m in [&report.fleet, &shim] {
+            assert_eq!(m.requests.len(), raw.requests.len(), "{policy:?}");
+            assert_eq!(m.iterations, raw.iterations, "{policy:?}");
+            for (a, b) in m.requests.iter().zip(&raw.requests) {
+                assert_eq!(a.id, b.id, "{policy:?}");
+                assert_eq!(a.ttft_s, b.ttft_s, "{policy:?} req {} TTFT", a.id);
+                assert_eq!(a.finish_s, b.finish_s, "{policy:?} req {} finish", a.id);
+                assert_eq!(a.tbts_s, b.tbts_s, "{policy:?} req {} TBTs", a.id);
+            }
+            assert_eq!(m.makespan_s, raw.makespan_s, "{policy:?}");
+            assert_eq!(m.busy_s, raw.busy_s, "{policy:?}");
+            assert_eq!(
+                m.traffic.expert_bytes, raw.traffic.expert_bytes,
+                "{policy:?}"
+            );
+            assert_eq!(m.energy.total_j(), raw.energy.total_j(), "{policy:?}");
+            // Fleet aggregation recomputes the busy-weighted decode batch
+            // as (avg * busy) / busy — exact in value, ulp-level in floats.
+            assert!(
+                (m.avg_decode_batch - raw.avg_decode_batch).abs() < 1e-9,
+                "{policy:?} avg decode batch"
+            );
+        }
+    }
+}
+
+#[test]
+fn open_loop_session_halts_at_horizon_with_well_formed_stream() {
+    use layered_prefill::serve::{EngineEvent, EventLog};
+
+    // An open-loop Poisson source at an overload rate, horizon-cut at 20 s
+    // of engine time: the session must end Halted with work in flight and
+    // the event stream must stay conservation-clean for finished requests.
+    let mut log = EventLog::default();
+    let report = Session::builder()
+        .workload(PoissonSource::open_loop(Dataset::Arxiv, 6.0, 0xD00D, 20.0))
+        .horizon(20.0)
+        .sink(&mut log)
+        .run()
+        .expect("sim session");
+
+    let SessionStatus::Halted { pending } = report.status else {
+        panic!("overloaded open-loop run must halt, got {:?}", report.status);
+    };
+    assert!(pending > 0, "halt must report in-flight work");
+    assert_eq!(
+        log.count(|e| matches!(e, EngineEvent::Halted { .. })),
+        1,
+        "exactly one Halted event"
+    );
+    assert_eq!(
+        log.count(|e| matches!(e, EngineEvent::ReplicaDrained { .. })),
+        0,
+        "a halted replica never reports drained"
+    );
+    // Finished requests obey token conservation even when the run is cut.
+    for r in &report.fleet.requests {
+        let evs = log.for_request(r.id);
+        let first = evs
+            .iter()
+            .filter(|e| matches!(e, EngineEvent::FirstToken { .. }))
+            .count();
+        let toks = evs
+            .iter()
+            .filter(|e| matches!(e, EngineEvent::TokenEmitted { .. }))
+            .count();
+        assert_eq!(first, 1, "req {}", r.id);
+        assert_eq!(toks as u32, r.output_len - 1, "req {}", r.id);
+    }
+    // Event times are nondecreasing per replica (single replica here).
+    let times: Vec<f64> = log.events.iter().map(|(_, e)| e.t_s()).collect();
+    assert!(times.windows(2).all(|w| w[0] <= w[1] + 1e-12));
 }
 
 #[test]

@@ -1,0 +1,172 @@
+//! Event-stream conservation: the typed `EngineEvent` stream a
+//! `serve::Session` emits must account for every token and every admission
+//! exactly — one `FirstToken` plus `output_len - 1` `TokenEmitted` per
+//! `Finished` request, `Admitted` + `KvRejected` covering every `Arrived`
+//! request, and one `ReplicaDrained` per replica on a drained run.
+
+use std::collections::BTreeSet;
+
+use layered_prefill::cluster::{LeastOutstandingKv, ReplicaSpec};
+use layered_prefill::config::{
+    Dataset, HardwareDesc, ModelDesc, Policy, SchedulerConfig, WorkloadSpec,
+};
+use layered_prefill::kvcache::KvCacheManager;
+use layered_prefill::sched::EngineState;
+use layered_prefill::serve::{EngineEvent, EventLog, Session, SessionStatus};
+use layered_prefill::workload::{Trace, WorkloadGen};
+
+fn sharegpt_trace(n: usize, rate: f64, seed: u64) -> Trace {
+    let mut spec = WorkloadSpec::new(Dataset::ShareGpt, rate, n);
+    spec.seed = seed;
+    WorkloadGen::new(spec).generate()
+}
+
+fn run_logged(policy: Policy, replicas: usize, trace: &Trace) -> (EventLog, Vec<u32>, usize) {
+    let mut log = EventLog::default();
+    let report = Session::builder()
+        .policy(policy)
+        .replicas(replicas)
+        .trace(trace)
+        .sink(&mut log)
+        .run()
+        .expect("sim session");
+    assert_eq!(report.status, SessionStatus::Drained);
+    let out_lens: Vec<u32> = report.fleet.requests.iter().map(|r| r.output_len).collect();
+    (log, out_lens, report.fleet.requests.len())
+}
+
+#[test]
+fn token_conservation_per_finished_request() {
+    let trace = sharegpt_trace(30, 3.0, 0xA11CE);
+    for policy in [Policy::Layered, Policy::Chunked, Policy::Hybrid] {
+        let (log, _, n) = run_logged(policy, 1, &trace);
+        assert_eq!(n, 30, "{policy:?}");
+        for req in &trace.requests {
+            let evs = log.for_request(req.id);
+            let first = evs
+                .iter()
+                .filter(|e| matches!(e, EngineEvent::FirstToken { .. }))
+                .count();
+            let toks = evs
+                .iter()
+                .filter(|e| matches!(e, EngineEvent::TokenEmitted { .. }))
+                .count();
+            let fin = evs
+                .iter()
+                .filter(|e| matches!(e, EngineEvent::Finished { .. }))
+                .count();
+            assert_eq!(first, 1, "{policy:?} req {}", req.id);
+            assert_eq!(fin, 1, "{policy:?} req {}", req.id);
+            assert_eq!(
+                toks as u32,
+                req.output_len - 1,
+                "{policy:?} req {}: one FirstToken + output_len-1 decode tokens",
+                req.id
+            );
+        }
+    }
+}
+
+#[test]
+fn admission_accounting_covers_every_arrival() {
+    let trace = sharegpt_trace(40, 4.0, 7);
+    for replicas in [1usize, 3] {
+        let (log, _, n) = run_logged(Policy::Layered, replicas, &trace);
+        assert_eq!(n, 40);
+        let arrived = log.count(|e| matches!(e, EngineEvent::Arrived { .. }));
+        let admitted = log.count(|e| matches!(e, EngineEvent::Admitted { .. }));
+        let rejected = log.count(|e| matches!(e, EngineEvent::KvRejected { .. }));
+        assert_eq!(arrived, 40, "{replicas} replicas");
+        // A drained run admits every arrival exactly once (rejections are
+        // retries that later succeeded).
+        assert_eq!(admitted, 40, "{replicas} replicas");
+        assert!(
+            admitted + rejected >= arrived,
+            "{replicas} replicas: {admitted} + {rejected} < {arrived}"
+        );
+        // Every Admitted id is unique and was Arrived first.
+        let mut admitted_ids = BTreeSet::new();
+        let mut arrived_ids = BTreeSet::new();
+        for (_, e) in &log.events {
+            match e {
+                EngineEvent::Arrived { req, .. } => {
+                    assert!(arrived_ids.insert(req.id), "req {} arrived twice", req.id);
+                }
+                EngineEvent::Admitted { id, .. } => {
+                    assert!(arrived_ids.contains(id), "req {id} admitted before arrival");
+                    assert!(admitted_ids.insert(*id), "req {id} admitted twice");
+                }
+                _ => {}
+            }
+        }
+        // One drain notification per replica.
+        assert_eq!(
+            log.count(|e| matches!(e, EngineEvent::ReplicaDrained { .. })),
+            replicas
+        );
+    }
+}
+
+#[test]
+fn kv_rejections_surface_as_backpressure() {
+    // A deliberately tiny KV pool: one admitted 2304-token request takes
+    // 144 of 256 blocks, so a second concurrent admission must KV-reject
+    // until the first retires — every request still completes.
+    let model = ModelDesc::qwen3_30b_a3b();
+    let cfg = SchedulerConfig::preset(Policy::Chunked);
+    let kv = KvCacheManager::new(256, 16); // 4096 tokens total
+    let state = EngineState::new(model.clone(), kv, cfg.max_batch);
+    let spec = ReplicaSpec {
+        model,
+        hw: HardwareDesc::h100x2(),
+        sched: cfg,
+    };
+    let mut wspec = WorkloadSpec::new(Dataset::Fixed, 6.0, 12);
+    wspec.seed = 3;
+    wspec.fixed_input = 2048;
+    wspec.fixed_output = 256;
+    let trace = WorkloadGen::new(wspec).generate();
+    let mut log = EventLog::default();
+    let report = Session::builder()
+        .replica_specs(vec![spec])
+        .engine_states(vec![state])
+        .trace(&trace)
+        .sink(&mut log)
+        .run()
+        .expect("sim session");
+    assert_eq!(report.status, SessionStatus::Drained);
+    assert_eq!(report.fleet.requests.len(), 12);
+    let rejected = log.count(|e| matches!(e, EngineEvent::KvRejected { .. }));
+    assert!(rejected > 0, "tiny KV pool must produce rejections");
+    for (_, e) in &log.events {
+        if let EngineEvent::KvRejected { demand, free, .. } = e {
+            assert!(demand > free, "rejection implies demand {demand} > free {free}");
+        }
+    }
+}
+
+#[test]
+fn least_kv_router_does_not_dogpile_loaded_replica() {
+    // Two replicas, least-outstanding-KV routing: assignments must track
+    // outstanding load, so consecutive heavy arrivals spread instead of
+    // all landing on replica 0 (which a queue-only metric would report as
+    // idle again the moment its queue drains into the engine).
+    let spec = ReplicaSpec::new(
+        ModelDesc::qwen3_30b_a3b(),
+        HardwareDesc::h100x2(),
+        Policy::Layered,
+    );
+    let trace = sharegpt_trace(24, 8.0, 0xFEED);
+    let report = Session::builder()
+        .replica_specs(vec![spec.clone(), spec])
+        .router(Box::new(LeastOutstandingKv::new()))
+        .trace(&trace)
+        .run()
+        .expect("sim session");
+    let counts = report.assignment_counts();
+    assert_eq!(counts.iter().sum::<usize>(), 24);
+    assert!(
+        counts.iter().all(|&c| c >= 6),
+        "least-kv dogpiled a replica: {counts:?}"
+    );
+}
