@@ -1,0 +1,136 @@
+//! Fleet control plane demo: an open-loop Poisson stream over a 3-replica
+//! layered-prefill fleet that loses a replica mid-run, drains another, and
+//! autoscales under KV backpressure — observed live through the streaming
+//! sliding-window SLO sink (no end-of-run finalization).
+//!
+//! The run demonstrates the control-plane invariant the scenario tests
+//! lock: ZERO LOST REQUESTS — every admitted request either finishes on
+//! its replica or is re-served after its replica fails.
+//!
+//! Run: cargo run --release --example fleet_control [-- --rate 6 --horizon 40]
+
+use layered_prefill::cluster::{Autoscaler, ControllerSet, DrainController, ReplicaSpec};
+use layered_prefill::config::{Dataset, HardwareDesc, ModelDesc, Policy, SloSpec};
+use layered_prefill::metrics::StreamingSlo;
+use layered_prefill::serve::{
+    EngineEvent, EventLog, Fanout, PoissonSource, Session, SessionStatus,
+};
+use layered_prefill::util::cli::Args;
+use layered_prefill::util::table::{f1, pct, Table};
+use std::collections::BTreeSet;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let model = ModelDesc::qwen3_30b_a3b();
+    let hw = HardwareDesc::h100x2();
+    let dataset = Dataset::ShareGpt;
+    let rate = args.f64("rate", 6.0);
+    let horizon = args.f64("horizon", 40.0);
+    let seed = args.u64("seed", 0xF1EE7);
+    let window = args.f64("window", 8.0).max(0.1);
+
+    let specs = vec![
+        ReplicaSpec::new(model.clone(), hw.clone(), Policy::Layered);
+        3
+    ];
+
+    // The script: replica 2 dies at t=8 (its in-flight work re-serves
+    // elsewhere), replica 1 drains gracefully at t=16 and rejoins at t=28.
+    // The autoscaler watches KV backpressure the whole time.
+    let controller = ControllerSet::new()
+        .with(
+            DrainController::new()
+                .fail_at(8.0, 2)
+                .drain_at(16.0, 1)
+                .rejoin_at(28.0, 1),
+        )
+        .with(Autoscaler::new(window, 8, 6));
+
+    let slo = SloSpec::paper(&model, dataset);
+    let mut stream = StreamingSlo::new(slo, window).with_samples(window / 2.0);
+    let mut log = EventLog::default();
+    let mut fanout = Fanout::new(vec![&mut stream, &mut log]);
+
+    let report = Session::builder()
+        .replica_specs(specs)
+        .workload(PoissonSource::open_loop(dataset, rate, seed, horizon))
+        .horizon(horizon)
+        .controller(controller)
+        .sink(&mut fanout)
+        .run()
+        .expect("sim sessions are infallible");
+    drop(fanout);
+
+    let status = match report.status {
+        SessionStatus::Drained => "drained".to_string(),
+        SessionStatus::Halted { pending } => format!("halted ({pending} pending)"),
+    };
+    println!(
+        "fleet of {} replicas ({} at end): {} | {} requests finished\n",
+        3,
+        report.per_replica.len(),
+        status,
+        report.fleet.requests.len()
+    );
+
+    // Lifecycle timeline from the event stream.
+    for (replica, ev) in &log.events {
+        match ev {
+            EngineEvent::ReplicaDown { t_s } => {
+                println!("t={:>5.1}s  replica {replica} DOWN", t_s)
+            }
+            EngineEvent::ReplicaUp { t_s } => {
+                println!("t={:>5.1}s  replica {replica} UP", t_s)
+            }
+            _ => {}
+        }
+    }
+
+    // Loss audit: every admitted id finishes (or is pending at the halt).
+    let mut admitted = BTreeSet::new();
+    let mut finished = BTreeSet::new();
+    for (_, e) in &log.events {
+        match e {
+            EngineEvent::Admitted { id, .. } => {
+                admitted.insert(*id);
+            }
+            EngineEvent::Finished { id, .. } => {
+                finished.insert(*id);
+            }
+            _ => {}
+        }
+    }
+    let unfinished = admitted.difference(&finished).count();
+    println!(
+        "\naudit: {} admitted, {} finished, {} unfinished ({})",
+        admitted.len(),
+        finished.len(),
+        unfinished,
+        if matches!(report.status, SessionStatus::Drained) && unfinished == 0 {
+            "zero lost"
+        } else {
+            "pending at halt"
+        }
+    );
+
+    // Streaming sliding-window SLO timeline, computed live from events.
+    stream.flush_samples(stream.watermark_s());
+    let mut t = Table::new(&format!("sliding {window}s window (live event-stream metrics)"))
+        .header(&["t (s)", "completed", "SLO full", "goodput tok/s", "tok/s"]);
+    for w in stream.samples() {
+        t.row(&[
+            f1(w.t_s),
+            w.completed.to_string(),
+            pct(w.slo_full),
+            f1(w.goodput_tok_s),
+            f1(w.throughput_tok_s),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nReading: the fail at t=8 re-serves replica 2's in-flight work (a\n\
+         dip in the window SLO, no lost requests); the drain at t=16 sheds\n\
+         queued work without dropping admitted requests; the autoscaler\n\
+         only steps in if KV backpressure sustains over the window."
+    );
+}

@@ -1,0 +1,434 @@
+//! The fleet control plane: replica lifecycle and event-driven controllers.
+//!
+//! A [`Controller`] observes the same typed
+//! [`EngineEvent`](crate::serve::EngineEvent) stream every sink sees and, at
+//! periodic *control boundaries* of the session loop (every
+//! `control_interval` seconds of engine time), emits [`ControlAction`]s that
+//! the session applies to the fleet:
+//!
+//! * **Drain** — take a replica out of rotation gracefully: routers stop
+//!   sending it new work, its not-yet-admitted queue is handed to the rest
+//!   of the fleet, and requests already admitted (prefilling / decoding)
+//!   run to completion on it.
+//! * **Fail** — the replica dies: EVERY unfinished request on it (queued,
+//!   waiting, prefilling, decoding) is re-served from scratch elsewhere.
+//!   Tokens it had already streamed are discarded — the retry model
+//!   production failover uses. The session refuses to fail the last
+//!   non-down replica (the work would be unservable).
+//! * **Rejoin** — a drained or failed replica returns to rotation.
+//! * **ScaleUp** — a new replica (cloned from replica 0's blueprint) joins
+//!   the fleet and starts taking traffic.
+//!
+//! Lifecycle transitions surface as
+//! [`ReplicaDown`](crate::serve::EngineEvent::ReplicaDown) /
+//! [`ReplicaUp`](crate::serve::EngineEvent::ReplicaUp) events, and the
+//! current [`ReplicaState`] of every replica is carried in the
+//! [`ReplicaView`] snapshots all routers see, so routing policies never
+//! place new work on a draining or down replica.
+//!
+//! Two controllers ship here: [`DrainController`] replays a scripted
+//! drain/fail/rejoin schedule (the scenario-test and chaos-drill driver),
+//! and [`Autoscaler`] watches sustained `KvRejected` admission backpressure
+//! and grows/shrinks the fleet around it. [`ControllerSet`] composes them.
+
+use std::collections::VecDeque;
+
+use crate::cluster::router::ReplicaView;
+use crate::serve::EngineEvent;
+
+/// Lifecycle state of one replica, carried in [`ReplicaView`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ReplicaState {
+    /// In rotation: routers may place new work here.
+    #[default]
+    Active,
+    /// Out of rotation, finishing admitted work (graceful drain).
+    Draining,
+    /// Dead: holds no work; unfinished requests were re-routed.
+    Down,
+}
+
+impl ReplicaState {
+    /// Routers may place new work on this replica.
+    pub fn is_active(&self) -> bool {
+        matches!(self, ReplicaState::Active)
+    }
+
+    /// The replica is dead (vs. merely draining).
+    pub fn is_down(&self) -> bool {
+        matches!(self, ReplicaState::Down)
+    }
+}
+
+/// One fleet mutation a controller asks the session to apply. Actions that
+/// no longer make sense when applied (out-of-range index, replica already
+/// in the target state, failing the last non-down replica) are ignored.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ControlAction {
+    /// Graceful drain: stop routing to `replica`, hand its queued
+    /// (not-yet-admitted) work to the fleet, finish what it admitted.
+    Drain { replica: usize },
+    /// Hard failure: `replica` goes down and every unfinished request on it
+    /// is re-served from scratch on another replica.
+    Fail { replica: usize },
+    /// Return a draining/down replica to rotation.
+    Rejoin { replica: usize },
+    /// Add one replica (cloned from replica 0's blueprint) to the fleet.
+    ScaleUp,
+}
+
+/// An event-driven fleet controller. The session forwards every
+/// [`EngineEvent`] (with its replica index) through [`Controller::on_event`]
+/// and, at each control boundary, calls [`Controller::control`] with live
+/// [`ReplicaView`] snapshots to collect actions.
+pub trait Controller {
+    fn name(&self) -> &'static str;
+
+    /// Observe one engine event — the same typed stream sinks receive.
+    /// Events are delivered in batches at control boundaries, after the
+    /// fleet has advanced to the boundary instant.
+    fn on_event(&mut self, replica: usize, ev: &EngineEvent) {
+        let _ = (replica, ev);
+    }
+
+    /// Control boundary at engine time `now_s`: decide fleet actions given
+    /// the current replica snapshots (which carry [`ReplicaState`]).
+    fn control(&mut self, now_s: f64, views: &[ReplicaView]) -> Vec<ControlAction>;
+}
+
+impl<C: Controller + ?Sized> Controller for Box<C> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn on_event(&mut self, replica: usize, ev: &EngineEvent) {
+        (**self).on_event(replica, ev)
+    }
+
+    fn control(&mut self, now_s: f64, views: &[ReplicaView]) -> Vec<ControlAction> {
+        (**self).control(now_s, views)
+    }
+}
+
+/// Scripted lifecycle controller: drain / fail / rejoin given replicas at
+/// given engine times. The scenario-test and chaos-drill driver.
+///
+/// ```no_run
+/// use layered_prefill::cluster::DrainController;
+/// // Drain replica 0 at t=5s, kill replica 1 at t=10s, bring 1 back at 30s.
+/// let script = DrainController::new()
+///     .drain_at(5.0, 0)
+///     .fail_at(10.0, 1)
+///     .rejoin_at(30.0, 1);
+/// ```
+#[derive(Debug, Default)]
+pub struct DrainController {
+    /// (fire time, action), sorted by time; `fired` indexes the next entry.
+    script: Vec<(f64, ControlAction)>,
+    fired: usize,
+}
+
+impl DrainController {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn at(mut self, t_s: f64, action: ControlAction) -> Self {
+        self.script.push((t_s, action));
+        // Stable sort keeps insertion order among equal times.
+        self.script
+            .sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite script times"));
+        self
+    }
+
+    /// Gracefully drain `replica` at engine time `t_s`.
+    pub fn drain_at(self, t_s: f64, replica: usize) -> Self {
+        self.at(t_s, ControlAction::Drain { replica })
+    }
+
+    /// Hard-fail `replica` at engine time `t_s`.
+    pub fn fail_at(self, t_s: f64, replica: usize) -> Self {
+        self.at(t_s, ControlAction::Fail { replica })
+    }
+
+    /// Return `replica` to rotation at engine time `t_s`.
+    pub fn rejoin_at(self, t_s: f64, replica: usize) -> Self {
+        self.at(t_s, ControlAction::Rejoin { replica })
+    }
+
+    /// True when every scripted action has fired.
+    pub fn exhausted(&self) -> bool {
+        self.fired >= self.script.len()
+    }
+}
+
+impl Controller for DrainController {
+    fn name(&self) -> &'static str {
+        "scripted"
+    }
+
+    fn control(&mut self, now_s: f64, _views: &[ReplicaView]) -> Vec<ControlAction> {
+        let mut out = Vec::new();
+        while self.fired < self.script.len() && self.script[self.fired].0 <= now_s {
+            out.push(self.script[self.fired].1);
+            self.fired += 1;
+        }
+        out
+    }
+}
+
+/// Threshold autoscaler on sustained admission backpressure: counts
+/// `KvRejected` events in a sliding window; at or above
+/// `scale_up_rejects` it adds a replica (up to `max_replicas`), and once
+/// the window is completely quiet again it drains the most recently added
+/// replica. One action per `cooldown_s` (default: the window length), so a
+/// single burst cannot thrash the fleet.
+///
+/// A drained (scaled-down) replica is retired, not rejoined: if
+/// backpressure returns, a FRESH replica is added instead — rejoining a
+/// half-drained engine would re-admit behind its leftover resident KV.
+#[derive(Debug)]
+pub struct Autoscaler {
+    /// Sliding window over `KvRejected` timestamps, in engine seconds.
+    pub window_s: f64,
+    /// Rejects within the window that trigger a scale-up.
+    pub scale_up_rejects: u64,
+    /// Never grow the fleet beyond this many replicas (total, any state).
+    pub max_replicas: usize,
+    /// Minimum spacing between actions (defaults to `window_s`).
+    pub cooldown_s: f64,
+    rejects: VecDeque<f64>,
+    /// Replica indices this autoscaler added (scale-down retires the top).
+    added: Vec<usize>,
+    /// A ScaleUp was issued; the new index is learned at the next boundary.
+    pending_add: bool,
+    last_len: usize,
+    last_action_s: f64,
+}
+
+impl Autoscaler {
+    pub fn new(window_s: f64, scale_up_rejects: u64, max_replicas: usize) -> Self {
+        assert!(window_s > 0.0, "autoscaler window must be positive");
+        Autoscaler {
+            window_s,
+            scale_up_rejects: scale_up_rejects.max(1),
+            max_replicas: max_replicas.max(1),
+            cooldown_s: window_s,
+            rejects: VecDeque::new(),
+            added: Vec::new(),
+            pending_add: false,
+            last_len: 0,
+            last_action_s: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn with_cooldown(mut self, cooldown_s: f64) -> Self {
+        self.cooldown_s = cooldown_s;
+        self
+    }
+
+    /// Replica indices this autoscaler has added so far.
+    pub fn added_replicas(&self) -> &[usize] {
+        &self.added
+    }
+}
+
+impl Controller for Autoscaler {
+    fn name(&self) -> &'static str {
+        "autoscaler"
+    }
+
+    fn on_event(&mut self, _replica: usize, ev: &EngineEvent) {
+        if let EngineEvent::KvRejected { t_s, .. } = ev {
+            self.rejects.push_back(*t_s);
+        }
+    }
+
+    fn control(&mut self, now_s: f64, views: &[ReplicaView]) -> Vec<ControlAction> {
+        while self
+            .rejects
+            .front()
+            .is_some_and(|&t| t <= now_s - self.window_s)
+        {
+            self.rejects.pop_front();
+        }
+        // Learn the index of a replica added at the previous boundary.
+        if self.pending_add && views.len() > self.last_len {
+            self.added.extend(self.last_len..views.len());
+            self.pending_add = false;
+        }
+        self.last_len = views.len();
+
+        if now_s - self.last_action_s < self.cooldown_s {
+            return Vec::new();
+        }
+        if !self.pending_add
+            && self.rejects.len() as u64 >= self.scale_up_rejects
+            && views.len() < self.max_replicas
+        {
+            self.pending_add = true;
+            self.last_action_s = now_s;
+            return vec![ControlAction::ScaleUp];
+        }
+        if self.rejects.is_empty() {
+            if let Some(replica) = self.added.pop() {
+                self.last_action_s = now_s;
+                return vec![ControlAction::Drain { replica }];
+            }
+        }
+        Vec::new()
+    }
+}
+
+/// Composes several controllers: events fan out to every member, boundary
+/// actions concatenate in member order.
+#[derive(Default)]
+pub struct ControllerSet {
+    members: Vec<Box<dyn Controller>>,
+}
+
+impl ControllerSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, c: impl Controller + 'static) {
+        self.members.push(Box::new(c));
+    }
+
+    pub fn with(mut self, c: impl Controller + 'static) -> Self {
+        self.push(c);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+}
+
+impl Controller for ControllerSet {
+    fn name(&self) -> &'static str {
+        "controller-set"
+    }
+
+    fn on_event(&mut self, replica: usize, ev: &EngineEvent) {
+        for c in self.members.iter_mut() {
+            c.on_event(replica, ev);
+        }
+    }
+
+    fn control(&mut self, now_s: f64, views: &[ReplicaView]) -> Vec<ControlAction> {
+        let mut out = Vec::new();
+        for c in self.members.iter_mut() {
+            out.extend(c.control(now_s, views));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Policy;
+
+    fn view(id: usize, state: ReplicaState) -> ReplicaView {
+        ReplicaView {
+            id,
+            policy: Policy::Layered,
+            state,
+            queued: 0,
+            active: 0,
+            queued_kv_tokens: 0,
+            kv_used_blocks: 0,
+            kv_block_size: 16,
+            kv_free_blocks: 100,
+            kv_rejects: 0,
+            now_s: 0.0,
+        }
+    }
+
+    fn active_views(n: usize) -> Vec<ReplicaView> {
+        (0..n).map(|i| view(i, ReplicaState::Active)).collect()
+    }
+
+    #[test]
+    fn replica_state_predicates() {
+        assert!(ReplicaState::Active.is_active());
+        assert!(!ReplicaState::Draining.is_active());
+        assert!(!ReplicaState::Down.is_active());
+        assert!(ReplicaState::Down.is_down());
+        assert!(!ReplicaState::Draining.is_down());
+        assert_eq!(ReplicaState::default(), ReplicaState::Active);
+    }
+
+    #[test]
+    fn scripted_controller_fires_in_time_order_once() {
+        let mut c = DrainController::new()
+            .rejoin_at(30.0, 1)
+            .drain_at(5.0, 0)
+            .fail_at(10.0, 1);
+        let views = active_views(2);
+        assert_eq!(c.control(1.0, &views), vec![]);
+        assert_eq!(
+            c.control(5.0, &views),
+            vec![ControlAction::Drain { replica: 0 }]
+        );
+        // Already-fired actions never repeat; a late poll catches up on
+        // everything due, in script order.
+        assert_eq!(
+            c.control(31.0, &views),
+            vec![
+                ControlAction::Fail { replica: 1 },
+                ControlAction::Rejoin { replica: 1 },
+            ]
+        );
+        assert!(c.exhausted());
+        assert_eq!(c.control(40.0, &views), vec![]);
+    }
+
+    #[test]
+    fn autoscaler_scales_up_on_sustained_rejects_and_drains_when_quiet() {
+        let mut a = Autoscaler::new(5.0, 3, 4).with_cooldown(3.0);
+        for t in [1.0, 1.2, 1.4] {
+            a.on_event(0, &EngineEvent::KvRejected { t_s: t, id: 7, demand: 10, free: 2 });
+        }
+        // Threshold met: one ScaleUp.
+        assert_eq!(a.control(2.0, &active_views(1)), vec![ControlAction::ScaleUp]);
+        // Cooldown suppresses further actions even under pressure.
+        assert_eq!(a.control(2.5, &active_views(1)), vec![]);
+        // Next boundary sees the grown fleet; the new index is recorded.
+        assert_eq!(a.control(4.0, &active_views(2)), vec![]);
+        assert_eq!(a.added_replicas(), &[1]);
+        // Window empties (last reject at 1.4 + window 5.0 < 8.0): the added
+        // replica is drained back out.
+        assert_eq!(
+            a.control(8.0, &active_views(2)),
+            vec![ControlAction::Drain { replica: 1 }]
+        );
+        assert!(a.added_replicas().is_empty());
+        // Quiet and nothing added: no further actions.
+        assert_eq!(a.control(20.0, &active_views(2)), vec![]);
+    }
+
+    #[test]
+    fn autoscaler_respects_max_replicas() {
+        let mut a = Autoscaler::new(5.0, 1, 1).with_cooldown(0.0);
+        a.on_event(0, &EngineEvent::KvRejected { t_s: 0.5, id: 1, demand: 4, free: 0 });
+        assert_eq!(a.control(1.0, &active_views(1)), vec![]);
+    }
+
+    #[test]
+    fn controller_set_concatenates_member_actions() {
+        let mut set = ControllerSet::new()
+            .with(DrainController::new().drain_at(1.0, 0))
+            .with(DrainController::new().fail_at(1.0, 1));
+        assert!(!set.is_empty());
+        assert_eq!(
+            set.control(2.0, &active_views(2)),
+            vec![
+                ControlAction::Drain { replica: 0 },
+                ControlAction::Fail { replica: 1 },
+            ]
+        );
+    }
+}

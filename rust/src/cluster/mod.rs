@@ -1,23 +1,35 @@
 //! Multi-replica routing layer: [`ReplicaSpec`] fleet blueprints, the
 //! request [`Router`] policies ([`RoundRobin`] / [`LeastOutstandingKv`] /
-//! [`SloAware`]), live [`ReplicaView`] load snapshots, and fleet metric
-//! aggregation ([`merge_metrics`]).
+//! [`SloAware`] / [`AdaptiveSpill`]), live [`ReplicaView`] load snapshots
+//! (now carrying [`ReplicaState`] lifecycle), the fleet control plane
+//! ([`control`]: the [`Controller`] trait, scripted [`DrainController`],
+//! threshold [`Autoscaler`]), and fleet metric aggregation
+//! ([`merge_metrics`]).
 //!
 //! The run loop itself lives in [`serve::Session`](crate::serve::Session):
 //! a session advances every replica engine to each arrival instant,
 //! snapshots replica load (queue depth, RESIDENT KV blocks, accumulated
-//! `KvRejected` backpressure) into [`ReplicaView`]s, routes, and drains.
-//! With one replica and any router, a session is bit-identical to the raw
-//! single-engine core — the acceptance anchor locked by
-//! `tests/cluster_equivalence.rs`.
+//! `KvRejected` backpressure, lifecycle state) into [`ReplicaView`]s,
+//! routes, and drains. Sessions with a controller (or a spill router) also
+//! step through periodic control boundaries, where controllers drain /
+//! fail / rejoin / add replicas and KV-rejected arrivals spill to the
+//! next-best replica. With one replica and any router, a session is
+//! bit-identical to the raw single-engine core — the acceptance anchor
+//! locked by `tests/cluster_equivalence.rs`.
 //!
 //! DEPRECATED entry point: [`Cluster::run`] is a thin shim kept for
 //! signature stability; new code should declare fleets with
 //! `Session::builder().replica_specs(..).router(..)`.
 
+pub mod control;
 pub mod router;
 
-pub use router::{build_router, LeastOutstandingKv, ReplicaView, RoundRobin, Router, SloAware};
+pub use control::{
+    Autoscaler, ControlAction, Controller, ControllerSet, DrainController, ReplicaState,
+};
+pub use router::{
+    build_router, AdaptiveSpill, LeastOutstandingKv, ReplicaView, RoundRobin, Router, SloAware,
+};
 
 use crate::config::{HardwareDesc, ModelDesc, Policy, SchedulerConfig};
 use crate::metrics::RunMetrics;

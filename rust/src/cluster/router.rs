@@ -2,9 +2,18 @@
 //!
 //! Routers see a lightweight [`ReplicaView`] snapshot of every replica at
 //! the request's arrival instant (queue depth, outstanding KV footprint,
-//! scheduling policy, local clock) — the information a production front-end
-//! has — and return a replica index.
+//! scheduling policy, lifecycle state, local clock) — the information a
+//! production front-end has — and return a replica index.
+//!
+//! Lifecycle rule (locked by the router property tests in
+//! `tests/cluster_equivalence.rs`): whenever at least one replica is
+//! [`ReplicaState::Active`], every shipped router returns an Active
+//! replica — draining and down replicas never receive new work. With zero
+//! Active replicas the routers fall back to the whole fleet (the session
+//! additionally remaps such picks onto the least-loaded non-down replica,
+//! so work is never parked on a dead engine).
 
+use crate::cluster::control::ReplicaState;
 use crate::config::Policy;
 use crate::workload::Request;
 
@@ -14,6 +23,9 @@ pub struct ReplicaView {
     pub id: usize,
     /// Scheduling policy this replica's engine runs.
     pub policy: Policy,
+    /// Lifecycle state (Active / Draining / Down); routers only place new
+    /// work on Active replicas.
+    pub state: ReplicaState,
     /// Requests routed to the replica but not yet delivered to its engine.
     pub queued: usize,
     /// Requests admitted or waiting inside the engine (not finished).
@@ -51,12 +63,22 @@ impl ReplicaView {
 /// A routing policy over replica snapshots.
 pub trait Router {
     fn name(&self) -> &'static str;
+
     /// Pick the replica for `req`. `replicas` is non-empty; the returned
     /// index is taken modulo the replica count.
     fn route(&mut self, req: &Request, replicas: &[ReplicaView]) -> usize;
+
+    /// True when this router wants the session to pull KV-rejected arrivals
+    /// back out of a replica's waiting queue and offer them for re-routing
+    /// (adaptive spill). Default routers leave rejected requests queued on
+    /// their original replica, where admission retries locally.
+    fn wants_spill(&self) -> bool {
+        false
+    }
 }
 
-/// Cycle through replicas in arrival order, ignoring load.
+/// Cycle through replicas in arrival order, ignoring load. Draining/down
+/// replicas are skipped (the cycle advances to the next Active one).
 #[derive(Debug, Default)]
 pub struct RoundRobin {
     next: usize,
@@ -74,15 +96,25 @@ impl Router for RoundRobin {
     }
 
     fn route(&mut self, _req: &Request, replicas: &[ReplicaView]) -> usize {
-        let i = self.next % replicas.len();
+        let n = replicas.len();
+        let start = self.next % n;
+        for off in 0..n {
+            let i = (start + off) % n;
+            if replicas[i].state.is_active() {
+                self.next = self.next.wrapping_add(off + 1);
+                return i;
+            }
+        }
+        // No Active replica: keep the legacy cycle (the session remaps).
         self.next = self.next.wrapping_add(1);
-        i
+        start
     }
 }
 
 /// Send each request to the replica with the smallest outstanding KV
 /// footprint (queued + in-engine), the classic least-outstanding-work
-/// balancer. Ties break toward the lowest replica id.
+/// balancer. Ties break toward the lowest replica id; only Active replicas
+/// are considered while any exist.
 #[derive(Debug, Default)]
 pub struct LeastOutstandingKv;
 
@@ -110,7 +142,11 @@ impl Router for LeastOutstandingKv {
     }
 
     fn route(&mut self, _req: &Request, replicas: &[ReplicaView]) -> usize {
-        argmin_outstanding(replicas, |_| true)
+        if replicas.iter().any(|v| v.state.is_active()) {
+            argmin_outstanding(replicas, |v| v.state.is_active())
+        } else {
+            argmin_outstanding(replicas, |_| true)
+        }
     }
 }
 
@@ -119,19 +155,26 @@ impl Router for LeastOutstandingKv {
 /// stall-free prefill keeps fleet TBT flat, while short prompts go to
 /// token-axis replicas (chunked/orca/static), which finish them in one or
 /// two chunks without paying the G-iteration layered cadence. Within the
-/// preferred set, least-outstanding-KV balances load; an empty preferred
-/// set falls back to the whole fleet.
+/// preferred set, least-outstanding-KV balances load over Active replicas;
+/// an empty preferred set falls back to all Active replicas, then to the
+/// whole fleet.
 #[derive(Debug)]
 pub struct SloAware {
     /// Prompts at least this long are "long" (paper §4.4 uses the chunk
-    /// target 512 as the natural scale; default 4× that).
+    /// target 512 as the natural scale; default 4× that). Always ≥ 1: see
+    /// [`SloAware::new`].
     pub long_prompt_threshold: u32,
 }
 
 impl SloAware {
+    /// A threshold of 0 is degenerate — `input_len >= 0` holds for EVERY
+    /// prompt, so the whole fleet would collapse onto the layer-axis
+    /// replicas and the token-axis replicas would idle. The threshold is
+    /// therefore clamped to 1: only genuinely empty prompts route "short",
+    /// and any positive threshold behaves as written.
     pub fn new(long_prompt_threshold: u32) -> Self {
         SloAware {
-            long_prompt_threshold,
+            long_prompt_threshold: long_prompt_threshold.max(1),
         }
     }
 }
@@ -153,22 +196,94 @@ impl Router for SloAware {
 
     fn route(&mut self, req: &Request, replicas: &[ReplicaView]) -> usize {
         let want_layered = req.input_len >= self.long_prompt_threshold;
-        let preferred = |v: &ReplicaView| is_layer_axis(v.policy) == want_layered;
+        let active = |v: &ReplicaView| v.state.is_active();
+        let preferred = |v: &ReplicaView| active(v) && is_layer_axis(v.policy) == want_layered;
         if replicas.iter().any(|v| preferred(v)) {
             argmin_outstanding(replicas, preferred)
+        } else if replicas.iter().any(|v| active(v)) {
+            argmin_outstanding(replicas, active)
         } else {
             argmin_outstanding(replicas, |_| true)
         }
     }
 }
 
+/// Backpressure-adaptive spill router. Ranks Active replicas by outstanding
+/// KV (queued + RESIDENT), breaking ties by accumulated `kv_rejects` and
+/// then id, and remembers which replicas each request already tried: when
+/// the session pulls a KV-rejected arrival back out of a replica's waiting
+/// queue (see `serve::Session` — enabled by [`Router::wants_spill`]), the
+/// retry is routed to the next-best replica the request has NOT tried yet,
+/// so admission backpressure on one replica spills load across the fleet
+/// instead of head-of-line blocking. Retry memory is bounded two ways: a
+/// request that has tried every replica is forgotten, and once the map
+/// holds [`AdaptiveSpill::MEMORY_CAP`] requests the stalest (smallest id —
+/// ids are assigned in arrival order) is evicted, so open-ended streaming
+/// runs stay O(cap) instead of O(total requests). A request whose memory
+/// was evicted simply re-ranks from scratch on a later retry; the session
+/// separately bounds spills per request to replica-count − 1.
+#[derive(Debug, Default)]
+pub struct AdaptiveSpill {
+    tried: std::collections::BTreeMap<u64, Vec<usize>>,
+}
+
+impl AdaptiveSpill {
+    /// Most requests whose retry history is retained at once.
+    pub const MEMORY_CAP: usize = 4096;
+
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+fn argmin_pressure(replicas: &[ReplicaView], allow: impl Fn(&ReplicaView) -> bool) -> Option<usize> {
+    replicas
+        .iter()
+        .filter(|v| allow(v))
+        .min_by_key(|v| (v.outstanding_kv_tokens(), v.kv_rejects, v.id))
+        .map(|v| v.id)
+}
+
+impl Router for AdaptiveSpill {
+    fn name(&self) -> &'static str {
+        "adaptive-spill"
+    }
+
+    fn wants_spill(&self) -> bool {
+        true
+    }
+
+    fn route(&mut self, req: &Request, replicas: &[ReplicaView]) -> usize {
+        let tried = self.tried.entry(req.id).or_default();
+        let pick = argmin_pressure(replicas, |v| v.state.is_active() && !tried.contains(&v.id))
+            .or_else(|| argmin_pressure(replicas, |v| v.state.is_active()))
+            .or_else(|| argmin_pressure(replicas, |v| !v.state.is_down()))
+            .or_else(|| argmin_pressure(replicas, |_| true))
+            .unwrap_or(0);
+        tried.push(pick);
+        let full_cycle = tried.len() >= replicas.len();
+        if full_cycle {
+            self.tried.remove(&req.id);
+        } else if self.tried.len() > Self::MEMORY_CAP {
+            // Stay bounded on open-ended runs: the smallest id is the
+            // stalest request (arrival-ordered ids) and has almost
+            // certainly been admitted long ago.
+            if let Some(&oldest) = self.tried.keys().next() {
+                self.tried.remove(&oldest);
+            }
+        }
+        pick
+    }
+}
+
 /// Build a router by name: `rr`/`round-robin`, `least-kv`/`kv`,
-/// `slo`/`slo-aware`.
+/// `slo`/`slo-aware`, `spill`/`adaptive-spill`.
 pub fn build_router(name: &str) -> Option<Box<dyn Router>> {
     match name.to_ascii_lowercase().as_str() {
         "rr" | "round-robin" | "roundrobin" => Some(Box::new(RoundRobin::new())),
         "least-kv" | "kv" | "least-outstanding" => Some(Box::new(LeastOutstandingKv::new())),
         "slo" | "slo-aware" => Some(Box::new(SloAware::new(2048))),
+        "spill" | "adaptive" | "adaptive-spill" => Some(Box::new(AdaptiveSpill::new())),
         _ => None,
     }
 }
@@ -181,6 +296,7 @@ mod tests {
         ReplicaView {
             id,
             policy,
+            state: ReplicaState::Active,
             queued: 0,
             active: 0,
             queued_kv_tokens: queued_kv,
@@ -214,6 +330,23 @@ mod tests {
     }
 
     #[test]
+    fn round_robin_skips_non_active_replicas() {
+        let mut views = [
+            view(0, Policy::Layered, 0),
+            view(1, Policy::Layered, 0),
+            view(2, Policy::Layered, 0),
+        ];
+        views[1].state = ReplicaState::Draining;
+        let mut r = RoundRobin::new();
+        let picks: Vec<usize> = (0..4).map(|_| r.route(&req(100), &views)).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2], "draining replica 1 skipped");
+        // Replica 1 rejoins: the cycle includes it again.
+        views[1].state = ReplicaState::Active;
+        let picks: Vec<usize> = (0..3).map(|_| r.route(&req(100), &views)).collect();
+        assert_eq!(picks, vec![0, 1, 2]);
+    }
+
+    #[test]
     fn least_kv_picks_min_and_breaks_ties_low() {
         let views = [
             view(0, Policy::Layered, 500),
@@ -222,6 +355,14 @@ mod tests {
         ];
         let mut r = LeastOutstandingKv::new();
         assert_eq!(r.route(&req(100), &views), 1);
+    }
+
+    #[test]
+    fn least_kv_avoids_down_replica_even_when_empty() {
+        let mut views = [view(0, Policy::Layered, 0), view(1, Policy::Layered, 900)];
+        views[0].state = ReplicaState::Down;
+        let mut r = LeastOutstandingKv::new();
+        assert_eq!(r.route(&req(100), &views), 1, "down replica 0 unpicked");
     }
 
     #[test]
@@ -265,11 +406,75 @@ mod tests {
     }
 
     #[test]
+    fn slo_aware_ignores_draining_preferred_replica() {
+        let mut views = [
+            view(0, Policy::Layered, 0),
+            view(1, Policy::Layered, 700),
+            view(2, Policy::Chunked, 10),
+        ];
+        views[0].state = ReplicaState::Draining;
+        let mut r = SloAware::new(2048);
+        // The idle layered replica 0 is draining: long prompts must go to
+        // the loaded-but-Active layered replica 1, not to 0.
+        assert_eq!(r.route(&req(8000), &views), 1);
+    }
+
+    #[test]
+    fn slo_aware_zero_threshold_clamps_to_one() {
+        // The degenerate SloAware::new(0) used to classify EVERY prompt as
+        // long (input_len >= 0 is vacuously true), starving token-axis
+        // replicas. The clamp keeps the split meaningful: only empty
+        // prompts are "short".
+        let mut r = SloAware::new(0);
+        assert_eq!(r.long_prompt_threshold, 1);
+        let views = [view(0, Policy::Layered, 0), view(1, Policy::Chunked, 0)];
+        assert_eq!(r.route(&req(0), &views), 1, "empty prompt routes short");
+        assert_eq!(r.route(&req(1), &views), 0, "any real prompt routes long");
+    }
+
+    #[test]
+    fn adaptive_spill_retries_on_next_best_replica() {
+        let mut r = AdaptiveSpill::new();
+        let views = [
+            view(0, Policy::Layered, 10),
+            view(1, Policy::Layered, 50),
+            view(2, Policy::Layered, 90),
+        ];
+        // First routing: least pressure wins.
+        assert_eq!(r.route(&req(100), &views), 0);
+        // Same request re-offered (KV-rejected on 0): next-best, not 0.
+        assert_eq!(r.route(&req(100), &views), 1);
+        assert_eq!(r.route(&req(100), &views), 2);
+        // Full cycle tried: memory clears, ranking starts over.
+        assert_eq!(r.route(&req(100), &views), 0);
+    }
+
+    #[test]
+    fn adaptive_spill_breaks_kv_ties_by_reject_count() {
+        let mut a = view(0, Policy::Layered, 100);
+        a.kv_rejects = 9;
+        let b = view(1, Policy::Layered, 100);
+        let mut r = AdaptiveSpill::new();
+        // Equal outstanding KV: the replica with fewer historical rejects
+        // wins (it is less likely to bounce the admission again).
+        assert_eq!(r.route(&req(100), &[a, b]), 1);
+    }
+
+    #[test]
+    fn adaptive_spill_skips_non_active() {
+        let mut views = [view(0, Policy::Layered, 0), view(1, Policy::Layered, 400)];
+        views[0].state = ReplicaState::Down;
+        let mut r = AdaptiveSpill::new();
+        assert_eq!(r.route(&req(100), &views), 1);
+    }
+
+    #[test]
     fn build_router_names() {
         for (n, want) in [
             ("rr", "round-robin"),
             ("least-kv", "least-kv"),
             ("slo", "slo-aware"),
+            ("spill", "adaptive-spill"),
         ] {
             assert_eq!(build_router(n).unwrap().name(), want);
         }

@@ -159,6 +159,17 @@ impl EngineCore {
         self.pending.len()
     }
 
+    /// Pull every undelivered request back out, in arrival order — the
+    /// control plane's drain/failure handoff (the fleet re-routes them).
+    pub fn take_pending(&mut self) -> Vec<Request> {
+        self.pending.drain(..).collect()
+    }
+
+    /// The horizon cut this core off (terminal: no further iterations run).
+    pub fn halted(&self) -> bool {
+        self.halted
+    }
+
     /// Total KV footprint (input + output tokens) of undelivered requests —
     /// the router-visible share of a replica's outstanding work.
     pub fn pending_footprint(&self) -> u64 {

@@ -39,13 +39,27 @@
 //! [`cluster::Router`] picking a replica per arrival. The core emits every
 //! observable transition — `Arrived`, `Admitted`, `KvRejected` (admission
 //! backpressure), `PrefillGroupDone`, `FirstToken`, `TokenEmitted`,
-//! `Finished`, `ReplicaDrained`, `Halted` — as a
-//! [`serve::EngineEvent`] through the [`serve::EventSink`] trait, so
-//! schedulers, routers, metrics, and tests all observe the SAME run.
-//! Workload intake is pull-based ([`serve::WorkloadSource`]): sessions
+//! `Finished`, `ReplicaDrained`, `ReplicaDown`/`ReplicaUp` (lifecycle),
+//! `Halted` — as a [`serve::EngineEvent`] through the [`serve::EventSink`]
+//! trait, so schedulers, routers, metrics, and tests all observe the SAME
+//! run. Workload intake is pull-based ([`serve::WorkloadSource`]): sessions
 //! serve pre-materialized traces or lazily sampled open-loop streams, and
 //! a horizon-cut run ends [`serve::SessionStatus::Halted`] with work still
 //! in flight instead of pretending to drain.
+//!
+//! On top of the stream sits the fleet control plane
+//! ([`cluster::control`]): a [`cluster::Controller`] observes events and,
+//! at periodic control boundaries, drains / fails / rejoins / scales
+//! replicas ([`cluster::DrainController`] scripts chaos drills,
+//! [`cluster::Autoscaler`] follows sustained `KvRejected` backpressure).
+//! Replica lifecycle ([`cluster::ReplicaState`]) is carried in every
+//! [`cluster::ReplicaView`], so no shipped router places new work on a
+//! draining or down replica, and the [`cluster::AdaptiveSpill`] router
+//! retries KV-rejected arrivals on the next-best replica. Live runs are
+//! measured without finalization by [`metrics::streaming`]: sliding-window
+//! TTFT/TBT SLO attainment and goodput computed directly from the event
+//! stream ([`metrics::StreamingSlo`]), bounded-memory for hours-long
+//! sessions.
 //!
 //! ## Architecture: one engine core, many backends
 //!
@@ -77,14 +91,20 @@
 //!   factory into a `Session`.
 //! * **`cluster`** — fleet blueprints ([`cluster::ReplicaSpec`]), request
 //!   routers (round-robin, least-outstanding-KV with RESIDENT-KV
-//!   visibility, SLO-aware prompt steering), and fleet metric aggregation;
-//!   `Cluster::run` is a deprecated shim over a multi-replica `Session`.
-//!   A 1-replica session is bit-identical to the raw single-engine core
-//!   (locked by `tests/cluster_equivalence.rs`).
+//!   visibility, SLO-aware prompt steering, adaptive backpressure spill),
+//!   the control plane (`cluster::control`: replica lifecycle,
+//!   event-driven controllers, scripted drain/fail/rejoin, threshold
+//!   autoscaling), and fleet metric aggregation; `Cluster::run` is a
+//!   deprecated shim over a multi-replica `Session`. A 1-replica session
+//!   is bit-identical to the raw single-engine core (locked by
+//!   `tests/cluster_equivalence.rs`); drain/failure scenarios are locked
+//!   by `tests/control_scenarios.rs`.
 //! * **`kvcache` / `workload` / `metrics` / `report`** — paged KV manager,
 //!   paper-fitted workload generators with record/replay plus streaming
-//!   sources, latency/SLO/traffic metrics, and regenerators for every
-//!   paper table and figure.
+//!   sources, latency/SLO/traffic metrics — both end-of-run (`RunMetrics`)
+//!   and streaming sliding-window (`metrics::streaming`, locked by
+//!   `tests/streaming_metrics.rs`) — and regenerators for every paper
+//!   table and figure.
 //!
 //! ## The lower layers
 //!

@@ -15,6 +15,12 @@
 //!   cluster --replicas 4 --router slo --policies layered,chunked --rate 6.0
 //!       Multi-replica fleet simulation: N engine replicas behind a
 //!       request router, per-replica + fleet-aggregated metrics.
+//!       Control plane: `--drain-at T[:R]`, `--fail-at T[:R]`,
+//!       `--rejoin-at T[:R]` script replica lifecycle; `--autoscale` adds
+//!       replicas under sustained KV backpressure; `--router spill`
+//!       re-routes KV-rejected arrivals; `--window W` reports
+//!       sliding-window SLO attainment from the live event stream;
+//!       `--open-loop --horizon H` streams a Poisson workload.
 //!   info
 //!       Print model/hardware descriptors and artifact status.
 
@@ -55,7 +61,8 @@ fn usage() {
     eprintln!(
         "usage: lpserve <report|simulate|sweep|serve|cluster|trace|info> [--flags]\n\
          try: lpserve report all | lpserve simulate --policy layered --rate 1.3\n\
-         \x20    | lpserve cluster --replicas 4 --router slo --policies layered,chunked"
+         \x20    | lpserve cluster --replicas 4 --router slo --policies layered,chunked\n\
+         \x20    | lpserve cluster --replicas 4 --open-loop --fail-at 10:1 --autoscale --window 10"
     );
 }
 
@@ -261,15 +268,33 @@ fn cmd_serve(args: &Args) {
     t.print();
 }
 
+/// Parse a control-script instant: `"T"` or `"T:REPLICA"` (replica 0 when
+/// omitted), e.g. `--fail-at 10.5:2`.
+fn parse_time_replica(s: &str) -> Option<(f64, usize)> {
+    match s.split_once(':') {
+        Some((t, r)) => Some((t.trim().parse().ok()?, r.trim().parse().ok()?)),
+        None => Some((s.trim().parse().ok()?, 0)),
+    }
+}
+
 /// Multi-replica fleet simulation: N replica engines behind a request
 /// router — a `serve::Session` — reporting per-replica and
-/// fleet-aggregated latency/traffic.
+/// fleet-aggregated latency/traffic, with an optional control plane
+/// (scripted drain/fail/rejoin, backpressure autoscaling) and streaming
+/// sliding-window SLO metrics.
 ///
 ///   lpserve cluster --replicas 4 --router rr --rate 6.0 --requests 200
 ///   lpserve cluster --replicas 4 --router slo --policies layered,chunked
+///   lpserve cluster --replicas 4 --open-loop --fail-at 10:1 --autoscale
 fn cmd_cluster(args: &Args) {
-    use layered_prefill::cluster::{build_router, ReplicaSpec};
-    use layered_prefill::serve::Session;
+    use layered_prefill::cluster::{
+        build_router, Autoscaler, ControllerSet, DrainController, ReplicaSpec,
+    };
+    use layered_prefill::metrics::StreamingSlo;
+    use layered_prefill::serve::{
+        EngineEvent, EventLog, Fanout, PoissonSource, Session, SessionStatus,
+    };
+    use std::collections::BTreeSet;
 
     let model = model_arg(args);
     let dataset = dataset_arg(args);
@@ -278,7 +303,7 @@ fn cmd_cluster(args: &Args) {
     let n = args.usize("requests", 100);
     let router_name = args.str("router", "rr");
     let Some(router) = build_router(&router_name) else {
-        eprintln!("unknown router '{router_name}' (rr | least-kv | slo)");
+        eprintln!("unknown router '{router_name}' (rr | least-kv | slo | spill)");
         return;
     };
 
@@ -308,19 +333,81 @@ fn cmd_cluster(args: &Args) {
         })
         .collect();
 
-    let mut wspec = WorkloadSpec::new(dataset, rate, n);
-    wspec.seed = args.u64("seed", 0xA11CE);
-    let trace = WorkloadGen::new(wspec).generate();
+    // Control plane from flags: a scripted lifecycle controller plus an
+    // optional backpressure autoscaler, composed into one ControllerSet.
+    let window = args.f64("window", 10.0).max(0.1);
+    let mut controller = ControllerSet::new();
+    let mut script = DrainController::new();
+    let mut have_script = false;
+    for (flag, what) in [("drain-at", 0u8), ("fail-at", 1), ("rejoin-at", 2)] {
+        let Some(v) = args.opt(flag) else { continue };
+        let Some((at, replica)) = parse_time_replica(v) else {
+            eprintln!("bad --{flag} '{v}' (want T or T:REPLICA)");
+            return;
+        };
+        script = match what {
+            0 => script.drain_at(at, replica),
+            1 => script.fail_at(at, replica),
+            _ => script.rejoin_at(at, replica),
+        };
+        have_script = true;
+    }
+    if have_script {
+        controller.push(script);
+    }
+    if args.bool("autoscale") {
+        let max = args.usize("max-replicas", n_replicas * 2);
+        controller.push(Autoscaler::new(window, args.u64("scale-rejects", 8), max));
+    }
+    let has_controller = !controller.is_empty();
+
+    let open_loop = args.bool("open-loop");
+    let horizon = args.f64("horizon", if open_loop { 60.0 } else { 0.0 });
+    let seed = args.u64("seed", 0xA11CE);
     let slo = SloSpec::paper(&model, dataset);
 
-    let session = Session::builder()
+    // Observability: streaming sliding-window SLO (computed live from the
+    // event stream, no finalization) + a full event log for the loss audit.
+    // Periodic sampling needs a near-time-ordered stream: stepped sessions
+    // (controller / spill router) interleave replicas at every control
+    // boundary and single-replica runs are fully ordered, but the plain
+    // multi-replica path drains replicas sequentially — there only the
+    // final-window summary (a single query after all events) is valid.
+    let sampled = has_controller || router.wants_spill() || n_replicas == 1;
+    let mut stream = StreamingSlo::new(slo, window);
+    if sampled {
+        stream = stream.with_samples(window);
+    }
+    let mut log = EventLog::default();
+    let mut fanout = Fanout::new(vec![&mut stream, &mut log]);
+
+    let mut builder = Session::builder()
         .replica_specs(specs)
         .router(router)
-        .trace(&trace)
-        .horizon(args.f64("horizon", 0.0))
-        .build();
+        .horizon(horizon)
+        .sink(&mut fanout);
+    if has_controller {
+        builder = builder.controller(controller);
+    }
+    let builder = if open_loop {
+        match args.opt("requests").and_then(|v| v.parse::<usize>().ok()) {
+            Some(nn) => {
+                let mut wspec = WorkloadSpec::new(dataset, rate, nn);
+                wspec.seed = seed;
+                builder.workload(PoissonSource::new(wspec).with_horizon(horizon))
+            }
+            None => builder.workload(PoissonSource::open_loop(dataset, rate, seed, horizon)),
+        }
+    } else {
+        let mut wspec = WorkloadSpec::new(dataset, rate, n);
+        wspec.seed = seed;
+        let trace = WorkloadGen::new(wspec).generate();
+        builder.trace(&trace)
+    };
+    let session = builder.build();
     let router_name = session.router_name();
     let rep = session.run().expect("sim sessions are infallible");
+    drop(fanout); // release the sink borrows on stream + log
 
     let mut t = Table::new(&format!(
         "cluster — {} replicas, {} router, {} on {} ({} req/s, n={})",
@@ -329,7 +416,7 @@ fn cmd_cluster(args: &Args) {
         model.name,
         dataset.name(),
         rate,
-        n
+        if open_loop { "open-loop".to_string() } else { n.to_string() }
     ))
     .header(&[
         "replica",
@@ -373,6 +460,71 @@ fn cmd_cluster(args: &Args) {
         fm.traffic.expert_bytes / 1e12,
         fm.energy_per_token_mj()
     );
+
+    // Loss audit from the event stream: every Admitted id must reach
+    // Finished (or still be pending at a horizon halt) — zero lost.
+    let mut admitted = BTreeSet::new();
+    let mut finished = BTreeSet::new();
+    for (_, e) in &log.events {
+        match e {
+            EngineEvent::Admitted { id, .. } => {
+                admitted.insert(*id);
+            }
+            EngineEvent::Finished { id, .. } => {
+                finished.insert(*id);
+            }
+            _ => {}
+        }
+    }
+    let unfinished = admitted.difference(&finished).count();
+    let downs = log.count(|e| matches!(e, EngineEvent::ReplicaDown { .. }));
+    let ups = log.count(|e| matches!(e, EngineEvent::ReplicaUp { .. }));
+    let rejects = log.count(|e| matches!(e, EngineEvent::KvRejected { .. }));
+    let status = match rep.status {
+        SessionStatus::Drained => "drained".to_string(),
+        SessionStatus::Halted { pending } => format!("halted ({pending} pending)"),
+    };
+    println!(
+        "control: status {status} | replica down {downs} / up {ups} | kv rejects {rejects} | \
+         admitted {} finished {} unfinished {unfinished}",
+        admitted.len(),
+        finished.len(),
+    );
+    if matches!(rep.status, SessionStatus::Drained) && unfinished > 0 {
+        eprintln!("WARNING: {unfinished} admitted requests never finished (lost work)");
+    }
+
+    // Streaming sliding-window SLO timeline (live event-stream metrics).
+    if sampled {
+        stream.flush_samples(stream.watermark_s());
+        let samples = stream.samples();
+        if !samples.is_empty() {
+            let mut st =
+                Table::new(&format!("sliding window — {window}s, sampled every {window}s"))
+                    .header(&["t (s)", "completed", "SLO full", "goodput tok/s", "tok/s"]);
+            let from = samples.len().saturating_sub(8);
+            for w in &samples[from..] {
+                st.row(&[
+                    f1(w.t_s),
+                    w.completed.to_string(),
+                    pct(w.slo_full),
+                    f1(w.goodput_tok_s),
+                    f1(w.throughput_tok_s),
+                ]);
+            }
+            st.print();
+        }
+    } else {
+        // Plain multi-replica stream is not time-ordered; only the final
+        // window (one query over the fully merged stream) is meaningful.
+        let w = stream.summary();
+        println!(
+            "sliding window (final {window}s): {} completed | SLO {} | goodput {} tok/s",
+            w.completed,
+            pct(w.slo_full),
+            f1(w.goodput_tok_s)
+        );
+    }
 }
 
 /// Record a workload trace to CSV, or replay one through the simulator.

@@ -1,6 +1,11 @@
 //! Serving metrics: per-request latency records, run-level aggregates, SLO
 //! attainment (full + TTFT/TBT breakdown, paper Figs 3–4), token timelines
-//! (Fig 5), traffic and energy summaries (Tables 2/7/8).
+//! (Fig 5), traffic and energy summaries (Tables 2/7/8), and streaming
+//! sliding-window SLO/goodput over the live event stream ([`streaming`]).
+
+pub mod streaming;
+
+pub use streaming::{StreamingSlo, WindowSummary};
 
 use crate::config::slo::{evaluate, SloSpec};
 use crate::moe::TrafficCounter;

@@ -1,0 +1,439 @@
+//! Streaming (sliding-window) serving metrics computed directly from the
+//! typed [`EngineEvent`] stream — no end-of-run finalization step.
+//!
+//! [`RunMetrics`](crate::metrics::RunMetrics) answers "how did the run go"
+//! after the run ends; an hours-long open-loop session needs "how is the
+//! run going NOW". [`StreamingSlo`] is an [`EventSink`] that folds every
+//! event into per-request state as it happens and keeps only a sliding
+//! window of completions and token emissions, so memory is bounded by the
+//! window, not the run. At any instant it reports a [`WindowSummary`]:
+//! TTFT/TBT SLO attainment over the window's completions (Sarathi-style
+//! per-request attainment: TTFT within SLO AND every token gap within
+//! SLO), goodput (generated tokens of SLO-attaining completions per
+//! second), and raw token throughput.
+//!
+//! The incremental computation is LOCKED against a post-hoc recomputation
+//! from an [`EventLog`](crate::serve::EventLog) of the same run by
+//! `tests/streaming_metrics.rs`: both derive TTFT and token gaps from the
+//! same event timestamps with the same arithmetic, so the window summaries
+//! bit-match.
+//!
+//! Retry semantics: if the control plane re-serves a request (spill
+//! requeue or replica failure), its fresh `Arrived` RESETS the per-request
+//! state — latency is judged on the attempt that actually completed, while
+//! TTFT still counts from the request's original arrival stamp (carried in
+//! the `Arrived` event's request). Tokens a dead replica streamed before a
+//! failure stay in the throughput window (they were emitted) but never
+//! count toward goodput (their request did not complete there).
+
+use std::collections::BTreeMap;
+
+use crate::config::slo::SloSpec;
+use crate::serve::{EngineEvent, EventSink};
+
+/// Sliding-window metrics at one evaluation instant `t_s`: the window
+/// covers `(t_s - window_s, t_s]`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WindowSummary {
+    /// Evaluation instant (engine seconds).
+    pub t_s: f64,
+    /// Window length (engine seconds).
+    pub window_s: f64,
+    /// Requests that finished inside the window.
+    pub completed: usize,
+    /// Of those, how many attained the full SLO (TTFT and every TBT).
+    pub attained: usize,
+    /// Full-SLO attainment fraction (0.0 when the window is empty).
+    pub slo_full: f64,
+    /// TTFT-component attainment fraction (0.0 when the window is empty).
+    pub slo_ttft: f64,
+    /// TBT-component attainment fraction (0.0 when the window is empty).
+    pub slo_tbt: f64,
+    /// Generated tokens of SLO-attaining completions, per window second.
+    pub goodput_tok_s: f64,
+    /// Tokens emitted inside the window (first tokens + decode tokens).
+    pub emitted: u64,
+    /// Raw emission throughput over the window (`emitted / window_s`).
+    pub throughput_tok_s: f64,
+}
+
+/// In-flight per-request accumulator.
+#[derive(Clone, Copy, Debug)]
+struct PendingReq {
+    arrival_s: f64,
+    ttft_s: Option<f64>,
+    last_emit_s: f64,
+    tbt_ok: bool,
+    generated: u32,
+}
+
+/// One finished request, reduced to what window queries need.
+#[derive(Clone, Copy, Debug)]
+struct Completion {
+    finish_s: f64,
+    ttft_ok: bool,
+    tbt_ok: bool,
+    tokens: u32,
+}
+
+/// Sliding-window SLO/goodput sink over the engine event stream.
+///
+/// Feed it as a session sink (optionally sampling summaries every
+/// `sample_every` seconds via [`StreamingSlo::with_samples`]), or query
+/// [`StreamingSlo::summary_at`] at nondecreasing instants. Evicted history
+/// never returns: query times must not go backwards.
+pub struct StreamingSlo {
+    slo: SloSpec,
+    window_s: f64,
+    pending: BTreeMap<u64, PendingReq>,
+    /// Completions inside the current window, sorted by finish time.
+    completions: Vec<Completion>,
+    /// Token emission timestamps inside the current window, sorted.
+    emissions: Vec<f64>,
+    /// Latest event timestamp seen.
+    watermark_s: f64,
+    sample_dt: f64,
+    next_sample_s: f64,
+    samples: Vec<WindowSummary>,
+}
+
+impl StreamingSlo {
+    pub fn new(slo: SloSpec, window_s: f64) -> Self {
+        assert!(window_s > 0.0, "streaming window must be positive");
+        StreamingSlo {
+            slo,
+            window_s,
+            pending: BTreeMap::new(),
+            completions: Vec::new(),
+            emissions: Vec::new(),
+            watermark_s: 0.0,
+            sample_dt: 0.0,
+            next_sample_s: 0.0,
+            samples: Vec::new(),
+        }
+    }
+
+    /// Record a [`WindowSummary`] every `dt_s` seconds of engine time,
+    /// evaluated at the sample instant (events at exactly the instant are
+    /// included; later events are not). Collect with
+    /// [`StreamingSlo::samples`]; call [`StreamingSlo::flush_samples`]
+    /// after the run for the trailing instants.
+    pub fn with_samples(mut self, dt_s: f64) -> Self {
+        assert!(dt_s > 0.0, "sample interval must be positive");
+        self.sample_dt = dt_s;
+        self.next_sample_s = dt_s;
+        self
+    }
+
+    /// Summaries recorded so far (under `with_samples`).
+    pub fn samples(&self) -> &[WindowSummary] {
+        &self.samples
+    }
+
+    /// Latest event timestamp seen.
+    pub fn watermark_s(&self) -> f64 {
+        self.watermark_s
+    }
+
+    /// Record the remaining sample instants up to and including `end_s`.
+    pub fn flush_samples(&mut self, end_s: f64) {
+        if self.sample_dt <= 0.0 {
+            return;
+        }
+        while self.next_sample_s <= end_s {
+            let t = self.next_sample_s;
+            let s = self.summary_at(t);
+            self.samples.push(s);
+            self.next_sample_s += self.sample_dt;
+        }
+    }
+
+    /// The window summary at the current watermark.
+    pub fn summary(&mut self) -> WindowSummary {
+        self.summary_at(self.watermark_s)
+    }
+
+    /// The window summary at instant `t` (window `(t - window_s, t]`).
+    /// Query instants must be nondecreasing across calls: evaluation
+    /// evicts history older than `t - window_s` permanently.
+    pub fn summary_at(&mut self, t: f64) -> WindowSummary {
+        let lo = t - self.window_s;
+        // Evict everything at or before the window's lower edge — it can
+        // never re-enter a later (nondecreasing) window.
+        let keep_from = self.completions.partition_point(|c| c.finish_s <= lo);
+        self.completions.drain(..keep_from);
+        let keep_from = self.emissions.partition_point(|&e| e <= lo);
+        self.emissions.drain(..keep_from);
+
+        // Entries past `t` (possible with out-of-order cross-replica
+        // events) stay for a later query but do not count now.
+        let n_compl = self.completions.partition_point(|c| c.finish_s <= t);
+        let mut attained = 0usize;
+        let mut ttft_okc = 0usize;
+        let mut tbt_okc = 0usize;
+        let mut good_tokens: u64 = 0;
+        for c in &self.completions[..n_compl] {
+            ttft_okc += c.ttft_ok as usize;
+            tbt_okc += c.tbt_ok as usize;
+            if c.ttft_ok && c.tbt_ok {
+                attained += 1;
+                good_tokens += c.tokens as u64;
+            }
+        }
+        let emitted = self.emissions.partition_point(|&e| e <= t) as u64;
+        let frac = |k: usize| {
+            if n_compl == 0 {
+                0.0
+            } else {
+                k as f64 / n_compl as f64
+            }
+        };
+        WindowSummary {
+            t_s: t,
+            window_s: self.window_s,
+            completed: n_compl,
+            attained,
+            slo_full: frac(attained),
+            slo_ttft: frac(ttft_okc),
+            slo_tbt: frac(tbt_okc),
+            goodput_tok_s: good_tokens as f64 / self.window_s,
+            emitted,
+            throughput_tok_s: emitted as f64 / self.window_s,
+        }
+    }
+
+    fn push_emission(&mut self, t: f64) {
+        let pos = self.emissions.partition_point(|&e| e <= t);
+        self.emissions.insert(pos, t);
+    }
+}
+
+impl EventSink for StreamingSlo {
+    fn on_event(&mut self, _replica: usize, ev: &EngineEvent) {
+        let t = ev.t_s();
+        // Sample instants are closed on the left: snapshot once the first
+        // event STRICTLY past the instant arrives, so events at exactly
+        // the instant are included.
+        if self.sample_dt > 0.0 {
+            while t > self.next_sample_s {
+                let at = self.next_sample_s;
+                let s = self.summary_at(at);
+                self.samples.push(s);
+                self.next_sample_s += self.sample_dt;
+            }
+        }
+        if t > self.watermark_s {
+            self.watermark_s = t;
+        }
+        match ev {
+            EngineEvent::Arrived { req, .. } => {
+                // A repeated Arrived (spill / failover retry) resets the
+                // attempt; TTFT still counts from the original arrival.
+                self.pending.insert(
+                    req.id,
+                    PendingReq {
+                        arrival_s: req.arrival_s,
+                        ttft_s: None,
+                        last_emit_s: 0.0,
+                        tbt_ok: true,
+                        generated: 0,
+                    },
+                );
+            }
+            EngineEvent::FirstToken { t_s, id } => {
+                if let Some(p) = self.pending.get_mut(id) {
+                    p.ttft_s = Some(t_s - p.arrival_s);
+                    p.last_emit_s = *t_s;
+                    p.generated = 1;
+                    self.push_emission(*t_s);
+                }
+            }
+            EngineEvent::TokenEmitted { t_s, id, generated } => {
+                if let Some(p) = self.pending.get_mut(id) {
+                    let gap = t_s - p.last_emit_s;
+                    p.tbt_ok &= gap <= self.slo.tbt_s;
+                    p.last_emit_s = *t_s;
+                    p.generated = *generated;
+                    self.push_emission(*t_s);
+                }
+            }
+            EngineEvent::Finished { t_s, id } => {
+                if let Some(p) = self.pending.remove(id) {
+                    let c = Completion {
+                        finish_s: *t_s,
+                        ttft_ok: p.ttft_s.is_some_and(|x| x <= self.slo.ttft_s),
+                        tbt_ok: p.tbt_ok,
+                        tokens: p.generated,
+                    };
+                    let pos = self
+                        .completions
+                        .partition_point(|x| x.finish_s <= c.finish_s);
+                    self.completions.insert(pos, c);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Request;
+
+    fn slo() -> SloSpec {
+        SloSpec {
+            ttft_s: 1.0,
+            tbt_s: 0.1,
+        }
+    }
+
+    fn arrive(s: &mut StreamingSlo, id: u64, t: f64) {
+        let req = Request {
+            id,
+            arrival_s: t,
+            input_len: 100,
+            output_len: 3,
+        };
+        s.on_event(0, &EngineEvent::Arrived { t_s: t, req });
+    }
+
+    /// Serve one request: arrival, first token at `first`, then decode
+    /// tokens at the given times, then finish at the last time.
+    fn serve(s: &mut StreamingSlo, id: u64, arrival: f64, first: f64, decodes: &[f64]) {
+        arrive(s, id, arrival);
+        s.on_event(0, &EngineEvent::FirstToken { t_s: first, id });
+        let mut gen = 1;
+        for &t in decodes {
+            gen += 1;
+            s.on_event(
+                0,
+                &EngineEvent::TokenEmitted {
+                    t_s: t,
+                    id,
+                    generated: gen,
+                },
+            );
+        }
+        let finish = decodes.last().copied().unwrap_or(first);
+        s.on_event(0, &EngineEvent::Finished { t_s: finish, id });
+    }
+
+    #[test]
+    fn empty_window_reports_zeroes() {
+        let mut s = StreamingSlo::new(slo(), 2.0);
+        let w = s.summary_at(5.0);
+        assert_eq!(w.completed, 0);
+        assert_eq!(w.attained, 0);
+        assert_eq!(w.slo_full, 0.0);
+        assert_eq!(w.goodput_tok_s, 0.0);
+        assert_eq!(w.emitted, 0);
+    }
+
+    #[test]
+    fn attainment_and_goodput_over_window() {
+        let mut s = StreamingSlo::new(slo(), 10.0);
+        // Request 1: TTFT 0.5 ok, gaps 0.05 ok -> attains; 3 tokens.
+        serve(&mut s, 1, 0.0, 0.5, &[0.55, 0.6]);
+        // Request 2: TTFT 2.0 (violates 1.0), gaps ok.
+        serve(&mut s, 2, 0.0, 2.0, &[2.05, 2.1]);
+        // Request 3: TTFT ok, one gap 0.2 violates 0.1.
+        serve(&mut s, 3, 2.0, 2.5, &[2.7, 2.75]);
+        let w = s.summary_at(3.0);
+        assert_eq!(w.completed, 3);
+        assert_eq!(w.attained, 1);
+        assert_eq!(w.slo_full, 1.0 / 3.0);
+        assert_eq!(w.slo_ttft, 2.0 / 3.0);
+        assert_eq!(w.slo_tbt, 2.0 / 3.0);
+        assert_eq!(w.emitted, 9);
+        // Goodput counts only request 1's 3 tokens.
+        assert_eq!(w.goodput_tok_s, 3.0 / 10.0);
+        assert_eq!(w.throughput_tok_s, 9.0 / 10.0);
+    }
+
+    #[test]
+    fn completions_slide_out_of_the_window() {
+        let mut s = StreamingSlo::new(slo(), 1.0);
+        serve(&mut s, 1, 0.0, 0.2, &[0.25, 0.3]); // finish 0.3
+        serve(&mut s, 2, 2.0, 2.2, &[2.25, 2.3]); // finish 2.3
+        let w = s.summary_at(2.5);
+        assert_eq!(w.completed, 1, "only the recent completion remains");
+        assert_eq!(w.emitted, 3);
+        // Far future: everything slid out, zero-completion window.
+        let w = s.summary_at(10.0);
+        assert_eq!(w.completed, 0);
+        assert_eq!(w.slo_full, 0.0);
+        assert_eq!(w.emitted, 0);
+    }
+
+    #[test]
+    fn retry_resets_the_attempt_but_keeps_original_arrival() {
+        let mut s = StreamingSlo::new(slo(), 100.0);
+        // First attempt on replica 0 dies mid-decode.
+        arrive(&mut s, 1, 0.0);
+        s.on_event(0, &EngineEvent::FirstToken { t_s: 0.3, id: 1 });
+        s.on_event(
+            0,
+            &EngineEvent::TokenEmitted {
+                t_s: 0.35,
+                id: 1,
+                generated: 2,
+            },
+        );
+        // Retry on replica 1 (same original arrival stamp), completing.
+        s.on_event(
+            1,
+            &EngineEvent::Arrived {
+                t_s: 1.0,
+                req: Request {
+                    id: 1,
+                    arrival_s: 0.0,
+                    input_len: 100,
+                    output_len: 3,
+                },
+            },
+        );
+        s.on_event(1, &EngineEvent::FirstToken { t_s: 1.6, id: 1 });
+        s.on_event(
+            1,
+            &EngineEvent::TokenEmitted {
+                t_s: 1.65,
+                id: 1,
+                generated: 2,
+            },
+        );
+        s.on_event(
+            1,
+            &EngineEvent::TokenEmitted {
+                t_s: 1.7,
+                id: 1,
+                generated: 3,
+            },
+        );
+        s.on_event(1, &EngineEvent::Finished { t_s: 1.7, id: 1 });
+        let w = s.summary();
+        assert_eq!(w.completed, 1);
+        // TTFT of the completing attempt = 1.6 - 0.0 (original arrival):
+        // violates the 1.0 s SLO even though the retry's own queueing was
+        // short — the client waited since t=0.
+        assert_eq!(w.attained, 0);
+        assert_eq!(w.slo_tbt, 1.0, "retry gaps were all within SLO");
+        // Both attempts' emissions count toward raw throughput.
+        assert_eq!(w.emitted, 5);
+    }
+
+    #[test]
+    fn sampling_snapshots_at_fixed_instants() {
+        let mut s = StreamingSlo::new(slo(), 1.0).with_samples(1.0);
+        serve(&mut s, 1, 0.0, 0.4, &[0.45, 0.5]); // finish 0.5
+        serve(&mut s, 2, 1.2, 1.6, &[1.65, 1.7]); // finish 1.7
+        // The event at 1.2 crossed the t=1.0 instant: one sample so far.
+        assert_eq!(s.samples().len(), 1);
+        assert_eq!(s.samples()[0].t_s, 1.0);
+        assert_eq!(s.samples()[0].completed, 1);
+        s.flush_samples(2.0);
+        assert_eq!(s.samples().len(), 2);
+        assert_eq!(s.samples()[1].t_s, 2.0);
+        assert_eq!(s.samples()[1].completed, 1, "req 1 slid out, req 2 in");
+    }
+}

@@ -146,6 +146,52 @@ impl EngineState {
         true
     }
 
+    /// Pull a WAITING request back out (it holds no KV reservation yet) and
+    /// return its original [`Request`]. The serving session uses this to
+    /// requeue a KV-rejected arrival onto another replica (adaptive spill).
+    /// Returns `None` if `id` is not currently waiting — e.g. it was
+    /// admitted between the rejection and the requeue attempt, in which
+    /// case it must stay where its KV lives.
+    pub fn requeue_waiting(&mut self, id: u64) -> Option<Request> {
+        let pos = self.waiting.iter().position(|&w| w == id)?;
+        self.waiting.remove(pos);
+        let sim = self.reqs.remove(&id)?;
+        Some(sim.req)
+    }
+
+    /// Remove EVERY waiting (not yet admitted) request, in FCFS order — the
+    /// graceful-drain handoff: the fleet re-routes them while requests
+    /// already admitted here run to completion. Safe under any scheduler:
+    /// policies re-read `waiting` fresh each plan and hold internal state
+    /// only for admitted requests.
+    pub fn take_waiting(&mut self) -> Vec<Request> {
+        let ids = std::mem::take(&mut self.waiting);
+        ids.into_iter()
+            .filter_map(|id| self.reqs.remove(&id).map(|s| s.req))
+            .collect()
+    }
+
+    /// Evict EVERY unfinished request — waiting, prefilling, decoding —
+    /// releasing their KV and DISCARDING their progress (replica failure:
+    /// the fleet re-serves them from scratch; tokens the dead replica had
+    /// already streamed are discarded, the retry model production failover
+    /// uses). Finished requests keep their records. Callers must also
+    /// rebuild the replica's scheduler: policies hold planning state for
+    /// admitted requests (layered cohorts, hybrid chunks) that this wipes.
+    pub fn evict_unfinished(&mut self) -> Vec<Request> {
+        let mut out = self.take_waiting();
+        let in_flight = std::mem::take(&mut self.prefilling)
+            .into_iter()
+            .chain(std::mem::take(&mut self.decoding));
+        for id in in_flight {
+            let _ = self.kv.release(id);
+            if let Some(s) = self.reqs.remove(&id) {
+                out.push(s.req);
+            }
+        }
+        out
+    }
+
     /// Total decode slots in use (prefilling requests don't decode yet).
     pub fn decode_batch_size(&self) -> usize {
         self.decoding.len()
@@ -225,6 +271,32 @@ mod tests {
             }
             _ => panic!("expected KvRejected"),
         }
+    }
+
+    #[test]
+    fn requeue_and_eviction_helpers() {
+        let mut s = state();
+        s.arrive(req(1, 100, 10));
+        s.arrive(req(2, 200, 10));
+        s.arrive(req(3, 300, 10));
+        assert!(s.admit(1));
+        // Requeue a waiting request: removed entirely, returned intact.
+        let r2 = s.requeue_waiting(2).unwrap();
+        assert_eq!((r2.id, r2.input_len), (2, 200));
+        assert!(s.requeue_waiting(2).is_none());
+        assert!(s.requeue_waiting(1).is_none(), "admitted requests stay put");
+        assert_eq!(s.waiting, vec![3]);
+        // take_waiting empties the queue in FCFS order.
+        let rest = s.take_waiting();
+        assert_eq!(rest.iter().map(|r| r.id).collect::<Vec<_>>(), vec![3]);
+        assert!(s.waiting.is_empty());
+        // evict_unfinished clears the admitted request and frees its KV.
+        assert_eq!(s.kv.len_of(1), Some(110));
+        let evicted = s.evict_unfinished();
+        assert_eq!(evicted.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+        assert!(s.prefilling.is_empty());
+        assert_eq!(s.kv.len_of(1), None);
+        assert_eq!(s.kv.used_blocks(), 0);
     }
 
     #[test]

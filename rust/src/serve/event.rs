@@ -6,11 +6,19 @@
 //! was KV-rejected", produced by the engine core itself, instead of each
 //! front end deriving its own view from run metrics after the fact.
 //!
-//! Conservation properties (locked by `tests/serve_events.rs`):
+//! Conservation properties (locked by `tests/serve_events.rs` and
+//! `tests/control_scenarios.rs`):
 //! * every `Finished` request has exactly one `FirstToken` and exactly
 //!   `output_len - 1` `TokenEmitted` events;
 //! * `Admitted` + `KvRejected` ≥ `Arrived` over a drained run (each arrival
 //!   is admitted exactly once, possibly after KV rejections).
+//!
+//! Under the fleet control plane a request may be RE-SERVED: a spill
+//! requeue or a replica failure delivers it to another replica, emitting a
+//! fresh `Arrived` there (and, after a failure, discarding any tokens the
+//! dead replica had streamed). The per-request conservation rules above
+//! then hold over the events from the request's LAST `Arrived` onward;
+//! requests served by a single replica (no retries) satisfy them globally.
 
 use crate::workload::Request;
 
@@ -51,6 +59,14 @@ pub enum EngineEvent {
     Finished { t_s: f64, id: u64 },
     /// The replica ran out of work: queue empty, nothing in flight.
     ReplicaDrained { t_s: f64 },
+    /// The control plane took the replica out of rotation (graceful drain
+    /// or hard failure): routers stop placing new work on it. Emitted by
+    /// the session, not the engine core; distinct from `ReplicaDrained`,
+    /// which marks work exhaustion.
+    ReplicaDown { t_s: f64 },
+    /// The replica (re)entered rotation: a drained/failed replica rejoined,
+    /// or an autoscaler added a fresh one (its first event).
+    ReplicaUp { t_s: f64 },
     /// The run horizon was exceeded with `pending` requests still queued
     /// or in flight (open-loop / horizon-sampled runs).
     Halted { t_s: f64, pending: usize },
@@ -68,6 +84,8 @@ impl EngineEvent {
             | EngineEvent::TokenEmitted { t_s, .. }
             | EngineEvent::Finished { t_s, .. }
             | EngineEvent::ReplicaDrained { t_s }
+            | EngineEvent::ReplicaDown { t_s }
+            | EngineEvent::ReplicaUp { t_s }
             | EngineEvent::Halted { t_s, .. } => t_s,
         }
     }
@@ -82,7 +100,10 @@ impl EngineEvent {
             | EngineEvent::FirstToken { id, .. }
             | EngineEvent::TokenEmitted { id, .. }
             | EngineEvent::Finished { id, .. } => Some(id),
-            EngineEvent::ReplicaDrained { .. } | EngineEvent::Halted { .. } => None,
+            EngineEvent::ReplicaDrained { .. }
+            | EngineEvent::ReplicaDown { .. }
+            | EngineEvent::ReplicaUp { .. }
+            | EngineEvent::Halted { .. } => None,
         }
     }
 }
@@ -137,6 +158,26 @@ impl<F: FnMut(usize, &EngineEvent)> EventSink for FnSink<F> {
     }
 }
 
+/// Fans one event stream out to several sinks, in order — e.g. a live
+/// streaming-metrics sink plus an `EventLog` for post-hoc auditing.
+pub struct Fanout<'a> {
+    pub sinks: Vec<&'a mut dyn EventSink>,
+}
+
+impl<'a> Fanout<'a> {
+    pub fn new(sinks: Vec<&'a mut dyn EventSink>) -> Self {
+        Fanout { sinks }
+    }
+}
+
+impl EventSink for Fanout<'_> {
+    fn on_event(&mut self, replica: usize, ev: &EngineEvent) {
+        for s in self.sinks.iter_mut() {
+            s.on_event(replica, ev);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -164,6 +205,22 @@ mod tests {
         assert_eq!(log.events.len(), 2);
         assert_eq!(log.count(|e| matches!(e, EngineEvent::FirstToken { .. })), 1);
         assert_eq!(log.for_request(3).len(), 1);
+    }
+
+    #[test]
+    fn fanout_duplicates_events_and_lifecycle_accessors_hold() {
+        let mut a = EventLog::default();
+        let mut b = EventLog::default();
+        {
+            let mut f = Fanout::new(vec![&mut a, &mut b]);
+            f.on_event(0, &ev(1.0));
+            f.on_event(1, &EngineEvent::ReplicaDown { t_s: 2.0 });
+            f.on_event(1, &EngineEvent::ReplicaUp { t_s: 3.0 });
+        }
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.events.len(), 3);
+        assert_eq!(EngineEvent::ReplicaDown { t_s: 2.0 }.t_s(), 2.0);
+        assert_eq!(EngineEvent::ReplicaUp { t_s: 3.0 }.id(), None);
     }
 
     #[test]

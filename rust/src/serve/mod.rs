@@ -2,8 +2,9 @@
 //! stream.
 //!
 //! Every serving run — a one-engine simulation, the real PJRT server, an
-//! N-replica fleet, an open-loop streaming workload — is ONE thing: a
-//! session. A session is declared with a builder
+//! N-replica fleet, an open-loop streaming workload, a controlled
+//! drain/failure/autoscale scenario — is ONE thing: a session. A session
+//! is declared with a builder
 //!
 //! ```text
 //! Session::builder()
@@ -14,6 +15,7 @@
 //!     .router(..)       // request router for N > 1 (default round-robin)
 //!     .workload(..)     // any WorkloadSource: TraceSource, PoissonSource, ...
 //!     .horizon(..)      // stop after this much engine time (0 = drain)
+//!     .controller(..)   // fleet control plane: drain/fail/rejoin/autoscale
 //!     .sink(..)         // observe the typed EngineEvent stream
 //!     .run()?
 //! ```
@@ -21,8 +23,8 @@
 //! and compiles down to [`EngineCore`] + [`Executor`] + [`Router`]
 //! internally: one core loop per replica, a router picking a replica per
 //! arrival against live [`ReplicaView`] snapshots (queue depth, resident
-//! KV, accumulated `KvRejected` backpressure), and a single event sink
-//! observing every replica. The legacy entry points —
+//! KV, accumulated `KvRejected` backpressure, lifecycle state), and a
+//! single event sink observing every replica. The legacy entry points —
 //! [`simulator::simulate`](crate::simulator::simulate),
 //! [`server::RealServer::serve`](crate::server::RealServer),
 //! [`cluster::Cluster::run`](crate::cluster::Cluster) — are thin shims over
@@ -32,16 +34,41 @@
 //! not require drain-to-empty: an open-loop [`PoissonSource`] with a
 //! horizon ends the run in [`SessionStatus::Halted`] with work still in
 //! flight, the regime the paper's continuous-trace evaluation needs.
+//!
+//! ## The control plane
+//!
+//! A session with a [`Controller`] (or a spill router — see
+//! [`Router::wants_spill`]) runs in *stepped* mode: between arrivals and
+//! through the drain tail it advances the fleet in `control_interval`
+//! slices of engine time, and at each boundary it (1) forwards the events
+//! since the last boundary to the controller, (2) requeues freshly
+//! KV-rejected arrivals onto the next-best replica (adaptive spill,
+//! bounded to replica-count − 1 retries per request), and (3) applies the
+//! controller's [`ControlAction`]s — graceful drains (queued work hands
+//! over, admitted work finishes in place), hard failures (every unfinished
+//! request re-served from scratch elsewhere; the session refuses to fail
+//! the last non-down replica), rejoins, and scale-ups (a fresh replica
+//! cloned from replica 0's blueprint). Lifecycle transitions surface as
+//! [`EngineEvent::ReplicaDown`] / [`EngineEvent::ReplicaUp`], and routers
+//! see the per-replica [`ReplicaState`] so draining/down replicas receive
+//! no new work. Sessions without a controller or spill router take the
+//! exact pre-control code path, preserving bit-identical metrics (locked
+//! by `tests/cluster_equivalence.rs`).
 
 pub mod event;
 
-pub use event::{EngineEvent, EventLog, EventSink, FnSink, NullSink};
+pub use event::{EngineEvent, EventLog, EventSink, Fanout, FnSink, NullSink};
 
 pub use crate::workload::source::{PoissonSource, TraceSource, WorkloadSource};
 
+use std::collections::BTreeMap;
+
 use anyhow::Result;
 
-use crate::cluster::{merge_metrics, ReplicaSpec, ReplicaView, RoundRobin, Router};
+use crate::cluster::{
+    merge_metrics, ControlAction, Controller, ReplicaSpec, ReplicaState, ReplicaView, RoundRobin,
+    Router,
+};
 use crate::config::{HardwareDesc, ModelDesc, Policy, SchedulerConfig};
 use crate::engine::{CoreOptions, CoreStatus, EngineCore, Executor, SimExecutor};
 use crate::metrics::RunMetrics;
@@ -49,7 +76,7 @@ use crate::model::WorkAnalytics;
 use crate::sched::{EngineState, Scheduler};
 use crate::simulator::cost::CostModel;
 use crate::simulator::default_engine_state;
-use crate::workload::Trace;
+use crate::workload::{Request, Trace};
 
 /// Builds one executor per replica. The default factory prices iterations
 /// on the roofline [`CostModel`] ([`SimExecutor`]); the real server
@@ -71,11 +98,14 @@ pub enum SessionStatus {
 #[derive(Clone, Debug)]
 pub struct SessionReport {
     pub status: SessionStatus,
-    /// Per-replica metrics, index-aligned with the session's replicas.
+    /// Per-replica metrics, index-aligned with the session's replicas
+    /// (including any the controller scaled up mid-run).
     pub per_replica: Vec<RunMetrics>,
     /// Policy each replica ran (for heterogeneous-fleet reporting).
     pub policies: Vec<Policy>,
-    /// (request id, replica index) routing decisions, in arrival order.
+    /// (request id, replica index) routing decisions, in decision order.
+    /// Under the control plane a request re-routed by a spill or a replica
+    /// drain/failure appends a SECOND decision for the same id.
     pub assignments: Vec<(u64, usize)>,
     /// Fleet-aggregated metrics (requests merged, traffic/energy summed).
     pub fleet: RunMetrics,
@@ -84,7 +114,7 @@ pub struct SessionReport {
 }
 
 impl SessionReport {
-    /// Requests routed to each replica.
+    /// Requests routed to each replica (re-routes count at their target).
     pub fn assignment_counts(&self) -> Vec<usize> {
         let mut counts = vec![0usize; self.per_replica.len()];
         for &(_, idx) in &self.assignments {
@@ -103,6 +133,8 @@ pub struct Session<'a> {
     factory: ExecutorFactory<'a>,
     states: Option<Vec<EngineState>>,
     sink: Option<&'a mut dyn EventSink>,
+    controller: Option<Box<dyn Controller + 'a>>,
+    control_dt: f64,
     horizon_s: f64,
     record_token_times: bool,
     immediate_arrivals: bool,
@@ -110,7 +142,7 @@ pub struct Session<'a> {
 
 /// Builder for [`Session`]; all knobs default to the paper's single-engine
 /// simulated setup (Qwen3-30B-A3B on 2xH100, layered prefill, 1 replica,
-/// empty workload).
+/// empty workload, no controller).
 pub struct SessionBuilder<'a> {
     model: ModelDesc,
     hw: HardwareDesc,
@@ -122,6 +154,8 @@ pub struct SessionBuilder<'a> {
     factory: Option<ExecutorFactory<'a>>,
     states: Option<Vec<EngineState>>,
     sink: Option<&'a mut dyn EventSink>,
+    controller: Option<Box<dyn Controller + 'a>>,
+    control_dt: f64,
     horizon_s: f64,
     record_token_times: bool,
     immediate_arrivals: bool,
@@ -140,6 +174,8 @@ impl<'a> SessionBuilder<'a> {
             factory: None,
             states: None,
             sink: None,
+            controller: None,
+            control_dt: 0.25,
             horizon_s: 0.0,
             record_token_times: false,
             immediate_arrivals: false,
@@ -208,6 +244,21 @@ impl<'a> SessionBuilder<'a> {
         self
     }
 
+    /// Attach a fleet [`Controller`] (drain/fail/rejoin/autoscale). The
+    /// session forwards every event to it and polls it for actions at each
+    /// control boundary (see [`SessionBuilder::control_interval`]).
+    pub fn controller(mut self, c: impl Controller + 'a) -> Self {
+        self.controller = Some(Box::new(c));
+        self
+    }
+
+    /// Control boundary spacing in engine seconds for controlled / spill
+    /// sessions (default 0.25 s). Non-positive values reset the default.
+    pub fn control_interval(mut self, dt_s: f64) -> Self {
+        self.control_dt = dt_s;
+        self
+    }
+
     /// Record per-request token timestamps (costs memory).
     pub fn record_token_times(mut self, on: bool) -> Self {
         self.record_token_times = on;
@@ -271,6 +322,8 @@ impl<'a> SessionBuilder<'a> {
             factory,
             states: self.states,
             sink: self.sink,
+            controller: self.controller,
+            control_dt: self.control_dt,
             horizon_s: self.horizon_s,
             record_token_times: self.record_token_times,
             immediate_arrivals: self.immediate_arrivals,
@@ -284,20 +337,366 @@ impl<'a> SessionBuilder<'a> {
 }
 
 /// Per-replica `KvRejected` tally wrapped around the user sink, so router
-/// views expose admission backpressure, not just queue depth.
+/// views expose admission backpressure, not just queue depth. Controlled
+/// sessions additionally buffer events for controller delivery and record
+/// fresh rejections for spill requeueing; plain sessions leave both off.
 struct Tally<'s> {
     inner: &'s mut dyn EventSink,
     kv_rejects: Vec<u64>,
+    /// Buffer every event for controller delivery at the next boundary.
+    buffer_events: bool,
+    /// Record (replica, id) of each `KvRejected` for spill requeueing, and
+    /// finished ids so per-request spill budgets can be pruned.
+    track_rejects: bool,
+    buffer: Vec<(usize, EngineEvent)>,
+    fresh_rejects: Vec<(usize, u64)>,
+    fresh_finished: Vec<u64>,
 }
 
 impl EventSink for Tally<'_> {
     fn on_event(&mut self, replica: usize, ev: &EngineEvent) {
-        if matches!(ev, EngineEvent::KvRejected { .. }) {
-            if let Some(c) = self.kv_rejects.get_mut(replica) {
-                *c += 1;
+        match ev {
+            EngineEvent::KvRejected { id, .. } => {
+                if let Some(c) = self.kv_rejects.get_mut(replica) {
+                    *c += 1;
+                }
+                if self.track_rejects {
+                    self.fresh_rejects.push((replica, *id));
+                }
             }
+            EngineEvent::Finished { id, .. } if self.track_rejects => {
+                self.fresh_finished.push(*id);
+            }
+            _ => {}
+        }
+        if self.buffer_events {
+            self.buffer.push((replica, ev.clone()));
         }
         self.inner.on_event(replica, ev);
+    }
+}
+
+/// One live replica: scheduler + state + executor + core loop.
+struct Live<'x> {
+    policy: Policy,
+    sched: Box<dyn Scheduler>,
+    /// Blueprint to rebuild `sched` after a failure eviction (schedulers
+    /// hold planning state for admitted requests).
+    sched_cfg: SchedulerConfig,
+    n_layers: u32,
+    state: EngineState,
+    exec: Box<dyn Executor + 'x>,
+    core: EngineCore,
+}
+
+impl Live<'_> {
+    fn view(&self, id: usize, kv_rejects: u64, lifecycle: ReplicaState) -> ReplicaView {
+        let waiting_kv: u64 = self
+            .state
+            .waiting
+            .iter()
+            .map(|i| {
+                let q = &self.state.reqs[i].req;
+                (q.input_len + q.output_len) as u64
+            })
+            .sum();
+        ReplicaView {
+            id,
+            policy: self.policy,
+            state: lifecycle,
+            queued: self.core.pending_len(),
+            active: self.state.prefilling.len() + self.state.decoding.len(),
+            queued_kv_tokens: self.core.pending_footprint() + waiting_kv,
+            kv_used_blocks: self.state.kv.used_blocks(),
+            kv_block_size: self.state.kv.block_size,
+            kv_free_blocks: self.state.kv.free_blocks(),
+            kv_rejects,
+            now_s: self.exec.now(),
+        }
+    }
+
+    /// Requests not yet finished on this replica: undelivered + waiting +
+    /// in flight.
+    fn unfinished(&self) -> usize {
+        self.core.pending_len()
+            + self.state.waiting.len()
+            + self.state.prefilling.len()
+            + self.state.decoding.len()
+    }
+}
+
+/// Instantiate one [`Live`] replica per spec.
+fn build_live<'x>(
+    specs: &[ReplicaSpec],
+    states: Option<Vec<EngineState>>,
+    factory: &mut ExecutorFactory<'x>,
+    core_opts: CoreOptions,
+) -> Result<Vec<Live<'x>>> {
+    let n = specs.len();
+    let states: Vec<EngineState> = match states {
+        Some(v) => {
+            assert_eq!(v.len(), n, "engine_states length must match replica count");
+            v
+        }
+        None => specs
+            .iter()
+            .map(|s| default_engine_state(&s.model, &s.hw, &s.sched))
+            .collect(),
+    };
+    let mut live = Vec::with_capacity(n);
+    for (i, (spec, state)) in specs.iter().zip(states).enumerate() {
+        live.push(Live {
+            policy: spec.sched.policy,
+            sched: crate::sched::build(&spec.sched, spec.model.n_layers),
+            sched_cfg: spec.sched.clone(),
+            n_layers: spec.model.n_layers,
+            state,
+            exec: factory(i, spec)?,
+            core: EngineCore::new(core_opts).with_replica(i),
+        });
+    }
+    Ok(live)
+}
+
+/// Least-loaded Active replica, else least-loaded non-down replica,
+/// skipping `exclude`; `None` when no candidate exists.
+fn fallback_target(views: &[ReplicaView], exclude: Option<usize>) -> Option<usize> {
+    let pick = |allow: &dyn Fn(&ReplicaView) -> bool| {
+        views
+            .iter()
+            .filter(|v| Some(v.id) != exclude && allow(v))
+            .min_by_key(|v| (v.outstanding_kv_tokens(), v.id))
+            .map(|v| v.id)
+    };
+    pick(&|v| v.state.is_active()).or_else(|| pick(&|v| !v.state.is_down()))
+}
+
+/// Finalize every replica and assemble the report.
+fn finish_report(
+    live: Vec<Live<'_>>,
+    status: SessionStatus,
+    assignments: Vec<(u64, usize)>,
+) -> SessionReport {
+    let policies: Vec<Policy> = live.iter().map(|r| r.policy).collect();
+    let mut per_replica = Vec::with_capacity(live.len());
+    let mut token_times = Vec::new();
+    for r in live {
+        let Live { core, mut exec, .. } = r;
+        let (metrics, times) = core.finish(exec.as_mut());
+        per_replica.push(metrics);
+        token_times.extend(times);
+    }
+    let fleet = merge_metrics(&per_replica);
+    SessionReport {
+        status,
+        per_replica,
+        policies,
+        assignments,
+        fleet,
+        token_times,
+    }
+}
+
+/// Mutable state of a controlled (stepped) session run.
+struct ControlledRun<'a> {
+    live: Vec<Live<'a>>,
+    lifecycle: Vec<ReplicaState>,
+    router: Box<dyn Router + 'a>,
+    controller: Option<Box<dyn Controller + 'a>>,
+    factory: ExecutorFactory<'a>,
+    /// Blueprint for scale-ups (replica 0's spec).
+    template: ReplicaSpec,
+    core_opts: CoreOptions,
+    spill: bool,
+    assignments: Vec<(u64, usize)>,
+    /// Spill retries already spent per request id (cap: replicas − 1).
+    spill_counts: BTreeMap<u64, usize>,
+}
+
+impl<'a> ControlledRun<'a> {
+    fn views(&self, kv_rejects: &[u64]) -> Vec<ReplicaView> {
+        self.live
+            .iter()
+            .enumerate()
+            .map(|(i, r)| r.view(i, kv_rejects.get(i).copied().unwrap_or(0), self.lifecycle[i]))
+            .collect()
+    }
+
+    /// Advance every replica engine to engine time `t`.
+    fn advance(&mut self, t: f64, sink: &mut Tally<'_>) -> Result<()> {
+        for r in self.live.iter_mut() {
+            r.core.run_events(
+                r.exec.as_mut(),
+                r.sched.as_mut(),
+                &mut r.state,
+                Some(t),
+                &mut *sink,
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Route one source arrival, remapping picks that land on a
+    /// draining/down replica onto the least-loaded live one.
+    fn route_arrival(&mut self, req: Request, sink: &Tally<'_>) {
+        let views = self.views(&sink.kv_rejects);
+        let mut idx = self.router.route(&req, &views) % self.live.len();
+        if !self.lifecycle[idx].is_active() {
+            if let Some(f) = fallback_target(&views, None) {
+                idx = f;
+            }
+        }
+        self.live[idx].core.push(req);
+        self.assignments.push((req.id, idx));
+    }
+
+    /// Hand a batch of displaced requests (drain handoff / failure
+    /// eviction) back to the fleet, never back onto `from` while any other
+    /// candidate lives.
+    fn reroute(&mut self, reqs: Vec<Request>, from: usize, sink: &Tally<'_>) {
+        for req in reqs {
+            let views = self.views(&sink.kv_rejects);
+            let mut idx = self.router.route(&req, &views) % self.live.len();
+            if idx == from || !self.lifecycle[idx].is_active() {
+                idx = fallback_target(&views, Some(from)).unwrap_or(from);
+            }
+            self.live[idx].core.push(req);
+            self.assignments.push((req.id, idx));
+        }
+    }
+
+    /// One control boundary at engine time `t`: deliver buffered events to
+    /// the controller, spill-requeue fresh KV rejections, apply actions.
+    fn boundary(&mut self, t: f64, sink: &mut Tally<'_>) -> Result<()> {
+        if let Some(c) = self.controller.as_mut() {
+            for (rep, ev) in sink.buffer.drain(..) {
+                c.on_event(rep, &ev);
+            }
+        }
+        if self.spill && self.live.len() > 1 {
+            // Finished requests can never be rejected again: drop their
+            // spill budgets so the map tracks only in-flight work.
+            for id in sink.fresh_finished.drain(..) {
+                self.spill_counts.remove(&id);
+            }
+            let rejects: Vec<(usize, u64)> = sink.fresh_rejects.drain(..).collect();
+            for (rep, id) in rejects {
+                let budget = self.spill_counts.get(&id).copied().unwrap_or(0);
+                if budget + 1 >= self.live.len() {
+                    continue; // every other replica already tried
+                }
+                // Only requests still WAITING can move; admitted ones hold
+                // KV where they are.
+                let Some(req) = self.live[rep].state.requeue_waiting(id) else {
+                    continue;
+                };
+                self.spill_counts.insert(id, budget + 1);
+                let views = self.views(&sink.kv_rejects);
+                let mut idx = self.router.route(&req, &views) % self.live.len();
+                if idx == rep || !self.lifecycle[idx].is_active() {
+                    idx = fallback_target(&views, Some(rep)).unwrap_or(rep);
+                }
+                self.live[idx].core.push(req);
+                self.assignments.push((id, idx));
+            }
+        } else {
+            sink.fresh_rejects.clear();
+            sink.fresh_finished.clear();
+        }
+        let actions = if self.controller.is_some() {
+            let views = self.views(&sink.kv_rejects);
+            match self.controller.as_mut() {
+                Some(c) => c.control(t, &views),
+                None => Vec::new(),
+            }
+        } else {
+            Vec::new()
+        };
+        for a in actions {
+            self.apply(a, t, sink)?;
+        }
+        Ok(())
+    }
+
+    /// Apply one control action; stale or unsafe actions are ignored.
+    fn apply(&mut self, action: ControlAction, t: f64, sink: &mut Tally<'_>) -> Result<()> {
+        match action {
+            ControlAction::Drain { replica: r } => {
+                if r >= self.live.len() || !self.lifecycle[r].is_active() {
+                    return Ok(());
+                }
+                self.lifecycle[r] = ReplicaState::Draining;
+                sink.on_event(r, &EngineEvent::ReplicaDown { t_s: t });
+                // Hand over everything not yet admitted; admitted work
+                // finishes in place.
+                let mut handoff = self.live[r].core.take_pending();
+                handoff.extend(self.live[r].state.take_waiting());
+                self.reroute(handoff, r, sink);
+            }
+            ControlAction::Fail { replica: r } => {
+                if r >= self.live.len() || self.lifecycle[r].is_down() {
+                    return Ok(());
+                }
+                let others_live = self
+                    .lifecycle
+                    .iter()
+                    .enumerate()
+                    .any(|(i, s)| i != r && !s.is_down());
+                if !others_live {
+                    return Ok(()); // refuse to strand unservable work
+                }
+                let was_active = self.lifecycle[r].is_active();
+                self.lifecycle[r] = ReplicaState::Down;
+                if was_active {
+                    sink.on_event(r, &EngineEvent::ReplicaDown { t_s: t });
+                }
+                let mut handoff = self.live[r].core.take_pending();
+                handoff.extend(self.live[r].state.evict_unfinished());
+                // The scheduler held planning state for the evicted
+                // admissions; rebuild it clean for a potential rejoin.
+                let rebuilt = {
+                    let l = &self.live[r];
+                    crate::sched::build(&l.sched_cfg, l.n_layers)
+                };
+                self.live[r].sched = rebuilt;
+                self.reroute(handoff, r, sink);
+            }
+            ControlAction::Rejoin { replica: r } => {
+                if r >= self.live.len() || self.lifecycle[r].is_active() {
+                    return Ok(());
+                }
+                self.lifecycle[r] = ReplicaState::Active;
+                sink.on_event(r, &EngineEvent::ReplicaUp { t_s: t });
+            }
+            ControlAction::ScaleUp => {
+                let i = self.live.len();
+                let spec = self.template.clone();
+                let mut rep = Live {
+                    policy: spec.sched.policy,
+                    sched: crate::sched::build(&spec.sched, spec.model.n_layers),
+                    sched_cfg: spec.sched.clone(),
+                    n_layers: spec.model.n_layers,
+                    state: default_engine_state(&spec.model, &spec.hw, &spec.sched),
+                    exec: (self.factory)(i, &spec)?,
+                    core: EngineCore::new(self.core_opts).with_replica(i),
+                };
+                // Align the newborn's clock with the fleet (it idles — and
+                // meters idle energy — from 0 to its join instant, as a
+                // provisioned-but-unused machine would).
+                rep.core.run_events(
+                    rep.exec.as_mut(),
+                    rep.sched.as_mut(),
+                    &mut rep.state,
+                    Some(t),
+                    &mut *sink,
+                )?;
+                self.live.push(rep);
+                self.lifecycle.push(ReplicaState::Active);
+                sink.kv_rejects.push(0);
+                sink.on_event(i, &EngineEvent::ReplicaUp { t_s: t });
+            }
+        }
+        Ok(())
     }
 }
 
@@ -317,7 +716,19 @@ impl<'a> Session<'a> {
     /// Execute the session: route every source arrival against live replica
     /// views, then drain (or halt at the horizon) every replica. Sim-backed
     /// sessions are infallible; real-executor sessions surface PJRT errors.
+    /// Sessions with a controller or a spill router take the stepped
+    /// control-plane path; all others take the plain path unchanged.
     pub fn run(self) -> Result<SessionReport> {
+        if self.controller.is_some() || self.router.wants_spill() {
+            self.run_controlled()
+        } else {
+            self.run_plain()
+        }
+    }
+
+    /// The pre-control-plane run loop, byte-for-byte semantics: advance
+    /// every replica to each arrival instant, route, then drain/halt.
+    fn run_plain(self) -> Result<SessionReport> {
         let Session {
             specs,
             mut router,
@@ -328,6 +739,7 @@ impl<'a> Session<'a> {
             horizon_s,
             record_token_times,
             immediate_arrivals,
+            ..
         } = self;
         let n = specs.len();
 
@@ -339,69 +751,18 @@ impl<'a> Session<'a> {
         let mut sink = Tally {
             inner: user_sink,
             kv_rejects: vec![0; n],
+            buffer_events: false,
+            track_rejects: false,
+            buffer: Vec::new(),
+            fresh_rejects: Vec::new(),
+            fresh_finished: Vec::new(),
         };
-
-        /// One live replica: scheduler + state + executor + core loop.
-        struct Live<'x> {
-            policy: Policy,
-            sched: Box<dyn Scheduler>,
-            state: EngineState,
-            exec: Box<dyn Executor + 'x>,
-            core: EngineCore,
-        }
-
-        impl Live<'_> {
-            fn view(&self, id: usize, kv_rejects: u64) -> ReplicaView {
-                let waiting_kv: u64 = self
-                    .state
-                    .waiting
-                    .iter()
-                    .map(|i| {
-                        let q = &self.state.reqs[i].req;
-                        (q.input_len + q.output_len) as u64
-                    })
-                    .sum();
-                ReplicaView {
-                    id,
-                    policy: self.policy,
-                    queued: self.core.pending_len(),
-                    active: self.state.prefilling.len() + self.state.decoding.len(),
-                    queued_kv_tokens: self.core.pending_footprint() + waiting_kv,
-                    kv_used_blocks: self.state.kv.used_blocks(),
-                    kv_block_size: self.state.kv.block_size,
-                    kv_free_blocks: self.state.kv.free_blocks(),
-                    kv_rejects,
-                    now_s: self.exec.now(),
-                }
-            }
-        }
-
-        let states: Vec<EngineState> = match states {
-            Some(v) => {
-                assert_eq!(v.len(), n, "engine_states length must match replica count");
-                v
-            }
-            None => specs
-                .iter()
-                .map(|s| default_engine_state(&s.model, &s.hw, &s.sched))
-                .collect(),
+        let core_opts = CoreOptions {
+            horizon_s,
+            record_token_times,
+            immediate_arrivals,
         };
-
-        let mut live: Vec<Live<'a>> = Vec::with_capacity(n);
-        for (i, (spec, state)) in specs.iter().zip(states).enumerate() {
-            live.push(Live {
-                policy: spec.sched.policy,
-                sched: crate::sched::build(&spec.sched, spec.model.n_layers),
-                state,
-                exec: factory(i, spec)?,
-                core: EngineCore::new(CoreOptions {
-                    horizon_s,
-                    record_token_times,
-                    immediate_arrivals,
-                })
-                .with_replica(i),
-            });
-        }
+        let mut live = build_live(&specs, states, &mut factory, core_opts)?;
 
         // Arrival loop: advance every replica to each arrival instant so
         // the router observes true engine state (iteration-boundary
@@ -422,7 +783,7 @@ impl<'a> Session<'a> {
             let views: Vec<ReplicaView> = live
                 .iter()
                 .enumerate()
-                .map(|(i, r)| r.view(i, sink.kv_rejects[i]))
+                .map(|(i, r)| r.view(i, sink.kv_rejects[i], ReplicaState::Active))
                 .collect();
             let idx = router.route(&req, &views) % n;
             live[idx].core.push(req);
@@ -433,9 +794,13 @@ impl<'a> Session<'a> {
         let mut any_halted = false;
         let mut halted_pending = 0usize;
         for r in live.iter_mut() {
-            let status =
-                r.core
-                    .run_events(r.exec.as_mut(), r.sched.as_mut(), &mut r.state, None, &mut sink)?;
+            let status = r.core.run_events(
+                r.exec.as_mut(),
+                r.sched.as_mut(),
+                &mut r.state,
+                None,
+                &mut sink,
+            )?;
             if let CoreStatus::Halted { pending } = status {
                 any_halted = true;
                 halted_pending += pending;
@@ -448,31 +813,141 @@ impl<'a> Session<'a> {
         } else {
             SessionStatus::Drained
         };
+        Ok(finish_report(live, status, assignments))
+    }
 
-        let policies: Vec<Policy> = live.iter().map(|r| r.policy).collect();
-        let mut per_replica = Vec::with_capacity(n);
-        let mut token_times = Vec::new();
-        for r in live {
-            let Live { core, mut exec, .. } = r;
-            let (metrics, times) = core.finish(exec.as_mut());
-            per_replica.push(metrics);
-            token_times.extend(times);
+    /// The stepped control-plane run loop: advance in `control_interval`
+    /// slices, processing a control boundary (controller events + actions,
+    /// spill requeues) at each step, through arrivals AND the drain tail.
+    fn run_controlled(self) -> Result<SessionReport> {
+        let Session {
+            specs,
+            router,
+            mut source,
+            mut factory,
+            states,
+            sink,
+            controller,
+            control_dt,
+            horizon_s,
+            record_token_times,
+            immediate_arrivals,
+        } = self;
+        let core_opts = CoreOptions {
+            horizon_s,
+            record_token_times,
+            immediate_arrivals,
+        };
+        let template = specs[0].clone();
+
+        let mut default_sink = NullSink;
+        let user_sink: &mut dyn EventSink = match sink {
+            Some(s) => s,
+            None => &mut default_sink,
+        };
+        let spill = router.wants_spill();
+        let has_controller = controller.is_some();
+        let live = build_live(&specs, states, &mut factory, core_opts)?;
+        let n = live.len();
+        let mut sink = Tally {
+            inner: user_sink,
+            kv_rejects: vec![0; n],
+            buffer_events: has_controller,
+            track_rejects: spill,
+            buffer: Vec::new(),
+            fresh_rejects: Vec::new(),
+            fresh_finished: Vec::new(),
+        };
+        let mut run = ControlledRun {
+            lifecycle: vec![ReplicaState::Active; n],
+            live,
+            router,
+            controller,
+            factory,
+            template,
+            core_opts,
+            spill,
+            assignments: Vec::new(),
+            spill_counts: BTreeMap::new(),
+        };
+        let dt = if control_dt > 0.0 { control_dt } else { 0.25 };
+        let mut now = 0.0f64;
+
+        while let Some(req) = source.next_request() {
+            if !immediate_arrivals {
+                while now < req.arrival_s {
+                    let step = (now + dt).min(req.arrival_s);
+                    run.advance(step, &mut sink)?;
+                    run.boundary(step, &mut sink)?;
+                    now = step;
+                }
+            }
+            run.route_arrival(req, &sink);
         }
-        let fleet = merge_metrics(&per_replica);
-        Ok(SessionReport {
-            status,
-            per_replica,
-            policies,
-            assignments,
-            fleet,
-            token_times,
-        })
+
+        // Drain under control: keep stepping boundaries until every replica
+        // is out of work or horizon-halted, so controllers keep acting
+        // through the tail. A fleet whose only remaining work is
+        // permanently admission-stuck (a footprint no KV pool ever fits)
+        // would otherwise step forever: after 64 consecutive boundaries
+        // with zero iterations and zero routing changes, give up like the
+        // plain drain path does.
+        let mut stalled = 0u32;
+        loop {
+            let done = run
+                .live
+                .iter()
+                .all(|r| r.core.halted() || r.unfinished() == 0);
+            if done {
+                break;
+            }
+            let iters_before: u64 = run.live.iter().map(|r| r.core.iterations()).sum();
+            let assigns_before = run.assignments.len();
+            let step = now + dt;
+            run.advance(step, &mut sink)?;
+            run.boundary(step, &mut sink)?;
+            now = step;
+            let iters_after: u64 = run.live.iter().map(|r| r.core.iterations()).sum();
+            if iters_after == iters_before && run.assignments.len() == assigns_before {
+                stalled += 1;
+                if stalled >= 64 {
+                    break;
+                }
+            } else {
+                stalled = 0;
+            }
+        }
+        // Final pass: emit drain/halt notifications and collect statuses.
+        let mut any_halted = false;
+        let mut halted_pending = 0usize;
+        for r in run.live.iter_mut() {
+            let status = r.core.run_events(
+                r.exec.as_mut(),
+                r.sched.as_mut(),
+                &mut r.state,
+                None,
+                &mut sink,
+            )?;
+            if let CoreStatus::Halted { pending } = status {
+                any_halted = true;
+                halted_pending += pending;
+            }
+        }
+        let status = if any_halted {
+            SessionStatus::Halted {
+                pending: halted_pending,
+            }
+        } else {
+            SessionStatus::Drained
+        };
+        Ok(finish_report(run.live, status, run.assignments))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::{AdaptiveSpill, DrainController};
     use crate::config::{Dataset, WorkloadSpec};
     use crate::workload::WorkloadGen;
 
@@ -553,5 +1028,85 @@ mod tests {
         assert_eq!(arrived, 6);
         assert_eq!(finished, 6);
         assert_eq!(drained, 1);
+    }
+
+    #[test]
+    fn controlled_session_without_actions_completes_everything() {
+        // A controller that never acts must not change WHAT gets served:
+        // every request still finishes, across the stepped path.
+        let trace = sharegpt_trace(10, 4.0, 9);
+        let mut log = EventLog::default();
+        let report = Session::builder()
+            .replicas(2)
+            .trace(&trace)
+            .controller(DrainController::new())
+            .sink(&mut log)
+            .run()
+            .expect("sim session");
+        assert_eq!(report.status, SessionStatus::Drained);
+        assert_eq!(report.fleet.requests.len(), 10);
+        assert_eq!(
+            log.count(|e| matches!(e, EngineEvent::ReplicaDown { .. })),
+            0
+        );
+    }
+
+    #[test]
+    fn drained_replica_hands_queue_over_and_fleet_finishes() {
+        let trace = sharegpt_trace(16, 4.0, 21);
+        let report = Session::builder()
+            .replicas(2)
+            .trace(&trace)
+            .controller(DrainController::new().drain_at(1.0, 0))
+            .run()
+            .expect("sim session");
+        assert_eq!(report.status, SessionStatus::Drained);
+        assert_eq!(report.fleet.requests.len(), 16);
+        // After the early drain, new arrivals all land on replica 1.
+        let late: Vec<usize> = report
+            .assignments
+            .iter()
+            .filter(|&&(id, _)| {
+                trace
+                    .requests
+                    .iter()
+                    .any(|r| r.id == id && r.arrival_s > 1.5)
+            })
+            .map(|&(_, idx)| idx)
+            .collect();
+        assert!(!late.is_empty());
+        assert!(late.iter().all(|&i| i == 1), "late arrivals avoid drained 0");
+    }
+
+    #[test]
+    fn spill_router_session_completes_under_backpressure() {
+        use crate::kvcache::KvCacheManager;
+
+        // Replica 0 gets a tiny KV pool; the spill router must push the
+        // overflow onto replica 1 instead of head-of-line blocking.
+        let model = ModelDesc::qwen3_30b_a3b();
+        let hw = HardwareDesc::h100x2();
+        let cfg = SchedulerConfig::preset(Policy::Chunked);
+        let spec = ReplicaSpec {
+            model: model.clone(),
+            hw,
+            sched: cfg.clone(),
+        };
+        let tiny = EngineState::new(model.clone(), KvCacheManager::new(256, 16), cfg.max_batch);
+        let roomy = default_engine_state(&spec.model, &spec.hw, &spec.sched);
+        let mut wspec = WorkloadSpec::new(Dataset::Fixed, 6.0, 10);
+        wspec.seed = 3;
+        wspec.fixed_input = 2048;
+        wspec.fixed_output = 256;
+        let trace = WorkloadGen::new(wspec).generate();
+        let report = Session::builder()
+            .replica_specs(vec![spec.clone(), spec])
+            .engine_states(vec![tiny, roomy])
+            .router(Box::new(AdaptiveSpill::new()))
+            .trace(&trace)
+            .run()
+            .expect("sim session");
+        assert_eq!(report.status, SessionStatus::Drained);
+        assert_eq!(report.fleet.requests.len(), 10);
     }
 }

@@ -6,14 +6,19 @@
 //! every request with sane fleet aggregates under the paper's
 //! ShareGPT-style traces.
 
-use layered_prefill::cluster::{Cluster, ReplicaSpec, RoundRobin, SloAware};
+use layered_prefill::cluster::{
+    AdaptiveSpill, Cluster, LeastOutstandingKv, ReplicaSpec, ReplicaState, ReplicaView,
+    RoundRobin, Router, SloAware,
+};
 use layered_prefill::config::{
     Dataset, HardwareDesc, ModelDesc, Policy, SchedulerConfig, WorkloadSpec,
 };
 use layered_prefill::model::WorkAnalytics;
 use layered_prefill::serve::{PoissonSource, Session, SessionStatus};
 use layered_prefill::simulator::{default_engine_state, simulate, SimOptions, Simulator};
-use layered_prefill::workload::{Trace, WorkloadGen};
+use layered_prefill::util::proptest::{check, Gen};
+use layered_prefill::workload::{Request, Trace, WorkloadGen};
+use layered_prefill::{prop_assert, prop_assert_eq};
 
 fn sharegpt_trace(n: usize, rate: f64, seed: u64) -> Trace {
     let mut spec = WorkloadSpec::new(Dataset::ShareGpt, rate, n);
@@ -227,6 +232,107 @@ fn four_replica_fleet_serves_paper_trace() {
         rep.fleet.ttft_samples().mean(),
         single.ttft_samples().mean()
     );
+}
+
+// ---------------------------------------------------------------------------
+// Router property tests (sched/properties.rs-style): lifecycle safety and
+// determinism over random ReplicaView fleets, for every shipped router.
+// ---------------------------------------------------------------------------
+
+/// Every shipped router, freshly constructed.
+fn all_routers() -> Vec<Box<dyn Router>> {
+    vec![
+        Box::new(RoundRobin::new()),
+        Box::new(LeastOutstandingKv::new()),
+        Box::new(SloAware::new(2048)),
+        Box::new(AdaptiveSpill::new()),
+    ]
+}
+
+fn random_view(g: &mut Gen, id: usize) -> ReplicaView {
+    ReplicaView {
+        id,
+        policy: *g.pick(&[Policy::Layered, Policy::Chunked, Policy::Hybrid, Policy::Orca]),
+        state: *g.pick(&[
+            ReplicaState::Active,
+            ReplicaState::Draining,
+            ReplicaState::Down,
+        ]),
+        queued: g.usize(0, 50),
+        active: g.usize(0, 50),
+        queued_kv_tokens: g.usize(0, 100_000) as u64,
+        kv_used_blocks: g.usize(0, 1000) as u32,
+        kv_block_size: 16,
+        kv_free_blocks: g.usize(0, 1000) as u32,
+        kv_rejects: g.usize(0, 20) as u64,
+        now_s: 0.0,
+    }
+}
+
+fn random_req(g: &mut Gen) -> Request {
+    Request {
+        id: g.usize(0, 6) as u64, // small pool exercises AdaptiveSpill memory
+        arrival_s: 0.0,
+        input_len: g.usize(0, 20_000) as u32,
+        output_len: 8,
+    }
+}
+
+#[test]
+fn routers_never_route_to_draining_or_down_replicas() {
+    check("routers avoid non-active replicas", 300, |g| {
+        let n = g.usize(2, 6);
+        let mut views: Vec<ReplicaView> = (0..n).map(|i| random_view(g, i)).collect();
+        // Guarantee at least one Active replica (the property's premise).
+        let forced = g.usize(0, n - 1);
+        views[forced].state = ReplicaState::Active;
+        let req = random_req(g);
+        for r in all_routers().iter_mut() {
+            // Several consecutive decisions: stateful routers (round-robin
+            // cursor, spill memory) must stay lifecycle-safe as they
+            // advance.
+            for _ in 0..4 {
+                let idx = r.route(&req, &views) % n;
+                prop_assert!(
+                    views[idx].state.is_active(),
+                    "{} picked {:?} replica {} of {:?}",
+                    r.name(),
+                    views[idx].state,
+                    idx,
+                    views.iter().map(|v| v.state).collect::<Vec<_>>()
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn routers_are_deterministic_given_identical_view_sequences() {
+    check("router determinism", 150, |g| {
+        let n = g.usize(2, 5);
+        // One shared random decision sequence: (request, fleet snapshot).
+        let steps = g.usize(1, 12);
+        let seq: Vec<(Request, Vec<ReplicaView>)> = (0..steps)
+            .map(|_| {
+                let mut views: Vec<ReplicaView> =
+                    (0..n).map(|i| random_view(g, i)).collect();
+                let forced = g.usize(0, n - 1);
+                views[forced].state = ReplicaState::Active;
+                (random_req(g), views)
+            })
+            .collect();
+        // Two fresh instances of each router fed the identical sequence
+        // must make identical decisions at every step.
+        let mut fleet_a = all_routers();
+        let mut fleet_b = all_routers();
+        for (ra, rb) in fleet_a.iter_mut().zip(fleet_b.iter_mut()) {
+            for (req, views) in &seq {
+                prop_assert_eq!(ra.route(req, views), rb.route(req, views));
+            }
+        }
+        Ok(())
+    });
 }
 
 #[test]

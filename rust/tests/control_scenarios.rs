@@ -1,0 +1,408 @@
+//! Fleet control-plane scenario tests: scripted replica drain / failure /
+//! rejoin and backpressure autoscaling over a `serve::Session`, locked
+//! through the typed `EngineEvent` stream.
+//!
+//! The invariants:
+//! * a DRAINED replica receives no new `Admitted` events after its
+//!   `ReplicaDown` instant, while requests it had already admitted still
+//!   reach `Finished` on it;
+//! * a FAILED replica's unfinished requests are re-routed and re-served —
+//!   zero lost requests — and event conservation (one `FirstToken` +
+//!   `output_len - 1` `TokenEmitted` per `Finished`) holds fleet-wide
+//!   over each request's final serving attempt (from its last `Arrived`);
+//! * the stepped control-plane session path with a no-op controller
+//!   reproduces the plain path's per-request timings exactly;
+//! * the ISSUE acceptance scenario (open-loop + fail + autoscale) ends
+//!   `Halted`/`Drained` with zero lost requests, deterministically.
+
+use std::collections::BTreeSet;
+
+use layered_prefill::cluster::{
+    AdaptiveSpill, Autoscaler, ControllerSet, DrainController, ReplicaSpec,
+};
+use layered_prefill::config::{
+    Dataset, HardwareDesc, ModelDesc, Policy, SchedulerConfig, WorkloadSpec,
+};
+use layered_prefill::kvcache::KvCacheManager;
+use layered_prefill::sched::EngineState;
+use layered_prefill::serve::{
+    EngineEvent, EventLog, PoissonSource, Session, SessionReport, SessionStatus,
+};
+use layered_prefill::workload::{Trace, WorkloadGen};
+
+fn trace_of(dataset: Dataset, n: usize, rate: f64, seed: u64) -> Trace {
+    let mut spec = WorkloadSpec::new(dataset, rate, n);
+    spec.seed = seed;
+    WorkloadGen::new(spec).generate()
+}
+
+/// First `ReplicaDown` instant of `replica`, if any.
+fn down_time(log: &EventLog, replica: usize) -> Option<f64> {
+    log.events.iter().find_map(|(r, e)| match e {
+        EngineEvent::ReplicaDown { t_s } if *r == replica => Some(*t_s),
+        _ => None,
+    })
+}
+
+/// First `ReplicaUp` instant of `replica`, if any.
+fn up_time(log: &EventLog, replica: usize) -> Option<f64> {
+    log.events.iter().find_map(|(r, e)| match e {
+        EngineEvent::ReplicaUp { t_s } if *r == replica => Some(*t_s),
+        _ => None,
+    })
+}
+
+/// Ids `Admitted` on `replica`, with admission instants.
+fn admissions_on(log: &EventLog, replica: usize) -> Vec<(u64, f64)> {
+    log.events
+        .iter()
+        .filter_map(|(r, e)| match e {
+            EngineEvent::Admitted { t_s, id } if *r == replica => Some((*id, *t_s)),
+            _ => None,
+        })
+        .collect()
+}
+
+/// Event conservation over a request's FINAL serving attempt: from its last
+/// `Arrived` onward there is exactly one `FirstToken`, `output_len - 1`
+/// `TokenEmitted`s, and one `Finished`. For requests served by a single
+/// replica (one `Arrived`) this is the plain global conservation law.
+fn assert_final_attempt_conservation(log: &EventLog, id: u64, output_len: u32) {
+    let evs = log.for_request(id);
+    let last_arr = evs
+        .iter()
+        .rposition(|e| matches!(e, EngineEvent::Arrived { .. }))
+        .unwrap_or_else(|| panic!("req {id} never arrived"));
+    let tail = &evs[last_arr..];
+    let first = tail
+        .iter()
+        .filter(|e| matches!(e, EngineEvent::FirstToken { .. }))
+        .count();
+    let toks = tail
+        .iter()
+        .filter(|e| matches!(e, EngineEvent::TokenEmitted { .. }))
+        .count();
+    let fin = tail
+        .iter()
+        .filter(|e| matches!(e, EngineEvent::Finished { .. }))
+        .count();
+    assert_eq!(first, 1, "req {id}: one FirstToken per final attempt");
+    assert_eq!(
+        toks as u32,
+        output_len - 1,
+        "req {id}: output_len-1 decode tokens"
+    );
+    assert_eq!(fin, 1, "req {id}: exactly one Finished");
+}
+
+#[test]
+fn drained_replica_admits_nothing_new_and_finishes_in_flight() {
+    let trace = trace_of(Dataset::ShareGpt, 20, 4.0, 0xA11CE);
+    let mut log = EventLog::default();
+    let report = Session::builder()
+        .policy(Policy::Layered)
+        .replicas(2)
+        .trace(&trace)
+        .controller(DrainController::new().drain_at(2.0, 0))
+        .sink(&mut log)
+        .run()
+        .expect("sim session");
+
+    assert_eq!(report.status, SessionStatus::Drained);
+    assert_eq!(report.fleet.requests.len(), 20, "every request completes");
+    let t_down = down_time(&log, 0).expect("replica 0 was drained");
+    assert!(t_down >= 2.0, "drain fires at its scripted time, got {t_down}");
+    assert_eq!(up_time(&log, 0), None, "no rejoin scripted");
+
+    // The drained replica receives NO new admissions after its drain
+    // instant: its waiting queue was handed to the fleet and routers skip
+    // it for new arrivals.
+    let admits0 = admissions_on(&log, 0);
+    assert!(!admits0.is_empty(), "replica 0 served work before the drain");
+    let late: Vec<_> = admits0.iter().filter(|&&(_, t)| t > t_down).collect();
+    assert!(
+        late.is_empty(),
+        "admissions on drained replica after t_down: {late:?}"
+    );
+
+    // Every request the replica HAD admitted still finishes on it (drain
+    // is graceful: admitted work is never yanked).
+    for (id, _) in &admits0 {
+        let finished_on_0 = log.events.iter().any(|(r, e)| {
+            *r == 0 && matches!(e, EngineEvent::Finished { id: fid, .. } if fid == id)
+        });
+        assert!(finished_on_0, "req {id} admitted on draining replica 0 must finish there");
+    }
+
+    // Fleet-wide: each request finishes exactly once, with conservation.
+    for req in &trace.requests {
+        let fin = log
+            .for_request(req.id)
+            .iter()
+            .filter(|e| matches!(e, EngineEvent::Finished { .. }))
+            .count();
+        assert_eq!(fin, 1, "req {} finishes exactly once", req.id);
+        assert_final_attempt_conservation(&log, req.id, req.output_len);
+    }
+}
+
+#[test]
+fn failed_replica_requests_are_rerouted_with_conservation() {
+    // Long Arxiv prompts at 3x single-engine rate: replica 1 is mid-work
+    // when it dies at t=2. Everything it held must re-serve elsewhere.
+    let trace = trace_of(Dataset::Arxiv, 18, 6.0, 7);
+    let mut log = EventLog::default();
+    let report = Session::builder()
+        .policy(Policy::Layered)
+        .replicas(3)
+        .trace(&trace)
+        .controller(DrainController::new().fail_at(2.0, 1))
+        .sink(&mut log)
+        .run()
+        .expect("sim session");
+
+    assert_eq!(report.status, SessionStatus::Drained);
+    assert_eq!(report.fleet.requests.len(), 18, "zero lost requests");
+    let t_down = down_time(&log, 1).expect("replica 1 failed");
+
+    // No admissions on the dead replica after it went down.
+    for (id, t) in admissions_on(&log, 1) {
+        assert!(
+            t <= t_down,
+            "req {id} admitted on dead replica 1 at {t} > {t_down}"
+        );
+    }
+
+    // At least one request was actually re-routed (double Arrived), and
+    // every request satisfies final-attempt conservation; single-attempt
+    // requests satisfy it globally.
+    let mut rerouted = 0usize;
+    for req in &trace.requests {
+        let arrivals = log
+            .for_request(req.id)
+            .iter()
+            .filter(|e| matches!(e, EngineEvent::Arrived { .. }))
+            .count();
+        assert!(arrivals >= 1);
+        if arrivals > 1 {
+            rerouted += 1;
+        }
+        let fin = log
+            .for_request(req.id)
+            .iter()
+            .filter(|e| matches!(e, EngineEvent::Finished { .. }))
+            .count();
+        assert_eq!(fin, 1, "req {} finishes exactly once", req.id);
+        assert_final_attempt_conservation(&log, req.id, req.output_len);
+    }
+    assert!(
+        rerouted > 0,
+        "the failure must displace at least one request"
+    );
+
+    // Nothing finishes on the dead replica after its failure instant.
+    let late_finish = log.events.iter().any(|(r, e)| {
+        *r == 1 && matches!(e, EngineEvent::Finished { .. }) && e.t_s() > t_down
+    });
+    assert!(!late_finish, "dead replica cannot finish work post-failure");
+}
+
+#[test]
+fn rejoined_replica_serves_new_admissions_again() {
+    // Drain replica 0 at t=2, rejoin at t=4; arrivals continue to ~12s, so
+    // post-rejoin traffic must land on replica 0 again.
+    let trace = trace_of(Dataset::ShareGpt, 24, 2.0, 42);
+    let mut log = EventLog::default();
+    let report = Session::builder()
+        .policy(Policy::Layered)
+        .replicas(2)
+        .trace(&trace)
+        .controller(DrainController::new().drain_at(2.0, 0).rejoin_at(4.0, 0))
+        .sink(&mut log)
+        .run()
+        .expect("sim session");
+
+    assert_eq!(report.status, SessionStatus::Drained);
+    assert_eq!(report.fleet.requests.len(), 24);
+    let t_down = down_time(&log, 0).expect("drained");
+    let t_up = up_time(&log, 0).expect("rejoined");
+    assert!(t_down < t_up, "down precedes up");
+
+    let admits0 = admissions_on(&log, 0);
+    assert!(
+        admits0.iter().any(|&(_, t)| t > t_up),
+        "rejoined replica must admit new work (admissions: {admits0:?})"
+    );
+    assert!(
+        !admits0.iter().any(|&(_, t)| t > t_down && t <= t_up),
+        "no admissions while out of rotation"
+    );
+}
+
+#[test]
+fn autoscaler_grows_fleet_under_kv_backpressure_with_zero_loss() {
+    // One chunked replica with a deliberately tiny KV pool (256 blocks x 16
+    // = 4096 tokens; each fixed request needs 2304) so concurrent
+    // admissions KV-reject continuously. The autoscaler must add a second
+    // (full-size) replica, and the spill router must move the overflow.
+    let model = ModelDesc::qwen3_30b_a3b();
+    let cfg = SchedulerConfig::preset(Policy::Chunked);
+    let state = EngineState::new(model.clone(), KvCacheManager::new(256, 16), cfg.max_batch);
+    let spec = ReplicaSpec {
+        model,
+        hw: HardwareDesc::h100x2(),
+        sched: cfg,
+    };
+    let mut wspec = WorkloadSpec::new(Dataset::Fixed, 6.0, 12);
+    wspec.seed = 3;
+    wspec.fixed_input = 2048;
+    wspec.fixed_output = 256;
+    let trace = WorkloadGen::new(wspec).generate();
+
+    let mut log = EventLog::default();
+    let report = Session::builder()
+        .replica_specs(vec![spec])
+        .engine_states(vec![state])
+        .router(Box::new(AdaptiveSpill::new()))
+        .controller(Autoscaler::new(5.0, 2, 2))
+        .trace(&trace)
+        .sink(&mut log)
+        .run()
+        .expect("sim session");
+
+    assert_eq!(report.status, SessionStatus::Drained);
+    assert_eq!(report.fleet.requests.len(), 12, "zero lost requests");
+    assert!(
+        log.count(|e| matches!(e, EngineEvent::KvRejected { .. })) > 0,
+        "tiny KV pool must backpressure"
+    );
+    assert_eq!(
+        report.per_replica.len(),
+        2,
+        "autoscaler added exactly one replica (max 2)"
+    );
+    assert!(
+        log.count(|e| matches!(e, EngineEvent::ReplicaUp { .. })) >= 1,
+        "scale-up surfaces as ReplicaUp"
+    );
+    assert!(
+        report.assignments.iter().any(|&(_, idx)| idx >= 1),
+        "work reached the scaled-up replica"
+    );
+    for req in &trace.requests {
+        let fin = log
+            .for_request(req.id)
+            .iter()
+            .filter(|e| matches!(e, EngineEvent::Finished { .. }))
+            .count();
+        assert_eq!(fin, 1);
+        assert_final_attempt_conservation(&log, req.id, req.output_len);
+    }
+}
+
+#[test]
+fn noop_controlled_session_matches_plain_session_exactly() {
+    // The stepped control-plane path with a controller that never acts
+    // must reproduce the plain path's scheduling decisions and per-request
+    // timings bit-for-bit (only boundary bookkeeping differs).
+    let trace = trace_of(Dataset::ShareGpt, 16, 4.0, 0xBEE);
+    let plain = Session::builder()
+        .policy(Policy::Layered)
+        .replicas(2)
+        .trace(&trace)
+        .run()
+        .expect("sim session");
+    let stepped = Session::builder()
+        .policy(Policy::Layered)
+        .replicas(2)
+        .trace(&trace)
+        .controller(DrainController::new())
+        .run()
+        .expect("sim session");
+
+    assert_eq!(stepped.status, plain.status);
+    assert_eq!(stepped.assignments, plain.assignments);
+    assert_eq!(stepped.fleet.requests.len(), plain.fleet.requests.len());
+    assert_eq!(stepped.fleet.iterations, plain.fleet.iterations);
+    for (a, b) in stepped.fleet.requests.iter().zip(&plain.fleet.requests) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.ttft_s, b.ttft_s, "req {} TTFT", a.id);
+        assert_eq!(a.finish_s, b.finish_s, "req {} finish", a.id);
+        assert_eq!(a.tbts_s, b.tbts_s, "req {} TBTs", a.id);
+    }
+}
+
+/// The ISSUE acceptance scenario: `cluster --replicas 4 --open-loop
+/// --fail-at <t> --autoscale` equivalent, in-process.
+fn acceptance_run() -> (EventLog, SessionReport) {
+    let controller = ControllerSet::new()
+        .with(DrainController::new().fail_at(4.0, 1))
+        .with(Autoscaler::new(4.0, 6, 8));
+    let mut log = EventLog::default();
+    let report = Session::builder()
+        .policy(Policy::Layered)
+        .replicas(4)
+        .router(Box::new(AdaptiveSpill::new()))
+        .workload(PoissonSource::open_loop(Dataset::ShareGpt, 10.0, 0xD00D, 15.0))
+        .horizon(15.0)
+        .controller(controller)
+        .sink(&mut log)
+        .run()
+        .expect("sim session");
+    (log, report)
+}
+
+#[test]
+fn open_loop_fail_autoscale_scenario_loses_nothing_and_is_deterministic() {
+    let (log, report) = acceptance_run();
+
+    // The fail fired.
+    assert!(down_time(&log, 1).is_some(), "replica 1 must fail at t=4");
+
+    // Zero lost: every Admitted id reaches Finished, or is still pending
+    // at a horizon halt.
+    let mut admitted = BTreeSet::new();
+    let mut finished = BTreeSet::new();
+    for (_, e) in &log.events {
+        match e {
+            EngineEvent::Admitted { id, .. } => {
+                admitted.insert(*id);
+            }
+            EngineEvent::Finished { id, .. } => {
+                finished.insert(*id);
+            }
+            _ => {}
+        }
+    }
+    let unfinished = admitted.difference(&finished).count();
+    match report.status {
+        SessionStatus::Drained => {
+            assert_eq!(unfinished, 0, "drained run loses nothing");
+        }
+        SessionStatus::Halted { pending } => {
+            assert!(
+                unfinished <= pending,
+                "{unfinished} unfinished admitted exceed {pending} pending at halt"
+            );
+        }
+    }
+    // Every finished request conserved its final serving attempt.
+    for (_, e) in &log.events {
+        if let EngineEvent::Finished { id, .. } = e {
+            let out_len = report
+                .fleet
+                .requests
+                .iter()
+                .find(|r| r.id == *id)
+                .map(|r| r.output_len)
+                .expect("finished request has a record");
+            assert_final_attempt_conservation(&log, *id, out_len);
+        }
+    }
+
+    // Deterministic under the fixed seed: a second run is event-identical.
+    let (log2, report2) = acceptance_run();
+    assert_eq!(log.events, log2.events);
+    assert_eq!(report.assignments, report2.assignments);
+    assert_eq!(report.status, report2.status);
+}

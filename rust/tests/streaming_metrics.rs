@@ -1,0 +1,269 @@
+//! Streaming-metrics golden tests: the sliding-window SLO attainment that
+//! `metrics::StreamingSlo` computes INCREMENTALLY from the live event
+//! stream must bit-match an independent post-hoc recomputation from the
+//! `EventLog` of the same seeded run — across window sizes, including
+//! windows with zero completions. Both derive TTFT and token gaps from the
+//! same event timestamps with the same arithmetic, so equality is exact
+//! (f64 bit-level), not approximate.
+
+use std::collections::BTreeMap;
+
+use layered_prefill::config::slo::{evaluate, SloSpec};
+use layered_prefill::config::{Dataset, Policy, WorkloadSpec};
+use layered_prefill::metrics::{StreamingSlo, WindowSummary};
+use layered_prefill::serve::{EngineEvent, EventLog, EventSink, Fanout, Session, SessionStatus};
+use layered_prefill::workload::{Trace, WorkloadGen};
+
+fn sharegpt_trace(n: usize, rate: f64, seed: u64) -> Trace {
+    let mut spec = WorkloadSpec::new(Dataset::ShareGpt, rate, n);
+    spec.seed = seed;
+    WorkloadGen::new(spec).generate()
+}
+
+/// Straight-line post-hoc recomputation of one window summary from a full
+/// event log: rebuild per-request records from events with `t_s <= t`,
+/// filter completions into the window `(t - window_s, t]`, and evaluate
+/// attainment with the canonical `config::slo::evaluate`. Deliberately
+/// structured NOTHING like the incremental sink.
+fn posthoc_summary(log: &EventLog, slo: &SloSpec, window_s: f64, t: f64) -> WindowSummary {
+    struct Rec {
+        arrival_s: f64,
+        first_s: Option<f64>,
+        emits: Vec<f64>,
+        finish_s: Option<f64>,
+        generated: u32,
+    }
+    let mut recs: BTreeMap<u64, Rec> = BTreeMap::new();
+    for (_, e) in &log.events {
+        if e.t_s() > t {
+            continue; // the future does not exist at instant t
+        }
+        match e {
+            EngineEvent::Arrived { req, .. } => {
+                recs.insert(
+                    req.id,
+                    Rec {
+                        arrival_s: req.arrival_s,
+                        first_s: None,
+                        emits: Vec::new(),
+                        finish_s: None,
+                        generated: 0,
+                    },
+                );
+            }
+            EngineEvent::FirstToken { t_s, id } => {
+                if let Some(r) = recs.get_mut(id) {
+                    r.first_s = Some(*t_s);
+                    r.emits.push(*t_s);
+                    r.generated = 1;
+                }
+            }
+            EngineEvent::TokenEmitted { t_s, id, generated } => {
+                if let Some(r) = recs.get_mut(id) {
+                    r.emits.push(*t_s);
+                    r.generated = *generated;
+                }
+            }
+            EngineEvent::Finished { t_s, id } => {
+                if let Some(r) = recs.get_mut(id) {
+                    r.finish_s = Some(*t_s);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    let lo = t - window_s;
+    let mut completed = 0usize;
+    let mut attained = 0usize;
+    let mut ttft_okc = 0usize;
+    let mut tbt_okc = 0usize;
+    let mut good_tokens: u64 = 0;
+    let mut emitted: u64 = 0;
+    for r in recs.values() {
+        for &e in &r.emits {
+            if e > lo && e <= t {
+                emitted += 1;
+            }
+        }
+        let Some(finish) = r.finish_s else { continue };
+        if !(finish > lo && finish <= t) {
+            continue;
+        }
+        let first = r.first_s.expect("finished request has a first token");
+        let ttft = first - r.arrival_s;
+        let gaps: Vec<f64> = r.emits.windows(2).map(|w| w[1] - w[0]).collect();
+        let a = evaluate(ttft, &gaps, slo);
+        completed += 1;
+        ttft_okc += a.ttft_ok as usize;
+        tbt_okc += a.tbt_ok as usize;
+        if a.full() {
+            attained += 1;
+            good_tokens += r.generated as u64;
+        }
+    }
+    let frac = |k: usize| {
+        if completed == 0 {
+            0.0
+        } else {
+            k as f64 / completed as f64
+        }
+    };
+    WindowSummary {
+        t_s: t,
+        window_s,
+        completed,
+        attained,
+        slo_full: frac(attained),
+        slo_ttft: frac(ttft_okc),
+        slo_tbt: frac(tbt_okc),
+        goodput_tok_s: good_tokens as f64 / window_s,
+        emitted,
+        throughput_tok_s: emitted as f64 / window_s,
+    }
+}
+
+/// One seeded single-replica run, observed by BOTH a live incremental
+/// sink (sampling every `dt`) and an event log.
+fn run_logged(window_s: f64, dt: f64, slo: &SloSpec) -> (Vec<WindowSummary>, EventLog, f64) {
+    let trace = sharegpt_trace(30, 3.0, 0xA11CE);
+    let mut stream = StreamingSlo::new(*slo, window_s).with_samples(dt);
+    let mut log = EventLog::default();
+    let mut fanout = Fanout::new(vec![&mut stream, &mut log]);
+    let report = Session::builder()
+        .policy(Policy::Layered)
+        .trace(&trace)
+        .sink(&mut fanout)
+        .run()
+        .expect("sim session");
+    drop(fanout);
+    assert_eq!(report.status, SessionStatus::Drained);
+    assert_eq!(report.fleet.requests.len(), 30);
+    let end = stream.watermark_s();
+    stream.flush_samples(end);
+    (stream.samples().to_vec(), log, end)
+}
+
+#[test]
+fn incremental_windows_bit_match_posthoc_recomputation() {
+    let slo = SloSpec {
+        ttft_s: 2.0,
+        tbt_s: 0.05,
+    };
+    let dt = 1.0;
+    for window_s in [0.5, 2.0, 10.0] {
+        let (samples, log, end) = run_logged(window_s, dt, &slo);
+
+        // The live sink sampled exactly the instants dt, 2dt, ... <= end
+        // (same f64 accumulation, so the instants are bit-identical).
+        let mut expect_ts = Vec::new();
+        let mut s = dt;
+        while s <= end {
+            expect_ts.push(s);
+            s += dt;
+        }
+        assert_eq!(
+            samples.len(),
+            expect_ts.len(),
+            "window {window_s}: one sample per instant"
+        );
+
+        for (sample, &at) in samples.iter().zip(&expect_ts) {
+            assert_eq!(sample.t_s, at);
+            let want = posthoc_summary(&log, &slo, window_s, at);
+            assert_eq!(
+                sample, &want,
+                "window {window_s} at t={at}: incremental != post-hoc"
+            );
+            // The headline claim is BIT equality, not epsilon equality.
+            assert_eq!(sample.slo_full.to_bits(), want.slo_full.to_bits());
+            assert_eq!(
+                sample.goodput_tok_s.to_bits(),
+                want.goodput_tok_s.to_bits()
+            );
+        }
+        // The run completed at least one request inside some window.
+        assert!(
+            samples.iter().any(|w| w.completed > 0),
+            "window {window_s}: no window ever saw a completion"
+        );
+    }
+}
+
+#[test]
+fn zero_completion_windows_match_and_report_zeroes() {
+    let slo = SloSpec {
+        ttft_s: 2.0,
+        tbt_s: 0.05,
+    };
+    let window_s = 1.5;
+    let (_, log, end) = run_logged(window_s, 1.0, &slo);
+
+    // Far past the run, the window is guaranteed empty: the incremental
+    // sink and the post-hoc recomputation must agree on the zeroes too.
+    let trace = sharegpt_trace(30, 3.0, 0xA11CE);
+    let mut stream = StreamingSlo::new(slo, window_s);
+    for (replica, e) in &log.events {
+        stream.on_event(*replica, e);
+    }
+    let far = end + window_s + 5.0;
+    let live = stream.summary_at(far);
+    let want = posthoc_summary(&log, &slo, window_s, far);
+    assert_eq!(live, want);
+    assert_eq!(live.completed, 0);
+    assert_eq!(live.attained, 0);
+    assert_eq!(live.slo_full, 0.0);
+    assert_eq!(live.slo_ttft, 0.0);
+    assert_eq!(live.slo_tbt, 0.0);
+    assert_eq!(live.emitted, 0);
+    assert_eq!(live.goodput_tok_s, 0.0);
+    // Sanity: the run itself was non-trivial.
+    assert_eq!(trace.len(), 30);
+}
+
+#[test]
+fn replaying_the_log_reproduces_the_live_samples() {
+    // Feeding the recorded EventLog through a FRESH incremental sink must
+    // reproduce the live sink's samples exactly — the sink depends only on
+    // the event stream, not on being attached to the running session.
+    let slo = SloSpec {
+        ttft_s: 2.0,
+        tbt_s: 0.05,
+    };
+    let (live_samples, log, end) = run_logged(2.0, 1.0, &slo);
+    let mut replay = StreamingSlo::new(slo, 2.0).with_samples(1.0);
+    for (replica, e) in &log.events {
+        replay.on_event(*replica, e);
+    }
+    replay.flush_samples(end);
+    assert_eq!(replay.samples(), live_samples.as_slice());
+}
+
+#[test]
+fn two_replica_final_window_matches_posthoc() {
+    // Cross-replica event streams interleave out of order in time; the
+    // incremental sink's sorted window must still agree with a post-hoc
+    // recomputation at the final watermark.
+    let slo = SloSpec {
+        ttft_s: 2.0,
+        tbt_s: 0.05,
+    };
+    let trace = sharegpt_trace(24, 6.0, 0xFEED);
+    let mut stream = StreamingSlo::new(slo, 4.0);
+    let mut log = EventLog::default();
+    let mut fanout = Fanout::new(vec![&mut stream, &mut log]);
+    let report = Session::builder()
+        .policy(Policy::Layered)
+        .replicas(2)
+        .trace(&trace)
+        .sink(&mut fanout)
+        .run()
+        .expect("sim session");
+    drop(fanout);
+    assert_eq!(report.status, SessionStatus::Drained);
+    let t = stream.watermark_s();
+    let live = stream.summary();
+    let want = posthoc_summary(&log, &slo, 4.0, t);
+    assert_eq!(live, want);
+    assert!(live.completed > 0, "final window must hold completions");
+}
