@@ -23,6 +23,7 @@ fn main() {
             arrival_s: t,
             input_len: 32_768,
             output_len: 64,
+            ..Default::default()
         });
     }
     let trace = Trace::new(reqs);

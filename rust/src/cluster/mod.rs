@@ -28,7 +28,8 @@ pub use control::{
     Autoscaler, ControlAction, Controller, ControllerSet, DrainController, ReplicaState,
 };
 pub use router::{
-    build_router, AdaptiveSpill, LeastOutstandingKv, ReplicaView, RoundRobin, Router, SloAware,
+    build_router, AdaptiveSpill, LeastOutstandingKv, PrefixAffinity, ReplicaView, RoundRobin,
+    Router, SloAware,
 };
 
 use crate::config::{HardwareDesc, ModelDesc, Policy, SchedulerConfig};
@@ -163,6 +164,8 @@ pub fn merge_metrics(runs: &[RunMetrics]) -> RunMetrics {
         fleet.makespan_s = fleet.makespan_s.max(m.makespan_s);
         fleet.busy_s += m.busy_s;
         fleet.iterations += m.iterations;
+        fleet.prefix_hit_tokens += m.prefix_hit_tokens;
+        fleet.migrated_blocks += m.migrated_blocks;
         batch_weight += m.avg_decode_batch * m.busy_s;
     }
     fleet.avg_decode_batch = if fleet.busy_s > 0.0 {

@@ -265,25 +265,102 @@ impl Router for AdaptiveSpill {
         if full_cycle {
             self.tried.remove(&req.id);
         } else if self.tried.len() > Self::MEMORY_CAP {
-            // Stay bounded on open-ended runs: the smallest id is the
-            // stalest request (arrival-ordered ids) and has almost
-            // certainly been admitted long ago.
-            if let Some(&oldest) = self.tried.keys().next() {
-                self.tried.remove(&oldest);
+            // Stay bounded on open-ended runs: evict the stalest request
+            // (smallest id — ids are assigned in arrival order), but NEVER
+            // the request being routed right now. When the in-flight retry
+            // is itself the smallest id, evicting it would drop the
+            // exclusion set we just extended mid-decision, and its next
+            // retry would bounce straight back to an already-tried replica.
+            let victim = self
+                .tried
+                .keys()
+                .find(|&&k| k != req.id)
+                .copied();
+            if let Some(v) = victim {
+                self.tried.remove(&v);
             }
         }
         pick
     }
 }
 
+/// Prefix-affinity router: arrivals tagged with a shared prompt prefix
+/// (`Request::prefix_id != 0`) are routed to the replica that last served
+/// that prefix — the replica whose prefix cache (and resident KV) already
+/// holds the shared blocks — as long as it is still Active. Cold prefixes
+/// and untagged requests fall through to least-outstanding-KV balancing,
+/// so the router composes prefix locality WITH load awareness and the
+/// lifecycle rule (never place new work on a draining/down replica while
+/// an Active one exists). The learned prefix→replica map is bounded at
+/// [`PrefixAffinity::MEMORY_CAP`], evicting the least-recently-USED
+/// prefix (a steady hot system prompt is touched every arrival and is
+/// therefore never the victim); evicted entries simply re-learn.
+#[derive(Debug, Default)]
+pub struct PrefixAffinity {
+    inner: LeastOutstandingKv,
+    /// prefix id -> (home replica, last-used tick).
+    home: std::collections::BTreeMap<u64, (usize, u64)>,
+    clock: u64,
+}
+
+impl PrefixAffinity {
+    /// Most prefixes whose home replica is remembered at once.
+    pub const MEMORY_CAP: usize = 4096;
+
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Router for PrefixAffinity {
+    fn name(&self) -> &'static str {
+        "prefix-affinity"
+    }
+
+    fn route(&mut self, req: &Request, replicas: &[ReplicaView]) -> usize {
+        if req.prefix_id != 0 {
+            self.clock += 1;
+            let tick = self.clock;
+            if let Some(entry) = self.home.get_mut(&req.prefix_id) {
+                let home = entry.0;
+                if replicas
+                    .iter()
+                    .any(|v| v.id == home && v.state.is_active())
+                {
+                    entry.1 = tick;
+                    return home;
+                }
+            }
+            // Cold (or displaced) prefix: place by load, then remember,
+            // evicting the least-recently-used entry if the map is full.
+            let pick = self.inner.route(req, replicas);
+            if self.home.len() >= Self::MEMORY_CAP && !self.home.contains_key(&req.prefix_id) {
+                let victim = self
+                    .home
+                    .iter()
+                    .min_by_key(|(_, &(_, last))| last)
+                    .map(|(&pid, _)| pid);
+                if let Some(v) = victim {
+                    self.home.remove(&v);
+                }
+            }
+            self.home.insert(req.prefix_id, (pick, tick));
+            return pick;
+        }
+        self.inner.route(req, replicas)
+    }
+}
+
 /// Build a router by name: `rr`/`round-robin`, `least-kv`/`kv`,
-/// `slo`/`slo-aware`, `spill`/`adaptive-spill`.
+/// `slo`/`slo-aware`, `spill`/`adaptive-spill`,
+/// `prefix`/`prefix-affinity`.
 pub fn build_router(name: &str) -> Option<Box<dyn Router>> {
     match name.to_ascii_lowercase().as_str() {
         "rr" | "round-robin" | "roundrobin" => Some(Box::new(RoundRobin::new())),
         "least-kv" | "kv" | "least-outstanding" => Some(Box::new(LeastOutstandingKv::new())),
         "slo" | "slo-aware" => Some(Box::new(SloAware::new(2048))),
         "spill" | "adaptive" | "adaptive-spill" => Some(Box::new(AdaptiveSpill::new())),
+        "prefix" | "affinity" | "prefix-affinity" => Some(Box::new(PrefixAffinity::new())),
         _ => None,
     }
 }
@@ -314,6 +391,18 @@ mod tests {
             arrival_s: 0.0,
             input_len: input,
             output_len: 10,
+            ..Default::default()
+        }
+    }
+
+    fn prefixed_req(id: u64, prefix_id: u64) -> Request {
+        Request {
+            id,
+            input_len: 1024,
+            output_len: 10,
+            prefix_id,
+            prefix_len: 256,
+            ..Default::default()
         }
     }
 
@@ -475,9 +564,47 @@ mod tests {
             ("least-kv", "least-kv"),
             ("slo", "slo-aware"),
             ("spill", "adaptive-spill"),
+            ("prefix", "prefix-affinity"),
         ] {
             assert_eq!(build_router(n).unwrap().name(), want);
         }
         assert!(build_router("nope").is_none());
+    }
+
+    #[test]
+    fn prefix_affinity_sticks_to_the_learned_home() {
+        let mut r = PrefixAffinity::new();
+        let views = [
+            view(0, Policy::Layered, 500),
+            view(1, Policy::Layered, 100),
+        ];
+        // Cold prefix 7: least-loaded replica 1 wins and becomes home.
+        assert_eq!(r.route(&prefixed_req(1, 7), &views), 1);
+        // Load flips, but prefix 7 stays home on replica 1 (its cache).
+        let views_flipped = [
+            view(0, Policy::Layered, 10),
+            view(1, Policy::Layered, 900),
+        ];
+        assert_eq!(r.route(&prefixed_req(2, 7), &views_flipped), 1);
+        // A different prefix balances by load as usual.
+        assert_eq!(r.route(&prefixed_req(3, 8), &views_flipped), 0);
+        // Untagged requests always balance by load.
+        assert_eq!(r.route(&req(100), &views_flipped), 0);
+    }
+
+    #[test]
+    fn prefix_affinity_abandons_non_active_home() {
+        let mut r = PrefixAffinity::new();
+        let views = [
+            view(0, Policy::Layered, 0),
+            view(1, Policy::Layered, 100),
+        ];
+        assert_eq!(r.route(&prefixed_req(1, 7), &views), 0);
+        // Home goes down: the prefix re-homes onto an Active replica.
+        let mut views_down = views;
+        views_down[0].state = ReplicaState::Down;
+        assert_eq!(r.route(&prefixed_req(2, 7), &views_down), 1);
+        // And the re-learned home sticks once replica 0 returns.
+        assert_eq!(r.route(&prefixed_req(3, 7), &views), 1);
     }
 }

@@ -123,6 +123,14 @@ pub struct WorkloadSpec {
     /// For Dataset::Fixed.
     pub fixed_input: u32,
     pub fixed_output: u32,
+    /// Shared-prefix (system-prompt style) workload: when > 0, every
+    /// request's prompt is prepended with a `shared_prefix_len`-token
+    /// prefix drawn from one of `prefix_groups` distinct system prompts
+    /// (round-robin by request id, so the trace stays deterministic and
+    /// the base length samples are untouched). 0 = feature off.
+    pub shared_prefix_len: u32,
+    /// Number of distinct shared prefixes to cycle through (min 1).
+    pub prefix_groups: u32,
 }
 
 impl WorkloadSpec {
@@ -134,7 +142,16 @@ impl WorkloadSpec {
             seed: 0xA11CE,
             fixed_input: 2048,
             fixed_output: 256,
+            shared_prefix_len: 0,
+            prefix_groups: 1,
         }
+    }
+
+    /// Builder-style shared-prefix knob (see `shared_prefix_len`).
+    pub fn with_shared_prefix(mut self, prefix_len: u32, groups: u32) -> Self {
+        self.shared_prefix_len = prefix_len;
+        self.prefix_groups = groups.max(1);
+        self
     }
 }
 

@@ -170,6 +170,30 @@ impl EngineCore {
         self.halted
     }
 
+    /// New work was injected directly into the engine state (a migration
+    /// adoption bypassing `push`): re-arm the drained notification.
+    pub fn wake(&mut self) {
+        self.drained_notified = false;
+    }
+
+    /// Engine time of `id`'s latest token emission, if it has emitted —
+    /// carried across a KV migration so the destination's first post-
+    /// migration TBT measures the true gap (including transfer time).
+    pub fn emission_time(&self, id: u64) -> Option<f64> {
+        self.last_emit_s.get(&id).copied()
+    }
+
+    /// Seed the TBT reference point for an adopted (migrated) decoding
+    /// request.
+    pub fn seed_emission(&mut self, id: u64, t_s: f64) {
+        self.last_emit_s.insert(id, t_s);
+    }
+
+    /// Account KV blocks that landed here via cross-replica migration.
+    pub fn note_migration(&mut self, blocks: u32) {
+        self.metrics.migrated_blocks += blocks as u64;
+    }
+
     /// Total KV footprint (input + output tokens) of undelivered requests —
     /// the router-visible share of a replica's outstanding work.
     pub fn pending_footprint(&self) -> u64 {
@@ -295,16 +319,29 @@ impl EngineCore {
             + state.decoding.len()
     }
 
-    /// Translate logged admission outcomes into events.
-    fn flush_admissions(&self, state: &mut EngineState, now: f64, sink: &mut dyn EventSink) {
+    /// Translate logged admission outcomes into events. A prefix-cache hit
+    /// additionally emits [`EngineEvent::PrefixHit`] and accrues the
+    /// skipped-prefill token count into the run metrics.
+    fn flush_admissions(&mut self, state: &mut EngineState, now: f64, sink: &mut dyn EventSink) {
         for a in state.admissions.drain(..) {
-            let ev = match a {
-                Admission::Admitted { id } => EngineEvent::Admitted { t_s: now, id },
-                Admission::KvRejected { id, demand, free } => {
-                    EngineEvent::KvRejected { t_s: now, id, demand, free }
+            match a {
+                Admission::Admitted { id, cached_tokens } => {
+                    sink.on_event(self.replica, &EngineEvent::Admitted { t_s: now, id });
+                    if cached_tokens > 0 {
+                        self.metrics.prefix_hit_tokens += cached_tokens as u64;
+                        sink.on_event(
+                            self.replica,
+                            &EngineEvent::PrefixHit { t_s: now, id, cached_tokens },
+                        );
+                    }
                 }
-            };
-            sink.on_event(self.replica, &ev);
+                Admission::KvRejected { id, demand, free } => {
+                    sink.on_event(
+                        self.replica,
+                        &EngineEvent::KvRejected { t_s: now, id, demand, free },
+                    );
+                }
+            }
         }
     }
 
@@ -396,6 +433,19 @@ impl EngineCore {
         }
 
         for id in completed_prefills {
+            // The prompt's KV now actually exists: publish its SHARED-
+            // prefix block hashes so later same-prefix admissions can take
+            // cached credit. Only the shared region is published —
+            // request-private blocks can never be hit by another admission
+            // (no-op with the prefix cache disabled or for untagged
+            // requests).
+            if state.kv.prefix_cache_enabled() {
+                let req = state.reqs[&id].req;
+                let hashes = crate::kvcache::shared_block_hashes(&req, state.kv.block_size);
+                if !hashes.is_empty() {
+                    let _ = state.kv.publish_prefix(id, &hashes);
+                }
+            }
             let r = state.reqs.get_mut(&id).unwrap();
             r.generated = 1; // first token from prefill
             r.first_token_s = Some(now);

@@ -2,6 +2,38 @@
 //! tables, a free list, and capacity-aware admission. The simulator uses it
 //! to gate request admission (a request cannot start prefill unless its
 //! worst-case block demand fits); the real server uses the slot allocator.
+//!
+//! ## Automatic prefix caching (opt-in)
+//!
+//! With [`KvCacheManager::enable_prefix_cache`] the manager becomes
+//! content-addressed for block-aligned prompt prefixes, the vLLM automatic
+//! prefix-caching design:
+//!
+//! * every full prompt block whose content is determined (a shared
+//!   system-prompt prefix, or a request's own tokens) has a content hash
+//!   (see [`block_hashes`]);
+//! * registration ([`KvCacheManager::register_with_prefix`]) first looks the
+//!   leading hashes up — hits are REFERENCE-COUNTED shared blocks, so the
+//!   request skips re-prefilling those tokens entirely;
+//! * prompt blocks are published under their hashes only once their content
+//!   actually exists — the engine calls [`KvCacheManager::publish_prefix`]
+//!   when a request's prefill COMPLETES (publishing at registration would
+//!   let a concurrent same-prefix admission take credit for work nobody
+//!   has done yet);
+//! * release decrements refcounts; a block whose refcount reaches zero stays
+//!   RESIDENT as an idle cached block (eviction fodder), so later arrivals
+//!   with the same prefix still hit it. Idle blocks are reclaimed
+//!   oldest-first whenever the free list runs dry.
+//!
+//! [`KvCacheManager::check_invariants`] extends the original no-double-owner
+//! / no-leak checks with refcount conservation: a shared block's refcount
+//! equals the number of request tables holding it, idle cached blocks carry
+//! refcount zero plus a live hash mapping, and every block is exactly one of
+//! free / idle-cached / table-owned.
+
+use std::collections::BTreeMap;
+
+use crate::workload::Request;
 
 /// Block-granular KV allocator.
 #[derive(Clone, Debug)]
@@ -12,9 +44,22 @@ pub struct KvCacheManager {
     pub n_blocks: u32,
     free: Vec<u32>,
     /// request id -> allocated blocks (in allocation order).
-    tables: std::collections::BTreeMap<u64, Vec<u32>>,
+    tables: BTreeMap<u64, Vec<u32>>,
     /// request id -> tokens stored.
-    lens: std::collections::BTreeMap<u64, u32>,
+    lens: BTreeMap<u64, u32>,
+    /// Automatic prefix caching on?
+    prefix_enabled: bool,
+    /// content hash -> resident block holding that content.
+    by_hash: BTreeMap<u64, u32>,
+    /// resident hashed block -> its content hash (inverse of `by_hash`).
+    hash_of: BTreeMap<u32, u64>,
+    /// hashed block -> number of request tables referencing it.
+    refs: BTreeMap<u32, u32>,
+    /// Refcount-zero cached blocks in release order: monotone sequence ->
+    /// block (oldest first), with the inverse map for O(log n) revival.
+    idle_by_seq: BTreeMap<u64, u32>,
+    idle_seq_of: BTreeMap<u32, u64>,
+    idle_next_seq: u64,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -22,6 +67,66 @@ pub enum KvError {
     OutOfBlocks,
     UnknownRequest,
     AlreadyRegistered,
+}
+
+/// Mix function for block content identity (splitmix64-style finalizer over
+/// the three identity words). Collisions are astronomically unlikely at
+/// simulation scales and only cost a spurious "hit" if they happen.
+fn mix(kind: u64, owner: u64, index: u64) -> u64 {
+    let mut z = kind
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(owner)
+        .wrapping_mul(0xBF58_476D_1CE4_E5B9)
+        .wrapping_add(index)
+        .wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    z = z.wrapping_mul(0xD6E8_FEB8_6659_FD93);
+    z ^= z >> 29;
+    z
+}
+
+const HASH_KIND_SHARED: u64 = 0x5052_4546; // "PREF": shared system-prompt blocks
+const HASH_KIND_UNIQUE: u64 = 0x554E_4951; // "UNIQ": request-private blocks
+
+/// The serving path's hash set for `req`: the block-aligned run of its
+/// SHARED prefix, additionally capped one token short of the full prompt
+/// (the last prompt token is always recomputed to produce first-token
+/// logits, the vLLM rule). Empty for untagged requests — their private
+/// blocks can never be hit by another admission, so hashing them would
+/// only pollute the cache.
+pub fn shared_block_hashes(req: &Request, block_size: u32) -> Vec<u64> {
+    let upto = req
+        .shared_prefix_tokens()
+        .min(req.input_len.saturating_sub(1));
+    block_hashes(req, block_size, upto)
+}
+
+/// Content hashes of the block-aligned leading prompt blocks of `req`,
+/// covering at most `upto_tokens` tokens (only FULL blocks are hashed).
+/// Blocks fully inside the request's shared prefix hash by
+/// `(prefix_id, block index)` — identical across requests sharing the
+/// prefix — while blocks past the prefix hash by `(request id, block
+/// index)`, a private content identity only the same request can match.
+///
+/// The serving path only looks up and publishes the SHARED region (see
+/// [`shared_block_hashes`]): private hashes are unreachable by any other
+/// admission, so publishing them would just park unhittable blocks in the
+/// cache. The general form exists for tests and direct cache surgery.
+pub fn block_hashes(req: &Request, block_size: u32, upto_tokens: u32) -> Vec<u64> {
+    let block_size = block_size.max(1);
+    let upto = upto_tokens.min(req.input_len);
+    let n_full = (upto / block_size) as usize;
+    let shared = req.shared_prefix_tokens();
+    (0..n_full)
+        .map(|i| {
+            let end = (i as u32 + 1).saturating_mul(block_size);
+            if end <= shared {
+                mix(HASH_KIND_SHARED, req.prefix_id, i as u64)
+            } else {
+                mix(HASH_KIND_UNIQUE, req.id, i as u64)
+            }
+        })
+        .collect()
 }
 
 impl KvCacheManager {
@@ -33,22 +138,74 @@ impl KvCacheManager {
             free: (0..n_blocks).rev().collect(),
             tables: Default::default(),
             lens: Default::default(),
+            prefix_enabled: false,
+            by_hash: Default::default(),
+            hash_of: Default::default(),
+            refs: Default::default(),
+            idle_by_seq: Default::default(),
+            idle_seq_of: Default::default(),
+            idle_next_seq: 0,
         }
     }
 
-    /// Size a pool from an HBM budget.
+    /// Internal: a block's refcount reached zero — park it as idle cached
+    /// content (newest sequence number = evicted last).
+    fn park_idle(&mut self, b: u32) {
+        let seq = self.idle_next_seq;
+        self.idle_next_seq += 1;
+        self.idle_by_seq.insert(seq, b);
+        self.idle_seq_of.insert(b, seq);
+    }
+
+    /// Internal: an idle cached block is referenced again — remove it from
+    /// the idle order in O(log n).
+    fn revive_idle(&mut self, b: u32) {
+        if let Some(seq) = self.idle_seq_of.remove(&b) {
+            self.idle_by_seq.remove(&seq);
+        }
+    }
+
+    /// Size a pool from an HBM budget. Saturates instead of wrapping for
+    /// budgets whose block count exceeds `u32::MAX` (the former `as u32`
+    /// truncation silently produced a tiny pool).
     pub fn from_capacity(bytes: f64, kv_bytes_per_token: u64, block_size: u32) -> Self {
-        let tokens = (bytes / kv_bytes_per_token as f64) as u64;
-        let blocks = (tokens / block_size as u64).max(1) as u32;
+        let per_token = kv_bytes_per_token.max(1) as f64;
+        // Float -> int `as` casts saturate (and map NaN to 0) since Rust 1.45.
+        let tokens = (bytes / per_token).max(0.0) as u64;
+        let blocks_u64 = (tokens / block_size.max(1) as u64).max(1);
+        let blocks = blocks_u64.min(u32::MAX as u64) as u32;
         Self::new(blocks, block_size)
     }
 
+    /// Turn on automatic prefix caching (content-addressed shared blocks).
+    pub fn enable_prefix_cache(&mut self) {
+        self.prefix_enabled = true;
+    }
+
+    pub fn prefix_cache_enabled(&self) -> bool {
+        self.prefix_enabled
+    }
+
+    /// Blocks on the free list (does not count idle cached blocks).
     pub fn free_blocks(&self) -> u32 {
         self.free.len() as u32
     }
 
+    /// Refcount-zero cached blocks, reclaimable on demand.
+    pub fn cached_idle_blocks(&self) -> u32 {
+        self.idle_by_seq.len() as u32
+    }
+
+    /// Blocks an allocation can draw on: free + idle-cached (idle blocks are
+    /// evicted oldest-first when the free list empties).
+    pub fn reclaimable_blocks(&self) -> u32 {
+        (self.free.len() + self.idle_by_seq.len()) as u32
+    }
+
+    /// Blocks actively referenced by request tables (idle cached blocks are
+    /// reclaimable, so they do not count as load).
     pub fn used_blocks(&self) -> u32 {
-        self.n_blocks - self.free_blocks()
+        self.n_blocks - self.reclaimable_blocks()
     }
 
     pub fn blocks_for(&self, tokens: u32) -> u32 {
@@ -56,55 +213,236 @@ impl KvCacheManager {
     }
 
     /// Can a request with `total_tokens` eventual footprint be admitted now
-    /// (conservative: full reservation)?
+    /// (conservative: full reservation, no prefix credit)?
     pub fn can_admit(&self, total_tokens: u32) -> bool {
-        self.blocks_for(total_tokens) <= self.free_blocks()
+        self.blocks_for(total_tokens) <= self.reclaimable_blocks()
+    }
+
+    /// Leading run of `hashes` resident in the prefix cache (0 when the
+    /// cache is disabled).
+    pub fn lookup_prefix(&self, hashes: &[u64]) -> u32 {
+        if !self.prefix_enabled {
+            return 0;
+        }
+        hashes
+            .iter()
+            .take_while(|&h| self.by_hash.contains_key(h))
+            .count() as u32
+    }
+
+    /// Admission arithmetic shared by [`Self::can_admit_with_prefix`] and
+    /// [`Self::register_with_prefix`]: (leading hits, fresh blocks needed,
+    /// blocks available for fresh allocation). Idle blocks that ARE hits
+    /// cannot double as eviction fodder, so they are subtracted from the
+    /// availability.
+    fn admit_plan(&self, total_tokens: u32, hashes: &[u64]) -> (u32, usize, usize) {
+        let total_need = self.blocks_for(total_tokens);
+        let hits = self.lookup_prefix(hashes).min(total_need);
+        let idle_hits = hashes[..hits as usize]
+            .iter()
+            .filter(|&h| {
+                let b = self.by_hash[h];
+                self.refs.get(&b).copied().unwrap_or(0) == 0
+            })
+            .count();
+        let fresh_need = total_need as usize - hits as usize;
+        let avail = self.free.len() + self.idle_by_seq.len() - idle_hits;
+        (hits, fresh_need, avail)
+    }
+
+    /// Would [`Self::register_with_prefix`] succeed right now?
+    pub fn can_admit_with_prefix(&self, total_tokens: u32, hashes: &[u64]) -> bool {
+        let (_, fresh_need, avail) = self.admit_plan(total_tokens, hashes);
+        fresh_need <= avail
+    }
+
+    /// The exact availability arithmetic the admission gate uses, exposed
+    /// for rejection reporting: (leading cached hits, blocks available for
+    /// fresh allocation — free list plus reclaimable idle cache, minus
+    /// idle blocks the hits themselves pin).
+    pub fn admission_outlook(&self, total_tokens: u32, hashes: &[u64]) -> (u32, u32) {
+        let (hits, _, avail) = self.admit_plan(total_tokens, hashes);
+        (hits, avail.min(u32::MAX as usize) as u32)
+    }
+
+    /// Pop a free block, evicting the oldest idle cached block when the
+    /// free list is dry.
+    fn take_block(&mut self) -> Option<u32> {
+        if let Some(b) = self.free.pop() {
+            return Some(b);
+        }
+        let (&seq, &b) = self.idle_by_seq.iter().next()?;
+        self.idle_by_seq.remove(&seq);
+        self.idle_seq_of.remove(&b);
+        if let Some(h) = self.hash_of.remove(&b) {
+            self.by_hash.remove(&h);
+        }
+        self.refs.remove(&b);
+        Some(b)
     }
 
     /// Register a request and reserve blocks for `initial_tokens`.
     pub fn register(&mut self, id: u64, initial_tokens: u32) -> Result<(), KvError> {
+        self.register_with_prefix(id, initial_tokens, &[]).map(|_| ())
+    }
+
+    /// Register a request, reserving blocks for `initial_tokens`, taking
+    /// cached-prefix credit for the leading run of `hashes` already
+    /// resident. Returns the number of CACHED blocks credited (0 with the
+    /// prefix cache disabled — in which case this is byte-for-byte the
+    /// plain `register`).
+    ///
+    /// Freshly allocated prompt blocks are NOT published here: their
+    /// content does not exist until prefill runs, so publication happens
+    /// via [`Self::publish_prefix`] when the engine observes the request's
+    /// prefill completing. (Publishing at registration would let a
+    /// concurrent same-prefix admission take credit for uncomputed work.)
+    pub fn register_with_prefix(
+        &mut self,
+        id: u64,
+        initial_tokens: u32,
+        hashes: &[u64],
+    ) -> Result<u32, KvError> {
         if self.tables.contains_key(&id) {
             return Err(KvError::AlreadyRegistered);
         }
-        let need = self.blocks_for(initial_tokens);
-        if need > self.free_blocks() {
+        let (hits, fresh_need, avail) = self.admit_plan(initial_tokens, hashes);
+        if fresh_need > avail {
             return Err(KvError::OutOfBlocks);
         }
-        let mut blocks = Vec::with_capacity(need as usize);
-        for _ in 0..need {
-            blocks.push(self.free.pop().unwrap());
+        let total_need = hits as usize + fresh_need;
+        let mut blocks = Vec::with_capacity(total_need);
+        for h in &hashes[..hits as usize] {
+            let b = self.by_hash[h];
+            let r = self.refs.get(&b).copied().unwrap_or(0);
+            if r == 0 {
+                // Revive an idle cached block: it is referenced again.
+                self.revive_idle(b);
+            }
+            self.refs.insert(b, r + 1);
+            blocks.push(b);
+        }
+        for _ in hits as usize..total_need {
+            blocks.push(self.take_block().expect("availability checked above"));
         }
         self.tables.insert(id, blocks);
         self.lens.insert(id, initial_tokens);
-        Ok(())
+        Ok(hits)
+    }
+
+    /// Publish a registered request's COMPUTED prompt blocks under their
+    /// content hashes, making them hittable by later admissions. The engine
+    /// calls this when the request's prefill completes; `hashes` must be
+    /// the same block-aligned prompt hashes its admission used
+    /// ([`block_hashes`]). Blocks already hashed (prefix-cache hits) and
+    /// hashes already mapped to another resident block are skipped.
+    /// Returns the number of blocks newly published.
+    pub fn publish_prefix(&mut self, id: u64, hashes: &[u64]) -> u32 {
+        if !self.prefix_enabled {
+            return 0;
+        }
+        let Some(table) = self.tables.get(&id) else {
+            return 0;
+        };
+        let n = hashes.len().min(table.len());
+        let to_publish: Vec<(u32, u64)> = table[..n]
+            .iter()
+            .zip(&hashes[..n])
+            .filter(|&(b, h)| !self.hash_of.contains_key(b) && !self.by_hash.contains_key(h))
+            .map(|(&b, &h)| (b, h))
+            .collect();
+        let published = to_publish.len() as u32;
+        for (b, h) in to_publish {
+            self.by_hash.insert(h, b);
+            self.hash_of.insert(b, h);
+            self.refs.insert(b, 1);
+        }
+        published
+    }
+
+    /// Drop ALL idle cached content (a modeled replica crash destroys its
+    /// HBM): idle blocks return to the free list and forget their hashes.
+    /// Blocks still referenced by live tables are untouched — on the
+    /// failure path every table has already been evicted/extracted, so
+    /// this empties the cache completely.
+    pub fn purge_cache(&mut self) {
+        let blocks: Vec<u32> = self.idle_by_seq.values().copied().collect();
+        self.idle_by_seq.clear();
+        self.idle_seq_of.clear();
+        for b in blocks {
+            if let Some(h) = self.hash_of.remove(&b) {
+                self.by_hash.remove(&h);
+            }
+            self.refs.remove(&b);
+            self.free.push(b);
+        }
+    }
+
+    /// Import foreign blocks into the prefix cache as idle cached content
+    /// (cross-replica migration landing path): each hash gets a resident
+    /// block with refcount zero, ready to be hit by a subsequent admission.
+    /// Hashes already resident are skipped; import stops early when no
+    /// block can be reclaimed. Returns the number of blocks imported.
+    pub fn import_cached(&mut self, hashes: &[u64]) -> u32 {
+        if !self.prefix_enabled {
+            return 0;
+        }
+        let mut imported = 0;
+        for &h in hashes {
+            if self.by_hash.contains_key(&h) {
+                continue;
+            }
+            let Some(b) = self.take_block() else { break };
+            self.by_hash.insert(h, b);
+            self.hash_of.insert(b, h);
+            self.refs.insert(b, 0);
+            self.park_idle(b);
+            imported += 1;
+        }
+        imported
     }
 
     /// Append `tokens` to a request, allocating blocks as needed.
     pub fn append(&mut self, id: u64, tokens: u32) -> Result<(), KvError> {
         let len = *self.lens.get(&id).ok_or(KvError::UnknownRequest)?;
-        let new_len = len + tokens;
+        let new_len = len.saturating_add(tokens);
         let have = self.tables[&id].len() as u32;
         let need = self.blocks_for(new_len);
         if need > have {
             let extra = need - have;
-            if extra > self.free_blocks() {
+            if extra > self.reclaimable_blocks() {
                 return Err(KvError::OutOfBlocks);
             }
-            let table = self.tables.get_mut(&id).unwrap();
+            let mut fresh = Vec::with_capacity(extra as usize);
             for _ in 0..extra {
-                table.push(self.free.pop().unwrap());
+                fresh.push(self.take_block().unwrap());
             }
+            self.tables.get_mut(&id).unwrap().extend(fresh);
         }
         self.lens.insert(id, new_len);
         Ok(())
     }
 
-    /// Release all blocks of a finished request.
+    /// Release all blocks of a finished request. Shared blocks are
+    /// decref'd; a block reaching refcount zero stays resident as idle
+    /// cached content instead of returning to the free list, so the prefix
+    /// survives its last reader. Returns the table size released.
     pub fn release(&mut self, id: u64) -> Result<u32, KvError> {
         let blocks = self.tables.remove(&id).ok_or(KvError::UnknownRequest)?;
         self.lens.remove(&id);
         let n = blocks.len() as u32;
-        self.free.extend(blocks);
+        for b in blocks {
+            match self.refs.get(&b).copied() {
+                Some(r) => {
+                    let r = r.saturating_sub(1);
+                    self.refs.insert(b, r);
+                    if r == 0 {
+                        self.park_idle(b);
+                    }
+                }
+                None => self.free.push(b),
+            }
+        }
         Ok(n)
     }
 
@@ -120,8 +458,11 @@ impl KvCacheManager {
         self.tables.len()
     }
 
-    /// Invariant check used by property tests: no block is double-owned and
-    /// free + owned == total.
+    /// Invariant check used by property tests: every block is exactly one of
+    /// free / idle-cached / table-owned; a shared (hashed, referenced) block
+    /// may appear in several tables but its refcount must equal its owner
+    /// count (refcount conservation); idle blocks carry refcount zero and a
+    /// live hash mapping; `by_hash` and `hash_of` are mutually inverse.
     pub fn check_invariants(&self) -> Result<(), String> {
         let mut seen = vec![false; self.n_blocks as usize];
         for b in &self.free {
@@ -129,13 +470,33 @@ impl KvCacheManager {
                 return Err(format!("block {b} duplicated in free list"));
             }
             seen[*b as usize] = true;
+            if self.refs.contains_key(b) || self.hash_of.contains_key(b) {
+                return Err(format!("free block {b} still hashed/refcounted"));
+            }
         }
+        if self.idle_by_seq.len() != self.idle_seq_of.len() {
+            return Err("idle order/index maps disagree in size".into());
+        }
+        for (seq, b) in &self.idle_by_seq {
+            if self.idle_seq_of.get(b) != Some(seq) {
+                return Err(format!("idle block {b} order/index maps disagree"));
+            }
+            if seen[*b as usize] {
+                return Err(format!("idle block {b} double-accounted"));
+            }
+            seen[*b as usize] = true;
+            if self.refs.get(b).copied() != Some(0) {
+                return Err(format!("idle block {b} has nonzero/missing refcount"));
+            }
+            if !self.hash_of.contains_key(b) {
+                return Err(format!("idle block {b} lost its content hash"));
+            }
+        }
+        // Owner counts over all tables (a shared block appears in several).
+        let mut owners: BTreeMap<u32, u32> = BTreeMap::new();
         for (id, table) in &self.tables {
             for b in table {
-                if seen[*b as usize] {
-                    return Err(format!("block {b} double-owned (req {id})"));
-                }
-                seen[*b as usize] = true;
+                *owners.entry(*b).or_insert(0) += 1;
             }
             let len = self.lens[id];
             if table.len() as u32 != self.blocks_for(len) && len > 0 {
@@ -146,8 +507,38 @@ impl KvCacheManager {
                 ));
             }
         }
+        for (b, count) in &owners {
+            if seen[*b as usize] {
+                return Err(format!("owned block {b} also free/idle"));
+            }
+            seen[*b as usize] = true;
+            match self.refs.get(b) {
+                Some(r) => {
+                    if r != count {
+                        return Err(format!(
+                            "refcount conservation violated: block {b} refcount {r} != {count} owners"
+                        ));
+                    }
+                }
+                None => {
+                    if *count > 1 {
+                        return Err(format!(
+                            "plain block {b} owned by {count} tables without a refcount"
+                        ));
+                    }
+                }
+            }
+        }
+        for (h, b) in &self.by_hash {
+            if self.hash_of.get(b) != Some(h) {
+                return Err(format!("by_hash/hash_of disagree on block {b}"));
+            }
+        }
+        if self.by_hash.len() != self.hash_of.len() {
+            return Err("by_hash/hash_of size mismatch".into());
+        }
         if !seen.iter().all(|&s| s) {
-            return Err("leaked block (neither free nor owned)".into());
+            return Err("leaked block (neither free, idle, nor owned)".into());
         }
         Ok(())
     }
@@ -210,6 +601,19 @@ mod tests {
     }
 
     #[test]
+    fn from_capacity_saturates_instead_of_wrapping() {
+        // A block count beyond u32::MAX used to truncate (`as u32` wrap) to
+        // a tiny pool; it must saturate to u32::MAX.
+        let kv = KvCacheManager::from_capacity(1e30, 1, 1);
+        assert_eq!(kv.n_blocks, u32::MAX);
+        // Degenerate budgets still produce a minimal valid pool.
+        let kv = KvCacheManager::from_capacity(0.0, 1, 16);
+        assert_eq!(kv.n_blocks, 1);
+        let kv = KvCacheManager::from_capacity(f64::NAN, 1, 16);
+        assert_eq!(kv.n_blocks, 1);
+    }
+
+    #[test]
     fn zero_token_register_takes_no_blocks() {
         let mut kv = KvCacheManager::new(4, 16);
         kv.register(1, 0).unwrap();
@@ -217,5 +621,161 @@ mod tests {
         kv.append(1, 1).unwrap();
         assert_eq!(kv.used_blocks(), 1);
         kv.check_invariants().unwrap();
+    }
+
+    // ---- prefix-cache behavior ----
+
+    fn prefixed(id: u64, input: u32, prefix_id: u64, prefix_len: u32) -> Request {
+        Request {
+            id,
+            input_len: input,
+            output_len: 4,
+            prefix_id,
+            prefix_len,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn shared_prefix_blocks_are_refcounted_and_credited() {
+        let mut kv = KvCacheManager::new(64, 16);
+        kv.enable_prefix_cache();
+        let a = prefixed(1, 100, 9, 64); // 4 shared blocks + tail
+        let ha = block_hashes(&a, 16, a.input_len - 1);
+        assert_eq!(kv.register_with_prefix(1, 104, &ha).unwrap(), 0);
+        kv.check_invariants().unwrap();
+        // Until request 1's prefill completes (publish), nothing is
+        // hittable: credit for uncomputed blocks would be a lie.
+        assert_eq!(kv.lookup_prefix(&ha), 0);
+        assert_eq!(kv.publish_prefix(1, &ha), ha.len() as u32);
+        kv.check_invariants().unwrap();
+        // Second request, same prefix: its 4 leading blocks hit.
+        let b = prefixed(2, 80, 9, 64);
+        let hb = block_hashes(&b, 16, b.input_len - 1);
+        let hits = kv.register_with_prefix(2, 84, &hb).unwrap();
+        assert_eq!(hits, 4);
+        kv.check_invariants().unwrap();
+        // The shared blocks are the SAME physical blocks in both tables.
+        let ta = kv.table_of(1).unwrap()[..4].to_vec();
+        let tb = kv.table_of(2).unwrap()[..4].to_vec();
+        assert_eq!(ta, tb);
+        // Releasing one owner keeps the blocks resident for the other.
+        kv.release(1).unwrap();
+        kv.check_invariants().unwrap();
+        assert_eq!(kv.lookup_prefix(&hb[..4]), 4);
+        // Releasing the last owner keeps them as idle cached content.
+        kv.release(2).unwrap();
+        kv.check_invariants().unwrap();
+        assert!(kv.cached_idle_blocks() > 0);
+        assert_eq!(kv.lookup_prefix(&hb[..4]), 4);
+        // A third same-prefix request still hits after both released.
+        let c = prefixed(3, 70, 9, 64);
+        let hc = block_hashes(&c, 16, c.input_len - 1);
+        assert_eq!(kv.register_with_prefix(3, 74, &hc).unwrap(), 4);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn unique_blocks_do_not_cross_requests() {
+        let mut kv = KvCacheManager::new(64, 16);
+        kv.enable_prefix_cache();
+        let a = prefixed(1, 100, 0, 0); // untagged: unique content only
+        let ha = block_hashes(&a, 16, a.input_len - 1);
+        assert_eq!(ha.len(), 6); // floor(99/16)
+        kv.register_with_prefix(1, 104, &ha).unwrap();
+        kv.publish_prefix(1, &ha);
+        kv.release(1).unwrap();
+        // A DIFFERENT request never hits request 1's unique blocks.
+        let b = prefixed(2, 100, 0, 0);
+        let hb = block_hashes(&b, 16, b.input_len - 1);
+        assert_eq!(kv.lookup_prefix(&hb), 0);
+        // But the SAME request id would (the migration landing path).
+        assert_eq!(kv.lookup_prefix(&ha), 6);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn idle_cached_blocks_are_evicted_oldest_first_under_pressure() {
+        let mut kv = KvCacheManager::new(8, 16);
+        kv.enable_prefix_cache();
+        let a = prefixed(1, 64, 5, 64); // 4 blocks, fully shared-prefix
+        let ha = block_hashes(&a, 16, 63); // 3 full blocks hashed (cap -1)
+        kv.register_with_prefix(1, 64, &ha).unwrap();
+        kv.publish_prefix(1, &ha);
+        kv.release(1).unwrap();
+        assert_eq!(kv.cached_idle_blocks(), 3);
+        assert_eq!(kv.free_blocks(), 5);
+        // A fat unrelated registration must reclaim the idle blocks.
+        kv.register(2, 8 * 16).unwrap();
+        assert_eq!(kv.cached_idle_blocks(), 0);
+        assert_eq!(kv.lookup_prefix(&ha), 0, "evicted content forgotten");
+        kv.check_invariants().unwrap();
+        kv.release(2).unwrap();
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn import_cached_lands_foreign_blocks() {
+        let mut kv = KvCacheManager::new(8, 16);
+        kv.enable_prefix_cache();
+        let a = prefixed(7, 64, 0, 0);
+        let ha = block_hashes(&a, 16, 48);
+        assert_eq!(kv.import_cached(&ha), 3);
+        assert_eq!(kv.cached_idle_blocks(), 3);
+        assert_eq!(kv.lookup_prefix(&ha), 3);
+        // Re-import is idempotent.
+        assert_eq!(kv.import_cached(&ha), 0);
+        // And the subsequent registration takes the credit.
+        assert_eq!(kv.register_with_prefix(7, 64, &ha).unwrap(), 3);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn disabled_prefix_cache_is_bit_identical_to_plain_register() {
+        let mut plain = KvCacheManager::new(16, 16);
+        let mut tagged = KvCacheManager::new(16, 16);
+        let a = prefixed(1, 100, 9, 64);
+        let ha = block_hashes(&a, 16, a.input_len - 1);
+        plain.register(1, 104).unwrap();
+        assert_eq!(tagged.register_with_prefix(1, 104, &ha).unwrap(), 0);
+        assert_eq!(plain.table_of(1), tagged.table_of(1));
+        assert_eq!(plain.free_blocks(), tagged.free_blocks());
+        assert_eq!(tagged.publish_prefix(1, &ha), 0, "disabled: no publish");
+        tagged.release(1).unwrap();
+        assert_eq!(tagged.free_blocks(), 16, "no idle retention when disabled");
+        tagged.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn purge_cache_forgets_idle_content() {
+        let mut kv = KvCacheManager::new(16, 16);
+        kv.enable_prefix_cache();
+        let a = prefixed(1, 64, 5, 64);
+        let ha = block_hashes(&a, 16, 63);
+        kv.register_with_prefix(1, 64, &ha).unwrap();
+        kv.publish_prefix(1, &ha);
+        kv.release(1).unwrap();
+        assert_eq!(kv.lookup_prefix(&ha), 3);
+        // A crash destroys the replica's HBM: cached content is gone.
+        kv.purge_cache();
+        assert_eq!(kv.cached_idle_blocks(), 0);
+        assert_eq!(kv.lookup_prefix(&ha), 0);
+        assert_eq!(kv.free_blocks(), 16);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn block_hashes_split_shared_and_unique_regions() {
+        let a = prefixed(1, 100, 9, 40); // shared covers 2 full blocks (32 tok)
+        let b = prefixed(2, 100, 9, 40);
+        let ha = block_hashes(&a, 16, 99);
+        let hb = block_hashes(&b, 16, 99);
+        assert_eq!(ha.len(), 6);
+        assert_eq!(&ha[..2], &hb[..2], "shared-prefix blocks hash equal");
+        assert_ne!(ha[2], hb[2], "post-prefix blocks are request-private");
+        // Untagged requests have no shared region at all.
+        let c = prefixed(3, 100, 0, 40);
+        let hc = block_hashes(&c, 16, 99);
+        assert_ne!(hc[0], ha[0]);
     }
 }

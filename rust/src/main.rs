@@ -16,11 +16,18 @@
 //!       Multi-replica fleet simulation: N engine replicas behind a
 //!       request router, per-replica + fleet-aggregated metrics.
 //!       Control plane: `--drain-at T[:R]`, `--fail-at T[:R]`,
-//!       `--rejoin-at T[:R]` script replica lifecycle; `--autoscale` adds
-//!       replicas under sustained KV backpressure; `--router spill`
-//!       re-routes KV-rejected arrivals; `--window W` reports
-//!       sliding-window SLO attainment from the live event stream;
-//!       `--open-loop --horizon H` streams a Poisson workload.
+//!       `--rejoin-at T[:R]` script replica lifecycle (R validated against
+//!       the fleet size); `--autoscale` adds replicas under sustained KV
+//!       backpressure; `--router spill` re-routes KV-rejected arrivals;
+//!       `--router prefix` routes shared-prefix arrivals to the replica
+//!       holding their cached prefix; `--window W` reports sliding-window
+//!       SLO attainment from the live event stream; `--open-loop
+//!       --horizon H` streams a Poisson workload.
+//!       Memory axis: `--shared-prefix L [--prefix-groups N]` prepends
+//!       L-token shared system prompts to the workload, `--prefix-cache`
+//!       enables vLLM-style automatic prefix caching, `--migrate-kv
+//!       [--migration-gbps B]` migrates resident KV on Fail/Drain instead
+//!       of re-serving from scratch.
 //!   info
 //!       Print model/hardware descriptors and artifact status.
 
@@ -62,7 +69,9 @@ fn usage() {
         "usage: lpserve <report|simulate|sweep|serve|cluster|trace|info> [--flags]\n\
          try: lpserve report all | lpserve simulate --policy layered --rate 1.3\n\
          \x20    | lpserve cluster --replicas 4 --router slo --policies layered,chunked\n\
-         \x20    | lpserve cluster --replicas 4 --open-loop --fail-at 10:1 --autoscale --window 10"
+         \x20    | lpserve cluster --replicas 4 --open-loop --fail-at 10:1 --autoscale --window 10\n\
+         \x20    | lpserve cluster --replicas 4 --router prefix --shared-prefix 1024 \
+         --prefix-cache --fail-at 10:1 --migrate-kv"
     );
 }
 
@@ -122,17 +131,20 @@ fn cmd_simulate_open_loop(args: &Args) {
     let horizon = args.f64("horizon", 60.0);
     let seed = args.u64("seed", 0xA11CE);
     let replicas = args.usize("replicas", 1);
+    let shared_prefix = args.usize("shared-prefix", 0) as u32;
+    let prefix_groups = args.usize("prefix-groups", 1).max(1) as u32;
+    let prefix_cache = args.bool("prefix-cache");
 
     // --requests bounds the stream if given; otherwise the source is
     // open-ended and only the horizon ends it.
-    let source = match args.opt("requests").and_then(|v| v.parse::<usize>().ok()) {
-        Some(n) => {
-            let mut wspec = WorkloadSpec::new(dataset, rate, n);
-            wspec.seed = seed;
-            PoissonSource::new(wspec).with_horizon(horizon)
-        }
-        None => PoissonSource::open_loop(dataset, rate, seed, horizon),
-    };
+    let n_requests = args
+        .opt("requests")
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(usize::MAX);
+    let mut wspec = WorkloadSpec::new(dataset, rate, n_requests)
+        .with_shared_prefix(shared_prefix, prefix_groups);
+    wspec.seed = seed;
+    let source = PoissonSource::new(wspec).with_horizon(horizon);
 
     let report = Session::builder()
         .model(model.clone())
@@ -140,6 +152,7 @@ fn cmd_simulate_open_loop(args: &Args) {
         .replicas(replicas)
         .workload(source)
         .horizon(horizon)
+        .prefix_cache(prefix_cache)
         .run()
         .expect("sim sessions are infallible");
 
@@ -168,6 +181,9 @@ fn cmd_simulate_open_loop(args: &Args) {
     t.row(&["gen throughput (tok/s)".into(), f1(m.gen_throughput())]);
     t.row(&["iterations".into(), m.iterations.to_string()]);
     t.row(&["makespan (s)".into(), f1(m.makespan_s)]);
+    if m.prefix_hit_tokens > 0 {
+        t.row(&["prefix-hit tokens".into(), m.prefix_hit_tokens.to_string()]);
+    }
     t.print();
 }
 
@@ -277,6 +293,28 @@ fn parse_time_replica(s: &str) -> Option<(f64, usize)> {
     }
 }
 
+/// Validate a scripted replica index against the fleet's maximum possible
+/// size. `--drain-at 5:99` on a 2-replica fleet used to be accepted and
+/// silently ignored at run time (the session drops out-of-range actions);
+/// reject it up front with a clear message instead. With `--autoscale` the
+/// fleet may legitimately grow, so the bound is `max-replicas` there —
+/// scripted actions targeting a not-yet-spawned replica stay expressible.
+fn check_replica_in_fleet(
+    flag: &str,
+    value: &str,
+    replica: usize,
+    max_fleet: usize,
+) -> Result<(), String> {
+    if replica >= max_fleet {
+        return Err(format!(
+            "--{flag} {value}: replica {replica} is out of range — this fleet never exceeds \
+             {max_fleet} replicas (valid indices: 0..={})",
+            max_fleet.saturating_sub(1)
+        ));
+    }
+    Ok(())
+}
+
 /// Multi-replica fleet simulation: N replica engines behind a request
 /// router — a `serve::Session` — reporting per-replica and
 /// fleet-aggregated latency/traffic, with an optional control plane
@@ -336,6 +374,13 @@ fn cmd_cluster(args: &Args) {
     // Control plane from flags: a scripted lifecycle controller plus an
     // optional backpressure autoscaler, composed into one ControllerSet.
     let window = args.f64("window", 10.0).max(0.1);
+    let autoscale = args.bool("autoscale");
+    let max_replicas = args.usize("max-replicas", n_replicas * 2).max(n_replicas);
+    // Scripted lifecycle targets are bounded by the largest fleet this run
+    // can ever have: the starting size, or `--max-replicas` under
+    // autoscaling (a script may legitimately target a replica the
+    // autoscaler will add later).
+    let max_fleet = if autoscale { max_replicas } else { n_replicas };
     let mut controller = ControllerSet::new();
     let mut script = DrainController::new();
     let mut have_script = false;
@@ -343,8 +388,12 @@ fn cmd_cluster(args: &Args) {
         let Some(v) = args.opt(flag) else { continue };
         let Some((at, replica)) = parse_time_replica(v) else {
             eprintln!("bad --{flag} '{v}' (want T or T:REPLICA)");
-            return;
+            std::process::exit(2);
         };
+        if let Err(msg) = check_replica_in_fleet(flag, v, replica, max_fleet) {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
         script = match what {
             0 => script.drain_at(at, replica),
             1 => script.fail_at(at, replica),
@@ -355,9 +404,12 @@ fn cmd_cluster(args: &Args) {
     if have_script {
         controller.push(script);
     }
-    if args.bool("autoscale") {
-        let max = args.usize("max-replicas", n_replicas * 2);
-        controller.push(Autoscaler::new(window, args.u64("scale-rejects", 8), max));
+    if autoscale {
+        controller.push(Autoscaler::new(
+            window,
+            args.u64("scale-rejects", 8),
+            max_replicas,
+        ));
     }
     let has_controller = !controller.is_empty();
 
@@ -365,6 +417,14 @@ fn cmd_cluster(args: &Args) {
     let horizon = args.f64("horizon", if open_loop { 60.0 } else { 0.0 });
     let seed = args.u64("seed", 0xA11CE);
     let slo = SloSpec::paper(&model, dataset);
+
+    // Memory-axis knobs: shared-prefix workload shaping, automatic prefix
+    // caching, and Fail/Drain KV migration.
+    let shared_prefix = args.usize("shared-prefix", 0) as u32;
+    let prefix_groups = args.usize("prefix-groups", 1).max(1) as u32;
+    let prefix_cache = args.bool("prefix-cache");
+    let migrate_kv = args.bool("migrate-kv");
+    let migration_gbps = args.f64("migration-gbps", 16.0);
 
     // Observability: streaming sliding-window SLO (computed live from the
     // event stream, no finalization) + a full event log for the loss audit.
@@ -385,21 +445,27 @@ fn cmd_cluster(args: &Args) {
         .replica_specs(specs)
         .router(router)
         .horizon(horizon)
+        .prefix_cache(prefix_cache)
+        .migrate_kv(migrate_kv)
+        .migration_gbps(migration_gbps)
         .sink(&mut fanout);
     if has_controller {
         builder = builder.controller(controller);
     }
     let builder = if open_loop {
-        match args.opt("requests").and_then(|v| v.parse::<usize>().ok()) {
-            Some(nn) => {
-                let mut wspec = WorkloadSpec::new(dataset, rate, nn);
-                wspec.seed = seed;
-                builder.workload(PoissonSource::new(wspec).with_horizon(horizon))
-            }
-            None => builder.workload(PoissonSource::open_loop(dataset, rate, seed, horizon)),
-        }
+        // --requests bounds the stream when given; otherwise only the
+        // horizon ends it.
+        let nn = args
+            .opt("requests")
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(usize::MAX);
+        let mut wspec =
+            WorkloadSpec::new(dataset, rate, nn).with_shared_prefix(shared_prefix, prefix_groups);
+        wspec.seed = seed;
+        builder.workload(PoissonSource::new(wspec).with_horizon(horizon))
     } else {
-        let mut wspec = WorkloadSpec::new(dataset, rate, n);
+        let mut wspec =
+            WorkloadSpec::new(dataset, rate, n).with_shared_prefix(shared_prefix, prefix_groups);
         wspec.seed = seed;
         let trace = WorkloadGen::new(wspec).generate();
         builder.trace(&trace)
@@ -480,6 +546,8 @@ fn cmd_cluster(args: &Args) {
     let downs = log.count(|e| matches!(e, EngineEvent::ReplicaDown { .. }));
     let ups = log.count(|e| matches!(e, EngineEvent::ReplicaUp { .. }));
     let rejects = log.count(|e| matches!(e, EngineEvent::KvRejected { .. }));
+    let prefix_hits = log.count(|e| matches!(e, EngineEvent::PrefixHit { .. }));
+    let migrations = log.count(|e| matches!(e, EngineEvent::KvMigrated { .. }));
     let status = match rep.status {
         SessionStatus::Drained => "drained".to_string(),
         SessionStatus::Halted { pending } => format!("halted ({pending} pending)"),
@@ -490,6 +558,13 @@ fn cmd_cluster(args: &Args) {
         admitted.len(),
         finished.len(),
     );
+    if prefix_cache || migrate_kv || prefix_hits + migrations > 0 {
+        println!(
+            "memory axis: prefix hits {prefix_hits} ({} tokens skipped) | migrations {migrations} \
+             ({} blocks moved)",
+            fm.prefix_hit_tokens, fm.migrated_blocks,
+        );
+    }
     if matches!(rep.status, SessionStatus::Drained) && unfinished > 0 {
         eprintln!("WARNING: {unfinished} admitted requests never finished (lost work)");
     }
@@ -626,4 +701,30 @@ fn cmd_info() {
             "NOT built (run `make artifacts`)".into()
         }
     );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_time_replica_forms() {
+        assert_eq!(parse_time_replica("5"), Some((5.0, 0)));
+        assert_eq!(parse_time_replica("10.5:2"), Some((10.5, 2)));
+        assert_eq!(parse_time_replica(" 3 : 1 "), Some((3.0, 1)));
+        assert_eq!(parse_time_replica("abc"), None);
+        assert_eq!(parse_time_replica("1:x"), None);
+    }
+
+    #[test]
+    fn replica_index_validated_against_fleet_size() {
+        // `--drain-at 5:99` on a 2-replica fleet used to pass silently.
+        assert!(check_replica_in_fleet("drain-at", "5:99", 99, 2).is_err());
+        assert!(check_replica_in_fleet("fail-at", "5:2", 2, 2).is_err());
+        assert!(check_replica_in_fleet("fail-at", "5:1", 1, 2).is_ok());
+        assert!(check_replica_in_fleet("rejoin-at", "5", 0, 1).is_ok());
+        let msg = check_replica_in_fleet("drain-at", "5:99", 99, 2).unwrap_err();
+        assert!(msg.contains("out of range"), "{msg}");
+        assert!(msg.contains("0..=1"), "{msg}");
+    }
 }

@@ -48,6 +48,11 @@ pub struct RunMetrics {
     pub iterations: u64,
     /// (time, cumulative tokens emitted) — global generation timeline.
     pub token_timeline: Vec<(f64, u64)>,
+    /// Prompt tokens whose prefill was skipped via prefix-cache hits
+    /// (`EngineEvent::PrefixHit` credit, summed).
+    pub prefix_hit_tokens: u64,
+    /// KV blocks that landed on this replica via cross-replica migration.
+    pub migrated_blocks: u64,
 }
 
 /// SLO attainment split (paper Fig 4): full = both, plus per-component.

@@ -294,6 +294,7 @@ mod tests {
             arrival_s: t,
             input_len: 100,
             output_len: 3,
+            ..Default::default()
         };
         s.on_event(0, &EngineEvent::Arrived { t_s: t, req });
     }
@@ -390,6 +391,7 @@ mod tests {
                     arrival_s: 0.0,
                     input_len: 100,
                     output_len: 3,
+                    ..Default::default()
                 },
             },
         );

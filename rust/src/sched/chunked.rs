@@ -47,12 +47,22 @@ impl Scheduler for ChunkedPrefill {
         let mut budget = self.cfg.chunk_size;
         let mut prefill = Vec::new();
         for &id in &state.prefilling {
-            if budget == 0 {
-                break;
-            }
             let r = &state.reqs[&id];
             let remaining = r.remaining_prefill();
             if remaining == 0 {
+                // Zero remaining prefill (empty prompt): silently skipping
+                // used to strand the request in Prefilling forever. Emit a
+                // zero-token completing slice — costs nothing, consumes no
+                // budget, and lets the engine emit its first token.
+                prefill.push(PrefillWork {
+                    req: id,
+                    tokens: 0,
+                    pos: r.prefill_done,
+                    completes: true,
+                });
+                continue;
+            }
+            if budget == 0 {
                 continue;
             }
             let take = remaining.min(budget);
@@ -104,7 +114,36 @@ mod tests {
             arrival_s: 0.0,
             input_len: input,
             output_len: output,
+            ..Default::default()
         }
+    }
+
+    #[test]
+    fn zero_length_prompt_gets_completing_slice() {
+        let (mut s, mut st) = setup(512);
+        st.arrive(req(1, 0, 3));
+        let p = s.plan(&mut st).unwrap();
+        let w = p.groups[0].prefill[0];
+        assert_eq!(w.tokens, 0);
+        assert!(w.completes, "empty prompt must complete, not strand");
+    }
+
+    #[test]
+    fn zero_remaining_completes_even_with_budget_exhausted() {
+        // A long prompt eats the whole chunk budget; the empty prompt
+        // behind it must still complete this iteration.
+        let (mut s, mut st) = setup(512);
+        st.arrive(req(1, 4096, 5));
+        st.arrive(req(2, 0, 3));
+        let p = s.plan(&mut st).unwrap();
+        let zero = p.groups[0]
+            .prefill
+            .iter()
+            .find(|w| w.req == 2)
+            .expect("empty prompt scheduled");
+        assert!(zero.completes);
+        let long = p.groups[0].prefill.iter().find(|w| w.req == 1).unwrap();
+        assert_eq!(long.tokens, 512);
     }
 
     #[test]

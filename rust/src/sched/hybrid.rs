@@ -150,7 +150,21 @@ mod tests {
             arrival_s: 0.0,
             input_len: input,
             output_len: 5,
+            ..Default::default()
         }
+    }
+
+    #[test]
+    fn zero_length_prompt_completes_in_one_iteration() {
+        let (mut s, mut st) = setup(4096);
+        st.arrive(req(1, 0));
+        let p = s.plan(&mut st).unwrap();
+        // G(0) = 0 clamps to a single full-stack group (partition_layers).
+        assert_eq!(p.groups.len(), 1);
+        let w = p.groups[0].prefill[0];
+        assert_eq!(w.tokens, 0);
+        assert!(w.completes);
+        assert!(s.active.is_none());
     }
 
     #[test]

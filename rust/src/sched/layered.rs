@@ -22,13 +22,26 @@ use crate::sched::{
 pub struct LayeredPrefill {
     cfg: SchedulerConfig,
     n_layers: u32,
-    /// Active admission cohort (request ids), empty when none in flight.
-    cohort: Vec<u64>,
+    /// Active admission cohort, empty when none in flight. Each member's
+    /// prefill slice (tokens, start position) is captured at admission —
+    /// `tokens` is the REMAINING prefill, which is less than the full
+    /// prompt when the prefix cache credited a cached prefix.
+    cohort: Vec<CohortMember>,
     /// Contiguous layer-group sizes for the active cohort.
     group_sizes: Vec<u32>,
     /// Next group to run prefill (0-based). cohort complete when
     /// cursor == group_sizes.len().
     cursor: usize,
+}
+
+/// One admitted request's slice within the active cohort.
+#[derive(Clone, Copy, Debug)]
+struct CohortMember {
+    id: u64,
+    /// Remaining prompt tokens at admission (post prefix-cache credit).
+    tokens: u32,
+    /// First token position of the slice (== the cached-prefix credit).
+    pos: u32,
 }
 
 impl LayeredPrefill {
@@ -53,11 +66,17 @@ impl LayeredPrefill {
     /// Admit the next cohort: FCFS head, merging further waiting requests
     /// while the combined prompt stays within the per-iteration work target
     /// (so merged admissions still cost about one 512-token chunk per
-    /// iteration) and capacity allows.
+    /// iteration) and capacity allows. The group count G is sized from the
+    /// cohort's REMAINING prefill after prefix-cache credit, so a cohort of
+    /// warm-prefix prompts completes in fewer iterations.
     fn admit_cohort(&mut self, state: &mut EngineState) {
         debug_assert!(!self.cohort_active());
         self.cohort.clear();
-        let mut total_tokens: u32 = 0;
+        // Merge budget is judged on declared prompt lengths (pre-credit):
+        // conservative and independent of cache temperature, so the cohort
+        // shape stays deterministic.
+        let mut merged_declared: u32 = 0;
+        let mut total_remaining: u32 = 0;
         loop {
             let Some(&head) = state.waiting.first() else {
                 break;
@@ -73,18 +92,28 @@ impl LayeredPrefill {
                 }
                 // Merge only while the cohort stays "small" (one group's
                 // worth of work per §4.4's merged-batch rule).
-                if total_tokens + head_len > self.cfg.group_token_target {
+                if merged_declared.saturating_add(head_len) > self.cfg.group_token_target {
                     break;
                 }
             }
             if !state.admit(head) {
                 break;
             }
-            total_tokens += head_len;
-            self.cohort.push(head);
+            let r = &state.reqs[&head];
+            let member = CohortMember {
+                id: head,
+                tokens: r.remaining_prefill(),
+                pos: r.prefill_done,
+            };
+            merged_declared = merged_declared.saturating_add(head_len);
+            total_remaining = total_remaining.saturating_add(member.tokens);
+            self.cohort.push(member);
         }
         if !self.cohort.is_empty() {
-            let g = groups_for_len(total_tokens, self.cfg.group_token_target)
+            // groups_for_len(0) = 0 for an all-cached / empty-prompt cohort;
+            // partition_layers clamps that to one full-stack group so the
+            // zero-work admission still completes through an iteration.
+            let g = groups_for_len(total_remaining, self.cfg.group_token_target)
                 .min(self.n_layers);
             self.group_sizes = partition_layers(self.n_layers, g);
             self.cursor = 0;
@@ -115,13 +144,14 @@ impl Scheduler for LayeredPrefill {
             for (gi, &gsize) in self.group_sizes.iter().enumerate() {
                 let prefill = if gi == self.cursor {
                     // One-group-per-iteration rule (I1): the designated group
-                    // prefills the ENTIRE cohort prompt through its layers.
+                    // prefills the cohort's remaining slice through its
+                    // layers (the full prompt when no prefix was cached).
                     self.cohort
                         .iter()
-                        .map(|&id| PrefillWork {
-                            req: id,
-                            tokens: state.reqs[&id].req.input_len,
-                            pos: 0,
+                        .map(|m| PrefillWork {
+                            req: m.id,
+                            tokens: m.tokens,
+                            pos: m.pos,
                             completes: last,
                         })
                         .collect()
@@ -175,6 +205,7 @@ mod tests {
             arrival_s: 0.0,
             input_len: input,
             output_len: output,
+            ..Default::default()
         }
     }
 
@@ -287,6 +318,56 @@ mod tests {
             .flat_map(|g| g.prefill.iter().map(|w| w.req))
             .collect();
         assert_eq!(ids, vec![2]);
+    }
+
+    #[test]
+    fn prefix_credit_shrinks_cohort_groups_and_slices() {
+        let (mut s, mut st) = setup();
+        st.kv.enable_prefix_cache();
+        let mk = |id: u64| Request {
+            id,
+            input_len: 2048,
+            output_len: 10,
+            prefix_id: 5,
+            prefix_len: 1600, // 100 shared blocks of 16
+            ..Default::default()
+        };
+        // Cold: full 2048-token slice, G = 4.
+        st.arrive(mk(1));
+        let p = s.plan(&mut st).unwrap();
+        assert_eq!(p.groups.len(), 4);
+        let w = p.groups.iter().find_map(|g| g.prefill.first()).unwrap();
+        assert_eq!((w.tokens, w.pos), (2048, 0));
+        // Drain the cohort (3 more iterations).
+        for _ in 0..3 {
+            let _ = s.plan(&mut st).unwrap();
+        }
+        // Emulate the engine observing request 1's prefill completion
+        // (publication is deferred until the content exists).
+        let hashes =
+            crate::kvcache::shared_block_hashes(&st.reqs[&1].req, st.kv.block_size);
+        assert!(st.kv.publish_prefix(1, &hashes) > 0);
+        // Warm: the 1600 shared tokens are credited; the slice is the
+        // 448-token remainder starting at 1600, and G shrinks to 1.
+        st.arrive(mk(2));
+        let p = s.plan(&mut st).unwrap();
+        assert_eq!(p.groups.len(), 1);
+        let w = p.groups.iter().find_map(|g| g.prefill.first()).unwrap();
+        assert_eq!((w.tokens, w.pos), (448, 1600));
+        assert!(w.completes);
+    }
+
+    #[test]
+    fn zero_length_prompt_completes_in_one_iteration() {
+        let (mut s, mut st) = setup();
+        st.arrive(req(1, 0, 3));
+        let p = s.plan(&mut st).unwrap();
+        // G(0) = 0 clamps to a single full-stack group carrying the
+        // completing zero-token slice.
+        assert_eq!(p.groups.len(), 1);
+        let w = p.groups[0].prefill[0];
+        assert_eq!((w.tokens, w.pos), (0, 0));
+        assert!(w.completes);
     }
 
     #[test]

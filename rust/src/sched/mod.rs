@@ -113,12 +113,18 @@ pub fn partition_layers(n_layers: u32, g: u32) -> Vec<u32> {
 }
 
 /// Paper §4.4: number of layer groups for a prompt of length `len`,
-/// targeting per-iteration prefill work comparable to a `target`-token chunk:
-/// G(L) = max(1, ceil(L / target)). An empty prompt (`len == 0`) still
-/// occupies one scheduling slot: G(0) = 1 (its admission completes in a
-/// single no-op iteration rather than never).
+/// targeting per-iteration prefill work comparable to a `target`-token
+/// chunk: G(L) = ceil(L / target) for L > 0.
+///
+/// G(0) = 0 — zero remaining prefill needs ZERO prefill iterations. The
+/// former `max(1)` clamp reported one group for an empty prompt, which made
+/// layer-axis policies plan a zero-token chunk as if it were real work.
+/// Callers that still need a group partition for a zero-work admission
+/// (an empty prompt must complete through SOME iteration so the engine can
+/// emit its first token) rely on [`partition_layers`] clamping `g = 0` to a
+/// single full-stack group.
 pub fn groups_for_len(len: u32, target: u32) -> u32 {
-    (len.div_ceil(target.max(1))).max(1)
+    len.div_ceil(target.max(1))
 }
 
 #[cfg(test)]
@@ -167,12 +173,16 @@ mod tests {
 
     #[test]
     fn groups_for_len_degenerate_inputs() {
-        // G(0) = 1: an empty prompt completes in one scheduling slot.
-        assert_eq!(groups_for_len(0, 512), 1);
-        assert_eq!(groups_for_len(0, 1), 1);
+        // G(0) = 0: no remaining prefill means no prefill iterations — the
+        // former max(1) clamp planned a zero-token chunk for empty prompts.
+        assert_eq!(groups_for_len(0, 512), 0);
+        assert_eq!(groups_for_len(0, 1), 0);
+        assert_eq!(groups_for_len(0, 0), 0);
         // Zero target clamps to per-token grouping instead of dividing by 0.
         assert_eq!(groups_for_len(5, 0), 5);
-        assert_eq!(groups_for_len(0, 0), 1);
+        // And the partition clamp turns a zero-group request into a single
+        // full-stack group, the shape zero-work admissions complete through.
+        assert_eq!(partition_layers(48, groups_for_len(0, 512)), vec![48]);
     }
 
     #[test]

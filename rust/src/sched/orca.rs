@@ -36,13 +36,13 @@ impl Scheduler for ContinuousBatching {
             }
         }
 
-        // Whole-prompt prefill for everything admitted this iteration.
+        // Whole-prompt prefill for everything admitted this iteration. A
+        // request with zero remaining prefill (empty prompt) still gets a
+        // zero-token completing slice — skipping it would strand it in
+        // Prefilling forever.
         let mut prefill = Vec::new();
         for &id in &state.prefilling {
             let r = &state.reqs[&id];
-            if r.remaining_prefill() == 0 {
-                continue;
-            }
             prefill.push(PrefillWork {
                 req: id,
                 tokens: r.remaining_prefill(),
@@ -78,7 +78,22 @@ mod tests {
             arrival_s: 0.0,
             input_len: input,
             output_len: 10,
+            ..Default::default()
         }
+    }
+
+    #[test]
+    fn zero_length_prompt_gets_completing_slice() {
+        let mut s = ContinuousBatching::new(SchedulerConfig::preset(Policy::Orca));
+        let mut st = EngineState::new(
+            ModelDesc::qwen3_30b_a3b(),
+            KvCacheManager::new(10_000, 16),
+            256,
+        );
+        st.arrive(req(1, 0));
+        let p = s.plan(&mut st).unwrap();
+        assert_eq!(p.groups[0].prefill[0].tokens, 0);
+        assert!(p.groups[0].prefill[0].completes);
     }
 
     #[test]

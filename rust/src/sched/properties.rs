@@ -40,8 +40,12 @@ fn random_requests(g: &mut Gen) -> Vec<(u64, Request, usize)> {
             let r = Request {
                 id,
                 arrival_s: 0.0,
-                input_len: g.usize(1, 16_000) as u32,
+                // Degenerate inputs included: empty prompts (input_len 0)
+                // must drain under every policy (zero-token completing
+                // slices), not strand in Prefilling.
+                input_len: g.usize(0, 16_000) as u32,
                 output_len: g.usize(1, 12) as u32,
+                ..Default::default()
             };
             (id, r, g.usize(0, 25))
         })
@@ -269,6 +273,7 @@ fn prop_layered_cohort_group_counts_match_prompt_length() {
             arrival_s: 0.0,
             input_len: len,
             output_len: 1,
+            ..Default::default()
         });
         let plan = policy.plan(&mut state).unwrap();
         let expect = sched::groups_for_len(len, cfg.group_token_target).min(n_layers);

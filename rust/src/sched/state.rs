@@ -72,10 +72,14 @@ impl SimReq {
 /// independent of the serve layer by logging this minimal form.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Admission {
-    /// KV reserved; the request entered prefilling.
-    Admitted { id: u64 },
-    /// KV capacity refused the request's footprint (`demand` blocks needed,
-    /// `free` available) — the admission backpressure signal.
+    /// KV reserved; the request entered prefilling (or, for an adopted
+    /// migration, decoding). `cached_tokens` is the prompt credit taken
+    /// from the prefix cache — that much prefill is skipped (0 when the
+    /// prefix cache is off or cold).
+    Admitted { id: u64, cached_tokens: u32 },
+    /// KV capacity refused the request's footprint (`demand` blocks needed
+    /// beyond any cached-prefix credit, `free` available) — the admission
+    /// backpressure signal.
     KvRejected { id: u64, demand: u32, free: u32 },
 }
 
@@ -122,28 +126,130 @@ impl EngineState {
     /// Admit a waiting request (FCFS position `idx` in waiting) into
     /// prefilling, reserving KV for its full footprint. Returns false if KV
     /// capacity does not allow admission.
+    ///
+    /// With the prefix cache enabled, admission first looks the request's
+    /// block-aligned prompt hashes up: cached blocks are credited — the
+    /// request's `prefill_done` / `token_layers_done` start at the credit,
+    /// so EVERY policy's `remaining_prefill` shrinks — and the KV demand
+    /// drops by the hit count. Credit is capped one token short of the full
+    /// prompt (the last prompt token must be recomputed to produce the
+    /// first output logits, the vLLM rule), so prefill always completes
+    /// through a planned iteration. A migrated request re-entering via
+    /// [`EngineState::adopt_waiting`] keeps its preserved progress instead
+    /// (no cache lookup; the blocks moved with it).
     pub fn admit(&mut self, id: u64) -> bool {
         let Some(pos) = self.waiting.iter().position(|&w| w == id) else {
             return false;
         };
-        let footprint = {
+        let (footprint, hashes, prior_done) = {
             let r = &self.reqs[&id];
-            r.req.input_len + r.req.output_len
+            let fp = r.req.input_len.saturating_add(r.req.output_len);
+            let hashes = if self.kv.prefix_cache_enabled() && r.prefill_done == 0 {
+                crate::kvcache::shared_block_hashes(&r.req, self.kv.block_size)
+            } else {
+                Vec::new()
+            };
+            (fp, hashes, r.prefill_done)
         };
-        if !self.kv.can_admit(footprint) {
-            self.admissions.push(Admission::KvRejected {
-                id,
-                demand: self.kv.blocks_for(footprint),
-                free: self.kv.free_blocks(),
-            });
-            return false;
-        }
-        self.kv.register(id, footprint).expect("can_admit checked");
+        // Single admission walk: register directly and report on failure
+        // (a pre-check would repeat the whole hash/availability scan).
+        let cached_blocks = match self.kv.register_with_prefix(id, footprint, &hashes) {
+            Ok(hits) => hits,
+            Err(_) => {
+                let (hits, avail) = self.kv.admission_outlook(footprint, &hashes);
+                self.admissions.push(Admission::KvRejected {
+                    id,
+                    demand: self.kv.blocks_for(footprint).saturating_sub(hits),
+                    free: avail,
+                });
+                return false;
+            }
+        };
+        let cached_tokens = cached_blocks.saturating_mul(self.kv.block_size);
         self.waiting.remove(pos);
         self.prefilling.push(id);
-        self.reqs.get_mut(&id).unwrap().phase = Phase::Prefilling;
-        self.admissions.push(Admission::Admitted { id });
+        let n_layers = self.model.n_layers as u64;
+        let r = self.reqs.get_mut(&id).unwrap();
+        r.phase = Phase::Prefilling;
+        if cached_tokens > 0 && prior_done == 0 {
+            // Hashes never cover the final prompt token, so the credit is
+            // strictly below input_len and prefill still completes via a
+            // planned (possibly tiny) slice.
+            r.prefill_done = cached_tokens.min(r.req.input_len.saturating_sub(1));
+            r.token_layers_done = r.prefill_done as u64 * n_layers;
+        }
+        self.admissions.push(Admission::Admitted {
+            id,
+            cached_tokens: if prior_done == 0 { r.prefill_done } else { 0 },
+        });
         true
+    }
+
+    /// Re-insert a migrated request into the waiting queue WITH its
+    /// preserved prefill progress (cross-replica KV migration landing path
+    /// for requests still mid-prefill). Admission later re-registers its KV
+    /// reservation and keeps the progress, so only `remaining_prefill` is
+    /// ever recomputed.
+    pub fn adopt_waiting(&mut self, sim: SimReq) {
+        let id = sim.req.id;
+        debug_assert!(!self.reqs.contains_key(&id), "adopting a live id");
+        let mut sim = sim;
+        sim.phase = Phase::Waiting;
+        self.reqs.insert(id, sim);
+        self.waiting.push(id);
+    }
+
+    /// Adopt a migrated request whose prefill is already complete directly
+    /// into the decode set, reserving KV for its full footprint. Returns
+    /// the request back when the pool cannot hold it (caller falls back to
+    /// re-serving from scratch — zero loss, progress dropped).
+    pub fn adopt_decoding(&mut self, sim: SimReq) -> Result<(), SimReq> {
+        let id = sim.req.id;
+        let footprint = sim.req.input_len.saturating_add(sim.req.output_len);
+        if self.reqs.contains_key(&id) || !self.kv.can_admit(footprint) {
+            return Err(sim);
+        }
+        if self.kv.register(id, footprint).is_err() {
+            return Err(sim);
+        }
+        let mut sim = sim;
+        sim.phase = Phase::Decoding;
+        self.reqs.insert(id, sim);
+        self.decoding.push(id);
+        self.admissions.push(Admission::Admitted {
+            id,
+            cached_tokens: 0,
+        });
+        Ok(())
+    }
+
+    /// Migration extraction (replica failure/drain with `--migrate-kv`):
+    /// remove every ADMITTED unfinished request, releasing its KV locally,
+    /// and return the preserved per-request progress plus the block count a
+    /// migration must move (`blocks_for(prefill_done + generated)` — the
+    /// computed KV, not the whole reservation). Token-axis progress is
+    /// rounded DOWN to fully-completed layer stacks so `token_layers_done`
+    /// conservation stays exact on the resumed replica (partial layered-
+    /// cohort progress is discarded, never double-counted).
+    pub fn extract_unfinished(&mut self) -> Vec<(SimReq, u32)> {
+        let n_layers = (self.model.n_layers as u64).max(1);
+        let in_flight: Vec<u64> = std::mem::take(&mut self.prefilling)
+            .into_iter()
+            .chain(std::mem::take(&mut self.decoding))
+            .collect();
+        let mut out = Vec::with_capacity(in_flight.len());
+        for id in in_flight {
+            let _ = self.kv.release(id);
+            if let Some(mut s) = self.reqs.remove(&id) {
+                s.prefill_done = (s.token_layers_done / n_layers) as u32;
+                s.token_layers_done = s.prefill_done as u64 * n_layers;
+                let moved = self
+                    .kv
+                    .blocks_for(s.prefill_done.saturating_add(s.generated));
+                out.push((s, moved));
+            }
+        }
+        out
     }
 
     /// Pull a WAITING request back out (it holds no KV reservation yet) and
@@ -231,6 +337,7 @@ mod tests {
             arrival_s: 0.0,
             input_len: input,
             output_len: output,
+            ..Default::default()
         }
     }
 
@@ -263,7 +370,13 @@ mod tests {
         assert!(s.admit(1));
         assert!(!s.admit(2));
         assert_eq!(s.admissions.len(), 2);
-        assert_eq!(s.admissions[0], Admission::Admitted { id: 1 });
+        assert_eq!(
+            s.admissions[0],
+            Admission::Admitted {
+                id: 1,
+                cached_tokens: 0
+            }
+        );
         match s.admissions[1] {
             Admission::KvRejected { id, demand, free } => {
                 assert_eq!(id, 2);
@@ -271,6 +384,106 @@ mod tests {
             }
             _ => panic!("expected KvRejected"),
         }
+    }
+
+    #[test]
+    fn admit_saturates_on_extreme_footprints() {
+        // input + output near u32::MAX must not overflow (debug panic /
+        // release wrap into a tiny footprint); it saturates and the KV
+        // gate rejects it cleanly.
+        let mut s = state();
+        s.arrive(req(1, u32::MAX, u32::MAX));
+        assert!(!s.admit(1));
+        assert!(matches!(
+            s.admissions[0],
+            Admission::KvRejected { id: 1, .. }
+        ));
+        assert_eq!(s.waiting, vec![1]);
+    }
+
+    #[test]
+    fn prefix_credit_shrinks_remaining_prefill() {
+        let mut s = state();
+        s.kv.enable_prefix_cache();
+        let mk = |id: u64| Request {
+            id,
+            arrival_s: 0.0,
+            input_len: 160,
+            output_len: 8,
+            prefix_id: 7,
+            prefix_len: 96, // 6 blocks of 16 shared
+            ..Default::default()
+        };
+        s.arrive(mk(1));
+        assert!(s.admit(1));
+        // Cold cache: no credit.
+        assert_eq!(s.reqs[&1].prefill_done, 0);
+        // Before request 1's prefill completes, nothing is hittable — the
+        // blocks hold no computed content yet.
+        s.arrive(mk(2));
+        let hashes = crate::kvcache::shared_block_hashes(&s.reqs[&1].req, s.kv.block_size);
+        assert_eq!(hashes.len(), 6, "96 shared tokens = 6 full blocks");
+        assert_eq!(s.kv.lookup_prefix(&hashes), 0);
+        // Emulate the engine observing request 1's prefill completion: the
+        // prompt blocks are published and become hittable.
+        assert!(s.kv.publish_prefix(1, &hashes) > 0);
+        assert!(s.admit(2));
+        // Warm cache: the 6 shared blocks are credited (96 tokens).
+        assert_eq!(s.reqs[&2].prefill_done, 96);
+        assert_eq!(s.reqs[&2].remaining_prefill(), 64);
+        assert_eq!(
+            s.reqs[&2].token_layers_done,
+            96 * s.model.n_layers as u64
+        );
+        match s.admissions[1] {
+            Admission::Admitted { id, cached_tokens } => {
+                assert_eq!((id, cached_tokens), (2, 96));
+            }
+            _ => panic!("expected Admitted"),
+        }
+        s.kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn adopt_preserves_progress_through_admission() {
+        let mut s = state();
+        // A migrated mid-prefill request lands in waiting with progress.
+        let mut sim = SimReq::new(req(9, 200, 10));
+        sim.prefill_done = 80;
+        sim.token_layers_done = 80 * s.model.n_layers as u64;
+        s.adopt_waiting(sim);
+        assert_eq!(s.waiting, vec![9]);
+        assert!(s.admit(9));
+        assert_eq!(s.reqs[&9].prefill_done, 80, "admission keeps progress");
+        assert_eq!(s.reqs[&9].remaining_prefill(), 120);
+        // A migrated fully-prefilled request lands straight in decoding.
+        let mut sim = SimReq::new(req(10, 50, 10));
+        sim.prefill_done = 50;
+        sim.token_layers_done = 50 * s.model.n_layers as u64;
+        sim.generated = 4;
+        sim.first_token_s = Some(1.0);
+        s.adopt_decoding(sim).unwrap();
+        assert_eq!(s.decoding, vec![10]);
+        assert_eq!(s.reqs[&10].generated, 4);
+        assert_eq!(s.reqs[&10].phase, Phase::Decoding);
+    }
+
+    #[test]
+    fn extract_unfinished_rounds_partial_layer_progress_down() {
+        let mut s = state();
+        s.arrive(req(1, 100, 10));
+        assert!(s.admit(1));
+        let l = s.model.n_layers as u64;
+        // Emulate a layered cohort caught mid-stack: 100 tokens through 3
+        // of n_layers layers.
+        s.reqs.get_mut(&1).unwrap().token_layers_done = 300;
+        let out = s.extract_unfinished();
+        assert_eq!(out.len(), 1);
+        let (sim, moved) = &out[0];
+        assert_eq!(sim.prefill_done as u64, 300 / l);
+        assert_eq!(sim.token_layers_done, (300 / l) * l);
+        assert_eq!(*moved, s.kv.blocks_for(sim.prefill_done));
+        assert_eq!(s.kv.used_blocks(), 0, "source KV released");
     }
 
     #[test]

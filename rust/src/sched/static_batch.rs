@@ -50,22 +50,36 @@ impl Scheduler for StaticBatching {
                 self.batch.push(head);
             }
             if self.batch.is_empty() {
-                return None;
+                // No batch to form — but adopted (migrated) decoding
+                // requests live outside any batch and must still decode
+                // every iteration (I3), so fall through to a decode-only
+                // plan instead of stalling them.
+                let decode = state.decode_set();
+                if decode.is_empty() {
+                    return None;
+                }
+                return Some(IterationPlan {
+                    groups: vec![GroupPlan {
+                        n_layers: state.model.n_layers,
+                        prefill: Vec::new(),
+                        decode,
+                    }],
+                });
             }
         }
 
         // Phase 1: prefill every batch member (single big iteration each).
+        // Zero-remaining members (empty prompts) get a zero-token completing
+        // slice rather than being stranded in Prefilling.
         let mut prefill = Vec::new();
         for &id in &state.prefilling {
             let r = &state.reqs[&id];
-            if r.remaining_prefill() > 0 {
-                prefill.push(PrefillWork {
-                    req: id,
-                    tokens: r.remaining_prefill(),
-                    pos: r.prefill_done,
-                    completes: true,
-                });
-            }
+            prefill.push(PrefillWork {
+                req: id,
+                tokens: r.remaining_prefill(),
+                pos: r.prefill_done,
+                completes: true,
+            });
         }
         let decode = state.decode_set();
         if prefill.is_empty() && decode.is_empty() {
@@ -95,7 +109,26 @@ mod tests {
             arrival_s: 0.0,
             input_len: 100,
             output_len: 4,
+            ..Default::default()
         }
+    }
+
+    #[test]
+    fn zero_length_prompt_gets_completing_slice() {
+        let mut cfg = SchedulerConfig::preset(Policy::Static);
+        cfg.static_batch = 2;
+        let mut s = StaticBatching::new(cfg);
+        let mut st = EngineState::new(
+            ModelDesc::qwen3_30b_a3b(),
+            KvCacheManager::new(10_000, 16),
+            256,
+        );
+        let mut r = req(1);
+        r.input_len = 0;
+        st.arrive(r);
+        let p = s.plan(&mut st).unwrap();
+        assert_eq!(p.groups[0].prefill[0].tokens, 0);
+        assert!(p.groups[0].prefill[0].completes);
     }
 
     #[test]

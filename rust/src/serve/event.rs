@@ -36,10 +36,35 @@ pub enum EngineEvent {
     KvRejected {
         t_s: f64,
         id: u64,
-        /// KV blocks the request's full footprint requires.
+        /// KV blocks the request's footprint requires beyond any
+        /// cached-prefix credit.
         demand: u32,
-        /// Free blocks at rejection time.
+        /// Blocks available for allocation at rejection time — the exact
+        /// availability the admission gate checked (free list plus
+        /// reclaimable idle prefix-cache blocks).
         free: u32,
+    },
+    /// Admission found `cached_tokens` of the request's prompt already
+    /// resident in the replica's prefix cache (vLLM-style automatic prefix
+    /// caching): that much prefill is skipped outright. Always paired with
+    /// (and following) the request's `Admitted` event.
+    PrefixHit {
+        t_s: f64,
+        id: u64,
+        /// Prompt tokens credited from cached blocks.
+        cached_tokens: u32,
+    },
+    /// Resident KV of request `id` moved from replica `from` to replica
+    /// `to` (`blocks` KV blocks over the modeled interconnect) on the
+    /// control plane's failure/drain migration path; the request resumes
+    /// from its preserved `prefill_done` instead of re-prefilling from
+    /// scratch.
+    KvMigrated {
+        t_s: f64,
+        id: u64,
+        from: usize,
+        to: usize,
+        blocks: u32,
     },
     /// A request's prefill advanced through `layers` layers this iteration
     /// (`tokens` prompt tokens per layer). Layer-axis policies emit one per
@@ -79,6 +104,8 @@ impl EngineEvent {
             EngineEvent::Arrived { t_s, .. }
             | EngineEvent::Admitted { t_s, .. }
             | EngineEvent::KvRejected { t_s, .. }
+            | EngineEvent::PrefixHit { t_s, .. }
+            | EngineEvent::KvMigrated { t_s, .. }
             | EngineEvent::PrefillGroupDone { t_s, .. }
             | EngineEvent::FirstToken { t_s, .. }
             | EngineEvent::TokenEmitted { t_s, .. }
@@ -96,6 +123,8 @@ impl EngineEvent {
             EngineEvent::Arrived { ref req, .. } => Some(req.id),
             EngineEvent::Admitted { id, .. }
             | EngineEvent::KvRejected { id, .. }
+            | EngineEvent::PrefixHit { id, .. }
+            | EngineEvent::KvMigrated { id, .. }
             | EngineEvent::PrefillGroupDone { id, .. }
             | EngineEvent::FirstToken { id, .. }
             | EngineEvent::TokenEmitted { id, .. }
@@ -195,6 +224,12 @@ mod tests {
             EngineEvent::Halted { t_s: 9.0, pending: 4 }.t_s(),
             9.0
         );
+        let hit = EngineEvent::PrefixHit { t_s: 1.0, id: 8, cached_tokens: 96 };
+        assert_eq!(hit.t_s(), 1.0);
+        assert_eq!(hit.id(), Some(8));
+        let mig = EngineEvent::KvMigrated { t_s: 2.5, id: 9, from: 0, to: 1, blocks: 12 };
+        assert_eq!(mig.t_s(), 2.5);
+        assert_eq!(mig.id(), Some(9));
     }
 
     #[test]

@@ -54,6 +54,25 @@
 //! no new work. Sessions without a controller or spill router take the
 //! exact pre-control code path, preserving bit-identical metrics (locked
 //! by `tests/cluster_equivalence.rs`).
+//!
+//! ## Prefix caching and KV migration
+//!
+//! Two opt-in knobs extend the memory axis (both default off, and off is
+//! bit-identical to the pre-feature engine — locked by
+//! `tests/prefix_migration.rs`):
+//!
+//! * [`SessionBuilder::prefix_cache`] turns on vLLM-style automatic prefix
+//!   caching in every replica's KV manager: block-aligned shared prompt
+//!   prefixes are content-addressed and refcount-shared, and admission
+//!   credits cached blocks so `remaining_prefill` shrinks for every
+//!   scheduling policy ([`EngineEvent::PrefixHit`]).
+//! * [`SessionBuilder::migrate_kv`] re-targets the control plane's
+//!   Fail/Drain path: instead of discarding resident KV and re-serving
+//!   from scratch, unfinished admitted requests migrate to another replica
+//!   WITH their prefill progress (decoding requests keep their generated
+//!   stream), landing after a transfer delay modeled at
+//!   [`SessionBuilder::migration_gbps`] ([`EngineEvent::KvMigrated`]).
+//!   No prompt token·layer is recomputed on the migrated path.
 
 pub mod event;
 
@@ -73,7 +92,7 @@ use crate::config::{HardwareDesc, ModelDesc, Policy, SchedulerConfig};
 use crate::engine::{CoreOptions, CoreStatus, EngineCore, Executor, SimExecutor};
 use crate::metrics::RunMetrics;
 use crate::model::WorkAnalytics;
-use crate::sched::{EngineState, Scheduler};
+use crate::sched::{EngineState, Scheduler, SimReq};
 use crate::simulator::cost::CostModel;
 use crate::simulator::default_engine_state;
 use crate::workload::{Request, Trace};
@@ -138,6 +157,9 @@ pub struct Session<'a> {
     horizon_s: f64,
     record_token_times: bool,
     immediate_arrivals: bool,
+    prefix_cache: bool,
+    migrate_kv: bool,
+    migration_gbps: f64,
 }
 
 /// Builder for [`Session`]; all knobs default to the paper's single-engine
@@ -159,6 +181,9 @@ pub struct SessionBuilder<'a> {
     horizon_s: f64,
     record_token_times: bool,
     immediate_arrivals: bool,
+    prefix_cache: bool,
+    migrate_kv: bool,
+    migration_gbps: f64,
 }
 
 impl<'a> SessionBuilder<'a> {
@@ -179,6 +204,9 @@ impl<'a> SessionBuilder<'a> {
             horizon_s: 0.0,
             record_token_times: false,
             immediate_arrivals: false,
+            prefix_cache: false,
+            migrate_kv: false,
+            migration_gbps: 16.0,
         }
     }
 
@@ -259,6 +287,36 @@ impl<'a> SessionBuilder<'a> {
         self
     }
 
+    /// Enable vLLM-style automatic prefix caching on every replica's KV
+    /// manager: block-aligned shared prompt prefixes are content-addressed,
+    /// refcount-shared between concurrent requests, retained after release,
+    /// and credited at admission (the credit shrinks `remaining_prefill`,
+    /// so every policy prefills less). Off by default — off is bit-identical
+    /// to the pre-feature engine.
+    pub fn prefix_cache(mut self, on: bool) -> Self {
+        self.prefix_cache = on;
+        self
+    }
+
+    /// Migrate resident KV on the control plane's Fail/Drain path instead
+    /// of discarding it: unfinished admitted requests move to another
+    /// replica WITH their prefill progress (and, for decoding requests,
+    /// their generated tokens), arriving after a transfer delay modeled at
+    /// [`SessionBuilder::migration_gbps`]. Off by default — off re-serves
+    /// from scratch exactly as before.
+    pub fn migrate_kv(mut self, on: bool) -> Self {
+        self.migrate_kv = on;
+        self
+    }
+
+    /// Modeled interconnect bandwidth for KV migration, in GB/s (default
+    /// 16 GB/s, a conservative inter-node link). Non-positive values reset
+    /// the default.
+    pub fn migration_gbps(mut self, gbps: f64) -> Self {
+        self.migration_gbps = if gbps > 0.0 { gbps } else { 16.0 };
+        self
+    }
+
     /// Record per-request token timestamps (costs memory).
     pub fn record_token_times(mut self, on: bool) -> Self {
         self.record_token_times = on;
@@ -327,6 +385,9 @@ impl<'a> SessionBuilder<'a> {
             horizon_s: self.horizon_s,
             record_token_times: self.record_token_times,
             immediate_arrivals: self.immediate_arrivals,
+            prefix_cache: self.prefix_cache,
+            migrate_kv: self.migrate_kv,
+            migration_gbps: self.migration_gbps,
         }
     }
 
@@ -431,9 +492,10 @@ fn build_live<'x>(
     states: Option<Vec<EngineState>>,
     factory: &mut ExecutorFactory<'x>,
     core_opts: CoreOptions,
+    prefix_cache: bool,
 ) -> Result<Vec<Live<'x>>> {
     let n = specs.len();
-    let states: Vec<EngineState> = match states {
+    let mut states: Vec<EngineState> = match states {
         Some(v) => {
             assert_eq!(v.len(), n, "engine_states length must match replica count");
             v
@@ -443,6 +505,11 @@ fn build_live<'x>(
             .map(|s| default_engine_state(&s.model, &s.hw, &s.sched))
             .collect(),
     };
+    if prefix_cache {
+        for s in states.iter_mut() {
+            s.kv.enable_prefix_cache();
+        }
+    }
     let mut live = Vec::with_capacity(n);
     for (i, (spec, state)) in specs.iter().zip(states).enumerate() {
         live.push(Live {
@@ -497,6 +564,20 @@ fn finish_report(
     }
 }
 
+/// One migrated request in flight over the interconnect: extracted from a
+/// failing/draining replica, due to land (with preserved progress) at the
+/// first control boundary at or after `ready_s`.
+struct Transit {
+    ready_s: f64,
+    sim: SimReq,
+    /// KV blocks the migration moves (computed prefill + decode KV).
+    blocks: u32,
+    /// Source replica (never re-targeted while alternatives exist).
+    from: usize,
+    /// Source-side TBT reference point for decoding requests.
+    last_emit_s: Option<f64>,
+}
+
 /// Mutable state of a controlled (stepped) session run.
 struct ControlledRun<'a> {
     live: Vec<Live<'a>>,
@@ -511,6 +592,14 @@ struct ControlledRun<'a> {
     assignments: Vec<(u64, usize)>,
     /// Spill retries already spent per request id (cap: replicas − 1).
     spill_counts: BTreeMap<u64, usize>,
+    /// Migrate resident KV on Fail/Drain instead of discarding it.
+    migrate_kv: bool,
+    /// Interconnect bandwidth for migrations, bytes per second.
+    migration_bw: f64,
+    /// Migrations in flight, applied at control boundaries.
+    in_transit: Vec<Transit>,
+    /// Scale-ups must inherit the session's prefix-cache setting.
+    prefix_cache: bool,
 }
 
 impl<'a> ControlledRun<'a> {
@@ -565,9 +654,124 @@ impl<'a> ControlledRun<'a> {
         }
     }
 
-    /// One control boundary at engine time `t`: deliver buffered events to
-    /// the controller, spill-requeue fresh KV rejections, apply actions.
+    /// Pull every ADMITTED unfinished request off replica `r` (progress
+    /// preserved, KV released locally) and put it in transit: each request
+    /// becomes deliverable at `t` + its modeled transfer time (moved blocks
+    /// × block bytes ÷ interconnect bandwidth).
+    fn ship_migrations(&mut self, r: usize, t: f64) {
+        let bytes_per_block = self.live[r].state.kv.block_size as f64
+            * self.live[r].state.model.kv_bytes_per_token as f64;
+        let migrated = self.live[r].state.extract_unfinished();
+        for (sim, blocks) in migrated {
+            let last_emit_s = self.live[r].core.emission_time(sim.req.id);
+            let transfer_s = blocks as f64 * bytes_per_block / self.migration_bw.max(1.0);
+            self.in_transit.push(Transit {
+                ready_s: t + transfer_s,
+                sim,
+                blocks,
+                from: r,
+                last_emit_s,
+            });
+        }
+    }
+
+    /// Land every migration whose transfer completed by `t`: requests with
+    /// finished prefill adopt straight into the destination's decode set
+    /// (KV reserved now); mid-prefill requests adopt into its waiting queue
+    /// with preserved progress (admission re-reserves, keeps the progress).
+    /// If the destination cannot hold an adopted decode, the request falls
+    /// back to a scratch re-serve — zero loss either way.
+    fn deliver_migrations(&mut self, t: f64, sink: &mut Tally<'_>) {
+        if self.in_transit.is_empty() {
+            return;
+        }
+        let mut due: Vec<Transit> = Vec::new();
+        let mut later: Vec<Transit> = Vec::new();
+        for tr in self.in_transit.drain(..) {
+            if tr.ready_s <= t + 1e-12 {
+                due.push(tr);
+            } else {
+                later.push(tr);
+            }
+        }
+        self.in_transit = later;
+        due.sort_by(|a, b| {
+            a.ready_s
+                .partial_cmp(&b.ready_s)
+                .unwrap()
+                .then(a.sim.req.id.cmp(&b.sim.req.id))
+        });
+        for tr in due {
+            let Transit { sim, blocks, from, last_emit_s, .. } = tr;
+            let req = sim.req;
+            let id = req.id;
+            let views = self.views(&sink.kv_rejects);
+            let mut idx = self.router.route(&req, &views) % self.live.len();
+            if idx == from || !self.lifecycle[idx].is_active() {
+                // Never land on `from` (or a down replica) while another
+                // candidate lives; the second fallback (no exclusion)
+                // covers the degenerate case where the draining source is
+                // the only non-down replica left.
+                idx = fallback_target(&views, Some(from))
+                    .or_else(|| fallback_target(&views, None))
+                    .unwrap_or(from);
+            }
+            let fully_prefilled = sim.prefill_done >= req.input_len;
+            // The migrated blocks include any COMPUTED shared-prefix
+            // content; land that in the destination's prefix cache so
+            // OTHER same-prefix arrivals can hit it (the request itself
+            // resumes via its preserved progress, not the cache).
+            let computed_shared = sim
+                .prefill_done
+                .min(req.shared_prefix_tokens())
+                .min(req.input_len.saturating_sub(1));
+            if self.live[idx].state.kv.prefix_cache_enabled() && computed_shared > 0 {
+                let bs = self.live[idx].state.kv.block_size;
+                let hashes = crate::kvcache::block_hashes(&req, bs, computed_shared);
+                let _ = self.live[idx].state.kv.import_cached(&hashes);
+            }
+            if fully_prefilled {
+                match self.live[idx].state.adopt_decoding(sim) {
+                    Ok(()) => {
+                        if let Some(le) = last_emit_s {
+                            self.live[idx].core.seed_emission(id, le);
+                        }
+                        // NO fresh Arrived here: the request is the same
+                        // in-flight stream relocating, and a re-Arrived
+                        // would reset streaming-metrics trackers (TTFT
+                        // would read as never-measured, the first
+                        // post-migration TBT as infinite).
+                    }
+                    Err(sim) => {
+                        // Destination pool full: progress is dropped, the
+                        // request re-serves from scratch (still zero loss).
+                        self.live[idx].core.push(sim.req);
+                        self.assignments.push((id, idx));
+                        continue;
+                    }
+                }
+            } else {
+                // Mid-prefill: the request re-enters a waiting queue like
+                // any arrival (its original arrival stamp rides in `req`,
+                // so TTFT metrics stay anchored to the true arrival).
+                self.live[idx].state.adopt_waiting(sim);
+                sink.on_event(idx, &EngineEvent::Arrived { t_s: t, req });
+            }
+            self.live[idx].core.wake();
+            self.live[idx].core.note_migration(blocks);
+            sink.on_event(
+                idx,
+                &EngineEvent::KvMigrated { t_s: t, id, from, to: idx, blocks },
+            );
+            self.assignments.push((id, idx));
+        }
+    }
+
+    /// One control boundary at engine time `t`: land due migrations,
+    /// deliver buffered events to the controller, spill-requeue fresh KV
+    /// rejections, apply actions.
     fn boundary(&mut self, t: f64, sink: &mut Tally<'_>) -> Result<()> {
+        self.deliver_migrations(t, sink);
         if let Some(c) = self.controller.as_mut() {
             for (rep, ev) in sink.buffer.drain(..) {
                 c.on_event(rep, &ev);
@@ -628,9 +832,31 @@ impl<'a> ControlledRun<'a> {
                 self.lifecycle[r] = ReplicaState::Draining;
                 sink.on_event(r, &EngineEvent::ReplicaDown { t_s: t });
                 // Hand over everything not yet admitted; admitted work
-                // finishes in place.
+                // finishes in place — unless KV migration is on, in which
+                // case admitted work evacuates WITH its progress and the
+                // replica empties immediately (fast drain).
                 let mut handoff = self.live[r].core.take_pending();
                 handoff.extend(self.live[r].state.take_waiting());
+                // Evacuate admitted work only when somewhere else can take
+                // it — with no other non-down replica, migrating would just
+                // bounce the work back onto the draining replica with a
+                // fake transfer delay; finishing in place is the correct
+                // (pre-migration) drain semantics.
+                let others_live = self
+                    .lifecycle
+                    .iter()
+                    .enumerate()
+                    .any(|(i, s)| i != r && !s.is_down());
+                if self.migrate_kv && others_live {
+                    self.ship_migrations(r, t);
+                    // The scheduler held planning state for the migrated
+                    // admissions; rebuild it clean.
+                    let rebuilt = {
+                        let l = &self.live[r];
+                        crate::sched::build(&l.sched_cfg, l.n_layers)
+                    };
+                    self.live[r].sched = rebuilt;
+                }
                 self.reroute(handoff, r, sink);
             }
             ControlAction::Fail { replica: r } => {
@@ -651,7 +877,19 @@ impl<'a> ControlledRun<'a> {
                     sink.on_event(r, &EngineEvent::ReplicaDown { t_s: t });
                 }
                 let mut handoff = self.live[r].core.take_pending();
-                handoff.extend(self.live[r].state.evict_unfinished());
+                if self.migrate_kv {
+                    // Failover with KV migration: admitted requests keep
+                    // their prefill progress (and decode stream) instead of
+                    // re-serving from scratch.
+                    handoff.extend(self.live[r].state.take_waiting());
+                    self.ship_migrations(r, t);
+                } else {
+                    handoff.extend(self.live[r].state.evict_unfinished());
+                }
+                // The crash destroys the replica's HBM: its prefix cache
+                // must not survive into a rejoin and keep crediting
+                // arrivals from pre-crash content.
+                self.live[r].state.kv.purge_cache();
                 // The scheduler held planning state for the evicted
                 // admissions; rebuild it clean for a potential rejoin.
                 let rebuilt = {
@@ -671,12 +909,16 @@ impl<'a> ControlledRun<'a> {
             ControlAction::ScaleUp => {
                 let i = self.live.len();
                 let spec = self.template.clone();
+                let mut state = default_engine_state(&spec.model, &spec.hw, &spec.sched);
+                if self.prefix_cache {
+                    state.kv.enable_prefix_cache();
+                }
                 let mut rep = Live {
                     policy: spec.sched.policy,
                     sched: crate::sched::build(&spec.sched, spec.model.n_layers),
                     sched_cfg: spec.sched.clone(),
                     n_layers: spec.model.n_layers,
-                    state: default_engine_state(&spec.model, &spec.hw, &spec.sched),
+                    state,
                     exec: (self.factory)(i, &spec)?,
                     core: EngineCore::new(self.core_opts).with_replica(i),
                 };
@@ -739,6 +981,7 @@ impl<'a> Session<'a> {
             horizon_s,
             record_token_times,
             immediate_arrivals,
+            prefix_cache,
             ..
         } = self;
         let n = specs.len();
@@ -762,7 +1005,7 @@ impl<'a> Session<'a> {
             record_token_times,
             immediate_arrivals,
         };
-        let mut live = build_live(&specs, states, &mut factory, core_opts)?;
+        let mut live = build_live(&specs, states, &mut factory, core_opts, prefix_cache)?;
 
         // Arrival loop: advance every replica to each arrival instant so
         // the router observes true engine state (iteration-boundary
@@ -832,6 +1075,9 @@ impl<'a> Session<'a> {
             horizon_s,
             record_token_times,
             immediate_arrivals,
+            prefix_cache,
+            migrate_kv,
+            migration_gbps,
         } = self;
         let core_opts = CoreOptions {
             horizon_s,
@@ -847,7 +1093,7 @@ impl<'a> Session<'a> {
         };
         let spill = router.wants_spill();
         let has_controller = controller.is_some();
-        let live = build_live(&specs, states, &mut factory, core_opts)?;
+        let live = build_live(&specs, states, &mut factory, core_opts, prefix_cache)?;
         let n = live.len();
         let mut sink = Tally {
             inner: user_sink,
@@ -869,6 +1115,10 @@ impl<'a> Session<'a> {
             spill,
             assignments: Vec::new(),
             spill_counts: BTreeMap::new(),
+            migrate_kv,
+            migration_bw: migration_gbps * 1e9,
+            in_transit: Vec::new(),
+            prefix_cache,
         };
         let dt = if control_dt > 0.0 { control_dt } else { 0.25 };
         let mut now = 0.0f64;
@@ -894,10 +1144,11 @@ impl<'a> Session<'a> {
         // plain drain path does.
         let mut stalled = 0u32;
         loop {
-            let done = run
-                .live
-                .iter()
-                .all(|r| r.core.halted() || r.unfinished() == 0);
+            let done = run.in_transit.is_empty()
+                && run
+                    .live
+                    .iter()
+                    .all(|r| r.core.halted() || r.unfinished() == 0);
             if done {
                 break;
             }
@@ -911,7 +1162,21 @@ impl<'a> Session<'a> {
             if iters_after == iters_before && run.assignments.len() == assigns_before {
                 stalled += 1;
                 if stalled >= 64 {
-                    break;
+                    // Migrations in transit always land eventually: jump
+                    // the control clock to the earliest landing instead of
+                    // spinning boundaries (or giving up on live work).
+                    let next_landing = run
+                        .in_transit
+                        .iter()
+                        .map(|tr| tr.ready_s)
+                        .min_by(|a, b| a.partial_cmp(b).expect("finite ready times"));
+                    match next_landing {
+                        Some(ready) => {
+                            now = now.max(ready);
+                            stalled = 0;
+                        }
+                        None => break,
+                    }
                 }
             } else {
                 stalled = 0;
@@ -1076,6 +1341,48 @@ mod tests {
             .collect();
         assert!(!late.is_empty());
         assert!(late.iter().all(|&i| i == 1), "late arrivals avoid drained 0");
+    }
+
+    #[test]
+    fn failed_replica_with_migration_loses_nothing() {
+        let trace = sharegpt_trace(16, 4.0, 21);
+        let mut log = EventLog::default();
+        let report = Session::builder()
+            .replicas(2)
+            .trace(&trace)
+            .controller(DrainController::new().fail_at(2.0, 0))
+            .migrate_kv(true)
+            .sink(&mut log)
+            .run()
+            .expect("sim session");
+        assert_eq!(report.status, SessionStatus::Drained);
+        assert_eq!(report.fleet.requests.len(), 16, "zero lost requests");
+        // Work admitted on replica 0 before the failure migrated over.
+        let migrated = log.count(|e| matches!(e, EngineEvent::KvMigrated { .. }));
+        assert!(migrated > 0, "expected at least one migration");
+        assert!(report.fleet.migrated_blocks > 0);
+    }
+
+    #[test]
+    fn prefix_cache_session_credits_shared_prompts() {
+        let mut spec = WorkloadSpec::new(Dataset::ShareGpt, 3.0, 12).with_shared_prefix(1024, 1);
+        spec.seed = 5;
+        let trace = WorkloadGen::new(spec).generate();
+        let mut log = EventLog::default();
+        let report = Session::builder()
+            .policy(Policy::Chunked)
+            .trace(&trace)
+            .prefix_cache(true)
+            .sink(&mut log)
+            .run()
+            .expect("sim session");
+        assert_eq!(report.status, SessionStatus::Drained);
+        assert_eq!(report.fleet.requests.len(), 12);
+        assert!(
+            report.fleet.prefix_hit_tokens > 0,
+            "warm shared prefixes must hit"
+        );
+        assert!(log.count(|e| matches!(e, EngineEvent::PrefixHit { .. })) > 0);
     }
 
     #[test]

@@ -84,6 +84,24 @@ impl DatasetModel {
     }
 }
 
+/// Apply a spec's shared-prefix (system-prompt) model to one sampled
+/// request: the prompt is PREPENDED with a `shared_prefix_len`-token prefix
+/// drawn from one of `prefix_groups` distinct system prompts, assigned
+/// round-robin by request id (no extra RNG draws, so traces with the
+/// feature off are bit-identical to pre-feature traces). Shared by
+/// [`WorkloadGen::generate`] and the streaming
+/// [`PoissonSource`](crate::workload::source::PoissonSource).
+pub fn stamp_shared_prefix(spec: &WorkloadSpec, mut r: Request) -> Request {
+    if spec.shared_prefix_len == 0 {
+        return r;
+    }
+    let groups = spec.prefix_groups.max(1) as u64;
+    r.prefix_id = 1 + r.id % groups;
+    r.prefix_len = spec.shared_prefix_len;
+    r.input_len = r.input_len.saturating_add(spec.shared_prefix_len);
+    r
+}
+
 /// Generator producing a deterministic trace from a `WorkloadSpec`.
 #[derive(Clone, Debug)]
 pub struct WorkloadGen {
@@ -108,12 +126,16 @@ impl WorkloadGen {
                 Dataset::Fixed => (self.spec.fixed_input, self.spec.fixed_output),
                 _ => (model.sample_input(&mut rng), model.sample_output(&mut rng)),
             };
-            reqs.push(Request {
-                id,
-                arrival_s: t,
-                input_len,
-                output_len,
-            });
+            reqs.push(stamp_shared_prefix(
+                &self.spec,
+                Request {
+                    id,
+                    arrival_s: t,
+                    input_len,
+                    output_len,
+                    ..Default::default()
+                },
+            ));
         }
         Trace::new(reqs)
     }
@@ -209,6 +231,28 @@ mod tests {
         s.fixed_output = 33;
         let t = WorkloadGen::new(s).generate();
         assert!(t.requests.iter().all(|r| r.input_len == 777 && r.output_len == 33));
+    }
+
+    #[test]
+    fn shared_prefix_workload_tags_and_extends_prompts() {
+        let base = WorkloadGen::new(spec(Dataset::ShareGpt, 2.0, 20)).generate();
+        let tagged = WorkloadGen::new(
+            spec(Dataset::ShareGpt, 2.0, 20).with_shared_prefix(512, 3),
+        )
+        .generate();
+        for (b, t) in base.requests.iter().zip(&tagged.requests) {
+            assert_eq!(t.input_len, b.input_len + 512, "prefix prepended");
+            assert_eq!(t.output_len, b.output_len, "outputs untouched");
+            assert_eq!(t.arrival_s, b.arrival_s, "arrivals untouched");
+            assert_eq!(t.prefix_id, 1 + t.id % 3);
+            assert_eq!(t.prefix_len, 512);
+        }
+        // Feature off: bit-identical to the untouched generator.
+        let off = WorkloadGen::new(
+            spec(Dataset::ShareGpt, 2.0, 20).with_shared_prefix(0, 3),
+        )
+        .generate();
+        assert_eq!(off.requests, base.requests);
     }
 
     #[test]

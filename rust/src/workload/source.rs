@@ -136,12 +136,16 @@ impl WorkloadSource for PoissonSource {
         }
         let id = self.next_id;
         self.next_id += 1;
-        Some(Request {
-            id,
-            arrival_s: self.t,
-            input_len,
-            output_len,
-        })
+        Some(crate::workload::generator::stamp_shared_prefix(
+            &self.spec,
+            Request {
+                id,
+                arrival_s: self.t,
+                input_len,
+                output_len,
+                ..Default::default()
+            },
+        ))
     }
 
     fn size_hint(&self) -> Option<usize> {
@@ -179,6 +183,16 @@ mod tests {
         let trace = WorkloadGen::new(spec.clone()).generate();
         let out = drain(PoissonSource::new(spec));
         assert_eq!(out, trace.requests);
+    }
+
+    #[test]
+    fn poisson_source_matches_workload_gen_with_shared_prefix() {
+        let mut spec = WorkloadSpec::new(Dataset::ShareGpt, 2.0, 40).with_shared_prefix(256, 4);
+        spec.seed = 13;
+        let trace = WorkloadGen::new(spec.clone()).generate();
+        let out = drain(PoissonSource::new(spec));
+        assert_eq!(out, trace.requests);
+        assert!(out.iter().all(|r| r.prefix_id >= 1 && r.prefix_id <= 4));
     }
 
     #[test]

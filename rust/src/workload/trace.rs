@@ -11,6 +11,39 @@ pub struct Request {
     /// Number of tokens to generate (oracle for simulation; the real server
     /// uses it as max_new_tokens).
     pub output_len: u32,
+    /// Shared-prompt-prefix identity (system-prompt style workloads):
+    /// requests carrying the same non-zero `prefix_id` share their first
+    /// `prefix_len` prompt tokens token-for-token, which is what the
+    /// prefix-aware KV cache and the prefix-affinity router key on.
+    /// 0 = no shared prefix.
+    pub prefix_id: u64,
+    /// Length in tokens of the shared prefix (meaningful only when
+    /// `prefix_id != 0`; effectively clamped to `input_len`).
+    pub prefix_len: u32,
+}
+
+impl Default for Request {
+    fn default() -> Self {
+        Request {
+            id: 0,
+            arrival_s: 0.0,
+            input_len: 0,
+            output_len: 0,
+            prefix_id: 0,
+            prefix_len: 0,
+        }
+    }
+}
+
+impl Request {
+    /// Tokens of this prompt covered by its shared prefix (0 when untagged).
+    pub fn shared_prefix_tokens(&self) -> u32 {
+        if self.prefix_id == 0 {
+            0
+        } else {
+            self.prefix_len.min(self.input_len)
+        }
+    }
 }
 
 /// An ordered-by-arrival batch of requests.
@@ -47,18 +80,22 @@ impl Trace {
         self.requests.last().map(|r| r.arrival_s).unwrap_or(0.0)
     }
 
-    /// Serialize to a simple CSV (id,arrival,input,output) for replay.
+    /// Serialize to a simple CSV for replay
+    /// (id,arrival,input,output,prefix_id,prefix_len).
     pub fn to_csv(&self) -> String {
-        let mut s = String::from("id,arrival_s,input_len,output_len\n");
+        let mut s = String::from("id,arrival_s,input_len,output_len,prefix_id,prefix_len\n");
         for r in &self.requests {
             s.push_str(&format!(
-                "{},{:.6},{},{}\n",
-                r.id, r.arrival_s, r.input_len, r.output_len
+                "{},{:.6},{},{},{},{}\n",
+                r.id, r.arrival_s, r.input_len, r.output_len, r.prefix_id, r.prefix_len
             ));
         }
         s
     }
 
+    /// Parse a trace CSV. Accepts both the 4-field legacy format
+    /// (id,arrival,input,output) and the 6-field format that adds the
+    /// shared-prefix tag (prefix_id,prefix_len).
     pub fn from_csv(text: &str) -> Result<Trace, String> {
         let mut reqs = Vec::new();
         for (i, line) in text.lines().enumerate() {
@@ -66,14 +103,24 @@ impl Trace {
                 continue;
             }
             let parts: Vec<&str> = line.split(',').collect();
-            if parts.len() != 4 {
-                return Err(format!("line {i}: expected 4 fields"));
+            if parts.len() != 4 && parts.len() != 6 {
+                return Err(format!("line {i}: expected 4 or 6 fields"));
             }
+            let (prefix_id, prefix_len) = if parts.len() == 6 {
+                (
+                    parts[4].parse().map_err(|e| format!("line {i}: {e}"))?,
+                    parts[5].parse().map_err(|e| format!("line {i}: {e}"))?,
+                )
+            } else {
+                (0, 0)
+            };
             reqs.push(Request {
                 id: parts[0].parse().map_err(|e| format!("line {i}: {e}"))?,
                 arrival_s: parts[1].parse().map_err(|e| format!("line {i}: {e}"))?,
                 input_len: parts[2].parse().map_err(|e| format!("line {i}: {e}"))?,
                 output_len: parts[3].parse().map_err(|e| format!("line {i}: {e}"))?,
+                prefix_id,
+                prefix_len,
             });
         }
         Ok(Trace::new(reqs))
@@ -90,6 +137,7 @@ mod tests {
             arrival_s: t,
             input_len: 10,
             output_len: 5,
+            ..Default::default()
         }
     }
 
@@ -112,6 +160,34 @@ mod tests {
     fn csv_rejects_malformed() {
         assert!(Trace::from_csv("id,arrival_s,input_len,output_len\n1,2\n").is_err());
         assert!(Trace::from_csv("id,arrival_s,input_len,output_len\nx,0,1,1\n").is_err());
+    }
+
+    #[test]
+    fn csv_reads_legacy_four_field_format() {
+        let t = Trace::from_csv("id,arrival_s,input_len,output_len\n7,1.5,100,10\n").unwrap();
+        assert_eq!(t.requests.len(), 1);
+        assert_eq!(t.requests[0].id, 7);
+        assert_eq!(t.requests[0].prefix_id, 0);
+        assert_eq!(t.requests[0].shared_prefix_tokens(), 0);
+    }
+
+    #[test]
+    fn csv_roundtrips_prefix_tags() {
+        let mut r = req(1, 0.5);
+        r.prefix_id = 42;
+        r.prefix_len = 8;
+        let t = Trace::new(vec![r]);
+        let t2 = Trace::from_csv(&t.to_csv()).unwrap();
+        assert_eq!(t.requests, t2.requests);
+        assert_eq!(t2.requests[0].shared_prefix_tokens(), 8);
+    }
+
+    #[test]
+    fn shared_prefix_tokens_clamps_to_input() {
+        let mut r = req(1, 0.0); // input_len 10
+        r.prefix_id = 3;
+        r.prefix_len = 100;
+        assert_eq!(r.shared_prefix_tokens(), 10);
     }
 
     #[test]

@@ -7,8 +7,8 @@
 //! ShareGPT-style traces.
 
 use layered_prefill::cluster::{
-    AdaptiveSpill, Cluster, LeastOutstandingKv, ReplicaSpec, ReplicaState, ReplicaView,
-    RoundRobin, Router, SloAware,
+    AdaptiveSpill, Cluster, LeastOutstandingKv, PrefixAffinity, ReplicaSpec, ReplicaState,
+    ReplicaView, RoundRobin, Router, SloAware,
 };
 use layered_prefill::config::{
     Dataset, HardwareDesc, ModelDesc, Policy, SchedulerConfig, WorkloadSpec,
@@ -246,6 +246,7 @@ fn all_routers() -> Vec<Box<dyn Router>> {
         Box::new(LeastOutstandingKv::new()),
         Box::new(SloAware::new(2048)),
         Box::new(AdaptiveSpill::new()),
+        Box::new(PrefixAffinity::new()),
     ]
 }
 
@@ -275,6 +276,9 @@ fn random_req(g: &mut Gen) -> Request {
         arrival_s: 0.0,
         input_len: g.usize(0, 20_000) as u32,
         output_len: 8,
+        // Exercise the prefix-affinity path on some draws.
+        prefix_id: g.usize(0, 2) as u64,
+        prefix_len: 128,
     }
 }
 

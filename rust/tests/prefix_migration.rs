@@ -1,0 +1,464 @@
+//! Locks for the prefix-cache + KV-migration subsystem.
+//!
+//! * Feature-off golden: a prefix-tagged trace with `prefix_cache(false)` /
+//!   `migrate_kv(false)` is bit-identical to the same-lengths untagged
+//!   trace on the pre-feature path.
+//! * Prefix caching: warm shared prefixes are credited, shrink prefill
+//!   work, and respect token·layer conservation (computed + credited ==
+//!   input × layers, per request).
+//! * Failure with migration: re-served requests resume from `prefill_done`
+//!   — NO prompt token·layer is computed twice (event-level conservation)
+//!   — with zero lost requests; the no-migration baseline recomputes.
+//! * Degenerate inputs: zero-length prompts finish under every policy.
+//! * `AdaptiveSpill` retry-memory eviction never drops the in-flight
+//!   request's exclusion set mid-decision (property test).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use layered_prefill::cluster::{
+    AdaptiveSpill, DrainController, PrefixAffinity, ReplicaState, ReplicaView, Router,
+};
+use layered_prefill::config::{Dataset, ModelDesc, Policy, WorkloadSpec};
+use layered_prefill::prop_assert;
+use layered_prefill::serve::{EngineEvent, EventLog, Session, SessionStatus};
+use layered_prefill::util::proptest::check;
+use layered_prefill::workload::{Request, Trace, WorkloadGen};
+
+fn n_layers() -> u64 {
+    ModelDesc::qwen3_30b_a3b().n_layers as u64
+}
+
+/// Σ tokens×layers over every PrefillGroupDone for `id`, fleet-wide.
+fn prefill_token_layers(log: &EventLog, id: u64) -> u64 {
+    log.events
+        .iter()
+        .map(|(_, e)| match e {
+            EngineEvent::PrefillGroupDone {
+                id: i,
+                layers,
+                tokens,
+                ..
+            } if *i == id => *tokens as u64 * *layers as u64,
+            _ => 0,
+        })
+        .sum()
+}
+
+/// Σ cached_tokens over every PrefixHit for `id`.
+fn credited_tokens(log: &EventLog, id: u64) -> u64 {
+    log.events
+        .iter()
+        .map(|(_, e)| match e {
+            EngineEvent::PrefixHit {
+                id: i,
+                cached_tokens,
+                ..
+            } if *i == id => *cached_tokens as u64,
+            _ => 0,
+        })
+        .sum()
+}
+
+fn shared_prefix_trace(n: usize, rate: f64, seed: u64, prefix: u32, groups: u32) -> Trace {
+    let mut spec = WorkloadSpec::new(Dataset::ShareGpt, rate, n).with_shared_prefix(prefix, groups);
+    spec.seed = seed;
+    WorkloadGen::new(spec).generate()
+}
+
+// ---------------------------------------------------------------- golden
+
+#[test]
+fn features_off_are_bit_identical_to_untagged_runs() {
+    // Same arrival times and lengths; one trace carries prefix tags, the
+    // other does not. With both features OFF the tags must be inert: every
+    // per-request timing is bit-identical.
+    let tagged = shared_prefix_trace(14, 3.0, 0xBEEF, 768, 2);
+    let mut untagged = tagged.clone();
+    for r in &mut untagged.requests {
+        r.prefix_id = 0;
+        r.prefix_len = 0;
+    }
+    for policy in [Policy::Layered, Policy::Chunked, Policy::Hybrid] {
+        let run = |trace: &Trace| {
+            Session::builder()
+                .policy(policy)
+                .replicas(2)
+                .trace(trace)
+                .prefix_cache(false)
+                .migrate_kv(false)
+                .run()
+                .expect("sim session")
+        };
+        let a = run(&tagged);
+        let b = run(&untagged);
+        assert_eq!(a.fleet.requests.len(), b.fleet.requests.len(), "{policy:?}");
+        assert_eq!(a.fleet.iterations, b.fleet.iterations, "{policy:?}");
+        assert_eq!(a.fleet.prefix_hit_tokens, 0, "{policy:?}");
+        assert_eq!(a.fleet.migrated_blocks, 0, "{policy:?}");
+        for (x, y) in a.fleet.requests.iter().zip(&b.fleet.requests) {
+            assert_eq!(x.id, y.id, "{policy:?}");
+            assert_eq!(x.ttft_s, y.ttft_s, "{policy:?} req {} ttft", x.id);
+            assert_eq!(x.finish_s, y.finish_s, "{policy:?} req {} finish", x.id);
+            assert_eq!(x.tbts_s, y.tbts_s, "{policy:?} req {} tbts", x.id);
+        }
+        assert_eq!(a.fleet.makespan_s, b.fleet.makespan_s, "{policy:?}");
+        assert_eq!(a.fleet.busy_s, b.fleet.busy_s, "{policy:?}");
+    }
+}
+
+// ---------------------------------------------------- prefix-cache credit
+
+#[test]
+fn warm_prefixes_shrink_prefill_work_with_exact_conservation() {
+    let trace = shared_prefix_trace(16, 3.0, 7, 2048, 1);
+    let l = n_layers();
+    for policy in [Policy::Layered, Policy::Chunked] {
+        let run = |on: bool| {
+            let mut log = EventLog::default();
+            let report = Session::builder()
+                .policy(policy)
+                .trace(&trace)
+                .prefix_cache(on)
+                .sink(&mut log)
+                .run()
+                .expect("sim session");
+            (report, log)
+        };
+        let (off, off_log) = run(false);
+        let (on, on_log) = run(true);
+        assert_eq!(off.status, SessionStatus::Drained, "{policy:?}");
+        assert_eq!(on.status, SessionStatus::Drained, "{policy:?}");
+        assert_eq!(on.fleet.requests.len(), 16, "{policy:?}");
+        assert!(on.fleet.prefix_hit_tokens > 0, "{policy:?}: no hits");
+
+        for r in &trace.requests {
+            let want = r.input_len as u64 * l;
+            // Off: the full prompt is prefilled, exactly once.
+            assert_eq!(
+                prefill_token_layers(&off_log, r.id),
+                want,
+                "{policy:?} req {} off-run conservation",
+                r.id
+            );
+            // On: computed + credited covers the prompt exactly once — no
+            // token·layer is computed twice NOR dropped.
+            let computed = prefill_token_layers(&on_log, r.id);
+            let credited = credited_tokens(&on_log, r.id) * l;
+            assert_eq!(
+                computed + credited,
+                want,
+                "{policy:?} req {} on-run conservation",
+                r.id
+            );
+            assert!(computed <= want, "{policy:?} req {} over-computed", r.id);
+        }
+        // Skipped prefill is real saved work: the engine is busy for less
+        // total time and moves fewer bytes.
+        assert!(
+            on.fleet.busy_s < off.fleet.busy_s,
+            "{policy:?}: busy {} !< {}",
+            on.fleet.busy_s,
+            off.fleet.busy_s
+        );
+        assert!(
+            on.fleet.traffic.expert_bytes < off.fleet.traffic.expert_bytes,
+            "{policy:?}: expert bytes not reduced"
+        );
+    }
+}
+
+// ------------------------------------------------- failure with migration
+
+#[test]
+fn failure_with_migration_resumes_without_recompute() {
+    // Chunked prefill keeps token-axis progress exact at chunk boundaries,
+    // so migrated requests resume with ZERO recomputed token·layers.
+    let mut spec = WorkloadSpec::new(Dataset::Fixed, 4.0, 12);
+    spec.seed = 2;
+    spec.fixed_input = 4096;
+    spec.fixed_output = 64;
+    let trace = WorkloadGen::new(spec).generate();
+    let l = n_layers();
+
+    let run = |migrate: bool| {
+        let mut log = EventLog::default();
+        let report = Session::builder()
+            .policy(Policy::Chunked)
+            .replicas(2)
+            .trace(&trace)
+            .controller(DrainController::new().fail_at(2.5, 0))
+            .migrate_kv(migrate)
+            .sink(&mut log)
+            .run()
+            .expect("sim session");
+        (report, log)
+    };
+    let (with, with_log) = run(true);
+    let (without, without_log) = run(false);
+
+    // Zero lost requests either way.
+    assert_eq!(with.status, SessionStatus::Drained);
+    assert_eq!(with.fleet.requests.len(), 12, "migration lost requests");
+    assert_eq!(without.fleet.requests.len(), 12);
+
+    // The failure actually displaced admitted work.
+    let migrations = with_log.count(|e| matches!(e, EngineEvent::KvMigrated { .. }));
+    assert!(migrations > 0, "scenario produced no migrations");
+    assert!(with.fleet.migrated_blocks > 0);
+
+    // Conservation: with migration, every request's prompt is prefilled
+    // exactly once across the whole fleet — no token·layer computed twice.
+    let mut total_with = 0u64;
+    let mut total_without = 0u64;
+    for r in &trace.requests {
+        let want = r.input_len as u64 * l;
+        let w = prefill_token_layers(&with_log, r.id);
+        assert_eq!(w, want, "req {} recomputed prefill under migration", r.id);
+        total_with += w;
+        total_without += prefill_token_layers(&without_log, r.id);
+    }
+    // The no-migration baseline re-served from scratch: strictly more
+    // prefill work happened.
+    assert!(
+        total_without > total_with,
+        "baseline should recompute ({total_without} !> {total_with})"
+    );
+}
+
+#[test]
+fn drain_with_migration_evacuates_and_finishes_everything() {
+    let mut spec = WorkloadSpec::new(Dataset::Fixed, 4.0, 10);
+    spec.seed = 6;
+    spec.fixed_input = 4096;
+    spec.fixed_output = 64;
+    let trace = WorkloadGen::new(spec).generate();
+    let mut log = EventLog::default();
+    let report = Session::builder()
+        .policy(Policy::Chunked)
+        .replicas(2)
+        .trace(&trace)
+        .controller(DrainController::new().drain_at(2.0, 0))
+        .migrate_kv(true)
+        .sink(&mut log)
+        .run()
+        .expect("sim session");
+    assert_eq!(report.status, SessionStatus::Drained);
+    assert_eq!(report.fleet.requests.len(), 10);
+    assert!(
+        log.count(|e| matches!(e, EngineEvent::KvMigrated { .. })) > 0,
+        "drain should evacuate admitted work"
+    );
+    // After the drain, the drained replica serves nothing new: every
+    // Finished past the drain instant belongs to replica 1.
+    for (rep, e) in &log.events {
+        if let EngineEvent::Finished { t_s, .. } = e {
+            if *t_s > 2.0 + 0.5 {
+                assert_eq!(*rep, 1, "drained replica finished late work");
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------ degenerate inputs
+
+#[test]
+fn zero_length_prompts_finish_under_every_policy() {
+    let reqs = vec![
+        Request {
+            id: 0,
+            arrival_s: 0.0,
+            input_len: 0,
+            output_len: 4,
+            ..Default::default()
+        },
+        Request {
+            id: 1,
+            arrival_s: 0.1,
+            input_len: 100,
+            output_len: 4,
+            ..Default::default()
+        },
+        Request {
+            id: 2,
+            arrival_s: 0.2,
+            input_len: 0,
+            output_len: 1,
+            ..Default::default()
+        },
+    ];
+    let trace = Trace::new(reqs);
+    for policy in [
+        Policy::Static,
+        Policy::Orca,
+        Policy::Chunked,
+        Policy::Layered,
+        Policy::Hybrid,
+    ] {
+        let mut log = EventLog::default();
+        let report = Session::builder()
+            .policy(policy)
+            .trace(&trace)
+            .sink(&mut log)
+            .run()
+            .expect("sim session");
+        assert_eq!(report.status, SessionStatus::Drained, "{policy:?}");
+        assert_eq!(
+            report.fleet.requests.len(),
+            3,
+            "{policy:?} stranded a degenerate request"
+        );
+        for id in 0..3u64 {
+            let first = log
+                .for_request(id)
+                .iter()
+                .filter(|e| matches!(e, EngineEvent::FirstToken { .. }))
+                .count();
+            assert_eq!(first, 1, "{policy:?} req {id} first-token");
+        }
+    }
+}
+
+// --------------------------------------- spill retry-memory eviction bound
+
+fn spill_view(id: usize, load: u64) -> ReplicaView {
+    ReplicaView {
+        id,
+        policy: Policy::Layered,
+        state: ReplicaState::Active,
+        queued: 0,
+        active: 0,
+        queued_kv_tokens: load,
+        kv_used_blocks: 0,
+        kv_block_size: 16,
+        kv_free_blocks: 100,
+        kv_rejects: 0,
+        now_s: 0.0,
+    }
+}
+
+fn spill_req(id: u64) -> Request {
+    Request {
+        id,
+        arrival_s: 0.0,
+        input_len: 1000,
+        output_len: 10,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn prop_spill_eviction_never_drops_inflight_exclusions() {
+    check("spill eviction preserves the in-flight exclusion set", 6, |g| {
+        let n = g.usize(2, 4);
+        let views: Vec<ReplicaView> = (0..n)
+            .map(|i| spill_view(i, (i as u64) * 100 + g.usize(0, 50) as u64))
+            .collect();
+        let mut r = AdaptiveSpill::new();
+        // Fill the retry memory to exactly its cap with ids larger than the
+        // probe's (each routed once; entries are retained because n >= 2,
+        // and no eviction fires while the map is AT the cap).
+        for id in 1..=AdaptiveSpill::MEMORY_CAP as u64 {
+            let _ = r.route(&spill_req(id), &views);
+        }
+        // Route the probe — the SMALLEST id in the map. Creating its entry
+        // pushes the map over the cap and triggers an eviction MID-DECISION;
+        // the stale-entry heuristic ("evict the smallest id") would pick the
+        // probe itself, dropping the exclusion set it just started.
+        let probe = spill_req(0);
+        let first = r.route(&probe, &views);
+        // The probe is KV-rejected and re-offered: its exclusion set must
+        // have survived the eviction, so the retry lands on a replica it
+        // has NOT tried yet.
+        let second = r.route(&probe, &views);
+        prop_assert!(
+            second != first,
+            "retry bounced back to replica {first}: in-flight exclusion set evicted (n={n})"
+        );
+        Ok(())
+    });
+}
+
+// ------------------------------------------------- prefix-affinity routing
+
+#[test]
+fn prefix_affinity_router_keeps_prefix_groups_together() {
+    let trace = shared_prefix_trace(24, 6.0, 3, 1024, 2);
+    let report = Session::builder()
+        .replicas(3)
+        .router(Box::new(PrefixAffinity::new()))
+        .trace(&trace)
+        .prefix_cache(true)
+        .run()
+        .expect("sim session");
+    assert_eq!(report.fleet.requests.len(), 24);
+    // Every request of a prefix group landed on ONE replica (its home).
+    let mut homes: BTreeMap<u64, BTreeSet<usize>> = BTreeMap::new();
+    for (id, idx) in &report.assignments {
+        let pid = trace
+            .requests
+            .iter()
+            .find(|r| r.id == *id)
+            .expect("routed id in trace")
+            .prefix_id;
+        homes.entry(pid).or_default().insert(*idx);
+    }
+    assert_eq!(homes.len(), 2);
+    for (pid, replicas) in &homes {
+        assert_eq!(replicas.len(), 1, "prefix {pid} scattered: {replicas:?}");
+    }
+    // Affinity makes the cache hit: all but each group's first request
+    // take prefix credit.
+    assert!(report.fleet.prefix_hit_tokens > 0);
+}
+
+// ------------------------------------------------------- property: sharing
+
+#[test]
+fn prop_kvcache_sharing_preserves_refcount_conservation() {
+    use layered_prefill::kvcache::{block_hashes, KvCacheManager};
+    check("kv sharing refcount conservation", 40, |g| {
+        let mut kv = KvCacheManager::new(g.usize(32, 256) as u32, 16);
+        kv.enable_prefix_cache();
+        let n = g.usize(2, 12);
+        let mut live: Vec<u64> = Vec::new();
+        for id in 0..n as u64 {
+            let prefix_id = g.usize(0, 2) as u64;
+            let input = g.usize(1, 1200) as u32;
+            let req = Request {
+                id,
+                input_len: input,
+                output_len: 16,
+                prefix_id,
+                prefix_len: 256,
+                ..Default::default()
+            };
+            let hashes = block_hashes(&req, 16, input.saturating_sub(1));
+            let total = input.saturating_add(16);
+            if kv.can_admit_with_prefix(total, &hashes) {
+                let hits = kv
+                    .register_with_prefix(id, total, &hashes)
+                    .expect("checked admission");
+                prop_assert!(hits as usize <= hashes.len());
+                // Emulate prefill completing (sometimes): only then is the
+                // content published and shareable.
+                if g.bool() {
+                    kv.publish_prefix(id, &hashes);
+                }
+                live.push(id);
+            }
+            kv.check_invariants().map_err(|e| format!("after register {id}: {e}"))?;
+            // Randomly release one live request.
+            if !live.is_empty() && g.bool() {
+                let victim = live.remove(g.usize(0, live.len() - 1));
+                kv.release(victim).expect("live release");
+                kv.check_invariants()
+                    .map_err(|e| format!("after release {victim}: {e}"))?;
+            }
+        }
+        for id in live {
+            kv.release(id).expect("final release");
+        }
+        kv.check_invariants().map_err(|e| format!("after drain: {e}"))?;
+        Ok(())
+    });
+}

@@ -25,6 +25,7 @@ fn random_trace(g: &mut Gen, n_max: usize) -> Trace {
             arrival_s: t,
             input_len: g.usize(1, 12_000) as u32,
             output_len: g.usize(1, 300) as u32,
+            ..Default::default()
         });
     }
     Trace::new(reqs)
@@ -96,6 +97,7 @@ fn prop_layered_invariants() {
                 arrival_s: 0.0,
                 input_len: g.usize(1, 20_000) as u32,
                 output_len: 5,
+                ..Default::default()
             });
         }
 

@@ -19,6 +19,7 @@ fn trace_batch(lens: &[(u32, u32)]) -> Trace {
                 arrival_s: 0.0,
                 input_len: input,
                 output_len: output,
+                ..Default::default()
             })
             .collect(),
     )
@@ -87,6 +88,7 @@ fn outputs_match_isolated_generation() {
             arrival_s: 0.0,
             input_len: input,
             output_len: output,
+            ..Default::default()
         }]);
         let solo = serve(&engine, Policy::Chunked, &solo_trace);
         assert_eq!(
@@ -106,8 +108,8 @@ fn realtime_mode_measures_queueing() {
     let engine = RuntimeEngine::load(&artifacts_dir()).expect("engine");
     // Two requests 300ms apart: the second's TTFT clock starts at arrival.
     let trace = Trace::new(vec![
-        Request { id: 0, arrival_s: 0.0, input_len: 60, output_len: 4 },
-        Request { id: 1, arrival_s: 0.3, input_len: 60, output_len: 4 },
+        Request { id: 0, arrival_s: 0.0, input_len: 60, output_len: 4, ..Default::default() },
+        Request { id: 1, arrival_s: 0.3, input_len: 60, output_len: 4, ..Default::default() },
     ]);
     let opts = ServeOptions {
         policy: Policy::Layered,
