@@ -1,0 +1,122 @@
+//! Adaptive policy demo: the scheduling axis chosen PER ADMISSION COHORT.
+//!
+//! A mixed workload — short chat-style prompts interleaved with long
+//! summarization prompts — puts the two pure policies in tension:
+//!
+//! * pure CHUNKED is great on the shorts (one chunk, immediate TTFT) but
+//!   pays the paper's §3 expert-reload amplification on every long prompt
+//!   (ceil(L/512) full-stack passes);
+//! * pure LAYERED eliminates the reloads on the longs but makes shorts
+//!   ride the cohort cadence.
+//!
+//! The `adaptive` PolicySpec (Policy API v2) measures each cohort — its
+//! remaining prefill, the modeled token- vs layer-axis expert bytes, the
+//! sliding-window TBT — and picks the axis per cohort: shorts go token-
+//! axis, longs go layer-axis. The same run is also expressible from the
+//! CLI: `lpserve simulate --policy-spec adaptive`.
+//!
+//! Run: cargo run --release --example adaptive_policy
+
+use layered_prefill::config::{Dataset, ModelDesc, WorkloadSpec};
+use layered_prefill::metrics::RunMetrics;
+use layered_prefill::sched::PolicySpec;
+use layered_prefill::serve::{EngineEvent, EventLog, Session};
+use layered_prefill::util::table::{f1, f2, Table};
+use layered_prefill::workload::{Trace, WorkloadGen};
+
+/// Mixed workload: short chat prompts + long documents, one Poisson
+/// stream each, merged into a single arrival-ordered trace.
+fn mixed_trace(n_each: usize, rate_each: f64) -> Trace {
+    let mut short_spec = WorkloadSpec::new(Dataset::Fixed, rate_each, n_each);
+    short_spec.seed = 11;
+    short_spec.fixed_input = 256;
+    short_spec.fixed_output = 64;
+    let mut long_spec = WorkloadSpec::new(Dataset::Fixed, rate_each, n_each);
+    long_spec.seed = 23;
+    long_spec.fixed_input = 8192;
+    long_spec.fixed_output = 128;
+    let mut requests = WorkloadGen::new(short_spec).generate().requests;
+    requests.extend(WorkloadGen::new(long_spec).generate().requests);
+    let mut trace = Trace::new(requests);
+    // Re-id after the merge so every request id is unique fleet-wide.
+    for (i, r) in trace.requests.iter_mut().enumerate() {
+        r.id = i as u64;
+    }
+    trace
+}
+
+fn main() {
+    let trace = mixed_trace(30, 0.6);
+    let model = ModelDesc::qwen3_30b_a3b();
+    let n_layers = model.n_layers;
+    println!(
+        "mixed workload: {} requests ({} short @256 tok, {} long @8192 tok)",
+        trace.len(),
+        trace.len() / 2,
+        trace.len() / 2
+    );
+
+    let mut rows: Vec<(String, RunMetrics)> = Vec::new();
+    for spec_text in ["chunked", "layered", "adaptive"] {
+        let spec = PolicySpec::parse(spec_text).expect("shipped spec names parse");
+        let mut log = EventLog::default();
+        let report = Session::builder()
+            .model(model.clone())
+            .policy_spec(spec)
+            .trace(&trace)
+            .sink(&mut log)
+            .run()
+            .expect("sim sessions are infallible");
+        if spec_text == "adaptive" {
+            // Show the axis actually switching: layer-axis cohorts emit
+            // partial-stack PrefillGroupDone events, token-axis cohorts
+            // full-stack ones.
+            let partial = log.count(|e| {
+                matches!(e, EngineEvent::PrefillGroupDone { layers, .. } if *layers < n_layers)
+            });
+            let full = log.count(|e| {
+                matches!(e, EngineEvent::PrefillGroupDone { layers, .. } if *layers == n_layers)
+            });
+            println!(
+                "adaptive axis mix: {partial} partial-stack (layer-axis) + {full} full-stack \
+                 (token-axis) prefill group events"
+            );
+        }
+        rows.push((report.policies[0].clone(), report.fleet));
+    }
+
+    let mut t = Table::new("mixed short/long workload — pure policies vs adaptive")
+        .header(&[
+            "policy",
+            "TTFT mean (s)",
+            "TTFT p99 (s)",
+            "TBT p99 (ms)",
+            "E2E mean (s)",
+            "expert TB",
+            "mJ/tok",
+        ]);
+    for (name, m) in &rows {
+        t.row(&[
+            name.clone(),
+            f2(m.ttft_samples().mean()),
+            f2(m.ttft_samples().p99()),
+            f1(m.tbt_samples().p99() * 1e3),
+            f2(m.e2e_samples().mean()),
+            f2(m.traffic.expert_bytes / 1e12),
+            f1(m.energy_per_token_mj()),
+        ]);
+    }
+    t.print();
+
+    let (c, l, a) = (&rows[0].1, &rows[1].1, &rows[2].1);
+    println!(
+        "adaptive vs chunked: {:+.1}% expert bytes, {:+.1}% TTFT mean",
+        (a.traffic.expert_bytes / c.traffic.expert_bytes - 1.0) * 100.0,
+        (a.ttft_samples().mean() / c.ttft_samples().mean() - 1.0) * 100.0,
+    );
+    println!(
+        "adaptive vs layered: {:+.1}% expert bytes, {:+.1}% TTFT mean",
+        (a.traffic.expert_bytes / l.traffic.expert_bytes - 1.0) * 100.0,
+        (a.ttft_samples().mean() / l.ttft_samples().mean() - 1.0) * 100.0,
+    );
+}

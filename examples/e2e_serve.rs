@@ -47,7 +47,7 @@ fn main() {
             ..Default::default()
         };
         let server = RealServer::new(&engine, opts).unwrap();
-        let rep = server.serve(&trace).expect("serve");
+        let rep = server.run(&trace).expect("serve");
         let m = &rep.metrics;
         println!("--- {} (real wall-clock) ---", policy.name());
         println!(

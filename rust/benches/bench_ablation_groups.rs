@@ -5,7 +5,7 @@
 use std::time::Instant;
 
 use layered_prefill::config::{Dataset, HardwareDesc, ModelDesc, Policy, SchedulerConfig, WorkloadSpec};
-use layered_prefill::simulator::{simulate, SimOptions};
+use layered_prefill::serve::Session;
 use layered_prefill::workload::WorkloadGen;
 
 fn main() {
@@ -17,13 +17,14 @@ fn main() {
     for target in [128u32, 256, 512, 1024, 2048] {
         let mut cfg = SchedulerConfig::preset(Policy::Layered);
         cfg.group_token_target = target;
-        let (m, _) = simulate(
-            ModelDesc::qwen3_30b_a3b(),
-            HardwareDesc::h100x2(),
-            &cfg,
-            &trace,
-            SimOptions::default(),
-        );
+        let m = Session::builder()
+            .model(ModelDesc::qwen3_30b_a3b())
+            .hardware(HardwareDesc::h100x2())
+            .scheduler(cfg)
+            .trace(&trace)
+            .run()
+            .expect("sim session")
+            .fleet;
         println!(
             "{:>7} {:>10.2} {:>10.1} {:>12.1} {:>14.1}",
             target,

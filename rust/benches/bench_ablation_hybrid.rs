@@ -4,7 +4,7 @@
 use std::time::Instant;
 
 use layered_prefill::config::{Dataset, HardwareDesc, ModelDesc, Policy, SchedulerConfig, WorkloadSpec};
-use layered_prefill::simulator::{simulate, SimOptions};
+use layered_prefill::serve::Session;
 use layered_prefill::workload::WorkloadGen;
 
 fn main() {
@@ -16,7 +16,14 @@ fn main() {
     println!("== ablation: hybrid chunk size (Qwen, arXiv @1.3) ==");
     println!("{:>16} {:>10} {:>12} {:>12}", "config", "TTFT(s)", "TBTp99(ms)", "expert TB");
     let mut run = |label: String, cfg: SchedulerConfig| {
-        let (m, _) = simulate(qwen(), hw(), &cfg, &trace, SimOptions::default());
+        let m = Session::builder()
+            .model(qwen())
+            .hardware(hw())
+            .scheduler(cfg)
+            .trace(&trace)
+            .run()
+            .expect("sim session")
+            .fleet;
         println!(
             "{:>16} {:>10.2} {:>12.1} {:>12.1}",
             label,

@@ -5,8 +5,9 @@
 
 use std::time::Instant;
 
-use layered_prefill::cluster::{build_router, Cluster, ReplicaSpec};
+use layered_prefill::cluster::{build_router, ReplicaSpec};
 use layered_prefill::config::{Dataset, HardwareDesc, ModelDesc, Policy, WorkloadSpec};
+use layered_prefill::serve::Session;
 use layered_prefill::workload::WorkloadGen;
 
 fn main() {
@@ -24,10 +25,14 @@ fn main() {
 
             let spec = ReplicaSpec::new(model.clone(), hw.clone(), Policy::Layered);
             let router = build_router(router_name).expect("router name");
-            let cluster = Cluster::homogeneous(n_replicas, spec, router);
 
             let t0 = Instant::now();
-            let rep = cluster.run(&trace);
+            let rep = Session::builder()
+                .replica_specs(vec![spec; n_replicas])
+                .router(router)
+                .trace(&trace)
+                .run()
+                .expect("sim session");
             let wall = t0.elapsed().as_secs_f64();
 
             assert_eq!(rep.fleet.requests.len(), n_requests);

@@ -7,7 +7,7 @@ use std::time::Instant;
 
 use layered_prefill::config::{Dataset, HardwareDesc, ModelDesc, Policy, SchedulerConfig, WorkloadSpec};
 use layered_prefill::model::WorkAnalytics;
-use layered_prefill::simulator::{simulate, SimOptions};
+use layered_prefill::serve::Session;
 use layered_prefill::workload::WorkloadGen;
 
 fn main() {
@@ -16,13 +16,14 @@ fn main() {
     for policy in [Policy::Chunked, Policy::Layered] {
         let cfg = SchedulerConfig::preset(policy);
         let t0 = Instant::now();
-        let (m, _) = simulate(
-            ModelDesc::qwen3_30b_a3b(),
-            HardwareDesc::h100x2(),
-            &cfg,
-            &trace,
-            SimOptions::default(),
-        );
+        let m = Session::builder()
+            .model(ModelDesc::qwen3_30b_a3b())
+            .hardware(HardwareDesc::h100x2())
+            .scheduler(cfg)
+            .trace(&trace)
+            .run()
+            .expect("sim session")
+            .fleet;
         let dt = t0.elapsed().as_secs_f64();
         println!(
             "[hotpath] sim {}: {} iterations in {:.3}s -> {:.0} iter/s wall",

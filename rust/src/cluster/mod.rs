@@ -17,9 +17,12 @@
 //! bit-identical to the raw single-engine core — the acceptance anchor
 //! locked by `tests/cluster_equivalence.rs`.
 //!
-//! DEPRECATED entry point: [`Cluster::run`] is a thin shim kept for
-//! signature stability; new code should declare fleets with
-//! `Session::builder().replica_specs(..).router(..)`.
+//! DEPRECATED entry point: [`Cluster::run`] is a `#[deprecated]` thin
+//! shim kept only to nudge external callers; new code declares fleets
+//! with `Session::builder().replica_specs(..).router(..)` (per-replica
+//! `ReplicaSpec.sched` may carry a Policy-API-v2
+//! [`PolicySpec`](crate::sched::policy::PolicySpec) via
+//! `PolicySpec::scheduler_config()` for mixed spec fleets).
 
 pub mod control;
 pub mod router;
@@ -62,8 +65,9 @@ impl ReplicaSpec {
 pub struct ClusterReport {
     /// Per-replica metrics, index-aligned with the fleet's replicas.
     pub per_replica: Vec<RunMetrics>,
-    /// Policy each replica ran (for heterogeneous-fleet reporting).
-    pub policies: Vec<Policy>,
+    /// Display name of the policy each replica ran (preset or
+    /// `PolicySpec` name, for heterogeneous-fleet reporting).
+    pub policies: Vec<String>,
     /// (request id, replica index) routing decisions, in arrival order.
     pub assignments: Vec<(u64, usize)>,
     /// Fleet-aggregated metrics (requests merged, traffic/energy summed).
@@ -132,9 +136,13 @@ impl Cluster {
         self.router.name()
     }
 
-    /// Serve `trace` across the fleet. DEPRECATED shim: builds and runs a
+    /// Serve `trace` across the fleet. Deprecated shim: builds and runs a
     /// [`serve::Session`](crate::serve::Session) — the single run surface —
     /// and repackages its report.
+    #[deprecated(
+        note = "Cluster::run is a legacy shim; declare fleets with \
+                serve::Session::builder().replica_specs(..).router(..) instead"
+    )]
     pub fn run(self, trace: &Trace) -> ClusterReport {
         Session::builder()
             .replica_specs(self.specs)
@@ -208,6 +216,10 @@ fn merge_timelines(runs: &[RunMetrics]) -> Vec<(f64, u64)> {
 
 #[cfg(test)]
 mod tests {
+    // These tests deliberately exercise the deprecated Cluster::run shim:
+    // its Session-equivalence is part of the compatibility lock.
+    #![allow(deprecated)]
+
     use super::*;
     use crate::config::Dataset;
     use crate::config::WorkloadSpec;

@@ -26,14 +26,28 @@ pub enum Policy {
 }
 
 impl Policy {
-    pub fn parse(s: &str) -> Option<Policy> {
-        match s.to_ascii_lowercase().as_str() {
-            "static" => Some(Policy::Static),
-            "orca" | "continuous" => Some(Policy::Orca),
-            "chunked" | "sarathi" => Some(Policy::Chunked),
-            "layered" => Some(Policy::Layered),
-            "hybrid" => Some(Policy::Hybrid),
-            _ => None,
+    /// Every shipped preset, in canonical order.
+    pub const ALL: [Policy; 5] = [
+        Policy::Static,
+        Policy::Orca,
+        Policy::Chunked,
+        Policy::Layered,
+        Policy::Hybrid,
+    ];
+
+    /// Parse a preset name, case-insensitively (plus the `continuous` /
+    /// `sarathi` aliases). The error lists the valid names.
+    pub fn parse(s: &str) -> Result<Policy, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "static" => Ok(Policy::Static),
+            "orca" | "continuous" => Ok(Policy::Orca),
+            "chunked" | "sarathi" => Ok(Policy::Chunked),
+            "layered" => Ok(Policy::Layered),
+            "hybrid" => Ok(Policy::Hybrid),
+            other => Err(format!(
+                "unknown policy '{other}' (valid: static | orca | chunked | layered | hybrid; \
+                 aliases: continuous = orca, sarathi = chunked)"
+            )),
         }
     }
 
@@ -49,6 +63,13 @@ impl Policy {
 }
 
 /// Scheduler knobs (paper §4.4 + Sarathi config).
+///
+/// Two construction paths feed [`crate::sched::build`]: a legacy
+/// [`Policy`] preset (the knob fields below), or a Policy-API-v2
+/// [`PolicySpec`](crate::sched::policy::PolicySpec) carried in
+/// [`SchedulerConfig::spec`] — when `spec` is set, the spec's own knobs
+/// govern scheduling and the legacy fields are mirrors for consumers that
+/// read them (replica views, KV sizing).
 #[derive(Clone, Debug)]
 pub struct SchedulerConfig {
     pub policy: Policy,
@@ -66,18 +87,38 @@ pub struct SchedulerConfig {
     /// Merge concurrently-arrived small prompts into one admission
     /// (paper §4.4 "merge them into a single batch").
     pub merge_small_prefills: bool,
+    /// Policy API v2: when set, [`crate::sched::build`] compiles THIS
+    /// composable pipeline spec instead of the legacy preset fields.
+    pub spec: Option<crate::sched::policy::PolicySpec>,
 }
 
 impl SchedulerConfig {
+    /// The paper-preset knobs for a legacy policy. The per-policy default
+    /// constants are single-sourced in the spec layer
+    /// ([`crate::sched::policy::spec`]), so a preset and its
+    /// `--policy-spec` equivalent cannot drift.
     pub fn preset(policy: Policy) -> Self {
+        use crate::sched::policy::spec::{
+            CHUNK_TOKENS, GROUP_TOKEN_TARGET, HYBRID_CHUNK_TOKENS, MAX_BATCH, STATIC_BATCH,
+        };
         SchedulerConfig {
             policy,
-            chunk_size: 512,
-            group_token_target: 512,
-            hybrid_chunk_size: 4096,
-            max_batch: 256,
-            static_batch: 16,
+            chunk_size: CHUNK_TOKENS,
+            group_token_target: GROUP_TOKEN_TARGET,
+            hybrid_chunk_size: HYBRID_CHUNK_TOKENS,
+            max_batch: MAX_BATCH,
+            static_batch: STATIC_BATCH,
             merge_small_prefills: true,
+            spec: None,
+        }
+    }
+
+    /// Display name of what this config schedules: the spec's name when a
+    /// Policy-API-v2 spec is attached, the legacy preset name otherwise.
+    pub fn policy_name(&self) -> String {
+        match &self.spec {
+            Some(s) => s.name(),
+            None => self.policy.name().to_string(),
         }
     }
 }
@@ -161,17 +202,18 @@ mod tests {
 
     #[test]
     fn policy_parse_roundtrip() {
-        for p in [
-            Policy::Static,
-            Policy::Orca,
-            Policy::Chunked,
-            Policy::Layered,
-            Policy::Hybrid,
-        ] {
-            assert_eq!(Policy::parse(p.name()), Some(p));
+        for p in Policy::ALL {
+            assert_eq!(Policy::parse(p.name()), Ok(p));
+            // Case-insensitive.
+            assert_eq!(Policy::parse(&p.name().to_ascii_uppercase()), Ok(p));
         }
-        assert_eq!(Policy::parse("sarathi"), Some(Policy::Chunked));
-        assert_eq!(Policy::parse("nope"), None);
+        assert_eq!(Policy::parse("sarathi"), Ok(Policy::Chunked));
+        assert_eq!(Policy::parse(" Layered "), Ok(Policy::Layered));
+        // The error names every valid policy.
+        let e = Policy::parse("nope").unwrap_err();
+        for name in ["static", "orca", "chunked", "layered", "hybrid"] {
+            assert!(e.contains(name), "error must list '{name}': {e}");
+        }
     }
 
     #[test]

@@ -61,6 +61,32 @@
 //! stream ([`metrics::StreamingSlo`]), bounded-memory for hours-long
 //! sessions.
 //!
+//! ## Policy API v2: the scheduling axis as configuration
+//!
+//! Scheduling is a composable pipeline ([`sched::policy`]):
+//! **admission** (who enters the running batch — greedy FCFS, fixed
+//! run-to-completion batches, merged cohorts, one-at-a-time; all gated
+//! through KV admission + prefix-cache credit) → **prefill shaping** (how
+//! remaining prefill is sliced — token-axis budget chunks, whole prompts,
+//! cohort units, large solo chunks) → **batch composition** (how a unit
+//! interleaves with decode across layer groups — one full-stack hybrid
+//! batch, or G contiguous groups with exactly one prefilling per
+//! iteration). A declarative [`sched::PolicySpec`] names a composition —
+//! preset name, compact `admission=..,shaper=..,composer=..` string, or
+//! JSON — and [`sched::build`] compiles it into the same `Scheduler`
+//! trait object the engine already consumes
+//! (`Session::builder().policy_spec(..)`, CLI `--policy-spec` /
+//! `--policy-specs` for mixed fleets). Each legacy [`config::Policy`]
+//! preset is one canonical composition, bit-identity-locked against its
+//! direct construction by `tests/policy_spec.rs`; new operating points
+//! (Sarathi-budget chunks on the layer axis, per-cohort axis selection)
+//! are a config sweep, not new policy code. The payoff the closed enum
+//! could not express: [`sched::policy::AdaptiveScheduler`] re-evaluates
+//! the axis PER ADMISSION COHORT from live signals — prompt-length mix,
+//! the `moe::traffic` expert-reload estimate, sliding-window TTFT/TBT —
+//! generalizing the paper's §4.3 hybrid into a runtime policy
+//! (`--policy-spec adaptive`, `examples/adaptive_policy.rs`).
+//!
 //! ## The memory axis: prefix caching + KV migration
 //!
 //! The paper removes redundant work on the memory axis (chunk-amplified
@@ -103,8 +129,10 @@
 //!   `EngineEvent` stream, `WorkloadSource` intake.
 //! * **`sched`** — the paper's contribution (layered prefill) and its
 //!   baselines (chunked / Orca / static / §4.3 hybrid), planning per *layer
-//!   group* so layer-axis policies are first-class. Invariants I1–I4 are
-//!   validated by the core each iteration and property-tested.
+//!   group* so layer-axis policies are first-class; [`sched::policy`] is
+//!   the Policy-API-v2 pipeline (admission → shaper → composer,
+//!   `PolicySpec`, the adaptive policy). Invariants I1–I4 are validated by
+//!   the core each iteration and property-tested over BOTH surfaces.
 //! * **`engine`** — the shared core loop plus its two executors:
 //!   [`engine::SimExecutor`] (roofline `CostModel` + `EnergyMeter`,
 //!   virtual clock) and [`engine::RealExecutor`] (AOT-compiled TinyMoE via

@@ -7,6 +7,11 @@
 //!       One simulation run with a metrics summary. `--open-loop
 //!       --horizon 60` streams a Poisson workload through a serve::Session
 //!       and stops at the horizon (Halted) instead of draining.
+//!       Policy API v2: `--policy-spec SPEC` schedules with a composable
+//!       pipeline spec instead of a preset — SPEC is a preset name,
+//!       `adaptive[:key=value,..]`, a compact pipeline
+//!       (`admission=cohort:512,shaper=chunks:512,composer=groups:512`),
+//!       inline JSON, or a path to a JSON file.
 //!   sweep --model qwen --dataset arxiv --rates 1.1,1.3,1.5
 //!       SLO attainment sweep (chunked vs layered).
 //!   serve --policy layered --requests 12 --rate 2.0
@@ -28,6 +33,9 @@
 //!       enables vLLM-style automatic prefix caching, `--migrate-kv
 //!       [--migration-gbps B]` migrates resident KV on Fail/Drain instead
 //!       of re-serving from scratch.
+//!       Policy API v2: `--policy-spec SPEC` applies one spec fleet-wide;
+//!       `--policy-specs "S1;S2"` cycles a semicolon-separated spec list
+//!       over the replicas (mixed fleets; overrides `--policies`).
 //!   info
 //!       Print model/hardware descriptors and artifact status.
 
@@ -36,6 +44,7 @@ use layered_prefill::config::{
 };
 use layered_prefill::report;
 use layered_prefill::report::common::RunSpec;
+use layered_prefill::sched::PolicySpec;
 use layered_prefill::runtime::{artifacts_available, artifacts_dir, RuntimeEngine};
 use layered_prefill::server::{RealServer, ServeOptions};
 use layered_prefill::util::cli::Args;
@@ -68,7 +77,11 @@ fn usage() {
     eprintln!(
         "usage: lpserve <report|simulate|sweep|serve|cluster|trace|info> [--flags]\n\
          try: lpserve report all | lpserve simulate --policy layered --rate 1.3\n\
+         \x20    | lpserve simulate --policy-spec adaptive --dataset sharegpt --rate 3\n\
+         \x20    | lpserve simulate --policy-spec \
+         'admission=cohort:512,shaper=chunks:512,composer=groups:512'\n\
          \x20    | lpserve cluster --replicas 4 --router slo --policies layered,chunked\n\
+         \x20    | lpserve cluster --replicas 2 --policy-specs 'adaptive;chunked'\n\
          \x20    | lpserve cluster --replicas 4 --open-loop --fail-at 10:1 --autoscale --window 10\n\
          \x20    | lpserve cluster --replicas 4 --router prefix --shared-prefix 1024 \
          --prefix-cache --fail-at 10:1 --migrate-kv"
@@ -87,7 +100,46 @@ fn dataset_arg(args: &Args) -> Dataset {
 }
 
 fn policy_arg(args: &Args) -> Policy {
-    Policy::parse(&args.str("policy", "layered")).unwrap_or(Policy::Layered)
+    match Policy::parse(&args.str("policy", "layered")) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Load `--policy-spec` / one element of `--policy-specs`: inline JSON
+/// (leading `{`), a path to a JSON file, or a textual spec (preset name,
+/// `adaptive[:knobs]`, compact pipeline). See `sched::policy::spec`.
+fn load_policy_spec(v: &str) -> Result<PolicySpec, String> {
+    let t = v.trim();
+    if !t.starts_with('{') {
+        if std::path::Path::new(t).is_file() {
+            let text =
+                std::fs::read_to_string(t).map_err(|e| format!("cannot read {t}: {e}"))?;
+            return PolicySpec::parse(&text).map_err(|e| format!("{t}: {e}"));
+        }
+        // A value that LOOKS like a path must not fall through to spec-name
+        // parsing: a typo'd file name would otherwise report a misleading
+        // "unknown policy spec" error.
+        if t.contains('/') || t.to_ascii_lowercase().ends_with(".json") {
+            return Err(format!("cannot read {t}: no such file"));
+        }
+    }
+    PolicySpec::parse(t)
+}
+
+/// Optional `--policy-spec` flag; exits with a named error on a bad spec.
+fn policy_spec_arg(args: &Args) -> Option<PolicySpec> {
+    let v = args.opt("policy-spec")?;
+    match load_policy_spec(v) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("bad --policy-spec: {e}");
+            std::process::exit(2);
+        }
+    }
 }
 
 fn cmd_report(args: &Args) {
@@ -146,9 +198,17 @@ fn cmd_simulate_open_loop(args: &Args) {
     wspec.seed = seed;
     let source = PoissonSource::new(wspec).with_horizon(horizon);
 
-    let report = Session::builder()
-        .model(model.clone())
-        .policy(policy)
+    let pspec = policy_spec_arg(args);
+    let policy_name = match &pspec {
+        Some(s) => s.name(),
+        None => policy.name().to_string(),
+    };
+    let builder = Session::builder().model(model.clone());
+    let builder = match pspec {
+        Some(s) => builder.policy_spec(s),
+        None => builder.policy(policy),
+    };
+    let report = builder
         .replicas(replicas)
         .workload(source)
         .horizon(horizon)
@@ -165,7 +225,7 @@ fn cmd_simulate_open_loop(args: &Args) {
         "open-loop simulate — {} on {} ({}, {} req/s, horizon {}s, {} replica{})",
         model.name,
         dataset.name(),
-        policy.name(),
+        policy_name,
         rate,
         horizon,
         replicas,
@@ -199,8 +259,24 @@ fn cmd_simulate(args: &Args) {
         args.f64("rate", 1.3),
     );
     spec.n_requests = args.usize("requests", 100);
-    spec.chunk_size = args.usize("chunk", 512) as u32;
+    // Default single-sourced from the spec layer (cannot drift from the
+    // --policy-spec equivalents).
+    spec.chunk_size = args.usize(
+        "chunk",
+        layered_prefill::sched::policy::spec::CHUNK_TOKENS as usize,
+    ) as u32;
     spec.seed = args.u64("seed", 0xA11CE);
+    spec.policy_spec = policy_spec_arg(args);
+    if spec.policy_spec.is_some() {
+        // The spec's own knobs govern scheduling; a simultaneous legacy
+        // knob would otherwise be silently ignored.
+        if args.opt("chunk").is_some() {
+            eprintln!("note: --chunk is ignored when --policy-spec is given (the spec's knobs govern)");
+        }
+        if args.opt("policy").is_some() {
+            eprintln!("note: --policy is ignored when --policy-spec is given");
+        }
+    }
     let slo = spec.slo();
     let (m, _) = spec.run();
     let sum = m.slo(&slo);
@@ -208,7 +284,7 @@ fn cmd_simulate(args: &Args) {
         "simulate — {} on {} ({}, {} req/s, n={})",
         spec.model.name,
         spec.dataset.name(),
-        spec.policy.name(),
+        spec.policy_name(),
         spec.rate,
         spec.n_requests
     ))
@@ -264,7 +340,7 @@ fn cmd_serve(args: &Args) {
         ..Default::default()
     };
     let server = RealServer::new(&engine, opts).unwrap();
-    let rep = server.serve(&trace).expect("serve");
+    let rep = server.run(&trace).expect("serve");
     let m = &rep.metrics;
     let mut t = Table::new(&format!(
         "real serve — TinyMoE via PJRT ({}, {} requests @ {}/s)",
@@ -345,29 +421,49 @@ fn cmd_cluster(args: &Args) {
         return;
     };
 
-    // Per-replica policies: comma list cycled over the fleet. Reject typos
+    // Per-replica scheduling: `--policy-specs "S1;S2"` (Policy API v2,
+    // semicolon-separated, cycled over the fleet) takes precedence, then
+    // `--policy-spec SPEC` fleet-wide, then the legacy `--policies` comma
+    // list of preset names. Typos are rejected with the valid names
     // instead of silently changing the fleet composition.
-    let policy_arg = args.str("policies", &args.str("policy", "layered"));
-    let mut policy_list: Vec<Policy> = Vec::new();
-    for s in policy_arg.split(',') {
-        match Policy::parse(s.trim()) {
-            Some(p) => policy_list.push(p),
-            None => {
-                eprintln!(
-                    "unknown policy '{}' (static | orca | chunked | layered | hybrid)",
-                    s.trim()
-                );
-                return;
+    let mut sched_list: Vec<layered_prefill::config::SchedulerConfig> = Vec::new();
+    let spec_flags_given = args.opt("policy-specs").is_some() || args.opt("policy-spec").is_some();
+    if spec_flags_given && (args.opt("policies").is_some() || args.opt("policy").is_some()) {
+        eprintln!("note: --policies/--policy are ignored when --policy-spec(s) is given");
+    }
+    if let Some(v) = args.opt("policy-specs") {
+        for part in v.split(';') {
+            match load_policy_spec(part) {
+                Ok(s) => sched_list.push(s.scheduler_config()),
+                Err(e) => {
+                    eprintln!("bad --policy-specs element '{}': {e}", part.trim());
+                    std::process::exit(2);
+                }
+            }
+        }
+    } else if let Some(spec) = policy_spec_arg(args) {
+        sched_list.push(spec.scheduler_config());
+    } else {
+        let policies_arg = args.str("policies", &args.str("policy", "layered"));
+        for s in policies_arg.split(',') {
+            match Policy::parse(s) {
+                Ok(p) => sched_list.push(layered_prefill::config::SchedulerConfig::preset(p)),
+                Err(e) => {
+                    eprintln!("{e}");
+                    std::process::exit(2);
+                }
             }
         }
     }
+    if sched_list.is_empty() {
+        eprintln!("empty policy list");
+        std::process::exit(2);
+    }
     let specs: Vec<ReplicaSpec> = (0..n_replicas)
-        .map(|i| {
-            ReplicaSpec::new(
-                model.clone(),
-                HardwareDesc::h100x2(),
-                policy_list[i % policy_list.len()],
-            )
+        .map(|i| ReplicaSpec {
+            model: model.clone(),
+            hw: HardwareDesc::h100x2(),
+            sched: sched_list[i % sched_list.len()].clone(),
         })
         .collect();
 
@@ -498,7 +594,7 @@ fn cmd_cluster(args: &Args) {
     for (i, m) in rep.per_replica.iter().enumerate() {
         t.row(&[
             format!("#{i}"),
-            rep.policies[i].name().to_string(),
+            rep.policies[i].clone(),
             counts[i].to_string(),
             f3(m.ttft_samples().p50()),
             f3(m.ttft_samples().p99()),
@@ -607,7 +703,7 @@ fn cmd_cluster(args: &Args) {
 ///   lpserve trace --out arxiv13.csv --dataset arxiv --rate 1.3 --requests 100
 ///   lpserve trace --replay arxiv13.csv --policy layered
 fn cmd_trace(args: &Args) {
-    use layered_prefill::simulator::{simulate, SimOptions};
+    use layered_prefill::serve::Session;
     if let Some(path) = args.opt("replay") {
         let text = match std::fs::read_to_string(path) {
             Ok(t) => t,
@@ -625,18 +721,23 @@ fn cmd_trace(args: &Args) {
         };
         let model = model_arg(args);
         let policy = policy_arg(args);
-        let cfg = layered_prefill::config::SchedulerConfig::preset(policy);
-        let (m, _) = simulate(
-            model.clone(),
-            HardwareDesc::h100x2(),
-            &cfg,
-            &trace,
-            SimOptions::default(),
-        );
+        let cfg = match policy_spec_arg(args) {
+            Some(s) => s.scheduler_config(),
+            None => layered_prefill::config::SchedulerConfig::preset(policy),
+        };
+        let policy_name = cfg.policy_name();
+        let report = Session::builder()
+            .model(model.clone())
+            .hardware(HardwareDesc::h100x2())
+            .scheduler(cfg)
+            .trace(&trace)
+            .run()
+            .expect("sim sessions are infallible");
+        let m = report.fleet;
         println!(
             "replayed {} requests ({}): TTFT mean {:.3}s p99 {:.3}s | TBT mean {:.1}ms p99 {:.1}ms | {:.1} mJ/tok | expert {:.2} TB",
             trace.len(),
-            policy.name(),
+            policy_name,
             m.ttft_samples().mean(),
             m.ttft_samples().p99(),
             m.tbt_samples().mean() * 1e3,

@@ -4,7 +4,10 @@ use crate::config::{
     Dataset, HardwareDesc, ModelDesc, Policy, SchedulerConfig, SloSpec, WorkloadSpec,
 };
 use crate::metrics::RunMetrics;
-use crate::simulator::{simulate, SimExtra, SimOptions};
+use crate::sched::policy::spec::CHUNK_TOKENS;
+use crate::sched::PolicySpec;
+use crate::serve::Session;
+use crate::simulator::SimExtra;
 use crate::workload::{Trace, WorkloadGen};
 
 /// Default request count for report-quality runs (benches may shrink it).
@@ -20,6 +23,9 @@ pub struct RunSpec {
     pub chunk_size: u32,
     pub seed: u64,
     pub record_tokens: bool,
+    /// Policy API v2: when set, this spec schedules the run instead of
+    /// the legacy `policy` + `chunk_size` knobs (`--policy-spec`).
+    pub policy_spec: Option<PolicySpec>,
 }
 
 impl RunSpec {
@@ -30,9 +36,10 @@ impl RunSpec {
             policy,
             rate,
             n_requests: REPORT_N,
-            chunk_size: 512,
+            chunk_size: CHUNK_TOKENS,
             seed: 0xA11CE,
             record_tokens: false,
+            policy_spec: None,
         }
     }
 
@@ -42,19 +49,40 @@ impl RunSpec {
         WorkloadGen::new(spec).generate()
     }
 
+    /// The scheduler configuration this run uses (spec-carrying when a
+    /// `policy_spec` is set).
+    pub fn scheduler_config(&self) -> SchedulerConfig {
+        match &self.policy_spec {
+            Some(s) => s.scheduler_config(),
+            None => {
+                let mut cfg = SchedulerConfig::preset(self.policy);
+                cfg.chunk_size = self.chunk_size;
+                cfg
+            }
+        }
+    }
+
+    /// Display name of the scheduling policy (spec name when set).
+    pub fn policy_name(&self) -> String {
+        self.scheduler_config().policy_name()
+    }
+
     pub fn run(&self) -> (RunMetrics, SimExtra) {
-        let mut cfg = SchedulerConfig::preset(self.policy);
-        cfg.chunk_size = self.chunk_size;
-        let opts = SimOptions {
-            horizon_s: 0.0,
-            record_token_times: self.record_tokens,
-        };
-        simulate(
-            self.model.clone(),
-            HardwareDesc::h100x2(),
-            &cfg,
-            &self.trace(),
-            opts,
+        let report = Session::builder()
+            .model(self.model.clone())
+            .hardware(HardwareDesc::h100x2())
+            .scheduler(self.scheduler_config())
+            .replicas(1)
+            .trace(&self.trace())
+            .horizon(0.0)
+            .record_token_times(self.record_tokens)
+            .run()
+            .expect("sim sessions are infallible");
+        (
+            report.fleet,
+            SimExtra {
+                token_times: report.token_times,
+            },
         )
     }
 

@@ -5,6 +5,10 @@
 //! admitted prefills, executed through ALL layers. Long prompts therefore
 //! traverse the full layer stack once per chunk — the source of the MoE
 //! expert-reload amplification the paper eliminates (§3).
+//!
+//! Canonical pipeline composition (Policy API v2, bit-identical):
+//! `admission=fcfs, shaper=chunks:512, composer=interleave` — see
+//! [`crate::sched::policy`].
 
 use crate::config::SchedulerConfig;
 use crate::sched::{EngineState, GroupPlan, IterationPlan, PrefillWork, Scheduler};
@@ -33,7 +37,7 @@ impl ChunkedPrefill {
 }
 
 impl Scheduler for ChunkedPrefill {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "chunked"
     }
 

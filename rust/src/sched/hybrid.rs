@@ -7,6 +7,10 @@
 //! This inherits chunked-pipeline-parallel's ability to bound in-flight
 //! prefill state for very long prompts while retaining layered prefill's
 //! single-visit-per-layer expert loading per chunk.
+//!
+//! Canonical pipeline composition (Policy API v2, bit-identical):
+//! `admission=solo, shaper=solo:4096, composer=groups:512` — see
+//! [`crate::sched::policy`].
 
 use crate::config::SchedulerConfig;
 use crate::sched::{
@@ -76,7 +80,7 @@ impl HybridChunkedLayered {
 }
 
 impl Scheduler for HybridChunkedLayered {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "hybrid"
     }
 

@@ -12,6 +12,10 @@
 //!
 //! Concurrently-arrived small prompts are merged into a single admission
 //! cohort (§4.4).
+//!
+//! Canonical pipeline composition (Policy API v2, bit-identical):
+//! `admission=cohort:512, shaper=cohort, composer=groups:512` — see
+//! [`crate::sched::policy`].
 
 use crate::config::SchedulerConfig;
 use crate::sched::{
@@ -122,7 +126,7 @@ impl LayeredPrefill {
 }
 
 impl Scheduler for LayeredPrefill {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "layered"
     }
 

@@ -7,22 +7,37 @@
 //! policies are first-class: token-axis policies simply emit a single group
 //! covering all layers.
 //!
-//! Normative invariants (checked by property tests):
+//! Two ways to get a scheduler, one [`build`] entry point:
+//!
+//! * the legacy [`Policy`] enum — five closed presets, constructed
+//!   directly (the [`chunked`] / [`orca`] / [`static_batch`] /
+//!   [`layered`] / [`hybrid`] modules);
+//! * **Policy API v2** ([`policy`]) — a composable pipeline
+//!   (admission → prefill shaping → batch composition) declared by a
+//!   [`policy::PolicySpec`] (preset name, compact string, or JSON) and
+//!   compiled through the same `Scheduler` trait object. Every preset is
+//!   re-expressed as a canonical composition (bit-identity-locked by
+//!   `tests/policy_spec.rs`), and [`policy::AdaptiveScheduler`] chooses
+//!   the scheduling axis per admission cohort from live signals.
+//!
+//! Normative invariants (checked by property tests over BOTH surfaces):
 //!  I1  at most one group performs prefill per iteration (layered);
 //!  I2  a prompt token visits each layer's prefill path exactly once;
 //!  I3  every running decode request decodes exactly once per iteration;
-//!  I4  a layered admission cohort completes in exactly G iterations.
+//!  I4  a layer-axis admission unit completes in exactly G iterations.
 
 pub mod chunked;
 pub mod hybrid;
 pub mod layered;
 pub mod orca;
+pub mod policy;
 pub mod static_batch;
 pub mod state;
 
 #[cfg(test)]
 mod properties;
 
+pub use policy::PolicySpec;
 pub use state::{Admission, EngineState, Phase, SimReq};
 
 use crate::config::{Policy, SchedulerConfig};
@@ -77,13 +92,25 @@ impl IterationPlan {
 /// A scheduling policy: plans the next iteration over engine state.
 /// Returns None when it has nothing to run (engine then advances time to
 /// the next arrival).
+///
+/// `name` is the policy's display name, surfaced per replica in
+/// `SessionReport::policies` and the CLI tables (legacy presets return
+/// their enum name; spec-compiled pipelines return the spec's name).
 pub trait Scheduler {
-    fn name(&self) -> &'static str;
+    fn name(&self) -> &str;
     fn plan(&mut self, state: &mut EngineState) -> Option<IterationPlan>;
 }
 
-/// Build a scheduler from config.
+/// Build a scheduler from config. A config carrying a
+/// [`policy::PolicySpec`] (see [`SchedulerConfig::spec`]) compiles the
+/// spec's pipeline — the spec's own knobs govern, not the legacy fields;
+/// otherwise the legacy [`Policy`] preset is constructed directly. The two
+/// paths are bit-identical for every preset (locked by
+/// `tests/policy_spec.rs`).
 pub fn build(config: &SchedulerConfig, n_layers: u32) -> Box<dyn Scheduler> {
+    if let Some(spec) = &config.spec {
+        return spec.build(n_layers);
+    }
     match config.policy {
         Policy::Static => Box::new(static_batch::StaticBatching::new(config.clone())),
         Policy::Orca => Box::new(orca::ContinuousBatching::new(config.clone())),

@@ -5,6 +5,10 @@
 //! fixes static batching's head-of-line TTFT problem but stalls decode
 //! behind long prefills (the TBT-spike failure mode chunked/layered prefill
 //! were designed to remove — §2.3).
+//!
+//! Canonical pipeline composition (Policy API v2, bit-identical):
+//! `admission=fcfs, shaper=full, composer=interleave` — see
+//! [`crate::sched::policy`].
 
 use crate::config::SchedulerConfig;
 use crate::sched::{EngineState, GroupPlan, IterationPlan, PrefillWork, Scheduler};
@@ -20,7 +24,7 @@ impl ContinuousBatching {
 }
 
 impl Scheduler for ContinuousBatching {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "orca"
     }
 

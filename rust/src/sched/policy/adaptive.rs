@@ -1,0 +1,403 @@
+//! Signal-driven adaptive scheduling: the paper's §4.3 hybrid generalized
+//! into a RUNTIME policy.
+//!
+//! The paper shows the scheduling axis is workload-dependent: token-axis
+//! chunking wins on short prompts (no reload amplification, no G-iteration
+//! cadence), the layer axis wins on long prompts (each layer's experts
+//! load once per prompt instead of once per chunk). [`AdaptiveScheduler`]
+//! therefore re-evaluates the axis **per admission cohort** from live
+//! signals observed on the engine state:
+//!
+//! * the cohort's remaining prefill and the waiting queue's prompt-length
+//!   mix;
+//! * a `moe::traffic`-style expert-reload estimate: modeled expert-load
+//!   bytes for chunking the cohort vs one layer-axis pass
+//!   ([`axis_expert_bytes`], using the paper's coverage model);
+//! * windowed TTFT / latest-TBT over the LIVE decode batch — a bounded
+//!   (O(max_batch), never O(requests-served)) read off `EngineState`, so
+//!   the policy needs no side channel to the `StreamingSlo` sink.
+//!
+//! The decision rule itself consumes the cohort length, the reload
+//! ratio, and the TBT signal; the queue mix and windowed TTFT ride in
+//! the [`SignalSnapshot`] for observability and future rules.
+//!
+//! Both arms reuse the pipeline stages, so I1–I4 hold by construction:
+//! the token arm is Sarathi-style budget chunking through
+//! [`InterleaveComposer`]; the layer arm shapes ALL in-flight remaining
+//! prefill into one unit over G = ceil(L/target) groups
+//! ([`LayerGroupComposer`]). Axis switches happen only between units, so
+//! no in-flight layer-axis obligation is ever abandoned and no admitted
+//! request can strand (the layer arm's whole-remaining shaping also
+//! adopts any mid-chunk leftovers from the token arm).
+
+use crate::config::ModelDesc;
+use crate::moe::coverage::CoverageModel;
+use crate::sched::policy::spec::AdaptiveSpec;
+use crate::sched::policy::stages::{
+    FullPromptShaper, GreedyAdmission, InterleaveComposer, LayerGroupComposer, TokenChunkShaper,
+};
+use crate::sched::policy::{AdmissionPolicy, BatchComposer, PrefillShaper};
+use crate::sched::{EngineState, IterationPlan, Phase, Scheduler};
+
+/// The scheduling axis an adaptive cohort runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Axis {
+    /// Token-axis: budget chunks through one full-stack group per
+    /// iteration.
+    Token,
+    /// Layer-axis: the full remaining prefill over G layer groups, one
+    /// group per iteration.
+    Layer,
+}
+
+/// Live signals sampled at an admission-cohort boundary.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SignalSnapshot {
+    /// Remaining prefill tokens of the cohort just admitted (post
+    /// prefix-cache credit).
+    pub cohort_remaining: u32,
+    /// Mean declared prompt length over the still-waiting queue (the
+    /// upcoming length mix; 0.0 when empty).
+    pub waiting_mean_len: f64,
+    /// Modeled expert-load bytes to prefill the cohort on the token axis
+    /// (one full-stack pass per chunk).
+    pub token_axis_expert_bytes: f64,
+    /// Modeled expert-load bytes on the layer axis (each layer's experts
+    /// load once over the whole cohort).
+    pub layer_axis_expert_bytes: f64,
+    /// Max TTFT among LIVE (decoding) requests whose first token landed
+    /// inside the window. Exposed for observability and future rules; the
+    /// current decision rule does not consume it.
+    pub window_ttft_max_s: f64,
+    /// Max LATEST inter-token gap across the live decode batch. A
+    /// decoding request decodes every iteration (I3), so its latest gap
+    /// is at most one iteration old — a genuinely current TBT reading.
+    pub window_tbt_max_s: f64,
+}
+
+impl SignalSnapshot {
+    /// Sample the signals from engine state at a cohort boundary.
+    /// `admitted` is the cohort the admission stage just produced.
+    pub fn observe(
+        state: &EngineState,
+        admitted: &[u64],
+        window_s: f64,
+        chunk: u32,
+    ) -> SignalSnapshot {
+        let cohort_remaining = admitted
+            .iter()
+            .fold(0u32, |a, id| a.saturating_add(state.reqs[id].remaining_prefill()));
+        let waiting_mean_len = if state.waiting.is_empty() {
+            0.0
+        } else {
+            let total: u64 = state
+                .waiting
+                .iter()
+                .map(|id| state.reqs[id].req.input_len as u64)
+                .sum();
+            total as f64 / state.waiting.len() as f64
+        };
+        let (token_axis_expert_bytes, layer_axis_expert_bytes) =
+            axis_expert_bytes(&state.model, cohort_remaining, chunk);
+        // Latency signals from the LIVE decode set only — bounded by the
+        // batch cap, never a rescan of every record ever served, so an
+        // hours-long open-loop session pays O(max_batch) per cohort
+        // boundary. Each decoding request contributes its latest gap
+        // (at most one iteration old — I3) and, when its first token
+        // landed inside (now - window, now], its TTFT.
+        let cut = state.now_s - window_s;
+        let mut ttft_max = 0.0f64;
+        let mut tbt_max = 0.0f64;
+        for id in &state.decoding {
+            let r = &state.reqs[id];
+            debug_assert_eq!(r.phase, Phase::Decoding);
+            if let Some(ft) = r.first_token_s {
+                if ft >= cut {
+                    ttft_max = ttft_max.max(ft - r.req.arrival_s);
+                }
+            }
+            if let Some(&gap) = r.tbts.last() {
+                tbt_max = tbt_max.max(gap);
+            }
+        }
+        SignalSnapshot {
+            cohort_remaining,
+            waiting_mean_len,
+            token_axis_expert_bytes,
+            layer_axis_expert_bytes,
+            window_ttft_max_s: ttft_max,
+            window_tbt_max_s: tbt_max,
+        }
+    }
+}
+
+/// Modeled expert-load bytes to prefill `remaining` tokens on each axis
+/// (paper §3 / Table 7 arithmetic, per layer × every layer): the token
+/// axis pays ceil(remaining / chunk) full-stack passes of
+/// covered(chunk) experts; the layer axis pays one pass of
+/// covered(remaining). Returns `(token_axis, layer_axis)`; `(0, 0)` for an
+/// empty cohort.
+pub fn axis_expert_bytes(model: &ModelDesc, remaining: u32, chunk: u32) -> (f64, f64) {
+    if remaining == 0 {
+        return (0.0, 0.0);
+    }
+    let cov = CoverageModel::paper(model.n_experts, model.top_k);
+    let per_expert = model.bytes_per_expert() as f64;
+    let layers = model.n_layers as f64;
+    let chunk = chunk.max(1);
+    let n_chunks = remaining.div_ceil(chunk) as f64;
+    let token = n_chunks * cov.covered_experts(chunk.min(remaining) as u64) * per_expert * layers;
+    let layer = cov.covered_experts(remaining as u64) * per_expert * layers;
+    (token, layer)
+}
+
+/// The signal-driven adaptive scheduler. See the [module docs](self).
+pub struct AdaptiveScheduler {
+    spec: AdaptiveSpec,
+    axis: Axis,
+    switches: u64,
+    admission: GreedyAdmission,
+    chunk_shaper: TokenChunkShaper,
+    full_shaper: FullPromptShaper,
+    interleave: InterleaveComposer,
+    groups: LayerGroupComposer,
+}
+
+impl AdaptiveScheduler {
+    pub fn new(spec: AdaptiveSpec, n_layers: u32) -> Self {
+        AdaptiveScheduler {
+            axis: Axis::Token,
+            switches: 0,
+            admission: GreedyAdmission::new(spec.max_batch),
+            chunk_shaper: TokenChunkShaper::new(spec.chunk),
+            full_shaper: FullPromptShaper::new(),
+            interleave: InterleaveComposer::new(n_layers),
+            groups: LayerGroupComposer::new(n_layers, spec.group_target),
+            spec,
+        }
+    }
+
+    /// The axis the CURRENT cohort runs on.
+    pub fn axis(&self) -> Axis {
+        self.axis
+    }
+
+    /// How many times the axis has flipped so far.
+    pub fn switches(&self) -> u64 {
+        self.switches
+    }
+
+    /// The per-cohort decision rule. Layer axis when (a) the cohort is
+    /// long enough to chunk AND the modeled token-axis expert traffic
+    /// exceeds the bias threshold, or (b) the observed windowed TBT is
+    /// already violating the configured target (shrink the per-iteration
+    /// prefill footprint). Token axis otherwise.
+    fn choose(&self, sig: &SignalSnapshot) -> Axis {
+        if sig.cohort_remaining == 0 {
+            return self.axis;
+        }
+        if sig.cohort_remaining >= self.spec.long_prompt
+            && sig.token_axis_expert_bytes > self.spec.reload_bias * sig.layer_axis_expert_bytes
+        {
+            return Axis::Layer;
+        }
+        if self.spec.tbt_slo_s > 0.0 && sig.window_tbt_max_s > self.spec.tbt_slo_s {
+            return Axis::Layer;
+        }
+        Axis::Token
+    }
+
+    fn composer_needs_unit(&self) -> bool {
+        match self.axis {
+            Axis::Token => self.interleave.needs_unit(),
+            Axis::Layer => self.groups.needs_unit(),
+        }
+    }
+}
+
+impl Scheduler for AdaptiveScheduler {
+    fn name(&self) -> &str {
+        "adaptive"
+    }
+
+    fn plan(&mut self, state: &mut EngineState) -> Option<IterationPlan> {
+        if self.composer_needs_unit() {
+            let admitted = self.admission.admit(state);
+            if !admitted.is_empty() {
+                // A fresh admission cohort: re-evaluate the axis. Both
+                // composers are idle here, so switching abandons nothing.
+                let sig =
+                    SignalSnapshot::observe(state, &admitted, self.spec.window_s, self.spec.chunk);
+                let next = self.choose(&sig);
+                if next != self.axis {
+                    self.switches += 1;
+                    self.axis = next;
+                }
+            }
+            let unit = match self.axis {
+                Axis::Token => self.chunk_shaper.shape(state, &admitted),
+                Axis::Layer => self.full_shaper.shape(state, &admitted),
+            };
+            if !unit.is_empty() {
+                match self.axis {
+                    Axis::Token => self.interleave.load(unit),
+                    Axis::Layer => self.groups.load(unit),
+                }
+            }
+        }
+        match self.axis {
+            Axis::Token => self.interleave.compose(state),
+            Axis::Layer => self.groups.compose(state),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::KvCacheManager;
+    use crate::workload::Request;
+
+    fn state() -> EngineState {
+        EngineState::new(
+            ModelDesc::qwen3_30b_a3b(),
+            KvCacheManager::new(100_000, 16),
+            256,
+        )
+    }
+
+    fn req(id: u64, input: u32, output: u32) -> Request {
+        Request {
+            id,
+            arrival_s: 0.0,
+            input_len: input,
+            output_len: output,
+            ..Default::default()
+        }
+    }
+
+    fn sched() -> AdaptiveScheduler {
+        AdaptiveScheduler::new(AdaptiveSpec::default(), 48)
+    }
+
+    #[test]
+    fn chunking_amplifies_modeled_expert_bytes() {
+        // The paper's core claim feeding the decision rule: chunking a long
+        // prompt loads far more expert bytes than one layer-axis pass.
+        let m = ModelDesc::qwen3_30b_a3b();
+        let (token, layer) = axis_expert_bytes(&m, 8192, 512);
+        assert!(token > 2.0 * layer, "token {token:.3e} vs layer {layer:.3e}");
+        // A prompt inside one chunk is identical either way.
+        let (token, layer) = axis_expert_bytes(&m, 300, 512);
+        assert!((token - layer).abs() < 1e-6);
+        assert_eq!(axis_expert_bytes(&m, 0, 512), (0.0, 0.0));
+    }
+
+    #[test]
+    fn long_cohort_runs_layer_axis_short_runs_token_axis() {
+        let mut s = sched();
+        let mut st = state();
+        st.arrive(req(1, 8192, 4));
+        let p = s.plan(&mut st).unwrap();
+        assert_eq!(s.axis(), Axis::Layer);
+        assert_eq!(s.switches(), 1, "started on Token, flipped to Layer");
+        // Layer axis: 16 groups, one prefilling (I1), unit spans 8192.
+        assert_eq!(p.groups.len(), 16);
+        assert_eq!(p.prefill_groups(), 1);
+        // Drain the cohort's 15 remaining groups.
+        for _ in 0..15 {
+            let _ = s.plan(&mut st).unwrap();
+        }
+        // Emulate prefill completion so the next cohort sees a clean state.
+        {
+            let r = st.reqs.get_mut(&1).unwrap();
+            r.prefill_done = 8192;
+            r.token_layers_done = 8192 * 48;
+            r.generated = 1;
+            r.phase = Phase::Decoding;
+        }
+        st.prefilling.clear();
+        st.decoding.push(1);
+        // A short cohort flips back to the token axis: single full-stack
+        // group, whole prompt in one completing slice.
+        st.arrive(req(2, 128, 4));
+        let p = s.plan(&mut st).unwrap();
+        assert_eq!(s.axis(), Axis::Token);
+        assert_eq!(s.switches(), 2);
+        assert_eq!(p.groups.len(), 1);
+        assert_eq!(p.groups[0].prefill[0].tokens, 128);
+        assert!(p.groups[0].prefill[0].completes);
+        // I3: the ongoing decode rides in the (single) group.
+        assert_eq!(p.groups[0].decode.len(), 1);
+    }
+
+    #[test]
+    fn tbt_pressure_biases_toward_layer_axis() {
+        let spec = AdaptiveSpec {
+            tbt_slo_s: 0.03,
+            ..AdaptiveSpec::default()
+        };
+        let mut s = AdaptiveScheduler::new(spec, 48);
+        let mut st = state();
+        st.now_s = 1.0;
+        // A live decode whose latest gap is 50 ms: the TBT signal fires.
+        st.arrive(req(9, 10, 30));
+        {
+            let r = st.reqs.get_mut(&9).unwrap();
+            r.phase = Phase::Decoding;
+            r.prefill_done = 10;
+            r.generated = 3;
+            r.first_token_s = Some(0.4);
+            r.tbts = vec![0.01, 0.05];
+        }
+        st.waiting.clear();
+        st.decoding.push(9);
+        // A short prompt that would otherwise run the token axis.
+        st.arrive(req(1, 64, 4));
+        let _ = s.plan(&mut st).unwrap();
+        assert_eq!(s.axis(), Axis::Layer, "TBT violation forces the layer axis");
+    }
+
+    #[test]
+    fn signals_observe_queue_mix_and_live_latency() {
+        let mut st = state();
+        st.now_s = 20.0;
+        st.arrive(req(1, 1000, 4));
+        st.arrive(req(2, 3000, 4));
+        // Finished records are NEVER rescanned (the signals stay bounded
+        // by the live batch, not the run length) — this huge stale gap
+        // must not register.
+        st.arrive(req(3, 10, 2));
+        {
+            let r = st.reqs.get_mut(&3).unwrap();
+            r.phase = Phase::Finished;
+            r.first_token_s = Some(1.0);
+            r.finish_s = Some(2.0);
+            r.tbts = vec![0.5];
+        }
+        st.waiting.retain(|&id| id != 3);
+        // A live decode contributes its LATEST gap and its in-window TTFT.
+        st.arrive(req(4, 10, 50));
+        {
+            let r = st.reqs.get_mut(&4).unwrap();
+            r.phase = Phase::Decoding;
+            r.prefill_done = 10;
+            r.generated = 3;
+            r.first_token_s = Some(15.0);
+            r.tbts = vec![0.2, 0.04];
+        }
+        st.waiting.retain(|&id| id != 4);
+        st.decoding.push(4);
+        let sig = SignalSnapshot::observe(&st, &[], 10.0, 512);
+        assert_eq!(sig.cohort_remaining, 0);
+        assert!((sig.waiting_mean_len - 2000.0).abs() < 1e-9);
+        assert_eq!(
+            sig.window_tbt_max_s, 0.04,
+            "latest live gap, not the stale completion's 0.5"
+        );
+        assert!(
+            (sig.window_ttft_max_s - 15.0).abs() < 1e-9,
+            "live TTFT: first token at 15 s minus arrival at 0"
+        );
+    }
+}

@@ -1,0 +1,271 @@
+//! Policy API v2: scheduling as a composable pipeline.
+//!
+//! The paper's thesis is that the *scheduling axis* (tokens vs layers) is a
+//! first-class design choice. The original API hard-coded that choice into
+//! five closed policies behind the [`Policy`](crate::config::Policy) enum;
+//! this module decomposes every policy into three orthogonal stages so new
+//! operating points are a configuration, not a sixth hand-written policy:
+//!
+//! * [`AdmissionPolicy`] — who enters the running batch, and when
+//!   (greedy FCFS, fixed run-to-completion batches, merged admission
+//!   cohorts, one-at-a-time). Admission goes through
+//!   [`EngineState::admit`], so KV capacity gating and prefix-cache
+//!   crediting apply uniformly to every composition.
+//! * [`PrefillShaper`] — how the admitted requests' remaining prefill is
+//!   sliced into the next [`PrefillUnit`]: token-axis chunks, whole
+//!   prompts, a cohort's full remaining work, or one request's next
+//!   large chunk.
+//! * [`BatchComposer`] — how a prefill unit interleaves with the ongoing
+//!   decode batch across layer groups: one full-stack hybrid batch per
+//!   iteration (token axis) or G contiguous layer groups with exactly one
+//!   group prefilling per iteration (layer axis), enforcing I1–I4 either
+//!   way.
+//!
+//! [`PipelineScheduler`] drives the three stages through the existing
+//! [`Scheduler`] trait, so the engine core, the serve surface, and the
+//! cluster layer are untouched consumers. The declarative
+//! [`spec::PolicySpec`] names a composition (preset, compact string, or
+//! JSON) and compiles it via [`crate::sched::build`]; each of the five
+//! legacy policies is re-expressed as a canonical composition that is
+//! bit-identical to its direct construction (locked by
+//! `tests/policy_spec.rs`). [`adaptive::AdaptiveScheduler`] goes beyond
+//! the closed set: it re-evaluates the shaper/composer choice per
+//! admission cohort from live signals (prompt-length mix, the
+//! `moe::traffic` expert-reload estimate, sliding-window TTFT/TBT),
+//! generalizing the paper's §4.3 hybrid into a runtime policy.
+
+pub mod adaptive;
+pub mod spec;
+pub mod stages;
+
+pub use adaptive::{AdaptiveScheduler, Axis, SignalSnapshot};
+pub use spec::{AdaptiveSpec, AdmissionSpec, ComposerSpec, PolicySpec, ShaperSpec};
+pub use stages::{
+    BatchAdmission, CohortAdmission, CohortShaper, FullPromptShaper, GreedyAdmission,
+    InterleaveComposer, LayerGroupComposer, SoloAdmission, SoloChunkShaper, TokenChunkShaper,
+};
+
+use crate::sched::{EngineState, IterationPlan, PrefillWork, Scheduler};
+
+/// One unit of prefill work produced by a [`PrefillShaper`] and consumed by
+/// a [`BatchComposer`]. A token-axis composer runs the whole unit in one
+/// iteration; a layer-axis composer spreads it over G iterations, one layer
+/// group at a time, holding the slices fixed so each prompt token visits
+/// each layer's prefill path exactly once (I2).
+///
+/// A slice's `completes` flag means "this unit finishes the request's
+/// prompt"; the composer rewrites it per iteration (a layer-axis unit only
+/// completes when its LAST group runs).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PrefillUnit {
+    /// Per-request prefill slices (may include zero-token completing slices
+    /// for empty / fully-cached prompts, which cost nothing but let the
+    /// engine emit their first token).
+    pub slices: Vec<PrefillWork>,
+    /// Total prompt tokens in the unit — the layer-axis composer sizes
+    /// G(L) from this.
+    pub tokens: u32,
+}
+
+impl PrefillUnit {
+    pub fn is_empty(&self) -> bool {
+        self.slices.is_empty()
+    }
+}
+
+/// Stage 1: decide which waiting requests enter the running batch.
+///
+/// Called once per prefill-unit boundary (every iteration for token-axis
+/// compositions; between units for layer-axis ones). Implementations admit
+/// through [`EngineState::admit`] — which reserves KV, takes prefix-cache
+/// credit, and logs `Admitted`/`KvRejected` outcomes — and return the ids
+/// admitted this round, in admission order.
+pub trait AdmissionPolicy {
+    fn admit(&mut self, state: &mut EngineState) -> Vec<u64>;
+}
+
+/// Stage 2: slice remaining prefill into the next [`PrefillUnit`].
+///
+/// `admitted` is the cohort stage 1 just admitted (possibly empty);
+/// shapers are free to slice over the whole `state.prefilling` set instead
+/// (the token-axis shapers do, so no admitted request is ever stranded).
+pub trait PrefillShaper {
+    fn shape(&mut self, state: &EngineState, admitted: &[u64]) -> PrefillUnit;
+}
+
+/// Stage 3: interleave the current prefill unit with the decode batch
+/// across layer groups, emitting one [`IterationPlan`] per iteration.
+pub trait BatchComposer {
+    /// True when the current unit is fully consumed and the pipeline
+    /// should admit + shape a new one before composing.
+    fn needs_unit(&self) -> bool;
+    /// Install the next unit (callers only load non-empty units, and only
+    /// when [`BatchComposer::needs_unit`] is true).
+    fn load(&mut self, unit: PrefillUnit);
+    /// Emit this iteration's plan. Reads the decode set fresh from `state`
+    /// (I3: every decoding request decodes every iteration). Returns None
+    /// when there is neither prefill nor decode work.
+    fn compose(&mut self, state: &EngineState) -> Option<IterationPlan>;
+}
+
+/// A [`Scheduler`] composed from the three pipeline stages. The per-plan
+/// cycle is: when the composer is between units, admit (stage 1) and shape
+/// (stage 2); then compose (stage 3).
+pub struct PipelineScheduler {
+    name: String,
+    admission: Box<dyn AdmissionPolicy>,
+    shaper: Box<dyn PrefillShaper>,
+    composer: Box<dyn BatchComposer>,
+}
+
+impl PipelineScheduler {
+    pub fn new(
+        name: String,
+        admission: Box<dyn AdmissionPolicy>,
+        shaper: Box<dyn PrefillShaper>,
+        composer: Box<dyn BatchComposer>,
+    ) -> Self {
+        PipelineScheduler {
+            name,
+            admission,
+            shaper,
+            composer,
+        }
+    }
+}
+
+impl Scheduler for PipelineScheduler {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn plan(&mut self, state: &mut EngineState) -> Option<IterationPlan> {
+        if self.composer.needs_unit() {
+            let admitted = self.admission.admit(state);
+            let unit = self.shaper.shape(state, &admitted);
+            if !unit.is_empty() {
+                self.composer.load(unit);
+            }
+        }
+        self.composer.compose(state)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelDesc, Policy};
+    use crate::kvcache::KvCacheManager;
+    use crate::workload::Request;
+
+    fn state() -> EngineState {
+        EngineState::new(
+            ModelDesc::qwen3_30b_a3b(),
+            KvCacheManager::new(100_000, 16),
+            256,
+        )
+    }
+
+    fn req(id: u64, input: u32, output: u32) -> Request {
+        Request {
+            id,
+            arrival_s: 0.0,
+            input_len: input,
+            output_len: output,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn preset_pipelines_report_legacy_names() {
+        for p in Policy::ALL {
+            let sched = PolicySpec::preset(p).build(48);
+            assert_eq!(sched.name(), p.name());
+        }
+    }
+
+    #[test]
+    fn chunked_pipeline_plans_like_legacy_chunked() {
+        // Same scenario as chunked.rs::splits_long_prompt_into_chunks, now
+        // through the composed pipeline.
+        let mut st = state();
+        let mut s = PolicySpec::preset(Policy::Chunked).build(48);
+        st.arrive(req(1, 1300, 10));
+        let p1 = s.plan(&mut st).unwrap();
+        assert_eq!(p1.groups.len(), 1);
+        assert_eq!(p1.groups[0].prefill[0].tokens, 512);
+        assert!(!p1.groups[0].prefill[0].completes);
+        st.reqs.get_mut(&1).unwrap().prefill_done = 512;
+        let p2 = s.plan(&mut st).unwrap();
+        assert_eq!(p2.groups[0].prefill[0].pos, 512);
+        st.reqs.get_mut(&1).unwrap().prefill_done = 1024;
+        let p3 = s.plan(&mut st).unwrap();
+        assert_eq!(p3.groups[0].prefill[0].tokens, 276);
+        assert!(p3.groups[0].prefill[0].completes);
+    }
+
+    #[test]
+    fn layered_pipeline_advances_one_group_per_iteration() {
+        // Mirrors layered.rs::one_group_prefills_per_iteration.
+        let mut st = state();
+        let mut s = PolicySpec::preset(Policy::Layered).build(48);
+        st.arrive(req(1, 8192, 10));
+        for it in 0..16 {
+            let p = s.plan(&mut st).unwrap();
+            assert_eq!(p.prefill_groups(), 1, "iter {it}");
+            assert_eq!(p.groups.len(), 16);
+            assert_eq!(p.total_layers(), 48);
+            let prefill_group = p.groups.iter().position(|g| !g.prefill.is_empty());
+            assert_eq!(prefill_group, Some(it));
+            assert_eq!(p.groups[it].prefill[0].completes, it == 15);
+        }
+    }
+
+    #[test]
+    fn custom_composition_budgeted_chunks_on_the_layer_axis() {
+        // A point the old enum could not express: Sarathi-style 512-token
+        // budget chunks (multi-request coalescing) scheduled on the LAYER
+        // axis — each chunk-set spread over G groups.
+        let spec = PolicySpec::Pipeline {
+            name: None,
+            admission: AdmissionSpec::Fcfs { max_batch: 256 },
+            shaper: ShaperSpec::TokenChunks { chunk: 512 },
+            composer: ComposerSpec::LayerGroups { target: 512 },
+        };
+        let mut st = state();
+        let mut s = spec.build(48);
+        st.arrive(req(1, 100, 5));
+        st.arrive(req(2, 300, 5));
+        let p = s.plan(&mut st).unwrap();
+        // 400 coalesced tokens -> one group (G = 1), both requests sliced.
+        assert_eq!(p.groups.len(), 1);
+        assert_eq!(p.groups[0].prefill.len(), 2);
+        assert!(p.groups[0].prefill.iter().all(|w| w.completes));
+        // A long prompt's 512-token chunk spreads over G = 1 group per
+        // 512-token unit; a 1300-token prompt takes 512+512+276.
+        let mut st = state();
+        let mut s = spec.build(48);
+        st.arrive(req(9, 1300, 5));
+        let p = s.plan(&mut st).unwrap();
+        assert_eq!(p.groups[0].prefill[0].tokens, 512);
+        assert!(!p.groups[0].prefill[0].completes);
+    }
+
+    #[test]
+    fn zero_length_prompt_completes_under_every_preset_pipeline() {
+        for p in Policy::ALL {
+            let mut st = state();
+            let mut s = PolicySpec::preset(p).build(48);
+            st.arrive(req(1, 0, 3));
+            let plan = s.plan(&mut st).unwrap();
+            let w = plan
+                .groups
+                .iter()
+                .find_map(|g| g.prefill.first())
+                .copied()
+                .unwrap_or_else(|| panic!("{}: empty prompt unscheduled", p.name()));
+            assert_eq!(w.tokens, 0, "{}", p.name());
+            assert!(w.completes, "{}: empty prompt must complete", p.name());
+        }
+    }
+}

@@ -1,0 +1,1029 @@
+//! Declarative policy specifications.
+//!
+//! A [`PolicySpec`] names a scheduling pipeline — (admission, shaper,
+//! composer) — or an adaptive policy, in a form that parses from a preset
+//! name, a compact `key=value` string, or JSON (via the vendored
+//! `util::json` parser; no external crates offline), and compiles into the
+//! existing [`Scheduler`] trait object via [`PolicySpec::build`] /
+//! [`crate::sched::build`]. The five legacy [`Policy`] presets are
+//! canonical compositions ([`PolicySpec::preset`]) and the per-policy
+//! default constants live HERE — [`SchedulerConfig::preset`] and the CLI
+//! defaults read them, so presets cannot drift from their `--policy-spec`
+//! equivalents.
+//!
+//! Accepted forms (see [`PolicySpec::parse`]):
+//!
+//! * preset names — `static | orca | chunked | layered | hybrid`
+//!   (case-insensitive, plus the `continuous` / `sarathi` aliases);
+//! * `adaptive` or `adaptive:long=1024,window=10,tbt=0.03,chunk=512,`
+//!   `target=512,bias=1.25,max-batch=256` — the signal-driven policy;
+//! * compact pipelines — `admission=cohort:512,shaper=chunks:512,`
+//!   `composer=groups:512` (omitted stages default to the chunked
+//!   baseline's stage), optionally `name=my-spec`;
+//! * JSON — `{"admission":{"kind":"fcfs","max_batch":256},`
+//!   `"shaper":{"kind":"chunks","chunk":512},`
+//!   `"composer":{"kind":"interleave"}}`, or `{"kind":"adaptive",...}`;
+//!   [`PolicySpec::to_json`] round-trips.
+
+use crate::config::{Policy, SchedulerConfig};
+use crate::sched::policy::adaptive::AdaptiveScheduler;
+use crate::sched::policy::stages::{
+    BatchAdmission, CohortAdmission, CohortShaper, FullPromptShaper, GreedyAdmission,
+    InterleaveComposer, LayerGroupComposer, SoloAdmission, SoloChunkShaper, TokenChunkShaper,
+};
+use crate::sched::policy::{AdmissionPolicy, BatchComposer, PipelineScheduler, PrefillShaper};
+use crate::sched::Scheduler;
+use crate::util::json::{self, Json};
+
+use std::collections::BTreeMap;
+
+/// Token-axis chunk size (Sarathi: typically 256–512; paper uses 512).
+pub const CHUNK_TOKENS: u32 = 512;
+/// Layer-axis per-iteration prefill work target: G(L) = ceil(L / target)
+/// (paper §4.4 uses 512 to mirror the chunked baseline).
+pub const GROUP_TOKEN_TARGET: u32 = 512;
+/// Hybrid (§4.3) token-axis chunk applied before layering (large, so MoE
+/// expert GEMMs stay compute-bound).
+pub const HYBRID_CHUNK_TOKENS: u32 = 4096;
+/// Max concurrent requests in the running batch.
+pub const MAX_BATCH: usize = 256;
+/// Static batching batch size.
+pub const STATIC_BATCH: usize = 16;
+
+/// Stage 1 spec: who enters the running batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionSpec {
+    /// Greedy FCFS while the batch cap and KV allow (chunked / Orca).
+    Fcfs { max_batch: usize },
+    /// Fixed batches, run-to-completion (static batching).
+    Batch { batch_size: usize },
+    /// Merged admission cohorts, one cohort at a time (layered, §4.4).
+    Cohort {
+        max_batch: usize,
+        merge: bool,
+        merge_target: u32,
+    },
+    /// One request at a time; the next admits only when no admitted
+    /// request has prefill remaining (hybrid, §4.3).
+    Solo { max_batch: usize },
+}
+
+/// Stage 2 spec: how remaining prefill is sliced into units.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShaperSpec {
+    /// Token-axis budget chunks coalesced FCFS (Sarathi).
+    TokenChunks { chunk: u32 },
+    /// Whole remaining prompt per request (Orca / static).
+    FullPrompt,
+    /// The admission cohort's full remaining prefill as one unit (layered).
+    CohortUnit,
+    /// One request's next large chunk per unit (hybrid).
+    SoloChunk { chunk: u32 },
+}
+
+/// Stage 3 spec: how prefill interleaves with decode across layer groups.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ComposerSpec {
+    /// One full-stack hybrid batch per iteration (token axis).
+    Interleave,
+    /// G(L) contiguous layer groups, one prefilling per iteration
+    /// (layer axis, the paper's contribution).
+    LayerGroups { target: u32 },
+}
+
+/// Knobs for the signal-driven adaptive policy (see
+/// [`crate::sched::policy::adaptive`]). Per admission cohort it chooses
+/// the token axis (chunked shaping) or the layer axis (full-remaining
+/// unit over G groups) from live signals.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdaptiveSpec {
+    /// Batch cap for the greedy cohort admission.
+    pub max_batch: usize,
+    /// Token-arm chunk size.
+    pub chunk: u32,
+    /// Layer-arm G(L) target.
+    pub group_target: u32,
+    /// Cohorts with at least this much remaining prefill are candidates
+    /// for the layer axis (below it a prompt fits one chunk and chunking
+    /// cannot amplify expert reloads).
+    pub long_prompt: u32,
+    /// Choose the layer axis when the modeled token-axis expert-load bytes
+    /// exceed `reload_bias` × the layer-axis bytes (moe::traffic coverage
+    /// estimate over the cohort's remaining prefill).
+    pub reload_bias: f64,
+    /// Sliding window (engine seconds) for the observed TTFT/TBT signals.
+    pub window_s: f64,
+    /// When > 0: observed windowed max TBT above this biases the choice
+    /// toward the layer axis (smaller per-iteration prefill footprint).
+    /// 0 disables the latency signal.
+    pub tbt_slo_s: f64,
+}
+
+impl Default for AdaptiveSpec {
+    fn default() -> Self {
+        AdaptiveSpec {
+            max_batch: MAX_BATCH,
+            chunk: CHUNK_TOKENS,
+            group_target: GROUP_TOKEN_TARGET,
+            long_prompt: 2 * GROUP_TOKEN_TARGET,
+            reload_bias: 1.25,
+            window_s: 10.0,
+            tbt_slo_s: 0.0,
+        }
+    }
+}
+
+/// A declarative scheduling policy: a named pipeline composition or the
+/// adaptive policy. See the [module docs](self) for the accepted textual
+/// forms.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PolicySpec {
+    Pipeline {
+        /// Optional display name (surfaced in reports; presets and
+        /// unnamed compositions derive one).
+        name: Option<String>,
+        admission: AdmissionSpec,
+        shaper: ShaperSpec,
+        composer: ComposerSpec,
+    },
+    Adaptive(AdaptiveSpec),
+}
+
+impl PolicySpec {
+    /// The canonical composition of a legacy [`Policy`] preset —
+    /// bit-identical to the direct construction (locked by
+    /// `tests/policy_spec.rs`).
+    pub fn preset(policy: Policy) -> PolicySpec {
+        Self::from_config(&SchedulerConfig::preset(policy))
+    }
+
+    /// Re-express ANY legacy scheduler configuration (policy + knobs) as
+    /// its canonical pipeline composition.
+    pub fn from_config(cfg: &SchedulerConfig) -> PolicySpec {
+        let (admission, shaper, composer) = match cfg.policy {
+            Policy::Static => (
+                AdmissionSpec::Batch {
+                    batch_size: cfg.static_batch,
+                },
+                ShaperSpec::FullPrompt,
+                ComposerSpec::Interleave,
+            ),
+            Policy::Orca => (
+                AdmissionSpec::Fcfs {
+                    max_batch: cfg.max_batch,
+                },
+                ShaperSpec::FullPrompt,
+                ComposerSpec::Interleave,
+            ),
+            Policy::Chunked => (
+                AdmissionSpec::Fcfs {
+                    max_batch: cfg.max_batch,
+                },
+                ShaperSpec::TokenChunks {
+                    chunk: cfg.chunk_size,
+                },
+                ComposerSpec::Interleave,
+            ),
+            Policy::Layered => (
+                AdmissionSpec::Cohort {
+                    max_batch: cfg.max_batch,
+                    merge: cfg.merge_small_prefills,
+                    merge_target: cfg.group_token_target,
+                },
+                ShaperSpec::CohortUnit,
+                ComposerSpec::LayerGroups {
+                    target: cfg.group_token_target,
+                },
+            ),
+            Policy::Hybrid => (
+                AdmissionSpec::Solo {
+                    max_batch: cfg.max_batch,
+                },
+                ShaperSpec::SoloChunk {
+                    chunk: cfg.hybrid_chunk_size,
+                },
+                ComposerSpec::LayerGroups {
+                    target: cfg.group_token_target,
+                },
+            ),
+        };
+        PolicySpec::Pipeline {
+            name: None,
+            admission,
+            shaper,
+            composer,
+        }
+    }
+
+    /// The preset this composition IS, if any (component-wise equality
+    /// with [`PolicySpec::preset`], names ignored).
+    pub fn matches_preset(&self) -> Option<Policy> {
+        let PolicySpec::Pipeline {
+            admission,
+            shaper,
+            composer,
+            ..
+        } = self
+        else {
+            return None;
+        };
+        for p in Policy::ALL {
+            if let PolicySpec::Pipeline {
+                admission: a,
+                shaper: s,
+                composer: c,
+                ..
+            } = PolicySpec::preset(p)
+            {
+                if *admission == a && *shaper == s && *composer == c {
+                    return Some(p);
+                }
+            }
+        }
+        None
+    }
+
+    /// The legacy policy this spec is closest to — used where a coarse
+    /// axis classification is needed (e.g. the SLO-aware router's
+    /// layer-axis/token-axis split via `ReplicaView::policy`). Exact
+    /// preset compositions map to their preset; otherwise the composer
+    /// axis decides, and the adaptive policy counts as layer-capable.
+    pub fn nearest_policy(&self) -> Policy {
+        if let Some(p) = self.matches_preset() {
+            return p;
+        }
+        match self {
+            PolicySpec::Adaptive(_) => Policy::Layered,
+            PolicySpec::Pipeline { composer, .. } => match composer {
+                ComposerSpec::LayerGroups { .. } => Policy::Layered,
+                ComposerSpec::Interleave => Policy::Chunked,
+            },
+        }
+    }
+
+    /// Display name: an explicit `name`, a preset's legacy name, or a
+    /// derived `pipeline(..)` / `adaptive` label. Surfaced per replica in
+    /// `SessionReport::policies` and the CLI tables.
+    pub fn name(&self) -> String {
+        match self {
+            PolicySpec::Adaptive(_) => "adaptive".to_string(),
+            PolicySpec::Pipeline {
+                name: Some(n), ..
+            } => n.clone(),
+            PolicySpec::Pipeline {
+                admission,
+                shaper,
+                composer,
+                ..
+            } => match self.matches_preset() {
+                Some(p) => p.name().to_string(),
+                None => format!(
+                    "pipeline({}+{}+{})",
+                    admission_label(admission),
+                    shaper_label(shaper),
+                    composer_label(composer)
+                ),
+            },
+        }
+    }
+
+    /// Compile the spec into a scheduler for an `n_layers`-deep model.
+    pub fn build(&self, n_layers: u32) -> Box<dyn Scheduler> {
+        match self {
+            PolicySpec::Adaptive(a) => Box::new(AdaptiveScheduler::new(*a, n_layers)),
+            PolicySpec::Pipeline {
+                admission,
+                shaper,
+                composer,
+                ..
+            } => {
+                let admission: Box<dyn AdmissionPolicy> = match *admission {
+                    AdmissionSpec::Fcfs { max_batch } => Box::new(GreedyAdmission::new(max_batch)),
+                    AdmissionSpec::Batch { batch_size } => Box::new(BatchAdmission::new(batch_size)),
+                    AdmissionSpec::Cohort {
+                        max_batch,
+                        merge,
+                        merge_target,
+                    } => Box::new(CohortAdmission::new(max_batch, merge, merge_target)),
+                    AdmissionSpec::Solo { max_batch } => Box::new(SoloAdmission::new(max_batch)),
+                };
+                let shaper: Box<dyn PrefillShaper> = match *shaper {
+                    ShaperSpec::TokenChunks { chunk } => Box::new(TokenChunkShaper::new(chunk)),
+                    ShaperSpec::FullPrompt => Box::new(FullPromptShaper::new()),
+                    ShaperSpec::CohortUnit => Box::new(CohortShaper::new()),
+                    ShaperSpec::SoloChunk { chunk } => Box::new(SoloChunkShaper::new(chunk)),
+                };
+                let composer: Box<dyn BatchComposer> = match *composer {
+                    ComposerSpec::Interleave => Box::new(InterleaveComposer::new(n_layers)),
+                    ComposerSpec::LayerGroups { target } => {
+                        Box::new(LayerGroupComposer::new(n_layers, target))
+                    }
+                };
+                Box::new(PipelineScheduler::new(
+                    self.name(),
+                    admission,
+                    shaper,
+                    composer,
+                ))
+            }
+        }
+    }
+
+    /// A [`SchedulerConfig`] that carries this spec (so
+    /// [`crate::sched::build`] compiles it) with the legacy knob fields
+    /// mirrored for consumers that read them (replica views, KV sizing).
+    pub fn scheduler_config(&self) -> SchedulerConfig {
+        let mut cfg = SchedulerConfig::preset(self.nearest_policy());
+        match self {
+            PolicySpec::Adaptive(a) => {
+                cfg.max_batch = a.max_batch;
+                cfg.chunk_size = a.chunk;
+                cfg.group_token_target = a.group_target;
+            }
+            PolicySpec::Pipeline {
+                admission,
+                shaper,
+                composer,
+                ..
+            } => {
+                match *admission {
+                    AdmissionSpec::Fcfs { max_batch }
+                    | AdmissionSpec::Solo { max_batch } => cfg.max_batch = max_batch,
+                    AdmissionSpec::Batch { batch_size } => cfg.static_batch = batch_size,
+                    AdmissionSpec::Cohort {
+                        max_batch,
+                        merge,
+                        merge_target,
+                    } => {
+                        cfg.max_batch = max_batch;
+                        cfg.merge_small_prefills = merge;
+                        cfg.group_token_target = merge_target;
+                    }
+                }
+                match *shaper {
+                    ShaperSpec::TokenChunks { chunk } => cfg.chunk_size = chunk,
+                    ShaperSpec::SoloChunk { chunk } => cfg.hybrid_chunk_size = chunk,
+                    ShaperSpec::FullPrompt | ShaperSpec::CohortUnit => {}
+                }
+                if let ComposerSpec::LayerGroups { target } = *composer {
+                    cfg.group_token_target = target;
+                }
+            }
+        }
+        cfg.spec = Some(self.clone());
+        cfg
+    }
+
+    /// Parse any accepted textual form: preset name, `adaptive[:knobs]`,
+    /// compact `key=value` pipeline, or JSON (leading `{`). Errors name
+    /// the valid alternatives.
+    pub fn parse(s: &str) -> Result<PolicySpec, String> {
+        let t = s.trim();
+        if t.is_empty() {
+            return Err("empty policy spec".to_string());
+        }
+        if t.starts_with('{') {
+            let j = json::parse(t).map_err(|e| format!("policy spec JSON: {e}"))?;
+            return Self::from_json(&j);
+        }
+        let lower = t.to_ascii_lowercase();
+        if let Ok(p) = Policy::parse(&lower) {
+            return Ok(Self::preset(p));
+        }
+        if lower == "adaptive" {
+            return Ok(PolicySpec::Adaptive(AdaptiveSpec::default()));
+        }
+        if let Some(rest) = lower.strip_prefix("adaptive:") {
+            return parse_adaptive_knobs(rest).map(PolicySpec::Adaptive);
+        }
+        if t.contains('=') {
+            // Original-case text: keys and stage values are lowercased
+            // per element, but a `name=` value keeps the user's spelling.
+            return parse_compact(t);
+        }
+        Err(format!(
+            "unknown policy spec '{t}' — want a preset (static | orca | chunked | layered | \
+             hybrid), 'adaptive[:key=value,..]', a pipeline 'admission=..,shaper=..,composer=..', \
+             or JSON"
+        ))
+    }
+
+    /// Parse the JSON object form (see the module docs for the schema).
+    pub fn from_json(j: &Json) -> Result<PolicySpec, String> {
+        let kind = j.get("kind").and_then(Json::as_str);
+        if kind == Some("adaptive") || (kind.is_none() && j.get("long_prompt").is_some()) {
+            let d = AdaptiveSpec::default();
+            let f = |key: &str, dv: f64| j.get(key).and_then(Json::as_f64).unwrap_or(dv);
+            return Ok(PolicySpec::Adaptive(AdaptiveSpec {
+                max_batch: json_cap(j, "max_batch", d.max_batch)?,
+                chunk: f("chunk", d.chunk as f64) as u32,
+                group_target: f("group_target", d.group_target as f64) as u32,
+                long_prompt: f("long_prompt", d.long_prompt as f64) as u32,
+                reload_bias: f("reload_bias", d.reload_bias),
+                window_s: f("window_s", d.window_s),
+                tbt_slo_s: f("tbt_slo_s", d.tbt_slo_s),
+            }));
+        }
+        if let Some(k) = kind {
+            if k != "pipeline" {
+                return Err(format!(
+                    "unknown policy spec kind '{k}' (valid: pipeline | adaptive)"
+                ));
+            }
+        }
+        let admission = match j.get("admission") {
+            Some(a) => admission_from_json(a)?,
+            None => AdmissionSpec::Fcfs {
+                max_batch: MAX_BATCH,
+            },
+        };
+        let shaper = match j.get("shaper") {
+            Some(s) => shaper_from_json(s)?,
+            None => ShaperSpec::TokenChunks {
+                chunk: CHUNK_TOKENS,
+            },
+        };
+        let composer = match j.get("composer") {
+            Some(c) => composer_from_json(c)?,
+            None => ComposerSpec::Interleave,
+        };
+        Ok(PolicySpec::Pipeline {
+            name: j.get("name").and_then(Json::as_str).map(str::to_string),
+            admission,
+            shaper,
+            composer,
+        })
+    }
+
+    /// Serialize to the JSON object form; `parse` round-trips it.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        match self {
+            PolicySpec::Adaptive(a) => {
+                m.insert("kind".into(), Json::Str("adaptive".into()));
+                m.insert("max_batch".into(), Json::Num(a.max_batch as f64));
+                m.insert("chunk".into(), Json::Num(a.chunk as f64));
+                m.insert("group_target".into(), Json::Num(a.group_target as f64));
+                m.insert("long_prompt".into(), Json::Num(a.long_prompt as f64));
+                m.insert("reload_bias".into(), Json::Num(a.reload_bias));
+                m.insert("window_s".into(), Json::Num(a.window_s));
+                m.insert("tbt_slo_s".into(), Json::Num(a.tbt_slo_s));
+            }
+            PolicySpec::Pipeline {
+                name,
+                admission,
+                shaper,
+                composer,
+            } => {
+                m.insert("kind".into(), Json::Str("pipeline".into()));
+                if let Some(n) = name {
+                    m.insert("name".into(), Json::Str(n.clone()));
+                }
+                m.insert("admission".into(), admission_to_json(admission));
+                m.insert("shaper".into(), shaper_to_json(shaper));
+                m.insert("composer".into(), composer_to_json(composer));
+            }
+        }
+        Json::Obj(m)
+    }
+}
+
+fn admission_label(a: &AdmissionSpec) -> String {
+    match *a {
+        AdmissionSpec::Fcfs { .. } => "fcfs".to_string(),
+        AdmissionSpec::Batch { batch_size } => format!("batch:{batch_size}"),
+        AdmissionSpec::Cohort {
+            merge,
+            merge_target,
+            ..
+        } => {
+            if merge {
+                format!("cohort:{merge_target}")
+            } else {
+                format!("cohort:{merge_target}:nomerge")
+            }
+        }
+        AdmissionSpec::Solo { .. } => "solo".to_string(),
+    }
+}
+
+fn shaper_label(s: &ShaperSpec) -> String {
+    match *s {
+        ShaperSpec::TokenChunks { chunk } => format!("chunks:{chunk}"),
+        ShaperSpec::FullPrompt => "full".to_string(),
+        ShaperSpec::CohortUnit => "cohort".to_string(),
+        ShaperSpec::SoloChunk { chunk } => format!("solo:{chunk}"),
+    }
+}
+
+fn composer_label(c: &ComposerSpec) -> String {
+    match *c {
+        ComposerSpec::Interleave => "interleave".to_string(),
+        ComposerSpec::LayerGroups { target } => format!("groups:{target}"),
+    }
+}
+
+fn parse_num<T: std::str::FromStr>(v: &str, what: &str) -> Result<T, String> {
+    v.trim()
+        .parse()
+        .map_err(|_| format!("bad {what} '{v}' (want a number)"))
+}
+
+/// Token counts that must be at least 1 (a zero chunk/target would admit
+/// work and never slice it).
+fn parse_tokens(v: &str, what: &str) -> Result<u32, String> {
+    let n: u32 = parse_num(v, what)?;
+    if n == 0 {
+        return Err(format!("bad {what} '{v}' (must be >= 1)"));
+    }
+    Ok(n)
+}
+
+/// Batch caps that must be at least 1 (a zero cap admits nothing and the
+/// session would 'drain' with every request unserved).
+fn parse_cap(v: &str, what: &str) -> Result<usize, String> {
+    let n: usize = parse_num(v, what)?;
+    if n == 0 {
+        return Err(format!("bad {what} '{v}' (must be >= 1)"));
+    }
+    Ok(n)
+}
+
+/// `admission=cohort:512[:nomerge]`-style stage values.
+fn parse_admission(v: &str) -> Result<AdmissionSpec, String> {
+    let mut parts = v.split(':');
+    let head = parts.next().unwrap_or("");
+    let arg1 = parts.next();
+    let arg2 = parts.next();
+    if parts.next().is_some() {
+        return Err(format!(
+            "bad admission '{v}' (too many ':' segments; want \
+             fcfs[:max] | batch[:size] | cohort[:target][:nomerge] | solo[:max])"
+        ));
+    }
+    if head != "cohort" && arg2.is_some() {
+        return Err(format!("bad admission '{v}' (only cohort takes a second ':' segment)"));
+    }
+    match head {
+        "fcfs" => Ok(AdmissionSpec::Fcfs {
+            max_batch: match arg1 {
+                Some(a) => parse_cap(a, "fcfs max_batch")?,
+                None => MAX_BATCH,
+            },
+        }),
+        "batch" => Ok(AdmissionSpec::Batch {
+            batch_size: match arg1 {
+                Some(a) => parse_cap(a, "batch size")?,
+                None => STATIC_BATCH,
+            },
+        }),
+        "cohort" => {
+            let merge = match arg2 {
+                None => true,
+                Some("nomerge") => false,
+                Some(other) => {
+                    return Err(format!(
+                        "bad cohort flag '{other}' (the only valid third segment is 'nomerge')"
+                    ))
+                }
+            };
+            Ok(AdmissionSpec::Cohort {
+                max_batch: MAX_BATCH,
+                merge,
+                merge_target: match arg1 {
+                    Some(a) => parse_tokens(a, "cohort merge target")?,
+                    None => GROUP_TOKEN_TARGET,
+                },
+            })
+        }
+        "solo" => Ok(AdmissionSpec::Solo {
+            max_batch: match arg1 {
+                Some(a) => parse_cap(a, "solo max_batch")?,
+                None => MAX_BATCH,
+            },
+        }),
+        other => Err(format!(
+            "unknown admission '{other}' (valid: fcfs[:max] | batch[:size] | \
+             cohort[:target][:nomerge] | solo[:max])"
+        )),
+    }
+}
+
+fn parse_shaper(v: &str) -> Result<ShaperSpec, String> {
+    let (head, arg) = match v.split_once(':') {
+        Some((h, a)) => (h, Some(a)),
+        None => (v, None),
+    };
+    match head {
+        "chunks" => Ok(ShaperSpec::TokenChunks {
+            chunk: match arg {
+                Some(a) => parse_tokens(a, "chunk size")?,
+                None => CHUNK_TOKENS,
+            },
+        }),
+        "full" => Ok(ShaperSpec::FullPrompt),
+        "cohort" => Ok(ShaperSpec::CohortUnit),
+        "solo" => Ok(ShaperSpec::SoloChunk {
+            chunk: match arg {
+                Some(a) => parse_tokens(a, "solo chunk size")?,
+                None => HYBRID_CHUNK_TOKENS,
+            },
+        }),
+        other => Err(format!(
+            "unknown shaper '{other}' (valid: chunks[:n] | full | cohort | solo[:n])"
+        )),
+    }
+}
+
+fn parse_composer(v: &str) -> Result<ComposerSpec, String> {
+    let (head, arg) = match v.split_once(':') {
+        Some((h, a)) => (h, Some(a)),
+        None => (v, None),
+    };
+    match head {
+        "interleave" => Ok(ComposerSpec::Interleave),
+        "groups" => Ok(ComposerSpec::LayerGroups {
+            target: match arg {
+                Some(a) => parse_tokens(a, "group token target")?,
+                None => GROUP_TOKEN_TARGET,
+            },
+        }),
+        other => Err(format!(
+            "unknown composer '{other}' (valid: interleave | groups[:target])"
+        )),
+    }
+}
+
+fn parse_compact(s: &str) -> Result<PolicySpec, String> {
+    // Omitted stages default to the chunked baseline's stage.
+    let mut name = None;
+    let mut admission = AdmissionSpec::Fcfs {
+        max_batch: MAX_BATCH,
+    };
+    let mut shaper = ShaperSpec::TokenChunks {
+        chunk: CHUNK_TOKENS,
+    };
+    let mut composer = ComposerSpec::Interleave;
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let Some((k, v)) = part.split_once('=') else {
+            return Err(format!(
+                "bad pipeline element '{part}' (want key=value with key in \
+                 admission | shaper | composer | name)"
+            ));
+        };
+        match k.trim().to_ascii_lowercase().as_str() {
+            "admission" => admission = parse_admission(&v.trim().to_ascii_lowercase())?,
+            "shaper" => shaper = parse_shaper(&v.trim().to_ascii_lowercase())?,
+            "composer" => composer = parse_composer(&v.trim().to_ascii_lowercase())?,
+            // The display name keeps the user's case (JSON form parity).
+            "name" => name = Some(v.trim().to_string()),
+            other => {
+                return Err(format!(
+                    "unknown pipeline key '{other}' (valid: admission | shaper | composer | name)"
+                ))
+            }
+        }
+    }
+    Ok(PolicySpec::Pipeline {
+        name,
+        admission,
+        shaper,
+        composer,
+    })
+}
+
+fn parse_adaptive_knobs(s: &str) -> Result<AdaptiveSpec, String> {
+    let mut a = AdaptiveSpec::default();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let Some((k, v)) = part.split_once('=') else {
+            return Err(format!("bad adaptive knob '{part}' (want key=value)"));
+        };
+        let v = v.trim();
+        match k.trim() {
+            "long" | "long_prompt" => a.long_prompt = parse_num(v, "long_prompt")?,
+            "window" | "window_s" => a.window_s = parse_num(v, "window_s")?,
+            "tbt" | "tbt_slo" => a.tbt_slo_s = parse_num(v, "tbt_slo_s")?,
+            "chunk" => a.chunk = parse_num(v, "chunk")?,
+            "target" | "group_target" => a.group_target = parse_num(v, "group_target")?,
+            "bias" | "reload_bias" => a.reload_bias = parse_num(v, "reload_bias")?,
+            "max-batch" | "max_batch" => a.max_batch = parse_cap(v, "max_batch")?,
+            other => {
+                return Err(format!(
+                    "unknown adaptive knob '{other}' (valid: long | window | tbt | chunk | \
+                     target | bias | max-batch)"
+                ))
+            }
+        }
+    }
+    Ok(a)
+}
+
+fn req_kind<'j>(j: &'j Json, what: &str) -> Result<&'j str, String> {
+    j.get("kind")
+        .and_then(Json::as_str)
+        .ok_or_else(|| format!("{what} spec needs a string 'kind' field"))
+}
+
+/// Optional token-count field that must be >= 1 when present.
+fn json_tokens(j: &Json, key: &str, default: u32) -> Result<u32, String> {
+    match j.get(key).and_then(Json::as_f64) {
+        None => Ok(default),
+        Some(x) if x >= 1.0 => Ok(x as u32),
+        Some(x) => Err(format!("bad {key} {x} (must be >= 1)")),
+    }
+}
+
+/// Optional batch-cap field that must be >= 1 when present.
+fn json_cap(j: &Json, key: &str, default: usize) -> Result<usize, String> {
+    match j.get(key).and_then(Json::as_f64) {
+        None => Ok(default),
+        Some(x) if x >= 1.0 => Ok(x as usize),
+        Some(x) => Err(format!("bad {key} {x} (must be >= 1)")),
+    }
+}
+
+fn admission_from_json(j: &Json) -> Result<AdmissionSpec, String> {
+    let max_batch = json_cap(j, "max_batch", MAX_BATCH)?;
+    match req_kind(j, "admission")? {
+        "fcfs" => Ok(AdmissionSpec::Fcfs { max_batch }),
+        "batch" => Ok(AdmissionSpec::Batch {
+            batch_size: json_cap(j, "batch_size", STATIC_BATCH)?,
+        }),
+        "cohort" => Ok(AdmissionSpec::Cohort {
+            max_batch,
+            merge: j.get("merge").and_then(Json::as_bool).unwrap_or(true),
+            merge_target: json_tokens(j, "target", GROUP_TOKEN_TARGET)?,
+        }),
+        "solo" => Ok(AdmissionSpec::Solo { max_batch }),
+        other => Err(format!(
+            "unknown admission kind '{other}' (valid: fcfs | batch | cohort | solo)"
+        )),
+    }
+}
+
+fn shaper_from_json(j: &Json) -> Result<ShaperSpec, String> {
+    match req_kind(j, "shaper")? {
+        "chunks" => Ok(ShaperSpec::TokenChunks {
+            chunk: json_tokens(j, "chunk", CHUNK_TOKENS)?,
+        }),
+        "full" => Ok(ShaperSpec::FullPrompt),
+        "cohort" => Ok(ShaperSpec::CohortUnit),
+        "solo" => Ok(ShaperSpec::SoloChunk {
+            chunk: json_tokens(j, "chunk", HYBRID_CHUNK_TOKENS)?,
+        }),
+        other => Err(format!(
+            "unknown shaper kind '{other}' (valid: chunks | full | cohort | solo)"
+        )),
+    }
+}
+
+fn composer_from_json(j: &Json) -> Result<ComposerSpec, String> {
+    match req_kind(j, "composer")? {
+        "interleave" => Ok(ComposerSpec::Interleave),
+        "groups" => Ok(ComposerSpec::LayerGroups {
+            target: json_tokens(j, "target", GROUP_TOKEN_TARGET)?,
+        }),
+        other => Err(format!(
+            "unknown composer kind '{other}' (valid: interleave | groups)"
+        )),
+    }
+}
+
+fn admission_to_json(a: &AdmissionSpec) -> Json {
+    let mut m = BTreeMap::new();
+    match *a {
+        AdmissionSpec::Fcfs { max_batch } => {
+            m.insert("kind".into(), Json::Str("fcfs".into()));
+            m.insert("max_batch".into(), Json::Num(max_batch as f64));
+        }
+        AdmissionSpec::Batch { batch_size } => {
+            m.insert("kind".into(), Json::Str("batch".into()));
+            m.insert("batch_size".into(), Json::Num(batch_size as f64));
+        }
+        AdmissionSpec::Cohort {
+            max_batch,
+            merge,
+            merge_target,
+        } => {
+            m.insert("kind".into(), Json::Str("cohort".into()));
+            m.insert("max_batch".into(), Json::Num(max_batch as f64));
+            m.insert("merge".into(), Json::Bool(merge));
+            m.insert("target".into(), Json::Num(merge_target as f64));
+        }
+        AdmissionSpec::Solo { max_batch } => {
+            m.insert("kind".into(), Json::Str("solo".into()));
+            m.insert("max_batch".into(), Json::Num(max_batch as f64));
+        }
+    }
+    Json::Obj(m)
+}
+
+fn shaper_to_json(s: &ShaperSpec) -> Json {
+    let mut m = BTreeMap::new();
+    match *s {
+        ShaperSpec::TokenChunks { chunk } => {
+            m.insert("kind".into(), Json::Str("chunks".into()));
+            m.insert("chunk".into(), Json::Num(chunk as f64));
+        }
+        ShaperSpec::FullPrompt => {
+            m.insert("kind".into(), Json::Str("full".into()));
+        }
+        ShaperSpec::CohortUnit => {
+            m.insert("kind".into(), Json::Str("cohort".into()));
+        }
+        ShaperSpec::SoloChunk { chunk } => {
+            m.insert("kind".into(), Json::Str("solo".into()));
+            m.insert("chunk".into(), Json::Num(chunk as f64));
+        }
+    }
+    Json::Obj(m)
+}
+
+fn composer_to_json(c: &ComposerSpec) -> Json {
+    let mut m = BTreeMap::new();
+    match *c {
+        ComposerSpec::Interleave => {
+            m.insert("kind".into(), Json::Str("interleave".into()));
+        }
+        ComposerSpec::LayerGroups { target } => {
+            m.insert("kind".into(), Json::Str("groups".into()));
+            m.insert("target".into(), Json::Num(target as f64));
+        }
+    }
+    Json::Obj(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_names_roundtrip_through_parse() {
+        for p in Policy::ALL {
+            let spec = PolicySpec::parse(p.name()).unwrap();
+            assert_eq!(spec, PolicySpec::preset(p));
+            assert_eq!(spec.name(), p.name());
+            assert_eq!(spec.matches_preset(), Some(p));
+            assert_eq!(spec.nearest_policy(), p);
+        }
+        // Case-insensitive, plus the legacy aliases.
+        assert_eq!(
+            PolicySpec::parse("LAYERED").unwrap(),
+            PolicySpec::preset(Policy::Layered)
+        );
+        assert_eq!(
+            PolicySpec::parse("Sarathi").unwrap(),
+            PolicySpec::preset(Policy::Chunked)
+        );
+    }
+
+    #[test]
+    fn preset_constants_single_source_scheduler_config() {
+        // The satellite fix: SchedulerConfig::preset reads THESE constants,
+        // so a preset and its spec equivalent cannot drift.
+        let cfg = SchedulerConfig::preset(Policy::Layered);
+        assert_eq!(cfg.chunk_size, CHUNK_TOKENS);
+        assert_eq!(cfg.group_token_target, GROUP_TOKEN_TARGET);
+        assert_eq!(cfg.hybrid_chunk_size, HYBRID_CHUNK_TOKENS);
+        assert_eq!(cfg.max_batch, MAX_BATCH);
+        assert_eq!(cfg.static_batch, STATIC_BATCH);
+        for p in Policy::ALL {
+            let mirrored = PolicySpec::preset(p).scheduler_config();
+            let preset = SchedulerConfig::preset(p);
+            assert_eq!(mirrored.chunk_size, preset.chunk_size, "{}", p.name());
+            assert_eq!(
+                mirrored.group_token_target, preset.group_token_target,
+                "{}",
+                p.name()
+            );
+            assert_eq!(mirrored.max_batch, preset.max_batch, "{}", p.name());
+            assert_eq!(mirrored.static_batch, preset.static_batch, "{}", p.name());
+            assert!(mirrored.spec.is_some());
+        }
+    }
+
+    #[test]
+    fn compact_pipeline_parse() {
+        let spec =
+            PolicySpec::parse("admission=cohort:256,shaper=chunks:256,composer=groups:128")
+                .unwrap();
+        let PolicySpec::Pipeline {
+            admission,
+            shaper,
+            composer,
+            name,
+        } = spec
+        else {
+            panic!("expected pipeline");
+        };
+        assert_eq!(
+            admission,
+            AdmissionSpec::Cohort {
+                max_batch: MAX_BATCH,
+                merge: true,
+                merge_target: 256
+            }
+        );
+        assert_eq!(shaper, ShaperSpec::TokenChunks { chunk: 256 });
+        assert_eq!(composer, ComposerSpec::LayerGroups { target: 128 });
+        assert_eq!(name, None);
+        // Omitted stages default to the chunked baseline.
+        let spec = PolicySpec::parse("composer=groups").unwrap();
+        assert_eq!(spec.nearest_policy(), Policy::Layered);
+        // Named specs surface the name, preserving the user's case even
+        // though keys and stage values are case-insensitive.
+        let spec = PolicySpec::parse("NAME=MyMix,SHAPER=Full").unwrap();
+        assert_eq!(spec.name(), "MyMix");
+    }
+
+    #[test]
+    fn adaptive_parse_and_knobs() {
+        assert_eq!(
+            PolicySpec::parse("adaptive").unwrap(),
+            PolicySpec::Adaptive(AdaptiveSpec::default())
+        );
+        let PolicySpec::Adaptive(a) =
+            PolicySpec::parse("adaptive:long=4096,window=5,tbt=0.05,chunk=256,target=128")
+                .unwrap()
+        else {
+            panic!("expected adaptive");
+        };
+        assert_eq!(a.long_prompt, 4096);
+        assert_eq!(a.window_s, 5.0);
+        assert_eq!(a.tbt_slo_s, 0.05);
+        assert_eq!(a.chunk, 256);
+        assert_eq!(a.group_target, 128);
+        assert!(PolicySpec::parse("adaptive:bogus=1").is_err());
+    }
+
+    #[test]
+    fn errors_list_valid_alternatives() {
+        let e = PolicySpec::parse("nosuch").unwrap_err();
+        assert!(e.contains("static"), "{e}");
+        assert!(e.contains("adaptive"), "{e}");
+        let e = PolicySpec::parse("admission=nosuch").unwrap_err();
+        assert!(e.contains("fcfs"), "{e}");
+        let e = PolicySpec::parse("shaper=nosuch").unwrap_err();
+        assert!(e.contains("chunks"), "{e}");
+        let e = PolicySpec::parse("composer=nosuch").unwrap_err();
+        assert!(e.contains("interleave"), "{e}");
+        // Zero token budgets would admit work and never slice it.
+        assert!(PolicySpec::parse("shaper=chunks:0").is_err());
+        assert!(PolicySpec::parse("composer=groups:0").is_err());
+        assert!(PolicySpec::parse(r#"{"shaper":{"kind":"chunks","chunk":0}}"#).is_err());
+        // Zero batch caps would admit nothing and 'drain' unserved work.
+        assert!(PolicySpec::parse("admission=fcfs:0").is_err());
+        assert!(PolicySpec::parse("admission=batch:0").is_err());
+        assert!(PolicySpec::parse("adaptive:max-batch=0").is_err());
+        assert!(
+            PolicySpec::parse(r#"{"admission":{"kind":"solo","max_batch":0}}"#).is_err()
+        );
+        // A misspelled cohort flag must not silently flip the merge knob.
+        let e = PolicySpec::parse("admission=cohort:512:nomerg").unwrap_err();
+        assert!(e.contains("nomerge"), "{e}");
+        assert!(PolicySpec::parse("admission=cohort:512:nomerge:x").is_err());
+    }
+
+    #[test]
+    fn json_roundtrips_every_form() {
+        let specs = vec![
+            PolicySpec::preset(Policy::Layered),
+            PolicySpec::preset(Policy::Static),
+            PolicySpec::Adaptive(AdaptiveSpec {
+                long_prompt: 999,
+                ..AdaptiveSpec::default()
+            }),
+            PolicySpec::Pipeline {
+                name: Some("weird".into()),
+                admission: AdmissionSpec::Batch { batch_size: 3 },
+                shaper: ShaperSpec::SoloChunk { chunk: 2048 },
+                composer: ComposerSpec::LayerGroups { target: 256 },
+            },
+        ];
+        for spec in specs {
+            let text = spec.to_json().to_string();
+            let back = PolicySpec::parse(&text).unwrap_or_else(|e| panic!("{text}: {e}"));
+            assert_eq!(back, spec, "{text}");
+        }
+    }
+
+    #[test]
+    fn nearest_policy_classifies_by_composer_axis() {
+        let layer = PolicySpec::parse("shaper=full,composer=groups:128").unwrap();
+        assert_eq!(layer.nearest_policy(), Policy::Layered);
+        let token = PolicySpec::parse("admission=batch:4,shaper=chunks:128").unwrap();
+        assert_eq!(token.nearest_policy(), Policy::Chunked);
+        assert_eq!(
+            PolicySpec::Adaptive(AdaptiveSpec::default()).nearest_policy(),
+            Policy::Layered
+        );
+    }
+}

@@ -1,0 +1,706 @@
+//! Concrete pipeline stages. Each of the five legacy policies is one
+//! canonical (admission, shaper, composer) triple — see
+//! [`PolicySpec::preset`](crate::sched::policy::PolicySpec::preset) — and
+//! every stage is reusable in novel compositions. Stage behavior is an
+//! EXACT decomposition of the legacy policy code: the preset compositions
+//! are bit-identity-locked against direct construction by
+//! `tests/policy_spec.rs`.
+
+use crate::sched::policy::{AdmissionPolicy, BatchComposer, PrefillShaper, PrefillUnit};
+use crate::sched::{
+    groups_for_len, partition_layers, EngineState, GroupPlan, IterationPlan, PrefillWork,
+};
+
+// ---------------------------------------------------------------------------
+// Admission policies
+// ---------------------------------------------------------------------------
+
+/// Greedy FCFS admission: admit the head of the waiting queue while the
+/// batch cap and KV capacity allow (chunked / Orca). KV exhaustion
+/// head-of-line blocks — no bypass — matching Sarathi's FCFS rule.
+#[derive(Debug)]
+pub struct GreedyAdmission {
+    max_batch: usize,
+}
+
+impl GreedyAdmission {
+    pub fn new(max_batch: usize) -> Self {
+        GreedyAdmission { max_batch }
+    }
+}
+
+impl AdmissionPolicy for GreedyAdmission {
+    fn admit(&mut self, state: &mut EngineState) -> Vec<u64> {
+        let mut out = Vec::new();
+        while let Some(&head) = state.waiting.first() {
+            let active = state.prefilling.len() + state.decoding.len();
+            if active >= state.max_batch.min(self.max_batch) {
+                break;
+            }
+            if !state.admit(head) {
+                break;
+            }
+            out.push(head);
+        }
+        out
+    }
+}
+
+/// Fixed-batch run-to-completion admission (static batching): a new batch
+/// of up to `batch_size` requests forms only once EVERY member of the
+/// previous batch has finished.
+#[derive(Debug)]
+pub struct BatchAdmission {
+    batch_size: usize,
+    /// The in-flight batch; no admissions until it fully drains.
+    batch: Vec<u64>,
+}
+
+impl BatchAdmission {
+    pub fn new(batch_size: usize) -> Self {
+        BatchAdmission {
+            batch_size,
+            batch: Vec::new(),
+        }
+    }
+
+    fn batch_done(&self, state: &EngineState) -> bool {
+        self.batch.iter().all(|id| {
+            state
+                .reqs
+                .get(id)
+                .map(|r| r.phase == crate::sched::Phase::Finished)
+                .unwrap_or(true)
+        })
+    }
+}
+
+impl AdmissionPolicy for BatchAdmission {
+    fn admit(&mut self, state: &mut EngineState) -> Vec<u64> {
+        if !self.batch_done(state) {
+            return Vec::new();
+        }
+        self.batch.clear();
+        while self.batch.len() < self.batch_size {
+            let Some(&head) = state.waiting.first() else {
+                break;
+            };
+            if !state.admit(head) {
+                break;
+            }
+            self.batch.push(head);
+        }
+        self.batch.clone()
+    }
+}
+
+/// Cohort admission (layered prefill, paper §4.4): admit the FCFS head,
+/// then merge further waiting requests while the combined DECLARED prompt
+/// length stays within `merge_target` (so merged admissions still cost
+/// about one chunk-sized unit per iteration) and capacity allows. The
+/// merge budget is judged on declared lengths — pre prefix-cache credit —
+/// so the cohort shape is deterministic and cache-temperature-independent.
+#[derive(Debug)]
+pub struct CohortAdmission {
+    max_batch: usize,
+    merge: bool,
+    merge_target: u32,
+}
+
+impl CohortAdmission {
+    pub fn new(max_batch: usize, merge: bool, merge_target: u32) -> Self {
+        CohortAdmission {
+            max_batch,
+            merge,
+            merge_target,
+        }
+    }
+}
+
+impl AdmissionPolicy for CohortAdmission {
+    fn admit(&mut self, state: &mut EngineState) -> Vec<u64> {
+        let mut cohort: Vec<u64> = Vec::new();
+        let mut merged_declared: u32 = 0;
+        loop {
+            let Some(&head) = state.waiting.first() else {
+                break;
+            };
+            let active = state.prefilling.len() + state.decoding.len();
+            if active >= state.max_batch.min(self.max_batch) {
+                break;
+            }
+            let head_len = state.reqs[&head].req.input_len;
+            if !cohort.is_empty() {
+                if !self.merge {
+                    break;
+                }
+                if merged_declared.saturating_add(head_len) > self.merge_target {
+                    break;
+                }
+            }
+            if !state.admit(head) {
+                break;
+            }
+            merged_declared = merged_declared.saturating_add(head_len);
+            cohort.push(head);
+        }
+        cohort
+    }
+}
+
+/// One-at-a-time admission (hybrid, paper §4.3): a new request is admitted
+/// only when no already-admitted request has prefill work remaining, so
+/// exactly one prompt is mid-flight on the chunk+layer pipeline at a time.
+#[derive(Debug)]
+pub struct SoloAdmission {
+    max_batch: usize,
+}
+
+impl SoloAdmission {
+    pub fn new(max_batch: usize) -> Self {
+        SoloAdmission { max_batch }
+    }
+}
+
+impl AdmissionPolicy for SoloAdmission {
+    fn admit(&mut self, state: &mut EngineState) -> Vec<u64> {
+        let busy = state
+            .prefilling
+            .iter()
+            .any(|id| state.reqs[id].remaining_prefill() > 0);
+        if busy {
+            return Vec::new();
+        }
+        let Some(&head) = state.waiting.first() else {
+            return Vec::new();
+        };
+        let active = state.prefilling.len() + state.decoding.len();
+        if active >= state.max_batch.min(self.max_batch) {
+            return Vec::new();
+        }
+        if state.admit(head) {
+            vec![head]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Prefill shapers
+// ---------------------------------------------------------------------------
+
+/// Token-axis budget chunking (Sarathi): fill a `chunk`-token budget FCFS
+/// across ALL admitted prefills, coalescing short prompts into one unit.
+/// Requests with zero remaining prefill (empty / fully-cached prompts)
+/// always get a zero-token completing slice — costs nothing, consumes no
+/// budget, and never strands the request in Prefilling.
+#[derive(Debug)]
+pub struct TokenChunkShaper {
+    chunk: u32,
+}
+
+impl TokenChunkShaper {
+    /// `chunk` is clamped to at least 1: a zero budget would admit
+    /// requests and then never slice them — the session would drain with
+    /// work silently stranded (spec parsing also rejects 0 up front).
+    pub fn new(chunk: u32) -> Self {
+        TokenChunkShaper {
+            chunk: chunk.max(1),
+        }
+    }
+}
+
+impl PrefillShaper for TokenChunkShaper {
+    fn shape(&mut self, state: &EngineState, _admitted: &[u64]) -> PrefillUnit {
+        let mut budget = self.chunk;
+        let mut slices = Vec::new();
+        let mut total: u32 = 0;
+        for &id in &state.prefilling {
+            let r = &state.reqs[&id];
+            let remaining = r.remaining_prefill();
+            if remaining == 0 {
+                slices.push(PrefillWork {
+                    req: id,
+                    tokens: 0,
+                    pos: r.prefill_done,
+                    completes: true,
+                });
+                continue;
+            }
+            if budget == 0 {
+                continue;
+            }
+            let take = remaining.min(budget);
+            slices.push(PrefillWork {
+                req: id,
+                tokens: take,
+                pos: r.prefill_done,
+                completes: take == remaining,
+            });
+            budget -= take;
+            total += take;
+        }
+        PrefillUnit {
+            slices,
+            tokens: total,
+        }
+    }
+}
+
+/// Whole-prompt shaping (Orca / static): every admitted prefill runs its
+/// ENTIRE remaining prompt as one completing slice.
+#[derive(Debug, Default)]
+pub struct FullPromptShaper;
+
+impl FullPromptShaper {
+    pub fn new() -> Self {
+        FullPromptShaper
+    }
+}
+
+impl PrefillShaper for FullPromptShaper {
+    fn shape(&mut self, state: &EngineState, _admitted: &[u64]) -> PrefillUnit {
+        let mut slices = Vec::new();
+        let mut total: u32 = 0;
+        for &id in &state.prefilling {
+            let r = &state.reqs[&id];
+            let remaining = r.remaining_prefill();
+            slices.push(PrefillWork {
+                req: id,
+                tokens: remaining,
+                pos: r.prefill_done,
+                completes: true,
+            });
+            total = total.saturating_add(remaining);
+        }
+        PrefillUnit {
+            slices,
+            tokens: total,
+        }
+    }
+}
+
+/// Cohort shaping (layered prefill): the admission cohort's full remaining
+/// prefill — post prefix-cache credit — becomes one unit, so the layer-axis
+/// composer sizes G from the cohort's REMAINING work and warm-prefix
+/// cohorts complete in fewer iterations.
+#[derive(Debug, Default)]
+pub struct CohortShaper;
+
+impl CohortShaper {
+    pub fn new() -> Self {
+        CohortShaper
+    }
+}
+
+impl PrefillShaper for CohortShaper {
+    fn shape(&mut self, state: &EngineState, admitted: &[u64]) -> PrefillUnit {
+        let mut slices = Vec::new();
+        let mut total: u32 = 0;
+        for &id in admitted {
+            let r = &state.reqs[&id];
+            let remaining = r.remaining_prefill();
+            slices.push(PrefillWork {
+                req: id,
+                tokens: remaining,
+                pos: r.prefill_done,
+                completes: true,
+            });
+            total = total.saturating_add(remaining);
+        }
+        PrefillUnit {
+            slices,
+            tokens: total,
+        }
+    }
+}
+
+/// One-request large-chunk shaping (hybrid): the first in-flight request
+/// with remaining prefill contributes its next `chunk`-token span; the
+/// slice completes only when it is the prompt's final chunk. Zero-remaining
+/// prefills are swept into the unit as zero-token completing slices so no
+/// composition can strand them.
+#[derive(Debug)]
+pub struct SoloChunkShaper {
+    chunk: u32,
+}
+
+impl SoloChunkShaper {
+    /// `chunk` is clamped to at least 1 (see [`TokenChunkShaper::new`]).
+    pub fn new(chunk: u32) -> Self {
+        SoloChunkShaper {
+            chunk: chunk.max(1),
+        }
+    }
+}
+
+impl PrefillShaper for SoloChunkShaper {
+    fn shape(&mut self, state: &EngineState, _admitted: &[u64]) -> PrefillUnit {
+        let mut slices = Vec::new();
+        for &id in &state.prefilling {
+            let r = &state.reqs[&id];
+            if r.remaining_prefill() == 0 {
+                slices.push(PrefillWork {
+                    req: id,
+                    tokens: 0,
+                    pos: r.prefill_done,
+                    completes: true,
+                });
+            }
+        }
+        let candidate = state
+            .prefilling
+            .iter()
+            .copied()
+            .find(|id| state.reqs[id].remaining_prefill() > 0);
+        let mut total: u32 = 0;
+        if let Some(id) = candidate {
+            let r = &state.reqs[&id];
+            let remaining = r.remaining_prefill();
+            let take = remaining.min(self.chunk);
+            slices.push(PrefillWork {
+                req: id,
+                tokens: take,
+                pos: r.prefill_done,
+                completes: take == remaining,
+            });
+            total = take;
+        }
+        PrefillUnit {
+            slices,
+            tokens: total,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batch composers
+// ---------------------------------------------------------------------------
+
+/// Token-axis composition: the whole unit runs in ONE iteration as a single
+/// full-stack hybrid batch (prefill slices + every ongoing decode), the
+/// Sarathi/Orca/static shape.
+#[derive(Debug)]
+pub struct InterleaveComposer {
+    n_layers: u32,
+    unit: Option<PrefillUnit>,
+}
+
+impl InterleaveComposer {
+    pub fn new(n_layers: u32) -> Self {
+        InterleaveComposer {
+            n_layers,
+            unit: None,
+        }
+    }
+}
+
+impl BatchComposer for InterleaveComposer {
+    fn needs_unit(&self) -> bool {
+        self.unit.is_none()
+    }
+
+    fn load(&mut self, unit: PrefillUnit) {
+        self.unit = Some(unit);
+    }
+
+    fn compose(&mut self, state: &EngineState) -> Option<IterationPlan> {
+        let prefill = self.unit.take().map(|u| u.slices).unwrap_or_default();
+        let decode = state.decode_set();
+        if prefill.is_empty() && decode.is_empty() {
+            return None;
+        }
+        Some(IterationPlan {
+            groups: vec![GroupPlan {
+                n_layers: self.n_layers,
+                prefill,
+                decode,
+            }],
+        })
+    }
+}
+
+/// Layer-axis composition (the paper's contribution, §4): the unit's
+/// tokens size G = ceil(tokens / target), clamped to the layer count; the
+/// stack partitions into G contiguous groups and exactly ONE group
+/// prefills the unit per iteration (I1) while every group carries the
+/// decode batch (I3). The unit completes in exactly G iterations (I4);
+/// slices complete only on the last group. A zero-token unit (empty or
+/// fully-cached cohort) clamps to a single full-stack group so the
+/// zero-work admission still completes through an iteration.
+#[derive(Debug)]
+pub struct LayerGroupComposer {
+    n_layers: u32,
+    target: u32,
+    unit: Option<PrefillUnit>,
+    group_sizes: Vec<u32>,
+    cursor: usize,
+}
+
+impl LayerGroupComposer {
+    pub fn new(n_layers: u32, target: u32) -> Self {
+        LayerGroupComposer {
+            n_layers,
+            target,
+            unit: None,
+            group_sizes: Vec::new(),
+            cursor: 0,
+        }
+    }
+}
+
+impl BatchComposer for LayerGroupComposer {
+    fn needs_unit(&self) -> bool {
+        self.unit.is_none()
+    }
+
+    fn load(&mut self, unit: PrefillUnit) {
+        let g = groups_for_len(unit.tokens, self.target).min(self.n_layers);
+        self.group_sizes = partition_layers(self.n_layers, g);
+        self.cursor = 0;
+        if self.group_sizes.is_empty() {
+            // Zero-layer model: there is nothing to schedule the unit on
+            // (partition_layers(0, _) is the documented empty partition).
+            self.unit = None;
+            return;
+        }
+        self.unit = Some(unit);
+    }
+
+    fn compose(&mut self, state: &EngineState) -> Option<IterationPlan> {
+        let decode = state.decode_set();
+        let Some(unit) = &self.unit else {
+            if decode.is_empty() {
+                return None;
+            }
+            // Decode-only iteration: a single full-stack group.
+            return Some(IterationPlan {
+                groups: vec![GroupPlan {
+                    n_layers: self.n_layers,
+                    prefill: Vec::new(),
+                    decode,
+                }],
+            });
+        };
+
+        let last = self.cursor == self.group_sizes.len() - 1;
+        let mut groups = Vec::with_capacity(self.group_sizes.len());
+        for (gi, &gsize) in self.group_sizes.iter().enumerate() {
+            let prefill = if gi == self.cursor {
+                unit.slices
+                    .iter()
+                    .map(|w| PrefillWork {
+                        completes: w.completes && last,
+                        ..*w
+                    })
+                    .collect()
+            } else {
+                Vec::new()
+            };
+            groups.push(GroupPlan {
+                n_layers: gsize,
+                prefill,
+                decode: decode.clone(),
+            });
+        }
+        self.cursor += 1;
+        if last {
+            self.unit = None;
+            self.group_sizes.clear();
+            self.cursor = 0;
+        }
+        Some(IterationPlan { groups })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelDesc;
+    use crate::kvcache::KvCacheManager;
+    use crate::sched::Phase;
+    use crate::workload::Request;
+
+    fn state() -> EngineState {
+        EngineState::new(
+            ModelDesc::qwen3_30b_a3b(),
+            KvCacheManager::new(100_000, 16),
+            256,
+        )
+    }
+
+    fn req(id: u64, input: u32, output: u32) -> Request {
+        Request {
+            id,
+            arrival_s: 0.0,
+            input_len: input,
+            output_len: output,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn greedy_admission_respects_batch_cap() {
+        let mut st = state();
+        st.arrive(req(1, 100, 5));
+        st.arrive(req(2, 100, 5));
+        st.arrive(req(3, 100, 5));
+        let mut a = GreedyAdmission::new(2);
+        assert_eq!(a.admit(&mut st), vec![1, 2]);
+        assert_eq!(st.waiting, vec![3]);
+    }
+
+    #[test]
+    fn batch_admission_waits_for_full_drain() {
+        let mut st = state();
+        st.arrive(req(1, 100, 4));
+        st.arrive(req(2, 100, 4));
+        st.arrive(req(3, 100, 4));
+        let mut a = BatchAdmission::new(2);
+        assert_eq!(a.admit(&mut st), vec![1, 2]);
+        // Batch in flight: no admissions.
+        assert!(a.admit(&mut st).is_empty());
+        assert_eq!(st.waiting, vec![3]);
+        // Finish the batch: the next round admits request 3.
+        for id in [1u64, 2] {
+            st.reqs.get_mut(&id).unwrap().phase = Phase::Finished;
+        }
+        st.prefilling.clear();
+        assert_eq!(a.admit(&mut st), vec![3]);
+    }
+
+    #[test]
+    fn cohort_admission_merges_up_to_target() {
+        let mut st = state();
+        st.arrive(req(1, 100, 5));
+        st.arrive(req(2, 150, 5));
+        st.arrive(req(3, 200, 5));
+        st.arrive(req(4, 400, 5)); // would exceed the 512 merged target
+        let mut a = CohortAdmission::new(256, true, 512);
+        assert_eq!(a.admit(&mut st), vec![1, 2, 3]);
+        assert_eq!(st.waiting, vec![4]);
+        // merge off: one request per cohort.
+        let mut st = state();
+        st.arrive(req(1, 100, 5));
+        st.arrive(req(2, 100, 5));
+        let mut a = CohortAdmission::new(256, false, 512);
+        assert_eq!(a.admit(&mut st), vec![1]);
+    }
+
+    #[test]
+    fn solo_admission_blocks_while_prefill_in_flight() {
+        let mut st = state();
+        st.arrive(req(1, 1000, 5));
+        st.arrive(req(2, 1000, 5));
+        let mut a = SoloAdmission::new(256);
+        assert_eq!(a.admit(&mut st), vec![1]);
+        // Request 1 still has remaining prefill: nothing new admits.
+        assert!(a.admit(&mut st).is_empty());
+        st.reqs.get_mut(&1).unwrap().prefill_done = 1000;
+        assert_eq!(a.admit(&mut st), vec![2]);
+    }
+
+    #[test]
+    fn token_chunks_coalesce_and_respect_budget() {
+        let mut st = state();
+        st.arrive(req(1, 100, 5));
+        st.arrive(req(2, 600, 5));
+        let mut a = GreedyAdmission::new(256);
+        let ids = a.admit(&mut st);
+        let mut sh = TokenChunkShaper::new(512);
+        let u = sh.shape(&st, &ids);
+        assert_eq!(u.tokens, 512);
+        assert_eq!(u.slices.len(), 2);
+        assert!(u.slices[0].completes);
+        assert_eq!(u.slices[1].tokens, 412);
+        assert!(!u.slices[1].completes);
+    }
+
+    #[test]
+    fn solo_chunk_sweeps_zero_remaining_prefills() {
+        // A composition the legacy hybrid could not reach: multiple
+        // admitted requests, one empty prompt among them. The sweep keeps
+        // the empty prompt completing instead of stranding.
+        let mut st = state();
+        st.arrive(req(1, 0, 3));
+        st.arrive(req(2, 5000, 5));
+        let mut a = GreedyAdmission::new(256);
+        let ids = a.admit(&mut st);
+        let mut sh = SoloChunkShaper::new(4096);
+        let u = sh.shape(&st, &ids);
+        assert_eq!(u.slices.len(), 2);
+        let zero = u.slices.iter().find(|w| w.req == 1).unwrap();
+        assert_eq!(zero.tokens, 0);
+        assert!(zero.completes);
+        let chunk = u.slices.iter().find(|w| w.req == 2).unwrap();
+        assert_eq!(chunk.tokens, 4096);
+        assert!(!chunk.completes);
+        assert_eq!(u.tokens, 4096);
+    }
+
+    #[test]
+    fn layer_group_composer_holds_slices_for_g_iterations() {
+        let mut st = state();
+        st.arrive(req(1, 2048, 5));
+        let mut a = GreedyAdmission::new(256);
+        let ids = a.admit(&mut st);
+        let mut sh = CohortShaper::new();
+        let mut c = LayerGroupComposer::new(48, 512);
+        assert!(c.needs_unit());
+        c.load(sh.shape(&st, &ids));
+        for it in 0..4 {
+            assert!(!c.needs_unit() || it == 0);
+            let p = c.compose(&st).unwrap();
+            assert_eq!(p.groups.len(), 4);
+            assert_eq!(p.prefill_groups(), 1);
+            let w = p.groups[it].prefill[0];
+            assert_eq!(w.tokens, 2048);
+            assert_eq!(w.completes, it == 3, "completes only on the last group");
+        }
+        assert!(c.needs_unit(), "unit consumed after G iterations");
+    }
+
+    #[test]
+    fn composers_emit_decode_only_plans_when_idle() {
+        let mut st = state();
+        st.arrive(req(7, 10, 50));
+        st.admit(7);
+        {
+            let r = st.reqs.get_mut(&7).unwrap();
+            r.prefill_done = 10;
+            r.generated = 1;
+            r.phase = Phase::Decoding;
+        }
+        st.prefilling.clear();
+        st.decoding.push(7);
+        let mut ic = InterleaveComposer::new(48);
+        let p = ic.compose(&st).unwrap();
+        assert!(p.groups[0].prefill.is_empty());
+        assert_eq!(p.groups[0].decode.len(), 1);
+        let mut lc = LayerGroupComposer::new(48, 512);
+        let p = lc.compose(&st).unwrap();
+        assert_eq!(p.groups.len(), 1);
+        assert_eq!(p.total_layers(), 48);
+        // And with neither prefill nor decode, both report no work.
+        let empty = state();
+        assert!(InterleaveComposer::new(48).compose(&empty).is_none());
+        assert!(LayerGroupComposer::new(48, 512).compose(&empty).is_none());
+    }
+
+    #[test]
+    fn zero_token_unit_clamps_to_single_group() {
+        let mut st = state();
+        st.arrive(req(1, 0, 3));
+        let mut a = GreedyAdmission::new(256);
+        let ids = a.admit(&mut st);
+        let mut sh = CohortShaper::new();
+        let mut c = LayerGroupComposer::new(48, 512);
+        c.load(sh.shape(&st, &ids));
+        let p = c.compose(&st).unwrap();
+        assert_eq!(p.groups.len(), 1);
+        let w = p.groups[0].prefill[0];
+        assert_eq!(w.tokens, 0);
+        assert!(w.completes);
+    }
+}

@@ -13,11 +13,18 @@
 //!
 //! The emulation mirrors `engine::EngineCore::advance` so the plans are
 //! driven exactly as the engine core drives them.
+//!
+//! Coverage spans BOTH scheduler surfaces: legacy direct constructions,
+//! their canonical Policy-API-v2 compositions, random novel pipeline
+//! compositions (any admission × shaper × composer), and the adaptive
+//! policy — I1–I4 are invariants of the pipeline contracts, not of the
+//! five presets.
 
 use std::collections::BTreeMap;
 
 use crate::config::{ModelDesc, Policy, SchedulerConfig};
 use crate::kvcache::KvCacheManager;
+use crate::sched::policy::{AdaptiveSpec, AdmissionSpec, ComposerSpec, PolicySpec, ShaperSpec};
 use crate::sched::{self, EngineState, Phase};
 use crate::util::proptest::{check, Gen, PropResult};
 use crate::workload::Request;
@@ -52,6 +59,48 @@ fn random_requests(g: &mut Gen) -> Vec<(u64, Request, usize)> {
         .collect()
 }
 
+/// A random novel pipeline: any admission × any shaper × any composer.
+/// Every combination is strand-free by construction (token-axis shapers
+/// sweep the whole prefilling set; the solo shaper sweeps zero-remaining
+/// leftovers), so I1–I4 must hold for all of them.
+fn random_pipeline(g: &mut Gen) -> PolicySpec {
+    let admission = match g.usize(0, 3) {
+        0 => AdmissionSpec::Fcfs { max_batch: 64 },
+        1 => AdmissionSpec::Batch {
+            batch_size: g.usize(1, 8),
+        },
+        2 => AdmissionSpec::Cohort {
+            max_batch: 64,
+            merge: g.bool(),
+            merge_target: 512,
+        },
+        _ => AdmissionSpec::Solo { max_batch: 64 },
+    };
+    let shaper = match g.usize(0, 3) {
+        0 => ShaperSpec::TokenChunks {
+            chunk: *g.pick(&[128u32, 512, 1024]),
+        },
+        1 => ShaperSpec::FullPrompt,
+        2 => ShaperSpec::CohortUnit,
+        _ => ShaperSpec::SoloChunk {
+            chunk: *g.pick(&[1024u32, 4096]),
+        },
+    };
+    let composer = if g.bool() {
+        ComposerSpec::Interleave
+    } else {
+        ComposerSpec::LayerGroups {
+            target: *g.pick(&[128u32, 512]),
+        }
+    };
+    PolicySpec::Pipeline {
+        name: None,
+        admission,
+        shaper,
+        composer,
+    }
+}
+
 fn random_config(g: &mut Gen) -> SchedulerConfig {
     let policy = *g.pick(&POLICIES);
     let mut cfg = SchedulerConfig::preset(policy);
@@ -59,6 +108,24 @@ fn random_config(g: &mut Gen) -> SchedulerConfig {
     cfg.group_token_target = *g.pick(&[128u32, 512]);
     cfg.hybrid_chunk_size = *g.pick(&[1024u32, 4096]);
     cfg.static_batch = g.usize(1, 8);
+    // Both scheduler surfaces: legacy direct construction, the same
+    // config's canonical pipeline composition, a random novel pipeline,
+    // or the adaptive policy.
+    match g.usize(0, 3) {
+        0 => {}
+        1 => cfg.spec = Some(PolicySpec::from_config(&cfg)),
+        2 => cfg.spec = Some(random_pipeline(g)),
+        _ => {
+            cfg.spec = Some(PolicySpec::Adaptive(AdaptiveSpec {
+                max_batch: 64,
+                chunk: *g.pick(&[128u32, 512]),
+                group_target: *g.pick(&[128u32, 512]),
+                long_prompt: *g.pick(&[256u32, 1024, 4096]),
+                window_s: 5.0,
+                ..AdaptiveSpec::default()
+            }));
+        }
+    }
     cfg
 }
 

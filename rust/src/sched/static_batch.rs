@@ -2,6 +2,10 @@
 //! run-to-completion. New arrivals wait for the whole batch to finish —
 //! stall-free decode and stable TBT, but TTFT inflates with batch makespan
 //! (§2.3). Included as the historical baseline.
+//!
+//! Canonical pipeline composition (Policy API v2, bit-identical):
+//! `admission=batch:16, shaper=full, composer=interleave` — see
+//! [`crate::sched::policy`].
 
 use crate::config::SchedulerConfig;
 use crate::sched::{EngineState, GroupPlan, IterationPlan, PrefillWork, Scheduler};
@@ -32,7 +36,7 @@ impl StaticBatching {
 }
 
 impl Scheduler for StaticBatching {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "static"
     }
 

@@ -10,7 +10,8 @@
 //! Session::builder()
 //!     .model(..)        // ModelDesc (default Qwen3-30B-A3B)
 //!     .hardware(..)     // HardwareDesc (default 2xH100)
-//!     .policy(..)       // scheduling policy preset, or .scheduler(cfg)
+//!     .policy(..)       // preset, or .scheduler(cfg), or .policy_spec(..)
+//!                       // (Policy API v2 pipeline; last-set wins)
 //!     .replicas(..)     // N identical replicas (or .replica_specs for mixed)
 //!     .router(..)       // request router for N > 1 (default round-robin)
 //!     .workload(..)     // any WorkloadSource: TraceSource, PoissonSource, ...
@@ -27,8 +28,10 @@
 //! single event sink observing every replica. The legacy entry points —
 //! [`simulator::simulate`](crate::simulator::simulate),
 //! [`server::RealServer::serve`](crate::server::RealServer),
-//! [`cluster::Cluster::run`](crate::cluster::Cluster) — are thin shims over
-//! a session and are kept only for signature stability.
+//! [`cluster::Cluster::run`](crate::cluster::Cluster) — are
+//! `#[deprecated]` shims over a session, kept only so external callers
+//! get a pointed compiler nudge here; `Session` is the ONLY documented
+//! entry point.
 //!
 //! Workload intake is pull-based through [`WorkloadSource`], so sessions do
 //! not require drain-to-empty: an open-loop [`PoissonSource`] with a
@@ -120,8 +123,11 @@ pub struct SessionReport {
     /// Per-replica metrics, index-aligned with the session's replicas
     /// (including any the controller scaled up mid-run).
     pub per_replica: Vec<RunMetrics>,
-    /// Policy each replica ran (for heterogeneous-fleet reporting).
-    pub policies: Vec<Policy>,
+    /// Display name of the policy each replica ran (for heterogeneous-
+    /// fleet reporting): the legacy preset name, or the
+    /// [`PolicySpec`](crate::sched::policy::PolicySpec) name for
+    /// spec-compiled replicas (e.g. `"adaptive"`, `"pipeline(..)"`).
+    pub policies: Vec<String>,
     /// (request id, replica index) routing decisions, in decision order.
     /// Under the control plane a request re-routed by a spill or a replica
     /// drain/failure appends a SECOND decision for the same id.
@@ -223,14 +229,34 @@ impl<'a> SessionBuilder<'a> {
     }
 
     /// Scheduling policy (paper preset knobs).
+    ///
+    /// Precedence rule: [`SessionBuilder::policy`],
+    /// [`SessionBuilder::scheduler`], and [`SessionBuilder::policy_spec`]
+    /// all set the SAME underlying scheduler configuration — the
+    /// last-set one wins, regardless of which method it was (locked by
+    /// this module's `policy_scheduler_spec_precedence_is_last_set_wins`
+    /// test).
     pub fn policy(mut self, policy: Policy) -> Self {
         self.sched = SchedulerConfig::preset(policy);
         self
     }
 
-    /// Full scheduler configuration (overrides `policy`).
+    /// Full scheduler configuration. Last-set wins among
+    /// `policy` / `scheduler` / `policy_spec` — see
+    /// [`SessionBuilder::policy`].
     pub fn scheduler(mut self, sched: SchedulerConfig) -> Self {
         self.sched = sched;
+        self
+    }
+
+    /// Policy API v2: a declarative
+    /// [`PolicySpec`](crate::sched::policy::PolicySpec) — preset
+    /// composition, custom pipeline, or the signal-driven adaptive policy
+    /// — compiled per replica by `sched::build`. Last-set wins among
+    /// `policy` / `scheduler` / `policy_spec` — see
+    /// [`SessionBuilder::policy`].
+    pub fn policy_spec(mut self, spec: crate::sched::policy::PolicySpec) -> Self {
+        self.sched = spec.scheduler_config();
         self
     }
 
@@ -544,7 +570,7 @@ fn finish_report(
     status: SessionStatus,
     assignments: Vec<(u64, usize)>,
 ) -> SessionReport {
-    let policies: Vec<Policy> = live.iter().map(|r| r.policy).collect();
+    let policies: Vec<String> = live.iter().map(|r| r.sched.name().to_string()).collect();
     let mut per_replica = Vec::with_capacity(live.len());
     let mut token_times = Vec::new();
     for r in live {
@@ -1220,6 +1246,36 @@ mod tests {
         let mut spec = WorkloadSpec::new(Dataset::ShareGpt, rate, n);
         spec.seed = seed;
         WorkloadGen::new(spec).generate()
+    }
+
+    #[test]
+    fn policy_scheduler_spec_precedence_is_last_set_wins() {
+        use crate::sched::policy::PolicySpec;
+        let trace = sharegpt_trace(4, 2.0, 3);
+        // policy() after scheduler(): the preset wins.
+        let report = Session::builder()
+            .scheduler(SchedulerConfig::preset(Policy::Chunked))
+            .policy(Policy::Layered)
+            .trace(&trace)
+            .run()
+            .expect("sim session");
+        assert_eq!(report.policies, vec!["layered".to_string()]);
+        // policy_spec() after policy(): the spec wins.
+        let report = Session::builder()
+            .policy(Policy::Chunked)
+            .policy_spec(PolicySpec::parse("adaptive").unwrap())
+            .trace(&trace)
+            .run()
+            .expect("sim session");
+        assert_eq!(report.policies, vec!["adaptive".to_string()]);
+        // policy() after policy_spec(): the preset wins again.
+        let report = Session::builder()
+            .policy_spec(PolicySpec::parse("adaptive").unwrap())
+            .policy(Policy::Chunked)
+            .trace(&trace)
+            .run()
+            .expect("sim session");
+        assert_eq!(report.policies, vec!["chunked".to_string()]);
     }
 
     #[test]

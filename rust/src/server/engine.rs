@@ -88,7 +88,21 @@ impl<'e> RealServer<'e> {
 
     /// Serve a trace to completion. Lengths must satisfy
     /// input + output <= max_seq.
+    ///
+    /// Deprecated alias of [`RealServer::run`]; new code should either
+    /// call `run` or install the PJRT backend directly with
+    /// `Session::builder().executor_factory(..)`.
+    #[deprecated(
+        note = "RealServer::serve is a legacy shim; call RealServer::run, or install the \
+                PJRT backend with serve::Session::builder().executor_factory(..)"
+    )]
     pub fn serve(&self, trace: &Trace) -> Result<ServeReport> {
+        self.run(trace)
+    }
+
+    /// Serve a trace to completion through a [`Session`] with a PJRT
+    /// executor factory. Lengths must satisfy input + output <= max_seq.
+    pub fn run(&self, trace: &Trace) -> Result<ServeReport> {
         let m = self.engine.manifest.model.clone();
         let pad_slack = *m.prefill_chunks.iter().min().unwrap() - 1;
         for r in &trace.requests {

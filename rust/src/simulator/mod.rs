@@ -103,9 +103,13 @@ pub fn default_engine_state(
 
 /// Convenience: run one (policy, model, hardware, trace) combination.
 ///
-/// DEPRECATED shim: builds a 1-replica
+/// Deprecated shim: builds a 1-replica
 /// [`serve::Session`](crate::serve::Session) — bit-identical to the raw
 /// [`Simulator`] path (locked by `tests/cluster_equivalence.rs`).
+#[deprecated(
+    note = "simulator::simulate is a legacy shim; build a serve::Session \
+            (Session::builder().model(..).scheduler(..).trace(..).run()) instead"
+)]
 pub fn simulate(
     model: crate::config::ModelDesc,
     hw: HardwareDesc,

@@ -6,6 +6,10 @@
 //! every request with sane fleet aggregates under the paper's
 //! ShareGPT-style traces.
 
+// The Session-equivalence of the hard-deprecated Cluster::run / simulate
+// shims is exactly what this suite locks.
+#![allow(deprecated)]
+
 use layered_prefill::cluster::{
     AdaptiveSpill, Cluster, LeastOutstandingKv, PrefixAffinity, ReplicaSpec, ReplicaState,
     ReplicaView, RoundRobin, Router, SloAware,

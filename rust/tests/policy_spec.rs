@@ -1,0 +1,267 @@
+//! Policy API v2 acceptance locks.
+//!
+//! * GOLDEN: every legacy `Policy` preset (and knob-tweaked variants),
+//!   compiled through its canonical `PolicySpec` composition, produces a
+//!   bit-identical `SessionReport` to the direct construction — the
+//!   pipeline decomposition changes NOTHING for the shipped policies.
+//! * The adaptive policy demonstrably switches scheduling axes mid-run on
+//!   a mixed short/long-prompt workload, asserted from the typed event
+//!   stream (`PrefillGroupDone` layer footprints).
+//! * Novel compositions the old enum could not express serve real
+//!   workloads to completion with conserved tokens (I1–I4 are checked by
+//!   the engine's debug assertions along the way).
+//! * Spec display names surface per replica in `SessionReport::policies`.
+
+use layered_prefill::cluster::ReplicaSpec;
+use layered_prefill::config::{
+    Dataset, HardwareDesc, ModelDesc, Policy, SchedulerConfig, WorkloadSpec,
+};
+use layered_prefill::sched::policy::{AdaptiveSpec, PolicySpec};
+use layered_prefill::serve::{EngineEvent, EventLog, Session, SessionReport, SessionStatus};
+use layered_prefill::workload::{Request, Trace, WorkloadGen};
+
+fn sharegpt_trace(n: usize, rate: f64, seed: u64) -> Trace {
+    let mut spec = WorkloadSpec::new(Dataset::ShareGpt, rate, n);
+    spec.seed = seed;
+    WorkloadGen::new(spec).generate()
+}
+
+fn run_with(cfg: SchedulerConfig, trace: &Trace) -> SessionReport {
+    Session::builder()
+        .model(ModelDesc::qwen3_30b_a3b())
+        .hardware(HardwareDesc::h100x2())
+        .scheduler(cfg)
+        .trace(trace)
+        .run()
+        .expect("sim sessions are infallible")
+}
+
+/// Bit-identity over everything the reports carry: per-request timings,
+/// iteration/traffic/energy accounting, routing, and status.
+fn assert_reports_bit_identical(a: &SessionReport, b: &SessionReport, label: &str) {
+    assert_eq!(a.status, b.status, "{label}: status");
+    assert_eq!(a.assignments, b.assignments, "{label}: assignments");
+    let (am, bm) = (&a.fleet, &b.fleet);
+    assert_eq!(am.requests.len(), bm.requests.len(), "{label}: n requests");
+    assert_eq!(am.iterations, bm.iterations, "{label}: iterations");
+    for (x, y) in am.requests.iter().zip(&bm.requests) {
+        assert_eq!(x.id, y.id, "{label}");
+        assert_eq!(x.ttft_s, y.ttft_s, "{label}: req {} TTFT", x.id);
+        assert_eq!(x.finish_s, y.finish_s, "{label}: req {} finish", x.id);
+        assert_eq!(x.tbts_s, y.tbts_s, "{label}: req {} TBTs", x.id);
+    }
+    assert_eq!(am.makespan_s, bm.makespan_s, "{label}: makespan");
+    assert_eq!(am.busy_s, bm.busy_s, "{label}: busy");
+    assert_eq!(
+        am.traffic.expert_bytes, bm.traffic.expert_bytes,
+        "{label}: expert bytes"
+    );
+    assert_eq!(
+        am.traffic.kv_bytes, bm.traffic.kv_bytes,
+        "{label}: kv bytes"
+    );
+    assert_eq!(
+        am.energy.total_j(),
+        bm.energy.total_j(),
+        "{label}: energy"
+    );
+    assert_eq!(
+        am.avg_decode_batch, bm.avg_decode_batch,
+        "{label}: avg decode batch"
+    );
+}
+
+#[test]
+fn preset_specs_are_bit_identical_to_direct_construction() {
+    for policy in Policy::ALL {
+        let trace = sharegpt_trace(40, 2.0, 0xA11CE);
+        let direct = run_with(SchedulerConfig::preset(policy), &trace);
+        let composed = run_with(PolicySpec::preset(policy).scheduler_config(), &trace);
+        assert_eq!(direct.policies, vec![policy.name().to_string()]);
+        assert_eq!(composed.policies, vec![policy.name().to_string()]);
+        assert_reports_bit_identical(&direct, &composed, policy.name());
+    }
+}
+
+#[test]
+fn tweaked_knobs_are_bit_identical_via_from_config() {
+    // Not just the paper presets: arbitrary legacy knob settings re-express
+    // exactly through PolicySpec::from_config.
+    for policy in Policy::ALL {
+        let trace = sharegpt_trace(30, 2.5, 0xBEEF);
+        let mut cfg = SchedulerConfig::preset(policy);
+        cfg.chunk_size = 128;
+        cfg.group_token_target = 256;
+        cfg.hybrid_chunk_size = 2048;
+        cfg.static_batch = 4;
+        cfg.merge_small_prefills = false;
+        let direct = run_with(cfg.clone(), &trace);
+        let mut via_spec = cfg.clone();
+        via_spec.spec = Some(PolicySpec::from_config(&cfg));
+        let composed = run_with(via_spec, &trace);
+        assert_reports_bit_identical(&direct, &composed, policy.name());
+    }
+}
+
+fn fixed_req(id: u64, arrival_s: f64, input: u32, output: u32) -> Request {
+    Request {
+        id,
+        arrival_s,
+        input_len: input,
+        output_len: output,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn adaptive_switches_axes_mid_run_on_mixed_workload() {
+    // Alternating long/short prompts, spaced so each forms its own
+    // admission cohort: the adaptive policy must run the longs on the
+    // LAYER axis (multiple partial-stack PrefillGroupDone events tiling
+    // the stack) and the shorts on the TOKEN axis (one full-stack event).
+    let n_layers = ModelDesc::qwen3_30b_a3b().n_layers;
+    let trace = Trace::new(vec![
+        fixed_req(0, 0.0, 6000, 4),
+        fixed_req(1, 8.0, 64, 4),
+        fixed_req(2, 16.0, 7000, 4),
+        fixed_req(3, 24.0, 96, 4),
+    ]);
+    let mut log = EventLog::default();
+    let report = Session::builder()
+        .policy_spec(PolicySpec::Adaptive(AdaptiveSpec::default()))
+        .trace(&trace)
+        .sink(&mut log)
+        .run()
+        .expect("sim session");
+    assert_eq!(report.status, SessionStatus::Drained);
+    assert_eq!(report.fleet.requests.len(), 4);
+    assert_eq!(report.policies, vec!["adaptive".to_string()]);
+
+    let group_layers = |id: u64| -> Vec<u32> {
+        log.events
+            .iter()
+            .filter_map(|(_, e)| match e {
+                EngineEvent::PrefillGroupDone {
+                    id: i, layers, ..
+                } if *i == id => Some(*layers),
+                _ => None,
+            })
+            .collect()
+    };
+    for id in [0u64, 2] {
+        let evs = group_layers(id);
+        assert!(
+            evs.len() > 1,
+            "long req {id} must prefill across multiple layer groups, got {evs:?}"
+        );
+        assert!(
+            evs.iter().all(|&l| l < n_layers),
+            "long req {id} groups must be partial-stack: {evs:?}"
+        );
+        assert_eq!(
+            evs.iter().sum::<u32>(),
+            n_layers,
+            "I2: req {id} groups tile the stack exactly once"
+        );
+    }
+    for id in [1u64, 3] {
+        let evs = group_layers(id);
+        assert_eq!(
+            evs,
+            vec![n_layers],
+            "short req {id} must prefill in one full-stack pass"
+        );
+    }
+}
+
+#[test]
+fn novel_composition_budget_chunks_on_layer_axis_serves_to_completion() {
+    // A point the closed enum could not express: Sarathi-style 2048-token
+    // budget chunks (multi-request coalescing) spread over G = ceil(U/512)
+    // layer groups per unit.
+    let spec =
+        PolicySpec::parse("admission=fcfs,shaper=chunks:2048,composer=groups:512").unwrap();
+    let trace = sharegpt_trace(30, 3.0, 0xC0DE);
+    let mut log = EventLog::default();
+    let report = Session::builder()
+        .policy_spec(spec)
+        .trace(&trace)
+        .sink(&mut log)
+        .run()
+        .expect("sim session");
+    assert_eq!(report.status, SessionStatus::Drained);
+    assert_eq!(report.fleet.requests.len(), 30);
+    for r in &report.fleet.requests {
+        assert_eq!(
+            r.tbts_s.len() as u32 + 1,
+            r.output_len,
+            "req {} token conservation",
+            r.id
+        );
+    }
+    // Long units really do split across layer groups.
+    let n_layers = ModelDesc::qwen3_30b_a3b().n_layers;
+    let partial = log.count(|e| {
+        matches!(e, EngineEvent::PrefillGroupDone { layers, .. } if *layers < n_layers)
+    });
+    assert!(
+        partial > 0,
+        "expected partial-stack prefill groups from the layer-axis composer"
+    );
+}
+
+#[test]
+fn mixed_spec_fleet_surfaces_spec_names_per_replica() {
+    let model = ModelDesc::qwen3_30b_a3b();
+    let hw = HardwareDesc::h100x2();
+    let specs = vec![
+        ReplicaSpec {
+            model: model.clone(),
+            hw: hw.clone(),
+            sched: PolicySpec::parse("adaptive").unwrap().scheduler_config(),
+        },
+        ReplicaSpec {
+            model: model.clone(),
+            hw: hw.clone(),
+            sched: PolicySpec::parse(
+                "name=budgeted-layers,admission=fcfs,shaper=chunks:2048,composer=groups:512",
+            )
+            .unwrap()
+            .scheduler_config(),
+        },
+        ReplicaSpec {
+            model,
+            hw,
+            sched: SchedulerConfig::preset(Policy::Chunked),
+        },
+    ];
+    let trace = sharegpt_trace(18, 6.0, 0xFEED);
+    let report = Session::builder()
+        .replica_specs(specs)
+        .trace(&trace)
+        .run()
+        .expect("sim session");
+    assert_eq!(
+        report.policies,
+        vec![
+            "adaptive".to_string(),
+            "budgeted-layers".to_string(),
+            "chunked".to_string()
+        ]
+    );
+    assert_eq!(report.status, SessionStatus::Drained);
+    assert_eq!(report.fleet.requests.len(), 18);
+}
+
+#[test]
+fn spec_parse_rejects_garbage_with_named_alternatives() {
+    let e = PolicySpec::parse("turbo").unwrap_err();
+    assert!(e.contains("layered") && e.contains("adaptive"), "{e}");
+    let e = PolicySpec::parse("admission=psychic").unwrap_err();
+    assert!(e.contains("fcfs") && e.contains("cohort"), "{e}");
+    // And Policy::parse itself (the satellite): case-insensitive with a
+    // listing error.
+    assert_eq!(Policy::parse("LaYeReD"), Ok(Policy::Layered));
+    let e = Policy::parse("bogus").unwrap_err();
+    assert!(e.contains("static | orca | chunked | layered | hybrid"), "{e}");
+}

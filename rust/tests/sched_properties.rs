@@ -8,7 +8,8 @@ use layered_prefill::config::{
 use layered_prefill::kvcache::KvCacheManager;
 use layered_prefill::moe::coverage::CoverageModel;
 use layered_prefill::sched::{self, EngineState};
-use layered_prefill::simulator::{simulate, SimOptions, Simulator};
+use layered_prefill::serve::Session;
+use layered_prefill::simulator::Simulator;
 use layered_prefill::model::WorkAnalytics;
 use layered_prefill::util::proptest::{check, Gen, PropResult};
 use layered_prefill::workload::{Request, Trace, WorkloadGen};
@@ -52,13 +53,19 @@ fn prop_token_conservation_all_policies() {
         let mut cfg = SchedulerConfig::preset(policy);
         cfg.chunk_size = *g.pick(&[256u32, 512, 1024]);
         cfg.group_token_target = *g.pick(&[256u32, 512]);
-        let (m, _) = simulate(
-            ModelDesc::qwen3_30b_a3b(),
-            HardwareDesc::h100x2(),
-            &cfg,
-            &trace,
-            SimOptions::default(),
-        );
+        // Half the draws run the Policy-API-v2 pipeline composition of the
+        // same policy — token conservation must hold on both build paths.
+        if g.bool() {
+            cfg.spec = Some(layered_prefill::sched::PolicySpec::from_config(&cfg));
+        }
+        let m = Session::builder()
+            .model(ModelDesc::qwen3_30b_a3b())
+            .hardware(HardwareDesc::h100x2())
+            .scheduler(cfg)
+            .trace(&trace)
+            .run()
+            .expect("sim session")
+            .fleet;
         prop_assert_eq!(m.requests.len(), trace.len());
         for r in &m.requests {
             prop_assert_eq!(r.tbts_s.len() as u32 + 1, r.output_len);
@@ -253,15 +260,14 @@ fn prop_layered_traffic_dominance() {
     check("layered <= chunked expert bytes", 12, |g| {
         let trace = random_trace(g, 8);
         let mk = |policy| {
-            let cfg = SchedulerConfig::preset(policy);
-            simulate(
-                ModelDesc::qwen3_30b_a3b(),
-                HardwareDesc::h100x2(),
-                &cfg,
-                &trace,
-                SimOptions::default(),
-            )
-            .0
+            Session::builder()
+                .model(ModelDesc::qwen3_30b_a3b())
+                .hardware(HardwareDesc::h100x2())
+                .scheduler(SchedulerConfig::preset(policy))
+                .trace(&trace)
+                .run()
+                .expect("sim session")
+                .fleet
         };
         let c = mk(Policy::Chunked);
         let l = mk(Policy::Layered);

@@ -31,7 +31,7 @@ fn serve(engine: &RuntimeEngine, policy: Policy, trace: &Trace) -> layered_prefi
         realtime: false,
         ..Default::default()
     };
-    RealServer::new(engine, opts).unwrap().serve(trace).unwrap()
+    RealServer::new(engine, opts).unwrap().run(trace).unwrap()
 }
 
 #[test]
@@ -116,7 +116,7 @@ fn realtime_mode_measures_queueing() {
         realtime: true,
         ..Default::default()
     };
-    let rep = RealServer::new(&engine, opts).unwrap().serve(&trace).unwrap();
+    let rep = RealServer::new(&engine, opts).unwrap().run(&trace).unwrap();
     assert_eq!(rep.metrics.requests.len(), 2);
     assert!(rep.metrics.makespan_s >= 0.3, "ran shorter than last arrival");
 }
@@ -130,5 +130,5 @@ fn rejects_oversized_requests() {
     let engine = RuntimeEngine::load(&artifacts_dir()).expect("engine");
     let trace = trace_batch(&[(150, 20)]); // 170 > max_seq 160
     let opts = ServeOptions { realtime: false, ..Default::default() };
-    assert!(RealServer::new(&engine, opts).unwrap().serve(&trace).is_err());
+    assert!(RealServer::new(&engine, opts).unwrap().run(&trace).is_err());
 }

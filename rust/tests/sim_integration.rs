@@ -6,7 +6,7 @@ use layered_prefill::config::{
     Dataset, ModelDesc, Policy, SchedulerConfig, SloSpec, WorkloadSpec,
 };
 use layered_prefill::config::HardwareDesc;
-use layered_prefill::simulator::{simulate, SimOptions};
+use layered_prefill::serve::Session;
 use layered_prefill::workload::WorkloadGen;
 
 fn run(
@@ -17,15 +17,14 @@ fn run(
     n: usize,
 ) -> layered_prefill::metrics::RunMetrics {
     let trace = WorkloadGen::new(WorkloadSpec::new(dataset, rate, n)).generate();
-    let cfg = SchedulerConfig::preset(policy);
-    let (m, _) = simulate(
-        model,
-        HardwareDesc::h100x2(),
-        &cfg,
-        &trace,
-        SimOptions::default(),
-    );
-    m
+    Session::builder()
+        .model(model)
+        .hardware(HardwareDesc::h100x2())
+        .scheduler(SchedulerConfig::preset(policy))
+        .trace(&trace)
+        .run()
+        .expect("sim session")
+        .fleet
 }
 
 #[test]
