@@ -1,0 +1,164 @@
+#!/usr/bin/env python3
+"""Throughput regression gate for the BENCH_*.json perf trajectory.
+
+Compares a freshly produced bench artifact against the committed baseline
+and fails (exit 1) when any matched throughput metric drops below
+``baseline * (1 - tolerance)`` (default tolerance 15%).
+
+Matched metrics:
+  - hotpath: ``sims[*].iter_per_s`` keyed by ``policy``; lower-is-better
+    ``group_layer_ns`` gated at ``baseline * (1 + tolerance)``.
+  - cluster: ``sweep[*].iter_per_s`` keyed by ``(replicas, router)`` and
+    ``threads_sweep[*].iter_per_s`` keyed by ``threads``.
+
+Record-only mode: when the baseline is missing, marked ``"bootstrap": true``,
+or a metric is null/zero, that comparison is skipped with a note — the gate
+exits 0. This lets the very first CI run (and runs on machines that have
+never measured a baseline) stay green while still uploading fresh artifacts;
+replace the committed baseline with a measured artifact to arm the gate.
+
+Usage:
+  python3 python/bench_gate.py --current bench_out/BENCH_hotpath.json \
+      --baseline rust/BENCH_hotpath.json [--tolerance 0.15]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def load(path: Path) -> dict | None:
+    if not path.is_file():
+        return None
+    try:
+        return json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"[bench_gate] WARN: cannot parse {path}: {e}")
+        return None
+
+
+def index_rows(rows: list | None, key_fields: tuple[str, ...]) -> dict:
+    out = {}
+    for row in rows or []:
+        if isinstance(row, dict):
+            out[tuple(row.get(k) for k in key_fields)] = row
+    return out
+
+
+def usable(value) -> bool:
+    return isinstance(value, (int, float)) and value > 0
+
+
+class Gate:
+    def __init__(self, tolerance: float):
+        self.tolerance = tolerance
+        self.failures: list[str] = []
+        self.compared = 0
+        self.skipped = 0
+
+    def check(self, label: str, base, cur, lower_is_better: bool = False) -> None:
+        """Gate one metric; skip (record-only) when either side is unusable."""
+        if not usable(base) or not usable(cur):
+            self.skipped += 1
+            print(f"[bench_gate]   skip {label}: baseline/current not measured")
+            return
+        self.compared += 1
+        if lower_is_better:
+            limit = base * (1 + self.tolerance)
+            ok = cur <= limit
+            verdict = f"{cur:.1f} vs baseline {base:.1f} (limit {limit:.1f})"
+        else:
+            limit = base * (1 - self.tolerance)
+            ok = cur >= limit
+            verdict = f"{cur:.1f} vs baseline {base:.1f} (floor {limit:.1f})"
+        mark = "ok  " if ok else "FAIL"
+        print(f"[bench_gate]   {mark} {label}: {verdict}")
+        if not ok:
+            self.failures.append(f"{label}: {verdict}")
+
+
+def gate_hotpath(gate: Gate, base: dict, cur: dict) -> None:
+    base_sims = index_rows(base.get("sims"), ("policy",))
+    for key, cur_row in index_rows(cur.get("sims"), ("policy",)).items():
+        base_row = base_sims.get(key, {})
+        gate.check(
+            f"hotpath sim {key[0]} iter/s",
+            base_row.get("iter_per_s"),
+            cur_row.get("iter_per_s"),
+        )
+    gate.check(
+        "hotpath group_layer ns/call",
+        base.get("group_layer_ns"),
+        cur.get("group_layer_ns"),
+        lower_is_better=True,
+    )
+
+
+def gate_cluster(gate: Gate, base: dict, cur: dict) -> None:
+    base_sweep = index_rows(base.get("sweep"), ("replicas", "router"))
+    for key, cur_row in index_rows(cur.get("sweep"), ("replicas", "router")).items():
+        base_row = base_sweep.get(key, {})
+        gate.check(
+            f"cluster {key[0]:.0f}x {key[1]} iter/s",
+            base_row.get("iter_per_s"),
+            cur_row.get("iter_per_s"),
+        )
+    base_threads = index_rows(base.get("threads_sweep"), ("threads",))
+    for key, cur_row in index_rows(cur.get("threads_sweep"), ("threads",)).items():
+        base_row = base_threads.get(key, {})
+        gate.check(
+            f"cluster threads={key[0]:.0f} iter/s",
+            base_row.get("iter_per_s"),
+            cur_row.get("iter_per_s"),
+        )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", required=True, type=Path)
+    ap.add_argument("--baseline", required=True, type=Path)
+    ap.add_argument("--tolerance", type=float, default=0.15)
+    args = ap.parse_args()
+
+    cur = load(args.current)
+    if cur is None:
+        print(f"[bench_gate] FAIL: current artifact {args.current} missing/unreadable")
+        return 1
+
+    base = load(args.baseline)
+    name = cur.get("bench", "?")
+    print(f"[bench_gate] bench={name} tolerance={args.tolerance:.0%}")
+    if base is None:
+        print("[bench_gate] baseline missing — record-only, exit 0")
+        return 0
+    if base.get("bootstrap"):
+        print(
+            "[bench_gate] baseline is a bootstrap record (never measured) — "
+            "record-only, exit 0. Commit a measured artifact to arm the gate."
+        )
+        return 0
+
+    gate = Gate(args.tolerance)
+    if name == "hotpath":
+        gate_hotpath(gate, base, cur)
+    elif name == "cluster":
+        gate_cluster(gate, base, cur)
+    else:
+        print(f"[bench_gate] WARN: unknown bench '{name}' — nothing gated")
+
+    print(
+        f"[bench_gate] {gate.compared} compared, {gate.skipped} skipped, "
+        f"{len(gate.failures)} failed"
+    )
+    if gate.failures:
+        for f in gate.failures:
+            print(f"[bench_gate] REGRESSION {f}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

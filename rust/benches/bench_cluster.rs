@@ -1,18 +1,28 @@
 //! Bench: router + cluster-core overhead per engine iteration at 1/4/16
-//! replicas. Runs the same ShareGPT-style load per replica through each
-//! router and reports wall-clock per fleet iteration and per routed
-//! request — the cost the cluster layer adds on top of the engines.
+//! replicas, plus the threaded fleet-core speedup sweep. Runs the same
+//! ShareGPT-style load per replica through each router and reports
+//! wall-clock per fleet iteration and per routed request — the cost the
+//! cluster layer adds on top of the engines — then re-runs a fixed
+//! 4-replica scenario at 1/2/4 worker threads, asserting bit-identical
+//! reports across thread counts and reporting the parallel speedup.
+//!
+//! Besides the human-readable table, writes `BENCH_cluster.json` (to
+//! `$BENCH_OUT/` if set, else the CWD) for the CI regression gate
+//! (`python/bench_gate.py` vs the committed baseline `rust/BENCH_cluster.json`).
 
 use std::time::Instant;
 
 use layered_prefill::cluster::{build_router, ReplicaSpec};
 use layered_prefill::config::{Dataset, HardwareDesc, ModelDesc, Policy, WorkloadSpec};
 use layered_prefill::serve::Session;
+use layered_prefill::util::bench::{obj, peak_rss_json, write_bench_json};
+use layered_prefill::util::json::Json;
 use layered_prefill::workload::WorkloadGen;
 
 fn main() {
     let model = ModelDesc::qwen3_30b_a3b();
     let hw = HardwareDesc::h100x2();
+    let mut sweep = Vec::new();
     println!("replicas router      reqs  fleet-iters   wall (s)  us/iter  us/request");
     for &n_replicas in &[1usize, 4, 16] {
         for router_name in ["rr", "least-kv", "slo"] {
@@ -47,7 +57,94 @@ fn main() {
                 wall / iters as f64 * 1e6,
                 wall / n_requests as f64 * 1e6,
             );
+            sweep.push(obj(vec![
+                ("replicas", Json::Num(n_replicas as f64)),
+                ("router", Json::Str(router_name.into())),
+                ("requests", Json::Num(n_requests as f64)),
+                ("fleet_iters", Json::Num(iters as f64)),
+                ("wall_s", Json::Num(wall)),
+                ("iter_per_s", Json::Num(iters as f64 / wall.max(1e-12))),
+            ]));
         }
+    }
+
+    // --- threaded fleet-core sweep: fixed 4-replica scenario at 1/2/4
+    // worker threads. Thread counts must be bit-identical (the barrier
+    // merge-order contract); wall-clock measures the parallel speedup.
+    let threads_sweep_replicas = 4usize;
+    let n_requests = 60 * threads_sweep_replicas;
+    let mut wspec = WorkloadSpec::new(
+        Dataset::ShareGpt,
+        2.0 * threads_sweep_replicas as f64,
+        n_requests,
+    );
+    wspec.seed = 0xBE7C;
+    let trace = WorkloadGen::new(wspec).generate();
+
+    let mut threads_sweep = Vec::new();
+    let mut serial_wall = None;
+    let mut serial_fingerprint: Option<(String, Vec<(u64, usize)>)> = None;
+    println!("threads  wall (s)  iter/s   speedup");
+    for threads in [1usize, 2, 4] {
+        let spec = ReplicaSpec::new(model.clone(), hw.clone(), Policy::Layered);
+        let t0 = Instant::now();
+        let rep = Session::builder()
+            .replica_specs(vec![spec; threads_sweep_replicas])
+            .router(build_router("rr").expect("router name"))
+            .threads(threads)
+            .trace(&trace)
+            .run()
+            .expect("sim session");
+        let wall = t0.elapsed().as_secs_f64();
+
+        let fingerprint = (format!("{:?}", rep.per_replica), rep.assignments.clone());
+        match &serial_fingerprint {
+            None => serial_fingerprint = Some(fingerprint),
+            Some(base) => assert_eq!(
+                base, &fingerprint,
+                "threads={threads} diverged from the serial run"
+            ),
+        }
+
+        let serial = *serial_wall.get_or_insert(wall);
+        let speedup = serial / wall.max(1e-12);
+        let iters = rep.fleet.iterations.max(1);
+        println!(
+            "{:7} {:9.3} {:8.0} {:8.2}x",
+            threads,
+            wall,
+            iters as f64 / wall.max(1e-12),
+            speedup
+        );
+        threads_sweep.push(obj(vec![
+            ("threads", Json::Num(threads as f64)),
+            ("replicas", Json::Num(threads_sweep_replicas as f64)),
+            ("requests", Json::Num(n_requests as f64)),
+            ("wall_s", Json::Num(wall)),
+            ("iter_per_s", Json::Num(iters as f64 / wall.max(1e-12))),
+            ("speedup_vs_serial", Json::Num(speedup)),
+        ]));
+    }
+    println!("[bench_cluster] threads sweep bit-identical across 1/2/4 threads");
+
+    let payload = obj(vec![
+        ("bench", Json::Str("cluster".into())),
+        ("bootstrap", Json::Bool(false)),
+        ("sweep", Json::Arr(sweep)),
+        ("threads_sweep", Json::Arr(threads_sweep)),
+        ("peak_rss_bytes", peak_rss_json()),
+        (
+            "host_parallelism",
+            Json::Num(
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1) as f64,
+            ),
+        ),
+    ]);
+    match write_bench_json("BENCH_cluster.json", &payload) {
+        Ok(path) => println!("[bench_cluster] wrote {}", path.display()),
+        Err(e) => eprintln!("[bench_cluster] failed to write BENCH_cluster.json: {e}"),
     }
     println!("[bench_cluster] done");
 }

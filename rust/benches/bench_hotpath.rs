@@ -1,20 +1,77 @@
 //! L3 hot-path micro/macro benchmarks (the §Perf targets):
 //!   - simulator iterations/second on a saturated serving run
-//!   - scheduler plan() cost per call
+//!   - allocations/iteration on that run (with `--features bench-alloc`)
 //!   - cost-model group_layer() per call
 //!   - real PJRT step latency (if artifacts are built)
+//!
+//! Besides the human-readable table, writes `BENCH_hotpath.json` (to
+//! `$BENCH_OUT/` if set, else the CWD) for the CI regression gate
+//! (`python/bench_gate.py` vs the committed baseline `rust/BENCH_hotpath.json`).
 use std::time::Instant;
 
-use layered_prefill::config::{Dataset, HardwareDesc, ModelDesc, Policy, SchedulerConfig, WorkloadSpec};
+use layered_prefill::config::{
+    Dataset, HardwareDesc, ModelDesc, Policy, SchedulerConfig, WorkloadSpec,
+};
 use layered_prefill::model::WorkAnalytics;
 use layered_prefill::serve::Session;
+use layered_prefill::util::bench::{obj, peak_rss_json, write_bench_json};
+use layered_prefill::util::json::Json;
 use layered_prefill::workload::WorkloadGen;
 
+/// Counting global allocator: one relaxed atomic increment per alloc/realloc.
+/// Only swapped in under `--features bench-alloc` so default builds keep the
+/// system allocator untouched.
+#[cfg(feature = "bench-alloc")]
+mod alloc_counter {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    pub static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+    pub struct CountingAlloc;
+
+    unsafe impl GlobalAlloc for CountingAlloc {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            System.alloc(layout)
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout)
+        }
+
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            System.realloc(ptr, layout, new_size)
+        }
+    }
+
+    #[global_allocator]
+    static GLOBAL: CountingAlloc = CountingAlloc;
+
+    pub fn count() -> u64 {
+        ALLOCS.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(feature = "bench-alloc")]
+fn alloc_count() -> Option<u64> {
+    Some(alloc_counter::count())
+}
+
+#[cfg(not(feature = "bench-alloc"))]
+fn alloc_count() -> Option<u64> {
+    None
+}
+
 fn main() {
-    // --- simulator throughput ---
+    let mut sims = Vec::new();
+
+    // --- simulator throughput (+ allocations/iteration under bench-alloc) ---
     let trace = WorkloadGen::new(WorkloadSpec::new(Dataset::ShareGpt, 6.0, 200)).generate();
     for policy in [Policy::Chunked, Policy::Layered] {
         let cfg = SchedulerConfig::preset(policy);
+        let allocs0 = alloc_count();
         let t0 = Instant::now();
         let m = Session::builder()
             .model(ModelDesc::qwen3_30b_a3b())
@@ -25,13 +82,40 @@ fn main() {
             .expect("sim session")
             .fleet;
         let dt = t0.elapsed().as_secs_f64();
-        println!(
-            "[hotpath] sim {}: {} iterations in {:.3}s -> {:.0} iter/s wall",
-            policy.name(),
-            m.iterations,
-            dt,
-            m.iterations as f64 / dt
-        );
+        let allocs_per_iter = match (allocs0, alloc_count()) {
+            (Some(a0), Some(a1)) if m.iterations > 0 => {
+                Some((a1 - a0) as f64 / m.iterations as f64)
+            }
+            _ => None,
+        };
+        let iter_per_s = m.iterations as f64 / dt;
+        match allocs_per_iter {
+            Some(a) => println!(
+                "[hotpath] sim {}: {} iterations in {:.3}s -> {:.0} iter/s wall, {:.1} allocs/iter",
+                policy.name(),
+                m.iterations,
+                dt,
+                iter_per_s,
+                a
+            ),
+            None => println!(
+                "[hotpath] sim {}: {} iterations in {:.3}s -> {:.0} iter/s wall",
+                policy.name(),
+                m.iterations,
+                dt,
+                iter_per_s
+            ),
+        }
+        sims.push(obj(vec![
+            ("policy", Json::Str(policy.name().into())),
+            ("iterations", Json::Num(m.iterations as f64)),
+            ("wall_s", Json::Num(dt)),
+            ("iter_per_s", Json::Num(iter_per_s)),
+            (
+                "allocs_per_iter",
+                allocs_per_iter.map(Json::Num).unwrap_or(Json::Null),
+            ),
+        ]));
     }
 
     // --- cost model per-call ---
@@ -44,10 +128,10 @@ fn main() {
     for _ in 0..iters {
         acc += analytics.group_layer(&prefills, &ctx).bytes();
     }
+    let group_layer_ns = t0.elapsed().as_secs_f64() / iters as f64 * 1e9;
     println!(
         "[hotpath] group_layer(64 decodes + 1 prefill): {:.0} ns/call (acc {:.1e})",
-        t0.elapsed().as_secs_f64() / iters as f64 * 1e9,
-        acc
+        group_layer_ns, acc
     );
 
     // --- real PJRT step latency (artifacts gated) ---
@@ -86,5 +170,25 @@ fn main() {
         println!("[hotpath] PJRT layer_decode b8: {:.2} ms/layer-step", per_layer * 1e3);
     } else {
         println!("[hotpath] artifacts not built; skipping PJRT step bench");
+    }
+
+    let payload = obj(vec![
+        ("bench", Json::Str("hotpath".into())),
+        ("bootstrap", Json::Bool(false)),
+        ("sims", Json::Arr(sims)),
+        ("group_layer_ns", Json::Num(group_layer_ns)),
+        ("peak_rss_bytes", peak_rss_json()),
+        (
+            "threads",
+            Json::Num(
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1) as f64,
+            ),
+        ),
+    ]);
+    match write_bench_json("BENCH_hotpath.json", &payload) {
+        Ok(path) => println!("[hotpath] wrote {}", path.display()),
+        Err(e) => eprintln!("[hotpath] failed to write BENCH_hotpath.json: {e}"),
     }
 }

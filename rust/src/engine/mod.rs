@@ -31,13 +31,15 @@
 //! through [`EngineCore::run_events`]; `run_until` / `drain` are the
 //! sink-less conveniences.
 
+pub mod parallel;
 pub mod real;
 pub mod sim;
 
+pub use parallel::WorkerPool;
 pub use real::RealExecutor;
 pub use sim::SimExecutor;
 
-use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 
 use anyhow::Result;
 
@@ -48,7 +50,11 @@ use crate::simulator::cost::IterationCost;
 use crate::workload::{Request, Trace};
 
 /// Backend that executes one planned iteration and owns the engine clock.
-pub trait Executor {
+///
+/// `Send` is a supertrait so replica engines (state + scheduler + executor)
+/// can step on [`WorkerPool`] threads between control boundaries; executors
+/// are only ever *used* from one thread at a time.
+pub trait Executor: Send {
     fn name(&self) -> &'static str;
 
     /// Engine time "now" in seconds (simulated clock or wall clock since
@@ -116,6 +122,15 @@ pub struct EngineCore {
     replica: usize,
     /// `ReplicaDrained` already emitted (re-armed by new pushes).
     drained_notified: bool,
+    /// Reusable per-iteration scratch for `advance` (zero-alloc hot path):
+    /// per-request (id, tokens, layer_sum, completes) merge buffer.
+    scratch_per_req: Vec<(u64, u32, u32, bool)>,
+    /// Requests whose prefill completed this iteration.
+    scratch_completed: Vec<u64>,
+    /// Deduplicated decode ids scheduled this iteration.
+    scratch_decode: Vec<u64>,
+    /// Requests that finished this iteration.
+    scratch_finished: Vec<u64>,
 }
 
 impl EngineCore {
@@ -132,6 +147,10 @@ impl EngineCore {
             halted: false,
             replica: 0,
             drained_notified: false,
+            scratch_per_req: Vec::new(),
+            scratch_completed: Vec::new(),
+            scratch_decode: Vec::new(),
+            scratch_finished: Vec::new(),
         }
     }
 
@@ -384,24 +403,36 @@ impl EngineCore {
         sink: &mut dyn EventSink,
     ) {
         let n_layers = state.model.n_layers;
-        let mut finished: Vec<u64> = Vec::new();
+        let mut finished = std::mem::take(&mut self.scratch_finished);
+        finished.clear();
 
         // Prefill progress. Layer-axis policies emit the same (req, tokens)
         // slice against successive groups across iterations; token-axis
         // progress (prefill_done) advances only when the slice completes or
         // when the group set covers the whole stack in one iteration.
-        let mut completed_prefills: Vec<u64> = Vec::new();
+        let mut completed_prefills = std::mem::take(&mut self.scratch_completed);
+        completed_prefills.clear();
+        let mut per_req = std::mem::take(&mut self.scratch_per_req);
+        per_req.clear();
         {
-            // Per-request (tokens, layer_sum, completes) this iteration.
-            let mut per_req: BTreeMap<u64, (u32, u32, bool)> = BTreeMap::new();
+            // Per-request (id, tokens, layer_sum, completes) this iteration.
+            // The linear-scan merge mirrors the previous BTreeMap
+            // `entry().or_insert()` exactly (tokens from the first
+            // occurrence, layers summed, completes OR-ed); the group count
+            // per request is small, and ids end up unique, so the sort
+            // below reproduces the ascending-id iteration order.
             for g in &plan.groups {
                 for w in &g.prefill {
-                    let e = per_req.entry(w.req).or_insert((w.tokens, 0, false));
-                    e.1 += g.n_layers;
-                    e.2 |= w.completes;
+                    if let Some(e) = per_req.iter_mut().find(|e| e.0 == w.req) {
+                        e.2 += g.n_layers;
+                        e.3 |= w.completes;
+                    } else {
+                        per_req.push((w.req, w.tokens, g.n_layers, w.completes));
+                    }
                 }
             }
-            for (id, (tokens, layer_sum, completes)) in per_req {
+            per_req.sort_unstable_by_key(|e| e.0);
+            for &(id, tokens, layer_sum, completes) in &per_req {
                 sink.on_event(
                     self.replica,
                     &EngineEvent::PrefillGroupDone {
@@ -432,7 +463,7 @@ impl EngineCore {
             }
         }
 
-        for id in completed_prefills {
+        for &id in &completed_prefills {
             // The prompt's KV now actually exists: publish its SHARED-
             // prefix block hashes so later same-prefix admissions can take
             // cached credit. Only the shared region is published —
@@ -468,18 +499,19 @@ impl EngineCore {
         }
 
         // Decode progress: each decoding request scheduled this iteration
-        // emits exactly one token (I3).
-        let decode_ids: Vec<u64> = {
-            let mut set = BTreeSet::new();
-            for g in &plan.groups {
-                for &(id, _) in &g.decode {
-                    set.insert(id);
-                }
+        // emits exactly one token (I3). sort + dedup reproduces the old
+        // BTreeSet's ascending unique iteration order without allocating.
+        let mut decode_ids = std::mem::take(&mut self.scratch_decode);
+        decode_ids.clear();
+        for g in &plan.groups {
+            for &(id, _) in &g.decode {
+                decode_ids.push(id);
             }
-            set.into_iter().collect()
-        };
+        }
+        decode_ids.sort_unstable();
+        decode_ids.dedup();
         self.decode_batch_weighted += decode_ids.len() as f64 * duration_s;
-        for id in decode_ids {
+        for &id in &decode_ids {
             let r = state.reqs.get_mut(&id).unwrap();
             if r.done_decoding() {
                 continue; // finished at an earlier iteration boundary
@@ -506,7 +538,7 @@ impl EngineCore {
             }
         }
 
-        for id in finished {
+        for &id in &finished {
             state.decoding.retain(|&x| x != id);
             let _ = state.kv.release(id);
             self.last_emit_s.remove(&id);
@@ -527,6 +559,12 @@ impl EngineCore {
         }
 
         self.metrics.token_timeline.push((now, self.emitted_total));
+
+        // Return the scratch buffers for the next iteration.
+        self.scratch_per_req = per_req;
+        self.scratch_completed = completed_prefills;
+        self.scratch_decode = decode_ids;
+        self.scratch_finished = finished;
     }
 }
 

@@ -3,9 +3,8 @@
 //! mapping (chunk padding, per-group layer sweeps, batched decode) lives
 //! here; the loop around it is the shared engine core.
 
-use std::cell::RefCell;
 use std::collections::{BTreeMap, BTreeSet};
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -18,8 +17,10 @@ use crate::simulator::cost::IterationCost;
 use crate::util::rng::Rng;
 
 /// Shared generated-token map: the server keeps a handle so outputs survive
-/// the executor being consumed by a `serve::Session` run.
-pub type OutputHandle = Rc<RefCell<BTreeMap<u64, Vec<i32>>>>;
+/// the executor being consumed by a `serve::Session` run. `Arc<Mutex<..>>`
+/// (not `Rc<RefCell<..>>`) so the executor stays `Send` for the threaded
+/// fleet core; the lock is uncontended — one executor writes per replica.
+pub type OutputHandle = Arc<Mutex<BTreeMap<u64, Vec<i32>>>>;
 
 /// Per-request prefill runtime state (hidden frontier between iterations).
 struct PrefillRt {
@@ -57,7 +58,7 @@ impl<'e> RealExecutor<'e> {
             seed,
             prompts: BTreeMap::new(),
             prefill_rt: BTreeMap::new(),
-            outputs: Rc::new(RefCell::new(BTreeMap::new())),
+            outputs: Arc::new(Mutex::new(BTreeMap::new())),
             start: Instant::now(),
         })
     }
@@ -116,7 +117,7 @@ impl Executor for RealExecutor<'_> {
             slots_vec = vec![scratch; b];
             lens_vec = vec![0i32; b];
             {
-                let outs = self.outputs.borrow();
+                let outs = self.outputs.lock().unwrap();
                 for (i, rid) in decode_ids.iter().enumerate() {
                     let r = &state.reqs[rid];
                     let out = outs.get(rid).expect("decoding req has outputs");
@@ -220,13 +221,13 @@ impl Executor for RealExecutor<'_> {
         if let Some(h) = decode_h {
             debug_assert!(batch_b > 0);
             let toks = self.engine.lm_head(&h)?;
-            let mut outs = self.outputs.borrow_mut();
+            let mut outs = self.outputs.lock().unwrap();
             for (i, rid) in decode_ids.iter().enumerate() {
                 outs.get_mut(rid).unwrap().push(toks[i]);
             }
         }
 
-        let mut outs = self.outputs.borrow_mut();
+        let mut outs = self.outputs.lock().unwrap();
         for (rid, tok) in completed {
             outs.insert(rid, vec![tok]);
         }

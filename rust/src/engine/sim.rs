@@ -7,13 +7,15 @@ use anyhow::Result;
 use super::Executor;
 use crate::metrics::RunMetrics;
 use crate::sched::{EngineState, IterationPlan};
-use crate::simulator::cost::{CostModel, IterationCost};
+use crate::simulator::cost::{CostModel, CostScratch, IterationCost};
 use crate::simulator::energy::EnergyMeter;
 
 pub struct SimExecutor {
     pub cost: CostModel,
     energy: EnergyMeter,
     now_s: f64,
+    /// Reusable costing buffers — keeps `execute` allocation-free.
+    scratch: CostScratch,
 }
 
 impl SimExecutor {
@@ -22,6 +24,7 @@ impl SimExecutor {
             cost,
             energy: EnergyMeter::new(),
             now_s: 0.0,
+            scratch: CostScratch::default(),
         }
     }
 
@@ -47,7 +50,7 @@ impl Executor for SimExecutor {
     }
 
     fn execute(&mut self, plan: &IterationPlan, _state: &EngineState) -> Result<IterationCost> {
-        let c = self.cost.iteration(plan);
+        let c = self.cost.iteration_with_scratch(plan, &mut self.scratch);
         self.now_s += c.duration_s;
         self.energy.charge_iteration(&self.cost.hw, &c);
         Ok(c)

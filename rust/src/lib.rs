@@ -113,6 +113,27 @@
 //!   The [`cluster::PrefixAffinity`] router keeps same-prefix arrivals
 //!   on the replica already holding their cached blocks.
 //!
+//! ## The threaded fleet core: parallel simulation, serial semantics
+//!
+//! Multi-replica sessions step every replica's `EngineCore` concurrently on
+//! a persistent [`engine::WorkerPool`] (`Session::builder().threads(n)`,
+//! CLI `cluster --threads N`; `0` = auto = min(replicas, host
+//! parallelism)). The PR 3 control-boundary structure is the ONLY
+//! synchronization seam: between boundaries replicas share nothing and
+//! run lock-free; routing, controller actions, spill requeues, and KV
+//! migration landings all happen on the session thread at the barrier.
+//! Determinism survives threading by construction — each replica buffers
+//! its typed events lane-locally during a step and the barrier flushes
+//! them to the `EventSink` in replica-index order, so ANY thread count is
+//! byte-identical to `threads(1)` (which is the exact serial loop).
+//! Locked by `tests/parallel_determinism.rs` across routers, chaos
+//! controllers, KV migration + prefix cache, mixed-policy fleets, and
+//! the adaptive policy. The hot path is allocation-free at steady state
+//! (slab request table keyed by dense ids, reusable plan/account/cost
+//! scratch), and the speed is TRACKED: `bench_hotpath`/`bench_cluster`
+//! emit `BENCH_*.json` artifacts that CI gates against committed
+//! baselines (`python/bench_gate.py`, 15% tolerance).
+//!
 //! ## Architecture: one engine core, many backends
 //!
 //! Each iteration of any run is the same cycle, owned by

@@ -36,6 +36,9 @@
 //!       Policy API v2: `--policy-spec SPEC` applies one spec fleet-wide;
 //!       `--policy-specs "S1;S2"` cycles a semicolon-separated spec list
 //!       over the replicas (mixed fleets; overrides `--policies`).
+//!       Parallelism: `--threads N` steps replica engines on N worker
+//!       threads between control boundaries (0 = auto = min(replicas,
+//!       available parallelism); 1 = serial; every N is bit-identical).
 //!   info
 //!       Print model/hardware descriptors and artifact status.
 
@@ -521,6 +524,9 @@ fn cmd_cluster(args: &Args) {
     let prefix_cache = args.bool("prefix-cache");
     let migrate_kv = args.bool("migrate-kv");
     let migration_gbps = args.f64("migration-gbps", 16.0);
+    // Worker threads for parallel replica stepping: 0 (default) auto-sizes
+    // to min(replicas, available parallelism); 1 forces the serial path.
+    let threads = args.usize("threads", 0);
 
     // Observability: streaming sliding-window SLO (computed live from the
     // event stream, no finalization) + a full event log for the loss audit.
@@ -544,6 +550,7 @@ fn cmd_cluster(args: &Args) {
         .prefix_cache(prefix_cache)
         .migrate_kv(migrate_kv)
         .migration_gbps(migration_gbps)
+        .threads(threads)
         .sink(&mut fanout);
     if has_controller {
         builder = builder.controller(controller);

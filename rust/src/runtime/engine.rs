@@ -25,8 +25,9 @@ pub struct RuntimeEngine {
     emb: xla::Literal,
     final_norm: xla::Literal,
     w_out: xla::Literal,
-    /// Executed step counter (for perf accounting).
-    pub steps: std::cell::Cell<u64>,
+    /// Executed step counter (for perf accounting). Atomic so executors
+    /// holding `&RuntimeEngine` stay `Send` for the threaded fleet core.
+    pub steps: std::sync::atomic::AtomicU64,
 }
 
 /// KV pools for the whole model, flowing through layer executables.
@@ -74,7 +75,7 @@ impl RuntimeEngine {
             emb,
             final_norm,
             w_out,
-            steps: std::cell::Cell::new(0),
+            steps: std::sync::atomic::AtomicU64::new(0),
         })
     }
 
@@ -119,7 +120,7 @@ impl RuntimeEngine {
         // arguments alone are ~0.5 MB per layer call (§Perf: removing the
         // per-call clones cut PJRT step latency by ~2x).
         let out = exe.execute::<&xla::Literal>(args)?;
-        self.steps.set(self.steps.get() + 1);
+        self.steps.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let tuple = out[0][0].to_literal_sync()?;
         Ok(tuple.to_tuple()?)
     }

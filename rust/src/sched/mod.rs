@@ -38,7 +38,7 @@ pub mod state;
 mod properties;
 
 pub use policy::PolicySpec;
-pub use state::{Admission, EngineState, Phase, SimReq};
+pub use state::{Admission, EngineState, Phase, ReqTable, SimReq};
 
 use crate::config::{Policy, SchedulerConfig};
 
@@ -96,7 +96,7 @@ impl IterationPlan {
 /// `name` is the policy's display name, surfaced per replica in
 /// `SessionReport::policies` and the CLI tables (legacy presets return
 /// their enum name; spec-compiled pipelines return the spec's name).
-pub trait Scheduler {
+pub trait Scheduler: Send {
     fn name(&self) -> &str;
     fn plan(&mut self, state: &mut EngineState) -> Option<IterationPlan>;
 }

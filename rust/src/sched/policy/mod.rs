@@ -80,7 +80,7 @@ impl PrefillUnit {
 /// through [`EngineState::admit`] — which reserves KV, takes prefix-cache
 /// credit, and logs `Admitted`/`KvRejected` outcomes — and return the ids
 /// admitted this round, in admission order.
-pub trait AdmissionPolicy {
+pub trait AdmissionPolicy: Send {
     fn admit(&mut self, state: &mut EngineState) -> Vec<u64>;
 }
 
@@ -89,13 +89,13 @@ pub trait AdmissionPolicy {
 /// `admitted` is the cohort stage 1 just admitted (possibly empty);
 /// shapers are free to slice over the whole `state.prefilling` set instead
 /// (the token-axis shapers do, so no admitted request is ever stranded).
-pub trait PrefillShaper {
+pub trait PrefillShaper: Send {
     fn shape(&mut self, state: &EngineState, admitted: &[u64]) -> PrefillUnit;
 }
 
 /// Stage 3: interleave the current prefill unit with the decode batch
 /// across layer groups, emitting one [`IterationPlan`] per iteration.
-pub trait BatchComposer {
+pub trait BatchComposer: Send {
     /// True when the current unit is fully consumed and the pipeline
     /// should admit + shape a new one before composing.
     fn needs_unit(&self) -> bool;

@@ -301,7 +301,7 @@ fn drive(g: &mut Gen) -> PropResult {
 
     // Conservation at drain: every request finished with exactly its
     // output budget and a fully-prefilled prompt.
-    for (id, r) in &state.reqs {
+    for (id, r) in state.reqs.iter() {
         prop_assert!(
             r.phase == Phase::Finished,
             "req {id} not finished ({})",

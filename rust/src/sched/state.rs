@@ -2,7 +2,8 @@
 //! schedulers. The engine owns canonical progress; schedulers read it and
 //! perform admissions (waiting -> prefilling) against the KV manager.
 
-use std::collections::BTreeMap;
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
 
 use crate::config::ModelDesc;
 use crate::kvcache::KvCacheManager;
@@ -83,6 +84,115 @@ pub enum Admission {
     KvRejected { id: u64, demand: u32, free: u32 },
 }
 
+/// Multiply-shift hasher for request ids — ids are already well-spread
+/// integers, so SipHash's per-lookup cost (the default `HashMap` hasher)
+/// is pure overhead on the plan/advance hot path.
+#[derive(Default)]
+pub struct IdHasher(u64);
+
+impl Hasher for IdHasher {
+    fn finish(&self) -> u64 {
+        self.0
+    }
+    fn write(&mut self, bytes: &[u8]) {
+        // Fallback for non-u64 keys (never hit by ReqTable).
+        for &b in bytes {
+            self.0 = self.0.rotate_left(8) ^ b as u64;
+        }
+    }
+    fn write_u64(&mut self, v: u64) {
+        self.0 = v.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    }
+}
+
+/// Slab-backed request table: the zero-alloc-hot-path replacement for the
+/// old `BTreeMap<u64, SimReq>`. Live requests occupy dense slab slots
+/// (freed slots are recycled LIFO, so a steady-state run stops allocating
+/// entirely); an id → slot index keeps the map-like API — `insert` /
+/// `remove` / `get` / `get_mut` / `contains_key` / `Index<&u64>` — that
+/// the schedulers and engine core already use.
+///
+/// Iteration order is SLOT order (insertion order modulo slot reuse), not
+/// ascending id like the BTreeMap was; the only iterating caller (a
+/// drain-time conservation check) is order-independent. Hot-path readers
+/// never iterate — they index by id.
+#[derive(Default)]
+pub struct ReqTable {
+    slots: Vec<Option<SimReq>>,
+    free: Vec<u32>,
+    index: HashMap<u64, u32, BuildHasherDefault<IdHasher>>,
+}
+
+impl ReqTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    pub fn contains_key(&self, id: &u64) -> bool {
+        self.index.contains_key(id)
+    }
+
+    pub fn get(&self, id: &u64) -> Option<&SimReq> {
+        let &slot = self.index.get(id)?;
+        self.slots[slot as usize].as_ref()
+    }
+
+    pub fn get_mut(&mut self, id: &u64) -> Option<&mut SimReq> {
+        let &slot = self.index.get(id)?;
+        self.slots[slot as usize].as_mut()
+    }
+
+    /// Insert `sim` under `id`, returning the previous entry if one was
+    /// live (same replace semantics as `BTreeMap::insert`).
+    pub fn insert(&mut self, id: u64, sim: SimReq) -> Option<SimReq> {
+        if let Some(&slot) = self.index.get(&id) {
+            return self.slots[slot as usize].replace(sim);
+        }
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.slots[s as usize] = Some(sim);
+                s
+            }
+            None => {
+                self.slots.push(Some(sim));
+                (self.slots.len() - 1) as u32
+            }
+        };
+        self.index.insert(id, slot);
+        None
+    }
+
+    pub fn remove(&mut self, id: &u64) -> Option<SimReq> {
+        let slot = self.index.remove(id)?;
+        let sim = self.slots[slot as usize].take();
+        debug_assert!(sim.is_some(), "index pointed at an empty slot");
+        self.free.push(slot);
+        sim
+    }
+
+    /// Live entries in slot order (NOT id order; see the type docs).
+    pub fn iter(&self) -> impl Iterator<Item = (u64, &SimReq)> {
+        self.slots
+            .iter()
+            .filter_map(|s| s.as_ref().map(|r| (r.req.id, r)))
+    }
+}
+
+impl std::ops::Index<&u64> for ReqTable {
+    type Output = SimReq;
+    fn index(&self, id: &u64) -> &SimReq {
+        self.get(id).expect("no request with this id")
+    }
+}
+
 /// Engine state visible to schedulers.
 pub struct EngineState {
     pub model: ModelDesc,
@@ -93,7 +203,7 @@ pub struct EngineState {
     pub prefilling: Vec<u64>,
     /// Prefill complete, generating.
     pub decoding: Vec<u64>,
-    pub reqs: BTreeMap<u64, SimReq>,
+    pub reqs: ReqTable,
     pub kv: KvCacheManager,
     /// Scheduler-visible cap on concurrent decodes.
     pub max_batch: usize,
@@ -110,7 +220,7 @@ impl EngineState {
             waiting: Vec::new(),
             prefilling: Vec::new(),
             decoding: Vec::new(),
-            reqs: BTreeMap::new(),
+            reqs: ReqTable::new(),
             kv,
             max_batch,
             admissions: Vec::new(),
@@ -510,6 +620,36 @@ mod tests {
         assert!(s.prefilling.is_empty());
         assert_eq!(s.kv.len_of(1), None);
         assert_eq!(s.kv.used_blocks(), 0);
+    }
+
+    #[test]
+    fn req_table_recycles_slots_and_keeps_map_semantics() {
+        let mut t = ReqTable::new();
+        assert!(t.is_empty());
+        for id in 0..8u64 {
+            assert!(t.insert(id, SimReq::new(req(id, 10, 2))).is_none());
+        }
+        assert_eq!(t.len(), 8);
+        assert!(t.contains_key(&3));
+        assert_eq!(t[&3].req.input_len, 10);
+        // Remove then re-insert: the freed slot is reused, capacity stable.
+        let before = t.slots.len();
+        assert!(t.remove(&3).is_some());
+        assert!(t.remove(&3).is_none());
+        assert!(!t.contains_key(&3));
+        assert!(t.insert(100, SimReq::new(req(100, 5, 1))).is_none());
+        assert_eq!(t.slots.len(), before, "freed slot recycled, no growth");
+        assert_eq!(t[&100].req.input_len, 5);
+        // Replace semantics match BTreeMap::insert.
+        let old = t.insert(100, SimReq::new(req(100, 7, 1))).unwrap();
+        assert_eq!(old.req.input_len, 5);
+        assert_eq!(t[&100].req.input_len, 7);
+        // Iteration covers exactly the live set.
+        let mut ids: Vec<u64> = t.iter().map(|(id, _)| id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 4, 5, 6, 7, 100]);
+        t.get_mut(&100).unwrap().generated = 1;
+        assert_eq!(t[&100].generated, 1);
     }
 
     #[test]

@@ -76,6 +76,28 @@
 //!   stream), landing after a transfer delay modeled at
 //!   [`SessionBuilder::migration_gbps`] ([`EngineEvent::KvMigrated`]).
 //!   No prompt token·layer is recomputed on the migrated path.
+//!
+//! ## The threaded fleet core
+//!
+//! Multi-replica sessions step their replica engines in parallel on a
+//! [`WorkerPool`](crate::engine::WorkerPool)
+//! ([`SessionBuilder::threads`]; default auto = min(replica count,
+//! available parallelism)). The control boundary is the ONLY
+//! synchronization seam: between two boundaries each replica's
+//! plan → execute → account → advance slice runs lock-free on its own
+//! lane, and all cross-replica work — router decisions, spill requeues,
+//! controller actions, KV-migration landing — happens on the session
+//! thread at the barrier.
+//!
+//! The barrier/merge-order contract keeps every output byte-stable
+//! regardless of thread interleaving: during a slice each replica buffers
+//! its events locally, and at the barrier the buffers are flushed to the
+//! session sink in replica-index order — exactly the order the serial
+//! loop produced, since it advanced replicas 0..n in sequence per slice
+//! and replicas never observe each other mid-slice. `threads(1)` skips
+//! the pool entirely and takes the exact pre-threading serial path; both
+//! paths are locked bit-identical by `tests/parallel_determinism.rs` and
+//! all pre-existing goldens.
 
 pub mod event;
 
@@ -92,7 +114,7 @@ use crate::cluster::{
     Router,
 };
 use crate::config::{HardwareDesc, ModelDesc, Policy, SchedulerConfig};
-use crate::engine::{CoreOptions, CoreStatus, EngineCore, Executor, SimExecutor};
+use crate::engine::{CoreOptions, CoreStatus, EngineCore, Executor, SimExecutor, WorkerPool};
 use crate::metrics::RunMetrics;
 use crate::model::WorkAnalytics;
 use crate::sched::{EngineState, Scheduler, SimReq};
@@ -166,6 +188,7 @@ pub struct Session<'a> {
     prefix_cache: bool,
     migrate_kv: bool,
     migration_gbps: f64,
+    threads: usize,
 }
 
 /// Builder for [`Session`]; all knobs default to the paper's single-engine
@@ -190,6 +213,7 @@ pub struct SessionBuilder<'a> {
     prefix_cache: bool,
     migrate_kv: bool,
     migration_gbps: f64,
+    threads: usize,
 }
 
 impl<'a> SessionBuilder<'a> {
@@ -213,6 +237,7 @@ impl<'a> SessionBuilder<'a> {
             prefix_cache: false,
             migrate_kv: false,
             migration_gbps: 16.0,
+            threads: 0,
         }
     }
 
@@ -271,6 +296,19 @@ impl<'a> SessionBuilder<'a> {
     pub fn replica_specs(mut self, specs: Vec<ReplicaSpec>) -> Self {
         assert!(!specs.is_empty(), "session needs at least one replica");
         self.specs = Some(specs);
+        self
+    }
+
+    /// Worker threads for stepping replica engines in parallel between
+    /// control boundaries. `0` (the default) auto-sizes to
+    /// min(replica count, available parallelism). `1` takes the exact
+    /// pre-threading serial path. Explicit values above 1 are honored
+    /// even on machines reporting less parallelism (they are capped only
+    /// at the replica count), so determinism tests can exercise the
+    /// parallel path anywhere. Every thread count produces bit-identical
+    /// reports and event streams — see the module docs.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n;
         self
     }
 
@@ -414,6 +452,7 @@ impl<'a> SessionBuilder<'a> {
             prefix_cache: self.prefix_cache,
             migrate_kv: self.migrate_kv,
             migration_gbps: self.migration_gbps,
+            threads: self.threads,
         }
     }
 
@@ -474,6 +513,33 @@ struct Live<'x> {
     state: EngineState,
     exec: Box<dyn Executor + 'x>,
     core: EngineCore,
+    /// Events of the current parallel slice, buffered lane-locally and
+    /// flushed to the session sink in replica-index order at the barrier
+    /// (the bit-stability contract — see the module docs). Unused (empty)
+    /// on the serial path.
+    evbuf: Vec<EngineEvent>,
+    /// Outcome of the current parallel slice, harvested at the barrier.
+    step_status: Result<CoreStatus>,
+}
+
+/// Lane-local sink backing [`Live::step_buffered`]: appends to the
+/// replica's own buffer, so no lock sits on the iteration hot path.
+struct BufSink<'b>(&'b mut Vec<EngineEvent>);
+
+impl EventSink for BufSink<'_> {
+    fn on_event(&mut self, _replica: usize, ev: &EngineEvent) {
+        self.0.push(ev.clone());
+    }
+}
+
+impl Live<'_> {
+    /// One parallel slice: advance this replica to `until` (None = drain),
+    /// buffering events and the outcome locally for the barrier flush.
+    fn step_buffered(&mut self, until: Option<f64>) {
+        let Live { sched, state, exec, core, evbuf, step_status, .. } = self;
+        let mut buf = BufSink(evbuf);
+        *step_status = core.run_events(exec.as_mut(), sched.as_mut(), state, until, &mut buf);
+    }
 }
 
 impl Live<'_> {
@@ -546,9 +612,67 @@ fn build_live<'x>(
             state,
             exec: factory(i, spec)?,
             core: EngineCore::new(core_opts).with_replica(i),
+            evbuf: Vec::new(),
+            step_status: Ok(CoreStatus::Ran),
         });
     }
     Ok(live)
+}
+
+/// Resolve the builder's thread knob against the fleet size: 0 = auto =
+/// min(replicas, available parallelism); explicit values are capped only
+/// at the replica count (extra lanes would idle).
+fn resolve_threads(requested: usize, replicas: usize) -> usize {
+    let t = if requested == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    } else {
+        requested
+    };
+    t.clamp(1, replicas.max(1))
+}
+
+/// Advance every replica engine to `until` (None = drain), stepping them
+/// on `pool` lanes when one is present. The event stream reaching `sink`
+/// is byte-identical to the serial loop: each replica buffers its slice's
+/// events lane-locally and the buffers flush in replica-index order at
+/// the barrier — the serial loop already emitted events grouped by
+/// replica in index order per slice, and replicas never observe each
+/// other mid-slice. Returns per-replica statuses, index-aligned; errors
+/// surface lowest-replica-first (also matching the serial order).
+fn advance_fleet(
+    live: &mut [Live<'_>],
+    pool: Option<&WorkerPool>,
+    until: Option<f64>,
+    sink: &mut Tally<'_>,
+) -> Result<Vec<CoreStatus>> {
+    let mut statuses = Vec::with_capacity(live.len());
+    match pool {
+        Some(pool) if live.len() > 1 => {
+            pool.par_each_mut(live, |_, r| r.step_buffered(until));
+            for (i, r) in live.iter_mut().enumerate() {
+                for ev in r.evbuf.drain(..) {
+                    sink.on_event(i, &ev);
+                }
+            }
+            for r in live.iter_mut() {
+                statuses.push(std::mem::replace(&mut r.step_status, Ok(CoreStatus::Ran))?);
+            }
+        }
+        _ => {
+            for r in live.iter_mut() {
+                statuses.push(r.core.run_events(
+                    r.exec.as_mut(),
+                    r.sched.as_mut(),
+                    &mut r.state,
+                    until,
+                    &mut *sink,
+                )?);
+            }
+        }
+    }
+    Ok(statuses)
 }
 
 /// Least-loaded Active replica, else least-loaded non-down replica,
@@ -626,6 +750,9 @@ struct ControlledRun<'a> {
     in_transit: Vec<Transit>,
     /// Scale-ups must inherit the session's prefix-cache setting.
     prefix_cache: bool,
+    /// Worker pool for parallel replica stepping (None = serial path).
+    /// Sized off the initial fleet; scale-ups share the existing lanes.
+    pool: Option<WorkerPool>,
 }
 
 impl<'a> ControlledRun<'a> {
@@ -637,17 +764,10 @@ impl<'a> ControlledRun<'a> {
             .collect()
     }
 
-    /// Advance every replica engine to engine time `t`.
+    /// Advance every replica engine to engine time `t` (in parallel when
+    /// the session has a worker pool; see [`advance_fleet`]).
     fn advance(&mut self, t: f64, sink: &mut Tally<'_>) -> Result<()> {
-        for r in self.live.iter_mut() {
-            r.core.run_events(
-                r.exec.as_mut(),
-                r.sched.as_mut(),
-                &mut r.state,
-                Some(t),
-                &mut *sink,
-            )?;
-        }
+        advance_fleet(&mut self.live, self.pool.as_ref(), Some(t), sink)?;
         Ok(())
     }
 
@@ -947,6 +1067,8 @@ impl<'a> ControlledRun<'a> {
                     state,
                     exec: (self.factory)(i, &spec)?,
                     core: EngineCore::new(self.core_opts).with_replica(i),
+                    evbuf: Vec::new(),
+                    step_status: Ok(CoreStatus::Ran),
                 };
                 // Align the newborn's clock with the fleet (it idles — and
                 // meters idle energy — from 0 to its join instant, as a
@@ -1008,9 +1130,12 @@ impl<'a> Session<'a> {
             record_token_times,
             immediate_arrivals,
             prefix_cache,
+            threads,
             ..
         } = self;
         let n = specs.len();
+        let threads = resolve_threads(threads, n);
+        let pool = (threads > 1).then(|| WorkerPool::new(threads));
 
         let mut default_sink = NullSink;
         let user_sink: &mut dyn EventSink = match sink {
@@ -1039,15 +1164,7 @@ impl<'a> Session<'a> {
         let mut assignments: Vec<(u64, usize)> = Vec::new();
         while let Some(req) = source.next_request() {
             if !immediate_arrivals {
-                for r in live.iter_mut() {
-                    r.core.run_events(
-                        r.exec.as_mut(),
-                        r.sched.as_mut(),
-                        &mut r.state,
-                        Some(req.arrival_s),
-                        &mut sink,
-                    )?;
-                }
+                advance_fleet(&mut live, pool.as_ref(), Some(req.arrival_s), &mut sink)?;
             }
             let views: Vec<ReplicaView> = live
                 .iter()
@@ -1062,14 +1179,7 @@ impl<'a> Session<'a> {
         // Drain every replica (or halt it at the horizon).
         let mut any_halted = false;
         let mut halted_pending = 0usize;
-        for r in live.iter_mut() {
-            let status = r.core.run_events(
-                r.exec.as_mut(),
-                r.sched.as_mut(),
-                &mut r.state,
-                None,
-                &mut sink,
-            )?;
+        for status in advance_fleet(&mut live, pool.as_ref(), None, &mut sink)? {
             if let CoreStatus::Halted { pending } = status {
                 any_halted = true;
                 halted_pending += pending;
@@ -1104,6 +1214,7 @@ impl<'a> Session<'a> {
             prefix_cache,
             migrate_kv,
             migration_gbps,
+            threads,
         } = self;
         let core_opts = CoreOptions {
             horizon_s,
@@ -1121,6 +1232,8 @@ impl<'a> Session<'a> {
         let has_controller = controller.is_some();
         let live = build_live(&specs, states, &mut factory, core_opts, prefix_cache)?;
         let n = live.len();
+        let threads = resolve_threads(threads, n);
+        let pool = (threads > 1).then(|| WorkerPool::new(threads));
         let mut sink = Tally {
             inner: user_sink,
             kv_rejects: vec![0; n],
@@ -1145,6 +1258,7 @@ impl<'a> Session<'a> {
             migration_bw: migration_gbps * 1e9,
             in_transit: Vec::new(),
             prefix_cache,
+            pool,
         };
         let dt = if control_dt > 0.0 { control_dt } else { 0.25 };
         let mut now = 0.0f64;
@@ -1211,14 +1325,7 @@ impl<'a> Session<'a> {
         // Final pass: emit drain/halt notifications and collect statuses.
         let mut any_halted = false;
         let mut halted_pending = 0usize;
-        for r in run.live.iter_mut() {
-            let status = r.core.run_events(
-                r.exec.as_mut(),
-                r.sched.as_mut(),
-                &mut r.state,
-                None,
-                &mut sink,
-            )?;
+        for status in advance_fleet(&mut run.live, run.pool.as_ref(), None, &mut sink)? {
             if let CoreStatus::Halted { pending } = status {
                 any_halted = true;
                 halted_pending += pending;
@@ -1310,6 +1417,32 @@ mod tests {
             .expect("sim session");
         assert_eq!(report.assignment_counts(), vec![4, 4, 4]);
         assert_eq!(report.fleet.requests.len(), 12);
+    }
+
+    #[test]
+    fn threads_are_bit_identical_to_serial() {
+        // threads(1) is the exact pre-threading serial path; threads(2/3)
+        // must reproduce its report and event stream byte-for-byte.
+        let trace = sharegpt_trace(18, 6.0, 13);
+        let run = |threads: usize| {
+            let mut log = EventLog::default();
+            let report = Session::builder()
+                .replicas(3)
+                .trace(&trace)
+                .threads(threads)
+                .sink(&mut log)
+                .run()
+                .expect("sim session");
+            (
+                format!("{:?}", log.events),
+                format!("{:?}", report.per_replica),
+                report.assignments,
+            )
+        };
+        let serial = run(1);
+        for t in [2, 3] {
+            assert_eq!(run(t), serial, "threads={t} diverged from serial");
+        }
     }
 
     #[test]

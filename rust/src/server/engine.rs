@@ -9,9 +9,9 @@
 //! `Session`; new code can install the PJRT backend directly with
 //! `Session::builder().executor_factory(..)`.
 
-use std::cell::RefCell;
 use std::collections::BTreeMap;
-use std::rc::Rc;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
@@ -132,12 +132,12 @@ impl<'e> RealServer<'e> {
         let kv = KvCacheManager::new(m.usable_slots() as u32, m.max_seq as u32);
         let state = EngineState::new(ModelDesc::tinymoe(), kv, self.opts.max_batch);
 
-        let t0_steps = self.engine.steps.get();
+        let t0_steps = self.engine.steps.load(Ordering::Relaxed);
 
         // One real replica behind the single run surface: a Session with a
         // PJRT executor factory. Outputs survive the run via the shared
         // handle.
-        let outputs = Rc::new(RefCell::new(BTreeMap::new()));
+        let outputs = Arc::new(Mutex::new(BTreeMap::new()));
         let handle = outputs.clone();
         let engine = self.engine;
         let seed = self.opts.seed;
@@ -160,12 +160,12 @@ impl<'e> RealServer<'e> {
 
         let metrics = report.fleet;
         let iterations = metrics.iterations;
-        let outputs = Rc::try_unwrap(outputs)
-            .map(RefCell::into_inner)
-            .unwrap_or_else(|rc| rc.borrow().clone());
+        let outputs = Arc::try_unwrap(outputs)
+            .map(|m| m.into_inner().unwrap())
+            .unwrap_or_else(|arc| arc.lock().unwrap().clone());
         Ok(ServeReport {
             metrics,
-            steps: self.engine.steps.get() - t0_steps,
+            steps: self.engine.steps.load(Ordering::Relaxed) - t0_steps,
             outputs,
             iterations,
         })

@@ -35,6 +35,17 @@ pub struct CostModel {
     pub analytics: WorkAnalytics,
 }
 
+/// Reusable buffers for [`CostModel::iteration_with_scratch`]: the
+/// per-group ctx / prefill staging vectors that `iteration` would
+/// otherwise allocate on every call. One instance lives in
+/// [`SimExecutor`](crate::engine::SimExecutor), so steady-state costing
+/// does zero heap allocation.
+#[derive(Clone, Debug, Default)]
+pub struct CostScratch {
+    ctx: Vec<u64>,
+    prefills: Vec<(u64, u64)>,
+}
+
 impl CostModel {
     pub fn new(hw: HardwareDesc, analytics: WorkAnalytics) -> Self {
         CostModel { hw, analytics }
@@ -61,6 +72,16 @@ impl CostModel {
     /// group (§Perf: ~2.9x on layered simulation throughput together with
     /// coverage memoization).
     pub fn iteration(&self, plan: &IterationPlan) -> IterationCost {
+        self.iteration_with_scratch(plan, &mut CostScratch::default())
+    }
+
+    /// [`CostModel::iteration`] with caller-provided staging buffers — the
+    /// allocation-free variant the hot path uses.
+    pub fn iteration_with_scratch(
+        &self,
+        plan: &IterationPlan,
+        scratch: &mut CostScratch,
+    ) -> IterationCost {
         let mut cost = IterationCost::default();
         // Shared decode-only work, computed lazily on the first decode-only
         // group (all groups carry an identical decode set by construction).
@@ -68,9 +89,11 @@ impl CostModel {
         for group in &plan.groups {
             if group.prefill.is_empty() {
                 let w = decode_work.get_or_insert_with(|| {
-                    let ctx: Vec<u64> =
-                        group.decode.iter().map(|&(_, c)| c as u64).collect();
-                    self.analytics.group_layer(&[], &ctx)
+                    scratch.ctx.clear();
+                    scratch
+                        .ctx
+                        .extend(group.decode.iter().map(|&(_, c)| c as u64));
+                    self.analytics.group_layer(&[], &scratch.ctx)
                 });
                 let n = group.n_layers as f64;
                 cost.duration_s += n * self.layer_time(w);
@@ -82,13 +105,18 @@ impl CostModel {
                 cost.act_bytes += n * w.act_bytes;
                 continue;
             }
-            let prefills: Vec<(u64, u64)> = group
-                .prefill
-                .iter()
-                .map(|w| (w.tokens as u64, w.pos as u64))
-                .collect();
-            let ctx: Vec<u64> = group.decode.iter().map(|&(_, c)| c as u64).collect();
-            let w = self.analytics.group_layer(&prefills, &ctx);
+            scratch.prefills.clear();
+            scratch.prefills.extend(
+                group
+                    .prefill
+                    .iter()
+                    .map(|w| (w.tokens as u64, w.pos as u64)),
+            );
+            scratch.ctx.clear();
+            scratch
+                .ctx
+                .extend(group.decode.iter().map(|&(_, c)| c as u64));
+            let w = self.analytics.group_layer(&scratch.prefills, &scratch.ctx);
             let n = group.n_layers as f64;
             cost.duration_s += n * self.layer_time(&w);
             cost.flops += n * w.flops();

@@ -1,0 +1,102 @@
+//! Bench artifact support: `BENCH_*.json` emission and a peak-RSS probe.
+//!
+//! The perf-trajectory benches (`bench_hotpath`, `bench_cluster`) print
+//! human-readable tables AND write a machine-readable JSON artifact so CI
+//! can gate on throughput regressions (`python/bench_gate.py` compares the
+//! fresh artifact against the committed baseline in `rust/BENCH_*.json`).
+//!
+//! Output location: `$BENCH_OUT/<name>` when the `BENCH_OUT` env var is set
+//! (treated as a directory, created if missing), else `./<name>` in the
+//! current working directory.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use super::json::Json;
+
+/// Build a JSON object from `(key, value)` pairs (keys sort on output —
+/// artifacts are diff-stable).
+pub fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        fields
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
+
+/// Peak resident set size of this process in bytes (`VmHWM` from
+/// `/proc/self/status`). `None` off Linux or if the field is missing —
+/// artifacts record `null` rather than a fake number.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+/// `peak_rss_bytes` as a JSON value (`null` when unavailable).
+pub fn peak_rss_json() -> Json {
+    match peak_rss_bytes() {
+        Some(b) => Json::Num(b as f64),
+        None => Json::Null,
+    }
+}
+
+/// Resolve the output path for artifact `name` (see module docs).
+pub fn bench_out_path(name: &str) -> PathBuf {
+    match std::env::var_os("BENCH_OUT") {
+        Some(dir) if !dir.is_empty() => PathBuf::from(dir).join(name),
+        _ => PathBuf::from(name),
+    }
+}
+
+/// Write `payload` to the resolved artifact path and return it.
+pub fn write_bench_json(name: &str, payload: &Json) -> std::io::Result<PathBuf> {
+    let path = bench_out_path(name);
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let mut text = payload.to_string();
+    text.push('\n');
+    std::fs::write(&path, text)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn obj_builds_sorted_object() {
+        let j = obj(vec![("b", Json::Num(2.0)), ("a", Json::Num(1.0))]);
+        assert_eq!(j.to_string(), r#"{"a":1,"b":2}"#);
+    }
+
+    #[test]
+    fn peak_rss_positive_on_linux() {
+        if let Some(b) = peak_rss_bytes() {
+            assert!(b > 0);
+        }
+    }
+
+    #[test]
+    fn artifact_roundtrips_through_parser() {
+        let payload = obj(vec![
+            ("bench", Json::Str("t".into())),
+            ("iter_per_s", Json::Num(123.5)),
+            ("allocs_per_iter", Json::Null),
+        ]);
+        let mut text = payload.to_string();
+        text.push('\n');
+        let back = crate::util::json::parse(text.trim()).unwrap();
+        assert_eq!(back.get("iter_per_s").unwrap().as_f64(), Some(123.5));
+        assert_eq!(back.get("allocs_per_iter"), Some(&Json::Null));
+    }
+}

@@ -2,6 +2,7 @@
 //! beyond `xla`/`anyhow`: PRNG + distributions, stats, JSON, CLI parsing,
 //! logging, table formatting, and a mini property-testing framework.
 
+pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod logging;

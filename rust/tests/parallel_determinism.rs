@@ -1,0 +1,190 @@
+//! Threaded fleet-core determinism locks: the SAME seeded cluster scenario
+//! run at 1, 2, and 4 worker threads must produce byte-identical event
+//! streams and reports. This is the barrier/merge-order contract of
+//! `serve`'s parallel path — replicas step concurrently between control
+//! boundaries, but events flush to the sink in replica-index order at each
+//! barrier and all cross-replica work happens on the session thread, so
+//! thread count is unobservable in any output.
+//!
+//! Coverage deliberately crosses the feature matrix: plain runs across all
+//! routers, a chaos control scenario (drain + fail + rejoin) with spill
+//! routing, KV migration + prefix cache, a mixed-policy fleet, and the
+//! PolicySpec-composed adaptive policy.
+
+use layered_prefill::cluster::{
+    build_router, AdaptiveSpill, DrainController, ReplicaSpec,
+};
+use layered_prefill::config::{
+    Dataset, HardwareDesc, ModelDesc, Policy, WorkloadSpec,
+};
+use layered_prefill::sched::policy::{AdaptiveSpec, PolicySpec};
+use layered_prefill::serve::{EventLog, Session, SessionReport};
+use layered_prefill::workload::{Trace, WorkloadGen};
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 4];
+
+fn trace_of(dataset: Dataset, n: usize, rate: f64, seed: u64) -> Trace {
+    let mut spec = WorkloadSpec::new(dataset, rate, n);
+    spec.seed = seed;
+    WorkloadGen::new(spec).generate()
+}
+
+/// Byte-level fingerprint of everything a run emits: the full typed event
+/// stream (with replica indices), per-replica metrics, routing assignments,
+/// and the fleet-level report.
+fn fingerprint(log: &EventLog, report: &SessionReport) -> (String, String, String, String) {
+    (
+        format!("{:?}", log.events),
+        format!("{:?}", report.per_replica),
+        format!("{:?}", report.assignments),
+        format!("{:?} {:?}", report.status, report.fleet),
+    )
+}
+
+/// Run `build(threads, sink)` at every thread count and assert all
+/// fingerprints match the serial (threads=1) run byte-for-byte.
+fn assert_thread_invariant(
+    label: &str,
+    build: impl Fn(usize, &mut EventLog) -> SessionReport,
+) {
+    let mut base: Option<(String, String, String, String)> = None;
+    for threads in THREAD_COUNTS {
+        let mut log = EventLog::default();
+        let report = build(threads, &mut log);
+        let fp = fingerprint(&log, &report);
+        match &base {
+            None => base = Some(fp),
+            Some(b) => {
+                assert_eq!(b.0, fp.0, "{label}: event stream diverged at threads={threads}");
+                assert_eq!(b.1, fp.1, "{label}: per-replica metrics diverged at threads={threads}");
+                assert_eq!(b.2, fp.2, "{label}: assignments diverged at threads={threads}");
+                assert_eq!(b.3, fp.3, "{label}: fleet report diverged at threads={threads}");
+            }
+        }
+    }
+}
+
+#[test]
+fn plain_fleet_is_thread_invariant_across_routers() {
+    for router_name in ["rr", "least-kv", "slo"] {
+        let trace = trace_of(Dataset::ShareGpt, 32, 6.0, 0xC0FFEE);
+        assert_thread_invariant(&format!("plain/{router_name}"), |threads, log| {
+            Session::builder()
+                .policy(Policy::Layered)
+                .replicas(4)
+                .router(build_router(router_name).expect("router name"))
+                .threads(threads)
+                .trace(&trace)
+                .sink(log)
+                .run()
+                .expect("sim session")
+        });
+    }
+}
+
+#[test]
+fn chaos_control_scenario_is_thread_invariant() {
+    // Drain replica 0 at t=2 (rejoin t=5), fail replica 1 at t=3, with
+    // adaptive spill routing: the harshest control-boundary traffic —
+    // reroutes, queue handoffs, replicas leaving and re-entering rotation.
+    let trace = trace_of(Dataset::Arxiv, 24, 6.0, 0xDEAD);
+    assert_thread_invariant("chaos", |threads, log| {
+        Session::builder()
+            .policy(Policy::Layered)
+            .replicas(4)
+            .router(Box::new(AdaptiveSpill::new()))
+            .threads(threads)
+            .trace(&trace)
+            .controller(
+                DrainController::new()
+                    .drain_at(2.0, 0)
+                    .rejoin_at(5.0, 0)
+                    .fail_at(3.0, 1),
+            )
+            .sink(log)
+            .run()
+            .expect("sim session")
+    });
+}
+
+#[test]
+fn kv_migration_and_prefix_cache_are_thread_invariant() {
+    // Transit KV migration delivers at control boundaries; prefix sharing
+    // adds cross-request KV reuse. Both must be invisible to thread count.
+    let trace = trace_of(Dataset::ShareGpt, 28, 7.0, 0xFACE);
+    assert_thread_invariant("migrate+prefix", |threads, log| {
+        Session::builder()
+            .policy(Policy::Layered)
+            .replicas(4)
+            .router(Box::new(AdaptiveSpill::new()))
+            .threads(threads)
+            .trace(&trace)
+            .prefix_cache(true)
+            .migrate_kv(true)
+            .controller(DrainController::new().drain_at(2.5, 2))
+            .sink(log)
+            .run()
+            .expect("sim session")
+    });
+}
+
+#[test]
+fn mixed_policy_fleet_is_thread_invariant() {
+    // Heterogeneous fleet: chunked + layered replicas side by side, so
+    // per-replica step costs differ wildly and the barrier actually has to
+    // reorder asynchronous completions.
+    let model = ModelDesc::qwen3_30b_a3b();
+    let hw = HardwareDesc::h100x2();
+    let specs = vec![
+        ReplicaSpec::new(model.clone(), hw.clone(), Policy::Chunked),
+        ReplicaSpec::new(model.clone(), hw.clone(), Policy::Layered),
+        ReplicaSpec::new(model.clone(), hw.clone(), Policy::Chunked),
+        ReplicaSpec::new(model.clone(), hw.clone(), Policy::Layered),
+    ];
+    let trace = trace_of(Dataset::ShareGpt, 30, 5.0, 0xB0BA);
+    assert_thread_invariant("mixed-policy", |threads, log| {
+        Session::builder()
+            .replica_specs(specs.clone())
+            .router(build_router("least-kv").expect("router name"))
+            .threads(threads)
+            .trace(&trace)
+            .sink(log)
+            .run()
+            .expect("sim session")
+    });
+}
+
+#[test]
+fn adaptive_policy_spec_is_thread_invariant() {
+    // The signal-driven adaptive policy flips scheduling axes mid-run based
+    // on observed load — state that lives inside each replica's scheduler
+    // and must never observe cross-replica timing.
+    let trace = trace_of(Dataset::Arxiv, 20, 4.0, 0x5EED);
+    assert_thread_invariant("adaptive-spec", |threads, log| {
+        Session::builder()
+            .policy_spec(PolicySpec::Adaptive(AdaptiveSpec::default()))
+            .replicas(4)
+            .threads(threads)
+            .trace(&trace)
+            .sink(log)
+            .run()
+            .expect("sim session")
+    });
+}
+
+#[test]
+fn explicit_thread_counts_exceeding_replicas_clamp_safely() {
+    // threads > replicas clamps to the replica count; threads 0 resolves to
+    // the host's parallelism. Either way the output is the serial output.
+    let trace = trace_of(Dataset::ShareGpt, 16, 4.0, 0x7EA);
+    assert_thread_invariant("clamp", |threads, log| {
+        Session::builder()
+            .policy(Policy::Layered)
+            .replicas(2)
+            .threads(threads * 3) // 3, 6, 12 -> all clamp to 2
+            .trace(&trace)
+            .sink(log)
+            .run()
+            .expect("sim session")
+    });
+}
