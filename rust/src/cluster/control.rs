@@ -156,6 +156,12 @@ impl DrainController {
         self.at(t_s, ControlAction::Rejoin { replica })
     }
 
+    /// Add one replica (cloned from replica 0's blueprint) at engine time
+    /// `t_s` — scripted capacity growth, e.g. for scale-out drills.
+    pub fn scale_up_at(self, t_s: f64) -> Self {
+        self.at(t_s, ControlAction::ScaleUp)
+    }
+
     /// True when every scripted action has fired.
     pub fn exhausted(&self) -> bool {
         self.fired >= self.script.len()
@@ -239,7 +245,15 @@ impl Controller for Autoscaler {
     }
 
     fn on_event(&mut self, _replica: usize, ev: &EngineEvent) {
-        if let EngineEvent::KvRejected { t_s, .. } = ev {
+        // Only capacity rejections are pool pressure; tenant-budget
+        // refusals (quota / rate) are deliberate per-tenant throttling
+        // that more replicas would not (and should not) relieve.
+        if let EngineEvent::KvRejected {
+            t_s,
+            reason: crate::tenant::RejectReason::KvCapacity,
+            ..
+        } = ev
+        {
             self.rejects.push_back(*t_s);
         }
     }
@@ -390,8 +404,29 @@ mod tests {
     fn autoscaler_scales_up_on_sustained_rejects_and_drains_when_quiet() {
         let mut a = Autoscaler::new(5.0, 3, 4).with_cooldown(3.0);
         for t in [1.0, 1.2, 1.4] {
-            a.on_event(0, &EngineEvent::KvRejected { t_s: t, id: 7, demand: 10, free: 2 });
+            a.on_event(
+                0,
+                &EngineEvent::KvRejected {
+                    t_s: t,
+                    id: 7,
+                    demand: 10,
+                    free: 2,
+                    reason: crate::tenant::RejectReason::KvCapacity,
+                },
+            );
         }
+        // Tenant-budget refusals are NOT pool pressure: they never count
+        // toward the scale-up threshold.
+        a.on_event(
+            0,
+            &EngineEvent::KvRejected {
+                t_s: 1.5,
+                id: 8,
+                demand: 10,
+                free: 90,
+                reason: crate::tenant::RejectReason::TenantQuota,
+            },
+        );
         // Threshold met: one ScaleUp.
         assert_eq!(a.control(2.0, &active_views(1)), vec![ControlAction::ScaleUp]);
         // Cooldown suppresses further actions even under pressure.
@@ -413,7 +448,16 @@ mod tests {
     #[test]
     fn autoscaler_respects_max_replicas() {
         let mut a = Autoscaler::new(5.0, 1, 1).with_cooldown(0.0);
-        a.on_event(0, &EngineEvent::KvRejected { t_s: 0.5, id: 1, demand: 4, free: 0 });
+        a.on_event(
+            0,
+            &EngineEvent::KvRejected {
+                t_s: 0.5,
+                id: 1,
+                demand: 4,
+                free: 0,
+                reason: crate::tenant::RejectReason::KvCapacity,
+            },
+        );
         assert_eq!(a.control(1.0, &active_views(1)), vec![]);
     }
 

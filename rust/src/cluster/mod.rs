@@ -36,7 +36,7 @@ pub use router::{
 };
 
 use crate::config::{HardwareDesc, ModelDesc, Policy, SchedulerConfig};
-use crate::metrics::RunMetrics;
+use crate::metrics::{RunMetrics, TenantUsage};
 use crate::serve::Session;
 use crate::simulator::SimOptions;
 use crate::workload::Trace;
@@ -86,6 +86,12 @@ impl ClusterReport {
             counts[idx] += 1;
         }
         counts
+    }
+
+    /// Fleet-wide per-tenant usage / SLO table, ordered by tenant id (see
+    /// [`RunMetrics::per_tenant`]).
+    pub fn per_tenant(&self, slo: &crate::config::slo::SloSpec) -> Vec<TenantUsage> {
+        self.fleet.per_tenant(slo)
     }
 }
 

@@ -172,6 +172,17 @@ pub struct WorkloadSpec {
     pub shared_prefix_len: u32,
     /// Number of distinct shared prefixes to cycle through (min 1).
     pub prefix_groups: u32,
+    /// Multi-tenant workload: when > 0, every request is stamped with a
+    /// tenant id in `1..=tenants` (deterministic function of request id —
+    /// no extra RNG draws, so length/arrival samples are untouched and a
+    /// `tenants = 0` trace is byte-identical to the pre-tenant generator).
+    /// 0 = feature off (every request untenanted).
+    pub tenants: u32,
+    /// Noisy-neighbor skew: percentage (0–100) of requests stamped onto
+    /// tenant 1 (the "heavy" tenant) before the remainder round-robins
+    /// across tenants `2..=tenants`. 0 = uniform round-robin over all
+    /// tenants. Meaningful only when `tenants > 0`.
+    pub tenant_heavy_pct: u32,
 }
 
 impl WorkloadSpec {
@@ -185,6 +196,8 @@ impl WorkloadSpec {
             fixed_output: 256,
             shared_prefix_len: 0,
             prefix_groups: 1,
+            tenants: 0,
+            tenant_heavy_pct: 0,
         }
     }
 
@@ -192,6 +205,14 @@ impl WorkloadSpec {
     pub fn with_shared_prefix(mut self, prefix_len: u32, groups: u32) -> Self {
         self.shared_prefix_len = prefix_len;
         self.prefix_groups = groups.max(1);
+        self
+    }
+
+    /// Builder-style multi-tenant knob (see `tenants` /
+    /// `tenant_heavy_pct`). `heavy_pct` is clamped to 100.
+    pub fn with_tenants(mut self, tenants: u32, heavy_pct: u32) -> Self {
+        self.tenants = tenants;
+        self.tenant_heavy_pct = heavy_pct.min(100);
         self
     }
 }

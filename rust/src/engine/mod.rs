@@ -293,22 +293,31 @@ impl EngineCore {
             // EngineState::admit during planning; surface them now.
             self.flush_admissions(state, now, sink);
             let Some(plan) = maybe_plan else {
-                // Idle: advance to the next arrival or the pacing target —
-                // whichever comes first — or finish the run.
+                // Idle: advance to the next arrival, the pacing target, or
+                // the next tenant-bucket refill — whichever comes first —
+                // or finish the run. The bucket wake matters at the drain
+                // tail: rate-throttled waiting work is paced, not stuck,
+                // so the replica only drains when no waiting request can
+                // ever self-unblock (None when tenancy is off).
+                let t_ready = state.next_tenant_ready();
+                let wake = |t: f64| t_ready.map_or(t, |tr| tr.min(t));
                 match (self.pending.front().map(|r| r.arrival_s), until_s) {
-                    (Some(t_arr), Some(t)) => exec.idle_until(t_arr.min(t)),
-                    (Some(t_arr), None) => exec.idle_until(t_arr),
-                    (None, Some(t)) => exec.idle_until(t),
-                    (None, None) => {
-                        if !self.drained_notified {
-                            self.drained_notified = true;
-                            sink.on_event(
-                                self.replica,
-                                &EngineEvent::ReplicaDrained { t_s: now },
-                            );
+                    (Some(t_arr), Some(t)) => exec.idle_until(wake(t_arr.min(t))),
+                    (Some(t_arr), None) => exec.idle_until(wake(t_arr)),
+                    (None, Some(t)) => exec.idle_until(wake(t)),
+                    (None, None) => match t_ready {
+                        Some(tr) => exec.idle_until(tr),
+                        None => {
+                            if !self.drained_notified {
+                                self.drained_notified = true;
+                                sink.on_event(
+                                    self.replica,
+                                    &EngineEvent::ReplicaDrained { t_s: now },
+                                );
+                            }
+                            return Ok(CoreStatus::Drained);
                         }
-                        return Ok(CoreStatus::Drained);
-                    }
+                    },
                 }
                 continue;
             };
@@ -354,10 +363,21 @@ impl EngineCore {
                         );
                     }
                 }
-                Admission::KvRejected { id, demand, free } => {
+                Admission::KvRejected {
+                    id,
+                    demand,
+                    free,
+                    reason,
+                } => {
                     sink.on_event(
                         self.replica,
-                        &EngineEvent::KvRejected { t_s: now, id, demand, free },
+                        &EngineEvent::KvRejected {
+                            t_s: now,
+                            id,
+                            demand,
+                            free,
+                            reason,
+                        },
                     );
                 }
             }
@@ -540,7 +560,7 @@ impl EngineCore {
 
         for &id in &finished {
             state.decoding.retain(|&x| x != id);
-            let _ = state.kv.release(id);
+            state.release_kv(id);
             self.last_emit_s.remove(&id);
             let r = &state.reqs[&id];
             self.metrics.requests.push(RequestRecord {
@@ -551,6 +571,7 @@ impl EngineCore {
                 ttft_s: r.first_token_s.unwrap() - r.req.arrival_s,
                 tbts_s: r.tbts.clone(),
                 finish_s: r.finish_s.unwrap(),
+                tenant: r.req.tenant,
             });
             if self.opts.record_token_times {
                 self.token_times.push((id, r.token_times.clone()));

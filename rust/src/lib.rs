@@ -134,6 +134,38 @@
 //! emit `BENCH_*.json` artifacts that CI gates against committed
 //! baselines (`python/bench_gate.py`, 15% tolerance).
 //!
+//! ## Multi-tenant serving: budgets, fairness, per-tenant SLOs
+//!
+//! Serving millions of users means knowing WHOSE tokens are in the
+//! batch. Every [`workload::Request`] carries a tenant id (`0` =
+//! untenanted — the pre-tenant byte streams exactly), stamped by
+//! `WorkloadSpec::with_tenants` (uniform or noisy-neighbor-skewed mixes,
+//! round-tripped through the trace CSV's v3 `tenant` column). A
+//! [`tenant::TenantRegistry`] of [`tenant::TenantSpec`]s (fair-queueing
+//! weight, token-bucket rate/burst, hard KV-block quota) attaches per
+//! session (`Session::builder().tenants(..)`, CLI `--tenants SPEC`) and
+//! is enforced per replica at the one choke point every policy already
+//! goes through, `EngineState::admit`: a [`tenant::TenantAccounting`]
+//! ledger charges admitted KV blocks against the quota and admitted
+//! prefill tokens against a refilling [`tenant::TokenBucket`], refusing
+//! over-budget admissions down the existing `KvRejected` backpressure
+//! path with a typed [`tenant::RejectReason`] — quota/rate refusals are
+//! per-tenant throttling, not pool pressure, so spill routers and
+//! autoscalers ignore them and the engine idle loop wakes exactly at the
+//! next bucket-refill instant (throttled work is paced, never stranded).
+//! Cross-tenant ordering is [`tenant::FairQueue`], start-time
+//! (virtual-time) fair queueing composed as a fourth, orthogonal Policy
+//! API v2 axis (`PolicySpec` `fairness=vtfq,weights=1:4+2:1`) around ANY
+//! admission policy on either scheduling axis. Observability is
+//! per-tenant end to end: `RunMetrics::per_tenant` /
+//! `SessionReport::per_tenant` / `ClusterReport::per_tenant` tables
+//! (usage, TTFT/TBT percentiles, SLO attainment, goodput; CLI
+//! `--tenant-report`) and sliding-window
+//! [`metrics::StreamingSlo::tenant_summaries_at`] — the noisy-neighbor
+//! isolation signal. Feature-off bit-identity, quota/bucket conservation
+//! properties, and bounded noisy-neighbor p99 TTFT interference under
+//! vtfq (both composers) are locked by `tests/tenant_isolation.rs`.
+//!
 //! ## Architecture: one engine core, many backends
 //!
 //! Each iteration of any run is the same cycle, owned by
@@ -174,6 +206,10 @@
 //!   is bit-identical to the raw single-engine core (locked by
 //!   `tests/cluster_equivalence.rs`); drain/failure scenarios are locked
 //!   by `tests/control_scenarios.rs`.
+//! * **`tenant`** — the multi-tenant substrate: `TenantRegistry` /
+//!   `TenantSpec` budgets, `TokenBucket` + `TenantAccounting` admission
+//!   enforcement, and virtual-time `FairQueue` cross-tenant ordering
+//!   (locked by `tests/tenant_isolation.rs`).
 //! * **`kvcache` / `workload` / `metrics` / `report`** — paged KV manager,
 //!   paper-fitted workload generators with record/replay plus streaming
 //!   sources, latency/SLO/traffic metrics — both end-of-run (`RunMetrics`)
@@ -206,5 +242,6 @@ pub mod sched;
 pub mod serve;
 pub mod server;
 pub mod simulator;
+pub mod tenant;
 pub mod util;
 pub mod workload;

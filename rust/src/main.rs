@@ -36,6 +36,13 @@
 //!       Policy API v2: `--policy-spec SPEC` applies one spec fleet-wide;
 //!       `--policy-specs "S1;S2"` cycles a semicolon-separated spec list
 //!       over the replicas (mixed fleets; overrides `--policies`).
+//!       Multi-tenant serving: `--tenants SPEC` (count form `4`, or
+//!       `1:weight=4,rate=2000,burst=8000,quota=128;2` entries) stamps
+//!       the workload with tenant ids and enforces per-tenant KV quotas
+//!       and token-bucket admission; `--tenant-heavy PCT` gives tenant 1
+//!       PCT% of arrivals (noisy neighbor); `--tenant-report` prints the
+//!       per-tenant SLO table; `fairness=vtfq[,weights=1:4+2:1]` in a
+//!       `--policy-spec` adds virtual-time fair queueing.
 //!       Parallelism: `--threads N` steps replica engines on N worker
 //!       threads between control boundaries (0 = auto = min(replicas,
 //!       available parallelism); 1 = serial; every N is bit-identical).
@@ -87,7 +94,9 @@ fn usage() {
          \x20    | lpserve cluster --replicas 2 --policy-specs 'adaptive;chunked'\n\
          \x20    | lpserve cluster --replicas 4 --open-loop --fail-at 10:1 --autoscale --window 10\n\
          \x20    | lpserve cluster --replicas 4 --router prefix --shared-prefix 1024 \
-         --prefix-cache --fail-at 10:1 --migrate-kv"
+         --prefix-cache --fail-at 10:1 --migrate-kv\n\
+         \x20    | lpserve cluster --replicas 2 --tenants '1:rate=2000,burst=4000;2' \
+         --tenant-report"
     );
 }
 
@@ -403,6 +412,8 @@ fn check_replica_in_fleet(
 ///   lpserve cluster --replicas 4 --router rr --rate 6.0 --requests 200
 ///   lpserve cluster --replicas 4 --router slo --policies layered,chunked
 ///   lpserve cluster --replicas 4 --open-loop --fail-at 10:1 --autoscale
+///   lpserve cluster --replicas 2 --tenants '1:rate=2000,burst=4000;2' \
+///       --tenant-heavy 80 --policy-spec 'fairness=vtfq,weights=1:1+2:4'
 fn cmd_cluster(args: &Args) {
     use layered_prefill::cluster::{
         build_router, Autoscaler, ControllerSet, DrainController, ReplicaSpec,
@@ -411,6 +422,7 @@ fn cmd_cluster(args: &Args) {
     use layered_prefill::serve::{
         EngineEvent, EventLog, Fanout, PoissonSource, Session, SessionStatus,
     };
+    use layered_prefill::tenant::{RejectReason, TenantRegistry};
     use std::collections::BTreeSet;
 
     let model = model_arg(args);
@@ -524,6 +536,23 @@ fn cmd_cluster(args: &Args) {
     let prefix_cache = args.bool("prefix-cache");
     let migrate_kv = args.bool("migrate-kv");
     let migration_gbps = args.f64("migration-gbps", 16.0);
+    // Multi-tenant serving: `--tenants SPEC` parses a TenantRegistry
+    // (count form "4", or "1:weight=4,rate=2000,burst=8000,quota=128;2"
+    // entries), stamps the generated workload with tenant ids, and
+    // enforces quotas / token buckets at admission. `--tenant-heavy PCT`
+    // skews the stamp so tenant 1 owns PCT% of arrivals (noisy-neighbor
+    // workloads); `--tenant-report` forces the per-tenant SLO table
+    // (implied by `--tenants`).
+    let tenants = args.opt("tenants").map(|v| match TenantRegistry::parse(v) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("bad --tenants: {e}");
+            std::process::exit(2);
+        }
+    });
+    let tenant_heavy = args.usize("tenant-heavy", 0).min(100) as u32;
+    let tenant_report = args.bool("tenant-report") || tenants.is_some();
+    let n_tenants = tenants.as_ref().map_or(0, |r| r.ids().max().unwrap_or(0));
     // Worker threads for parallel replica stepping: 0 (default) auto-sizes
     // to min(replicas, available parallelism); 1 forces the serial path.
     let threads = args.usize("threads", 0);
@@ -555,6 +584,9 @@ fn cmd_cluster(args: &Args) {
     if has_controller {
         builder = builder.controller(controller);
     }
+    if let Some(reg) = tenants.clone() {
+        builder = builder.tenants(reg);
+    }
     let builder = if open_loop {
         // --requests bounds the stream when given; otherwise only the
         // horizon ends it.
@@ -562,13 +594,15 @@ fn cmd_cluster(args: &Args) {
             .opt("requests")
             .and_then(|v| v.parse::<usize>().ok())
             .unwrap_or(usize::MAX);
-        let mut wspec =
-            WorkloadSpec::new(dataset, rate, nn).with_shared_prefix(shared_prefix, prefix_groups);
+        let mut wspec = WorkloadSpec::new(dataset, rate, nn)
+            .with_shared_prefix(shared_prefix, prefix_groups)
+            .with_tenants(n_tenants, tenant_heavy);
         wspec.seed = seed;
         builder.workload(PoissonSource::new(wspec).with_horizon(horizon))
     } else {
-        let mut wspec =
-            WorkloadSpec::new(dataset, rate, n).with_shared_prefix(shared_prefix, prefix_groups);
+        let mut wspec = WorkloadSpec::new(dataset, rate, n)
+            .with_shared_prefix(shared_prefix, prefix_groups)
+            .with_tenants(n_tenants, tenant_heavy);
         wspec.seed = seed;
         let trace = WorkloadGen::new(wspec).generate();
         builder.trace(&trace)
@@ -648,7 +682,26 @@ fn cmd_cluster(args: &Args) {
     let unfinished = admitted.difference(&finished).count();
     let downs = log.count(|e| matches!(e, EngineEvent::ReplicaDown { .. }));
     let ups = log.count(|e| matches!(e, EngineEvent::ReplicaUp { .. }));
-    let rejects = log.count(|e| matches!(e, EngineEvent::KvRejected { .. }));
+    // Capacity rejects are pool pressure; tenant-budget refusals are
+    // pacing, reported separately so untenanted output is unchanged.
+    let rejects = log.count(|e| {
+        matches!(
+            e,
+            EngineEvent::KvRejected {
+                reason: RejectReason::KvCapacity,
+                ..
+            }
+        )
+    });
+    let throttles = log.count(|e| {
+        matches!(
+            e,
+            EngineEvent::KvRejected {
+                reason: RejectReason::TenantQuota | RejectReason::TenantRate,
+                ..
+            }
+        )
+    });
     let prefix_hits = log.count(|e| matches!(e, EngineEvent::PrefixHit { .. }));
     let migrations = log.count(|e| matches!(e, EngineEvent::KvMigrated { .. }));
     let status = match rep.status {
@@ -661,6 +714,41 @@ fn cmd_cluster(args: &Args) {
         admitted.len(),
         finished.len(),
     );
+    if tenants.is_some() {
+        println!("tenancy: tenant throttles {throttles} (quota/rate refusals, retried in place)");
+    }
+    if tenant_report {
+        let rows = rep.per_tenant(&slo);
+        let mut tt = Table::new("per-tenant — usage, latency, SLO attainment, goodput").header(&[
+            "tenant",
+            "reqs",
+            "in tok",
+            "out tok",
+            "TTFT p50 (s)",
+            "TTFT p99 (s)",
+            "TBT p99 (ms)",
+            "SLO",
+            "goodput tok/s",
+        ]);
+        for u in &rows {
+            tt.row(&[
+                if u.tenant == 0 {
+                    "-".to_string()
+                } else {
+                    format!("#{}", u.tenant)
+                },
+                u.n.to_string(),
+                u.input_tokens.to_string(),
+                u.output_tokens.to_string(),
+                f3(u.ttft_p50_s),
+                f3(u.ttft_p99_s),
+                f2(u.tbt_p99_s * 1e3),
+                pct(u.slo.full),
+                f1(u.goodput_tok_s),
+            ]);
+        }
+        tt.print();
+    }
     if prefix_cache || migrate_kv || prefix_hits + migrations > 0 {
         println!(
             "memory axis: prefix hits {prefix_hits} ({} tokens skipped) | migrations {migrations} \

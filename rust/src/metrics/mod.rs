@@ -5,7 +5,7 @@
 
 pub mod streaming;
 
-pub use streaming::{StreamingSlo, WindowSummary};
+pub use streaming::{StreamingSlo, TenantSummary, WindowSummary};
 
 use crate::config::slo::{evaluate, SloSpec};
 use crate::moe::TrafficCounter;
@@ -24,6 +24,8 @@ pub struct RequestRecord {
     /// Inter-token gaps for tokens 2..N.
     pub tbts_s: Vec<f64>,
     pub finish_s: f64,
+    /// Owning tenant ([`crate::tenant::TenantId`]; 0 = untenanted).
+    pub tenant: u32,
 }
 
 impl RequestRecord {
@@ -62,6 +64,24 @@ pub struct SloSummary {
     pub ttft_only: f64,
     pub tbt_only: f64,
     pub n: usize,
+}
+
+/// Per-tenant slice of a run: request counts, token volume, latency
+/// percentiles, SLO attainment, and goodput (generated tokens of
+/// SLO-attaining requests per second of makespan). Tenant 0 rows cover
+/// untenanted traffic.
+#[derive(Clone, Debug)]
+pub struct TenantUsage {
+    pub tenant: u32,
+    pub n: usize,
+    pub input_tokens: u64,
+    pub output_tokens: u64,
+    pub ttft_p50_s: f64,
+    pub ttft_p99_s: f64,
+    pub tbt_p99_s: f64,
+    pub slo: SloSummary,
+    /// Generated tokens of fully SLO-attaining requests / makespan.
+    pub goodput_tok_s: f64,
 }
 
 impl RunMetrics {
@@ -134,6 +154,67 @@ impl RunMetrics {
         self.generated_tokens() as f64 / self.makespan_s
     }
 
+    /// Per-tenant usage/SLO table, ordered by tenant id (tenant 0 first
+    /// when untenanted traffic is present). Empty when the run had no
+    /// requests.
+    pub fn per_tenant(&self, slo: &SloSpec) -> Vec<TenantUsage> {
+        let mut by_tenant: std::collections::BTreeMap<u32, Vec<&RequestRecord>> =
+            std::collections::BTreeMap::new();
+        for r in &self.requests {
+            by_tenant.entry(r.tenant).or_default().push(r);
+        }
+        by_tenant
+            .into_iter()
+            .map(|(tenant, recs)| {
+                let mut ttft = Samples::new();
+                let mut tbt = Samples::new();
+                let mut full = 0usize;
+                let mut ttft_ok = 0usize;
+                let mut tbt_ok = 0usize;
+                let mut input_tokens = 0u64;
+                let mut output_tokens = 0u64;
+                let mut good_tokens = 0u64;
+                for r in &recs {
+                    ttft.push(r.ttft_s);
+                    for &t in &r.tbts_s {
+                        tbt.push(t);
+                    }
+                    input_tokens += r.input_len as u64;
+                    output_tokens += r.output_len as u64;
+                    let a = evaluate(r.ttft_s, &r.tbts_s, slo);
+                    full += a.full() as usize;
+                    ttft_ok += a.ttft_ok as usize;
+                    tbt_ok += a.tbt_ok as usize;
+                    if a.full() {
+                        good_tokens += r.output_len as u64;
+                    }
+                }
+                let n = recs.len();
+                let denom = n.max(1) as f64;
+                TenantUsage {
+                    tenant,
+                    n,
+                    input_tokens,
+                    output_tokens,
+                    ttft_p50_s: ttft.percentile(0.5),
+                    ttft_p99_s: ttft.percentile(0.99),
+                    tbt_p99_s: if tbt.is_empty() { 0.0 } else { tbt.percentile(0.99) },
+                    slo: SloSummary {
+                        full: full as f64 / denom,
+                        ttft_only: ttft_ok as f64 / denom,
+                        tbt_only: tbt_ok as f64 / denom,
+                        n,
+                    },
+                    goodput_tok_s: if self.makespan_s > 0.0 {
+                        good_tokens as f64 / self.makespan_s
+                    } else {
+                        0.0
+                    },
+                }
+            })
+            .collect()
+    }
+
     /// Cumulative token timeline for one request (Fig 5).
     pub fn request_timeline(&self, id: u64, token_times: &[(u64, Vec<f64>)]) -> Vec<(f64, u64)> {
         token_times
@@ -164,6 +245,7 @@ mod tests {
             ttft_s: ttft,
             tbts_s: tbts,
             finish_s: finish,
+            tenant: 0,
         }
     }
 
@@ -199,6 +281,37 @@ mod tests {
         assert_eq!(m.generated_tokens(), 15);
         assert_eq!(m.total_tokens(), 215);
         assert!((m.gen_throughput() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_tenant_groups_scores_and_goodput() {
+        let mut m = RunMetrics::default();
+        let mut a = rec(1, 0.5, vec![0.01; 5]); // tenant 1, attains
+        a.tenant = 1;
+        let mut b = rec(2, 9.0, vec![0.01; 5]); // tenant 2, TTFT violation
+        b.tenant = 2;
+        let mut c = rec(3, 0.5, vec![0.01; 5]); // tenant 2, attains
+        c.tenant = 2;
+        m.requests.push(a);
+        m.requests.push(b);
+        m.requests.push(c);
+        m.makespan_s = 10.0;
+        let slo = SloSpec {
+            ttft_s: 5.0,
+            tbt_s: 0.125,
+        };
+        let t = m.per_tenant(&slo);
+        assert_eq!(t.len(), 2);
+        assert_eq!((t[0].tenant, t[0].n), (1, 1));
+        assert!((t[0].slo.full - 1.0).abs() < 1e-9);
+        assert_eq!((t[1].tenant, t[1].n), (2, 2));
+        assert!((t[1].slo.full - 0.5).abs() < 1e-9);
+        assert!((t[1].slo.tbt_only - 1.0).abs() < 1e-9);
+        // Only request 3 attains for tenant 2: 6 generated tokens / 10 s.
+        assert!((t[1].goodput_tok_s - 0.6).abs() < 1e-9);
+        assert!(t[1].ttft_p99_s > 8.9);
+        assert_eq!(t[1].input_tokens, 200);
+        assert_eq!(t[1].output_tokens, 12);
     }
 
     #[test]

@@ -30,6 +30,7 @@ use std::collections::BTreeMap;
 
 use crate::config::slo::SloSpec;
 use crate::serve::{EngineEvent, EventSink};
+use crate::util::stats::Samples;
 
 /// Sliding-window metrics at one evaluation instant `t_s`: the window
 /// covers `(t_s - window_s, t_s]`.
@@ -57,10 +58,36 @@ pub struct WindowSummary {
     pub throughput_tok_s: f64,
 }
 
+/// Per-tenant slice of one sliding window: attainment and goodput over
+/// the window's completions owned by one tenant, plus the windowed TTFT
+/// p99 (the noisy-neighbor isolation signal). Tenant 0 covers untenanted
+/// traffic.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantSummary {
+    pub tenant: u32,
+    /// Evaluation instant (engine seconds).
+    pub t_s: f64,
+    /// Window length (engine seconds).
+    pub window_s: f64,
+    /// This tenant's completions inside the window.
+    pub completed: usize,
+    /// Of those, how many attained the full SLO (TTFT and every TBT).
+    pub attained: usize,
+    pub slo_full: f64,
+    pub slo_ttft: f64,
+    pub slo_tbt: f64,
+    /// Generated tokens of this tenant's SLO-attaining completions, per
+    /// window second.
+    pub goodput_tok_s: f64,
+    /// p99 TTFT over this tenant's windowed completions (0.0 when empty).
+    pub ttft_p99_s: f64,
+}
+
 /// In-flight per-request accumulator.
 #[derive(Clone, Copy, Debug)]
 struct PendingReq {
     arrival_s: f64,
+    tenant: u32,
     ttft_s: Option<f64>,
     last_emit_s: f64,
     tbt_ok: bool,
@@ -71,6 +98,9 @@ struct PendingReq {
 #[derive(Clone, Copy, Debug)]
 struct Completion {
     finish_s: f64,
+    tenant: u32,
+    /// TTFT of the completing attempt (original arrival to first token).
+    ttft_s: f64,
     ttft_ok: bool,
     tbt_ok: bool,
     tokens: u32,
@@ -157,13 +187,7 @@ impl StreamingSlo {
     /// Query instants must be nondecreasing across calls: evaluation
     /// evicts history older than `t - window_s` permanently.
     pub fn summary_at(&mut self, t: f64) -> WindowSummary {
-        let lo = t - self.window_s;
-        // Evict everything at or before the window's lower edge — it can
-        // never re-enter a later (nondecreasing) window.
-        let keep_from = self.completions.partition_point(|c| c.finish_s <= lo);
-        self.completions.drain(..keep_from);
-        let keep_from = self.emissions.partition_point(|&e| e <= lo);
-        self.emissions.drain(..keep_from);
+        self.evict_before(t - self.window_s);
 
         // Entries past `t` (possible with out-of-order cross-replica
         // events) stay for a later query but do not count now.
@@ -202,6 +226,79 @@ impl StreamingSlo {
         }
     }
 
+    /// Per-tenant window summaries at instant `t`, ordered by tenant id.
+    /// Same nondecreasing-instant contract as [`StreamingSlo::summary_at`].
+    /// Tenants with no windowed completions are absent.
+    pub fn tenant_summaries_at(&mut self, t: f64) -> Vec<TenantSummary> {
+        self.evict_before(t - self.window_s);
+        let n_compl = self.completions.partition_point(|c| c.finish_s <= t);
+        // (completed, attained, ttft_ok, tbt_ok, good_tokens, ttfts)
+        let mut by: BTreeMap<u32, (usize, usize, usize, usize, u64, Samples)> = BTreeMap::new();
+        for c in &self.completions[..n_compl] {
+            let e = by.entry(c.tenant).or_default();
+            e.0 += 1;
+            e.2 += c.ttft_ok as usize;
+            e.3 += c.tbt_ok as usize;
+            if c.ttft_ok && c.tbt_ok {
+                e.1 += 1;
+                e.4 += c.tokens as u64;
+            }
+            e.5.push(c.ttft_s);
+        }
+        by.into_iter()
+            .map(
+                |(tenant, (completed, attained, ttft_okc, tbt_okc, good_tokens, mut ttfts))| {
+                    let denom = completed.max(1) as f64;
+                    TenantSummary {
+                        tenant,
+                        t_s: t,
+                        window_s: self.window_s,
+                        completed,
+                        attained,
+                        slo_full: attained as f64 / denom,
+                        slo_ttft: ttft_okc as f64 / denom,
+                        slo_tbt: tbt_okc as f64 / denom,
+                        goodput_tok_s: good_tokens as f64 / self.window_s,
+                        ttft_p99_s: if ttfts.is_empty() {
+                            0.0
+                        } else {
+                            ttfts.percentile(0.99)
+                        },
+                    }
+                },
+            )
+            .collect()
+    }
+
+    /// One tenant's window summary at instant `t` (all-zero when the
+    /// tenant has no windowed completions).
+    pub fn tenant_summary_at(&mut self, tenant: u32, t: f64) -> TenantSummary {
+        self.tenant_summaries_at(t)
+            .into_iter()
+            .find(|s| s.tenant == tenant)
+            .unwrap_or(TenantSummary {
+                tenant,
+                t_s: t,
+                window_s: self.window_s,
+                completed: 0,
+                attained: 0,
+                slo_full: 0.0,
+                slo_ttft: 0.0,
+                slo_tbt: 0.0,
+                goodput_tok_s: 0.0,
+                ttft_p99_s: 0.0,
+            })
+    }
+
+    /// Evict history at or before `lo` — it can never re-enter a later
+    /// (nondecreasing) window.
+    fn evict_before(&mut self, lo: f64) {
+        let keep_from = self.completions.partition_point(|c| c.finish_s <= lo);
+        self.completions.drain(..keep_from);
+        let keep_from = self.emissions.partition_point(|&e| e <= lo);
+        self.emissions.drain(..keep_from);
+    }
+
     fn push_emission(&mut self, t: f64) {
         let pos = self.emissions.partition_point(|&e| e <= t);
         self.emissions.insert(pos, t);
@@ -233,6 +330,7 @@ impl EventSink for StreamingSlo {
                     req.id,
                     PendingReq {
                         arrival_s: req.arrival_s,
+                        tenant: req.tenant,
                         ttft_s: None,
                         last_emit_s: 0.0,
                         tbt_ok: true,
@@ -261,6 +359,8 @@ impl EventSink for StreamingSlo {
                 if let Some(p) = self.pending.remove(id) {
                     let c = Completion {
                         finish_s: *t_s,
+                        tenant: p.tenant,
+                        ttft_s: p.ttft_s.unwrap_or(f64::INFINITY),
                         ttft_ok: p.ttft_s.is_some_and(|x| x <= self.slo.ttft_s),
                         tbt_ok: p.tbt_ok,
                         tokens: p.generated,
@@ -422,6 +522,68 @@ mod tests {
         assert_eq!(w.slo_tbt, 1.0, "retry gaps were all within SLO");
         // Both attempts' emissions count toward raw throughput.
         assert_eq!(w.emitted, 5);
+    }
+
+    /// Like `serve`, but the request belongs to `tenant`.
+    fn serve_tenant(
+        s: &mut StreamingSlo,
+        id: u64,
+        tenant: u32,
+        arrival: f64,
+        first: f64,
+        decodes: &[f64],
+    ) {
+        let req = Request {
+            id,
+            arrival_s: arrival,
+            input_len: 100,
+            output_len: decodes.len() as u32 + 1,
+            tenant,
+            ..Default::default()
+        };
+        s.on_event(0, &EngineEvent::Arrived { t_s: arrival, req });
+        s.on_event(0, &EngineEvent::FirstToken { t_s: first, id });
+        let mut gen = 1;
+        for &t in decodes {
+            gen += 1;
+            s.on_event(
+                0,
+                &EngineEvent::TokenEmitted {
+                    t_s: t,
+                    id,
+                    generated: gen,
+                },
+            );
+        }
+        let finish = decodes.last().copied().unwrap_or(first);
+        s.on_event(0, &EngineEvent::Finished { t_s: finish, id });
+    }
+
+    #[test]
+    fn tenant_windows_split_attainment_goodput_and_p99() {
+        let mut s = StreamingSlo::new(slo(), 10.0);
+        serve_tenant(&mut s, 1, 1, 0.0, 0.5, &[0.55, 0.6]); // t1 attains
+        serve_tenant(&mut s, 2, 2, 0.0, 2.0, &[2.05, 2.1]); // t2 TTFT viol.
+        serve_tenant(&mut s, 3, 2, 0.0, 0.4, &[0.45, 0.5]); // t2 attains
+        let by = s.tenant_summaries_at(3.0);
+        assert_eq!(by.len(), 2);
+        assert_eq!((by[0].tenant, by[0].completed, by[0].attained), (1, 1, 1));
+        assert_eq!(by[0].slo_full, 1.0);
+        assert_eq!(by[0].goodput_tok_s, 3.0 / 10.0);
+        assert!((by[0].ttft_p99_s - 0.5).abs() < 1e-12);
+        assert_eq!((by[1].tenant, by[1].completed, by[1].attained), (2, 2, 1));
+        assert_eq!(by[1].slo_full, 0.5);
+        assert_eq!(by[1].slo_ttft, 0.5);
+        assert_eq!(by[1].slo_tbt, 1.0);
+        assert!(by[1].ttft_p99_s > 1.9, "p99 tracks the slow completion");
+        // Absent tenant reports an all-zero window.
+        let none = s.tenant_summary_at(7, 3.0);
+        assert_eq!((none.completed, none.attained), (0, 0));
+        assert_eq!(none.ttft_p99_s, 0.0);
+        // The global window is the union of the tenant slices.
+        let w = s.summary_at(3.0);
+        assert_eq!(w.completed, 3);
+        assert_eq!(w.attained, 2);
     }
 
     #[test]

@@ -39,7 +39,7 @@ pub mod spec;
 pub mod stages;
 
 pub use adaptive::{AdaptiveScheduler, Axis, SignalSnapshot};
-pub use spec::{AdaptiveSpec, AdmissionSpec, ComposerSpec, PolicySpec, ShaperSpec};
+pub use spec::{AdaptiveSpec, AdmissionSpec, ComposerSpec, FairnessSpec, PolicySpec, ShaperSpec};
 pub use stages::{
     BatchAdmission, CohortAdmission, CohortShaper, FullPromptShaper, GreedyAdmission,
     InterleaveComposer, LayerGroupComposer, SoloAdmission, SoloChunkShaper, TokenChunkShaper,
@@ -231,6 +231,7 @@ mod tests {
             admission: AdmissionSpec::Fcfs { max_batch: 256 },
             shaper: ShaperSpec::TokenChunks { chunk: 512 },
             composer: ComposerSpec::LayerGroups { target: 512 },
+            fairness: FairnessSpec::None,
         };
         let mut st = state();
         let mut s = spec.build(48);

@@ -91,6 +91,21 @@ pub enum ComposerSpec {
     LayerGroups { target: u32 },
 }
 
+/// Cross-tenant fairness wrapper applied around the admission stage
+/// (orthogonal to the admission/shaper/composer axes: any pipeline can
+/// run with or without it).
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub enum FairnessSpec {
+    /// No reordering: admission sees the waiting queue in arrival order.
+    #[default]
+    None,
+    /// Virtual-time (start-time) fair queueing over waiting requests —
+    /// [`crate::tenant::FairQueue`]. `weights` overrides per-tenant
+    /// weights (`(tenant, weight)` pairs); tenants absent here fall back
+    /// to the session's [`crate::tenant::TenantRegistry`], then 1.
+    Vtfq { weights: Vec<(u32, u32)> },
+}
+
 /// Knobs for the signal-driven adaptive policy (see
 /// [`crate::sched::policy::adaptive`]). Per admission cohort it chooses
 /// the token axis (chunked shaping) or the layer axis (full-remaining
@@ -145,6 +160,8 @@ pub enum PolicySpec {
         admission: AdmissionSpec,
         shaper: ShaperSpec,
         composer: ComposerSpec,
+        /// Cross-tenant fairness wrapper around the admission stage.
+        fairness: FairnessSpec,
     },
     Adaptive(AdaptiveSpec),
 }
@@ -212,21 +229,27 @@ impl PolicySpec {
             admission,
             shaper,
             composer,
+            fairness: FairnessSpec::None,
         }
     }
 
     /// The preset this composition IS, if any (component-wise equality
-    /// with [`PolicySpec::preset`], names ignored).
+    /// with [`PolicySpec::preset`], names ignored). A fairness wrapper
+    /// disqualifies: presets are fairness-free.
     pub fn matches_preset(&self) -> Option<Policy> {
         let PolicySpec::Pipeline {
             admission,
             shaper,
             composer,
+            fairness,
             ..
         } = self
         else {
             return None;
         };
+        if *fairness != FairnessSpec::None {
+            return None;
+        }
         for p in Policy::ALL {
             if let PolicySpec::Pipeline {
                 admission: a,
@@ -274,15 +297,22 @@ impl PolicySpec {
                 admission,
                 shaper,
                 composer,
+                fairness,
                 ..
             } => match self.matches_preset() {
                 Some(p) => p.name().to_string(),
-                None => format!(
-                    "pipeline({}+{}+{})",
-                    admission_label(admission),
-                    shaper_label(shaper),
-                    composer_label(composer)
-                ),
+                None => {
+                    let vtfq = match fairness {
+                        FairnessSpec::None => "",
+                        FairnessSpec::Vtfq { .. } => "+vtfq",
+                    };
+                    format!(
+                        "pipeline({}+{}+{}){vtfq}",
+                        admission_label(admission),
+                        shaper_label(shaper),
+                        composer_label(composer)
+                    )
+                }
             },
         }
     }
@@ -295,6 +325,7 @@ impl PolicySpec {
                 admission,
                 shaper,
                 composer,
+                fairness,
                 ..
             } => {
                 let admission: Box<dyn AdmissionPolicy> = match *admission {
@@ -306,6 +337,14 @@ impl PolicySpec {
                         merge_target,
                     } => Box::new(CohortAdmission::new(max_batch, merge, merge_target)),
                     AdmissionSpec::Solo { max_batch } => Box::new(SoloAdmission::new(max_batch)),
+                };
+                // The fairness wrapper composes around ANY admission
+                // stage — vtfq reorders waiting, the inner policy admits.
+                let admission: Box<dyn AdmissionPolicy> = match fairness {
+                    FairnessSpec::None => admission,
+                    FairnessSpec::Vtfq { weights } => {
+                        Box::new(crate::tenant::FairQueue::new(admission, weights.clone()))
+                    }
                 };
                 let shaper: Box<dyn PrefillShaper> = match *shaper {
                     ShaperSpec::TokenChunks { chunk } => Box::new(TokenChunkShaper::new(chunk)),
@@ -447,11 +486,16 @@ impl PolicySpec {
             Some(c) => composer_from_json(c)?,
             None => ComposerSpec::Interleave,
         };
+        let fairness = match j.get("fairness") {
+            Some(f) => fairness_from_json(f)?,
+            None => FairnessSpec::None,
+        };
         Ok(PolicySpec::Pipeline {
             name: j.get("name").and_then(Json::as_str).map(str::to_string),
             admission,
             shaper,
             composer,
+            fairness,
         })
     }
 
@@ -474,6 +518,7 @@ impl PolicySpec {
                 admission,
                 shaper,
                 composer,
+                fairness,
             } => {
                 m.insert("kind".into(), Json::Str("pipeline".into()));
                 if let Some(n) = name {
@@ -482,6 +527,11 @@ impl PolicySpec {
                 m.insert("admission".into(), admission_to_json(admission));
                 m.insert("shaper".into(), shaper_to_json(shaper));
                 m.insert("composer".into(), composer_to_json(composer));
+                // Omitted when None: fairness-free JSON stays byte-stable
+                // with pre-tenant builds.
+                if let Some(f) = fairness_to_json(fairness) {
+                    m.insert("fairness".into(), f);
+                }
             }
         }
         Json::Obj(m)
@@ -664,6 +714,8 @@ fn parse_compact(s: &str) -> Result<PolicySpec, String> {
         chunk: CHUNK_TOKENS,
     };
     let mut composer = ComposerSpec::Interleave;
+    let mut fairness_on: Option<bool> = None;
+    let mut weights: Vec<(u32, u32)> = Vec::new();
     for part in s.split(',') {
         let part = part.trim();
         if part.is_empty() {
@@ -672,28 +724,79 @@ fn parse_compact(s: &str) -> Result<PolicySpec, String> {
         let Some((k, v)) = part.split_once('=') else {
             return Err(format!(
                 "bad pipeline element '{part}' (want key=value with key in \
-                 admission | shaper | composer | name)"
+                 admission | shaper | composer | fairness | weights | name)"
             ));
         };
         match k.trim().to_ascii_lowercase().as_str() {
             "admission" => admission = parse_admission(&v.trim().to_ascii_lowercase())?,
             "shaper" => shaper = parse_shaper(&v.trim().to_ascii_lowercase())?,
             "composer" => composer = parse_composer(&v.trim().to_ascii_lowercase())?,
+            "fairness" => {
+                fairness_on = Some(match v.trim().to_ascii_lowercase().as_str() {
+                    "vtfq" => true,
+                    "none" => false,
+                    other => {
+                        return Err(format!("unknown fairness '{other}' (valid: vtfq | none)"))
+                    }
+                })
+            }
+            "weights" => weights = parse_weights(v.trim())?,
             // The display name keeps the user's case (JSON form parity).
             "name" => name = Some(v.trim().to_string()),
             other => {
                 return Err(format!(
-                    "unknown pipeline key '{other}' (valid: admission | shaper | composer | name)"
+                    "unknown pipeline key '{other}' (valid: admission | shaper | composer | \
+                     fairness | weights | name)"
                 ))
             }
         }
     }
+    let fairness = match fairness_on {
+        Some(true) => FairnessSpec::Vtfq { weights },
+        Some(false) => {
+            if !weights.is_empty() {
+                return Err("weights=.. requires fairness=vtfq".to_string());
+            }
+            FairnessSpec::None
+        }
+        // Explicit weights imply the only fairness policy that uses them.
+        None if !weights.is_empty() => FairnessSpec::Vtfq { weights },
+        None => FairnessSpec::None,
+    };
     Ok(PolicySpec::Pipeline {
         name,
         admission,
         shaper,
         composer,
+        fairness,
     })
+}
+
+/// `weights=1:4+2:1`-style per-tenant weight overrides: `tenant:weight`
+/// pairs joined with `+` (`,` separates pipeline keys).
+fn parse_weights(v: &str) -> Result<Vec<(u32, u32)>, String> {
+    let mut out = Vec::new();
+    for pair in v.split('+') {
+        let pair = pair.trim();
+        if pair.is_empty() {
+            continue;
+        }
+        let Some((id, w)) = pair.split_once(':') else {
+            return Err(format!(
+                "bad weight '{pair}' (want tenant:weight pairs joined with '+')"
+            ));
+        };
+        let id: u32 = parse_num(id, "weight tenant id")?;
+        if id == 0 {
+            return Err("tenant id 0 is reserved for untenanted requests".to_string());
+        }
+        let w: u32 = parse_num(w, "tenant weight")?;
+        if w == 0 {
+            return Err(format!("bad weight '{pair}' (weight must be >= 1)"));
+        }
+        out.push((id, w));
+    }
+    Ok(out)
 }
 
 fn parse_adaptive_knobs(s: &str) -> Result<AdaptiveSpec, String> {
@@ -794,6 +897,64 @@ fn composer_from_json(j: &Json) -> Result<ComposerSpec, String> {
         other => Err(format!(
             "unknown composer kind '{other}' (valid: interleave | groups)"
         )),
+    }
+}
+
+fn fairness_from_json(j: &Json) -> Result<FairnessSpec, String> {
+    match req_kind(j, "fairness")? {
+        "none" => Ok(FairnessSpec::None),
+        "vtfq" => {
+            let mut weights = Vec::new();
+            if let Some(arr) = j.get("weights").and_then(Json::as_arr) {
+                for pair in arr {
+                    let p = pair.as_arr().unwrap_or(&[]);
+                    let (Some(id), Some(w)) = (
+                        p.first().and_then(Json::as_f64),
+                        p.get(1).and_then(Json::as_f64),
+                    ) else {
+                        return Err(
+                            "bad fairness weights (want [[tenant, weight], ..])".to_string()
+                        );
+                    };
+                    if id < 1.0 || w < 1.0 {
+                        return Err(format!(
+                            "bad fairness weight [{id}, {w}] (tenant and weight must be >= 1)"
+                        ));
+                    }
+                    weights.push((id as u32, w as u32));
+                }
+            }
+            Ok(FairnessSpec::Vtfq { weights })
+        }
+        other => Err(format!(
+            "unknown fairness kind '{other}' (valid: vtfq | none)"
+        )),
+    }
+}
+
+/// `None` for [`FairnessSpec::None`]: the field is omitted so fairness-free
+/// specs serialize byte-identically to pre-tenant builds.
+fn fairness_to_json(f: &FairnessSpec) -> Option<Json> {
+    match f {
+        FairnessSpec::None => None,
+        FairnessSpec::Vtfq { weights } => {
+            let mut m = BTreeMap::new();
+            m.insert("kind".into(), Json::Str("vtfq".into()));
+            if !weights.is_empty() {
+                m.insert(
+                    "weights".into(),
+                    Json::Arr(
+                        weights
+                            .iter()
+                            .map(|&(id, w)| {
+                                Json::Arr(vec![Json::Num(id as f64), Json::Num(w as f64)])
+                            })
+                            .collect(),
+                    ),
+                );
+            }
+            Some(Json::Obj(m))
+        }
     }
 }
 
@@ -920,10 +1081,12 @@ mod tests {
             shaper,
             composer,
             name,
+            fairness,
         } = spec
         else {
             panic!("expected pipeline");
         };
+        assert_eq!(fairness, FairnessSpec::None);
         assert_eq!(
             admission,
             AdmissionSpec::Cohort {
@@ -1006,6 +1169,20 @@ mod tests {
                 admission: AdmissionSpec::Batch { batch_size: 3 },
                 shaper: ShaperSpec::SoloChunk { chunk: 2048 },
                 composer: ComposerSpec::LayerGroups { target: 256 },
+                fairness: FairnessSpec::None,
+            },
+            PolicySpec::Pipeline {
+                name: None,
+                admission: AdmissionSpec::Fcfs {
+                    max_batch: MAX_BATCH,
+                },
+                shaper: ShaperSpec::TokenChunks {
+                    chunk: CHUNK_TOKENS,
+                },
+                composer: ComposerSpec::Interleave,
+                fairness: FairnessSpec::Vtfq {
+                    weights: vec![(1, 4), (2, 1)],
+                },
             },
         ];
         for spec in specs {
@@ -1013,6 +1190,50 @@ mod tests {
             let back = PolicySpec::parse(&text).unwrap_or_else(|e| panic!("{text}: {e}"));
             assert_eq!(back, spec, "{text}");
         }
+    }
+
+    #[test]
+    fn fairness_parses_composes_and_roundtrips() {
+        // Compact form: fairness=vtfq with '+'-joined weight pairs.
+        let spec = PolicySpec::parse("shaper=chunks:256,fairness=vtfq,weights=1:4+2:1").unwrap();
+        let PolicySpec::Pipeline { ref fairness, .. } = spec else {
+            panic!("expected pipeline");
+        };
+        assert_eq!(
+            *fairness,
+            FairnessSpec::Vtfq {
+                weights: vec![(1, 4), (2, 1)]
+            }
+        );
+        // A fairness wrapper is never a preset, and the derived label
+        // carries the +vtfq tag.
+        assert_eq!(spec.matches_preset(), None);
+        assert!(spec.name().ends_with("+vtfq"), "{}", spec.name());
+        // JSON round-trip keeps the weights.
+        let back = PolicySpec::parse(&spec.to_json().to_string()).unwrap();
+        assert_eq!(back, spec);
+        // Weights imply vtfq; fairness=none with weights is contradictory.
+        let implied = PolicySpec::parse("weights=3:2").unwrap();
+        assert_eq!(
+            implied.name(),
+            "pipeline(fcfs+chunks:512+interleave)+vtfq"
+        );
+        assert!(PolicySpec::parse("fairness=none,weights=1:2").is_err());
+        assert!(PolicySpec::parse("fairness=bogus").is_err());
+        // Tenant 0 and zero weights are invalid.
+        assert!(PolicySpec::parse("weights=0:2").is_err());
+        assert!(PolicySpec::parse("weights=1:0").is_err());
+        // The chunked preset stays a preset (fairness None by default) —
+        // feature-off parse output is unchanged.
+        assert_eq!(
+            PolicySpec::parse("chunked").unwrap().matches_preset(),
+            Some(Policy::Chunked)
+        );
+        // vtfq composes with the layer-axis composer too.
+        let layered = PolicySpec::parse("admission=cohort,shaper=cohort,composer=groups,fairness=vtfq")
+            .unwrap();
+        assert_eq!(layered.nearest_policy(), Policy::Layered);
+        layered.build(32); // compiles into a scheduler without panicking
     }
 
     #[test]

@@ -24,7 +24,9 @@ use std::collections::BTreeMap;
 
 use crate::config::{ModelDesc, Policy, SchedulerConfig};
 use crate::kvcache::KvCacheManager;
-use crate::sched::policy::{AdaptiveSpec, AdmissionSpec, ComposerSpec, PolicySpec, ShaperSpec};
+use crate::sched::policy::{
+    AdaptiveSpec, AdmissionSpec, ComposerSpec, FairnessSpec, PolicySpec, ShaperSpec,
+};
 use crate::sched::{self, EngineState, Phase};
 use crate::util::proptest::{check, Gen, PropResult};
 use crate::workload::Request;
@@ -98,6 +100,7 @@ fn random_pipeline(g: &mut Gen) -> PolicySpec {
         admission,
         shaper,
         composer,
+        fairness: FairnessSpec::None,
     }
 }
 

@@ -7,6 +7,7 @@ use std::hash::{BuildHasherDefault, Hasher};
 
 use crate::config::ModelDesc;
 use crate::kvcache::KvCacheManager;
+use crate::tenant::{RejectReason, TenantAccounting};
 use crate::workload::Request;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -78,10 +79,18 @@ pub enum Admission {
     /// from the prefix cache — that much prefill is skipped (0 when the
     /// prefix cache is off or cold).
     Admitted { id: u64, cached_tokens: u32 },
-    /// KV capacity refused the request's footprint (`demand` blocks needed
-    /// beyond any cached-prefix credit, `free` available) — the admission
-    /// backpressure signal.
-    KvRejected { id: u64, demand: u32, free: u32 },
+    /// Admission refused the request — the backpressure signal. For
+    /// [`RejectReason::KvCapacity`], `demand` is the blocks needed beyond
+    /// any cached-prefix credit and `free` the blocks available; for
+    /// tenant-budget refusals (`TenantQuota` / `TenantRate`), `demand` is
+    /// the request's gross block footprint and `free` the KV blocks
+    /// currently available (the pool was not the constraint).
+    KvRejected {
+        id: u64,
+        demand: u32,
+        free: u32,
+        reason: RejectReason,
+    },
 }
 
 /// Multiply-shift hasher for request ids — ids are already well-spread
@@ -210,6 +219,10 @@ pub struct EngineState {
     /// Admission outcomes since the engine core last drained this log
     /// (every `EngineState::admit` call appends one entry).
     pub admissions: Vec<Admission>,
+    /// Per-tenant enforcement (quota ledgers + token buckets) for THIS
+    /// replica. `None` (the default) disables every tenant check —
+    /// admission behaves bit-identically to the pre-tenant engine.
+    pub tenants: Option<TenantAccounting>,
 }
 
 impl EngineState {
@@ -224,6 +237,7 @@ impl EngineState {
             kv,
             max_batch,
             admissions: Vec::new(),
+            tenants: None,
         }
     }
 
@@ -251,7 +265,7 @@ impl EngineState {
         let Some(pos) = self.waiting.iter().position(|&w| w == id) else {
             return false;
         };
-        let (footprint, hashes, prior_done) = {
+        let (footprint, hashes, prior_done, tenant, input_len) = {
             let r = &self.reqs[&id];
             let fp = r.req.input_len.saturating_add(r.req.output_len);
             let hashes = if self.kv.prefix_cache_enabled() && r.prefill_done == 0 {
@@ -259,8 +273,26 @@ impl EngineState {
             } else {
                 Vec::new()
             };
-            (fp, hashes, r.prefill_done)
+            (fp, hashes, r.prefill_done, r.req.tenant, r.req.input_len)
         };
+        let gross_blocks = self.kv.blocks_for(footprint);
+        // Tenant budgets gate admission BEFORE any KV registration, so a
+        // tenant-refused request touches no pool state (peek → register →
+        // commit; see `tenant::TenantAccounting`).
+        if tenant != 0 {
+            if let Some(acct) = &self.tenants {
+                if let Err(reason) = acct.peek(tenant, gross_blocks, input_len, self.now_s) {
+                    let (_, avail) = self.kv.admission_outlook(footprint, &hashes);
+                    self.admissions.push(Admission::KvRejected {
+                        id,
+                        demand: gross_blocks,
+                        free: avail,
+                        reason,
+                    });
+                    return false;
+                }
+            }
+        }
         // Single admission walk: register directly and report on failure
         // (a pre-check would repeat the whole hash/availability scan).
         let cached_blocks = match self.kv.register_with_prefix(id, footprint, &hashes) {
@@ -269,12 +301,18 @@ impl EngineState {
                 let (hits, avail) = self.kv.admission_outlook(footprint, &hashes);
                 self.admissions.push(Admission::KvRejected {
                     id,
-                    demand: self.kv.blocks_for(footprint).saturating_sub(hits),
+                    demand: gross_blocks.saturating_sub(hits),
                     free: avail,
+                    reason: RejectReason::KvCapacity,
                 });
                 return false;
             }
         };
+        if tenant != 0 {
+            if let Some(acct) = self.tenants.as_mut() {
+                acct.commit(id, tenant, gross_blocks, input_len, self.now_s);
+            }
+        }
         let cached_tokens = cached_blocks.saturating_mul(self.kv.block_size);
         self.waiting.remove(pos);
         self.prefilling.push(id);
@@ -293,6 +331,39 @@ impl EngineState {
             cached_tokens: if prior_done == 0 { r.prefill_done } else { 0 },
         });
         true
+    }
+
+    /// Release a request's KV reservation AND its tenant block charge in
+    /// one step. Every path that frees an admitted request's KV (finish,
+    /// migration extraction, failure eviction) must go through here so the
+    /// quota ledger never leaks.
+    pub fn release_kv(&mut self, id: u64) {
+        let _ = self.kv.release(id);
+        if let Some(acct) = self.tenants.as_mut() {
+            acct.release(id);
+        }
+    }
+
+    /// Earliest future instant at which some waiting request, refused at
+    /// `now_s` purely on its tenant's token bucket, would pass that
+    /// bucket. The engine core folds this into its idle target: a drain
+    /// whose only remaining work is rate-throttled keeps advancing the
+    /// clock (buckets refill on engine time) instead of declaring the
+    /// replica drained with work stranded. `None` when tenant enforcement
+    /// is off or nothing waiting is purely rate-gated — the feature-off
+    /// idle path is untouched.
+    pub fn next_tenant_ready(&self) -> Option<f64> {
+        let acct = self.tenants.as_ref()?;
+        let mut best: Option<f64> = None;
+        for id in &self.waiting {
+            let r = &self.reqs[id].req;
+            let footprint = r.input_len.saturating_add(r.output_len);
+            let blocks = self.kv.blocks_for(footprint);
+            if let Some(t) = acct.ready_time(r.tenant, blocks, r.input_len, self.now_s) {
+                best = Some(best.map_or(t, |b: f64| b.min(t)));
+            }
+        }
+        best
     }
 
     /// Re-insert a migrated request into the waiting queue WITH its
@@ -322,6 +393,15 @@ impl EngineState {
         if self.kv.register(id, footprint).is_err() {
             return Err(sim);
         }
+        // Migration preserves already-admitted work: the landing replica
+        // charges the tenant ledger but never refuses on tenant budgets
+        // (quota transfers may transiently exceed the destination's cap).
+        if sim.req.tenant != 0 {
+            let blocks = self.kv.blocks_for(footprint);
+            if let Some(acct) = self.tenants.as_mut() {
+                acct.charge_unchecked(id, sim.req.tenant, blocks);
+            }
+        }
         let mut sim = sim;
         sim.phase = Phase::Decoding;
         self.reqs.insert(id, sim);
@@ -349,7 +429,7 @@ impl EngineState {
             .collect();
         let mut out = Vec::with_capacity(in_flight.len());
         for id in in_flight {
-            let _ = self.kv.release(id);
+            self.release_kv(id);
             if let Some(mut s) = self.reqs.remove(&id) {
                 s.prefill_done = (s.token_layers_done / n_layers) as u32;
                 s.token_layers_done = s.prefill_done as u64 * n_layers;
@@ -400,7 +480,7 @@ impl EngineState {
             .into_iter()
             .chain(std::mem::take(&mut self.decoding));
         for id in in_flight {
-            let _ = self.kv.release(id);
+            self.release_kv(id);
             if let Some(s) = self.reqs.remove(&id) {
                 out.push(s.req);
             }
@@ -488,12 +568,85 @@ mod tests {
             }
         );
         match s.admissions[1] {
-            Admission::KvRejected { id, demand, free } => {
+            Admission::KvRejected {
+                id,
+                demand,
+                free,
+                reason,
+            } => {
                 assert_eq!(id, 2);
                 assert!(demand > free);
+                assert_eq!(reason, RejectReason::KvCapacity);
             }
             _ => panic!("expected KvRejected"),
         }
+    }
+
+    fn tenant_req(id: u64, tenant: u32, input: u32, output: u32) -> Request {
+        Request {
+            tenant,
+            ..req(id, input, output)
+        }
+    }
+
+    #[test]
+    fn tenant_quota_gates_admission_and_releases() {
+        use crate::tenant::{TenantRegistry, TenantSpec};
+        let mut s = state();
+        // Quota of 8 blocks (128 tokens at block size 16).
+        let reg = TenantRegistry::new().with(TenantSpec {
+            kv_block_quota: 8,
+            ..TenantSpec::new(1)
+        });
+        s.tenants = Some(crate::tenant::TenantAccounting::new(reg));
+        s.arrive(tenant_req(1, 1, 100, 10)); // 110 tokens = 7 blocks
+        s.arrive(tenant_req(2, 1, 100, 10)); // would be 14 > 8
+        s.arrive(tenant_req(3, 2, 100, 10)); // other tenant: unlimited
+        assert!(s.admit(1));
+        assert!(!s.admit(2), "quota refuses the second admission");
+        assert_eq!(s.waiting, vec![2, 3], "refused request stays waiting");
+        match s.admissions[1] {
+            Admission::KvRejected { id, reason, .. } => {
+                assert_eq!(id, 2);
+                assert_eq!(reason, RejectReason::TenantQuota);
+            }
+            _ => panic!("expected KvRejected"),
+        }
+        assert!(s.admit(3), "unregistered tenants are unlimited");
+        // KV untouched by the refusal: only 1 and 3 hold reservations.
+        assert_eq!(s.kv.len_of(2), None);
+        let acct = s.tenants.as_ref().unwrap();
+        assert_eq!(acct.used_blocks(1), 7);
+        assert_eq!(acct.used_blocks(2), 7);
+        // Finishing releases the charge; the tenant can admit again.
+        s.release_kv(1);
+        assert_eq!(s.tenants.as_ref().unwrap().used_blocks(1), 0);
+        assert!(s.admit(2));
+    }
+
+    #[test]
+    fn tenant_bucket_gates_prefill_tokens_over_time() {
+        use crate::tenant::{TenantRegistry, TenantSpec};
+        let mut s = state();
+        let reg = TenantRegistry::new().with(TenantSpec {
+            rate_tokens_per_s: 50.0,
+            burst_tokens: 120.0,
+            ..TenantSpec::new(1)
+        });
+        s.tenants = Some(crate::tenant::TenantAccounting::new(reg));
+        s.arrive(tenant_req(1, 1, 100, 10));
+        s.arrive(tenant_req(2, 1, 100, 10));
+        assert!(s.admit(1), "burst covers the first prompt");
+        assert!(!s.admit(2), "bucket drained");
+        match s.admissions[1] {
+            Admission::KvRejected { reason, .. } => {
+                assert_eq!(reason, RejectReason::TenantRate);
+            }
+            _ => panic!("expected KvRejected"),
+        }
+        // 2 s of refill = 100 tokens: the retry passes.
+        s.now_s = 2.0;
+        assert!(s.admit(2));
     }
 
     #[test]

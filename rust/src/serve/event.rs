@@ -30,19 +30,26 @@ pub enum EngineEvent {
     Arrived { t_s: f64, req: Request },
     /// Admission succeeded: KV reserved, prefill may begin.
     Admitted { t_s: f64, id: u64 },
-    /// Admission failed on KV capacity: the request needed `demand` blocks
-    /// but only `free` were available. This is the backpressure signal the
-    /// cluster router consumes.
+    /// Admission refused the request. For
+    /// [`RejectReason::KvCapacity`](crate::tenant::RejectReason) — the
+    /// pre-tenant meaning — the request needed `demand` blocks but only
+    /// `free` were available; this is the backpressure signal the cluster
+    /// router and autoscaler consume. Tenant-budget refusals
+    /// (`TenantQuota` / `TenantRate`) ride the same event with the reason
+    /// tagged: they are per-tenant throttling, NOT pool pressure, so
+    /// capacity-driven consumers (spill requeue, autoscaling) skip them.
     KvRejected {
         t_s: f64,
         id: u64,
         /// KV blocks the request's footprint requires beyond any
-        /// cached-prefix credit.
+        /// cached-prefix credit (gross footprint for tenant refusals).
         demand: u32,
         /// Blocks available for allocation at rejection time — the exact
         /// availability the admission gate checked (free list plus
         /// reclaimable idle prefix-cache blocks).
         free: u32,
+        /// Which gate refused: KV capacity, tenant quota, or tenant rate.
+        reason: crate::tenant::RejectReason,
     },
     /// Admission found `cached_tokens` of the request's prompt already
     /// resident in the replica's prefix cache (vLLM-style automatic prefix

@@ -120,6 +120,7 @@ use crate::model::WorkAnalytics;
 use crate::sched::{EngineState, Scheduler, SimReq};
 use crate::simulator::cost::CostModel;
 use crate::simulator::default_engine_state;
+use crate::tenant::{RejectReason, TenantAccounting, TenantRegistry};
 use crate::workload::{Request, Trace};
 
 /// Builds one executor per replica. The default factory prices iterations
@@ -169,6 +170,12 @@ impl SessionReport {
         }
         counts
     }
+
+    /// Fleet-wide per-tenant usage / SLO table, ordered by tenant id (see
+    /// [`RunMetrics::per_tenant`](crate::metrics::RunMetrics::per_tenant)).
+    pub fn per_tenant(&self, slo: &crate::config::slo::SloSpec) -> Vec<crate::metrics::TenantUsage> {
+        self.fleet.per_tenant(slo)
+    }
 }
 
 /// Declarative description of one serving run. Construct with
@@ -189,6 +196,7 @@ pub struct Session<'a> {
     migrate_kv: bool,
     migration_gbps: f64,
     threads: usize,
+    tenants: Option<TenantRegistry>,
 }
 
 /// Builder for [`Session`]; all knobs default to the paper's single-engine
@@ -214,6 +222,7 @@ pub struct SessionBuilder<'a> {
     migrate_kv: bool,
     migration_gbps: f64,
     threads: usize,
+    tenants: Option<TenantRegistry>,
 }
 
 impl<'a> SessionBuilder<'a> {
@@ -238,6 +247,7 @@ impl<'a> SessionBuilder<'a> {
             migrate_kv: false,
             migration_gbps: 16.0,
             threads: 0,
+            tenants: None,
         }
     }
 
@@ -381,6 +391,20 @@ impl<'a> SessionBuilder<'a> {
         self
     }
 
+    /// Multi-tenant enforcement: attach a [`TenantRegistry`] and every
+    /// replica charges tenanted admissions against their KV-block quota
+    /// and prefill-token bucket (quotas and buckets are PER REPLICA, like
+    /// KV capacity). Refused requests stay waiting and retry — the same
+    /// backpressure semantics as KV exhaustion, with the
+    /// [`EngineEvent::KvRejected`] reason tagged `TenantQuota` /
+    /// `TenantRate`. Untenanted requests (tenant 0) always bypass. Off by
+    /// default — off (or an all-unlimited registry) is bit-identical to
+    /// the pre-tenant engine.
+    pub fn tenants(mut self, registry: TenantRegistry) -> Self {
+        self.tenants = Some(registry);
+        self
+    }
+
     /// Record per-request token timestamps (costs memory).
     pub fn record_token_times(mut self, on: bool) -> Self {
         self.record_token_times = on;
@@ -453,6 +477,7 @@ impl<'a> SessionBuilder<'a> {
             migrate_kv: self.migrate_kv,
             migration_gbps: self.migration_gbps,
             threads: self.threads,
+            tenants: self.tenants,
         }
     }
 
@@ -482,7 +507,15 @@ struct Tally<'s> {
 impl EventSink for Tally<'_> {
     fn on_event(&mut self, replica: usize, ev: &EngineEvent) {
         match ev {
-            EngineEvent::KvRejected { id, .. } => {
+            // Only CAPACITY rejections are pool pressure: tenant-budget
+            // refusals (quota/rate) are per-tenant pacing, so they feed
+            // neither router backpressure nor spill requeueing (a spilled
+            // over-budget request would just be throttled elsewhere too).
+            EngineEvent::KvRejected {
+                id,
+                reason: RejectReason::KvCapacity,
+                ..
+            } => {
                 if let Some(c) = self.kv_rejects.get_mut(replica) {
                     *c += 1;
                 }
@@ -585,6 +618,7 @@ fn build_live<'x>(
     factory: &mut ExecutorFactory<'x>,
     core_opts: CoreOptions,
     prefix_cache: bool,
+    tenants: Option<&TenantRegistry>,
 ) -> Result<Vec<Live<'x>>> {
     let n = specs.len();
     let mut states: Vec<EngineState> = match states {
@@ -600,6 +634,13 @@ fn build_live<'x>(
     if prefix_cache {
         for s in states.iter_mut() {
             s.kv.enable_prefix_cache();
+        }
+    }
+    if let Some(reg) = tenants {
+        // Per-replica enforcement, like per-replica KV capacity: each
+        // engine charges its own ledger from a clone of the registry.
+        for s in states.iter_mut() {
+            s.tenants = Some(TenantAccounting::new(reg.clone()));
         }
     }
     let mut live = Vec::with_capacity(n);
@@ -750,9 +791,15 @@ struct ControlledRun<'a> {
     in_transit: Vec<Transit>,
     /// Scale-ups must inherit the session's prefix-cache setting.
     prefix_cache: bool,
+    /// Scale-ups must inherit the session's tenant registry too.
+    tenants: Option<TenantRegistry>,
     /// Worker pool for parallel replica stepping (None = serial path).
-    /// Sized off the initial fleet; scale-ups share the existing lanes.
+    /// Re-sized at the control boundary when a scale-up grows the fleet
+    /// past the current lane count (see [`ControlAction::ScaleUp`]).
     pool: Option<WorkerPool>,
+    /// The builder's raw `threads` knob (0 = auto), re-resolved against
+    /// the fleet size after every scale-up.
+    requested_threads: usize,
 }
 
 impl<'a> ControlledRun<'a> {
@@ -1059,6 +1106,9 @@ impl<'a> ControlledRun<'a> {
                 if self.prefix_cache {
                     state.kv.enable_prefix_cache();
                 }
+                if let Some(reg) = &self.tenants {
+                    state.tenants = Some(TenantAccounting::new(reg.clone()));
+                }
                 let mut rep = Live {
                     policy: spec.sched.policy,
                     sched: crate::sched::build(&spec.sched, spec.model.n_layers),
@@ -1084,6 +1134,18 @@ impl<'a> ControlledRun<'a> {
                 self.lifecycle.push(ReplicaState::Active);
                 sink.kv_rejects.push(0);
                 sink.on_event(i, &EngineEvent::ReplicaUp { t_s: t });
+                // Re-resolve the thread knob against the grown fleet: a
+                // pool sized for N replicas would step N+1 on stale lane
+                // counts (auto-sized sessions would never parallelize
+                // scaled-up replicas at all). Rebuilding at the control
+                // boundary is safe — it is the only synchronization seam —
+                // and cannot change outputs (bit-stability is per-replica
+                // buffered regardless of lane count).
+                let want = resolve_threads(self.requested_threads, self.live.len());
+                let have = self.pool.as_ref().map_or(1, WorkerPool::threads);
+                if want > have {
+                    self.pool = Some(WorkerPool::new(want));
+                }
             }
         }
         Ok(())
@@ -1131,6 +1193,7 @@ impl<'a> Session<'a> {
             immediate_arrivals,
             prefix_cache,
             threads,
+            tenants,
             ..
         } = self;
         let n = specs.len();
@@ -1156,7 +1219,14 @@ impl<'a> Session<'a> {
             record_token_times,
             immediate_arrivals,
         };
-        let mut live = build_live(&specs, states, &mut factory, core_opts, prefix_cache)?;
+        let mut live = build_live(
+            &specs,
+            states,
+            &mut factory,
+            core_opts,
+            prefix_cache,
+            tenants.as_ref(),
+        )?;
 
         // Arrival loop: advance every replica to each arrival instant so
         // the router observes true engine state (iteration-boundary
@@ -1215,6 +1285,7 @@ impl<'a> Session<'a> {
             migrate_kv,
             migration_gbps,
             threads,
+            tenants,
         } = self;
         let core_opts = CoreOptions {
             horizon_s,
@@ -1230,8 +1301,16 @@ impl<'a> Session<'a> {
         };
         let spill = router.wants_spill();
         let has_controller = controller.is_some();
-        let live = build_live(&specs, states, &mut factory, core_opts, prefix_cache)?;
+        let live = build_live(
+            &specs,
+            states,
+            &mut factory,
+            core_opts,
+            prefix_cache,
+            tenants.as_ref(),
+        )?;
         let n = live.len();
+        let requested_threads = threads;
         let threads = resolve_threads(threads, n);
         let pool = (threads > 1).then(|| WorkerPool::new(threads));
         let mut sink = Tally {
@@ -1258,7 +1337,9 @@ impl<'a> Session<'a> {
             migration_bw: migration_gbps * 1e9,
             in_transit: Vec::new(),
             prefix_cache,
+            tenants,
             pool,
+            requested_threads,
         };
         let dt = if control_dt > 0.0 { control_dt } else { 0.25 };
         let mut now = 0.0f64;
@@ -1572,6 +1653,77 @@ mod tests {
             "warm shared prefixes must hit"
         );
         assert!(log.count(|e| matches!(e, EngineEvent::PrefixHit { .. })) > 0);
+    }
+
+    #[test]
+    fn scale_up_grows_the_worker_pool_and_stays_bit_identical() {
+        // Regression (satellite): scaled-up replicas used to step on a
+        // pool sized for the INITIAL fleet, so a 2-replica session that
+        // autoscaled to 4 never ran the newcomers on their own lanes.
+        // The pool now re-resolves at the control boundary; every thread
+        // count must still reproduce the serial run byte-for-byte.
+        let trace = sharegpt_trace(20, 8.0, 17);
+        let run = |threads: usize| {
+            let mut log = EventLog::default();
+            let report = Session::builder()
+                .replicas(2)
+                .trace(&trace)
+                .controller(DrainController::new().scale_up_at(1.0).scale_up_at(2.0))
+                .threads(threads)
+                .sink(&mut log)
+                .run()
+                .expect("sim session");
+            assert_eq!(report.per_replica.len(), 4, "both scale-ups landed");
+            (
+                format!("{:?}", log.events),
+                format!("{:?}", report.per_replica),
+                report.assignments,
+            )
+        };
+        let serial = run(1);
+        for t in [2, 4] {
+            assert_eq!(run(t), serial, "threads={t} diverged from serial");
+        }
+    }
+
+    #[test]
+    fn tenant_registry_throttles_but_serves_everything() {
+        use crate::tenant::TenantSpec;
+
+        // A tight prefill-token bucket on tenant 1: admissions are PACED
+        // (tenant-rate rejections happen), but the backpressure semantics
+        // — stay waiting, retry next iteration — lose nothing.
+        let mut spec = WorkloadSpec::new(Dataset::ShareGpt, 4.0, 10).with_tenants(2, 0);
+        spec.seed = 7;
+        let trace = WorkloadGen::new(spec).generate();
+        let reg = TenantRegistry::new().with({
+            let mut t = TenantSpec::new(1);
+            t.rate_tokens_per_s = 300.0;
+            t.burst_tokens = 600.0;
+            t
+        });
+        let mut log = EventLog::default();
+        let report = Session::builder()
+            .trace(&trace)
+            .tenants(reg)
+            .sink(&mut log)
+            .run()
+            .expect("sim session");
+        assert_eq!(report.status, SessionStatus::Drained);
+        assert_eq!(report.fleet.requests.len(), 10, "throttled, not dropped");
+        // Finished records carry their tenant for per-tenant reporting.
+        assert!(report.fleet.requests.iter().all(|r| r.tenant == 1 || r.tenant == 2));
+        // Tenant refusals ride KvRejected with a tenant-tagged reason.
+        let tenant_rejects = log.count(|e| {
+            matches!(
+                e,
+                EngineEvent::KvRejected {
+                    reason: RejectReason::TenantRate,
+                    ..
+                }
+            )
+        });
+        assert!(tenant_rejects > 0, "the bucket must actually gate");
     }
 
     #[test]

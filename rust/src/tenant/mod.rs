@@ -1,0 +1,636 @@
+//! Multi-tenant serving: tenant identity, admission-control budgets, and
+//! virtual-time fair queueing.
+//!
+//! The paper's stall-free scheduling argument is an SLO argument, and SLOs
+//! are only meaningful *per tenant*: a noisy neighbor that floods either
+//! scheduling axis (token chunks or layer groups) starves everyone else's
+//! TTFT long before the fleet runs out of FLOPs. This module gives every
+//! request an owner and gives the serving stack three isolation levers,
+//! all of them OFF by default (an untenanted run is bit-identical to the
+//! pre-tenant engine — locked by `tests/tenant_isolation.rs`):
+//!
+//! * **Hard KV-block quotas** ([`TenantSpec::kv_block_quota`]): admission
+//!   charges each tenant the gross block reservation of every admitted
+//!   request and refuses admissions that would exceed the cap, through the
+//!   same backpressure path as KV-capacity exhaustion
+//!   ([`RejectReason::TenantQuota`]); the request stays waiting and
+//!   retries. Charges are released when the request finishes, migrates, or
+//!   is evicted.
+//! * **Token-bucket admission** ([`TenantSpec::rate_tokens_per_s`] /
+//!   [`TenantSpec::burst_tokens`]): a refilling [`TokenBucket`] gates
+//!   prefill-token admission per tenant — a flood from one tenant is
+//!   smoothed to its provisioned rate instead of monopolizing prefill
+//!   bandwidth ([`RejectReason::TenantRate`]).
+//! * **Start-time fair queueing** ([`FairQueue`]): an
+//!   [`AdmissionPolicy`] wrapper that reorders the waiting queue by
+//!   per-tenant virtual time (weighted by [`TenantSpec::weight`]) before
+//!   delegating to ANY inner admission policy, so fairness composes with
+//!   every token-axis and layer-axis pipeline unchanged
+//!   (`PolicySpec` `fairness=vtfq`). Budget-ineligible tenants sort
+//!   behind eligible ones, so a rate-limited tenant cannot head-of-line
+//!   block the fleet.
+//!
+//! Enforcement state ([`TenantAccounting`]) lives per replica engine
+//! ([`EngineState::tenants`](crate::sched::state::EngineState)): quotas
+//! and buckets bound what one tenant can hold/claim *on each replica*,
+//! which composes with routing the same way per-replica KV capacity does.
+
+use std::collections::BTreeMap;
+
+use crate::sched::policy::AdmissionPolicy;
+use crate::sched::state::EngineState;
+
+/// Tenant identity carried on every [`Request`](crate::workload::Request).
+/// 0 = untenanted (no quota, no bucket, no fairness — pre-tenant behavior).
+pub type TenantId = u32;
+
+/// Why an admission was refused (carried on the
+/// [`KvRejected`](crate::sched::state::Admission::KvRejected) backpressure
+/// signal and its serve-layer event).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The replica's KV pool cannot hold the request's footprint — the
+    /// pre-tenant capacity signal (autoscaling and spill key on this).
+    KvCapacity,
+    /// The tenant's hard KV-block quota would be exceeded.
+    TenantQuota,
+    /// The tenant's token bucket has insufficient prefill-token budget.
+    TenantRate,
+}
+
+impl RejectReason {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RejectReason::KvCapacity => "kv-capacity",
+            RejectReason::TenantQuota => "tenant-quota",
+            RejectReason::TenantRate => "tenant-rate",
+        }
+    }
+}
+
+/// Per-tenant serving contract. All limits default to "unlimited" (0), so
+/// a registry entry that only sets a weight participates in fair queueing
+/// without any admission throttling.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TenantSpec {
+    pub id: TenantId,
+    /// Fair-queueing weight (share of admission bandwidth under
+    /// [`FairQueue`]); min 1.
+    pub weight: u32,
+    /// Token-bucket refill rate in prefill tokens / second. 0 = unlimited.
+    pub rate_tokens_per_s: f64,
+    /// Token-bucket capacity in prefill tokens. 0 with a positive rate
+    /// defaults to one second of refill (`rate_tokens_per_s`).
+    pub burst_tokens: f64,
+    /// Hard cap on KV blocks concurrently reserved by this tenant's
+    /// admitted requests on one replica. 0 = unlimited.
+    pub kv_block_quota: u64,
+}
+
+impl TenantSpec {
+    pub fn new(id: TenantId) -> Self {
+        TenantSpec {
+            id,
+            weight: 1,
+            rate_tokens_per_s: 0.0,
+            burst_tokens: 0.0,
+            kv_block_quota: 0,
+        }
+    }
+}
+
+/// The fleet's tenant table: id → [`TenantSpec`]. Unknown ids resolve to
+/// an unlimited default spec, so partially-specified registries behave
+/// like "limits for these tenants, best-effort for the rest".
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TenantRegistry {
+    specs: BTreeMap<TenantId, TenantSpec>,
+}
+
+impl TenantRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// `n` tenants (ids `1..=n`) with default (unlimited) specs.
+    pub fn with_defaults(n: u32) -> Self {
+        let mut r = TenantRegistry::new();
+        for id in 1..=n {
+            r.insert(TenantSpec::new(id));
+        }
+        r
+    }
+
+    pub fn insert(&mut self, spec: TenantSpec) {
+        self.specs.insert(spec.id, spec);
+    }
+
+    /// Builder-style [`insert`](Self::insert).
+    pub fn with(mut self, spec: TenantSpec) -> Self {
+        self.insert(spec);
+        self
+    }
+
+    /// The spec for `id` (default unlimited spec when unregistered).
+    pub fn spec(&self, id: TenantId) -> TenantSpec {
+        self.specs.get(&id).copied().unwrap_or(TenantSpec::new(id))
+    }
+
+    pub fn ids(&self) -> impl Iterator<Item = TenantId> + '_ {
+        self.specs.keys().copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// Parse a registry from the CLI `--tenants` grammar:
+    ///
+    /// * `"4"` — four tenants (ids 1..=4), unlimited defaults;
+    /// * `"1:weight=4,rate=2000,burst=8000,quota=128;2:weight=1"` —
+    ///   `;`-separated per-tenant entries, each `id:key=value,...` with
+    ///   keys `weight`, `rate` (prefill tokens/s), `burst` (tokens) and
+    ///   `quota` (KV blocks).
+    pub fn parse(s: &str) -> Result<TenantRegistry, String> {
+        let s = s.trim();
+        if s.is_empty() {
+            return Err("empty --tenants spec".into());
+        }
+        if let Ok(n) = s.parse::<u32>() {
+            return Ok(TenantRegistry::with_defaults(n));
+        }
+        let mut reg = TenantRegistry::new();
+        for entry in s.split(';').filter(|e| !e.trim().is_empty()) {
+            let entry = entry.trim();
+            let (id_s, rest) = entry
+                .split_once(':')
+                .ok_or_else(|| format!("tenant entry '{entry}': expected id:key=value,..."))?;
+            let id: TenantId = id_s
+                .trim()
+                .parse()
+                .map_err(|e| format!("tenant id '{}': {e}", id_s.trim()))?;
+            if id == 0 {
+                return Err("tenant id 0 is reserved for untenanted requests".into());
+            }
+            let mut spec = TenantSpec::new(id);
+            for kv in rest.split(',').filter(|e| !e.trim().is_empty()) {
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| format!("tenant {id}: expected key=value, got '{kv}'"))?;
+                let (k, v) = (k.trim().to_ascii_lowercase(), v.trim());
+                match k.as_str() {
+                    "weight" => {
+                        spec.weight = v
+                            .parse::<u32>()
+                            .map_err(|e| format!("tenant {id} weight: {e}"))?
+                            .max(1)
+                    }
+                    "rate" => {
+                        spec.rate_tokens_per_s =
+                            v.parse().map_err(|e| format!("tenant {id} rate: {e}"))?
+                    }
+                    "burst" => {
+                        spec.burst_tokens =
+                            v.parse().map_err(|e| format!("tenant {id} burst: {e}"))?
+                    }
+                    "quota" => {
+                        spec.kv_block_quota =
+                            v.parse().map_err(|e| format!("tenant {id} quota: {e}"))?
+                    }
+                    other => {
+                        return Err(format!(
+                            "tenant {id}: unknown key '{other}' \
+                             (valid: weight | rate | burst | quota)"
+                        ))
+                    }
+                }
+            }
+            reg.insert(spec);
+        }
+        Ok(reg)
+    }
+}
+
+/// A refilling token bucket over continuous (engine-clock) time.
+///
+/// `rate <= 0` means unlimited: every `take` succeeds without accounting.
+/// A charge larger than the bucket capacity is clamped to the capacity
+/// (otherwise such a request could never admit); keep `burst` at or above
+/// the largest expected prompt for exact rate×window+burst bounds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TokenBucket {
+    rate: f64,
+    burst: f64,
+    tokens: f64,
+    last_s: f64,
+}
+
+const EPS: f64 = 1e-9;
+
+impl TokenBucket {
+    pub fn new(rate: f64, burst: f64) -> Self {
+        let burst = if rate > 0.0 && burst <= 0.0 { rate } else { burst };
+        TokenBucket {
+            rate,
+            burst,
+            tokens: burst,
+            last_s: 0.0,
+        }
+    }
+
+    pub fn unlimited() -> Self {
+        TokenBucket::new(0.0, 0.0)
+    }
+
+    /// Bucket level after refilling up to `now_s` (no state change).
+    pub fn level_at(&self, now_s: f64) -> f64 {
+        let dt = (now_s - self.last_s).max(0.0);
+        (self.tokens + self.rate * dt).min(self.burst)
+    }
+
+    /// Would a `take(amount, now_s)` succeed? Pure peek.
+    pub fn peek(&self, amount: f64, now_s: f64) -> bool {
+        self.rate <= 0.0 || self.level_at(now_s) + EPS >= amount.min(self.burst)
+    }
+
+    /// Earliest time at or after `now_s` when a `take(amount, ..)` would
+    /// succeed — the idle-wake target for rate-throttled admissions.
+    /// `None` when the take already succeeds at `now_s` (nothing to wait
+    /// for), including for unlimited buckets.
+    pub fn ready_at(&self, amount: f64, now_s: f64) -> Option<f64> {
+        if self.peek(amount, now_s) {
+            return None;
+        }
+        let deficit = amount.min(self.burst) - self.level_at(now_s);
+        Some(now_s + deficit / self.rate + EPS)
+    }
+
+    /// Refill to `now_s`, then consume `amount` tokens (clamped to the
+    /// capacity). Returns false (and consumes nothing) on insufficient
+    /// budget.
+    pub fn take(&mut self, amount: f64, now_s: f64) -> bool {
+        if self.rate <= 0.0 {
+            return true;
+        }
+        self.tokens = self.level_at(now_s);
+        self.last_s = self.last_s.max(now_s);
+        let charge = amount.min(self.burst);
+        if self.tokens + EPS >= charge {
+            self.tokens -= charge;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Per-replica tenant enforcement state: quota ledgers + token buckets.
+///
+/// The admission flow is peek → (KV register) → commit, so a request
+/// refused by KV capacity consumes no tenant budget and a request refused
+/// by tenant budget touches no KV:
+///
+/// 1. [`peek`](Self::peek) — would this admission violate the tenant's
+///    quota or bucket? (pure, also used by [`FairQueue`] eligibility);
+/// 2. the KV manager registers the reservation;
+/// 3. [`commit`](Self::commit) — consume bucket tokens, add the block
+///    charge to the quota ledger, remember the per-request charge so
+///    [`release`](Self::release) can undo it on finish/evict/migrate.
+#[derive(Clone, Debug, Default)]
+pub struct TenantAccounting {
+    registry: TenantRegistry,
+    buckets: BTreeMap<TenantId, TokenBucket>,
+    used_blocks: BTreeMap<TenantId, u64>,
+    charges: BTreeMap<u64, (TenantId, u32)>,
+}
+
+impl TenantAccounting {
+    pub fn new(registry: TenantRegistry) -> Self {
+        TenantAccounting {
+            registry,
+            buckets: BTreeMap::new(),
+            used_blocks: BTreeMap::new(),
+            charges: BTreeMap::new(),
+        }
+    }
+
+    pub fn registry(&self) -> &TenantRegistry {
+        &self.registry
+    }
+
+    /// KV blocks currently charged to `tenant` on this replica.
+    pub fn used_blocks(&self, tenant: TenantId) -> u64 {
+        self.used_blocks.get(&tenant).copied().unwrap_or(0)
+    }
+
+    fn bucket_for(&self, tenant: TenantId) -> TokenBucket {
+        let spec = self.registry.spec(tenant);
+        self.buckets
+            .get(&tenant)
+            .copied()
+            .unwrap_or_else(|| TokenBucket::new(spec.rate_tokens_per_s, spec.burst_tokens))
+    }
+
+    /// Would admitting `blocks` KV blocks + `prefill_tokens` prefill
+    /// tokens for `tenant` at `now_s` pass its budgets? Pure check.
+    pub fn peek(
+        &self,
+        tenant: TenantId,
+        blocks: u32,
+        prefill_tokens: u32,
+        now_s: f64,
+    ) -> Result<(), RejectReason> {
+        if tenant == 0 {
+            return Ok(());
+        }
+        let spec = self.registry.spec(tenant);
+        if spec.kv_block_quota > 0
+            && self.used_blocks(tenant) + blocks as u64 > spec.kv_block_quota
+        {
+            return Err(RejectReason::TenantQuota);
+        }
+        if spec.rate_tokens_per_s > 0.0
+            && !self.bucket_for(tenant).peek(prefill_tokens as f64, now_s)
+        {
+            return Err(RejectReason::TenantRate);
+        }
+        Ok(())
+    }
+
+    /// Earliest engine time at which `tenant`'s token bucket could cover a
+    /// `blocks` / `prefill_tokens` admission that is refused at `now_s`
+    /// for [`RejectReason::TenantRate`] alone. `None` when the admission
+    /// is not purely rate-gated: untenanted, passes now, or refused on
+    /// quota (time alone cannot clear a quota refusal). The engine core
+    /// folds this into its idle target so rate-paced waiting work survives
+    /// the drain tail (see `EngineState::next_tenant_ready`).
+    pub fn ready_time(
+        &self,
+        tenant: TenantId,
+        blocks: u32,
+        prefill_tokens: u32,
+        now_s: f64,
+    ) -> Option<f64> {
+        match self.peek(tenant, blocks, prefill_tokens, now_s) {
+            Err(RejectReason::TenantRate) => self
+                .bucket_for(tenant)
+                .ready_at(prefill_tokens as f64, now_s),
+            _ => None,
+        }
+    }
+
+    /// Record a successful admission: consume bucket tokens and charge the
+    /// quota ledger. Call only after [`peek`](Self::peek) passed and the
+    /// KV reservation succeeded.
+    pub fn commit(
+        &mut self,
+        req_id: u64,
+        tenant: TenantId,
+        blocks: u32,
+        prefill_tokens: u32,
+        now_s: f64,
+    ) {
+        if tenant == 0 {
+            return;
+        }
+        let spec = self.registry.spec(tenant);
+        if spec.rate_tokens_per_s > 0.0 {
+            let bucket = self
+                .buckets
+                .entry(tenant)
+                .or_insert_with(|| TokenBucket::new(spec.rate_tokens_per_s, spec.burst_tokens));
+            bucket.take(prefill_tokens as f64, now_s);
+        }
+        self.charge_unchecked(req_id, tenant, blocks);
+    }
+
+    /// Charge the quota ledger without budget checks — the KV-migration
+    /// landing path ([`adopt_decoding`](crate::sched::state::EngineState))
+    /// uses this: migration preserves already-admitted work, so the
+    /// destination replica accounts for it but never refuses it.
+    pub fn charge_unchecked(&mut self, req_id: u64, tenant: TenantId, blocks: u32) {
+        if tenant == 0 {
+            return;
+        }
+        *self.used_blocks.entry(tenant).or_insert(0) += blocks as u64;
+        self.charges.insert(req_id, (tenant, blocks));
+    }
+
+    /// Release the block charge recorded for `req_id` (finish, eviction,
+    /// or migration extraction). Idempotent for unknown / untenanted ids.
+    pub fn release(&mut self, req_id: u64) {
+        if let Some((tenant, blocks)) = self.charges.remove(&req_id) {
+            if let Some(used) = self.used_blocks.get_mut(&tenant) {
+                *used = used.saturating_sub(blocks as u64);
+            }
+        }
+    }
+}
+
+/// Start-time fair queueing over the waiting queue, as an
+/// [`AdmissionPolicy`] wrapper (Policy API v2 `fairness=vtfq`).
+///
+/// Before delegating to the wrapped admission policy, the waiting queue is
+/// stably reordered by `(budget-ineligible, tenant virtual time, FCFS
+/// position)`; each admission then advances its tenant's virtual time by
+/// `prompt_tokens / weight`. A tenant returning from idle restarts at the
+/// current virtual time (the SFQ start-tag rule `max(own tag, v(t))`), so
+/// it cannot bank priority while idle; a tenant whose quota or bucket
+/// would refuse its head request sorts behind every eligible tenant, so
+/// throttling one tenant never head-of-line blocks the rest.
+///
+/// Composes with every inner admission policy (greedy, batch, cohort,
+/// solo) on both scheduling axes: the inner policy still sees a plain
+/// FCFS-ordered queue — just one whose order encodes weighted fairness.
+pub struct FairQueue {
+    inner: Box<dyn AdmissionPolicy>,
+    /// Spec-level weight overrides (tenant id → weight); tenants not
+    /// listed fall back to the registry weight, then 1.
+    weights: BTreeMap<TenantId, u32>,
+    vtime: BTreeMap<TenantId, f64>,
+}
+
+impl FairQueue {
+    pub fn new(inner: Box<dyn AdmissionPolicy>, weights: Vec<(TenantId, u32)>) -> Self {
+        FairQueue {
+            inner,
+            weights: weights.into_iter().collect(),
+            vtime: BTreeMap::new(),
+        }
+    }
+
+    fn weight(&self, tenant: TenantId, state: &EngineState) -> f64 {
+        let w = match self.weights.get(&tenant) {
+            Some(&w) => w,
+            None => match &state.tenants {
+                Some(acct) => acct.registry().spec(tenant).weight,
+                None => 1,
+            },
+        };
+        w.max(1) as f64
+    }
+
+    fn reorder(&mut self, state: &mut EngineState) {
+        if state.waiting.len() < 2 {
+            return;
+        }
+        // SFQ start tags: a tenant (re)entering the backlog starts at the
+        // current virtual time = min start tag over backlogged tenants.
+        let mut base: Option<f64> = None;
+        for id in &state.waiting {
+            let t = state.reqs[id].req.tenant;
+            if let Some(&v) = self.vtime.get(&t) {
+                base = Some(base.map_or(v, |b: f64| b.min(v)));
+            }
+        }
+        let base = base.unwrap_or(0.0);
+        let now = state.now_s;
+        let mut keyed: Vec<(u8, f64, usize, u64)> = Vec::with_capacity(state.waiting.len());
+        for (pos, &id) in state.waiting.iter().enumerate() {
+            let r = &state.reqs[&id].req;
+            let t = r.tenant;
+            let v = self.vtime.entry(t).or_insert(base);
+            *v = v.max(base);
+            let eligible = match &state.tenants {
+                Some(acct) => {
+                    let footprint = r.input_len.saturating_add(r.output_len);
+                    let blocks = state.kv.blocks_for(footprint);
+                    acct.peek(t, blocks, r.input_len, now).is_ok()
+                }
+                None => true,
+            };
+            keyed.push((u8::from(!eligible), *v, pos, id));
+        }
+        keyed.sort_by(|a, b| {
+            a.0.cmp(&b.0)
+                .then(a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal))
+                .then(a.2.cmp(&b.2))
+        });
+        for (slot, k) in keyed.into_iter().enumerate() {
+            state.waiting[slot] = k.3;
+        }
+    }
+}
+
+impl AdmissionPolicy for FairQueue {
+    fn admit(&mut self, state: &mut EngineState) -> Vec<u64> {
+        self.reorder(state);
+        let admitted = self.inner.admit(state);
+        for id in &admitted {
+            if let Some(r) = state.reqs.get(id) {
+                let tenant = r.req.tenant;
+                let cost = r.req.input_len.max(1) as f64 / self.weight(tenant, state);
+                *self.vtime.entry(tenant).or_insert(0.0) += cost;
+            }
+        }
+        admitted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_parse_count_form() {
+        let r = TenantRegistry::parse("3").unwrap();
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.spec(2), TenantSpec::new(2));
+        // Unknown ids resolve to unlimited defaults.
+        assert_eq!(r.spec(9).kv_block_quota, 0);
+    }
+
+    #[test]
+    fn registry_parse_full_form() {
+        let r =
+            TenantRegistry::parse("1:weight=4,rate=2000,burst=8000,quota=128; 2:weight=1").unwrap();
+        assert_eq!(r.len(), 2);
+        let t1 = r.spec(1);
+        assert_eq!(t1.weight, 4);
+        assert_eq!(t1.rate_tokens_per_s, 2000.0);
+        assert_eq!(t1.burst_tokens, 8000.0);
+        assert_eq!(t1.kv_block_quota, 128);
+        assert_eq!(r.spec(2).weight, 1);
+    }
+
+    #[test]
+    fn registry_parse_rejects_bad_specs() {
+        assert!(TenantRegistry::parse("").is_err());
+        assert!(TenantRegistry::parse("0:weight=2").is_err(), "id 0 reserved");
+        assert!(TenantRegistry::parse("1:wat=2").is_err());
+        assert!(TenantRegistry::parse("1-weight=2").is_err());
+        let e = TenantRegistry::parse("1:speed=3").unwrap_err();
+        assert!(e.contains("weight"), "error lists valid keys: {e}");
+    }
+
+    #[test]
+    fn token_bucket_refills_and_bounds() {
+        let mut b = TokenBucket::new(100.0, 500.0);
+        // Starts full.
+        assert!(b.take(500.0, 0.0));
+        assert!(!b.take(1.0, 0.0), "empty bucket refuses");
+        // 2 s later: 200 tokens refilled.
+        assert!(b.peek(200.0, 2.0));
+        assert!(!b.peek(201.0, 2.0));
+        assert!(b.take(200.0, 2.0));
+        // Refill caps at burst.
+        assert!(b.peek(500.0, 100.0));
+        assert!(!b.peek(501.0, 100.0));
+        // Unlimited bucket always passes.
+        let mut u = TokenBucket::unlimited();
+        assert!(u.peek(1e12, 0.0) && u.take(1e12, 0.0));
+    }
+
+    #[test]
+    fn token_bucket_clamps_oversized_charges() {
+        // A prompt larger than the capacity charges the full bucket
+        // instead of never admitting.
+        let mut b = TokenBucket::new(10.0, 100.0);
+        assert!(b.peek(1000.0, 0.0));
+        assert!(b.take(1000.0, 0.0));
+        assert!(!b.peek(100.0, 0.0), "bucket drained to zero");
+        // Zero-burst with a positive rate defaults to one second of rate.
+        let b = TokenBucket::new(50.0, 0.0);
+        assert!(b.peek(50.0, 0.0));
+        assert!(!b.peek(51.0, 0.0));
+    }
+
+    #[test]
+    fn accounting_quota_ledger_round_trips() {
+        let reg = TenantRegistry::new().with(TenantSpec {
+            kv_block_quota: 10,
+            ..TenantSpec::new(1)
+        });
+        let mut a = TenantAccounting::new(reg);
+        assert!(a.peek(1, 6, 0, 0.0).is_ok());
+        a.commit(100, 1, 6, 0, 0.0);
+        assert_eq!(a.used_blocks(1), 6);
+        assert_eq!(a.peek(1, 5, 0, 0.0), Err(RejectReason::TenantQuota));
+        assert!(a.peek(1, 4, 0, 0.0).is_ok());
+        a.release(100);
+        assert_eq!(a.used_blocks(1), 0);
+        assert!(a.peek(1, 10, 0, 0.0).is_ok());
+        // Unknown release is a no-op; tenant 0 is never limited.
+        a.release(999);
+        assert!(a.peek(0, u32::MAX, u32::MAX, 0.0).is_ok());
+    }
+
+    #[test]
+    fn accounting_bucket_gates_prefill_tokens() {
+        let reg = TenantRegistry::new().with(TenantSpec {
+            rate_tokens_per_s: 100.0,
+            burst_tokens: 300.0,
+            ..TenantSpec::new(2)
+        });
+        let mut a = TenantAccounting::new(reg);
+        assert!(a.peek(2, 0, 300, 0.0).is_ok());
+        a.commit(1, 2, 0, 300, 0.0);
+        assert_eq!(a.peek(2, 0, 100, 0.0), Err(RejectReason::TenantRate));
+        // One second later the bucket holds 100 tokens again.
+        assert!(a.peek(2, 0, 100, 1.0).is_ok());
+    }
+}

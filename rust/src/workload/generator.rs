@@ -102,6 +102,30 @@ pub fn stamp_shared_prefix(spec: &WorkloadSpec, mut r: Request) -> Request {
     r
 }
 
+/// Apply a spec's multi-tenant model to one sampled request: stamp a
+/// tenant id in `1..=spec.tenants` as a pure function of the request id
+/// (no extra RNG draws — lengths, arrivals, and prefixes are untouched, so
+/// `tenants = 0` traces stay bit-identical to pre-tenant traces). With
+/// `tenant_heavy_pct > 0`, that share of requests lands on tenant 1 (the
+/// noisy neighbor) and the rest round-robins over tenants `2..=tenants`.
+/// Shared by [`WorkloadGen::generate`] and the streaming
+/// [`PoissonSource`](crate::workload::source::PoissonSource).
+pub fn stamp_tenant(spec: &WorkloadSpec, mut r: Request) -> Request {
+    if spec.tenants == 0 {
+        return r;
+    }
+    let n = spec.tenants as u64;
+    let heavy = spec.tenant_heavy_pct.min(100) as u64;
+    r.tenant = if heavy == 0 || n == 1 {
+        (1 + r.id % n) as u32
+    } else if r.id % 100 < heavy {
+        1
+    } else {
+        (2 + r.id % (n - 1)) as u32
+    };
+    r
+}
+
 /// Generator producing a deterministic trace from a `WorkloadSpec`.
 #[derive(Clone, Debug)]
 pub struct WorkloadGen {
@@ -126,15 +150,18 @@ impl WorkloadGen {
                 Dataset::Fixed => (self.spec.fixed_input, self.spec.fixed_output),
                 _ => (model.sample_input(&mut rng), model.sample_output(&mut rng)),
             };
-            reqs.push(stamp_shared_prefix(
+            reqs.push(stamp_tenant(
                 &self.spec,
-                Request {
-                    id,
-                    arrival_s: t,
-                    input_len,
-                    output_len,
-                    ..Default::default()
-                },
+                stamp_shared_prefix(
+                    &self.spec,
+                    Request {
+                        id,
+                        arrival_s: t,
+                        input_len,
+                        output_len,
+                        ..Default::default()
+                    },
+                ),
             ));
         }
         Trace::new(reqs)
@@ -252,6 +279,29 @@ mod tests {
             spec(Dataset::ShareGpt, 2.0, 20).with_shared_prefix(0, 3),
         )
         .generate();
+        assert_eq!(off.requests, base.requests);
+    }
+
+    #[test]
+    fn tenant_workload_stamps_without_perturbing_samples() {
+        let base = WorkloadGen::new(spec(Dataset::ShareGpt, 2.0, 40)).generate();
+        let uniform =
+            WorkloadGen::new(spec(Dataset::ShareGpt, 2.0, 40).with_tenants(4, 0)).generate();
+        for (b, t) in base.requests.iter().zip(&uniform.requests) {
+            assert_eq!(t.input_len, b.input_len, "lengths untouched");
+            assert_eq!(t.output_len, b.output_len);
+            assert_eq!(t.arrival_s, b.arrival_s, "arrivals untouched");
+            assert_eq!(t.tenant as u64, 1 + t.id % 4, "round-robin stamp");
+        }
+        // Noisy-neighbor skew: exactly 70% on tenant 1 per hundred ids,
+        // rest over tenants 2..=4.
+        let skewed =
+            WorkloadGen::new(spec(Dataset::ShareGpt, 2.0, 200).with_tenants(4, 70)).generate();
+        let heavy = skewed.requests.iter().filter(|r| r.tenant == 1).count();
+        assert_eq!(heavy, 140, "heavy share");
+        assert!(skewed.requests.iter().all(|r| (1..=4).contains(&r.tenant)));
+        // Feature off: bit-identical to the untouched generator.
+        let off = WorkloadGen::new(spec(Dataset::ShareGpt, 2.0, 40).with_tenants(0, 70)).generate();
         assert_eq!(off.requests, base.requests);
     }
 

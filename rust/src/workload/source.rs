@@ -136,15 +136,18 @@ impl WorkloadSource for PoissonSource {
         }
         let id = self.next_id;
         self.next_id += 1;
-        Some(crate::workload::generator::stamp_shared_prefix(
+        Some(crate::workload::generator::stamp_tenant(
             &self.spec,
-            Request {
-                id,
-                arrival_s: self.t,
-                input_len,
-                output_len,
-                ..Default::default()
-            },
+            crate::workload::generator::stamp_shared_prefix(
+                &self.spec,
+                Request {
+                    id,
+                    arrival_s: self.t,
+                    input_len,
+                    output_len,
+                    ..Default::default()
+                },
+            ),
         ))
     }
 
@@ -193,6 +196,16 @@ mod tests {
         let out = drain(PoissonSource::new(spec));
         assert_eq!(out, trace.requests);
         assert!(out.iter().all(|r| r.prefix_id >= 1 && r.prefix_id <= 4));
+    }
+
+    #[test]
+    fn poisson_source_matches_workload_gen_with_tenants() {
+        let mut spec = WorkloadSpec::new(Dataset::ShareGpt, 2.0, 40).with_tenants(3, 50);
+        spec.seed = 13;
+        let trace = WorkloadGen::new(spec.clone()).generate();
+        let out = drain(PoissonSource::new(spec));
+        assert_eq!(out, trace.requests);
+        assert!(out.iter().all(|r| (1..=3).contains(&r.tenant)));
     }
 
     #[test]

@@ -20,6 +20,10 @@ pub struct Request {
     /// Length in tokens of the shared prefix (meaningful only when
     /// `prefix_id != 0`; effectively clamped to `input_len`).
     pub prefix_len: u32,
+    /// Owning tenant ([`crate::tenant::TenantId`]). 0 = untenanted: the
+    /// request belongs to no tenant and bypasses every quota, bucket, and
+    /// fairness mechanism — the pre-tenant byte streams exactly.
+    pub tenant: u32,
 }
 
 impl Default for Request {
@@ -31,6 +35,7 @@ impl Default for Request {
             output_len: 0,
             prefix_id: 0,
             prefix_len: 0,
+            tenant: 0,
         }
     }
 }
@@ -81,21 +86,35 @@ impl Trace {
     }
 
     /// Serialize to a simple CSV for replay
-    /// (id,arrival,input,output,prefix_id,prefix_len).
+    /// (id,arrival,input,output,prefix_id,prefix_len[,tenant]).
+    ///
+    /// The `tenant` column (CSV v3) is emitted only when at least one
+    /// request is tenanted, so untenanted traces serialize byte-identically
+    /// to the pre-tenant (v2) format.
     pub fn to_csv(&self) -> String {
-        let mut s = String::from("id,arrival_s,input_len,output_len,prefix_id,prefix_len\n");
+        let tenanted = self.requests.iter().any(|r| r.tenant != 0);
+        let mut s = String::from("id,arrival_s,input_len,output_len,prefix_id,prefix_len");
+        if tenanted {
+            s.push_str(",tenant");
+        }
+        s.push('\n');
         for r in &self.requests {
             s.push_str(&format!(
-                "{},{:.6},{},{},{},{}\n",
+                "{},{:.6},{},{},{},{}",
                 r.id, r.arrival_s, r.input_len, r.output_len, r.prefix_id, r.prefix_len
             ));
+            if tenanted {
+                s.push_str(&format!(",{}", r.tenant));
+            }
+            s.push('\n');
         }
         s
     }
 
-    /// Parse a trace CSV. Accepts both the 4-field legacy format
-    /// (id,arrival,input,output) and the 6-field format that adds the
-    /// shared-prefix tag (prefix_id,prefix_len).
+    /// Parse a trace CSV. Accepts the 4-field legacy format
+    /// (id,arrival,input,output), the 6-field format that adds the
+    /// shared-prefix tag (prefix_id,prefix_len), and the 7-field v3 format
+    /// that adds the tenant column.
     pub fn from_csv(text: &str) -> Result<Trace, String> {
         let mut reqs = Vec::new();
         for (i, line) in text.lines().enumerate() {
@@ -103,16 +122,21 @@ impl Trace {
                 continue;
             }
             let parts: Vec<&str> = line.split(',').collect();
-            if parts.len() != 4 && parts.len() != 6 {
-                return Err(format!("line {i}: expected 4 or 6 fields"));
+            if parts.len() != 4 && parts.len() != 6 && parts.len() != 7 {
+                return Err(format!("line {i}: expected 4, 6 or 7 fields"));
             }
-            let (prefix_id, prefix_len) = if parts.len() == 6 {
+            let (prefix_id, prefix_len) = if parts.len() >= 6 {
                 (
                     parts[4].parse().map_err(|e| format!("line {i}: {e}"))?,
                     parts[5].parse().map_err(|e| format!("line {i}: {e}"))?,
                 )
             } else {
                 (0, 0)
+            };
+            let tenant = if parts.len() == 7 {
+                parts[6].parse().map_err(|e| format!("line {i}: {e}"))?
+            } else {
+                0
             };
             reqs.push(Request {
                 id: parts[0].parse().map_err(|e| format!("line {i}: {e}"))?,
@@ -121,6 +145,7 @@ impl Trace {
                 output_len: parts[3].parse().map_err(|e| format!("line {i}: {e}"))?,
                 prefix_id,
                 prefix_len,
+                tenant,
             });
         }
         Ok(Trace::new(reqs))
@@ -180,6 +205,31 @@ mod tests {
         let t2 = Trace::from_csv(&t.to_csv()).unwrap();
         assert_eq!(t.requests, t2.requests);
         assert_eq!(t2.requests[0].shared_prefix_tokens(), 8);
+    }
+
+    #[test]
+    fn csv_roundtrips_tenant_column() {
+        let mut a = req(1, 0.5);
+        a.tenant = 3;
+        let b = req(2, 1.0); // untenanted rider in a tenanted trace
+        let t = Trace::new(vec![a, b]);
+        let csv = t.to_csv();
+        assert!(csv.starts_with("id,arrival_s,input_len,output_len,prefix_id,prefix_len,tenant\n"));
+        let t2 = Trace::from_csv(&csv).unwrap();
+        assert_eq!(t.requests, t2.requests);
+        assert_eq!(t2.requests[0].tenant, 3);
+        assert_eq!(t2.requests[1].tenant, 0);
+    }
+
+    #[test]
+    fn csv_untenanted_stays_v2_byte_format() {
+        let t = Trace::new(vec![req(3, 0.25)]);
+        let csv = t.to_csv();
+        assert_eq!(
+            csv,
+            "id,arrival_s,input_len,output_len,prefix_id,prefix_len\n3,0.250000,10,5,0,0\n"
+        );
+        assert_eq!(Trace::from_csv(&csv).unwrap().requests, t.requests);
     }
 
     #[test]
