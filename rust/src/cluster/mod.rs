@@ -180,6 +180,7 @@ pub fn merge_metrics(runs: &[RunMetrics]) -> RunMetrics {
         fleet.iterations += m.iterations;
         fleet.prefix_hit_tokens += m.prefix_hit_tokens;
         fleet.migrated_blocks += m.migrated_blocks;
+        fleet.preemptions += m.preemptions;
         batch_weight += m.avg_decode_batch * m.busy_s;
     }
     fleet.avg_decode_batch = if fleet.busy_s > 0.0 {

@@ -183,6 +183,12 @@ pub struct WorkloadSpec {
     /// across tenants `2..=tenants`. 0 = uniform round-robin over all
     /// tenants. Meaningful only when `tenants > 0`.
     pub tenant_heavy_pct: u32,
+    /// Priority-class workload: percentage (0–100) of requests stamped as
+    /// priority class 1 (interactive) by request id — a deterministic
+    /// stamp with no extra RNG draws, so `priority_pct = 0` traces are
+    /// byte-identical to the pre-priority generator. 0 = feature off
+    /// (every request priority 0).
+    pub priority_pct: u32,
 }
 
 impl WorkloadSpec {
@@ -198,6 +204,7 @@ impl WorkloadSpec {
             prefix_groups: 1,
             tenants: 0,
             tenant_heavy_pct: 0,
+            priority_pct: 0,
         }
     }
 
@@ -213,6 +220,13 @@ impl WorkloadSpec {
     pub fn with_tenants(mut self, tenants: u32, heavy_pct: u32) -> Self {
         self.tenants = tenants;
         self.tenant_heavy_pct = heavy_pct.min(100);
+        self
+    }
+
+    /// Builder-style priority-class knob (see `priority_pct`). Clamped to
+    /// 100.
+    pub fn with_priorities(mut self, pct: u32) -> Self {
+        self.priority_pct = pct.min(100);
         self
     }
 }

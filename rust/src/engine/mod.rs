@@ -339,11 +339,13 @@ impl EngineCore {
         }
     }
 
-    /// Requests not yet finished: undelivered + waiting + in flight.
+    /// Requests not yet finished: undelivered + waiting + in flight
+    /// (paused prefills hold KV and will resume, so they count).
     fn pending_work(&self, state: &EngineState) -> usize {
         self.pending.len()
             + state.waiting.len()
             + state.prefilling.len()
+            + state.paused.len()
             + state.decoding.len()
     }
 
@@ -379,6 +381,23 @@ impl EngineCore {
                             reason,
                         },
                     );
+                }
+                Admission::Paused {
+                    id,
+                    token_layers_done,
+                } => {
+                    self.metrics.preemptions += 1;
+                    sink.on_event(
+                        self.replica,
+                        &EngineEvent::Preempted {
+                            t_s: now,
+                            id,
+                            resumed_at_layers: token_layers_done,
+                        },
+                    );
+                }
+                Admission::Resumed { id } => {
+                    sink.on_event(self.replica, &EngineEvent::Resumed { t_s: now, id });
                 }
             }
         }

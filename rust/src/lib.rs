@@ -166,6 +166,36 @@
 //! properties, and bounded noisy-neighbor p99 TTFT interference under
 //! vtfq (both composers) are locked by `tests/tenant_isolation.rs`.
 //!
+//! ## Preemption: priority classes and pausable prefills
+//!
+//! Layered prefill removes decode stalls, but a long prompt admitted
+//! just before a short interactive request still monopolizes the prefill
+//! slice budget — the short request's TTFT absorbs the whole long
+//! prefill. A fifth Policy API v2 axis closes that gap by composition
+//! ([`sched::policy::preempt::PreemptingAdmission`], `PolicySpec`
+//! `preemption=pause[:budget]`): every [`workload::Request`] carries a
+//! priority class (`0` = baseline; stamped by
+//! `WorkloadSpec::with_priorities` / CLI `--priority-pct`, round-tripped
+//! through the trace CSV's v4 `priority` column; all-zero traces are
+//! byte-identical to pre-priority builds), and at each unit boundary the
+//! wrapper may PAUSE in-flight prefills outranked by a strictly
+//! higher-priority waiting request ([`sched::state::EngineState::pause_prefill`]:
+//! KV blocks stay resident, `prefill_done` / token·layer progress is
+//! preserved, the freed slice budget goes to the inner admission stage)
+//! and RESUME them later from exactly where they stopped — no token·layer
+//! is ever recomputed, and in-progress layer-axis units are never
+//! interrupted (I4 streaks hold). Victims yield in descending per-tenant
+//! weighted outstanding prefill (the same share notion
+//! [`tenant::FairQueue`] schedules by); a cumulative per-request pause
+//! budget forces resume on exhaustion, so nothing starves. Size-aware
+//! admission (`admission=srpf|srpt` — shortest remaining prefill /
+//! shortest total service first, higher classes first) pairs with it.
+//! Observability: [`serve::EngineEvent::Preempted`] / `Resumed` events
+//! and the `RunMetrics::preemptions` counter. Pause/resume invariants,
+//! bounded-pause no-starvation, feature-off byte-identity at every
+//! thread count, and the interactive-p99-TTFT win over every
+//! non-preemptive preset are locked by `tests/preemption.rs`.
+//!
 //! ## Architecture: one engine core, many backends
 //!
 //! Each iteration of any run is the same cycle, owned by

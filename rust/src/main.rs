@@ -43,6 +43,11 @@
 //!       PCT% of arrivals (noisy neighbor); `--tenant-report` prints the
 //!       per-tenant SLO table; `fairness=vtfq[,weights=1:4+2:1]` in a
 //!       `--policy-spec` adds virtual-time fair queueing.
+//!       Preemption: `--priority-pct PCT` stamps PCT% of the workload
+//!       priority 1 (interactive class); `admission=srpf|srpt` and
+//!       `preemption=pause[:budget]` in a `--policy-spec` order admission
+//!       by remaining size and pause outranked in-flight prefills (KV
+//!       retained, resumed without recomputation).
 //!       Parallelism: `--threads N` steps replica engines on N worker
 //!       threads between control boundaries (0 = auto = min(replicas,
 //!       available parallelism); 1 = serial; every N is bit-identical).
@@ -205,8 +210,10 @@ fn cmd_simulate_open_loop(args: &Args) {
         .opt("requests")
         .and_then(|v| v.parse::<usize>().ok())
         .unwrap_or(usize::MAX);
+    let priority_pct = args.usize("priority-pct", 0).min(100) as u32;
     let mut wspec = WorkloadSpec::new(dataset, rate, n_requests)
-        .with_shared_prefix(shared_prefix, prefix_groups);
+        .with_shared_prefix(shared_prefix, prefix_groups)
+        .with_priorities(priority_pct);
     wspec.seed = seed;
     let source = PoissonSource::new(wspec).with_horizon(horizon);
 
@@ -255,6 +262,9 @@ fn cmd_simulate_open_loop(args: &Args) {
     t.row(&["makespan (s)".into(), f1(m.makespan_s)]);
     if m.prefix_hit_tokens > 0 {
         t.row(&["prefix-hit tokens".into(), m.prefix_hit_tokens.to_string()]);
+    }
+    if m.preemptions > 0 {
+        t.row(&["prefill preemptions".into(), m.preemptions.to_string()]);
     }
     t.print();
 }
@@ -552,6 +562,10 @@ fn cmd_cluster(args: &Args) {
     });
     let tenant_heavy = args.usize("tenant-heavy", 0).min(100) as u32;
     let tenant_report = args.bool("tenant-report") || tenants.is_some();
+    // Priority classes: `--priority-pct PCT` stamps PCT% of arrivals
+    // priority 1 (interactive). Inert unless a `--policy-spec` carries a
+    // `preemption=pause` stage (or srpf/srpt admission).
+    let priority_pct = args.usize("priority-pct", 0).min(100) as u32;
     let n_tenants = tenants.as_ref().map_or(0, |r| r.ids().max().unwrap_or(0));
     // Worker threads for parallel replica stepping: 0 (default) auto-sizes
     // to min(replicas, available parallelism); 1 forces the serial path.
@@ -596,13 +610,15 @@ fn cmd_cluster(args: &Args) {
             .unwrap_or(usize::MAX);
         let mut wspec = WorkloadSpec::new(dataset, rate, nn)
             .with_shared_prefix(shared_prefix, prefix_groups)
-            .with_tenants(n_tenants, tenant_heavy);
+            .with_tenants(n_tenants, tenant_heavy)
+            .with_priorities(priority_pct);
         wspec.seed = seed;
         builder.workload(PoissonSource::new(wspec).with_horizon(horizon))
     } else {
         let mut wspec = WorkloadSpec::new(dataset, rate, n)
             .with_shared_prefix(shared_prefix, prefix_groups)
-            .with_tenants(n_tenants, tenant_heavy);
+            .with_tenants(n_tenants, tenant_heavy)
+            .with_priorities(priority_pct);
         wspec.seed = seed;
         let trace = WorkloadGen::new(wspec).generate();
         builder.trace(&trace)
@@ -754,6 +770,16 @@ fn cmd_cluster(args: &Args) {
             "memory axis: prefix hits {prefix_hits} ({} tokens skipped) | migrations {migrations} \
              ({} blocks moved)",
             fm.prefix_hit_tokens, fm.migrated_blocks,
+        );
+    }
+    // Preemption audit: pauses counted by the engines vs pause/resume
+    // events observed on the stream (must agree on a drained run).
+    if fm.preemptions > 0 {
+        let pauses = log.count(|e| matches!(e, EngineEvent::Preempted { .. }));
+        let resumes = log.count(|e| matches!(e, EngineEvent::Resumed { .. }));
+        println!(
+            "preemption: {} prefill pauses ({pauses} Preempted / {resumes} Resumed events)",
+            fm.preemptions
         );
     }
     if matches!(rep.status, SessionStatus::Drained) && unfinished > 0 {

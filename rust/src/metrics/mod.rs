@@ -55,6 +55,9 @@ pub struct RunMetrics {
     pub prefix_hit_tokens: u64,
     /// KV blocks that landed on this replica via cross-replica migration.
     pub migrated_blocks: u64,
+    /// Prefill pauses issued by a preemption policy
+    /// (`EngineEvent::Preempted` count; resumes are not re-counted).
+    pub preemptions: u64,
 }
 
 /// SLO attainment split (paper Fig 4): full = both, plus per-component.

@@ -35,14 +35,20 @@
 //! generalizing the paper's §4.3 hybrid into a runtime policy.
 
 pub mod adaptive;
+pub mod preempt;
 pub mod spec;
 pub mod stages;
 
 pub use adaptive::{AdaptiveScheduler, Axis, SignalSnapshot};
-pub use spec::{AdaptiveSpec, AdmissionSpec, ComposerSpec, FairnessSpec, PolicySpec, ShaperSpec};
+pub use preempt::PreemptingAdmission;
+pub use spec::{
+    AdaptiveSpec, AdmissionSpec, ComposerSpec, FairnessSpec, PolicySpec, PreemptionSpec,
+    ShaperSpec,
+};
 pub use stages::{
     BatchAdmission, CohortAdmission, CohortShaper, FullPromptShaper, GreedyAdmission,
-    InterleaveComposer, LayerGroupComposer, SoloAdmission, SoloChunkShaper, TokenChunkShaper,
+    InterleaveComposer, LayerGroupComposer, SizedAdmission, SoloAdmission, SoloChunkShaper,
+    TokenChunkShaper,
 };
 
 use crate::sched::{EngineState, IterationPlan, PrefillWork, Scheduler};
@@ -232,6 +238,7 @@ mod tests {
             shaper: ShaperSpec::TokenChunks { chunk: 512 },
             composer: ComposerSpec::LayerGroups { target: 512 },
             fairness: FairnessSpec::None,
+            preemption: PreemptionSpec::None,
         };
         let mut st = state();
         let mut s = spec.build(48);

@@ -1,0 +1,333 @@
+//! Prefill preemption: pause admitted prefills for higher-priority work.
+//!
+//! The paper's layered prefill removes decode stalls, but a long prompt
+//! admitted just before a short interactive request still monopolizes the
+//! prefill slice budget until it completes — the interactive request's
+//! TTFT absorbs the whole long prefill. [`PreemptingAdmission`] closes
+//! that gap as a Policy API v2 admission WRAPPER (composition, never a
+//! forked engine loop): at each unit boundary it may PAUSE in-flight
+//! prefills that are outranked by a strictly higher-priority waiting
+//! request, hand the freed slice budget and batch slots to the inner
+//! admission policy, and RESUME the paused work at a later boundary from
+//! exactly where it stopped.
+//!
+//! Pause semantics (see [`EngineState::pause_prefill`]):
+//!
+//! * KV blocks stay resident and `prefill_done` / `token_layers_done` are
+//!   preserved — resume recomputes NOTHING (token·layer conservation, I2,
+//!   holds across any number of pause/resume cycles);
+//! * pauses happen only at unit boundaries, where the composer holds no
+//!   slices — an in-progress layer-axis unit is never interrupted, so I4
+//!   streaks are preserved for every composer;
+//! * paused requests leave `state.prefilling`, so admission occupancy and
+//!   the shapers' slice budgets no longer count them.
+//!
+//! No starvation: a request may spend at most `max_pauses` unit
+//! boundaries paused, cumulative over its lifetime. When the budget is
+//! exhausted the request is force-resumed and becomes unpausable, so
+//! every admitted request finishes even under continuous high-priority
+//! arrivals (locked by `tests/preemption.rs`).
+//!
+//! Victim order follows the fairness axis: candidates are paused in
+//! descending per-tenant weighted outstanding prefill (the same
+//! weighted-share notion [`crate::tenant::FairQueue`] schedules by), so
+//! under multi-tenant serving the tenant holding the most weighted
+//! unfinished prefill yields first.
+
+use std::collections::BTreeMap;
+
+use crate::sched::policy::AdmissionPolicy;
+use crate::sched::state::EngineState;
+
+/// Default cumulative pause budget (unit boundaries a request may spend
+/// paused over its lifetime).
+pub const MAX_PAUSES: u32 = 4;
+
+/// Priority-preempting admission wrapper (Policy API v2
+/// `preemption=pause[:budget]`). Wraps ANY admission stage — including a
+/// [`FairQueue`](crate::tenant::FairQueue)-wrapped one; preemption
+/// composes OUTSIDE fairness so the inner reorder still sees the full
+/// waiting queue.
+pub struct PreemptingAdmission {
+    inner: Box<dyn AdmissionPolicy>,
+    max_pauses: u32,
+    /// Unit boundaries each request has spent paused (cumulative).
+    spent: BTreeMap<u64, u32>,
+}
+
+impl PreemptingAdmission {
+    pub fn new(inner: Box<dyn AdmissionPolicy>, max_pauses: u32) -> Self {
+        PreemptingAdmission {
+            inner,
+            max_pauses: max_pauses.max(1),
+            spent: BTreeMap::new(),
+        }
+    }
+
+    /// Fair-queueing weight of a tenant: the session registry's weight
+    /// (1 for untenanted requests and registry-less runs).
+    fn weight(state: &EngineState, tenant: u32) -> f64 {
+        match &state.tenants {
+            Some(acct) if tenant != 0 => acct.registry().spec(tenant).weight.max(1) as f64,
+            _ => 1.0,
+        }
+    }
+
+    /// Pause every in-flight prefill outranked by the highest waiting
+    /// priority, in descending per-tenant weighted-outstanding order.
+    fn pause_outranked(&mut self, state: &mut EngineState) {
+        let hi = state
+            .waiting
+            .iter()
+            .map(|id| state.reqs[id].req.priority)
+            .max()
+            .unwrap_or(0);
+        if hi == 0 {
+            return;
+        }
+        let victims: Vec<u64> = state
+            .prefilling
+            .iter()
+            .copied()
+            .filter(|id| {
+                let r = &state.reqs[id];
+                r.remaining_prefill() > 0
+                    && r.req.priority < hi
+                    && self.spent.get(id).copied().unwrap_or(0) < self.max_pauses
+            })
+            .collect();
+        if victims.is_empty() {
+            return;
+        }
+        // Per-tenant weighted outstanding prefill across the victim set —
+        // the FairQueue share notion, applied to who yields first.
+        let mut outstanding: BTreeMap<u32, f64> = BTreeMap::new();
+        for id in &victims {
+            let r = &state.reqs[id];
+            *outstanding.entry(r.req.tenant).or_insert(0.0) +=
+                r.remaining_prefill() as f64 / Self::weight(state, r.req.tenant);
+        }
+        let mut ordered = victims;
+        ordered.sort_by(|a, b| {
+            let ra = &state.reqs[a];
+            let rb = &state.reqs[b];
+            outstanding[&rb.req.tenant]
+                .total_cmp(&outstanding[&ra.req.tenant])
+                .then(rb.remaining_prefill().cmp(&ra.remaining_prefill()))
+                .then(a.cmp(b))
+        });
+        for id in ordered {
+            state.pause_prefill(id);
+        }
+    }
+
+    /// Resume paused requests that are no longer outranked, and charge one
+    /// boundary of pause budget to those that stay paused. A request whose
+    /// cumulative budget is exhausted is force-resumed (and, being at the
+    /// budget cap, can never be paused again).
+    fn resume_or_charge(&mut self, state: &mut EngineState) {
+        if state.paused.is_empty() {
+            return;
+        }
+        // A paused request is outranked while any strictly-higher-priority
+        // request is still waiting OR mid-prefill — checking only the
+        // waiting queue would resume victims in the same call that
+        // admitted the high-priority request, handing the slice budget
+        // right back.
+        let threat = state
+            .waiting
+            .iter()
+            .chain(
+                state
+                    .prefilling
+                    .iter()
+                    .filter(|id| state.reqs[id].remaining_prefill() > 0),
+            )
+            .map(|id| state.reqs[id].req.priority)
+            .max()
+            .unwrap_or(0);
+        // A pause is only justified while someone else uses the freed
+        // budget. If the inner policy placed nothing (e.g. the waiting
+        // threat is KV-blocked behind the victims' own retained blocks)
+        // and nothing decodes, holding the pause would idle the engine
+        // with unfinished work — it would report a bogus drain. Resume
+        // everyone; the threat re-pauses them at the next boundary once
+        // it actually runs.
+        let stalled = state.prefilling.is_empty() && state.decoding.is_empty();
+        for id in state.paused.clone() {
+            let spent = self.spent.entry(id).or_insert(0);
+            let exhausted = *spent >= self.max_pauses;
+            if exhausted || stalled || state.reqs[&id].req.priority >= threat {
+                state.resume_prefill(id);
+            } else {
+                *spent += 1;
+            }
+        }
+    }
+}
+
+impl AdmissionPolicy for PreemptingAdmission {
+    fn admit(&mut self, state: &mut EngineState) -> Vec<u64> {
+        self.pause_outranked(state);
+        let admitted = self.inner.admit(state);
+        self.resume_or_charge(state);
+        admitted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelDesc;
+    use crate::kvcache::KvCacheManager;
+    use crate::sched::policy::GreedyAdmission;
+    use crate::sched::Phase;
+    use crate::workload::Request;
+
+    fn state() -> EngineState {
+        EngineState::new(
+            ModelDesc::qwen3_30b_a3b(),
+            KvCacheManager::new(100_000, 16),
+            256,
+        )
+    }
+
+    fn req(id: u64, input: u32, priority: u8) -> Request {
+        Request {
+            id,
+            input_len: input,
+            output_len: 8,
+            priority,
+            ..Default::default()
+        }
+    }
+
+    fn preempting(max_pauses: u32) -> PreemptingAdmission {
+        PreemptingAdmission::new(Box::new(GreedyAdmission::new(256)), max_pauses)
+    }
+
+    #[test]
+    fn pauses_long_prefill_for_higher_priority_arrival() {
+        let mut s = state();
+        s.arrive(req(1, 20_000, 0));
+        let mut a = preempting(4);
+        assert_eq!(a.admit(&mut s), vec![1]);
+        s.reqs.get_mut(&1).unwrap().prefill_done = 512; // mid-prefill
+        s.arrive(req(2, 128, 1));
+        let admitted = a.admit(&mut s);
+        assert_eq!(admitted, vec![2]);
+        assert_eq!(s.paused, vec![1], "long prefill paused");
+        assert_eq!(s.prefilling, vec![2], "interactive request has the floor");
+        assert_eq!(s.reqs[&1].prefill_done, 512, "progress retained");
+    }
+
+    #[test]
+    fn resumes_once_threat_clears_without_recomputation() {
+        let mut s = state();
+        s.arrive(req(1, 20_000, 0));
+        let mut a = preempting(4);
+        a.admit(&mut s);
+        s.reqs.get_mut(&1).unwrap().prefill_done = 512;
+        s.arrive(req(2, 128, 1));
+        a.admit(&mut s);
+        // The interactive prefill completes and moves to decode.
+        {
+            let r = s.reqs.get_mut(&2).unwrap();
+            r.prefill_done = 128;
+            r.phase = Phase::Decoding;
+        }
+        s.prefilling.clear();
+        s.decoding.push(2);
+        a.admit(&mut s);
+        assert!(s.paused.is_empty());
+        assert_eq!(s.prefilling, vec![1]);
+        assert_eq!(s.reqs[&1].prefill_done, 512, "no token recomputed");
+    }
+
+    #[test]
+    fn equal_priority_never_preempts() {
+        let mut s = state();
+        s.arrive(req(1, 20_000, 1));
+        let mut a = preempting(4);
+        a.admit(&mut s);
+        s.arrive(req(2, 128, 1));
+        a.admit(&mut s);
+        assert!(s.paused.is_empty(), "same class: FCFS, no pause");
+    }
+
+    #[test]
+    fn pause_budget_bounds_time_paused_and_then_protects() {
+        let mut s = state();
+        s.arrive(req(1, 20_000, 0));
+        let mut a = preempting(2);
+        a.admit(&mut s);
+        s.reqs.get_mut(&1).unwrap().prefill_done = 100;
+        // Continuous high-priority arrivals: a long high-priority prefill
+        // is always in flight.
+        s.arrive(req(2, 30_000, 1));
+        a.admit(&mut s); // pause, spent -> 1
+        assert_eq!(s.paused, vec![1]);
+        a.admit(&mut s); // still outranked, spent -> 2
+        assert_eq!(s.paused, vec![1]);
+        a.admit(&mut s); // budget exhausted: force-resume
+        assert!(s.paused.is_empty());
+        assert_eq!(s.prefilling, vec![2, 1]);
+        // And it can never be paused again.
+        s.arrive(req(3, 30_000, 2));
+        a.admit(&mut s);
+        assert!(!s.paused.contains(&1), "exhausted budget is a shield");
+    }
+
+    #[test]
+    fn kv_blocked_threat_never_strands_the_engine() {
+        // The high-priority arrival cannot admit: the paused victim's
+        // RETAINED blocks leave too little KV. Holding the pause would
+        // leave zero runnable work (no prefilling, no decoding) and the
+        // engine would declare a bogus drain — the wrapper must resume
+        // the victim instead.
+        let mut s = EngineState::new(
+            ModelDesc::qwen3_30b_a3b(),
+            KvCacheManager::new(10, 16), // 10 blocks of 16 tokens
+            256,
+        );
+        s.arrive(req(1, 100, 0)); // 108-token footprint = 7 blocks
+        let mut a = preempting(4);
+        assert_eq!(a.admit(&mut s), vec![1]);
+        s.arrive(req(2, 100, 1)); // needs 7 blocks, only 3 free
+        let admitted = a.admit(&mut s);
+        assert!(admitted.is_empty(), "threat is KV-blocked");
+        assert!(s.paused.is_empty(), "stall resumes the victim");
+        assert_eq!(s.prefilling, vec![1], "victim keeps running");
+        assert_eq!(s.waiting, vec![2], "threat retries next boundary");
+    }
+
+    #[test]
+    fn victims_yield_in_weighted_outstanding_order() {
+        let mut s = state();
+        s.tenants = Some(crate::tenant::TenantAccounting::new(
+            crate::tenant::TenantRegistry::with_defaults(2),
+        ));
+        let mut a = preempting(4);
+        let mut r1 = req(1, 10_000, 0);
+        r1.tenant = 1;
+        let mut r2 = req(2, 4_000, 0);
+        r2.tenant = 2;
+        s.arrive(r1);
+        s.arrive(r2);
+        a.admit(&mut s);
+        assert_eq!(s.prefilling, vec![1, 2]);
+        s.arrive(req(3, 64, 1));
+        a.admit(&mut s);
+        // Tenant 1 holds 10k weighted outstanding vs tenant 2's 4k: it
+        // yields first (pause order = Paused event order).
+        let paused_order: Vec<u64> = s
+            .admissions
+            .iter()
+            .filter_map(|adm| match adm {
+                crate::sched::state::Admission::Paused { id, .. } => Some(*id),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(paused_order, vec![1, 2]);
+    }
+}

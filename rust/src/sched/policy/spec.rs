@@ -19,7 +19,13 @@
 //!   `target=512,bias=1.25,max-batch=256` — the signal-driven policy;
 //! * compact pipelines — `admission=cohort:512,shaper=chunks:512,`
 //!   `composer=groups:512` (omitted stages default to the chunked
-//!   baseline's stage), optionally `name=my-spec`;
+//!   baseline's stage), optionally `name=my-spec`; the admission axis
+//!   also accepts the size-aware `srpf[:max]` / `srpt[:max]` forms, and
+//!   two orthogonal wrappers compose around any admission stage:
+//!   `fairness=vtfq[,weights=1:4+2:1]` (cross-tenant virtual-time fair
+//!   queueing) and `preemption=pause[:budget]` (priority preemption —
+//!   pause outranked in-flight prefills for at most `budget` unit
+//!   boundaries each; `preemption=none` is the default);
 //! * JSON — `{"admission":{"kind":"fcfs","max_batch":256},`
 //!   `"shaper":{"kind":"chunks","chunk":512},`
 //!   `"composer":{"kind":"interleave"}}`, or `{"kind":"adaptive",...}`;
@@ -29,7 +35,8 @@ use crate::config::{Policy, SchedulerConfig};
 use crate::sched::policy::adaptive::AdaptiveScheduler;
 use crate::sched::policy::stages::{
     BatchAdmission, CohortAdmission, CohortShaper, FullPromptShaper, GreedyAdmission,
-    InterleaveComposer, LayerGroupComposer, SoloAdmission, SoloChunkShaper, TokenChunkShaper,
+    InterleaveComposer, LayerGroupComposer, SizedAdmission, SoloAdmission, SoloChunkShaper,
+    TokenChunkShaper,
 };
 use crate::sched::policy::{AdmissionPolicy, BatchComposer, PipelineScheduler, PrefillShaper};
 use crate::sched::Scheduler;
@@ -66,6 +73,13 @@ pub enum AdmissionSpec {
     /// One request at a time; the next admits only when no admitted
     /// request has prefill remaining (hybrid, §4.3).
     Solo { max_batch: usize },
+    /// Shortest-remaining-prefill-first: the waiting queue is reordered by
+    /// (priority desc, remaining prefill asc, FCFS) before greedy
+    /// admission.
+    Srpf { max_batch: usize },
+    /// SRPT: like [`AdmissionSpec::Srpf`] but the size key adds the
+    /// declared output length (shortest remaining processing time).
+    Srpt { max_batch: usize },
 }
 
 /// Stage 2 spec: how remaining prefill is sliced into units.
@@ -104,6 +118,23 @@ pub enum FairnessSpec {
     /// weights (`(tenant, weight)` pairs); tenants absent here fall back
     /// to the session's [`crate::tenant::TenantRegistry`], then 1.
     Vtfq { weights: Vec<(u32, u32)> },
+}
+
+/// Priority-preemption wrapper applied around the admission stage —
+/// outermost, outside any fairness wrapper — so it composes with every
+/// admission/shaper/composer triple (and with `fairness=vtfq`) unchanged.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum PreemptionSpec {
+    /// No preemption: admitted prefills run to completion (the default —
+    /// feature-off pipelines behave byte-identically to pre-preemption
+    /// builds).
+    #[default]
+    None,
+    /// Pause in-flight prefills outranked by a strictly-higher-priority
+    /// waiting request ([`crate::sched::policy::preempt::PreemptingAdmission`]).
+    /// `max_pauses` bounds the unit boundaries a request may spend paused
+    /// over its lifetime (min 1), guaranteeing no starvation.
+    Pause { max_pauses: u32 },
 }
 
 /// Knobs for the signal-driven adaptive policy (see
@@ -162,6 +193,9 @@ pub enum PolicySpec {
         composer: ComposerSpec,
         /// Cross-tenant fairness wrapper around the admission stage.
         fairness: FairnessSpec,
+        /// Priority-preemption wrapper around the admission stage
+        /// (outermost; composes with fairness).
+        preemption: PreemptionSpec,
     },
     Adaptive(AdaptiveSpec),
 }
@@ -230,24 +264,26 @@ impl PolicySpec {
             shaper,
             composer,
             fairness: FairnessSpec::None,
+            preemption: PreemptionSpec::None,
         }
     }
 
     /// The preset this composition IS, if any (component-wise equality
-    /// with [`PolicySpec::preset`], names ignored). A fairness wrapper
-    /// disqualifies: presets are fairness-free.
+    /// with [`PolicySpec::preset`], names ignored). A fairness or
+    /// preemption wrapper disqualifies: presets carry neither.
     pub fn matches_preset(&self) -> Option<Policy> {
         let PolicySpec::Pipeline {
             admission,
             shaper,
             composer,
             fairness,
+            preemption,
             ..
         } = self
         else {
             return None;
         };
-        if *fairness != FairnessSpec::None {
+        if *fairness != FairnessSpec::None || *preemption != PreemptionSpec::None {
             return None;
         }
         for p in Policy::ALL {
@@ -298,6 +334,7 @@ impl PolicySpec {
                 shaper,
                 composer,
                 fairness,
+                preemption,
                 ..
             } => match self.matches_preset() {
                 Some(p) => p.name().to_string(),
@@ -306,8 +343,12 @@ impl PolicySpec {
                         FairnessSpec::None => "",
                         FairnessSpec::Vtfq { .. } => "+vtfq",
                     };
+                    let preempt = match preemption {
+                        PreemptionSpec::None => "",
+                        PreemptionSpec::Pause { .. } => "+preempt",
+                    };
                     format!(
-                        "pipeline({}+{}+{}){vtfq}",
+                        "pipeline({}+{}+{}){vtfq}{preempt}",
                         admission_label(admission),
                         shaper_label(shaper),
                         composer_label(composer)
@@ -326,6 +367,7 @@ impl PolicySpec {
                 shaper,
                 composer,
                 fairness,
+                preemption,
                 ..
             } => {
                 let admission: Box<dyn AdmissionPolicy> = match *admission {
@@ -337,6 +379,8 @@ impl PolicySpec {
                         merge_target,
                     } => Box::new(CohortAdmission::new(max_batch, merge, merge_target)),
                     AdmissionSpec::Solo { max_batch } => Box::new(SoloAdmission::new(max_batch)),
+                    AdmissionSpec::Srpf { max_batch } => Box::new(SizedAdmission::srpf(max_batch)),
+                    AdmissionSpec::Srpt { max_batch } => Box::new(SizedAdmission::srpt(max_batch)),
                 };
                 // The fairness wrapper composes around ANY admission
                 // stage — vtfq reorders waiting, the inner policy admits.
@@ -345,6 +389,16 @@ impl PolicySpec {
                     FairnessSpec::Vtfq { weights } => {
                         Box::new(crate::tenant::FairQueue::new(admission, weights.clone()))
                     }
+                };
+                // Preemption wraps OUTERMOST: it pauses/resumes around
+                // whatever the (possibly fairness-wrapped) stage admits.
+                let admission: Box<dyn AdmissionPolicy> = match *preemption {
+                    PreemptionSpec::None => admission,
+                    PreemptionSpec::Pause { max_pauses } => Box::new(
+                        crate::sched::policy::preempt::PreemptingAdmission::new(
+                            admission, max_pauses,
+                        ),
+                    ),
                 };
                 let shaper: Box<dyn PrefillShaper> = match *shaper {
                     ShaperSpec::TokenChunks { chunk } => Box::new(TokenChunkShaper::new(chunk)),
@@ -387,7 +441,9 @@ impl PolicySpec {
             } => {
                 match *admission {
                     AdmissionSpec::Fcfs { max_batch }
-                    | AdmissionSpec::Solo { max_batch } => cfg.max_batch = max_batch,
+                    | AdmissionSpec::Solo { max_batch }
+                    | AdmissionSpec::Srpf { max_batch }
+                    | AdmissionSpec::Srpt { max_batch } => cfg.max_batch = max_batch,
                     AdmissionSpec::Batch { batch_size } => cfg.static_batch = batch_size,
                     AdmissionSpec::Cohort {
                         max_batch,
@@ -490,12 +546,17 @@ impl PolicySpec {
             Some(f) => fairness_from_json(f)?,
             None => FairnessSpec::None,
         };
+        let preemption = match j.get("preemption") {
+            Some(p) => preemption_from_json(p)?,
+            None => PreemptionSpec::None,
+        };
         Ok(PolicySpec::Pipeline {
             name: j.get("name").and_then(Json::as_str).map(str::to_string),
             admission,
             shaper,
             composer,
             fairness,
+            preemption,
         })
     }
 
@@ -519,6 +580,7 @@ impl PolicySpec {
                 shaper,
                 composer,
                 fairness,
+                preemption,
             } => {
                 m.insert("kind".into(), Json::Str("pipeline".into()));
                 if let Some(n) = name {
@@ -531,6 +593,10 @@ impl PolicySpec {
                 // with pre-tenant builds.
                 if let Some(f) = fairness_to_json(fairness) {
                     m.insert("fairness".into(), f);
+                }
+                // Same omitted-when-None rule for the preemption wrapper.
+                if let Some(p) = preemption_to_json(preemption) {
+                    m.insert("preemption".into(), p);
                 }
             }
         }
@@ -554,6 +620,8 @@ fn admission_label(a: &AdmissionSpec) -> String {
             }
         }
         AdmissionSpec::Solo { .. } => "solo".to_string(),
+        AdmissionSpec::Srpf { .. } => "srpf".to_string(),
+        AdmissionSpec::Srpt { .. } => "srpt".to_string(),
     }
 }
 
@@ -608,7 +676,8 @@ fn parse_admission(v: &str) -> Result<AdmissionSpec, String> {
     if parts.next().is_some() {
         return Err(format!(
             "bad admission '{v}' (too many ':' segments; want \
-             fcfs[:max] | batch[:size] | cohort[:target][:nomerge] | solo[:max])"
+             fcfs[:max] | batch[:size] | cohort[:target][:nomerge] | solo[:max] | \
+             srpf[:max] | srpt[:max])"
         ));
     }
     if head != "cohort" && arg2.is_some() {
@@ -652,9 +721,56 @@ fn parse_admission(v: &str) -> Result<AdmissionSpec, String> {
                 None => MAX_BATCH,
             },
         }),
+        "srpf" => Ok(AdmissionSpec::Srpf {
+            max_batch: match arg1 {
+                Some(a) => parse_cap(a, "srpf max_batch")?,
+                None => MAX_BATCH,
+            },
+        }),
+        "srpt" => Ok(AdmissionSpec::Srpt {
+            max_batch: match arg1 {
+                Some(a) => parse_cap(a, "srpt max_batch")?,
+                None => MAX_BATCH,
+            },
+        }),
         other => Err(format!(
             "unknown admission '{other}' (valid: fcfs[:max] | batch[:size] | \
-             cohort[:target][:nomerge] | solo[:max])"
+             cohort[:target][:nomerge] | solo[:max] | srpf[:max] | srpt[:max])"
+        )),
+    }
+}
+
+/// `preemption=pause[:budget]`-style values (`none` = off). The budget is
+/// the max unit boundaries a request may spend paused (min 1).
+fn parse_preemption(v: &str) -> Result<PreemptionSpec, String> {
+    let (head, arg) = match v.split_once(':') {
+        Some((h, a)) => (h, Some(a)),
+        None => (v, None),
+    };
+    match head {
+        "none" => {
+            if arg.is_some() {
+                return Err(format!("bad preemption '{v}' ('none' takes no argument)"));
+            }
+            Ok(PreemptionSpec::None)
+        }
+        "pause" => Ok(PreemptionSpec::Pause {
+            max_pauses: match arg {
+                Some(a) => {
+                    let n: u32 = parse_num(a, "pause budget")?;
+                    if n == 0 {
+                        return Err(format!(
+                            "bad pause budget '{a}' (must be >= 1; use preemption=none to \
+                             disable)"
+                        ));
+                    }
+                    n
+                }
+                None => crate::sched::policy::preempt::MAX_PAUSES,
+            },
+        }),
+        other => Err(format!(
+            "unknown preemption '{other}' (valid: pause[:budget] | none)"
         )),
     }
 }
@@ -716,6 +832,7 @@ fn parse_compact(s: &str) -> Result<PolicySpec, String> {
     let mut composer = ComposerSpec::Interleave;
     let mut fairness_on: Option<bool> = None;
     let mut weights: Vec<(u32, u32)> = Vec::new();
+    let mut preemption = PreemptionSpec::None;
     for part in s.split(',') {
         let part = part.trim();
         if part.is_empty() {
@@ -724,13 +841,14 @@ fn parse_compact(s: &str) -> Result<PolicySpec, String> {
         let Some((k, v)) = part.split_once('=') else {
             return Err(format!(
                 "bad pipeline element '{part}' (want key=value with key in \
-                 admission | shaper | composer | fairness | weights | name)"
+                 admission | shaper | composer | fairness | weights | preemption | name)"
             ));
         };
         match k.trim().to_ascii_lowercase().as_str() {
             "admission" => admission = parse_admission(&v.trim().to_ascii_lowercase())?,
             "shaper" => shaper = parse_shaper(&v.trim().to_ascii_lowercase())?,
             "composer" => composer = parse_composer(&v.trim().to_ascii_lowercase())?,
+            "preemption" => preemption = parse_preemption(&v.trim().to_ascii_lowercase())?,
             "fairness" => {
                 fairness_on = Some(match v.trim().to_ascii_lowercase().as_str() {
                     "vtfq" => true,
@@ -746,7 +864,7 @@ fn parse_compact(s: &str) -> Result<PolicySpec, String> {
             other => {
                 return Err(format!(
                     "unknown pipeline key '{other}' (valid: admission | shaper | composer | \
-                     fairness | weights | name)"
+                     fairness | weights | preemption | name)"
                 ))
             }
         }
@@ -769,6 +887,7 @@ fn parse_compact(s: &str) -> Result<PolicySpec, String> {
         shaper,
         composer,
         fairness,
+        preemption,
     })
 }
 
@@ -866,9 +985,39 @@ fn admission_from_json(j: &Json) -> Result<AdmissionSpec, String> {
             merge_target: json_tokens(j, "target", GROUP_TOKEN_TARGET)?,
         }),
         "solo" => Ok(AdmissionSpec::Solo { max_batch }),
+        "srpf" => Ok(AdmissionSpec::Srpf { max_batch }),
+        "srpt" => Ok(AdmissionSpec::Srpt { max_batch }),
         other => Err(format!(
-            "unknown admission kind '{other}' (valid: fcfs | batch | cohort | solo)"
+            "unknown admission kind '{other}' (valid: fcfs | batch | cohort | solo | srpf | srpt)"
         )),
+    }
+}
+
+fn preemption_from_json(j: &Json) -> Result<PreemptionSpec, String> {
+    match req_kind(j, "preemption")? {
+        "none" => Ok(PreemptionSpec::None),
+        "pause" => Ok(PreemptionSpec::Pause {
+            max_pauses: json_cap(j, "max_pauses", crate::sched::policy::preempt::MAX_PAUSES as usize)?
+                as u32,
+        }),
+        other => Err(format!(
+            "unknown preemption kind '{other}' (valid: pause | none)"
+        )),
+    }
+}
+
+/// `None` for [`PreemptionSpec::None`]: like fairness, the field is
+/// omitted so preemption-free specs serialize byte-identically to
+/// pre-preemption builds.
+fn preemption_to_json(p: &PreemptionSpec) -> Option<Json> {
+    match *p {
+        PreemptionSpec::None => None,
+        PreemptionSpec::Pause { max_pauses } => {
+            let mut m = BTreeMap::new();
+            m.insert("kind".into(), Json::Str("pause".into()));
+            m.insert("max_pauses".into(), Json::Num(max_pauses as f64));
+            Some(Json::Obj(m))
+        }
     }
 }
 
@@ -983,6 +1132,14 @@ fn admission_to_json(a: &AdmissionSpec) -> Json {
             m.insert("kind".into(), Json::Str("solo".into()));
             m.insert("max_batch".into(), Json::Num(max_batch as f64));
         }
+        AdmissionSpec::Srpf { max_batch } => {
+            m.insert("kind".into(), Json::Str("srpf".into()));
+            m.insert("max_batch".into(), Json::Num(max_batch as f64));
+        }
+        AdmissionSpec::Srpt { max_batch } => {
+            m.insert("kind".into(), Json::Str("srpt".into()));
+            m.insert("max_batch".into(), Json::Num(max_batch as f64));
+        }
     }
     Json::Obj(m)
 }
@@ -1082,11 +1239,13 @@ mod tests {
             composer,
             name,
             fairness,
+            preemption,
         } = spec
         else {
             panic!("expected pipeline");
         };
         assert_eq!(fairness, FairnessSpec::None);
+        assert_eq!(preemption, PreemptionSpec::None);
         assert_eq!(
             admission,
             AdmissionSpec::Cohort {
@@ -1170,6 +1329,7 @@ mod tests {
                 shaper: ShaperSpec::SoloChunk { chunk: 2048 },
                 composer: ComposerSpec::LayerGroups { target: 256 },
                 fairness: FairnessSpec::None,
+                preemption: PreemptionSpec::None,
             },
             PolicySpec::Pipeline {
                 name: None,
@@ -1183,6 +1343,15 @@ mod tests {
                 fairness: FairnessSpec::Vtfq {
                     weights: vec![(1, 4), (2, 1)],
                 },
+                preemption: PreemptionSpec::None,
+            },
+            PolicySpec::Pipeline {
+                name: None,
+                admission: AdmissionSpec::Srpt { max_batch: 64 },
+                shaper: ShaperSpec::CohortUnit,
+                composer: ComposerSpec::LayerGroups { target: 512 },
+                fairness: FairnessSpec::Vtfq { weights: vec![] },
+                preemption: PreemptionSpec::Pause { max_pauses: 2 },
             },
         ];
         for spec in specs {
@@ -1234,6 +1403,62 @@ mod tests {
             .unwrap();
         assert_eq!(layered.nearest_policy(), Policy::Layered);
         layered.build(32); // compiles into a scheduler without panicking
+    }
+
+    #[test]
+    fn preemption_and_sized_admission_parse_compose_and_roundtrip() {
+        // Compact form: srpf admission + pause preemption with a budget.
+        let spec = PolicySpec::parse("admission=srpf,preemption=pause:2").unwrap();
+        let PolicySpec::Pipeline {
+            ref admission,
+            ref preemption,
+            ..
+        } = spec
+        else {
+            panic!("expected pipeline");
+        };
+        assert_eq!(*admission, AdmissionSpec::Srpf { max_batch: MAX_BATCH });
+        assert_eq!(*preemption, PreemptionSpec::Pause { max_pauses: 2 });
+        // A preempting wrapper is never a preset; the label carries the
+        // +preempt tag and the srpf admission head.
+        assert_eq!(spec.matches_preset(), None);
+        assert!(spec.name().contains("srpf"), "{}", spec.name());
+        assert!(spec.name().ends_with("+preempt"), "{}", spec.name());
+        // JSON round-trip keeps admission kind and pause budget.
+        let back = PolicySpec::parse(&spec.to_json().to_string()).unwrap();
+        assert_eq!(back, spec);
+        // Bare pause takes the default budget; srpt parses with a cap.
+        let bare = PolicySpec::parse("preemption=pause").unwrap();
+        let PolicySpec::Pipeline { ref preemption, .. } = bare else {
+            panic!("expected pipeline");
+        };
+        assert_eq!(
+            *preemption,
+            PreemptionSpec::Pause {
+                max_pauses: crate::sched::policy::preempt::MAX_PAUSES
+            }
+        );
+        let srpt = PolicySpec::parse("admission=srpt:32").unwrap();
+        let PolicySpec::Pipeline { ref admission, .. } = srpt else {
+            panic!("expected pipeline");
+        };
+        assert_eq!(*admission, AdmissionSpec::Srpt { max_batch: 32 });
+        // Invalid forms: zero budget, argument on none, unknown kind.
+        assert!(PolicySpec::parse("preemption=pause:0").is_err());
+        assert!(PolicySpec::parse("preemption=none:3").is_err());
+        assert!(PolicySpec::parse("preemption=bogus").is_err());
+        // Presets stay presets — feature-off parse output is unchanged.
+        assert_eq!(
+            PolicySpec::parse("layered").unwrap().matches_preset(),
+            Some(Policy::Layered)
+        );
+        // Preemption composes with fairness and the layer-axis composer.
+        let full = PolicySpec::parse(
+            "admission=srpt,shaper=cohort,composer=groups,fairness=vtfq,preemption=pause",
+        )
+        .unwrap();
+        assert_eq!(full.nearest_policy(), Policy::Layered);
+        full.build(32); // compiles into a scheduler without panicking
     }
 
     #[test]

@@ -46,6 +46,84 @@ impl AdmissionPolicy for GreedyAdmission {
     }
 }
 
+/// Size-aware admission (`admission=srpf` / `admission=srpt`): the waiting
+/// queue is stably reordered by `(priority desc, size asc, FCFS position)`
+/// before greedy head-of-queue admission — shortest-remaining-prefill-first
+/// when `include_output` is false, SRPT (remaining prefill + declared
+/// output) when true. Higher priority classes always order first, so an
+/// interactive arrival jumps every baseline-class prompt regardless of
+/// size. Like [`GreedyAdmission`], the first refusal stops the round (no
+/// KV-exhaustion bypass).
+#[derive(Debug)]
+pub struct SizedAdmission {
+    max_batch: usize,
+    include_output: bool,
+}
+
+impl SizedAdmission {
+    /// Shortest-remaining-prefill-first.
+    pub fn srpf(max_batch: usize) -> Self {
+        SizedAdmission {
+            max_batch,
+            include_output: false,
+        }
+    }
+
+    /// Shortest-remaining-processing-time: remaining prefill + declared
+    /// output length.
+    pub fn srpt(max_batch: usize) -> Self {
+        SizedAdmission {
+            max_batch,
+            include_output: true,
+        }
+    }
+
+    fn size_key(&self, state: &EngineState, id: u64) -> u64 {
+        let r = &state.reqs[&id];
+        let mut k = r.remaining_prefill() as u64;
+        if self.include_output {
+            k += r.req.output_len as u64;
+        }
+        k
+    }
+}
+
+impl AdmissionPolicy for SizedAdmission {
+    fn admit(&mut self, state: &mut EngineState) -> Vec<u64> {
+        if state.waiting.len() > 1 {
+            let mut keyed: Vec<(std::cmp::Reverse<u8>, u64, usize, u64)> = state
+                .waiting
+                .iter()
+                .enumerate()
+                .map(|(pos, &id)| {
+                    (
+                        std::cmp::Reverse(state.reqs[&id].req.priority),
+                        self.size_key(state, id),
+                        pos,
+                        id,
+                    )
+                })
+                .collect();
+            keyed.sort();
+            for (slot, k) in keyed.into_iter().enumerate() {
+                state.waiting[slot] = k.3;
+            }
+        }
+        let mut out = Vec::new();
+        while let Some(&head) = state.waiting.first() {
+            let active = state.prefilling.len() + state.decoding.len();
+            if active >= state.max_batch.min(self.max_batch) {
+                break;
+            }
+            if !state.admit(head) {
+                break;
+            }
+            out.push(head);
+        }
+        out
+    }
+}
+
 /// Fixed-batch run-to-completion admission (static batching): a new batch
 /// of up to `batch_size` requests forms only once EVERY member of the
 /// previous batch has finished.
@@ -299,6 +377,25 @@ impl PrefillShaper for CohortShaper {
         let mut slices = Vec::new();
         let mut total: u32 = 0;
         for &id in admitted {
+            let r = &state.reqs[&id];
+            let remaining = r.remaining_prefill();
+            slices.push(PrefillWork {
+                req: id,
+                tokens: remaining,
+                pos: r.prefill_done,
+                completes: true,
+            });
+            total = total.saturating_add(remaining);
+        }
+        // Straggler sweep: a RESUMED (previously preempted) prefill sits in
+        // `state.prefilling` without being in this round's cohort; fold its
+        // remaining work into the unit so no composition strands it.
+        // Without preemption this matches nothing — a cohort's members
+        // always finish their prefill with their own unit.
+        for &id in &state.prefilling {
+            if admitted.contains(&id) {
+                continue;
+            }
             let r = &state.reqs[&id];
             let remaining = r.remaining_prefill();
             slices.push(PrefillWork {

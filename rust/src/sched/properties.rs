@@ -25,7 +25,8 @@ use std::collections::BTreeMap;
 use crate::config::{ModelDesc, Policy, SchedulerConfig};
 use crate::kvcache::KvCacheManager;
 use crate::sched::policy::{
-    AdaptiveSpec, AdmissionSpec, ComposerSpec, FairnessSpec, PolicySpec, ShaperSpec,
+    AdaptiveSpec, AdmissionSpec, ComposerSpec, FairnessSpec, PolicySpec, PreemptionSpec,
+    ShaperSpec,
 };
 use crate::sched::{self, EngineState, Phase};
 use crate::util::proptest::{check, Gen, PropResult};
@@ -54,6 +55,9 @@ fn random_requests(g: &mut Gen) -> Vec<(u64, Request, usize)> {
                 // slices), not strand in Prefilling.
                 input_len: g.usize(0, 16_000) as u32,
                 output_len: g.usize(1, 12) as u32,
+                // Priority classes (inert without a preemption stage): mixed
+                // classes exercise pause/resume under preempting pipelines.
+                priority: g.usize(0, 2) as u8,
                 ..Default::default()
             };
             (id, r, g.usize(0, 25))
@@ -66,7 +70,7 @@ fn random_requests(g: &mut Gen) -> Vec<(u64, Request, usize)> {
 /// sweep the whole prefilling set; the solo shaper sweeps zero-remaining
 /// leftovers), so I1–I4 must hold for all of them.
 fn random_pipeline(g: &mut Gen) -> PolicySpec {
-    let admission = match g.usize(0, 3) {
+    let admission = match g.usize(0, 5) {
         0 => AdmissionSpec::Fcfs { max_batch: 64 },
         1 => AdmissionSpec::Batch {
             batch_size: g.usize(1, 8),
@@ -76,6 +80,8 @@ fn random_pipeline(g: &mut Gen) -> PolicySpec {
             merge: g.bool(),
             merge_target: 512,
         },
+        3 => AdmissionSpec::Srpf { max_batch: 64 },
+        4 => AdmissionSpec::Srpt { max_batch: 64 },
         _ => AdmissionSpec::Solo { max_batch: 64 },
     };
     let shaper = match g.usize(0, 3) {
@@ -95,12 +101,22 @@ fn random_pipeline(g: &mut Gen) -> PolicySpec {
             target: *g.pick(&[128u32, 512]),
         }
     };
+    // Preemption composes over any admission: pause/resume must preserve
+    // I1–I4 and conservation for every stage combination.
+    let preemption = if g.bool() {
+        PreemptionSpec::Pause {
+            max_pauses: g.usize(1, 4) as u32,
+        }
+    } else {
+        PreemptionSpec::None
+    };
     PolicySpec::Pipeline {
         name: None,
         admission,
         shaper,
         composer,
         fairness: FairnessSpec::None,
+        preemption,
     }
 }
 

@@ -14,6 +14,10 @@ use crate::workload::Request;
 pub enum Phase {
     Waiting,
     Prefilling,
+    /// Admitted prefill paused by a preemption policy: KV stays reserved
+    /// and `prefill_done` / `token_layers_done` are preserved; the request
+    /// consumes no slice budget until resumed.
+    Paused,
     Decoding,
     Finished,
 }
@@ -91,6 +95,13 @@ pub enum Admission {
         free: u32,
         reason: RejectReason,
     },
+    /// A preemption policy paused an in-flight prefill
+    /// ([`EngineState::pause_prefill`]): KV retained, progress preserved
+    /// at `token_layers_done` token·layer units.
+    Paused { id: u64, token_layers_done: u64 },
+    /// A paused prefill re-entered the prefilling set
+    /// ([`EngineState::resume_prefill`]).
+    Resumed { id: u64 },
 }
 
 /// Multiply-shift hasher for request ids — ids are already well-spread
@@ -210,6 +221,11 @@ pub struct EngineState {
     pub waiting: Vec<u64>,
     /// Admitted, prefill in progress.
     pub prefilling: Vec<u64>,
+    /// Admitted prefills paused by a preemption policy (KV retained,
+    /// progress preserved; see [`EngineState::pause_prefill`]). Always
+    /// empty when no preemption policy is active — feature-off paths
+    /// never observe it.
+    pub paused: Vec<u64>,
     /// Prefill complete, generating.
     pub decoding: Vec<u64>,
     pub reqs: ReqTable,
@@ -232,6 +248,7 @@ impl EngineState {
             now_s: 0.0,
             waiting: Vec::new(),
             prefilling: Vec::new(),
+            paused: Vec::new(),
             decoding: Vec::new(),
             reqs: ReqTable::new(),
             kv,
@@ -265,7 +282,7 @@ impl EngineState {
         let Some(pos) = self.waiting.iter().position(|&w| w == id) else {
             return false;
         };
-        let (footprint, hashes, prior_done, tenant, input_len) = {
+        let (footprint, hashes, prior_done, tenant) = {
             let r = &self.reqs[&id];
             let fp = r.req.input_len.saturating_add(r.req.output_len);
             let hashes = if self.kv.prefix_cache_enabled() && r.prefill_done == 0 {
@@ -273,24 +290,31 @@ impl EngineState {
             } else {
                 Vec::new()
             };
-            (fp, hashes, r.prefill_done, r.req.tenant, r.req.input_len)
+            (fp, hashes, r.prefill_done, r.req.tenant)
         };
         let gross_blocks = self.kv.blocks_for(footprint);
         // Tenant budgets gate admission BEFORE any KV registration, so a
         // tenant-refused request touches no pool state (peek → register →
-        // commit; see `tenant::TenantAccounting`).
-        if tenant != 0 {
-            if let Some(acct) = &self.tenants {
-                if let Err(reason) = acct.peek(tenant, gross_blocks, input_len, self.now_s) {
-                    let (_, avail) = self.kv.admission_outlook(footprint, &hashes);
-                    self.admissions.push(Admission::KvRejected {
-                        id,
-                        demand: gross_blocks,
-                        free: avail,
-                        reason,
-                    });
-                    return false;
-                }
+        // commit; see `tenant::TenantAccounting`). Peek and commit both
+        // use [`EngineState::admission_cost`] — the SAME prefix-credit-
+        // aware cost the fair queue's eligibility peek reads — so the
+        // sort order and the ledger can never disagree.
+        let tenant_cost = if tenant != 0 && self.tenants.is_some() {
+            Some(self.admission_cost(id))
+        } else {
+            None
+        };
+        if let Some((cost_blocks, cost_tokens)) = tenant_cost {
+            let acct = self.tenants.as_ref().unwrap();
+            if let Err(reason) = acct.peek(tenant, cost_blocks, cost_tokens, self.now_s) {
+                let (_, avail) = self.kv.admission_outlook(footprint, &hashes);
+                self.admissions.push(Admission::KvRejected {
+                    id,
+                    demand: gross_blocks,
+                    free: avail,
+                    reason,
+                });
+                return false;
             }
         }
         // Single admission walk: register directly and report on failure
@@ -308,10 +332,9 @@ impl EngineState {
                 return false;
             }
         };
-        if tenant != 0 {
-            if let Some(acct) = self.tenants.as_mut() {
-                acct.commit(id, tenant, gross_blocks, input_len, self.now_s);
-            }
+        if let Some((cost_blocks, cost_tokens)) = tenant_cost {
+            let acct = self.tenants.as_mut().unwrap();
+            acct.commit(id, tenant, cost_blocks, cost_tokens, self.now_s);
         }
         let cached_tokens = cached_blocks.saturating_mul(self.kv.block_size);
         self.waiting.remove(pos);
@@ -330,6 +353,83 @@ impl EngineState {
             id,
             cached_tokens: if prior_done == 0 { r.prefill_done } else { 0 },
         });
+        true
+    }
+
+    /// The prefix-credit-aware admission cost of request `id`, as
+    /// `(blocks, prefill_tokens)`: the KV blocks the pool must newly
+    /// allocate for its footprint (gross blocks minus expected
+    /// prefix-cache hits) and the prompt tokens that will actually be
+    /// computed here (declared length minus expected cached credit, or
+    /// the preserved remainder for a migrated request). This is the ONE
+    /// cost function behind every tenant-budget decision — the admission
+    /// gate's peek AND commit ([`EngineState::admit`]), the fair queue's
+    /// eligibility peek ([`crate::tenant::FairQueue`]), and the
+    /// rate-refusal wake-up scan ([`EngineState::next_tenant_ready`]) —
+    /// so a warm-prefix request can never sort as ineligible yet admit
+    /// fine, or vice versa. Pure: reads the prefix cache via
+    /// [`KvCacheManager::lookup_prefix`], registers nothing.
+    pub fn admission_cost(&self, id: u64) -> (u32, u32) {
+        let r = &self.reqs[&id];
+        let footprint = r.req.input_len.saturating_add(r.req.output_len);
+        let gross = self.kv.blocks_for(footprint);
+        if self.kv.prefix_cache_enabled() && r.prefill_done == 0 {
+            let hashes = crate::kvcache::shared_block_hashes(&r.req, self.kv.block_size);
+            let hits = self.kv.lookup_prefix(&hashes);
+            // Credit caps one token short of the prompt — the same rule
+            // `admit` applies when seeding `prefill_done`.
+            let credit = hits
+                .saturating_mul(self.kv.block_size)
+                .min(r.req.input_len.saturating_sub(1));
+            (gross.saturating_sub(hits), r.req.input_len - credit)
+        } else {
+            // No cache (or preserved migration progress): charge the
+            // remaining uncached prefill against the full reservation.
+            (gross, r.remaining_prefill())
+        }
+    }
+
+    /// Pause an in-flight prefill (preemption): the request leaves
+    /// `prefilling` — so shapers stop slicing it and its budget frees up
+    /// from the next unit on — but keeps its KV reservation, its tenant
+    /// charge, and every unit of progress (`prefill_done`,
+    /// `token_layers_done`), so nothing is ever recomputed on resume.
+    /// Callers must only pause at unit boundaries (inside
+    /// [`AdmissionPolicy::admit`](crate::sched::policy::AdmissionPolicy),
+    /// which the pipeline invokes only between units), so a layer-axis
+    /// unit's G-iteration streak (I4) is never interrupted. No-op unless
+    /// the request is currently prefilling with work remaining.
+    pub fn pause_prefill(&mut self, id: u64) -> bool {
+        let Some(pos) = self.prefilling.iter().position(|&p| p == id) else {
+            return false;
+        };
+        let r = self.reqs.get_mut(&id).unwrap();
+        if r.remaining_prefill() == 0 {
+            return false;
+        }
+        r.phase = Phase::Paused;
+        let token_layers_done = r.token_layers_done;
+        self.prefilling.remove(pos);
+        self.paused.push(id);
+        self.admissions.push(Admission::Paused {
+            id,
+            token_layers_done,
+        });
+        true
+    }
+
+    /// Resume a paused prefill: it rejoins `prefilling` (at the back, so
+    /// already-running prefills keep their slice order) with its preserved
+    /// progress — the next unit slices exactly `remaining_prefill()`
+    /// tokens, never recomputing a token·layer unit (I2 conservation).
+    pub fn resume_prefill(&mut self, id: u64) -> bool {
+        let Some(pos) = self.paused.iter().position(|&p| p == id) else {
+            return false;
+        };
+        self.paused.remove(pos);
+        self.prefilling.push(id);
+        self.reqs.get_mut(&id).unwrap().phase = Phase::Prefilling;
+        self.admissions.push(Admission::Resumed { id });
         true
     }
 
@@ -355,11 +455,10 @@ impl EngineState {
     pub fn next_tenant_ready(&self) -> Option<f64> {
         let acct = self.tenants.as_ref()?;
         let mut best: Option<f64> = None;
-        for id in &self.waiting {
-            let r = &self.reqs[id].req;
-            let footprint = r.input_len.saturating_add(r.output_len);
-            let blocks = self.kv.blocks_for(footprint);
-            if let Some(t) = acct.ready_time(r.tenant, blocks, r.input_len, self.now_s) {
+        for &id in &self.waiting {
+            let tenant = self.reqs[&id].req.tenant;
+            let (blocks, tokens) = self.admission_cost(id);
+            if let Some(t) = acct.ready_time(tenant, blocks, tokens, self.now_s) {
                 best = Some(best.map_or(t, |b: f64| b.min(t)));
             }
         }
@@ -425,6 +524,7 @@ impl EngineState {
         let n_layers = (self.model.n_layers as u64).max(1);
         let in_flight: Vec<u64> = std::mem::take(&mut self.prefilling)
             .into_iter()
+            .chain(std::mem::take(&mut self.paused))
             .chain(std::mem::take(&mut self.decoding))
             .collect();
         let mut out = Vec::with_capacity(in_flight.len());
@@ -478,6 +578,7 @@ impl EngineState {
         let mut out = self.take_waiting();
         let in_flight = std::mem::take(&mut self.prefilling)
             .into_iter()
+            .chain(std::mem::take(&mut self.paused))
             .chain(std::mem::take(&mut self.decoding));
         for id in in_flight {
             self.release_kv(id);
@@ -580,6 +681,74 @@ mod tests {
             }
             _ => panic!("expected KvRejected"),
         }
+    }
+
+    #[test]
+    fn pause_and_resume_preserve_progress_and_kv() {
+        let mut s = state();
+        s.arrive(req(1, 100, 10));
+        assert!(s.admit(1));
+        {
+            let r = s.reqs.get_mut(&1).unwrap();
+            r.prefill_done = 40;
+            r.token_layers_done = 40 * s.model.n_layers as u64;
+        }
+        assert!(s.pause_prefill(1));
+        assert!(s.prefilling.is_empty());
+        assert_eq!(s.paused, vec![1]);
+        assert_eq!(s.reqs[&1].phase, Phase::Paused);
+        assert_eq!(s.kv.len_of(1), Some(110), "KV retained across the pause");
+        assert!(!s.pause_prefill(1), "already paused");
+        assert!(s.resume_prefill(1));
+        assert_eq!(s.prefilling, vec![1]);
+        assert!(s.paused.is_empty());
+        let r = &s.reqs[&1];
+        assert_eq!(r.phase, Phase::Prefilling);
+        assert_eq!(r.prefill_done, 40, "progress preserved");
+        assert_eq!(r.token_layers_done, 40 * s.model.n_layers as u64);
+        // Both transitions were logged for the event stream.
+        assert!(s
+            .admissions
+            .iter()
+            .any(|a| matches!(a, Admission::Paused { id: 1, .. })));
+        assert!(s
+            .admissions
+            .iter()
+            .any(|a| matches!(a, Admission::Resumed { id: 1 })));
+    }
+
+    #[test]
+    fn pause_refuses_completed_prefills() {
+        let mut s = state();
+        s.arrive(req(1, 100, 10));
+        assert!(s.admit(1));
+        s.reqs.get_mut(&1).unwrap().prefill_done = 100;
+        assert!(!s.pause_prefill(1), "nothing left to pause");
+        assert!(!s.pause_prefill(99), "unknown id is a no-op");
+    }
+
+    #[test]
+    fn evict_unfinished_includes_paused() {
+        let mut s = state();
+        s.arrive(req(1, 100, 10));
+        assert!(s.admit(1));
+        assert!(s.pause_prefill(1));
+        let evicted = s.evict_unfinished();
+        assert_eq!(evicted.len(), 1);
+        assert!(s.paused.is_empty());
+        assert_eq!(s.kv.len_of(1), None, "KV released on eviction");
+    }
+
+    #[test]
+    fn admission_cost_matches_gross_without_prefix_cache() {
+        let s = {
+            let mut s = state();
+            s.arrive(req(1, 100, 10));
+            s
+        };
+        let (blocks, tokens) = s.admission_cost(1);
+        assert_eq!(blocks, s.kv.blocks_for(110));
+        assert_eq!(tokens, 100);
     }
 
     fn tenant_req(id: u64, tenant: u32, input: u32, output: u32) -> Request {

@@ -82,6 +82,18 @@ pub enum EngineEvent {
         layers: u32,
         tokens: u32,
     },
+    /// An in-flight prefill was PAUSED by a preemption policy: its KV
+    /// blocks stay resident and its progress is preserved, but it stops
+    /// consuming slice budget until resumed. `resumed_at_layers` is the
+    /// token·layer progress at the pause — the matching resume continues
+    /// from exactly here (conservation: no token·layer is recomputed).
+    Preempted {
+        t_s: f64,
+        id: u64,
+        resumed_at_layers: u64,
+    },
+    /// A paused prefill re-entered the prefilling set (preemption ended).
+    Resumed { t_s: f64, id: u64 },
     /// Prefill completed and the first token was emitted.
     FirstToken { t_s: f64, id: u64 },
     /// A decode step emitted one token (`generated` = tokens so far,
@@ -114,6 +126,8 @@ impl EngineEvent {
             | EngineEvent::PrefixHit { t_s, .. }
             | EngineEvent::KvMigrated { t_s, .. }
             | EngineEvent::PrefillGroupDone { t_s, .. }
+            | EngineEvent::Preempted { t_s, .. }
+            | EngineEvent::Resumed { t_s, .. }
             | EngineEvent::FirstToken { t_s, .. }
             | EngineEvent::TokenEmitted { t_s, .. }
             | EngineEvent::Finished { t_s, .. }
@@ -133,6 +147,8 @@ impl EngineEvent {
             | EngineEvent::PrefixHit { id, .. }
             | EngineEvent::KvMigrated { id, .. }
             | EngineEvent::PrefillGroupDone { id, .. }
+            | EngineEvent::Preempted { id, .. }
+            | EngineEvent::Resumed { id, .. }
             | EngineEvent::FirstToken { id, .. }
             | EngineEvent::TokenEmitted { id, .. }
             | EngineEvent::Finished { id, .. } => Some(id),
@@ -237,6 +253,12 @@ mod tests {
         let mig = EngineEvent::KvMigrated { t_s: 2.5, id: 9, from: 0, to: 1, blocks: 12 };
         assert_eq!(mig.t_s(), 2.5);
         assert_eq!(mig.id(), Some(9));
+        let p = EngineEvent::Preempted { t_s: 3.0, id: 11, resumed_at_layers: 640 };
+        assert_eq!(p.t_s(), 3.0);
+        assert_eq!(p.id(), Some(11));
+        let r = EngineEvent::Resumed { t_s: 4.0, id: 11 };
+        assert_eq!(r.t_s(), 4.0);
+        assert_eq!(r.id(), Some(11));
     }
 
     #[test]

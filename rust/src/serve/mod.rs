@@ -591,7 +591,9 @@ impl Live<'_> {
             policy: self.policy,
             state: lifecycle,
             queued: self.core.pending_len(),
-            active: self.state.prefilling.len() + self.state.decoding.len(),
+            active: self.state.prefilling.len()
+                + self.state.paused.len()
+                + self.state.decoding.len(),
             queued_kv_tokens: self.core.pending_footprint() + waiting_kv,
             kv_used_blocks: self.state.kv.used_blocks(),
             kv_block_size: self.state.kv.block_size,
@@ -602,11 +604,12 @@ impl Live<'_> {
     }
 
     /// Requests not yet finished on this replica: undelivered + waiting +
-    /// in flight.
+    /// in flight (paused prefills hold KV and will resume, so they count).
     fn unfinished(&self) -> usize {
         self.core.pending_len()
             + self.state.waiting.len()
             + self.state.prefilling.len()
+            + self.state.paused.len()
             + self.state.decoding.len()
     }
 }

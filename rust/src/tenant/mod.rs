@@ -10,8 +10,12 @@
 //! pre-tenant engine — locked by `tests/tenant_isolation.rs`):
 //!
 //! * **Hard KV-block quotas** ([`TenantSpec::kv_block_quota`]): admission
-//!   charges each tenant the gross block reservation of every admitted
-//!   request and refuses admissions that would exceed the cap, through the
+//!   charges each tenant the block reservation of every admitted request
+//!   net of prefix-cache credit (the shared admission-cost function
+//!   [`EngineState::admission_cost`](crate::sched::state::EngineState::admission_cost),
+//!   also used by the fair-queue eligibility peek and the vtime charge, so
+//!   the three can never drift) and refuses admissions that would exceed
+//!   the cap, through the
 //!   same backpressure path as KV-capacity exhaustion
 //!   ([`RejectReason::TenantQuota`]); the request stays waiting and
 //!   retries. Charges are released when the request finishes, migrates, or
@@ -495,21 +499,21 @@ impl FairQueue {
             let t = r.tenant;
             let v = self.vtime.entry(t).or_insert(base);
             *v = v.max(base);
+            // Peek with the SAME prefix-credited cost EngineState::admit
+            // will register, so a cached-prefix request sorts eligible
+            // exactly when admission would accept it.
             let eligible = match &state.tenants {
                 Some(acct) => {
-                    let footprint = r.input_len.saturating_add(r.output_len);
-                    let blocks = state.kv.blocks_for(footprint);
-                    acct.peek(t, blocks, r.input_len, now).is_ok()
+                    let (blocks, tokens) = state.admission_cost(id);
+                    acct.peek(t, blocks, tokens, now).is_ok()
                 }
                 None => true,
             };
             keyed.push((u8::from(!eligible), *v, pos, id));
         }
-        keyed.sort_by(|a, b| {
-            a.0.cmp(&b.0)
-                .then(a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal))
-                .then(a.2.cmp(&b.2))
-        });
+        // total_cmp: a NaN-poisoned vtime must still yield a total order
+        // (NaN sorts last) instead of collapsing every comparison to Equal.
+        keyed.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.total_cmp(&b.1)).then(a.2.cmp(&b.2)));
         for (slot, k) in keyed.into_iter().enumerate() {
             state.waiting[slot] = k.3;
         }
@@ -523,7 +527,13 @@ impl AdmissionPolicy for FairQueue {
         for id in &admitted {
             if let Some(r) = state.reqs.get(id) {
                 let tenant = r.req.tenant;
-                let cost = r.req.input_len.max(1) as f64 / self.weight(tenant, state);
+                // Charge the prefill work this admission actually claims:
+                // after EngineState::admit, prefix-cache credit is already
+                // seeded into `prefill_done`, so `remaining_prefill()` is
+                // the uncached token count. Charging full `input_len` here
+                // would bill prefix-cached tenants for work the cache
+                // serves, skewing the weighted shares.
+                let cost = r.remaining_prefill().max(1) as f64 / self.weight(tenant, state);
                 *self.vtime.entry(tenant).or_insert(0.0) += cost;
             }
         }
@@ -617,6 +627,121 @@ mod tests {
         // Unknown release is a no-op; tenant 0 is never limited.
         a.release(999);
         assert!(a.peek(0, u32::MAX, u32::MAX, 0.0).is_ok());
+    }
+
+    use crate::config::ModelDesc;
+    use crate::kvcache::{shared_block_hashes, KvCacheManager};
+    use crate::sched::policy::GreedyAdmission;
+    use crate::workload::Request;
+
+    /// EngineState with prefix caching on and `n` equal-weight tenants.
+    fn fair_state(n_tenants: u32) -> EngineState {
+        let mut kv = KvCacheManager::new(10_000, 16);
+        kv.enable_prefix_cache();
+        let mut s = crate::sched::state::EngineState::new(ModelDesc::qwen3_30b_a3b(), kv, 256);
+        if n_tenants > 0 {
+            s.tenants = Some(TenantAccounting::new(TenantRegistry::with_defaults(
+                n_tenants,
+            )));
+        }
+        s
+    }
+
+    fn treq(id: u64, tenant: TenantId, input: u32, prefix: bool) -> Request {
+        Request {
+            id,
+            input_len: input,
+            output_len: 16,
+            prefix_id: if prefix { 7 } else { 0 },
+            prefix_len: if prefix { 512 } else { 0 },
+            tenant,
+            ..Default::default()
+        }
+    }
+
+    /// Seed the prefix cache with the 512-token shared prefix of `prefix_id
+    /// = 7` by admitting an untenanted donor and publishing its blocks (as
+    /// the engine does when a prefill completes).
+    fn seed_prefix_cache(s: &mut EngineState) {
+        let donor = treq(1000, 0, 1024, true);
+        s.arrive(donor);
+        assert!(s.admit(1000));
+        let hashes = shared_block_hashes(&donor, s.kv.block_size);
+        assert_eq!(s.kv.publish_prefix(1000, &hashes), 32, "512 / 16 blocks");
+    }
+
+    #[test]
+    fn fair_queue_charges_uncached_prefill_not_full_input() {
+        // Two equal-weight tenants admit same-length prompts, but tenant
+        // 1's prompt hits a 512-token cached prefix. Virtual time must
+        // advance by the prefill work each admission actually claims
+        // (remaining after prefix credit), not the full input_len —
+        // otherwise the cached tenant is billed for work the cache serves
+        // and its fair share shrinks.
+        let mut s = fair_state(2);
+        seed_prefix_cache(&mut s);
+        s.arrive(treq(1, 1, 1024, true));
+        s.arrive(treq(2, 2, 1024, false));
+        let mut fq = FairQueue::new(Box::new(GreedyAdmission::new(256)), vec![]);
+        let admitted = fq.admit(&mut s);
+        assert_eq!(admitted, vec![1, 2]);
+        assert_eq!(s.reqs[&1].remaining_prefill(), 512, "credit seeded");
+        assert_eq!(s.reqs[&2].remaining_prefill(), 1024);
+        assert_eq!(fq.vtime[&1], 512.0, "charged uncached prefill only");
+        assert_eq!(fq.vtime[&2], 1024.0, "uncached tenant pays in full");
+    }
+
+    #[test]
+    fn fair_queue_eligibility_peeks_with_prefix_credit() {
+        // Tenant 1's bucket holds 600 tokens. Its head request is 1024
+        // tokens gross but 512 after prefix credit — admission WILL accept
+        // it, so the reorder must rank it eligible. Peeking with the full
+        // input_len would sort it behind tenant 2 and head-of-line block a
+        // tenant the engine is ready to admit.
+        let reg = TenantRegistry::with_defaults(2).with(TenantSpec {
+            rate_tokens_per_s: 1.0,
+            burst_tokens: 600.0,
+            ..TenantSpec::new(1)
+        });
+        let mut s = fair_state(0);
+        s.tenants = Some(TenantAccounting::new(reg));
+        seed_prefix_cache(&mut s);
+        s.arrive(treq(1, 1, 1024, true));
+        s.arrive(treq(2, 2, 1024, false));
+        let mut fq = FairQueue::new(Box::new(GreedyAdmission::new(256)), vec![]);
+        fq.reorder(&mut s);
+        assert_eq!(
+            s.waiting,
+            vec![1, 2],
+            "credited request stays eligible and keeps FCFS order"
+        );
+        // And the engine agrees with the peek: the admission goes through.
+        let admitted = fq.admit(&mut s);
+        assert!(admitted.contains(&1));
+    }
+
+    #[test]
+    fn fair_queue_reorder_is_deterministic_with_nan_vtime() {
+        // total_cmp gives the sort a genuine total order: a NaN-poisoned
+        // vtime degrades deterministically (NaN sorts after every finite
+        // value) instead of feeding sort_by an inconsistent comparator via
+        // partial_cmp's Equal fallback. The SFQ start-tag rule then washes
+        // the poison back to the backlog base on the next reorder.
+        let mut s = fair_state(0);
+        s.arrive(treq(1, 1, 128, false));
+        s.arrive(treq(2, 2, 128, false));
+        let mut fq = FairQueue::new(Box::new(GreedyAdmission::new(256)), vec![]);
+        fq.vtime.insert(1, f64::NAN);
+        fq.vtime.insert(2, 5.0);
+        fq.reorder(&mut s);
+        let first = s.waiting.clone();
+        fq.vtime.insert(1, f64::NAN);
+        fq.reorder(&mut s);
+        assert_eq!(s.waiting, first, "NaN must not make the order flap");
+        assert!(
+            fq.vtime[&1].is_finite(),
+            "start-tag max(v, base) washes the NaN to the backlog base"
+        );
     }
 
     #[test]

@@ -126,6 +126,24 @@ pub fn stamp_tenant(spec: &WorkloadSpec, mut r: Request) -> Request {
     r
 }
 
+/// Apply a spec's priority model to one sampled request: stamp
+/// `priority_pct` percent of requests (by request id — no extra RNG draws,
+/// so `priority_pct = 0` traces stay bit-identical to pre-priority traces)
+/// as priority class 1, the interactive class that size-aware admission
+/// orders first and preemption may pause class-0 prefills for. Shared by
+/// [`WorkloadGen::generate`] and the streaming
+/// [`PoissonSource`](crate::workload::source::PoissonSource).
+pub fn stamp_priority(spec: &WorkloadSpec, mut r: Request) -> Request {
+    let pct = spec.priority_pct.min(100) as u64;
+    if pct == 0 {
+        return r;
+    }
+    if r.id % 100 < pct {
+        r.priority = 1;
+    }
+    r
+}
+
 /// Generator producing a deterministic trace from a `WorkloadSpec`.
 #[derive(Clone, Debug)]
 pub struct WorkloadGen {
@@ -150,17 +168,20 @@ impl WorkloadGen {
                 Dataset::Fixed => (self.spec.fixed_input, self.spec.fixed_output),
                 _ => (model.sample_input(&mut rng), model.sample_output(&mut rng)),
             };
-            reqs.push(stamp_tenant(
+            reqs.push(stamp_priority(
                 &self.spec,
-                stamp_shared_prefix(
+                stamp_tenant(
                     &self.spec,
-                    Request {
-                        id,
-                        arrival_s: t,
-                        input_len,
-                        output_len,
-                        ..Default::default()
-                    },
+                    stamp_shared_prefix(
+                        &self.spec,
+                        Request {
+                            id,
+                            arrival_s: t,
+                            input_len,
+                            output_len,
+                            ..Default::default()
+                        },
+                    ),
                 ),
             ));
         }
@@ -302,6 +323,25 @@ mod tests {
         assert!(skewed.requests.iter().all(|r| (1..=4).contains(&r.tenant)));
         // Feature off: bit-identical to the untouched generator.
         let off = WorkloadGen::new(spec(Dataset::ShareGpt, 2.0, 40).with_tenants(0, 70)).generate();
+        assert_eq!(off.requests, base.requests);
+    }
+
+    #[test]
+    fn priority_workload_stamps_without_perturbing_samples() {
+        let base = WorkloadGen::new(spec(Dataset::ShareGpt, 2.0, 200)).generate();
+        let tagged =
+            WorkloadGen::new(spec(Dataset::ShareGpt, 2.0, 200).with_priorities(30)).generate();
+        for (b, t) in base.requests.iter().zip(&tagged.requests) {
+            assert_eq!(t.input_len, b.input_len, "lengths untouched");
+            assert_eq!(t.output_len, b.output_len);
+            assert_eq!(t.arrival_s, b.arrival_s, "arrivals untouched");
+            assert_eq!(t.priority, u8::from(t.id % 100 < 30));
+        }
+        let high = tagged.requests.iter().filter(|r| r.priority == 1).count();
+        assert_eq!(high, 60, "exactly 30% per hundred ids");
+        // Feature off: bit-identical to the untouched generator.
+        let off =
+            WorkloadGen::new(spec(Dataset::ShareGpt, 2.0, 200).with_priorities(0)).generate();
         assert_eq!(off.requests, base.requests);
     }
 

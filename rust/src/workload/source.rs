@@ -136,17 +136,20 @@ impl WorkloadSource for PoissonSource {
         }
         let id = self.next_id;
         self.next_id += 1;
-        Some(crate::workload::generator::stamp_tenant(
+        Some(crate::workload::generator::stamp_priority(
             &self.spec,
-            crate::workload::generator::stamp_shared_prefix(
+            crate::workload::generator::stamp_tenant(
                 &self.spec,
-                Request {
-                    id,
-                    arrival_s: self.t,
-                    input_len,
-                    output_len,
-                    ..Default::default()
-                },
+                crate::workload::generator::stamp_shared_prefix(
+                    &self.spec,
+                    Request {
+                        id,
+                        arrival_s: self.t,
+                        input_len,
+                        output_len,
+                        ..Default::default()
+                    },
+                ),
             ),
         ))
     }

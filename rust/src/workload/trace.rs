@@ -24,6 +24,12 @@ pub struct Request {
     /// request belongs to no tenant and bypasses every quota, bucket, and
     /// fairness mechanism — the pre-tenant byte streams exactly.
     pub tenant: u32,
+    /// Priority class: larger = more urgent. 0 (the default) is the
+    /// baseline class; size-aware admission orders higher classes first
+    /// and a preemption policy may pause a lower-class in-flight prefill
+    /// for a strictly higher-class arrival. All-zero traces behave
+    /// byte-identically to pre-priority builds.
+    pub priority: u8,
 }
 
 impl Default for Request {
@@ -36,6 +42,7 @@ impl Default for Request {
             prefix_id: 0,
             prefix_len: 0,
             tenant: 0,
+            priority: 0,
         }
     }
 }
@@ -86,16 +93,23 @@ impl Trace {
     }
 
     /// Serialize to a simple CSV for replay
-    /// (id,arrival,input,output,prefix_id,prefix_len[,tenant]).
+    /// (id,arrival,input,output,prefix_id,prefix_len[,tenant[,priority]]).
     ///
     /// The `tenant` column (CSV v3) is emitted only when at least one
     /// request is tenanted, so untenanted traces serialize byte-identically
-    /// to the pre-tenant (v2) format.
+    /// to the pre-tenant (v2) format. The `priority` column (CSV v4) is
+    /// emitted only when at least one request carries a non-zero priority;
+    /// a prioritized trace always emits the tenant column too (the column
+    /// positions are fixed), so v4 is exactly 8 fields.
     pub fn to_csv(&self) -> String {
-        let tenanted = self.requests.iter().any(|r| r.tenant != 0);
+        let prioritized = self.requests.iter().any(|r| r.priority != 0);
+        let tenanted = prioritized || self.requests.iter().any(|r| r.tenant != 0);
         let mut s = String::from("id,arrival_s,input_len,output_len,prefix_id,prefix_len");
         if tenanted {
             s.push_str(",tenant");
+        }
+        if prioritized {
+            s.push_str(",priority");
         }
         s.push('\n');
         for r in &self.requests {
@@ -106,6 +120,9 @@ impl Trace {
             if tenanted {
                 s.push_str(&format!(",{}", r.tenant));
             }
+            if prioritized {
+                s.push_str(&format!(",{}", r.priority));
+            }
             s.push('\n');
         }
         s
@@ -113,8 +130,9 @@ impl Trace {
 
     /// Parse a trace CSV. Accepts the 4-field legacy format
     /// (id,arrival,input,output), the 6-field format that adds the
-    /// shared-prefix tag (prefix_id,prefix_len), and the 7-field v3 format
-    /// that adds the tenant column.
+    /// shared-prefix tag (prefix_id,prefix_len), the 7-field v3 format
+    /// that adds the tenant column, and the 8-field v4 format that adds
+    /// the priority column.
     pub fn from_csv(text: &str) -> Result<Trace, String> {
         let mut reqs = Vec::new();
         for (i, line) in text.lines().enumerate() {
@@ -122,8 +140,8 @@ impl Trace {
                 continue;
             }
             let parts: Vec<&str> = line.split(',').collect();
-            if parts.len() != 4 && parts.len() != 6 && parts.len() != 7 {
-                return Err(format!("line {i}: expected 4, 6 or 7 fields"));
+            if !matches!(parts.len(), 4 | 6 | 7 | 8) {
+                return Err(format!("line {i}: expected 4, 6, 7 or 8 fields"));
             }
             let (prefix_id, prefix_len) = if parts.len() >= 6 {
                 (
@@ -133,8 +151,13 @@ impl Trace {
             } else {
                 (0, 0)
             };
-            let tenant = if parts.len() == 7 {
+            let tenant = if parts.len() >= 7 {
                 parts[6].parse().map_err(|e| format!("line {i}: {e}"))?
+            } else {
+                0
+            };
+            let priority = if parts.len() == 8 {
+                parts[7].parse().map_err(|e| format!("line {i}: {e}"))?
             } else {
                 0
             };
@@ -146,6 +169,7 @@ impl Trace {
                 prefix_id,
                 prefix_len,
                 tenant,
+                priority,
             });
         }
         Ok(Trace::new(reqs))
@@ -219,6 +243,27 @@ mod tests {
         assert_eq!(t.requests, t2.requests);
         assert_eq!(t2.requests[0].tenant, 3);
         assert_eq!(t2.requests[1].tenant, 0);
+    }
+
+    #[test]
+    fn csv_roundtrips_priority_column() {
+        let mut a = req(1, 0.5);
+        a.priority = 2; // untenanted but prioritized: both columns appear
+        let b = req(2, 1.0);
+        let t = Trace::new(vec![a, b]);
+        let csv = t.to_csv();
+        assert!(csv.starts_with(
+            "id,arrival_s,input_len,output_len,prefix_id,prefix_len,tenant,priority\n"
+        ));
+        let t2 = Trace::from_csv(&csv).unwrap();
+        assert_eq!(t.requests, t2.requests);
+        assert_eq!(t2.requests[0].priority, 2);
+        assert_eq!(t2.requests[1].priority, 0);
+        // All-zero priorities: the v3 tenant format is untouched.
+        let mut c = req(3, 0.0);
+        c.tenant = 1;
+        let v3 = Trace::new(vec![c]).to_csv();
+        assert!(v3.starts_with("id,arrival_s,input_len,output_len,prefix_id,prefix_len,tenant\n"));
     }
 
     #[test]

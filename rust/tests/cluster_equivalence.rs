@@ -283,6 +283,7 @@ fn random_req(g: &mut Gen) -> Request {
         // Exercise the prefix-affinity path on some draws.
         prefix_id: g.usize(0, 2) as u64,
         prefix_len: 128,
+        ..Default::default()
     }
 }
 

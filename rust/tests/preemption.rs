@@ -1,0 +1,384 @@
+//! Preemption acceptance locks (Policy API v2 `preemption=pause`).
+//!
+//! * Plan-level pause/resume invariants, on BOTH composer axes: an
+//!   interactive (priority 1) arrival pauses an in-flight long prefill at
+//!   the next unit boundary, takes its first token first, and the victim
+//!   resumes from exactly where it stopped — I1 holds on every plan and
+//!   token·layer conservation (I2) holds at completion, so no token·layer
+//!   is ever recomputed across pause/resume cycles.
+//! * No starvation: under CONTINUOUS high-priority arrivals, a paused
+//!   victim is force-resumed once its cumulative pause budget is spent
+//!   (at most `max_pauses` Paused admissions ever), and every request
+//!   still drains.
+//! * GOLDEN (feature-off byte-identity): priority classes stamped on a
+//!   trace are inert metadata without a preemption stage — a prioritized
+//!   run under a non-preemptive preset is byte-identical (modulo the
+//!   priority field itself) to the unprioritized run, at 1, 2, and 4
+//!   worker threads, with zero Preempted events and zero counted
+//!   preemptions.
+//! * Payoff: on an adversarial long-prompt + interactive mix, preemption
+//!   + SRPT improves the interactive class's p99 TTFT (via the
+//!   `StreamingSlo` per-tenant window) vs EVERY non-preemptive preset.
+
+use std::collections::BTreeMap;
+
+use layered_prefill::cluster::build_router;
+use layered_prefill::config::slo::SloSpec;
+use layered_prefill::config::{Dataset, HardwareDesc, ModelDesc, Policy, WorkloadSpec};
+use layered_prefill::kvcache::KvCacheManager;
+use layered_prefill::metrics::StreamingSlo;
+use layered_prefill::sched::policy::PolicySpec;
+use layered_prefill::sched::{Admission, EngineState, Phase};
+use layered_prefill::serve::{EngineEvent, EventLog, Session, SessionStatus};
+use layered_prefill::workload::{Request, Trace, WorkloadGen};
+
+fn req(id: u64, arrival_s: f64, input: u32, output: u32, tenant: u32, priority: u8) -> Request {
+    Request {
+        id,
+        arrival_s,
+        input_len: input,
+        output_len: output,
+        tenant,
+        priority,
+        ..Default::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Plan-level driver: mirrors the engine core's effects (as
+// sched/properties.rs does) so pause/resume can be observed mid-run.
+// ---------------------------------------------------------------------------
+
+struct DriveOutcome {
+    state: EngineState,
+    /// Iteration index at which each request emitted its first token.
+    first_token_iter: BTreeMap<u64, usize>,
+}
+
+/// Drive `spec_str` over staggered arrivals (iteration-indexed) until
+/// drain, checking I1 on every plan and I2 conservation throughout.
+fn drive(spec_str: &str, mut arrivals: Vec<(usize, Request)>) -> DriveOutcome {
+    let model = ModelDesc::qwen3_30b_a3b();
+    let n_layers = model.n_layers;
+    let spec = PolicySpec::parse(spec_str).expect("spec parses");
+    let mut state = EngineState::new(model, KvCacheManager::new(100_000, 16), 64);
+    let mut policy = spec.build(n_layers);
+    let mut first_token_iter: BTreeMap<u64, usize> = BTreeMap::new();
+    let mut iter = 0usize;
+    loop {
+        arrivals.retain(|(due, r)| {
+            if *due <= iter {
+                state.arrive(*r);
+                false
+            } else {
+                true
+            }
+        });
+        let Some(plan) = policy.plan(&mut state) else {
+            if arrivals.is_empty() {
+                break;
+            }
+            iter += 1;
+            assert!(iter < 10_000, "idle livelock");
+            continue;
+        };
+        iter += 1;
+        assert!(iter < 10_000, "scheduler did not drain");
+        // I1: at most one group prefills per iteration.
+        assert!(plan.prefill_groups() <= 1, "I1: {}", plan.prefill_groups());
+        assert_eq!(plan.total_layers(), n_layers, "groups must tile the stack");
+
+        // ---- emulate engine effects ----
+        let mut per_req: BTreeMap<u64, (u32, u32, bool)> = BTreeMap::new();
+        for gr in &plan.groups {
+            for w in &gr.prefill {
+                let e = per_req.entry(w.req).or_insert((w.tokens, 0, false));
+                e.1 += gr.n_layers;
+                e.2 |= w.completes;
+            }
+        }
+        let decode_set: Vec<u64> = plan.groups[0].decode.iter().map(|&(id, _)| id).collect();
+        let mut done_prefills = Vec::new();
+        for (id, (tokens, layer_sum, completes)) in per_req {
+            let r = state.reqs.get_mut(&id).unwrap();
+            r.token_layers_done += tokens as u64 * layer_sum as u64;
+            // I2: never more than input_len x n_layers — a resumed victim
+            // that recomputed any token.layer would overshoot here.
+            assert!(
+                r.token_layers_done <= r.req.input_len as u64 * n_layers as u64,
+                "I2: req {id} over-prefilled"
+            );
+            if completes {
+                assert_eq!(
+                    r.token_layers_done,
+                    r.req.input_len as u64 * n_layers as u64,
+                    "I2: req {id} completed off-budget"
+                );
+                r.prefill_done = r.req.input_len;
+                done_prefills.push(id);
+            } else {
+                r.prefill_done = (r.token_layers_done / n_layers as u64) as u32;
+            }
+        }
+        for id in done_prefills {
+            let r = state.reqs.get_mut(&id).unwrap();
+            r.generated = 1;
+            first_token_iter.entry(id).or_insert(iter);
+            state.prefilling.retain(|&x| x != id);
+            if r.done_decoding() {
+                r.phase = Phase::Finished;
+                let _ = state.kv.release(id);
+            } else {
+                r.phase = Phase::Decoding;
+                state.decoding.push(id);
+            }
+        }
+        for id in decode_set {
+            let r = state.reqs.get_mut(&id).unwrap();
+            if r.done_decoding() {
+                continue;
+            }
+            r.generated += 1;
+            if r.done_decoding() {
+                r.phase = Phase::Finished;
+                state.decoding.retain(|&x| x != id);
+                let _ = state.kv.release(id);
+            }
+        }
+    }
+    DriveOutcome {
+        state,
+        first_token_iter,
+    }
+}
+
+fn paused_ids(state: &EngineState) -> Vec<u64> {
+    state
+        .admissions
+        .iter()
+        .filter_map(|a| match a {
+            Admission::Paused { id, .. } => Some(*id),
+            _ => None,
+        })
+        .collect()
+}
+
+fn resumed_ids(state: &EngineState) -> Vec<u64> {
+    state
+        .admissions
+        .iter()
+        .filter_map(|a| match a {
+            Admission::Resumed { id } => Some(*id),
+            _ => None,
+        })
+        .collect()
+}
+
+fn assert_all_finished_conserved(state: &EngineState) {
+    let n_layers = state.model.n_layers;
+    for (id, r) in state.reqs.iter() {
+        assert_eq!(r.phase, Phase::Finished, "req {id} not finished");
+        assert_eq!(r.prefill_done, r.req.input_len, "req {id} prefill");
+        assert_eq!(
+            r.token_layers_done,
+            r.req.input_len as u64 * n_layers as u64,
+            "req {id} token.layer conservation"
+        );
+        assert_eq!(r.generated, r.req.output_len.max(1), "req {id} decode");
+    }
+}
+
+#[test]
+fn interactive_arrival_pauses_and_resumes_on_both_axes() {
+    // Token axis: 512-token chunk units (a boundary every iteration) and
+    // layer axis: 2048-token units spread over G=4 layer groups (a
+    // boundary every 4 iterations).
+    for spec in [
+        "admission=srpt,shaper=chunks:512,composer=interleave,preemption=pause:8",
+        "admission=srpt,shaper=chunks:2048,composer=groups:512,preemption=pause:8",
+    ] {
+        let out = drive(
+            spec,
+            vec![
+                (0, req(0, 0.0, 8192, 4, 0, 0)),  // long, baseline class
+                (3, req(1, 0.0, 128, 4, 0, 1)),   // interactive, priority 1
+            ],
+        );
+        // The victim was actually paused, and later resumed.
+        assert!(
+            paused_ids(&out.state).contains(&0),
+            "{spec}: long prefill never paused"
+        );
+        assert!(
+            resumed_ids(&out.state).contains(&0),
+            "{spec}: paused prefill never resumed"
+        );
+        // The interactive request got its first token BEFORE the long
+        // prompt, despite arriving mid-prefill.
+        let short_ft = out.first_token_iter[&1];
+        let long_ft = out.first_token_iter[&0];
+        assert!(
+            short_ft < long_ft,
+            "{spec}: interactive first token at iter {short_ft}, long at {long_ft}"
+        );
+        // Conservation: nothing recomputed, everything drained.
+        assert_all_finished_conserved(&out.state);
+    }
+}
+
+#[test]
+fn pause_budget_bounds_preemption_and_prevents_starvation() {
+    // Continuous high-priority pressure: a fresh priority-1 prefill every
+    // other iteration, for 40 iterations. With max_pauses=2, the long
+    // victim may be paused at most twice EVER, then runs shielded to
+    // completion — it must not starve.
+    let mut arrivals = vec![(0, req(0, 0.0, 4096, 2, 0, 0))];
+    for k in 0..20u64 {
+        arrivals.push((1 + 2 * k as usize, req(10 + k, 0.0, 1024, 2, 0, 1)));
+    }
+    let out = drive(
+        "admission=srpt,shaper=chunks:512,composer=interleave,preemption=pause:2",
+        arrivals,
+    );
+    let pauses_of_victim = paused_ids(&out.state).iter().filter(|&&id| id == 0).count();
+    assert!(
+        pauses_of_victim >= 1,
+        "the long prefill should be preempted at least once"
+    );
+    assert!(
+        pauses_of_victim <= 2,
+        "pause budget exceeded: {pauses_of_victim} pauses"
+    );
+    // Every pause has a matching resume and the victim finished.
+    let resumes_of_victim = resumed_ids(&out.state).iter().filter(|&&id| id == 0).count();
+    assert_eq!(pauses_of_victim, resumes_of_victim, "unbalanced pause/resume");
+    assert_all_finished_conserved(&out.state);
+}
+
+// ---------------------------------------------------------------------------
+// Feature-off byte-identity at 1/2/4 threads.
+// ---------------------------------------------------------------------------
+
+/// Debug-format an event stream with every Arrived priority zeroed: the
+/// ONLY field allowed to differ between a prioritized and unprioritized
+/// run of the same workload under a non-preemptive policy.
+fn fingerprint_sans_priority(log: &EventLog) -> String {
+    let mut out = String::new();
+    for (replica, ev) in &log.events {
+        let ev = match ev {
+            EngineEvent::Arrived { t_s, req } => {
+                let mut r = *req;
+                r.priority = 0;
+                EngineEvent::Arrived { t_s: *t_s, req: r }
+            }
+            other => other.clone(),
+        };
+        out.push_str(&format!("{replica} {ev:?}\n"));
+    }
+    out
+}
+
+#[test]
+fn priorities_are_inert_without_preemption_at_every_thread_count() {
+    let base_spec = WorkloadSpec::new(Dataset::ShareGpt, 4.0, 24);
+    let plain = WorkloadGen::new(base_spec.clone()).generate();
+    let prioritized = WorkloadGen::new(base_spec.with_priorities(40)).generate();
+    // Same ids/lengths/arrivals: the stamp adds no RNG draws.
+    assert_eq!(plain.requests.len(), prioritized.requests.len());
+    assert!(prioritized.requests.iter().any(|r| r.priority == 1));
+
+    let mut fingerprints: Vec<String> = Vec::new();
+    for trace in [&plain, &prioritized] {
+        for threads in [1usize, 2, 4] {
+            let mut log = EventLog::default();
+            let rep = Session::builder()
+                .policy(Policy::Layered)
+                .replicas(2)
+                .router(build_router("rr").expect("router"))
+                .threads(threads)
+                .trace(trace)
+                .sink(&mut log)
+                .run()
+                .expect("sim session");
+            assert_eq!(rep.status, SessionStatus::Drained);
+            // Feature off: no preemption machinery may engage.
+            assert_eq!(rep.fleet.preemptions, 0, "threads={threads}");
+            assert_eq!(
+                log.count(|e| matches!(
+                    e,
+                    EngineEvent::Preempted { .. } | EngineEvent::Resumed { .. }
+                )),
+                0,
+                "threads={threads}"
+            );
+            fingerprints.push(fingerprint_sans_priority(&log));
+        }
+    }
+    let first = &fingerprints[0];
+    for (i, fp) in fingerprints.iter().enumerate() {
+        assert_eq!(
+            fp, first,
+            "run {i} diverged from the unprioritized single-thread baseline"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Payoff: interactive p99 TTFT vs every non-preemptive preset.
+// ---------------------------------------------------------------------------
+
+/// Adversarial mix: three 16k-token prompts land first (tenant 1,
+/// baseline class), then a dozen short interactive requests (tenant 2,
+/// priority 1) trickle in behind them.
+fn adversarial_trace() -> Trace {
+    let mut reqs: Vec<Request> = (0..3)
+        .map(|i| req(i, 0.1 * i as f64, 16_384, 32, 1, 0))
+        .collect();
+    for i in 0..12u64 {
+        reqs.push(req(100 + i, 0.4 + 0.6 * i as f64, 128, 16, 2, 1));
+    }
+    Trace::new(reqs)
+}
+
+/// Interactive-tenant p99 TTFT (streaming window) + fleet preemption
+/// count for one scheduler config.
+fn interactive_p99(cfg: layered_prefill::config::SchedulerConfig, trace: &Trace) -> (f64, u64) {
+    let model = ModelDesc::qwen3_30b_a3b();
+    let slo = SloSpec::paper(&model, Dataset::ShareGpt);
+    let mut streaming = StreamingSlo::new(slo, 1e9);
+    let rep = Session::builder()
+        .model(model)
+        .hardware(HardwareDesc::h100x2())
+        .scheduler(cfg)
+        .trace(trace)
+        .sink(&mut streaming)
+        .run()
+        .expect("sim session");
+    assert_eq!(rep.status, SessionStatus::Drained);
+    let win = streaming.tenant_summary_at(2, rep.fleet.makespan_s);
+    assert_eq!(win.completed, 12, "every interactive request must finish");
+    (win.ttft_p99_s, rep.fleet.preemptions)
+}
+
+#[test]
+fn preemption_with_srpt_beats_every_preset_on_interactive_p99_ttft() {
+    let trace = adversarial_trace();
+    let preemptive = PolicySpec::parse("admission=srpt,preemption=pause:64")
+        .expect("spec")
+        .scheduler_config();
+    let (p99_preempt, preemptions) = interactive_p99(preemptive, &trace);
+    assert!(
+        preemptions > 0,
+        "the adversarial mix must actually trigger preemption"
+    );
+    for preset in Policy::ALL {
+        let (p99_preset, preset_preemptions) =
+            interactive_p99(layered_prefill::config::SchedulerConfig::preset(preset), &trace);
+        assert_eq!(preset_preemptions, 0, "{}: presets never preempt", preset.name());
+        assert!(
+            p99_preempt < p99_preset,
+            "{}: preemptive p99 TTFT {p99_preempt:.3}s must beat preset {p99_preset:.3}s",
+            preset.name()
+        );
+    }
+}

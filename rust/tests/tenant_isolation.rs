@@ -25,7 +25,7 @@ use layered_prefill::config::{Dataset, HardwareDesc, ModelDesc, Policy, Workload
 use layered_prefill::kvcache::KvCacheManager;
 use layered_prefill::metrics::StreamingSlo;
 use layered_prefill::sched::policy::{
-    AdmissionSpec, ComposerSpec, FairnessSpec, PolicySpec, ShaperSpec,
+    AdmissionSpec, ComposerSpec, FairnessSpec, PolicySpec, PreemptionSpec, ShaperSpec,
 };
 use layered_prefill::sched::EngineState;
 use layered_prefill::serve::{
@@ -452,6 +452,7 @@ fn prop_quota_blocks_conserved_and_nothing_lost() {
                 prefix_id: 0,
                 prefix_len: 0,
                 tenant: 1 + (i as u32 % 2),
+                ..Default::default()
             });
         }
         let trace = Trace::new(reqs);
@@ -518,6 +519,7 @@ fn prop_token_bucket_bounds_admitted_prefill() {
                 prefix_id: 0,
                 prefix_len: 0,
                 tenant: 1,
+                ..Default::default()
             });
         }
         let trace = Trace::new(reqs);
@@ -573,6 +575,7 @@ fn victim_trace() -> Vec<Request> {
             prefix_id: 0,
             prefix_len: 0,
             tenant: 2,
+            ..Default::default()
         })
         .collect()
 }
@@ -587,6 +590,7 @@ fn flood_trace() -> Vec<Request> {
             prefix_id: 0,
             prefix_len: 0,
             tenant: 1,
+            ..Default::default()
         })
         .collect()
 }
@@ -619,6 +623,7 @@ fn victim_p99(
         shaper: ShaperSpec::TokenChunks { chunk: 512 },
         composer,
         fairness,
+        preemption: PreemptionSpec::None,
     };
     let rspec = ReplicaSpec {
         model: model.clone(),
