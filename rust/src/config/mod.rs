@@ -189,6 +189,15 @@ pub struct WorkloadSpec {
     /// byte-identical to the pre-priority generator. 0 = feature off
     /// (every request priority 0).
     pub priority_pct: u32,
+    /// Diurnal/bursty arrival shaping: a piecewise-constant rate schedule
+    /// as `(start_s, rate)` segments sorted by start time. When non-empty
+    /// it REPLACES the flat `rate` for inter-arrival sampling: each
+    /// exponential gap is drawn at unit rate and stretched through the
+    /// schedule's integrated intensity (time-rescaling), so the stream is
+    /// still a pure function of `seed` — one RNG draw per arrival, same
+    /// as the flat process. Empty = feature off (flat `rate`, bit-identical
+    /// to the pre-schedule generator).
+    pub rate_schedule: Vec<(f64, f64)>,
 }
 
 impl WorkloadSpec {
@@ -205,6 +214,7 @@ impl WorkloadSpec {
             tenants: 0,
             tenant_heavy_pct: 0,
             priority_pct: 0,
+            rate_schedule: Vec::new(),
         }
     }
 
@@ -228,6 +238,55 @@ impl WorkloadSpec {
     pub fn with_priorities(mut self, pct: u32) -> Self {
         self.priority_pct = pct.min(100);
         self
+    }
+
+    /// Builder-style diurnal rate schedule (see `rate_schedule`): segments
+    /// are sorted by start time; non-positive rates are clamped to a tiny
+    /// epsilon (a zero-rate segment would make the next arrival infinitely
+    /// far away and the wait unbounded).
+    pub fn with_rate_schedule(mut self, mut points: Vec<(f64, f64)>) -> Self {
+        points.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for p in &mut points {
+            p.1 = p.1.max(1e-9);
+        }
+        self.rate_schedule = points;
+        self
+    }
+
+    /// Parse a `--rate-schedule` string: comma-separated `START:RATE`
+    /// segments, e.g. `"0:2,30:8,60:2"` (2 req/s until t=30, 8 req/s
+    /// until t=60, then 2 req/s). A schedule that does not start at 0
+    /// implicitly uses the flat `rate` before its first segment.
+    pub fn parse_rate_schedule(s: &str) -> Result<Vec<(f64, f64)>, String> {
+        let mut points = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let Some((at, rate)) = part.split_once(':') else {
+                return Err(format!("bad segment '{part}' (want START:RATE)"));
+            };
+            let at: f64 = at
+                .trim()
+                .parse()
+                .map_err(|e| format!("bad start in '{part}': {e}"))?;
+            let rate: f64 = rate
+                .trim()
+                .parse()
+                .map_err(|e| format!("bad rate in '{part}': {e}"))?;
+            if !at.is_finite() || at < 0.0 {
+                return Err(format!("bad start in '{part}': must be finite and >= 0"));
+            }
+            if !rate.is_finite() || rate <= 0.0 {
+                return Err(format!("bad rate in '{part}': must be finite and > 0"));
+            }
+            points.push((at, rate));
+        }
+        if points.is_empty() {
+            return Err("empty rate schedule".to_string());
+        }
+        Ok(points)
     }
 }
 

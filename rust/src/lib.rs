@@ -196,6 +196,39 @@
 //! thread count, and the interactive-p99-TTFT win over every
 //! non-preemptive preset are locked by `tests/preemption.rs`.
 //!
+//! ## Closed-loop intake: sessions, think times, tool-call DAGs
+//!
+//! Production interactive traffic is not an open Poisson stream: the
+//! next prompt EXISTS only after the previous answer, arrives a human
+//! think-time later, and extends the conversation-so-far token for
+//! token. Workload intake is therefore a loop, not just a pull:
+//! [`serve::WorkloadSource`] grew an `observe(&EngineEvent)` side
+//! (default no-op — traces and Poisson streams are untouched), and a
+//! source that answers `closed_loop() == true` receives every engine
+//! event back at each control boundary, in replica-index order — so
+//! dependent arrivals are byte-identical at every thread count.
+//! [`workload::SessionSource`] (a [`workload::SessionSpec`] over any
+//! base [`config::WorkloadSpec`]) models the paper's interactive regime
+//! on top of that contract: multi-turn conversations whose turn-N prompt
+//! is turn N−1's prompt + answer + fresh user text under one lineage
+//! `prefix_id` (so the prefix cache credits every block an ancestor
+//! published and [`cluster::PrefixAffinity`] keeps the session home —
+//! deeper turns get CHEAPER), exponential think-time gaps, long-decode
+//! reasoning turns, and tool-call DAGs (a finished turn fans out K
+//! children; the join turn waits for ALL of them and folds their
+//! results into its prompt). Everything random is pre-sampled from the
+//! spec seed at construction; runtime only decides WHEN scripted turns
+//! arrive. Open-loop arrivals gained diurnal shaping the same release:
+//! `WorkloadSpec::with_rate_schedule` drives a piecewise-constant
+//! Poisson intensity through one shared time-rescaled sampler (CLI
+//! `--rate-schedule "0:2,30:8,60:2"`). A horizon cut reports turns the
+//! source still owes (`WorkloadSource::unspawned`) in
+//! `Halted { pending }`; per-depth TTFT/cache-payoff tables come from
+//! [`metrics::sessions`] (CLI `cluster --sessions N`,
+//! `examples/agentic_sessions.rs`). Conservation — every turn traces to
+//! exactly one parent `Finished`, no orphans under drain/fail chaos,
+//! joins never early — is locked by `tests/session_workloads.rs`.
+//!
 //! ## Architecture: one engine core, many backends
 //!
 //! Each iteration of any run is the same cycle, owned by

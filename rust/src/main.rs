@@ -51,6 +51,14 @@
 //!       Parallelism: `--threads N` steps replica engines on N worker
 //!       threads between control boundaries (0 = auto = min(replicas,
 //!       available parallelism); 1 = serial; every N is bit-identical).
+//!       Closed-loop sessions: `--sessions N` serves N multi-turn
+//!       conversations whose next turn arrives a think-time after the
+//!       previous turn finishes (`--turns-mean K --think-time-s T`),
+//!       with agentic tool-call fan-out/join (`--toolcall-pct P
+//!       --toolcall-fanout F`) and long-decode reasoning turns
+//!       (`--reasoning-pct P`); prints TTFT + prefix-cache payoff per
+//!       turn depth. `--rate-schedule "0:2,30:8,60:2"` shapes arrivals
+//!       diurnally for any workload arm (simulate --open-loop too).
 //!   info
 //!       Print model/hardware descriptors and artifact status.
 
@@ -101,8 +109,27 @@ fn usage() {
          \x20    | lpserve cluster --replicas 4 --router prefix --shared-prefix 1024 \
          --prefix-cache --fail-at 10:1 --migrate-kv\n\
          \x20    | lpserve cluster --replicas 2 --tenants '1:rate=2000,burst=4000;2' \
-         --tenant-report"
+         --tenant-report\n\
+         \x20    | lpserve cluster --sessions 8 --turns-mean 4 --think-time-s 2 \
+         --toolcall-pct 30 --toolcall-fanout 3 --prefix-cache --router prefix\n\
+         \x20    | lpserve simulate --open-loop --rate-schedule '0:2,30:8,60:2' --horizon 90"
     );
+}
+
+/// Optional `--rate-schedule "0:2,30:8,60:2"` — piecewise-constant
+/// diurnal arrival-rate segments (START_S:RATE pairs). Empty (flat
+/// `--rate`) when the flag is absent.
+fn rate_schedule_arg(args: &Args) -> Vec<(f64, f64)> {
+    let Some(v) = args.opt("rate-schedule") else {
+        return Vec::new();
+    };
+    match WorkloadSpec::parse_rate_schedule(v) {
+        Ok(points) => points,
+        Err(e) => {
+            eprintln!("bad --rate-schedule: {e}");
+            std::process::exit(2);
+        }
+    }
 }
 
 fn model_arg(args: &Args) -> ModelDesc {
@@ -213,7 +240,8 @@ fn cmd_simulate_open_loop(args: &Args) {
     let priority_pct = args.usize("priority-pct", 0).min(100) as u32;
     let mut wspec = WorkloadSpec::new(dataset, rate, n_requests)
         .with_shared_prefix(shared_prefix, prefix_groups)
-        .with_priorities(priority_pct);
+        .with_priorities(priority_pct)
+        .with_rate_schedule(rate_schedule_arg(args));
     wspec.seed = seed;
     let source = PoissonSource::new(wspec).with_horizon(horizon);
 
@@ -433,6 +461,7 @@ fn cmd_cluster(args: &Args) {
         EngineEvent, EventLog, Fanout, PoissonSource, Session, SessionStatus,
     };
     use layered_prefill::tenant::{RejectReason, TenantRegistry};
+    use layered_prefill::workload::{SessionSource, SessionSpec};
     use std::collections::BTreeSet;
 
     let model = model_arg(args);
@@ -566,6 +595,20 @@ fn cmd_cluster(args: &Args) {
     // priority 1 (interactive). Inert unless a `--policy-spec` carries a
     // `preemption=pause` stage (or srpf/srpt admission).
     let priority_pct = args.usize("priority-pct", 0).min(100) as u32;
+    // Closed-loop multi-turn sessions: `--sessions N` replaces the open
+    // workload with N conversations whose turn N+1 prompt extends turn
+    // N's prompt + answer and arrives a think-time after that turn's
+    // Finished event (tool-call turns fan out children and join on all
+    // of them). `--rate` then paces session OPENINGS; pair with
+    // `--prefix-cache --router prefix` to see deeper turns get cheaper.
+    let sessions = args.usize("sessions", 0);
+    let turns_mean = args.f64("turns-mean", 4.0);
+    let think_time = args.f64("think-time-s", 2.0);
+    let toolcall_pct = args.usize("toolcall-pct", 0).min(100) as u32;
+    let toolcall_fanout = args.usize("toolcall-fanout", 2).max(1) as u32;
+    let reasoning_pct = args.usize("reasoning-pct", 0).min(100) as u32;
+    // Diurnal arrival shaping, shared by every workload arm below.
+    let rate_schedule = rate_schedule_arg(args);
     let n_tenants = tenants.as_ref().map_or(0, |r| r.ids().max().unwrap_or(0));
     // Worker threads for parallel replica stepping: 0 (default) auto-sizes
     // to min(replicas, available parallelism); 1 forces the serial path.
@@ -578,7 +621,7 @@ fn cmd_cluster(args: &Args) {
     // boundary and single-replica runs are fully ordered, but the plain
     // multi-replica path drains replicas sequentially — there only the
     // final-window summary (a single query after all events) is valid.
-    let sampled = has_controller || router.wants_spill() || n_replicas == 1;
+    let sampled = has_controller || router.wants_spill() || n_replicas == 1 || sessions > 0;
     let mut stream = StreamingSlo::new(slo, window);
     if sampled {
         stream = stream.with_samples(window);
@@ -601,7 +644,24 @@ fn cmd_cluster(args: &Args) {
     if let Some(reg) = tenants.clone() {
         builder = builder.tenants(reg);
     }
-    let builder = if open_loop {
+    let mut session_probe = None;
+    let builder = if sessions > 0 {
+        // Session workloads shape their own shared prefixes (each
+        // conversation is one lineage), so --shared-prefix is not mixed in.
+        let mut wspec = WorkloadSpec::new(dataset, rate, sessions)
+            .with_tenants(n_tenants, tenant_heavy)
+            .with_priorities(priority_pct)
+            .with_rate_schedule(rate_schedule.clone());
+        wspec.seed = seed;
+        let sspec = SessionSpec::new(wspec, sessions)
+            .turns_mean(turns_mean)
+            .think_time_s(think_time)
+            .toolcalls(toolcall_pct, toolcall_fanout)
+            .reasoning(reasoning_pct, 4.0);
+        let source = SessionSource::new(sspec);
+        session_probe = Some(source.probe());
+        builder.workload(source)
+    } else if open_loop {
         // --requests bounds the stream when given; otherwise only the
         // horizon ends it.
         let nn = args
@@ -611,14 +671,16 @@ fn cmd_cluster(args: &Args) {
         let mut wspec = WorkloadSpec::new(dataset, rate, nn)
             .with_shared_prefix(shared_prefix, prefix_groups)
             .with_tenants(n_tenants, tenant_heavy)
-            .with_priorities(priority_pct);
+            .with_priorities(priority_pct)
+            .with_rate_schedule(rate_schedule.clone());
         wspec.seed = seed;
         builder.workload(PoissonSource::new(wspec).with_horizon(horizon))
     } else {
         let mut wspec = WorkloadSpec::new(dataset, rate, n)
             .with_shared_prefix(shared_prefix, prefix_groups)
             .with_tenants(n_tenants, tenant_heavy)
-            .with_priorities(priority_pct);
+            .with_priorities(priority_pct)
+            .with_rate_schedule(rate_schedule.clone());
         wspec.seed = seed;
         let trace = WorkloadGen::new(wspec).generate();
         builder.trace(&trace)
@@ -635,7 +697,13 @@ fn cmd_cluster(args: &Args) {
         model.name,
         dataset.name(),
         rate,
-        if open_loop { "open-loop".to_string() } else { n.to_string() }
+        if sessions > 0 {
+            format!("{sessions} sessions")
+        } else if open_loop {
+            "open-loop".to_string()
+        } else {
+            n.to_string()
+        }
     ))
     .header(&[
         "replica",
@@ -784,6 +852,34 @@ fn cmd_cluster(args: &Args) {
     }
     if matches!(rep.status, SessionStatus::Drained) && unfinished > 0 {
         eprintln!("WARNING: {unfinished} admitted requests never finished (lost work)");
+    }
+
+    // Per-conversation-depth view of a session run: TTFT and prefix-cache
+    // payoff vs turn depth, plus the closed-loop conservation summary
+    // (every owed turn spawned, or honestly reported unspawned at a cut).
+    if let Some(probe) = session_probe {
+        let depths = probe.depth_by_id();
+        let hits = layered_prefill::metrics::prefix_hits_by_request(
+            log.events.iter().map(|(_, e)| e),
+        );
+        let rows = layered_prefill::metrics::depth_table(
+            &fm.requests,
+            &hits,
+            |id| depths.get(&id).copied(),
+            &slo,
+        );
+        print!(
+            "{}",
+            layered_prefill::report::tables::session_depth_table(&rows)
+        );
+        println!(
+            "sessions: {} opened, {} completed | turns spawned {} / owed {} ({} unspawned at cut)",
+            sessions,
+            probe.completed_sessions(),
+            probe.spawned(),
+            probe.owed(),
+            probe.owed().saturating_sub(probe.spawned()),
+        );
     }
 
     // Streaming sliding-window SLO timeline (live event-stream metrics).

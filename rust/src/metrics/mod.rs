@@ -1,10 +1,13 @@
 //! Serving metrics: per-request latency records, run-level aggregates, SLO
 //! attainment (full + TTFT/TBT breakdown, paper Figs 3–4), token timelines
-//! (Fig 5), traffic and energy summaries (Tables 2/7/8), and streaming
-//! sliding-window SLO/goodput over the live event stream ([`streaming`]).
+//! (Fig 5), traffic and energy summaries (Tables 2/7/8), streaming
+//! sliding-window SLO/goodput over the live event stream ([`streaming`]),
+//! and per-conversation-depth session tables ([`sessions`]).
 
+pub mod sessions;
 pub mod streaming;
 
+pub use sessions::{depth_table, prefix_hits_by_request, DepthRow};
 pub use streaming::{StreamingSlo, TenantSummary, WindowSummary};
 
 use crate::config::slo::{evaluate, SloSpec};

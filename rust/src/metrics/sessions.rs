@@ -1,0 +1,190 @@
+//! Per-session metrics: how multi-turn conversations behave as they
+//! deepen — TTFT, prefix-cache payoff, and SLO attainment grouped by
+//! conversation depth (main-chain turn number; tool-call children and
+//! joins inherit the depth of the turn that spawned them).
+//!
+//! The grouping is decoupled from the session layer on purpose: the run
+//! produces plain [`RequestRecord`]s and `PrefixHit` credits, and a
+//! [`SessionProbe`](crate::workload::SessionProbe) (or any other id →
+//! depth oracle) supplies the lineage. That keeps this module a pure
+//! function of run outputs, usable from tests, the CLI, and reports
+//! without re-running anything.
+
+use std::collections::BTreeMap;
+
+use crate::config::slo::{evaluate, SloSpec};
+use crate::metrics::RequestRecord;
+use crate::util::stats::Samples;
+
+/// One depth bucket of a session run: all turns whose conversation depth
+/// is `depth`, across every session in the run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DepthRow {
+    /// Main-chain turn number, 1-based (turn 1 = the opening prompt).
+    pub depth: u32,
+    /// Requests in this bucket.
+    pub n: usize,
+    pub ttft_mean_s: f64,
+    pub ttft_p99_s: f64,
+    /// Prompt tokens this bucket skipped via prefix-cache hits
+    /// (`EngineEvent::PrefixHit` credit, summed). Grows with depth when
+    /// cross-turn caching works: deeper turns re-claim everything their
+    /// ancestors published.
+    pub prefix_hit_tokens: u64,
+    /// Fraction of the bucket attaining the full SLO.
+    pub slo_full: f64,
+}
+
+/// Group finished requests by conversation depth.
+///
+/// * `records` — the run's per-request latency records.
+/// * `hits` — prefix-cache credit per request id (cached tokens from
+///   `EngineEvent::PrefixHit`; requests without a hit are simply absent).
+/// * `depth_of` — id → depth oracle; `None` excludes the request (e.g.
+///   background open-loop traffic mixed into a session run).
+/// * `slo` — the SLO to score each bucket against.
+///
+/// Rows come back ordered by depth. Requests the oracle does not know are
+/// left out of every bucket, so a mixed workload reports only its
+/// session slice.
+pub fn depth_table(
+    records: &[RequestRecord],
+    hits: &BTreeMap<u64, u64>,
+    depth_of: impl Fn(u64) -> Option<u32>,
+    slo: &SloSpec,
+) -> Vec<DepthRow> {
+    let mut buckets: BTreeMap<u32, Vec<&RequestRecord>> = BTreeMap::new();
+    for r in records {
+        if let Some(d) = depth_of(r.id) {
+            buckets.entry(d).or_default().push(r);
+        }
+    }
+    buckets
+        .into_iter()
+        .map(|(depth, recs)| {
+            let mut ttft = Samples::new();
+            let mut full = 0usize;
+            let mut hit_tokens = 0u64;
+            for r in &recs {
+                ttft.push(r.ttft_s);
+                full += evaluate(r.ttft_s, &r.tbts_s, slo).full() as usize;
+                hit_tokens += hits.get(&r.id).copied().unwrap_or(0);
+            }
+            let n = recs.len();
+            DepthRow {
+                depth,
+                n,
+                ttft_mean_s: ttft.mean(),
+                ttft_p99_s: ttft.percentile(0.99),
+                prefix_hit_tokens: hit_tokens,
+                slo_full: full as f64 / n.max(1) as f64,
+            }
+        })
+        .collect()
+}
+
+/// Collect per-request prefix-cache credit from an event stream's
+/// `PrefixHit` events, in the shape [`depth_table`] consumes. Accepts
+/// any borrowed event iterator, e.g.
+/// `log.events.iter().map(|(_, e)| e)` over an
+/// [`EventLog`](crate::serve::EventLog).
+pub fn prefix_hits_by_request<'a>(
+    events: impl IntoIterator<Item = &'a crate::serve::EngineEvent>,
+) -> BTreeMap<u64, u64> {
+    let mut hits = BTreeMap::new();
+    for ev in events {
+        if let crate::serve::EngineEvent::PrefixHit {
+            id, cached_tokens, ..
+        } = ev
+        {
+            *hits.entry(*id).or_insert(0) += *cached_tokens as u64;
+        }
+    }
+    hits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::EngineEvent;
+
+    fn rec(id: u64, ttft: f64) -> RequestRecord {
+        RequestRecord {
+            id,
+            arrival_s: 0.0,
+            input_len: 100,
+            output_len: 10,
+            ttft_s: ttft,
+            tbts_s: vec![0.01; 9],
+            finish_s: ttft + 0.09,
+            tenant: 0,
+        }
+    }
+
+    fn slo() -> SloSpec {
+        SloSpec {
+            ttft_s: 1.0,
+            tbt_s: 0.125,
+        }
+    }
+
+    #[test]
+    fn buckets_by_depth_and_sums_hits() {
+        let records = vec![rec(1, 2.0), rec(2, 0.5), rec(3, 0.25), rec(4, 0.25)];
+        let mut hits = BTreeMap::new();
+        hits.insert(2u64, 64u64);
+        hits.insert(3u64, 128u64);
+        // ids 1-2 are depth 1, id 3 depth 2; id 4 is foreign traffic.
+        let depth_of = |id: u64| match id {
+            1 | 2 => Some(1),
+            3 => Some(2),
+            _ => None,
+        };
+        let rows = depth_table(&records, &hits, depth_of, &slo());
+        assert_eq!(rows.len(), 2);
+        assert_eq!((rows[0].depth, rows[0].n), (1, 2));
+        assert!((rows[0].ttft_mean_s - 1.25).abs() < 1e-9);
+        assert_eq!(rows[0].prefix_hit_tokens, 64);
+        assert!((rows[0].slo_full - 0.5).abs() < 1e-9); // id 1 misses TTFT
+        assert_eq!((rows[1].depth, rows[1].n), (2, 1));
+        assert_eq!(rows[1].prefix_hit_tokens, 128);
+        assert!((rows[1].slo_full - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unknown_requests_are_excluded_entirely() {
+        let records = vec![rec(9, 0.1)];
+        let rows = depth_table(&records, &BTreeMap::new(), |_| None, &slo());
+        assert!(rows.is_empty());
+    }
+
+    #[test]
+    fn prefix_hits_accumulate_per_request() {
+        let events = vec![
+            EngineEvent::PrefixHit {
+                t_s: 0.0,
+                id: 7,
+                cached_tokens: 32,
+            },
+            EngineEvent::PrefixHit {
+                t_s: 1.0,
+                id: 7,
+                cached_tokens: 16,
+            },
+            EngineEvent::TokenEmitted {
+                t_s: 1.5,
+                id: 7,
+                generated: 1,
+            },
+            EngineEvent::PrefixHit {
+                t_s: 2.0,
+                id: 8,
+                cached_tokens: 8,
+            },
+        ];
+        let hits = prefix_hits_by_request(&events);
+        assert_eq!(hits.get(&7), Some(&48));
+        assert_eq!(hits.get(&8), Some(&8));
+        assert_eq!(hits.len(), 2);
+    }
+}

@@ -198,6 +198,35 @@ pub fn table8(n_requests: usize) -> String {
     t.render()
 }
 
+/// Per-conversation-depth session table: TTFT, prefix-cache payoff, and
+/// SLO attainment as multi-turn conversations deepen (the closed-loop
+/// session workload's payoff view — deeper turns should get CHEAPER with
+/// prefix caching + affinity routing, not more expensive).
+pub fn session_depth_table(rows: &[crate::metrics::DepthRow]) -> String {
+    let mut t = Table::new("Per-turn-depth session metrics").header(&[
+        "depth",
+        "turns",
+        "TTFT mean(s)",
+        "TTFT p99(s)",
+        "prefix-hit tok",
+        "SLO full",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.depth.to_string(),
+            r.n.to_string(),
+            f3(r.ttft_mean_s),
+            f3(r.ttft_p99_s),
+            r.prefix_hit_tokens.to_string(),
+            pct(r.slo_full),
+        ]);
+    }
+    if rows.is_empty() {
+        t.push_note("no session turns finished");
+    }
+    t.render()
+}
+
 /// ASCII helper so tables can carry a paper-reference footnote.
 trait Note {
     fn push_note(&mut self, s: &str);
@@ -234,5 +263,33 @@ mod tests {
         let out = table7(15);
         assert!(out.contains('%'));
         assert!(out.contains("arxiv"));
+    }
+
+    #[test]
+    fn session_depth_table_renders_rows_and_empty_note() {
+        let rows = vec![
+            crate::metrics::DepthRow {
+                depth: 1,
+                n: 4,
+                ttft_mean_s: 1.25,
+                ttft_p99_s: 2.5,
+                prefix_hit_tokens: 0,
+                slo_full: 0.75,
+            },
+            crate::metrics::DepthRow {
+                depth: 2,
+                n: 4,
+                ttft_mean_s: 0.5,
+                ttft_p99_s: 1.0,
+                prefix_hit_tokens: 8192,
+                slo_full: 1.0,
+            },
+        ];
+        let out = session_depth_table(&rows);
+        assert!(out.contains("depth"));
+        assert!(out.contains("8192"));
+        assert!(out.contains("75"));
+        let empty = session_depth_table(&[]);
+        assert!(empty.contains("no session turns finished"));
     }
 }

@@ -38,6 +38,26 @@
 //! horizon ends the run in [`SessionStatus::Halted`] with work still in
 //! flight, the regime the paper's continuous-trace evaluation needs.
 //!
+//! ## Closed-loop intake
+//!
+//! Intake is also a *loop*, not just a pull: a source that reports
+//! [`WorkloadSource::closed_loop`] receives every engine event back
+//! through [`WorkloadSource::observe`] at each control boundary, in
+//! replica-index order — the same order at every thread count — and may
+//! schedule dependent arrivals off what it sees. That is how
+//! [`SessionSource`](crate::workload::SessionSource) models multi-turn
+//! conversations (turn N+1's prompt extends turn N's prompt + answer,
+//! arriving a think-time after that turn's [`EngineEvent::Finished`])
+//! and agentic tool-call DAGs (a parent's completion fans out K children;
+//! the join turn waits for all of them). Closed-loop sessions always run
+//! stepped: arrivals and drain merge into one loop that pulls newly
+//! scheduled turns, routes whatever is due at the control clock, and
+//! feeds each boundary's events back to the source. A horizon cut
+//! reports turns the source still owes ([`WorkloadSource::unspawned`])
+//! plus pulled-but-unrouted arrivals honestly in
+//! [`SessionStatus::Halted`]'s `pending`. Open sources keep the default
+//! no-op `observe` and take the exact pre-closed-loop code paths.
+//!
 //! ## The control plane
 //!
 //! A session with a [`Controller`] (or a spill router — see
@@ -964,11 +984,29 @@ impl<'a> ControlledRun<'a> {
     }
 
     /// One control boundary at engine time `t`: land due migrations,
-    /// deliver buffered events to the controller, spill-requeue fresh KV
-    /// rejections, apply actions.
-    fn boundary(&mut self, t: f64, sink: &mut Tally<'_>) -> Result<()> {
+    /// deliver buffered events to the closed-loop source (if any) and the
+    /// controller, spill-requeue fresh KV rejections, apply actions.
+    ///
+    /// `feed` is the closed-loop intake: when present, every buffered
+    /// event reaches [`WorkloadSource::observe`] here — and ONLY here, in
+    /// replica-index boundary order, which is what keeps dependent
+    /// arrivals bit-identical at every thread count. Sessions with an
+    /// open source pass `None` and take the exact pre-closed-loop path.
+    fn boundary(
+        &mut self,
+        t: f64,
+        sink: &mut Tally<'_>,
+        feed: Option<&mut dyn WorkloadSource>,
+    ) -> Result<()> {
         self.deliver_migrations(t, sink);
-        if let Some(c) = self.controller.as_mut() {
+        if let Some(src) = feed {
+            for (rep, ev) in sink.buffer.drain(..) {
+                src.observe(rep, &ev);
+                if let Some(c) = self.controller.as_mut() {
+                    c.on_event(rep, &ev);
+                }
+            }
+        } else if let Some(c) = self.controller.as_mut() {
             for (rep, ev) in sink.buffer.drain(..) {
                 c.on_event(rep, &ev);
             }
@@ -1171,10 +1209,12 @@ impl<'a> Session<'a> {
     /// Execute the session: route every source arrival against live replica
     /// views, then drain (or halt at the horizon) every replica. Sim-backed
     /// sessions are infallible; real-executor sessions surface PJRT errors.
-    /// Sessions with a controller or a spill router take the stepped
-    /// control-plane path; all others take the plain path unchanged.
+    /// Sessions with a controller, a spill router, or a closed-loop source
+    /// (dependent arrivals need the event stream fed back at control
+    /// boundaries) take the stepped control-plane path; all others take
+    /// the plain path unchanged.
     pub fn run(self) -> Result<SessionReport> {
-        if self.controller.is_some() || self.router.wants_spill() {
+        if self.controller.is_some() || self.router.wants_spill() || self.source.closed_loop() {
             self.run_controlled()
         } else {
             self.run_plain()
@@ -1304,6 +1344,7 @@ impl<'a> Session<'a> {
         };
         let spill = router.wants_spill();
         let has_controller = controller.is_some();
+        let closed = source.closed_loop();
         let live = build_live(
             &specs,
             states,
@@ -1319,7 +1360,8 @@ impl<'a> Session<'a> {
         let mut sink = Tally {
             inner: user_sink,
             kv_rejects: vec![0; n],
-            buffer_events: has_controller,
+            // Closed-loop sources consume the boundary event feed too.
+            buffer_events: has_controller || closed,
             track_rejects: spill,
             buffer: Vec::new(),
             fresh_rejects: Vec::new(),
@@ -1346,67 +1388,166 @@ impl<'a> Session<'a> {
         };
         let dt = if control_dt > 0.0 { control_dt } else { 0.25 };
         let mut now = 0.0f64;
+        // Arrivals the closed-loop merge has pulled but not yet routed
+        // (their arrival instant is still ahead of the control clock); at
+        // a horizon cut these count as pending alongside the source's
+        // not-yet-spawned turns.
+        let mut held: Vec<Request> = Vec::new();
 
-        while let Some(req) = source.next_request() {
-            if !immediate_arrivals {
-                while now < req.arrival_s {
-                    let step = (now + dt).min(req.arrival_s);
-                    run.advance(step, &mut sink)?;
-                    run.boundary(step, &mut sink)?;
-                    now = step;
-                }
-            }
-            run.route_arrival(req, &sink);
-        }
-
-        // Drain under control: keep stepping boundaries until every replica
-        // is out of work or horizon-halted, so controllers keep acting
-        // through the tail. A fleet whose only remaining work is
-        // permanently admission-stuck (a footprint no KV pool ever fits)
-        // would otherwise step forever: after 64 consecutive boundaries
-        // with zero iterations and zero routing changes, give up like the
-        // plain drain path does.
-        let mut stalled = 0u32;
-        loop {
-            let done = run.in_transit.is_empty()
-                && run
-                    .live
-                    .iter()
-                    .all(|r| r.core.halted() || r.unfinished() == 0);
-            if done {
-                break;
-            }
-            let iters_before: u64 = run.live.iter().map(|r| r.core.iterations()).sum();
-            let assigns_before = run.assignments.len();
-            let step = now + dt;
-            run.advance(step, &mut sink)?;
-            run.boundary(step, &mut sink)?;
-            now = step;
-            let iters_after: u64 = run.live.iter().map(|r| r.core.iterations()).sum();
-            if iters_after == iters_before && run.assignments.len() == assigns_before {
-                stalled += 1;
-                if stalled >= 64 {
-                    // Migrations in transit always land eventually: jump
-                    // the control clock to the earliest landing instead of
-                    // spinning boundaries (or giving up on live work).
-                    let next_landing = run
-                        .in_transit
-                        .iter()
-                        .map(|tr| tr.ready_s)
-                        .min_by(|a, b| a.partial_cmp(b).expect("finite ready times"));
-                    match next_landing {
-                        Some(ready) => {
-                            now = now.max(ready);
-                            stalled = 0;
-                        }
-                        None => break,
+        if !closed {
+            while let Some(req) = source.next_request() {
+                if !immediate_arrivals {
+                    while now < req.arrival_s {
+                        let step = (now + dt).min(req.arrival_s);
+                        run.advance(step, &mut sink)?;
+                        run.boundary(step, &mut sink, None)?;
+                        now = step;
                     }
                 }
-            } else {
-                stalled = 0;
+                run.route_arrival(req, &sink);
+            }
+
+            // Drain under control: keep stepping boundaries until every
+            // replica is out of work or horizon-halted, so controllers
+            // keep acting through the tail. A fleet whose only remaining
+            // work is permanently admission-stuck (a footprint no KV pool
+            // ever fits) would otherwise step forever: after 64
+            // consecutive boundaries with zero iterations and zero routing
+            // changes, give up like the plain drain path does.
+            let mut stalled = 0u32;
+            loop {
+                let done = run.in_transit.is_empty()
+                    && run
+                        .live
+                        .iter()
+                        .all(|r| r.core.halted() || r.unfinished() == 0);
+                if done {
+                    break;
+                }
+                let iters_before: u64 = run.live.iter().map(|r| r.core.iterations()).sum();
+                let assigns_before = run.assignments.len();
+                let step = now + dt;
+                run.advance(step, &mut sink)?;
+                run.boundary(step, &mut sink, None)?;
+                now = step;
+                let iters_after: u64 = run.live.iter().map(|r| r.core.iterations()).sum();
+                if iters_after == iters_before && run.assignments.len() == assigns_before {
+                    stalled += 1;
+                    if stalled >= 64 {
+                        // Migrations in transit always land eventually:
+                        // jump the control clock to the earliest landing
+                        // instead of spinning boundaries (or giving up on
+                        // live work).
+                        let next_landing = run
+                            .in_transit
+                            .iter()
+                            .map(|tr| tr.ready_s)
+                            .min_by(|a, b| a.partial_cmp(b).expect("finite ready times"));
+                        match next_landing {
+                            Some(ready) => {
+                                now = now.max(ready);
+                                stalled = 0;
+                            }
+                            None => break,
+                        }
+                    }
+                } else {
+                    stalled = 0;
+                }
+            }
+        } else {
+            // Closed-loop merge: arrivals and drain are ONE loop, because
+            // the source keeps scheduling dependent arrivals (next turns,
+            // tool-call children) off the events each boundary feeds it.
+            // Per round: pull everything currently scheduled, route what
+            // is due at the control clock (in (arrival, id) order — the
+            // same order at every thread count), then advance one slice
+            // and run its boundary, which delivers the slice's events to
+            // `observe` in replica-index order and may spawn more work.
+            let mut stalled = 0u32;
+            loop {
+                let mut pulled = 0usize;
+                while let Some(r) = source.next_request() {
+                    held.push(r);
+                    pulled += 1;
+                }
+                let mut routed = 0usize;
+                loop {
+                    let due = held
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, r)| immediate_arrivals || r.arrival_s <= now + 1e-9)
+                        .min_by(|(_, a), (_, b)| {
+                            a.arrival_s
+                                .partial_cmp(&b.arrival_s)
+                                .expect("finite arrivals")
+                                .then(a.id.cmp(&b.id))
+                        })
+                        .map(|(i, _)| i);
+                    let Some(i) = due else { break };
+                    let req = held.swap_remove(i);
+                    run.route_arrival(req, &sink);
+                    routed += 1;
+                }
+                let fleet_done = run.in_transit.is_empty()
+                    && run
+                        .live
+                        .iter()
+                        .all(|r| r.core.halted() || r.unfinished() == 0);
+                if fleet_done && held.is_empty() && source.unspawned() == 0 {
+                    break; // every spawned turn served, nothing owed
+                }
+                if fleet_done && horizon_s > 0.0 && now >= horizon_s {
+                    break; // horizon cut: held + unspawned become pending
+                }
+                let next_due = held
+                    .iter()
+                    .map(|r| r.arrival_s)
+                    .fold(f64::INFINITY, f64::min);
+                let step = (now + dt).min(next_due.max(now + 1e-9));
+                let iters_before: u64 = run.live.iter().map(|r| r.core.iterations()).sum();
+                let assigns_before = run.assignments.len();
+                run.advance(step, &mut sink)?;
+                run.boundary(step, &mut sink, Some(source.as_mut()))?;
+                now = step;
+                let iters_after: u64 = run.live.iter().map(|r| r.core.iterations()).sum();
+                // A future held arrival is progress by itself: the clock
+                // steps straight to it. Everything else mirrors the open
+                // drain tail's 64-boundary stall guard, the safety net
+                // that keeps a source whose awaited event can never come
+                // (it would be a conservation bug) from spinning forever —
+                // the cut is then reported honestly as Halted.
+                let progressed = pulled > 0
+                    || routed > 0
+                    || iters_after != iters_before
+                    || run.assignments.len() != assigns_before
+                    || !held.is_empty();
+                if progressed {
+                    stalled = 0;
+                } else {
+                    stalled += 1;
+                    if stalled >= 64 {
+                        let next_landing = run
+                            .in_transit
+                            .iter()
+                            .map(|tr| tr.ready_s)
+                            .min_by(|a, b| a.partial_cmp(b).expect("finite ready times"));
+                        match next_landing {
+                            Some(ready) => {
+                                now = now.max(ready);
+                                stalled = 0;
+                            }
+                            None => break,
+                        }
+                    }
+                }
             }
         }
         // Final pass: emit drain/halt notifications and collect statuses.
+        // A closed-loop horizon cut owes an honest count for work that
+        // never reached a replica: pulled-but-unrouted arrivals plus the
+        // source's not-yet-spawned turns.
+        let extra_pending = held.len() + source.unspawned();
         let mut any_halted = false;
         let mut halted_pending = 0usize;
         for status in advance_fleet(&mut run.live, run.pool.as_ref(), None, &mut sink)? {
@@ -1415,9 +1556,9 @@ impl<'a> Session<'a> {
                 halted_pending += pending;
             }
         }
-        let status = if any_halted {
+        let status = if any_halted || extra_pending > 0 {
             SessionStatus::Halted {
-                pending: halted_pending,
+                pending: halted_pending + extra_pending,
             }
         } else {
             SessionStatus::Drained

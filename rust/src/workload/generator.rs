@@ -84,6 +84,61 @@ impl DatasetModel {
     }
 }
 
+/// The schedule's rate at time `t`: the last segment whose start is
+/// `<= t`, or the spec's flat `rate` before the first segment.
+fn rate_at(spec: &WorkloadSpec, t: f64) -> f64 {
+    let mut rate = spec.rate;
+    for &(at, r) in &spec.rate_schedule {
+        if at <= t {
+            rate = r;
+        } else {
+            break;
+        }
+    }
+    rate
+}
+
+/// The first schedule boundary strictly after `t`, if any.
+fn next_boundary(spec: &WorkloadSpec, t: f64) -> Option<f64> {
+    spec.rate_schedule
+        .iter()
+        .map(|&(at, _)| at)
+        .find(|&at| at > t)
+}
+
+/// Advance a Poisson arrival clock from `t` by one inter-arrival gap.
+///
+/// With an empty `rate_schedule` this is exactly
+/// `t + rng.exponential(spec.rate)` — the pre-schedule generator line, so
+/// schedule-off traces stay bit-identical. With a schedule it samples the
+/// inhomogeneous process by time-rescaling: ONE unit-rate exponential draw
+/// of "work" is walked through the piecewise-constant integrated intensity,
+/// however many segments the wait spans. One draw per arrival either way,
+/// so the whole trace is a pure function of the RNG seed. Shared by
+/// [`WorkloadGen::generate`] and the streaming
+/// [`PoissonSource`](crate::workload::source::PoissonSource).
+pub fn next_arrival(spec: &WorkloadSpec, rng: &mut Rng, t: f64) -> f64 {
+    if spec.rate_schedule.is_empty() {
+        return t + rng.exponential(spec.rate);
+    }
+    let mut work = rng.exponential(1.0);
+    let mut now = t;
+    loop {
+        let rate = rate_at(spec, now).max(1e-9);
+        match next_boundary(spec, now) {
+            Some(end) => {
+                let capacity = (end - now) * rate;
+                if work <= capacity {
+                    return now + work / rate;
+                }
+                work -= capacity;
+                now = end;
+            }
+            None => return now + work / rate,
+        }
+    }
+}
+
 /// Apply a spec's shared-prefix (system-prompt) model to one sampled
 /// request: the prompt is PREPENDED with a `shared_prefix_len`-token prefix
 /// drawn from one of `prefix_groups` distinct system prompts, assigned
@@ -162,7 +217,7 @@ impl WorkloadGen {
         let mut reqs = Vec::with_capacity(self.spec.n_requests);
         for id in 0..self.spec.n_requests as u64 {
             if id > 0 {
-                t += rng.exponential(self.spec.rate);
+                t = next_arrival(&self.spec, &mut rng, t);
             }
             let (input_len, output_len) = match self.spec.dataset {
                 Dataset::Fixed => (self.spec.fixed_input, self.spec.fixed_output),
@@ -343,6 +398,96 @@ mod tests {
         let off =
             WorkloadGen::new(spec(Dataset::ShareGpt, 2.0, 200).with_priorities(0)).generate();
         assert_eq!(off.requests, base.requests);
+    }
+
+    #[test]
+    fn rate_schedule_is_pure_function_of_seed() {
+        let s = spec(Dataset::ShareGpt, 2.0, 500)
+            .with_rate_schedule(vec![(0.0, 2.0), (30.0, 8.0), (60.0, 2.0)]);
+        let a = WorkloadGen::new(s.clone()).generate();
+        let b = WorkloadGen::new(s).generate();
+        assert_eq!(a.requests, b.requests);
+    }
+
+    #[test]
+    fn empty_rate_schedule_is_bit_identical_to_flat() {
+        let base = WorkloadGen::new(spec(Dataset::ShareGpt, 2.0, 200)).generate();
+        let off = WorkloadGen::new(
+            spec(Dataset::ShareGpt, 2.0, 200).with_rate_schedule(Vec::new()),
+        )
+        .generate();
+        assert_eq!(off.requests, base.requests);
+    }
+
+    #[test]
+    fn rate_schedule_shapes_arrival_density() {
+        // 2 req/s until t=60, 10 req/s until t=120, 2 req/s after: the
+        // burst window must hold several times more arrivals per second.
+        let s = spec(Dataset::Fixed, 2.0, 2000)
+            .with_rate_schedule(vec![(0.0, 2.0), (60.0, 10.0), (120.0, 2.0)]);
+        let t = WorkloadGen::new(s).generate();
+        let in_window = |lo: f64, hi: f64| {
+            t.requests
+                .iter()
+                .filter(|r| r.arrival_s >= lo && r.arrival_s < hi)
+                .count() as f64
+                / (hi - lo)
+        };
+        let calm = in_window(0.0, 60.0);
+        let burst = in_window(60.0, 120.0);
+        assert!((calm - 2.0).abs() / 2.0 < 0.25, "calm rate = {calm:.2}");
+        assert!((burst - 10.0).abs() / 10.0 < 0.25, "burst rate = {burst:.2}");
+        // Schedule changes timing only, not lengths: same ids, same sizes.
+        let flat = WorkloadGen::new(spec(Dataset::Fixed, 2.0, 2000)).generate();
+        for (a, b) in t.requests.iter().zip(&flat.requests) {
+            assert_eq!((a.id, a.input_len, a.output_len), (b.id, b.input_len, b.output_len));
+        }
+    }
+
+    #[test]
+    fn parse_rate_schedule_round_trips() {
+        let pts = WorkloadSpec::parse_rate_schedule("0:2, 30:8 ,60:2").unwrap();
+        assert_eq!(pts, vec![(0.0, 2.0), (30.0, 8.0), (60.0, 2.0)]);
+        assert!(WorkloadSpec::parse_rate_schedule("").is_err());
+        assert!(WorkloadSpec::parse_rate_schedule("30").is_err());
+        assert!(WorkloadSpec::parse_rate_schedule("x:2").is_err());
+        assert!(WorkloadSpec::parse_rate_schedule("0:-1").is_err());
+        assert!(WorkloadSpec::parse_rate_schedule("-5:2").is_err());
+    }
+
+    /// Satellite: the deterministic id-stamping functions commute. Session
+    /// turn stamping reuses them, so lock that `stamp_shared_prefix` ×
+    /// `stamp_tenant` × `stamp_priority` applied in ANY order yield the
+    /// same request (shared-prefix touches `input_len`/`prefix_*` only;
+    /// tenant and priority each touch their own field and read only `id`).
+    #[test]
+    fn stamping_functions_commute_in_any_order() {
+        let s = spec(Dataset::ShareGpt, 2.0, 120)
+            .with_shared_prefix(512, 3)
+            .with_tenants(4, 70)
+            .with_priorities(30);
+        let base = WorkloadGen::new(spec(Dataset::ShareGpt, 2.0, 120)).generate();
+        type Stamp = fn(&WorkloadSpec, Request) -> Request;
+        let f: [Stamp; 3] = [stamp_shared_prefix, stamp_tenant, stamp_priority];
+        let orders: [[usize; 3]; 6] = [
+            [0, 1, 2],
+            [0, 2, 1],
+            [1, 0, 2],
+            [1, 2, 0],
+            [2, 0, 1],
+            [2, 1, 0],
+        ];
+        for r in &base.requests {
+            let golden = f[2](&s, f[1](&s, f[0](&s, *r)));
+            for ord in &orders {
+                let got = f[ord[2]](&s, f[ord[1]](&s, f[ord[0]](&s, *r)));
+                assert_eq!(got, golden, "order {ord:?} diverged for id {}", r.id);
+            }
+            // And the golden matches what WorkloadGen itself produces.
+            assert_eq!(golden.tenant as u64, if golden.id % 100 < 70 { 1 } else { 2 + golden.id % 3 });
+            assert_eq!(golden.priority, u8::from(golden.id % 100 < 30));
+            assert_eq!(golden.prefix_id, 1 + golden.id % 3);
+        }
     }
 
     #[test]

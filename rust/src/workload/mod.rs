@@ -1,10 +1,14 @@
 //! Workload generation: Poisson arrivals + dataset length models fitted to
-//! the paper's Table 4 statistics, with deterministic trace record/replay.
+//! the paper's Table 4 statistics, with deterministic trace record/replay,
+//! diurnal rate schedules, and closed-loop session workloads (multi-turn
+//! conversations and tool-call DAGs driven by engine events).
 
 pub mod generator;
+pub mod session;
 pub mod source;
 pub mod trace;
 
 pub use generator::{DatasetModel, WorkloadGen};
+pub use session::{SessionProbe, SessionSource, SessionSpec, TurnKind, TurnMeta};
 pub use source::{PoissonSource, TraceSource, WorkloadSource};
 pub use trace::{Request, Trace};

@@ -1,0 +1,766 @@
+//! Closed-loop session workloads: multi-turn conversations, long-decode
+//! reasoning turns, and tool-call DAGs whose arrivals DEPEND on engine
+//! events.
+//!
+//! [`SessionSource`] is the event-coupled side of the refactored
+//! [`WorkloadSource`] contract (see the `source` module docs): it answers
+//! `true` from [`WorkloadSource::closed_loop`], receives every
+//! [`EngineEvent`] back through [`WorkloadSource::observe`] at each control
+//! boundary, and reacts to `Finished` by scheduling the *dependent*
+//! arrivals of the paper's interactive regime:
+//!
+//! * **Conversation turns**: turn N's prompt is turn N−1's prompt + its
+//!   generated answer + fresh user text, arriving one think-time gap after
+//!   turn N−1 finished. Every turn of a session carries the same lineage
+//!   `prefix_id` with `prefix_len = input_len` (the whole prompt is a
+//!   prefix of the session's token stream), so with the prefix cache on,
+//!   turn N's admission credits all blocks turn N−1 computed and published
+//!   — cross-turn cache hits that grow with depth — and the
+//!   prefix-affinity router keeps the whole session on its home replica.
+//! * **Reasoning turns**: a configurable share of turns decode several
+//!   times longer (long think-token outputs).
+//! * **Tool-call DAGs**: a configurable share of turns fan out K children
+//!   on `Finished` (prompt = parent prompt + tool arguments, claiming only
+//!   the parent prompt as shared lineage — the divergent argument suffix
+//!   stays request-private in the cache), and the NEXT turn is a join: it
+//!   arrives only after ALL K children finish, its prompt folding in the
+//!   children's tool results.
+//!
+//! Everything random — session start times (schedule-shaped Poisson via
+//! the shared [`next_arrival`] sampler), turn counts, think gaps, lengths,
+//! turn kinds — is pre-sampled at construction as a pure function of the
+//! spec seed; runtime state only decides *when* pre-scripted turns arrive.
+//! Dependent arrivals are therefore bit-deterministic across thread
+//! counts: the session feeds `observe` in replica-index boundary order,
+//! and ids are allocated in that order.
+//!
+//! Conservation (locked by `tests/session_workloads.rs`): every spawned
+//! turn/child traces to exactly one parent `Finished`; a join never
+//! arrives before its last child finishes; [`WorkloadSource::unspawned`]
+//! reports turns still owed so a horizon cut accounts for them honestly.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use crate::config::{Dataset, WorkloadSpec};
+use crate::serve::event::EngineEvent;
+use crate::util::rng::Rng;
+use crate::workload::generator::{next_arrival, stamp_priority, stamp_tenant, DatasetModel};
+use crate::workload::source::WorkloadSource;
+use crate::workload::trace::Request;
+
+/// Lineage `prefix_id`s start here: far above `stamp_shared_prefix`'s
+/// group ids (`1..=prefix_groups`), so session lineages can never collide
+/// with system-prompt prefix groups in the same run.
+pub const LINEAGE_BASE: u64 = 1 << 32;
+
+/// Prompts stop growing past this many tokens (deep sessions would
+/// otherwise outgrow any KV pool).
+const MAX_PROMPT: u32 = 32_768;
+
+/// What a session request is, within its conversation DAG.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TurnKind {
+    /// Ordinary conversation turn.
+    Chat,
+    /// Long-decode reasoning turn (output scaled by `reasoning_mult`).
+    Reasoning,
+    /// Turn whose `Finished` fans out tool-call children.
+    ToolCall,
+    /// One fanned-out tool call (child of a `ToolCall` turn).
+    ToolChild,
+    /// Turn that waited on ALL children of the preceding `ToolCall`.
+    Join,
+}
+
+/// Declarative description of a session workload.
+///
+/// `base` supplies the dataset length models, the session-START arrival
+/// rate (`rate`, optionally shaped by `rate_schedule`), the seed, and —
+/// reused verbatim via the deterministic stamping functions — the tenant
+/// and priority mix for session turns.
+#[derive(Clone, Debug)]
+pub struct SessionSpec {
+    pub base: WorkloadSpec,
+    /// Number of sessions (conversations).
+    pub sessions: usize,
+    /// Mean main-chain turns per session (min 1; Poisson-distributed).
+    pub turns_mean: f64,
+    /// Exact main-chain turns per session; 0 (default) samples Poisson
+    /// around `turns_mean`. Tests and depth-table experiments set this for
+    /// a clean turns-per-session shape.
+    pub turns_exact: u32,
+    /// Mean user think time between a turn's finish and the next turn's
+    /// arrival, seconds (exponential; 0 = immediate follow-ups).
+    pub think_time_s: f64,
+    /// Fresh user tokens each follow-up turn appends. 0 = sample from the
+    /// dataset's output-length model per turn.
+    pub followup_tokens: u32,
+    /// Percent of turns that fan out tool-call children on finish.
+    pub toolcall_pct: u32,
+    /// Children per tool-call turn.
+    pub toolcall_fanout: u32,
+    /// Percent of turns that are long-decode reasoning turns.
+    pub reasoning_pct: u32,
+    /// Output-length multiplier for reasoning turns.
+    pub reasoning_mult: f64,
+}
+
+impl SessionSpec {
+    /// Defaults: 4-turn conversations, 2 s think time, sampled follow-ups,
+    /// no tool calls, no reasoning turns.
+    pub fn new(base: WorkloadSpec, sessions: usize) -> Self {
+        SessionSpec {
+            base,
+            sessions,
+            turns_mean: 4.0,
+            turns_exact: 0,
+            think_time_s: 2.0,
+            followup_tokens: 0,
+            toolcall_pct: 0,
+            toolcall_fanout: 2,
+            reasoning_pct: 0,
+            reasoning_mult: 4.0,
+        }
+    }
+
+    pub fn turns_mean(mut self, k: f64) -> Self {
+        self.turns_mean = k.max(1.0);
+        self
+    }
+
+    pub fn exact_turns(mut self, k: u32) -> Self {
+        self.turns_exact = k;
+        self
+    }
+
+    pub fn think_time_s(mut self, t: f64) -> Self {
+        self.think_time_s = t.max(0.0);
+        self
+    }
+
+    pub fn followup_tokens(mut self, n: u32) -> Self {
+        self.followup_tokens = n;
+        self
+    }
+
+    pub fn toolcalls(mut self, pct: u32, fanout: u32) -> Self {
+        self.toolcall_pct = pct.min(100);
+        self.toolcall_fanout = fanout.max(1);
+        self
+    }
+
+    pub fn reasoning(mut self, pct: u32, mult: f64) -> Self {
+        self.reasoning_pct = pct.min(100);
+        self.reasoning_mult = mult.max(1.0);
+        self
+    }
+}
+
+/// One spawned session request, recorded for post-run auditing.
+#[derive(Clone, Copy, Debug)]
+pub struct TurnMeta {
+    pub id: u64,
+    /// Session index (lineage = `LINEAGE_BASE + session`).
+    pub session: u32,
+    /// 1-based main-chain turn number; children carry their parent's.
+    pub depth: u32,
+    pub kind: TurnKind,
+    /// The `Finished` request that triggered this spawn (`None` for a
+    /// session's first turn; a join records its LAST-finishing child).
+    pub parent: Option<u64>,
+    /// When that parent finished (join: when the last child finished).
+    pub parent_finish_s: f64,
+    pub arrival_s: f64,
+    pub input_len: u32,
+}
+
+/// Shared post-run audit state (the source itself is consumed by the
+/// session); obtain a handle via [`SessionSource::probe`].
+#[derive(Debug, Default)]
+pub struct SessionAudit {
+    pub turns: Vec<TurnMeta>,
+    /// `(id, t_s)` of every observed `Finished` belonging to this source.
+    pub finished: Vec<(u64, f64)>,
+    /// Total requests this workload owes (all sessions, turns + children).
+    pub owed: usize,
+    pub spawned: usize,
+    pub completed_sessions: usize,
+}
+
+/// Cloneable read handle onto a [`SessionSource`]'s audit state.
+#[derive(Clone, Debug)]
+pub struct SessionProbe(Rc<RefCell<SessionAudit>>);
+
+impl SessionProbe {
+    pub fn turns(&self) -> Vec<TurnMeta> {
+        self.0.borrow().turns.clone()
+    }
+
+    pub fn finished(&self) -> Vec<(u64, f64)> {
+        self.0.borrow().finished.clone()
+    }
+
+    pub fn owed(&self) -> usize {
+        self.0.borrow().owed
+    }
+
+    pub fn spawned(&self) -> usize {
+        self.0.borrow().spawned
+    }
+
+    pub fn completed_sessions(&self) -> usize {
+        self.0.borrow().completed_sessions
+    }
+
+    /// id → meta for every spawned request.
+    pub fn meta_by_id(&self) -> BTreeMap<u64, TurnMeta> {
+        self.0.borrow().turns.iter().map(|t| (t.id, *t)).collect()
+    }
+
+    /// id → main-chain turn depth (1-based), for the per-depth tables.
+    /// Children map to their parent's depth; filter by kind via
+    /// [`SessionProbe::meta_by_id`] if needed.
+    pub fn depth_by_id(&self) -> BTreeMap<u64, u32> {
+        self.0.borrow().turns.iter().map(|t| (t.id, t.depth)).collect()
+    }
+}
+
+/// One pre-scripted tool-call child.
+#[derive(Clone, Debug)]
+struct ChildScript {
+    /// Extra prompt tokens past the parent prompt (tool arguments).
+    input_extra: u32,
+    output: u32,
+}
+
+/// One pre-scripted main-chain turn.
+#[derive(Clone, Debug)]
+struct TurnScript {
+    kind: TurnKind,
+    /// Gap between the previous turn's finish and this turn's arrival.
+    think_gap_s: f64,
+    /// Fresh user tokens this turn appends to the conversation prompt.
+    followup: u32,
+    output: u32,
+    /// Non-empty iff `kind == ToolCall`.
+    children: Vec<ChildScript>,
+}
+
+/// Runtime state of one session.
+#[derive(Debug)]
+struct SessionRun {
+    script: Vec<TurnScript>,
+    start_s: f64,
+    /// Pre-sampled prompt length of the opening turn.
+    opening_input: u32,
+    /// Index of the last spawned main-chain turn.
+    turn: usize,
+    /// Prompt length of that turn.
+    prompt_len: u32,
+    /// Children of the in-flight tool-call turn still decoding.
+    pending_children: usize,
+    /// Tool-result tokens the join prompt folds in (sum of child outputs).
+    join_extra: u32,
+    /// Latest child finish time seen (the join's trigger instant).
+    children_done_s: f64,
+}
+
+/// What an observed `Finished` id unblocks.
+#[derive(Clone, Copy, Debug)]
+enum Waiter {
+    /// A main-chain turn: finishing it spawns children or the next turn.
+    Main { session: usize },
+    /// A tool-call child: finishing the last one spawns the join.
+    Child { session: usize, output: u32 },
+}
+
+/// Event-coupled session workload source — see the module docs.
+pub struct SessionSource {
+    spec: SessionSpec,
+    sessions: Vec<SessionRun>,
+    /// Arrivals scheduled but not yet yielded to the session.
+    ready: Vec<Request>,
+    waiters: BTreeMap<u64, Waiter>,
+    next_id: u64,
+    owed: usize,
+    spawned: usize,
+    audit: Rc<RefCell<SessionAudit>>,
+}
+
+impl SessionSource {
+    /// Pre-script every session from the spec seed, then schedule each
+    /// session's first turn at its (schedule-shaped) Poisson start time.
+    pub fn new(spec: SessionSpec) -> Self {
+        let mut rng = Rng::new(spec.base.seed);
+        let model = DatasetModel::for_dataset(spec.base.dataset);
+        let mut sessions = Vec::with_capacity(spec.sessions);
+        let mut start = 0.0f64;
+        let mut owed = 0usize;
+        for i in 0..spec.sessions {
+            if i > 0 {
+                start = next_arrival(&spec.base, &mut rng, start);
+            }
+            let n_turns = if spec.turns_exact > 0 {
+                spec.turns_exact as usize
+            } else {
+                1 + rng.poisson((spec.turns_mean - 1.0).max(0.0)) as usize
+            };
+            let opening_input = match spec.base.dataset {
+                Dataset::Fixed => spec.base.fixed_input.max(1),
+                _ => model.sample_input(&mut rng),
+            };
+            let mut script = Vec::with_capacity(n_turns);
+            for _ in 0..n_turns {
+                let draw = rng.below(100) as u32;
+                let kind = if draw < spec.toolcall_pct {
+                    TurnKind::ToolCall
+                } else if draw < spec.toolcall_pct + spec.reasoning_pct {
+                    TurnKind::Reasoning
+                } else {
+                    TurnKind::Chat
+                };
+                let think_gap_s = if spec.think_time_s > 0.0 {
+                    rng.exponential(1.0 / spec.think_time_s)
+                } else {
+                    0.0
+                };
+                let followup = if spec.followup_tokens > 0 {
+                    spec.followup_tokens
+                } else {
+                    match spec.base.dataset {
+                        Dataset::Fixed => 64,
+                        _ => model.sample_output(&mut rng),
+                    }
+                };
+                let base_out = match spec.base.dataset {
+                    Dataset::Fixed => spec.base.fixed_output.max(1),
+                    _ => model.sample_output(&mut rng),
+                };
+                let output = if kind == TurnKind::Reasoning {
+                    ((base_out as f64 * spec.reasoning_mult).round() as u32).min(4096)
+                } else {
+                    base_out
+                };
+                let children = if kind == TurnKind::ToolCall {
+                    (0..spec.toolcall_fanout)
+                        .map(|_| ChildScript {
+                            input_extra: 64 + rng.below(192) as u32,
+                            output: 32 + rng.below(224) as u32,
+                        })
+                        .collect()
+                } else {
+                    Vec::new()
+                };
+                owed += 1 + children.len();
+                script.push(TurnScript { kind, think_gap_s, followup, output, children });
+            }
+            sessions.push(SessionRun {
+                script,
+                start_s: start,
+                opening_input,
+                turn: 0,
+                prompt_len: 0,
+                pending_children: 0,
+                join_extra: 0,
+                children_done_s: 0.0,
+            });
+        }
+        let audit = Rc::new(RefCell::new(SessionAudit { owed, ..Default::default() }));
+        let mut src = SessionSource {
+            spec,
+            sessions,
+            ready: Vec::new(),
+            waiters: BTreeMap::new(),
+            next_id: 0,
+            owed,
+            spawned: 0,
+            audit,
+        };
+        // Spawn every session's opening turn (the only event-independent
+        // arrivals), in session order so ids are deterministic.
+        for s in 0..src.sessions.len() {
+            let input = src.sessions[s].opening_input;
+            let arrival = src.sessions[s].start_s;
+            src.spawn_main(s, 0, input, arrival, None, 0.0);
+        }
+        src
+    }
+
+    /// Audit handle that survives the source being consumed by a session.
+    pub fn probe(&self) -> SessionProbe {
+        SessionProbe(Rc::clone(&self.audit))
+    }
+
+    /// Total requests this workload will spawn across all sessions.
+    pub fn total_owed(&self) -> usize {
+        self.owed
+    }
+
+    fn alloc_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    /// Schedule one request: lineage-stamp, reuse the deterministic
+    /// tenant/priority stamping from the base spec, record the audit row.
+    fn schedule(&mut self, req: Request, meta: TurnMeta) {
+        let req = stamp_priority(&self.spec.base, stamp_tenant(&self.spec.base, req));
+        self.ready.push(req);
+        self.spawned += 1;
+        let mut a = self.audit.borrow_mut();
+        a.spawned += 1;
+        a.turns.push(meta);
+    }
+
+    /// Spawn main-chain turn `k` of session `s` with prompt `input`.
+    fn spawn_main(
+        &mut self,
+        s: usize,
+        k: usize,
+        input: u32,
+        arrival: f64,
+        parent: Option<u64>,
+        parent_finish_s: f64,
+    ) {
+        let input = input.min(MAX_PROMPT);
+        let id = self.alloc_id();
+        let script_kind = self.sessions[s].script[k].kind;
+        let joined = k > 0 && self.sessions[s].script[k - 1].kind == TurnKind::ToolCall;
+        let kind = if joined { TurnKind::Join } else { script_kind };
+        let output = self.sessions[s].script[k].output;
+        self.sessions[s].turn = k;
+        self.sessions[s].prompt_len = input;
+        self.waiters.insert(id, Waiter::Main { session: s });
+        let req = Request {
+            id,
+            arrival_s: arrival,
+            input_len: input,
+            output_len: output,
+            prefix_id: LINEAGE_BASE + s as u64,
+            prefix_len: input,
+            ..Default::default()
+        };
+        self.schedule(
+            req,
+            TurnMeta {
+                id,
+                session: s as u32,
+                depth: (k + 1) as u32,
+                kind,
+                parent,
+                parent_finish_s,
+                arrival_s: arrival,
+                input_len: input,
+            },
+        );
+    }
+
+    /// The main-chain turn `k` of session `s` finished at `t`: fan out its
+    /// children, or advance the chain directly.
+    fn on_main_finished(&mut self, s: usize, id: u64, t: f64) {
+        let k = self.sessions[s].turn;
+        let n_children = self.sessions[s].script[k].children.len();
+        if n_children > 0 {
+            self.sessions[s].pending_children = n_children;
+            self.sessions[s].join_extra = 0;
+            self.sessions[s].children_done_s = t;
+            let parent_prompt = self.sessions[s].prompt_len;
+            let depth = (k + 1) as u32;
+            let children = self.sessions[s].script[k].children.clone();
+            for ChildScript { input_extra, output } in children {
+                let cid = self.alloc_id();
+                self.waiters.insert(cid, Waiter::Child { session: s, output });
+                // Children share the conversation-so-far as lineage prefix
+                // but their tool-argument suffix is request-private:
+                // prefix_len claims only the parent prompt.
+                let req = Request {
+                    id: cid,
+                    arrival_s: t,
+                    input_len: (parent_prompt + input_extra).min(MAX_PROMPT),
+                    output_len: output,
+                    prefix_id: LINEAGE_BASE + s as u64,
+                    prefix_len: parent_prompt,
+                    ..Default::default()
+                };
+                self.schedule(
+                    req,
+                    TurnMeta {
+                        id: cid,
+                        session: s as u32,
+                        depth,
+                        kind: TurnKind::ToolChild,
+                        parent: Some(id),
+                        parent_finish_s: t,
+                        arrival_s: t,
+                        input_len: req.input_len,
+                    },
+                );
+            }
+        } else {
+            self.advance_chain(s, Some(id), t, 0);
+        }
+    }
+
+    /// Spawn turn `turn + 1` (or complete the session): prompt = previous
+    /// prompt + its answer + fresh user text (+ folded tool results).
+    fn advance_chain(&mut self, s: usize, parent: Option<u64>, t: f64, extra: u32) {
+        let k = self.sessions[s].turn;
+        if k + 1 >= self.sessions[s].script.len() {
+            self.audit.borrow_mut().completed_sessions += 1;
+            return;
+        }
+        let next = k + 1;
+        let gap = self.sessions[s].script[next].think_gap_s;
+        let input = self.sessions[s].prompt_len
+            + self.sessions[s].script[k].output
+            + self.sessions[s].script[next].followup
+            + extra;
+        self.spawn_main(s, next, input, t + gap, parent, t);
+    }
+
+    /// A tool-call child finished; the last one triggers the join.
+    fn on_child_finished(&mut self, s: usize, id: u64, output: u32, t: f64) {
+        let run = &mut self.sessions[s];
+        run.pending_children = run.pending_children.saturating_sub(1);
+        run.join_extra = run.join_extra.saturating_add(output);
+        if t > run.children_done_s {
+            run.children_done_s = t;
+        }
+        if run.pending_children == 0 {
+            let done = run.children_done_s;
+            let extra = run.join_extra;
+            self.advance_chain(s, Some(id), done, extra);
+        }
+    }
+}
+
+impl WorkloadSource for SessionSource {
+    /// Yield the earliest currently-scheduled arrival (ties by id). `None`
+    /// means "nothing scheduled YET" — more may follow after `observe`.
+    fn next_request(&mut self) -> Option<Request> {
+        if self.ready.is_empty() {
+            return None;
+        }
+        let pos = self
+            .ready
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                a.arrival_s
+                    .partial_cmp(&b.arrival_s)
+                    .expect("finite arrivals")
+                    .then(a.id.cmp(&b.id))
+            })
+            .map(|(i, _)| i)?;
+        Some(self.ready.swap_remove(pos))
+    }
+
+    fn closed_loop(&self) -> bool {
+        true
+    }
+
+    fn unspawned(&self) -> usize {
+        self.owed - self.spawned
+    }
+
+    fn observe(&mut self, _replica: usize, event: &EngineEvent) {
+        let EngineEvent::Finished { t_s, id } = *event else {
+            return;
+        };
+        // First Finished wins; re-served duplicates (control-plane
+        // failures) find no waiter and are ignored.
+        let Some(w) = self.waiters.remove(&id) else {
+            return;
+        };
+        self.audit.borrow_mut().finished.push((id, t_s));
+        match w {
+            Waiter::Main { session } => self.on_main_finished(session, id, t_s),
+            Waiter::Child { session, output } => {
+                self.on_child_finished(session, id, output, t_s)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixed_spec(sessions: usize, seed: u64) -> SessionSpec {
+        let mut base = WorkloadSpec::new(Dataset::Fixed, 2.0, 0);
+        base.seed = seed;
+        SessionSpec::new(base, sessions)
+            .exact_turns(3)
+            .think_time_s(0.0)
+            .followup_tokens(32)
+    }
+
+    fn finish(src: &mut SessionSource, id: u64, t: f64) {
+        src.observe(0, &EngineEvent::Finished { t_s: t, id });
+    }
+
+    /// Pull everything ready, finish each pulled request 1 s after its
+    /// arrival, repeat until the source stops spawning. Returns every
+    /// request in pull order.
+    fn drive(src: &mut SessionSource) -> Vec<Request> {
+        let mut all = Vec::new();
+        loop {
+            let mut progressed = false;
+            while let Some(r) = src.next_request() {
+                finish(src, r.id, r.arrival_s + 1.0);
+                all.push(r);
+                progressed = true;
+            }
+            if !progressed {
+                break;
+            }
+        }
+        all
+    }
+
+    #[test]
+    fn chat_chain_grows_prompts_under_one_lineage() {
+        let mut src = SessionSource::new(fixed_spec(1, 7));
+        let t1 = src.next_request().expect("opening turn");
+        assert_eq!(t1.input_len, 2048);
+        assert_eq!(t1.prefix_id, LINEAGE_BASE);
+        assert_eq!(t1.prefix_len, t1.input_len);
+        assert!(src.next_request().is_none(), "turn 2 waits on turn 1");
+        finish(&mut src, t1.id, 5.0);
+        let t2 = src.next_request().expect("3-turn session continues");
+        // think_time 0: the follow-up arrives AT the finish instant,
+        // prompt = turn-1 prompt + its answer + 32 fresh user tokens.
+        assert_eq!(t2.arrival_s, 5.0);
+        assert_eq!(t2.input_len, t1.input_len + t1.output_len + 32);
+        assert_eq!(t2.prefix_id, t1.prefix_id);
+        assert_eq!(t2.prefix_len, t2.input_len);
+    }
+
+    #[test]
+    fn conservation_every_owed_turn_spawns_and_finishes() {
+        let mut src = SessionSource::new(fixed_spec(6, 11).toolcalls(40, 3));
+        let probe = src.probe();
+        let owed = src.total_owed();
+        let all = drive(&mut src);
+        assert_eq!(all.len(), owed, "every owed request spawned and pulled");
+        assert_eq!(src.unspawned(), 0);
+        assert_eq!(probe.spawned(), owed);
+        assert_eq!(probe.finished().len(), owed);
+        assert_eq!(probe.completed_sessions(), 6);
+        // Every non-opening turn traces to exactly one observed parent
+        // Finished, at or before its arrival.
+        let fin: BTreeMap<u64, f64> = probe.finished().into_iter().collect();
+        for m in probe.turns() {
+            match m.parent {
+                None => assert_eq!(m.depth, 1, "only opening turns are parentless"),
+                Some(p) => {
+                    let pf = fin.get(&p).copied().expect("parent finished");
+                    assert!(m.arrival_s >= pf, "turn arrived before its parent finished");
+                    assert_eq!(m.parent_finish_s, pf);
+                }
+            }
+        }
+        // Ids are unique.
+        let mut ids: Vec<u64> = all.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), owed);
+    }
+
+    #[test]
+    fn join_waits_for_all_children() {
+        // 100% tool calls, fanout 3: turn 1 fans out, turn 2 is the join.
+        let mut src = SessionSource::new(fixed_spec(1, 3).exact_turns(2).toolcalls(100, 3));
+        let t1 = src.next_request().expect("opening turn");
+        finish(&mut src, t1.id, 2.0);
+        let mut children = Vec::new();
+        while let Some(c) = src.next_request() {
+            children.push(c);
+        }
+        assert_eq!(children.len(), 3, "fanout children spawn on parent finish");
+        for c in &children {
+            assert_eq!(c.arrival_s, 2.0);
+            assert_eq!(c.prefix_id, t1.prefix_id);
+            assert_eq!(c.prefix_len, t1.input_len, "children claim only the parent prompt");
+            assert!(c.input_len > t1.input_len, "tool arguments extend the prompt");
+        }
+        // Finish children out of order; the join must not spawn early.
+        finish(&mut src, children[1].id, 4.0);
+        assert!(src.next_request().is_none(), "join waits on 2 more children");
+        finish(&mut src, children[0].id, 9.0);
+        assert!(src.next_request().is_none(), "join waits on 1 more child");
+        finish(&mut src, children[2].id, 6.0);
+        let join = src.next_request().expect("join spawns after the last child");
+        assert!(join.arrival_s >= 9.0, "join arrives after the LAST child finish");
+        assert!(join.input_len > t1.input_len, "join folds in tool results");
+        assert_eq!(join.prefix_id, t1.prefix_id);
+        let meta = src.probe().meta_by_id()[&join.id];
+        assert_eq!(meta.kind, TurnKind::Join);
+        assert_eq!(meta.parent, Some(children[2].id), "the join's trigger child");
+        assert_eq!(meta.parent_finish_s, 9.0, "stamped with the LATEST child finish");
+    }
+
+    #[test]
+    fn unspawned_reports_turns_still_owed() {
+        let mut src = SessionSource::new(fixed_spec(4, 5));
+        let owed = src.total_owed();
+        assert_eq!(src.unspawned(), owed - 4, "only opening turns spawned");
+        let t1 = src.next_request().expect("opening turn");
+        assert_eq!(src.unspawned(), owed - 4, "pulling spawns nothing");
+        finish(&mut src, t1.id, 1.0);
+        assert!(src.unspawned() <= owed - 4, "finishing can only spawn more");
+    }
+
+    #[test]
+    fn spawn_sequence_is_deterministic() {
+        let run = |seed| {
+            let mut src = SessionSource::new(fixed_spec(5, seed).toolcalls(30, 2));
+            drive(&mut src)
+        };
+        let a = run(13);
+        let b = run(13);
+        assert_eq!(a, b);
+        assert_ne!(a, run(14), "seed actually matters");
+    }
+
+    #[test]
+    fn turn_stamping_reuses_tenant_and_priority_functions() {
+        let mut base = WorkloadSpec::new(Dataset::Fixed, 2.0, 0)
+            .with_tenants(3, 0)
+            .with_priorities(50);
+        base.seed = 2;
+        let spec = SessionSpec::new(base, 3)
+            .exact_turns(3)
+            .think_time_s(0.0)
+            .followup_tokens(32);
+        let mut src = SessionSource::new(spec);
+        let all = drive(&mut src);
+        assert!(!all.is_empty());
+        for r in &all {
+            assert_eq!(r.tenant as u64, 1 + r.id % 3, "stamp_tenant semantics");
+            assert_eq!(r.priority, u8::from(r.id % 100 < 50), "stamp_priority semantics");
+            assert!(r.prefix_id >= LINEAGE_BASE, "lineage never collides with prefix groups");
+        }
+    }
+
+    #[test]
+    fn session_starts_follow_rate_schedule() {
+        let mut base = WorkloadSpec::new(Dataset::Fixed, 2.0, 0)
+            .with_rate_schedule(vec![(0.0, 1.0), (50.0, 20.0)]);
+        base.seed = 21;
+        let mut src = SessionSource::new(SessionSpec::new(base, 80).exact_turns(1));
+        let mut starts = Vec::new();
+        while let Some(r) = src.next_request() {
+            starts.push(r.arrival_s);
+        }
+        assert_eq!(starts.len(), 80);
+        assert!(starts.windows(2).all(|w| w[0] <= w[1]));
+        let early = starts.iter().filter(|&&t| t < 50.0).count();
+        let late = starts.len() - early;
+        // ~1/s for 50 s then 20/s: the tail is far denser than the head.
+        assert!(early >= 20 && late >= 20, "early={early} late={late}");
+    }
+}

@@ -5,25 +5,74 @@
 //! traces (record/replay, paper tables) and open-loop streaming workloads
 //! (hours-long Poisson processes sampled lazily up to a horizon) through
 //! the same run loop — sessions no longer require drain-to-empty.
+//!
+//! ## The closed loop
+//!
+//! Intake is no longer strictly one-way: a source that answers `true` from
+//! [`WorkloadSource::closed_loop`] is fed the run's typed
+//! [`EngineEvent`](crate::serve::EngineEvent) stream back through
+//! [`WorkloadSource::observe`] at every control boundary, so it can emit
+//! *dependent* arrivals — a multi-turn conversation whose turn N re-arrives
+//! only after turn N−1's `Finished`, a tool-call fan-out spawned by its
+//! parent's completion
+//! ([`SessionSource`](crate::workload::session::SessionSource)). For such
+//! sources the nondecreasing-arrival contract is relaxed: `next_request`
+//! yields whatever is *currently scheduled* (in nondecreasing order among
+//! those), returns `None` when the ready queue is momentarily empty, and
+//! may yield again after later `observe` calls;
+//! [`WorkloadSource::unspawned`] reports the turns still owed so a horizon
+//! cut can account for them honestly. Open sources (`closed_loop()` =
+//! false, the default) keep the strict contract and never see `observe`.
 
 use crate::config::{Dataset, WorkloadSpec};
+use crate::serve::event::EngineEvent;
 use crate::util::rng::Rng;
-use crate::workload::generator::DatasetModel;
+use crate::workload::generator::{next_arrival, DatasetModel};
 use crate::workload::trace::{Request, Trace};
 
 /// A stream of requests in nondecreasing arrival order.
 ///
 /// Implementations are pull-based: the session asks for the next request
 /// when it is ready to route it, so open-loop sources never materialize
-/// more than one request ahead.
+/// more than one request ahead. Closed-loop sources (see the module docs)
+/// additionally observe the engine event stream and may schedule more
+/// arrivals after returning `None`.
 pub trait WorkloadSource {
     /// The next request, or `None` when the source is exhausted (request
-    /// budget spent, or the next arrival would fall past the horizon).
+    /// budget spent, or the next arrival would fall past the horizon) —
+    /// or, for closed-loop sources, when nothing is scheduled *yet*.
     fn next_request(&mut self) -> Option<Request>;
 
     /// Remaining request count, when known (pre-materialized traces).
     fn size_hint(&self) -> Option<usize> {
         None
+    }
+
+    /// Observe one engine event (`replica` = producing replica index).
+    /// The session feeds closed-loop sources every event at each control
+    /// boundary, in replica-index order — the same order at every thread
+    /// count, which is what keeps dependent arrivals bit-deterministic.
+    /// Default: no-op, so open sources are untouched behaviorally.
+    fn observe(&mut self, replica: usize, event: &EngineEvent) {
+        let _ = (replica, event);
+    }
+
+    /// True when this source emits dependent arrivals and must be run on
+    /// the stepped (control-boundary) session path with `observe` wired
+    /// up. Default: false — the session takes the exact pre-closed-loop
+    /// code paths.
+    fn closed_loop(&self) -> bool {
+        false
+    }
+
+    /// Turns/children this source still owes but has not scheduled yet
+    /// (they wait on a parent `Finished` it has not observed). A horizon
+    /// cut adds these to
+    /// [`SessionStatus::Halted`](crate::serve::SessionStatus)'s `pending`
+    /// count so
+    /// not-yet-spawned work is reported honestly. Default: 0.
+    fn unspawned(&self) -> usize {
+        0
     }
 }
 
@@ -119,9 +168,12 @@ impl WorkloadSource for PoissonSource {
             return None;
         }
         // Sampling order matches WorkloadGen::generate exactly (gap, then
-        // input, then output) so replaying a spec is bit-identical.
+        // input, then output) so replaying a spec is bit-identical —
+        // including under a diurnal `rate_schedule` (the shared
+        // `next_arrival` helper; with an empty schedule it is the exact
+        // pre-schedule flat-rate line).
         if self.next_id > 0 {
-            self.t += self.rng.exponential(self.spec.rate);
+            self.t = next_arrival(&self.spec, &mut self.rng, self.t);
         }
         let (input_len, output_len) = match self.spec.dataset {
             Dataset::Fixed => (self.spec.fixed_input, self.spec.fixed_output),
@@ -209,6 +261,45 @@ mod tests {
         let out = drain(PoissonSource::new(spec));
         assert_eq!(out, trace.requests);
         assert!(out.iter().all(|r| (1..=3).contains(&r.tenant)));
+    }
+
+    #[test]
+    fn poisson_source_matches_workload_gen_under_rate_schedule() {
+        let mut spec = WorkloadSpec::new(Dataset::ShareGpt, 2.0, 120)
+            .with_rate_schedule(vec![(0.0, 2.0), (20.0, 9.0), (40.0, 1.0)]);
+        spec.seed = 77;
+        let trace = WorkloadGen::new(spec.clone()).generate();
+        let out = drain(PoissonSource::new(spec));
+        assert_eq!(out, trace.requests);
+    }
+
+    #[test]
+    fn rate_schedule_source_is_pure_function_of_seed() {
+        let mk = || {
+            let mut spec = WorkloadSpec::new(Dataset::Arxiv, 3.0, 80)
+                .with_rate_schedule(vec![(0.0, 3.0), (10.0, 12.0)]);
+            spec.seed = 5;
+            PoissonSource::new(spec)
+        };
+        let a = drain(mk());
+        let b = drain(mk());
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+    }
+
+    #[test]
+    fn open_sources_report_closed_loop_defaults() {
+        let spec = WorkloadSpec::new(Dataset::ShareGpt, 2.0, 4);
+        let trace = WorkloadGen::new(spec.clone()).generate();
+        let tsrc = TraceSource::new(&trace);
+        let psrc = PoissonSource::new(spec);
+        assert!(!tsrc.closed_loop() && !psrc.closed_loop());
+        assert_eq!(tsrc.unspawned(), 0);
+        assert_eq!(psrc.unspawned(), 0);
+        // observe() defaults to a no-op: the stream is unchanged after it.
+        let mut tsrc = tsrc;
+        tsrc.observe(0, &EngineEvent::Finished { t_s: 1.0, id: 0 });
+        assert_eq!(drain(tsrc), trace.requests);
     }
 
     #[test]

@@ -19,7 +19,7 @@ use layered_prefill::config::{
 };
 use layered_prefill::sched::policy::{AdaptiveSpec, PolicySpec};
 use layered_prefill::serve::{EventLog, Session, SessionReport};
-use layered_prefill::workload::{Trace, WorkloadGen};
+use layered_prefill::workload::{SessionSource, SessionSpec, Trace, WorkloadGen};
 
 const THREAD_COUNTS: [usize; 3] = [1, 2, 4];
 
@@ -166,6 +166,34 @@ fn adaptive_policy_spec_is_thread_invariant() {
             .replicas(4)
             .threads(threads)
             .trace(&trace)
+            .sink(log)
+            .run()
+            .expect("sim session")
+    });
+}
+
+#[test]
+fn closed_loop_session_source_is_thread_invariant() {
+    // The closed-loop merge feeds engine events back to the source ONLY
+    // at control boundaries, in replica-index flush order — the serial
+    // emission order — so dependent arrivals (next turns, tool-call
+    // children, joins) and the ids allocated for them must be
+    // byte-identical at every thread count.
+    assert_thread_invariant("closed-loop-sessions", |threads, log| {
+        let mut base = WorkloadSpec::new(Dataset::Fixed, 2.0, 0);
+        base.seed = 0x5E55;
+        let spec = SessionSpec::new(base, 5)
+            .exact_turns(3)
+            .think_time_s(0.5)
+            .followup_tokens(64)
+            .toolcalls(40, 2);
+        Session::builder()
+            .policy(Policy::Layered)
+            .replicas(4)
+            .router(build_router("prefix").expect("router name"))
+            .threads(threads)
+            .prefix_cache(true)
+            .workload(SessionSource::new(spec))
             .sink(log)
             .run()
             .expect("sim session")

@@ -1,0 +1,250 @@
+//! Closed-loop session intake, end to end through a serve::Session:
+//! conservation (every owed turn spawns off exactly one parent Finished
+//! and finishes — including under drain/fail chaos), join ordering,
+//! honest horizon accounting, and the cross-turn prefix-cache payoff
+//! (deeper turns hit MORE cached tokens and see LOWER TTFT).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use layered_prefill::cluster::{build_router, AdaptiveSpill, DrainController};
+use layered_prefill::config::{Dataset, Policy, SloSpec, WorkloadSpec};
+use layered_prefill::metrics::{depth_table, prefix_hits_by_request};
+use layered_prefill::serve::{EngineEvent, EventLog, Session, SessionReport, SessionStatus};
+use layered_prefill::workload::{SessionProbe, SessionSource, SessionSpec, TurnKind};
+
+fn fixed_spec(sessions: usize, rate: f64, seed: u64) -> SessionSpec {
+    let mut base = WorkloadSpec::new(Dataset::Fixed, rate, 0);
+    base.seed = seed;
+    SessionSpec::new(base, sessions)
+        .exact_turns(3)
+        .think_time_s(0.5)
+        .followup_tokens(64)
+}
+
+/// Finished time of every request id on the event stream.
+fn finish_times(log: &EventLog) -> BTreeMap<u64, f64> {
+    let mut t = BTreeMap::new();
+    for (_, e) in &log.events {
+        if let EngineEvent::Finished { t_s, id } = e {
+            t.insert(*id, *t_s);
+        }
+    }
+    t
+}
+
+/// Conservation checks shared by the clean and chaos scenarios: every
+/// owed turn spawned, every spawned turn finished, every non-opening
+/// turn anchored to exactly one observed parent Finished at or before
+/// its arrival, and joins stamped with their LAST child's finish.
+fn assert_conserved(probe: &SessionProbe, log: &EventLog, rep: &SessionReport, sessions: usize) {
+    assert!(
+        matches!(rep.status, SessionStatus::Drained),
+        "run must drain, got {:?}",
+        rep.status
+    );
+    let owed = probe.owed();
+    assert_eq!(probe.spawned(), owed, "every owed turn spawned");
+    assert_eq!(probe.completed_sessions(), sessions);
+    let turns = probe.turns();
+    assert_eq!(turns.len(), owed);
+    let fin = finish_times(log);
+    let spawned_ids: BTreeSet<u64> = turns.iter().map(|m| m.id).collect();
+    assert_eq!(spawned_ids.len(), owed, "ids are unique");
+    for id in &spawned_ids {
+        assert!(fin.contains_key(id), "request {id} never finished");
+    }
+    // The source observed the same finishes the log did.
+    let observed: BTreeMap<u64, f64> = probe.finished().into_iter().collect();
+    assert_eq!(observed.len(), owed);
+    for m in &turns {
+        match m.parent {
+            None => assert_eq!(m.depth, 1, "only opening turns are parentless"),
+            Some(p) => {
+                assert!(
+                    spawned_ids.contains(&p),
+                    "parent {p} of {} is not a session request",
+                    m.id
+                );
+                let pf = observed[&p];
+                assert_eq!(m.parent_finish_s, pf, "parent-finish stamp matches");
+                assert!(
+                    m.arrival_s >= pf - 1e-9,
+                    "turn {} arrived at {} before its parent finished at {pf}",
+                    m.id,
+                    m.arrival_s
+                );
+            }
+        }
+    }
+    // Joins wait for ALL children of their tool-call turn: each sibling
+    // child finished at or before the join's trigger instant.
+    let by_id = probe.meta_by_id();
+    for m in turns.iter().filter(|m| m.kind == TurnKind::Join) {
+        let trigger = m.parent.expect("joins have a trigger child");
+        assert_eq!(by_id[&trigger].kind, TurnKind::ToolChild);
+        let siblings: Vec<_> = turns
+            .iter()
+            .filter(|c| {
+                c.kind == TurnKind::ToolChild
+                    && c.session == m.session
+                    && c.parent == by_id[&trigger].parent
+            })
+            .collect();
+        assert!(!siblings.is_empty());
+        for c in siblings {
+            assert!(
+                observed[&c.id] <= m.parent_finish_s + 1e-9,
+                "join {} spawned before child {} finished",
+                m.id,
+                c.id
+            );
+        }
+    }
+}
+
+#[test]
+fn closed_loop_conserves_turns_end_to_end() {
+    let spec = fixed_spec(5, 2.0, 0xC10).toolcalls(40, 2);
+    let source = SessionSource::new(spec);
+    let probe = source.probe();
+    let mut log = EventLog::default();
+    let rep = Session::builder()
+        .policy(Policy::Layered)
+        .replicas(2)
+        .router(build_router("prefix").expect("router name"))
+        .prefix_cache(true)
+        .workload(source)
+        .sink(&mut log)
+        .run()
+        .expect("sim session");
+    assert_conserved(&probe, &log, &rep, 5);
+    assert_eq!(rep.fleet.requests.len(), probe.owed());
+}
+
+#[test]
+fn drain_fail_chaos_does_not_orphan_sessions() {
+    // Replica churn mid-conversation: drain 0 (later rejoined), hard-fail
+    // 1, with spill routing and KV migration. Failed/re-served turns must
+    // still each produce exactly one Finished that the source observes,
+    // so no session stalls and no join double-fires.
+    let spec = fixed_spec(4, 3.0, 0xCAFE).toolcalls(50, 2);
+    let source = SessionSource::new(spec);
+    let probe = source.probe();
+    let mut log = EventLog::default();
+    let rep = Session::builder()
+        .policy(Policy::Layered)
+        .replicas(3)
+        .router(Box::new(AdaptiveSpill::new()))
+        .prefix_cache(true)
+        .migrate_kv(true)
+        .controller(
+            DrainController::new()
+                .drain_at(1.0, 0)
+                .rejoin_at(4.0, 0)
+                .fail_at(2.0, 1),
+        )
+        .workload(source)
+        .sink(&mut log)
+        .run()
+        .expect("sim session");
+    assert_conserved(&probe, &log, &rep, 4);
+}
+
+#[test]
+fn horizon_cut_reports_unspawned_turns_honestly() {
+    // Think times far longer than the horizon: most turns never spawn.
+    // The cut must surface them in Halted { pending }, not lose them.
+    let mut base = WorkloadSpec::new(Dataset::Fixed, 2.0, 0);
+    base.seed = 0x407;
+    let spec = SessionSpec::new(base, 3)
+        .exact_turns(4)
+        .think_time_s(30.0)
+        .followup_tokens(64);
+    let source = SessionSource::new(spec);
+    let probe = source.probe();
+    let owed = probe.owed();
+    let rep = Session::builder()
+        .policy(Policy::Layered)
+        .replicas(2)
+        .router(build_router("prefix").expect("router name"))
+        .prefix_cache(true)
+        .workload(source)
+        .horizon(8.0)
+        .run()
+        .expect("sim session");
+    let spawned = probe.spawned();
+    assert!(
+        spawned < owed,
+        "long think times must leave turns unspawned (spawned {spawned} / owed {owed})"
+    );
+    let SessionStatus::Halted { pending } = rep.status else {
+        panic!("horizon cut must halt, got {:?}", rep.status);
+    };
+    assert!(
+        pending >= owed - spawned,
+        "pending {pending} must cover the {} unspawned turns",
+        owed - spawned
+    );
+}
+
+#[test]
+fn prefix_cache_and_affinity_pay_off_with_depth() {
+    // Pure chat chains on a prefix-affinity fleet with the cache on:
+    // turn N's prompt extends turn N-1's published blocks, so cached
+    // tokens must grow strictly with depth and deeper turns must beat
+    // the opening turn's TTFT despite having LONGER prompts.
+    let spec = fixed_spec(5, 0.5, 0x9A7);
+    let sessions = spec.sessions;
+    let source = SessionSource::new(spec.exact_turns(4));
+    let probe = source.probe();
+    let mut log = EventLog::default();
+    let rep = Session::builder()
+        .policy(Policy::Layered)
+        .replicas(2)
+        .router(build_router("prefix").expect("router name"))
+        .prefix_cache(true)
+        .workload(source)
+        .sink(&mut log)
+        .run()
+        .expect("sim session");
+    assert!(matches!(rep.status, SessionStatus::Drained));
+
+    let depths = probe.depth_by_id();
+    let hits = prefix_hits_by_request(log.events.iter().map(|(_, e)| e));
+    let slo = SloSpec {
+        ttft_s: 10.0,
+        tbt_s: 1.0,
+    };
+    let rows = depth_table(
+        &rep.fleet.requests,
+        &hits,
+        |id| depths.get(&id).copied(),
+        &slo,
+    );
+    assert_eq!(rows.len(), 4, "exact 4-turn chains bucket into 4 depths");
+    for (i, r) in rows.iter().enumerate() {
+        assert_eq!(r.depth as usize, i + 1);
+        assert_eq!(r.n, sessions, "every session contributes one turn per depth");
+    }
+    assert_eq!(
+        rows[0].prefix_hit_tokens, 0,
+        "nothing is published before a session's opening turn"
+    );
+    for w in rows.windows(2) {
+        assert!(
+            w[1].prefix_hit_tokens > w[0].prefix_hit_tokens,
+            "cached tokens must GROW with depth: {:?} -> {:?}",
+            w[0],
+            w[1]
+        );
+    }
+    for r in &rows[1..] {
+        assert!(
+            r.ttft_mean_s < rows[0].ttft_mean_s,
+            "depth {} TTFT {:.3}s should beat the opening turn's {:.3}s",
+            r.depth,
+            r.ttft_mean_s,
+            rows[0].ttft_mean_s
+        );
+    }
+}
