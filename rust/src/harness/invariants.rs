@@ -1,0 +1,749 @@
+//! The reusable invariant battery: every conservation law the test suites
+//! assert about a serving run, callable on any `(Scenario, Outcome)` pair.
+//!
+//! One battery, many callers: the chaos fuzzer (`lpserve fuzz`), the
+//! committed-regression replayer, `tests/chaos_harness.rs`, and the
+//! refactored `tests/serve_events.rs` / `tests/prefix_migration.rs` /
+//! `tests/tenant_isolation.rs` suites all check the SAME functions — a law
+//! tightened here tightens everywhere at once.
+//!
+//! The catalog (each law names its checker):
+//!
+//! * **Token conservation** ([`check_token_conservation`]) — from a
+//!   request's LAST `Arrived` onward (re-serves restart the stream):
+//!   exactly one `FirstToken`, `output_len − 1` `TokenEmitted`, one
+//!   `Finished`.
+//! * **Event-stream conservation** ([`check_event_conservation`]) — a
+//!   `Drained` run finishes every arrived id exactly once; a `Halted` run
+//!   reports at least as many pending as it left unfinished; no id
+//!   finishes twice.
+//! * **Admission accounting** ([`check_admission_accounting`]) —
+//!   admissions only for arrived ids, first `Admitted` after first
+//!   `Arrived`; chaos-free drained runs admit every arrival exactly once
+//!   with globally unique arrival ids and one `ReplicaDrained` per
+//!   replica.
+//! * **KV backpressure** ([`check_kv_rejections`]) — every
+//!   capacity-reason `KvRejected` carries `demand > free`.
+//! * **Prefill-credit conservation** ([`check_prefill_conservation`]) —
+//!   computed token·layers plus prefix-credited token·layers equal
+//!   `input_len × n_layers` exactly for cleanly-served requests, and
+//!   never fall short for re-served/migrated ones.
+//! * **Tenant budgets** ([`check_tenant_quota_law`] /
+//!   [`check_token_bucket_law`]) — replayed KV-block charges never exceed
+//!   a tenant's quota; admitted prefill tokens never outrun
+//!   `burst + rate × t`.
+//! * **Plan laws I1–I4** ([`check_plan_laws`]) — every policy the
+//!   scenario names drives a representative trace through
+//!   [`crate::sched::audit::drive_to_drain`].
+//! * **Differential identities** (inside [`check_battery`]) — the stepped
+//!   control-plane path serves chaos-free scenarios byte-identically to
+//!   the plain path, and multi-replica runs are byte-identical at every
+//!   thread count (full-fidelity [`digest_events`] / [`digest_report`]).
+
+use std::collections::BTreeMap;
+
+use crate::serve::{EngineEvent, EventLog, SessionReport, SessionStatus};
+use crate::tenant::{RejectReason, TenantRegistry};
+use crate::workload::{Request, Trace};
+
+use super::run::{self, Outcome};
+use super::scenario::Scenario;
+
+// ---------------------------------------------------------------------------
+// Full-fidelity digests (every variant, every field — unlike the
+// deliberately PR 6-restricted digest tests/tenant_isolation.rs keeps
+// locally for its feature-off locks).
+// ---------------------------------------------------------------------------
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a 64 accumulator over explicitly serialized fields.
+pub struct Digest(u64);
+
+impl Digest {
+    pub fn new() -> Self {
+        Digest(FNV_OFFSET)
+    }
+    pub fn value(&self) -> u64 {
+        self.0
+    }
+    pub fn bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= u64::from(b);
+            self.0 = self.0.wrapping_mul(FNV_PRIME);
+        }
+    }
+    pub fn u64(&mut self, x: u64) {
+        self.bytes(&x.to_le_bytes());
+    }
+    pub fn f64(&mut self, x: f64) {
+        self.bytes(&x.to_bits().to_le_bytes());
+    }
+    pub fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.bytes(s.as_bytes());
+    }
+}
+
+impl Default for Digest {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn digest_request(d: &mut Digest, r: &Request) {
+    d.u64(r.id);
+    d.f64(r.arrival_s);
+    d.u64(u64::from(r.input_len));
+    d.u64(u64::from(r.output_len));
+    d.u64(r.prefix_id);
+    d.u64(u64::from(r.prefix_len));
+    d.u64(u64::from(r.tenant));
+    d.u64(u64::from(r.priority));
+}
+
+/// Hash an event stream field-by-field, all variants, all fields.
+pub fn digest_events(events: &[(usize, EngineEvent)]) -> u64 {
+    let mut d = Digest::new();
+    for (replica, ev) in events {
+        d.u64(*replica as u64);
+        match ev {
+            EngineEvent::Arrived { t_s, req } => {
+                d.u64(1);
+                d.f64(*t_s);
+                digest_request(&mut d, req);
+            }
+            EngineEvent::Admitted { t_s, id } => {
+                d.u64(2);
+                d.f64(*t_s);
+                d.u64(*id);
+            }
+            EngineEvent::KvRejected {
+                t_s,
+                id,
+                demand,
+                free,
+                reason,
+            } => {
+                d.u64(3);
+                d.f64(*t_s);
+                d.u64(*id);
+                d.u64(u64::from(*demand));
+                d.u64(u64::from(*free));
+                d.str(reason.name());
+            }
+            EngineEvent::PrefixHit {
+                t_s,
+                id,
+                cached_tokens,
+            } => {
+                d.u64(4);
+                d.f64(*t_s);
+                d.u64(*id);
+                d.u64(u64::from(*cached_tokens));
+            }
+            EngineEvent::KvMigrated {
+                t_s,
+                id,
+                from,
+                to,
+                blocks,
+            } => {
+                d.u64(5);
+                d.f64(*t_s);
+                d.u64(*id);
+                d.u64(*from as u64);
+                d.u64(*to as u64);
+                d.u64(u64::from(*blocks));
+            }
+            EngineEvent::PrefillGroupDone {
+                t_s,
+                id,
+                layers,
+                tokens,
+            } => {
+                d.u64(6);
+                d.f64(*t_s);
+                d.u64(*id);
+                d.u64(u64::from(*layers));
+                d.u64(u64::from(*tokens));
+            }
+            EngineEvent::FirstToken { t_s, id } => {
+                d.u64(7);
+                d.f64(*t_s);
+                d.u64(*id);
+            }
+            EngineEvent::TokenEmitted { t_s, id, generated } => {
+                d.u64(8);
+                d.f64(*t_s);
+                d.u64(*id);
+                d.u64(u64::from(*generated));
+            }
+            EngineEvent::Finished { t_s, id } => {
+                d.u64(9);
+                d.f64(*t_s);
+                d.u64(*id);
+            }
+            EngineEvent::ReplicaDrained { t_s } => {
+                d.u64(10);
+                d.f64(*t_s);
+            }
+            EngineEvent::ReplicaDown { t_s } => {
+                d.u64(11);
+                d.f64(*t_s);
+            }
+            EngineEvent::ReplicaUp { t_s } => {
+                d.u64(12);
+                d.f64(*t_s);
+            }
+            EngineEvent::Halted { t_s, pending } => {
+                d.u64(13);
+                d.f64(*t_s);
+                d.u64(*pending as u64);
+            }
+            EngineEvent::Preempted {
+                t_s,
+                id,
+                resumed_at_layers,
+            } => {
+                d.u64(14);
+                d.f64(*t_s);
+                d.u64(*id);
+                d.u64(*resumed_at_layers);
+            }
+            EngineEvent::Resumed { t_s, id } => {
+                d.u64(15);
+                d.f64(*t_s);
+                d.u64(*id);
+            }
+        }
+    }
+    d.value()
+}
+
+/// Hash a session report: status, routing, policy names, fleet
+/// accounting, and per-request timings (tenant included).
+pub fn digest_report(rep: &SessionReport) -> u64 {
+    let mut d = Digest::new();
+    match rep.status {
+        SessionStatus::Drained => d.u64(0),
+        SessionStatus::Halted { pending } => {
+            d.u64(1);
+            d.u64(pending as u64);
+        }
+    }
+    for (id, replica) in &rep.assignments {
+        d.u64(*id);
+        d.u64(*replica as u64);
+    }
+    for p in &rep.policies {
+        d.str(p);
+    }
+    let m = &rep.fleet;
+    d.u64(m.iterations);
+    d.f64(m.makespan_s);
+    d.f64(m.busy_s);
+    d.f64(m.traffic.expert_bytes);
+    d.f64(m.traffic.kv_bytes);
+    d.f64(m.energy.total_j());
+    for r in &m.requests {
+        d.u64(r.id);
+        d.f64(r.arrival_s);
+        d.u64(u64::from(r.input_len));
+        d.u64(u64::from(r.output_len));
+        d.u64(u64::from(r.tenant));
+        d.f64(r.ttft_s);
+        d.f64(r.finish_s);
+        for t in &r.tbts_s {
+            d.f64(*t);
+        }
+    }
+    d.value()
+}
+
+// ---------------------------------------------------------------------------
+// Event-stream helpers shared with the test suites.
+// ---------------------------------------------------------------------------
+
+/// Token·layers of prefill computed for `id` across the whole log
+/// (`PrefillGroupDone` tokens × layers, summed).
+pub fn prefill_token_layers(log: &EventLog, id: u64) -> u64 {
+    log.events
+        .iter()
+        .map(|(_, e)| match e {
+            EngineEvent::PrefillGroupDone {
+                id: eid,
+                layers,
+                tokens,
+                ..
+            } if *eid == id => u64::from(*tokens) * u64::from(*layers),
+            _ => 0,
+        })
+        .sum()
+}
+
+/// Prompt tokens credited to `id` from prefix-cache hits (`PrefixHit`
+/// cached_tokens, summed — each credited token skips ALL layers).
+pub fn credited_tokens(log: &EventLog, id: u64) -> u64 {
+    log.events
+        .iter()
+        .map(|(_, e)| match e {
+            EngineEvent::PrefixHit {
+                id: eid,
+                cached_tokens,
+                ..
+            } if *eid == id => u64::from(*cached_tokens),
+            _ => 0,
+        })
+        .sum()
+}
+
+/// Per-request view assembled from the log: the `Request` payload of the
+/// last `Arrived`, event indices, and counters over the events from the
+/// last `Arrived` onward (the window conservation laws apply to).
+struct ReqView {
+    req: Request,
+    arrivals: usize,
+    last_arrived_idx: usize,
+    admitted_after: usize,
+    first_tokens_after: usize,
+    tokens_after: usize,
+    finished_after: usize,
+    finished_total: usize,
+    migrations: usize,
+    admitted_total: usize,
+    first_admitted_idx: Option<usize>,
+    first_arrived_idx: usize,
+}
+
+fn views(log: &EventLog) -> BTreeMap<u64, ReqView> {
+    let mut m: BTreeMap<u64, ReqView> = BTreeMap::new();
+    for (idx, (_, ev)) in log.events.iter().enumerate() {
+        if let EngineEvent::Arrived { req, .. } = ev {
+            m.entry(req.id)
+                .and_modify(|v| {
+                    v.arrivals += 1;
+                    v.last_arrived_idx = idx;
+                    v.req = *req;
+                    // Window counters restart at a fresh arrival.
+                    v.admitted_after = 0;
+                    v.first_tokens_after = 0;
+                    v.tokens_after = 0;
+                    v.finished_after = 0;
+                })
+                .or_insert(ReqView {
+                    req: *req,
+                    arrivals: 1,
+                    last_arrived_idx: idx,
+                    admitted_after: 0,
+                    first_tokens_after: 0,
+                    tokens_after: 0,
+                    finished_after: 0,
+                    finished_total: 0,
+                    migrations: 0,
+                    admitted_total: 0,
+                    first_admitted_idx: None,
+                    first_arrived_idx: idx,
+                });
+            continue;
+        }
+        let Some(id) = ev.id() else { continue };
+        let Some(v) = m.get_mut(&id) else { continue };
+        match ev {
+            EngineEvent::Admitted { .. } => {
+                v.admitted_after += 1;
+                v.admitted_total += 1;
+                v.first_admitted_idx.get_or_insert(idx);
+            }
+            EngineEvent::FirstToken { .. } => v.first_tokens_after += 1,
+            EngineEvent::TokenEmitted { .. } => v.tokens_after += 1,
+            EngineEvent::Finished { .. } => {
+                v.finished_after += 1;
+                v.finished_total += 1;
+            }
+            EngineEvent::KvMigrated { .. } => v.migrations += 1,
+            _ => {}
+        }
+    }
+    m
+}
+
+/// Events referencing an id that never arrived indicate sink corruption.
+fn orphan_check(log: &EventLog) -> Result<(), String> {
+    let mut arrived: BTreeMap<u64, bool> = BTreeMap::new();
+    for (_, ev) in &log.events {
+        if let EngineEvent::Arrived { req, .. } = ev {
+            arrived.insert(req.id, true);
+        } else if let Some(id) = ev.id() {
+            if !arrived.contains_key(&id) {
+                return Err(format!(
+                    "event {ev:?} references request {id} before/without any Arrived"
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// The laws.
+// ---------------------------------------------------------------------------
+
+/// From each request's last `Arrived` onward: a finished request has
+/// exactly one `FirstToken`, `output_len − 1` `TokenEmitted`, and one
+/// `Finished`.
+pub fn check_token_conservation(log: &EventLog) -> Result<(), String> {
+    for (id, v) in views(log) {
+        if v.finished_after == 0 {
+            continue;
+        }
+        if v.finished_after != 1 {
+            return Err(format!(
+                "req {id}: {} Finished after last Arrived (want 1)",
+                v.finished_after
+            ));
+        }
+        if v.first_tokens_after != 1 {
+            return Err(format!(
+                "req {id}: {} FirstToken after last Arrived (want 1)",
+                v.first_tokens_after
+            ));
+        }
+        let want = v.req.output_len.max(1) as usize - 1;
+        if v.tokens_after != want {
+            return Err(format!(
+                "req {id}: {} TokenEmitted after last Arrived (want {want} = output_len-1)",
+                v.tokens_after
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// `Arrived` resolution: a `Drained` run finishes every arrived id exactly
+/// once (globally — a request only truly finishes once, even re-served);
+/// a `Halted` run leaves `pending` ≥ the unfinished arrivals. No id ever
+/// finishes twice.
+pub fn check_event_conservation(log: &EventLog, status: SessionStatus) -> Result<(), String> {
+    orphan_check(log)?;
+    let vs = views(log);
+    let mut unfinished = 0usize;
+    for (id, v) in &vs {
+        if v.finished_total > 1 {
+            return Err(format!(
+                "req {id}: finished {} times (a request finishes once)",
+                v.finished_total
+            ));
+        }
+        if v.finished_total == 0 {
+            unfinished += 1;
+            if status == SessionStatus::Drained {
+                return Err(format!("req {id}: arrived but never Finished in a Drained run"));
+            }
+        }
+    }
+    if let SessionStatus::Halted { pending } = status {
+        if pending < unfinished {
+            return Err(format!(
+                "Halted reports {pending} pending but {unfinished} arrived ids are unfinished"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Admission accounting. Always: admissions only for arrived ids (orphan
+/// check) and the first `Admitted` follows the first `Arrived`. For
+/// chaos-free drained runs additionally: every id arrives exactly once,
+/// is admitted exactly once, and each of the fleet's `n_replicas` emits
+/// exactly one `ReplicaDrained`.
+pub fn check_admission_accounting(
+    log: &EventLog,
+    status: SessionStatus,
+    chaos_free: bool,
+    n_replicas: usize,
+) -> Result<(), String> {
+    let vs = views(log);
+    for (id, v) in &vs {
+        if let Some(adm) = v.first_admitted_idx {
+            if adm < v.first_arrived_idx {
+                return Err(format!("req {id}: Admitted at index {adm} before Arrived"));
+            }
+        }
+        if v.finished_total > 0 && v.admitted_total == 0 {
+            return Err(format!("req {id}: Finished without any Admitted"));
+        }
+    }
+    if chaos_free && status == SessionStatus::Drained {
+        for (id, v) in &vs {
+            if v.arrivals != 1 {
+                return Err(format!(
+                    "req {id}: {} Arrived events in a chaos-free run (want 1)",
+                    v.arrivals
+                ));
+            }
+            if v.admitted_total != 1 {
+                return Err(format!(
+                    "req {id}: {} Admitted events in a chaos-free drained run (want 1)",
+                    v.admitted_total
+                ));
+            }
+        }
+        let drained = log.count(|e| matches!(e, EngineEvent::ReplicaDrained { .. }));
+        if drained != n_replicas {
+            return Err(format!(
+                "{drained} ReplicaDrained events for {n_replicas} replicas"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Every capacity-reason `KvRejected` is a real shortfall: demand > free.
+pub fn check_kv_rejections(log: &EventLog) -> Result<(), String> {
+    for (_, ev) in &log.events {
+        if let EngineEvent::KvRejected {
+            id,
+            demand,
+            free,
+            reason: RejectReason::KvCapacity,
+            ..
+        } = ev
+        {
+            if demand <= free {
+                return Err(format!(
+                    "req {id}: KvCapacity rejection with demand {demand} <= free {free}"
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Prefill-credit conservation against `want = input_len × n_layers`:
+///
+/// * cleanly-served ids (one `Arrived`, one `Admitted`, no `KvMigrated`):
+///   computed + credited × n_layers == want at finish, ≤ want before;
+/// * re-served / migrated ids that finished: ≥ want (migration resumes
+///   with zero recompute — exactly `want`; a from-scratch re-serve
+///   recomputes — strictly more);
+/// * every id: computed work never exceeds one full prefill per serving
+///   attempt (`arrivals + migrations` bounds the multiplier).
+pub fn check_prefill_conservation(log: &EventLog, n_layers: u64) -> Result<(), String> {
+    for (id, v) in views(log) {
+        let want = u64::from(v.req.input_len) * n_layers;
+        let computed = prefill_token_layers(log, id);
+        let credited = credited_tokens(log, id) * n_layers;
+        let clean = v.arrivals == 1 && v.admitted_total <= 1 && v.migrations == 0;
+        if clean {
+            if v.finished_total > 0 && computed + credited != want {
+                return Err(format!(
+                    "req {id}: computed {computed} + credited {credited} token-layers != {want} \
+                     (input {} x {n_layers} layers) on a clean serve",
+                    v.req.input_len
+                ));
+            }
+            if computed + credited > want {
+                return Err(format!(
+                    "req {id}: computed {computed} + credited {credited} token-layers > {want} \
+                     (over-prefill on a clean serve)"
+                ));
+            }
+        } else {
+            if v.finished_total > 0 && computed + credited < want {
+                return Err(format!(
+                    "req {id}: computed {computed} + credited {credited} token-layers < {want} \
+                     after {} arrivals / {} migrations — finished under-prefilled",
+                    v.arrivals, v.migrations
+                ));
+            }
+            let attempts = (v.arrivals + v.migrations) as u64;
+            if computed > want.saturating_mul(attempts.max(1)) {
+                return Err(format!(
+                    "req {id}: computed {computed} token-layers exceeds {attempts} full prefills \
+                     of {want}"
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Replay KV-block charges per tenant from the event stream: blocks
+/// concurrently charged to a tenant never exceed its quota. Valid for
+/// single-replica, chaos-free, prefix-cache-off runs over an open-loop
+/// trace with the default 16-token KV block size (the conditions
+/// `tests/tenant_isolation.rs` locks).
+pub fn check_tenant_quota_law(
+    log: &EventLog,
+    trace: &Trace,
+    reg: &TenantRegistry,
+) -> Result<(), String> {
+    let by_id: BTreeMap<u64, &Request> = trace.requests.iter().map(|r| (r.id, r)).collect();
+    let blocks_for =
+        |r: &Request| (u64::from(r.input_len) + u64::from(r.output_len)).div_ceil(16);
+    for tenant in reg.ids() {
+        let quota = reg.spec(tenant).kv_block_quota;
+        if quota == 0 {
+            continue;
+        }
+        let mut charged: u64 = 0;
+        let mut peak: u64 = 0;
+        for (_, ev) in &log.events {
+            match ev {
+                EngineEvent::Admitted { id, .. } => {
+                    if let Some(r) = by_id.get(id).filter(|r| r.tenant == tenant) {
+                        charged += blocks_for(r);
+                        peak = peak.max(charged);
+                    }
+                }
+                EngineEvent::Finished { id, .. } => {
+                    if let Some(r) = by_id.get(id).filter(|r| r.tenant == tenant) {
+                        charged = charged.saturating_sub(blocks_for(r));
+                    }
+                }
+                _ => {}
+            }
+        }
+        if peak > quota {
+            return Err(format!(
+                "tenant {tenant}: peak KV charge {peak} blocks > quota {quota}"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Replay token-bucket admission per tenant: cumulative admitted prefill
+/// tokens never exceed `burst + rate × t + 0.5`. Same validity conditions
+/// as [`check_tenant_quota_law`].
+pub fn check_token_bucket_law(
+    log: &EventLog,
+    trace: &Trace,
+    reg: &TenantRegistry,
+) -> Result<(), String> {
+    let by_id: BTreeMap<u64, &Request> = trace.requests.iter().map(|r| (r.id, r)).collect();
+    for tenant in reg.ids() {
+        let spec = reg.spec(tenant);
+        if spec.rate_tokens_per_s <= 0.0 {
+            continue;
+        }
+        let burst = if spec.burst_tokens > 0.0 {
+            spec.burst_tokens
+        } else {
+            spec.rate_tokens_per_s
+        };
+        let mut admitted_tokens = 0.0f64;
+        for (_, ev) in &log.events {
+            if let EngineEvent::Admitted { t_s, id } = ev {
+                let Some(r) = by_id.get(id).filter(|r| r.tenant == tenant) else {
+                    continue;
+                };
+                // The bucket clamps each charge to its capacity (a prompt
+                // larger than burst drains the full bucket, no more), so
+                // the conserved quantity is the clamped sum.
+                admitted_tokens += f64::from(r.input_len).min(burst);
+                let bound = burst + spec.rate_tokens_per_s * *t_s + 0.5;
+                if admitted_tokens > bound {
+                    return Err(format!(
+                        "tenant {tenant}: {admitted_tokens} bucket-charged prefill tokens \
+                         admitted by t={t_s:.3}s, bound {bound:.1} (rate {}, burst {burst})",
+                        spec.rate_tokens_per_s
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Drive every policy the scenario names through the plan-level I1–I4
+/// auditor ([`crate::sched::audit`]) over the scenario's own workload.
+pub fn check_plan_laws(sc: &Scenario) -> Result<(), String> {
+    use crate::config::ModelDesc;
+    use crate::sched::PolicySpec;
+    use crate::workload::WorkloadGen;
+
+    let model = ModelDesc::qwen3_30b_a3b();
+    let trace = WorkloadGen::new(run::workload_spec(sc)).generate();
+    let arrivals: Vec<(Request, usize)> = trace
+        .requests
+        .iter()
+        .enumerate()
+        .map(|(i, r)| (*r, i))
+        .collect();
+    let mut seen: Vec<&str> = Vec::new();
+    for p in &sc.policies {
+        if seen.contains(&p.as_str()) {
+            continue;
+        }
+        seen.push(p);
+        let cfg = PolicySpec::parse(p)?.scheduler_config();
+        crate::sched::audit::drive_to_drain(&cfg, &model, &arrivals)
+            .map_err(|e| format!("plan laws (policy '{p}'): {e}"))?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Composition.
+// ---------------------------------------------------------------------------
+
+/// All single-run laws over one executed scenario.
+pub fn check_outcome(sc: &Scenario, out: &Outcome) -> Result<(), String> {
+    let chaos_free = sc.chaos.is_empty();
+    check_event_conservation(&out.log, out.report.status)?;
+    check_token_conservation(&out.log)?;
+    check_admission_accounting(
+        &out.log,
+        out.report.status,
+        chaos_free,
+        out.report.per_replica.len(),
+    )?;
+    check_kv_rejections(&out.log)?;
+    check_prefill_conservation(&out.log, out.n_layers)?;
+    if let Some(trace) = &out.trace {
+        if !sc.tenants.is_empty() && sc.replicas == 1 && chaos_free && !sc.prefix_cache {
+            let reg = TenantRegistry::parse(&sc.tenants)?;
+            check_tenant_quota_law(&out.log, trace, &reg)?;
+            check_token_bucket_law(&out.log, trace, &reg)?;
+        }
+    }
+    Ok(())
+}
+
+/// The full battery: run the scenario, check every single-run law, then
+/// the differential identities (stepped == plain for chaos-free open-loop
+/// scenarios; thread-count byte-identity for multi-replica fleets), then
+/// the plan laws for every named policy.
+pub fn check_battery(sc: &Scenario) -> Result<(), String> {
+    let out = run::run(sc)?;
+    check_outcome(sc, &out)?;
+
+    if sc.chaos.is_empty() && sc.sessions.is_none() {
+        let stepped = run::run_with(sc, sc.threads, true)?;
+        if digest_events(&stepped.log.events) != digest_events(&out.log.events)
+            || digest_report(&stepped.report) != digest_report(&out.report)
+        {
+            return Err(
+                "stepped control-plane path diverged from the plain path on a chaos-free \
+                 scenario"
+                    .to_string(),
+            );
+        }
+    }
+
+    if sc.replicas > 1 {
+        let serial = run::run_with(sc, 1, false)?;
+        let threaded = run::run_with(sc, 2, false)?;
+        if digest_events(&serial.log.events) != digest_events(&threaded.log.events)
+            || digest_report(&serial.report) != digest_report(&threaded.report)
+        {
+            return Err("event stream not byte-identical across thread counts".to_string());
+        }
+    }
+
+    check_plan_laws(sc)?;
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Unified chaos × property harness: randomized, shrinkable fleet
+//! scenarios with committed regression goldens.
+//!
+//! Every piece of the serving stack has its own property suite, but each
+//! one fuzzes its own corner with its own generator and its own ad-hoc
+//! assertions. This module unifies them around one value: a serializable
+//! [`Scenario`] describing a complete fleet serving run — workload shape,
+//! closed-loop session knobs, tenant registry, per-replica policy, router,
+//! a chaos schedule of drain/fail/rejoin/scale-up actions, and feature
+//! flags (prefix cache, KV migration, thread count).
+//!
+//! The pipeline:
+//!
+//! 1. **Generate** ([`generate::from_seed`]) — a seeded, deterministic
+//!    draw over the full axis product. Same seed, same scenario, on every
+//!    platform at every thread count.
+//! 2. **Run** ([`run::run`]) — execute through [`crate::serve::Session`]
+//!    with an [`EventLog`](crate::serve::EventLog) sink.
+//! 3. **Check** ([`invariants::check_battery`]) — one reusable battery of
+//!    conservation laws (see the catalog in [`invariants`]): no request
+//!    lost or duplicated, every `Arrived` resolves exactly once, token and
+//!    token·layer conservation, prefix-credit conservation, tenant budget
+//!    bounds, plan-level I1–I4 via [`crate::sched::audit`], stepped ==
+//!    plain, and N-thread byte-identity.
+//! 4. **Shrink** ([`shrink::minimize`]) — axis-wise minimization toward
+//!    [`Scenario::baseline`]: fewer requests, fewer chaos events, flags
+//!    off, one replica.
+//! 5. **Commit** ([`regressions`]) — a shrunk counterexample's canonical
+//!    JSON goes under `rust/tests/regressions/` and replays forever as a
+//!    golden (wired into `tests/chaos_harness.rs` and `lpserve fuzz`).
+//!
+//! Entry points: `lpserve fuzz --seed S --cases N [--minimize]` on the
+//! CLI, `tests/chaos_harness.rs` in the test suite.
+
+pub mod generate;
+pub mod invariants;
+pub mod regressions;
+pub mod run;
+pub mod scenario;
+pub mod shrink;
+
+pub use generate::from_seed;
+pub use invariants::{check_battery, check_outcome, digest_events, digest_report};
+pub use run::{run, run_with, Outcome};
+pub use scenario::{ChaosEvent, ChaosKind, Scenario, SessionKnobs};
+pub use shrink::minimize;

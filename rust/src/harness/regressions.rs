@@ -1,0 +1,66 @@
+//! Committed-regression replay: every `*.json` under
+//! `rust/tests/regressions/` is a [`Scenario`] — either a shrunk
+//! counterexample from a past fuzz failure (committed alongside its fix)
+//! or an exemplar covering an axis combination worth pinning. Replay runs
+//! the full invariant battery on each, so a law that once broke can never
+//! silently break again.
+//!
+//! File contract: canonical [`Scenario::to_canonical_string`] bytes plus a
+//! trailing newline. The loader re-serializes each file and rejects
+//! non-canonical committals — golden files must be diffable and stable
+//! under re-emission.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use super::invariants;
+use super::scenario::Scenario;
+
+/// The in-repo regression directory (`rust/tests/regressions`).
+pub fn default_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/regressions")
+}
+
+/// Load every `*.json` scenario in `dir`, sorted by file name. Errors name
+/// the offending file.
+pub fn load_dir(dir: &Path) -> Result<Vec<(String, Scenario)>, String> {
+    let mut names: Vec<PathBuf> = fs::read_dir(dir)
+        .map_err(|e| format!("read {}: {e}", dir.display()))?
+        .filter_map(|entry| entry.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|ext| ext == "json"))
+        .collect();
+    names.sort();
+
+    let mut out = Vec::new();
+    for path in names {
+        let text = fs::read_to_string(&path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        let sc = Scenario::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        let canonical = format!("{}\n", sc.to_canonical_string());
+        if text != canonical {
+            return Err(format!(
+                "{}: not in canonical form (re-emit with to_canonical_string() + newline)",
+                path.display()
+            ));
+        }
+        let name = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("scenario")
+            .to_string();
+        out.push((name, sc));
+    }
+    Ok(out)
+}
+
+/// Replay every committed scenario in `dir` through the full battery.
+/// Returns the replayed scenario names; the first failure aborts with the
+/// scenario name attached.
+pub fn replay(dir: &Path) -> Result<Vec<String>, String> {
+    let scenarios = load_dir(dir)?;
+    let mut names = Vec::new();
+    for (name, sc) in scenarios {
+        invariants::check_battery(&sc).map_err(|e| format!("regression '{name}': {e}"))?;
+        names.push(name);
+    }
+    Ok(names)
+}

@@ -1,0 +1,146 @@
+//! Execute a [`Scenario`] through [`serve::Session`] and collect everything
+//! the invariant battery needs: the [`SessionReport`], the full
+//! [`EngineEvent`](crate::serve::EngineEvent) stream, and (for open-loop
+//! scenarios) the generated [`Trace`] so per-request budgets are known.
+//!
+//! [`run_with`] exposes the two levers the battery's differential checks
+//! pull: an explicit thread count (byte-identity across counts) and
+//! `force_stepped` (attaching an EMPTY [`DrainController`] forces the
+//! stepped control-plane path, which must serve identically to the plain
+//! path when no chaos actually fires).
+
+use crate::cluster::{build_router, DrainController, ReplicaSpec};
+use crate::config::{Dataset, HardwareDesc, ModelDesc, WorkloadSpec};
+use crate::sched::PolicySpec;
+use crate::serve::{EventLog, Session, SessionReport};
+use crate::tenant::TenantRegistry;
+use crate::workload::{SessionSource, SessionSpec, Trace, WorkloadGen};
+
+use super::scenario::{ChaosKind, Scenario};
+
+/// Everything one scenario execution produced.
+pub struct Outcome {
+    pub report: SessionReport,
+    /// Full event stream (chronological per replica, merged by the sink).
+    pub log: EventLog,
+    /// The open-loop trace the run served (`None` for session scenarios,
+    /// whose arrivals are generated closed-loop).
+    pub trace: Option<Trace>,
+    /// Layer count of the model served (for token·layer conservation).
+    pub n_layers: u64,
+}
+
+/// The open-loop workload spec a scenario denotes (also the base spec for
+/// its closed-loop sessions).
+pub fn workload_spec(sc: &Scenario) -> WorkloadSpec {
+    let dataset = Dataset::parse(&sc.dataset).unwrap_or(Dataset::Fixed);
+    let mut spec = WorkloadSpec::new(dataset, sc.rate, sc.n_requests);
+    spec.seed = sc.seed;
+    spec.fixed_input = sc.fixed_input;
+    spec.fixed_output = sc.fixed_output;
+    if sc.shared_prefix_len > 0 {
+        spec = spec.with_shared_prefix(sc.shared_prefix_len, sc.prefix_groups.max(1));
+    }
+    if sc.tenant_stamp > 0 {
+        spec = spec.with_tenants(sc.tenant_stamp, sc.tenant_heavy_pct);
+    }
+    if sc.priority_pct > 0 {
+        spec = spec.with_priorities(sc.priority_pct);
+    }
+    spec
+}
+
+/// Run the scenario exactly as written.
+pub fn run(sc: &Scenario) -> Result<Outcome, String> {
+    run_with(sc, sc.threads, false)
+}
+
+/// Run the scenario with an overridden thread count and, optionally, the
+/// stepped control-plane path forced on (via an empty [`DrainController`])
+/// even when the chaos schedule is empty.
+pub fn run_with(sc: &Scenario, threads: usize, force_stepped: bool) -> Result<Outcome, String> {
+    sc.validate()?;
+    let model = ModelDesc::qwen3_30b_a3b();
+    let hw = HardwareDesc::h100x2();
+    let base = workload_spec(sc);
+    let trace = if sc.sessions.is_none() {
+        Some(WorkloadGen::new(base.clone()).generate())
+    } else {
+        None
+    };
+
+    let mut log = EventLog::default();
+    let report = {
+        let mut b = Session::builder()
+            .model(model.clone())
+            .hardware(hw.clone())
+            .threads(threads)
+            .control_interval(sc.control_interval_s)
+            .prefix_cache(sc.prefix_cache)
+            .migrate_kv(sc.migrate_kv);
+
+        if sc.policies.len() == 1 {
+            let spec = PolicySpec::parse(&sc.policies[0])?;
+            b = b.replicas(sc.replicas).policy_spec(spec);
+        } else {
+            let specs = sc
+                .policies
+                .iter()
+                .map(|p| {
+                    Ok(ReplicaSpec {
+                        model: model.clone(),
+                        hw: hw.clone(),
+                        sched: PolicySpec::parse(p)?.scheduler_config(),
+                    })
+                })
+                .collect::<Result<Vec<_>, String>>()?;
+            b = b.replica_specs(specs);
+        }
+
+        let router =
+            build_router(&sc.router).ok_or_else(|| format!("unknown router '{}'", sc.router))?;
+        b = b.router(router);
+
+        if !sc.tenants.is_empty() {
+            b = b.tenants(TenantRegistry::parse(&sc.tenants)?);
+        }
+        if sc.horizon_s > 0.0 {
+            b = b.horizon(sc.horizon_s);
+        }
+
+        if !sc.chaos.is_empty() || force_stepped {
+            let mut ctl = DrainController::new();
+            for ev in &sc.chaos {
+                ctl = match ev.kind {
+                    ChaosKind::Drain => ctl.drain_at(ev.t_s, ev.replica),
+                    ChaosKind::Fail => ctl.fail_at(ev.t_s, ev.replica),
+                    ChaosKind::Rejoin => ctl.rejoin_at(ev.t_s, ev.replica),
+                    ChaosKind::ScaleUp => ctl.scale_up_at(ev.t_s),
+                };
+            }
+            b = b.controller(ctl);
+        }
+
+        b = b.sink(&mut log);
+        match (&trace, &sc.sessions) {
+            (Some(t), _) => b.trace(t).run(),
+            (None, Some(k)) => {
+                let spec = SessionSpec::new(base, k.sessions)
+                    .exact_turns(k.turns)
+                    .think_time_s(k.think_time_s)
+                    .followup_tokens(k.followup_tokens)
+                    .toolcalls(k.toolcall_pct, k.toolcall_fanout);
+                b.workload(SessionSource::new(spec)).run()
+            }
+            (None, None) => unreachable!("validate() requires a trace or sessions"),
+        }
+        .map_err(|e| format!("scenario run failed: {e:?}"))?
+    };
+
+    Ok(Outcome {
+        report,
+        log,
+        trace,
+        n_layers: u64::from(model.n_layers),
+    })
+}

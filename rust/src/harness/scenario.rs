@@ -1,0 +1,507 @@
+//! The serializable [`Scenario`] value: one point in the chaos × property
+//! space — workload shape × closed-loop session knobs × tenant registry ×
+//! per-replica policy × router × chaos schedule × feature flags.
+//!
+//! A scenario is data, not code: it round-trips through
+//! [`crate::util::json`] byte-stably ([`Scenario::to_canonical_string`] ∘
+//! [`Scenario::parse`] is the identity on canonical strings — object keys
+//! are `BTreeMap`-sorted and integral numbers print as integers), so a
+//! shrunk counterexample can be committed under `rust/tests/regressions/`
+//! and replayed forever. [`Scenario::validate`] is the single gate both
+//! the generator and the regression loader go through: every policy
+//! string must parse, the router must exist, chaos events must target
+//! real replicas and never take the whole fleet down.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::build_router;
+use crate::sched::PolicySpec;
+use crate::tenant::TenantRegistry;
+use crate::util::json::{self, Json};
+
+/// One scripted control-plane action at `t_s` engine seconds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChaosKind {
+    /// Graceful drain: stop routing, let in-flight work finish/migrate.
+    Drain,
+    /// Hard failure: the replica dies; admitted work re-serves or migrates.
+    Fail,
+    /// A drained/failed replica re-enters rotation.
+    Rejoin,
+    /// The fleet grows by one fresh replica (ignores `replica`).
+    ScaleUp,
+}
+
+impl ChaosKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ChaosKind::Drain => "drain",
+            ChaosKind::Fail => "fail",
+            ChaosKind::Rejoin => "rejoin",
+            ChaosKind::ScaleUp => "scale-up",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "drain" => Ok(ChaosKind::Drain),
+            "fail" => Ok(ChaosKind::Fail),
+            "rejoin" => Ok(ChaosKind::Rejoin),
+            "scale-up" => Ok(ChaosKind::ScaleUp),
+            other => Err(format!(
+                "unknown chaos kind '{other}' (drain|fail|rejoin|scale-up)"
+            )),
+        }
+    }
+}
+
+/// One chaos-schedule entry: `kind` fires at `t_s` against `replica`
+/// (ignored by [`ChaosKind::ScaleUp`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChaosEvent {
+    pub t_s: f64,
+    pub kind: ChaosKind,
+    pub replica: usize,
+}
+
+impl ChaosEvent {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("kind".to_string(), Json::Str(self.kind.name().to_string()));
+        m.insert("replica".to_string(), Json::Num(self.replica as f64));
+        m.insert("t_s".to_string(), Json::Num(self.t_s));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        Ok(ChaosEvent {
+            t_s: req_f64(j, "t_s")?,
+            kind: ChaosKind::parse(req_str(j, "kind")?)?,
+            replica: req_f64(j, "replica")? as usize,
+        })
+    }
+}
+
+/// Closed-loop session intake knobs (`None` = open-loop trace workload).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionKnobs {
+    /// Concurrent multi-turn conversations.
+    pub sessions: usize,
+    /// Exact main-chain turns per session.
+    pub turns: u32,
+    /// Think-time gap between a finish and the next turn's arrival.
+    pub think_time_s: f64,
+    /// Fresh user tokens appended per follow-up turn (0 = sampled).
+    pub followup_tokens: u32,
+    /// Percent of turns fanning out tool-call children.
+    pub toolcall_pct: u32,
+    /// Children per tool-call turn.
+    pub toolcall_fanout: u32,
+}
+
+impl SessionKnobs {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("sessions".to_string(), Json::Num(self.sessions as f64));
+        m.insert("turns".to_string(), Json::Num(f64::from(self.turns)));
+        m.insert("think_time_s".to_string(), Json::Num(self.think_time_s));
+        m.insert(
+            "followup_tokens".to_string(),
+            Json::Num(f64::from(self.followup_tokens)),
+        );
+        m.insert(
+            "toolcall_pct".to_string(),
+            Json::Num(f64::from(self.toolcall_pct)),
+        );
+        m.insert(
+            "toolcall_fanout".to_string(),
+            Json::Num(f64::from(self.toolcall_fanout)),
+        );
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        Ok(SessionKnobs {
+            sessions: req_f64(j, "sessions")? as usize,
+            turns: req_f64(j, "turns")? as u32,
+            think_time_s: req_f64(j, "think_time_s")?,
+            followup_tokens: req_f64(j, "followup_tokens")? as u32,
+            toolcall_pct: req_f64(j, "toolcall_pct")? as u32,
+            toolcall_fanout: req_f64(j, "toolcall_fanout")? as u32,
+        })
+    }
+}
+
+/// A complete, serializable description of one fleet serving run — the
+/// unit the chaos harness generates, runs, checks, shrinks, and commits.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    /// Workload RNG seed (also the scenario's identity in fuzz output).
+    pub seed: u64,
+    /// `fixed` | `sharegpt` | `arxiv`.
+    pub dataset: String,
+    /// Open-loop request count (ignored when `sessions` is set).
+    pub n_requests: usize,
+    /// Mean arrival rate, req/s.
+    pub rate: f64,
+    /// Prompt tokens for the `fixed` dataset.
+    pub fixed_input: u32,
+    /// Output tokens for the `fixed` dataset.
+    pub fixed_output: u32,
+    /// Shared system-prompt prefix length (0 = no shared prefixes).
+    pub shared_prefix_len: u32,
+    /// Distinct prefix groups when `shared_prefix_len > 0`.
+    pub prefix_groups: u32,
+    /// Tenant registry in the CLI `--tenants` grammar ("" = untenanted).
+    pub tenants: String,
+    /// Tenant ids stamped on the workload (0 = leave untenanted).
+    pub tenant_stamp: u32,
+    /// Percent of arrivals given to tenant 1 (noisy neighbor; 0 = uniform).
+    pub tenant_heavy_pct: u32,
+    /// Percent of requests stamped priority 1.
+    pub priority_pct: u32,
+    /// Closed-loop session knobs (`None` = open-loop trace).
+    pub sessions: Option<SessionKnobs>,
+    /// Fleet size at start.
+    pub replicas: usize,
+    /// Per-replica `PolicySpec` strings: one entry applies fleet-wide,
+    /// otherwise exactly one per replica.
+    pub policies: Vec<String>,
+    /// Router name (`rr` | `least-kv` | `slo` | `spill` | `prefix`).
+    pub router: String,
+    /// Scripted drain/fail/rejoin/scale-up schedule.
+    pub chaos: Vec<ChaosEvent>,
+    /// Automatic prefix caching on/off.
+    pub prefix_cache: bool,
+    /// KV migration on drain/fail on/off.
+    pub migrate_kv: bool,
+    /// Worker threads (0 = auto; byte-identical at every count).
+    pub threads: usize,
+    /// Control boundary interval, seconds.
+    pub control_interval_s: f64,
+    /// Run horizon (0 = drain to completion).
+    pub horizon_s: f64,
+}
+
+impl Scenario {
+    /// The smallest interesting scenario: one replica, one tiny fixed
+    /// workload, every feature off. Shrinking converges toward this.
+    pub fn baseline() -> Self {
+        Scenario {
+            seed: 1,
+            dataset: "fixed".to_string(),
+            n_requests: 2,
+            rate: 4.0,
+            fixed_input: 64,
+            fixed_output: 4,
+            shared_prefix_len: 0,
+            prefix_groups: 0,
+            tenants: String::new(),
+            tenant_stamp: 0,
+            tenant_heavy_pct: 0,
+            priority_pct: 0,
+            sessions: None,
+            replicas: 1,
+            policies: vec!["layered".to_string()],
+            router: "rr".to_string(),
+            chaos: Vec::new(),
+            prefix_cache: false,
+            migrate_kv: false,
+            threads: 1,
+            control_interval_s: 0.25,
+            horizon_s: 0.0,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert(
+            "chaos".to_string(),
+            Json::Arr(self.chaos.iter().map(ChaosEvent::to_json).collect()),
+        );
+        m.insert(
+            "control_interval_s".to_string(),
+            Json::Num(self.control_interval_s),
+        );
+        m.insert("dataset".to_string(), Json::Str(self.dataset.clone()));
+        m.insert(
+            "fixed_input".to_string(),
+            Json::Num(f64::from(self.fixed_input)),
+        );
+        m.insert(
+            "fixed_output".to_string(),
+            Json::Num(f64::from(self.fixed_output)),
+        );
+        m.insert("horizon_s".to_string(), Json::Num(self.horizon_s));
+        m.insert("migrate_kv".to_string(), Json::Bool(self.migrate_kv));
+        m.insert("n_requests".to_string(), Json::Num(self.n_requests as f64));
+        m.insert(
+            "policies".to_string(),
+            Json::Arr(
+                self.policies
+                    .iter()
+                    .map(|p| Json::Str(p.clone()))
+                    .collect(),
+            ),
+        );
+        m.insert(
+            "prefix_cache".to_string(),
+            Json::Bool(self.prefix_cache),
+        );
+        m.insert(
+            "prefix_groups".to_string(),
+            Json::Num(f64::from(self.prefix_groups)),
+        );
+        m.insert(
+            "priority_pct".to_string(),
+            Json::Num(f64::from(self.priority_pct)),
+        );
+        m.insert("rate".to_string(), Json::Num(self.rate));
+        m.insert("replicas".to_string(), Json::Num(self.replicas as f64));
+        m.insert("router".to_string(), Json::Str(self.router.clone()));
+        m.insert("seed".to_string(), Json::Num(self.seed as f64));
+        m.insert(
+            "sessions".to_string(),
+            match &self.sessions {
+                Some(k) => k.to_json(),
+                None => Json::Null,
+            },
+        );
+        m.insert(
+            "shared_prefix_len".to_string(),
+            Json::Num(f64::from(self.shared_prefix_len)),
+        );
+        m.insert(
+            "tenant_heavy_pct".to_string(),
+            Json::Num(f64::from(self.tenant_heavy_pct)),
+        );
+        m.insert(
+            "tenant_stamp".to_string(),
+            Json::Num(f64::from(self.tenant_stamp)),
+        );
+        m.insert("tenants".to_string(), Json::Str(self.tenants.clone()));
+        m.insert("threads".to_string(), Json::Num(self.threads as f64));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let chaos = match j.get("chaos") {
+            Some(Json::Arr(v)) => v
+                .iter()
+                .map(ChaosEvent::from_json)
+                .collect::<Result<Vec<_>, _>>()?,
+            Some(other) => return Err(format!("chaos: expected array, got {other:?}")),
+            None => Vec::new(),
+        };
+        let sessions = match j.get("sessions") {
+            None | Some(Json::Null) => None,
+            Some(k) => Some(SessionKnobs::from_json(k)?),
+        };
+        let policies = match j.get("policies") {
+            Some(Json::Arr(v)) => v
+                .iter()
+                .map(|p| {
+                    p.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| format!("policies: expected string, got {p:?}"))
+                })
+                .collect::<Result<Vec<_>, _>>()?,
+            _ => return Err("policies: expected array of strings".to_string()),
+        };
+        let sc = Scenario {
+            seed: req_f64(j, "seed")? as u64,
+            dataset: req_str(j, "dataset")?.to_string(),
+            n_requests: req_f64(j, "n_requests")? as usize,
+            rate: req_f64(j, "rate")?,
+            fixed_input: req_f64(j, "fixed_input")? as u32,
+            fixed_output: req_f64(j, "fixed_output")? as u32,
+            shared_prefix_len: req_f64(j, "shared_prefix_len")? as u32,
+            prefix_groups: req_f64(j, "prefix_groups")? as u32,
+            tenants: req_str(j, "tenants")?.to_string(),
+            tenant_stamp: req_f64(j, "tenant_stamp")? as u32,
+            tenant_heavy_pct: req_f64(j, "tenant_heavy_pct")? as u32,
+            priority_pct: req_f64(j, "priority_pct")? as u32,
+            sessions,
+            replicas: req_f64(j, "replicas")? as usize,
+            policies,
+            router: req_str(j, "router")?.to_string(),
+            chaos,
+            prefix_cache: req_bool(j, "prefix_cache")?,
+            migrate_kv: req_bool(j, "migrate_kv")?,
+            threads: req_f64(j, "threads")? as usize,
+            control_interval_s: req_f64(j, "control_interval_s")?,
+            horizon_s: req_f64(j, "horizon_s")?,
+        };
+        sc.validate()?;
+        Ok(sc)
+    }
+
+    /// Canonical serialized form: sorted keys, integral numbers printed
+    /// as integers. `parse(to_canonical_string())` reproduces the exact
+    /// bytes — the property `tests/chaos_harness.rs` locks.
+    pub fn to_canonical_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let j = json::parse(s).map_err(|e| format!("scenario JSON: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    /// Structural validity: every axis value must be runnable before the
+    /// harness builds a `serve::Session` from it.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.seed >= (1u64 << 53) {
+            return Err("seed must fit in an f64-exact integer (< 2^53)".to_string());
+        }
+        if !matches!(self.dataset.as_str(), "fixed" | "sharegpt" | "arxiv") {
+            return Err(format!(
+                "unknown dataset '{}' (fixed|sharegpt|arxiv)",
+                self.dataset
+            ));
+        }
+        if self.replicas == 0 || self.replicas > 8 {
+            return Err(format!("replicas {} out of range 1..=8", self.replicas));
+        }
+        if self.sessions.is_none() && self.n_requests == 0 {
+            return Err("open-loop scenario needs n_requests >= 1".to_string());
+        }
+        if let Some(k) = &self.sessions {
+            if k.sessions == 0 || k.turns == 0 {
+                return Err("session scenario needs sessions >= 1 and turns >= 1".to_string());
+            }
+        }
+        if self.rate <= 0.0 {
+            return Err(format!("rate {} must be positive", self.rate));
+        }
+        if self.policies.is_empty() {
+            return Err("at least one policy is required".to_string());
+        }
+        if self.policies.len() != 1 && self.policies.len() != self.replicas {
+            return Err(format!(
+                "{} policies for {} replicas (need 1 or exactly one per replica)",
+                self.policies.len(),
+                self.replicas
+            ));
+        }
+        for p in &self.policies {
+            PolicySpec::parse(p).map_err(|e| format!("policy '{p}': {e}"))?;
+        }
+        if build_router(&self.router).is_none() {
+            return Err(format!("unknown router '{}'", self.router));
+        }
+        if !self.tenants.is_empty() {
+            TenantRegistry::parse(&self.tenants)
+                .map_err(|e| format!("tenants '{}': {e}", self.tenants))?;
+            if self.tenant_stamp == 0 {
+                return Err(
+                    "a tenant registry without stamped tenant ids enforces nothing".to_string(),
+                );
+            }
+        }
+        if self.shared_prefix_len > 0 && self.prefix_groups == 0 {
+            return Err("shared_prefix_len > 0 needs prefix_groups >= 1".to_string());
+        }
+        let scale_ups = self
+            .chaos
+            .iter()
+            .filter(|e| e.kind == ChaosKind::ScaleUp)
+            .count();
+        for ev in &self.chaos {
+            if ev.t_s < 0.0 {
+                return Err(format!("chaos event at negative time {}", ev.t_s));
+            }
+            if ev.kind != ChaosKind::ScaleUp && ev.replica >= self.replicas + scale_ups {
+                return Err(format!(
+                    "chaos {} targets replica {} of {} (+{} scale-ups)",
+                    ev.kind.name(),
+                    ev.replica,
+                    self.replicas,
+                    scale_ups
+                ));
+            }
+            // Keep at least one replica serving: scripted drains/fails must
+            // never touch replica 0, so the fleet cannot go fully dark.
+            if matches!(ev.kind, ChaosKind::Drain | ChaosKind::Fail) && ev.replica == 0 {
+                return Err("chaos may not drain/fail replica 0 (fleet would go dark)".to_string());
+            }
+        }
+        if self.control_interval_s <= 0.0 {
+            return Err("control_interval_s must be positive".to_string());
+        }
+        if self.horizon_s < 0.0 {
+            return Err("horizon_s must be >= 0".to_string());
+        }
+        Ok(())
+    }
+}
+
+fn req_f64(j: &Json, key: &str) -> Result<f64, String> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("missing/invalid number field '{key}'"))
+}
+
+fn req_str<'a>(j: &'a Json, key: &str) -> Result<&'a str, String> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| format!("missing/invalid string field '{key}'"))
+}
+
+fn req_bool(j: &Json, key: &str) -> Result<bool, String> {
+    j.get(key)
+        .and_then(Json::as_bool)
+        .ok_or_else(|| format!("missing/invalid bool field '{key}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_validates_and_round_trips() {
+        let sc = Scenario::baseline();
+        sc.validate().expect("baseline is valid");
+        let s = sc.to_canonical_string();
+        let back = Scenario::parse(&s).expect("canonical form parses");
+        assert_eq!(back, sc);
+        assert_eq!(back.to_canonical_string(), s, "round-trip is byte-stable");
+    }
+
+    #[test]
+    fn invalid_scenarios_are_rejected() {
+        let mut sc = Scenario::baseline();
+        sc.router = "teleport".to_string();
+        assert!(sc.validate().is_err());
+
+        let mut sc = Scenario::baseline();
+        sc.policies = vec!["not-a-policy!!".to_string()];
+        assert!(sc.validate().is_err());
+
+        let mut sc = Scenario::baseline();
+        sc.replicas = 2;
+        sc.chaos = vec![ChaosEvent {
+            t_s: 1.0,
+            kind: ChaosKind::Fail,
+            replica: 0,
+        }];
+        assert!(sc.validate().is_err(), "failing replica 0 darkens the fleet");
+
+        let mut sc = Scenario::baseline();
+        sc.tenants = "2".to_string();
+        assert!(sc.validate().is_err(), "registry without stamping is inert");
+    }
+
+    #[test]
+    fn chaos_kind_names_round_trip() {
+        for k in [
+            ChaosKind::Drain,
+            ChaosKind::Fail,
+            ChaosKind::Rejoin,
+            ChaosKind::ScaleUp,
+        ] {
+            assert_eq!(ChaosKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(ChaosKind::parse("explode").is_err());
+    }
+}

@@ -1,0 +1,364 @@
+//! Axis-wise scenario shrinking: given a failing [`Scenario`] and a
+//! predicate that re-runs the battery, walk the scenario toward
+//! [`Scenario::baseline`] one axis at a time, keeping each move only when
+//! the failure survives it.
+//!
+//! Unlike the draw-log integer shrinker in [`crate::util::proptest`], this
+//! shrinker understands the scenario's STRUCTURE: it deletes whole chaos
+//! events, collapses the fleet to one replica (re-targeting nothing —
+//! chaos is dropped first), turns features off wholesale, and bisects the
+//! request count — so a violation found in a 14-request, 3-replica,
+//! chaotic, tenanted scenario typically lands as a ≤ 4-request, 1-replica,
+//! feature-off scenario whose JSON is small enough to read and commit.
+
+use super::scenario::Scenario;
+
+/// One candidate-producing move. Returns `None` when the move does not
+/// apply (already minimal on that axis).
+type Move = fn(&Scenario) -> Option<Scenario>;
+
+fn drop_last_chaos(sc: &Scenario) -> Option<Scenario> {
+    if sc.chaos.is_empty() {
+        return None;
+    }
+    let mut c = sc.clone();
+    c.chaos.pop();
+    Some(c)
+}
+
+fn drop_first_chaos(sc: &Scenario) -> Option<Scenario> {
+    if sc.chaos.is_empty() {
+        return None;
+    }
+    let mut c = sc.clone();
+    c.chaos.remove(0);
+    Some(c)
+}
+
+fn clear_chaos(sc: &Scenario) -> Option<Scenario> {
+    if sc.chaos.is_empty() {
+        return None;
+    }
+    let mut c = sc.clone();
+    c.chaos.clear();
+    Some(c)
+}
+
+fn one_replica(sc: &Scenario) -> Option<Scenario> {
+    if sc.replicas == 1 {
+        return None;
+    }
+    let mut c = sc.clone();
+    c.replicas = 1;
+    c.policies.truncate(1);
+    // Chaos targeting replicas >= 1 can no longer exist; scale-ups would
+    // re-grow the fleet. A single-replica repro drops the schedule.
+    c.chaos.clear();
+    Some(c)
+}
+
+fn fewer_replicas(sc: &Scenario) -> Option<Scenario> {
+    if sc.replicas <= 2 {
+        return None;
+    }
+    let mut c = sc.clone();
+    c.replicas -= 1;
+    if c.policies.len() > 1 {
+        c.policies.truncate(c.replicas);
+    }
+    c.chaos.retain(|e| e.replica < c.replicas);
+    Some(c)
+}
+
+fn no_sessions(sc: &Scenario) -> Option<Scenario> {
+    sc.sessions.as_ref()?;
+    let mut c = sc.clone();
+    c.sessions = None;
+    Some(c)
+}
+
+fn no_tenants(sc: &Scenario) -> Option<Scenario> {
+    if sc.tenants.is_empty() && sc.tenant_stamp == 0 {
+        return None;
+    }
+    let mut c = sc.clone();
+    c.tenants.clear();
+    c.tenant_stamp = 0;
+    c.tenant_heavy_pct = 0;
+    Some(c)
+}
+
+fn no_priorities(sc: &Scenario) -> Option<Scenario> {
+    if sc.priority_pct == 0 {
+        return None;
+    }
+    let mut c = sc.clone();
+    c.priority_pct = 0;
+    Some(c)
+}
+
+fn no_prefixes(sc: &Scenario) -> Option<Scenario> {
+    if sc.shared_prefix_len == 0 && !sc.prefix_cache {
+        return None;
+    }
+    let mut c = sc.clone();
+    c.shared_prefix_len = 0;
+    c.prefix_groups = 0;
+    c.prefix_cache = false;
+    Some(c)
+}
+
+fn no_migration(sc: &Scenario) -> Option<Scenario> {
+    if !sc.migrate_kv {
+        return None;
+    }
+    let mut c = sc.clone();
+    c.migrate_kv = false;
+    Some(c)
+}
+
+fn one_thread(sc: &Scenario) -> Option<Scenario> {
+    if sc.threads == 1 {
+        return None;
+    }
+    let mut c = sc.clone();
+    c.threads = 1;
+    Some(c)
+}
+
+fn plain_router(sc: &Scenario) -> Option<Scenario> {
+    if sc.router == "rr" {
+        return None;
+    }
+    let mut c = sc.clone();
+    c.router = "rr".to_string();
+    Some(c)
+}
+
+fn no_horizon(sc: &Scenario) -> Option<Scenario> {
+    if sc.horizon_s == 0.0 {
+        return None;
+    }
+    let mut c = sc.clone();
+    c.horizon_s = 0.0;
+    Some(c)
+}
+
+fn layered_policy(sc: &Scenario) -> Option<Scenario> {
+    if sc.policies == ["layered"] {
+        return None;
+    }
+    let mut c = sc.clone();
+    c.policies = vec!["layered".to_string()];
+    Some(c)
+}
+
+fn homogeneous_policies(sc: &Scenario) -> Option<Scenario> {
+    if sc.policies.len() <= 1 {
+        return None;
+    }
+    let mut c = sc.clone();
+    c.policies.truncate(1);
+    Some(c)
+}
+
+fn fixed_dataset(sc: &Scenario) -> Option<Scenario> {
+    if sc.dataset == "fixed" {
+        return None;
+    }
+    let mut c = sc.clone();
+    c.dataset = "fixed".to_string();
+    Some(c)
+}
+
+fn small_lengths(sc: &Scenario) -> Option<Scenario> {
+    if sc.fixed_input <= 64 && sc.fixed_output <= 4 {
+        return None;
+    }
+    let mut c = sc.clone();
+    c.fixed_input = 64;
+    c.fixed_output = 4;
+    Some(c)
+}
+
+/// Ordered moves: structure first (chaos, fleet, intake), then feature
+/// flags, then sizes. Request-count bisection is handled separately in
+/// [`minimize`] because it has multiple candidates per step.
+const MOVES: [Move; 16] = [
+    clear_chaos,
+    one_replica,
+    no_sessions,
+    no_tenants,
+    no_prefixes,
+    no_migration,
+    no_horizon,
+    drop_first_chaos,
+    drop_last_chaos,
+    fewer_replicas,
+    homogeneous_policies,
+    layered_policy,
+    plain_router,
+    no_priorities,
+    one_thread,
+    fixed_dataset,
+];
+
+/// Shrink `sc` to a (locally) minimal scenario on which `fails` still
+/// returns `Some(error)`. `fails` must return `Some` for `sc` itself —
+/// the returned pair is the minimal scenario and its failure message.
+/// `budget` bounds the number of candidate evaluations (each one runs the
+/// battery); shrinking stops at a fixpoint or when the budget is spent.
+pub fn minimize<F>(sc: &Scenario, fails: F, mut budget: usize) -> (Scenario, String)
+where
+    F: Fn(&Scenario) -> Option<String>,
+{
+    let mut best = sc.clone();
+    let mut best_msg = match fails(&best) {
+        Some(m) => m,
+        None => return (best, "minimize: scenario does not fail".to_string()),
+    };
+
+    let mut improved = true;
+    while improved && budget > 0 {
+        improved = false;
+
+        for mv in MOVES {
+            if budget == 0 {
+                break;
+            }
+            let Some(cand) = mv(&best) else { continue };
+            if cand == best || cand.validate().is_err() {
+                continue;
+            }
+            budget -= 1;
+            if let Some(msg) = fails(&cand) {
+                best = cand;
+                best_msg = msg;
+                improved = true;
+            }
+        }
+
+        // Request-count bisection: try 1, n/4, n/2, n-1 in that order.
+        let n = best.n_requests;
+        if n > 1 {
+            for cand_n in [1, n / 4, n / 2, n - 1] {
+                if budget == 0 {
+                    break;
+                }
+                if cand_n == 0 || cand_n >= n {
+                    continue;
+                }
+                let mut cand = best.clone();
+                cand.n_requests = cand_n;
+                if cand.validate().is_err() {
+                    continue;
+                }
+                budget -= 1;
+                if let Some(msg) = fails(&cand) {
+                    best = cand;
+                    best_msg = msg;
+                    improved = true;
+                    break;
+                }
+            }
+        }
+
+        // Session-count shrink (when the failure needs sessions).
+        if let Some(k) = best.sessions.clone() {
+            if k.sessions > 1 && budget > 0 {
+                let mut cand = best.clone();
+                cand.sessions = Some(super::scenario::SessionKnobs {
+                    sessions: 1,
+                    turns: k.turns.min(2),
+                    toolcall_pct: 0,
+                    ..k
+                });
+                if cand != best && cand.validate().is_ok() {
+                    budget -= 1;
+                    if let Some(msg) = fails(&cand) {
+                        best = cand;
+                        best_msg = msg;
+                        improved = true;
+                    }
+                }
+            }
+        }
+
+        // Length shrink last: a failure that needs long prompts keeps them.
+        if budget > 0 {
+            if let Some(cand) = small_lengths(&best) {
+                if cand.validate().is_ok() {
+                    budget -= 1;
+                    if let Some(msg) = fails(&cand) {
+                        best = cand;
+                        best_msg = msg;
+                        improved = true;
+                    }
+                }
+            }
+        }
+    }
+    (best, best_msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::generate;
+    use super::*;
+
+    /// An always-failing predicate shrinks any scenario to the floor on
+    /// every axis.
+    #[test]
+    fn always_failing_predicate_reaches_the_floor() {
+        for seed in [3u64, 17, 42, 99] {
+            let sc = generate::from_seed(seed);
+            let (min, msg) = minimize(&sc, |_| Some("boom".to_string()), 400);
+            assert_eq!(msg, "boom");
+            assert_eq!(min.n_requests, 1, "seed {seed}: {min:?}");
+            assert_eq!(min.replicas, 1);
+            assert!(min.chaos.is_empty());
+            assert!(min.sessions.is_none());
+            assert!(min.tenants.is_empty());
+            assert!(!min.prefix_cache);
+            assert!(!min.migrate_kv);
+            assert_eq!(min.policies, vec!["layered".to_string()]);
+            assert_eq!(min.router, "rr");
+            assert_eq!(min.priority_pct, 0);
+            assert_eq!(min.horizon_s, 0.0);
+            assert_eq!(min.fixed_input, 64);
+            assert_eq!(min.fixed_output, 4);
+            min.validate().expect("minimal scenario stays valid");
+        }
+    }
+
+    /// A predicate that needs tenants AND a chaos event keeps exactly
+    /// those axes and shrinks everything else — the acceptance bound:
+    /// ≤ 4 requests, ≤ 1 chaos event, ≤ 2 replicas.
+    #[test]
+    fn structured_predicate_keeps_only_the_needed_axes() {
+        let mut found = false;
+        for seed in 0..400u64 {
+            let sc = generate::from_seed(seed);
+            if sc.tenants.is_empty() || sc.chaos.is_empty() {
+                continue;
+            }
+            found = true;
+            let fails = |c: &Scenario| {
+                if !c.tenants.is_empty() && !c.chaos.is_empty() {
+                    Some("needs tenants + chaos".to_string())
+                } else {
+                    None
+                }
+            };
+            let (min, _) = minimize(&sc, fails, 400);
+            assert!(!min.tenants.is_empty());
+            assert_eq!(min.chaos.len(), 1, "seed {seed}: {:?}", min.chaos);
+            assert!(min.replicas <= 2, "seed {seed}: {} replicas", min.replicas);
+            assert!(min.n_requests <= 4, "seed {seed}: {} requests", min.n_requests);
+            assert!(min.sessions.is_none());
+            assert!(!min.prefix_cache);
+            min.validate().expect("minimal scenario stays valid");
+        }
+        assert!(found, "generator never produced a tenanted chaotic scenario");
+    }
+}

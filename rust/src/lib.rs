@@ -280,6 +280,58 @@
 //!   `tests/streaming_metrics.rs`) — and regenerators for every paper
 //!   table and figure.
 //!
+//! ## Chaos harness: one scenario value, one invariant battery
+//!
+//! Every suite above fuzzes its own corner with its own generator and its
+//! own ad-hoc assertions. The [`harness`] module unifies them: a
+//! serializable [`harness::Scenario`] describes a COMPLETE fleet serving
+//! run — workload shape, closed-loop session knobs, tenant registry,
+//! per-replica `PolicySpec`, router, a chaos schedule of
+//! drain/fail/rejoin/scale-up actions, and feature flags (prefix cache,
+//! KV migration, thread count) — with a seeded deterministic generator
+//! ([`harness::from_seed`]) and a byte-stable canonical JSON round-trip.
+//! One reusable battery ([`harness::check_battery`]) checks every law the
+//! individual suites assert, in one place:
+//!
+//! * no request lost or duplicated; every `Arrived` resolves exactly once
+//!   (`Finished`, or counted in `Halted { pending }`);
+//! * token conservation from the last `Arrived`: one `FirstToken`,
+//!   `output_len − 1` `TokenEmitted`, one `Finished`;
+//! * prefill-credit conservation: computed + prefix-credited token·layers
+//!   equal `input_len × n_layers` on clean serves, never fall short on
+//!   re-served/migrated ones; capacity `KvRejected` implies
+//!   `demand > free`;
+//! * tenant budget replay: peak KV-block charge ≤ quota, admitted prefill
+//!   tokens ≤ `burst + rate × t`;
+//! * plan laws I1–I4 for every policy the scenario names (via
+//!   [`sched::audit::drive_to_drain`], the single source both this
+//!   battery and the `sched` property suite drive);
+//! * differential identities: the stepped control-plane path serves
+//!   chaos-free scenarios byte-identically to the plain path, and fleets
+//!   are byte-identical at every thread count (full-fidelity digests).
+//!
+//! A failing scenario shrinks axis-wise ([`harness::minimize`]: chaos
+//! events deleted, fleet collapsed to one replica, features switched off,
+//! request count bisected) and the minimal scenario's canonical JSON is
+//! committed under `rust/tests/regressions/`, where
+//! [`harness::regressions::replay`] re-runs it as a golden forever. The
+//! minimize workflow end to end:
+//!
+//! ```text
+//! $ lpserve fuzz --seed 7 --cases 200 --minimize
+//! case 143 (seed 0x9e3779b97f4a7cf4) FAILED:
+//!   req 5: computed 98304 + credited 0 token-layers != 147456 ...
+//! minimized scenario (4 requests, 1 chaos event, 2 replicas):
+//! {"chaos":[{"kind":"fail","replica":1,"t_s":2.5}], ...}
+//! # commit the JSON under rust/tests/regressions/, fix, replay:
+//! $ lpserve fuzz --replay rust/tests/regressions
+//! ```
+//!
+//! `tests/chaos_harness.rs` locks the pipeline: scenario JSON
+//! byte-stability, generator seed-determinism across threads, the battery
+//! catching deliberately corrupted event streams, shrinker floor bounds,
+//! and committed-regression replay.
+//!
 //! ## The lower layers
 //!
 //! * **L2** — `python/compile/model.py`: JAX per-layer model functions,
@@ -295,6 +347,7 @@
 pub mod cluster;
 pub mod config;
 pub mod engine;
+pub mod harness;
 pub mod kvcache;
 pub mod metrics;
 pub mod model;

@@ -59,6 +59,18 @@
 //!       (`--reasoning-pct P`); prints TTFT + prefix-cache payoff per
 //!       turn depth. `--rate-schedule "0:2,30:8,60:2"` shapes arrivals
 //!       diurnally for any workload arm (simulate --open-loop too).
+//!   fuzz --seed 7 --cases 200 [--minimize] [--replay DIR]
+//!       Chaos × property fuzzing: generate `--cases` random fleet
+//!       scenarios (workload × sessions × tenants × per-replica policy ×
+//!       router × drain/fail/rejoin/scale-up chaos × feature flags) from
+//!       `--seed` and run each through the full invariant battery
+//!       (conservation, plan laws I1–I4, stepped == plain, thread
+//!       byte-identity). On failure the scenario JSON is printed;
+//!       `--minimize` shrinks it axis-wise first (fewer requests, fewer
+//!       chaos events, flags off, one replica) so the minimal JSON can be
+//!       committed under rust/tests/regressions/. `--replay DIR` instead
+//!       replays every committed scenario in DIR through the battery
+//!       (default directory when DIR is `default`).
 //!   info
 //!       Print model/hardware descriptors and artifact status.
 
@@ -91,6 +103,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "cluster" => cmd_cluster(&args),
         "trace" => cmd_trace(&args),
+        "fuzz" => cmd_fuzz(&args),
         "info" => cmd_info(),
         _ => usage(),
     }
@@ -98,7 +111,7 @@ fn main() {
 
 fn usage() {
     eprintln!(
-        "usage: lpserve <report|simulate|sweep|serve|cluster|trace|info> [--flags]\n\
+        "usage: lpserve <report|simulate|sweep|serve|cluster|trace|fuzz|info> [--flags]\n\
          try: lpserve report all | lpserve simulate --policy layered --rate 1.3\n\
          \x20    | lpserve simulate --policy-spec adaptive --dataset sharegpt --rate 3\n\
          \x20    | lpserve simulate --policy-spec \
@@ -112,8 +125,83 @@ fn usage() {
          --tenant-report\n\
          \x20    | lpserve cluster --sessions 8 --turns-mean 4 --think-time-s 2 \
          --toolcall-pct 30 --toolcall-fanout 3 --prefix-cache --router prefix\n\
-         \x20    | lpserve simulate --open-loop --rate-schedule '0:2,30:8,60:2' --horizon 90"
+         \x20    | lpserve simulate --open-loop --rate-schedule '0:2,30:8,60:2' --horizon 90\n\
+         \x20    | lpserve fuzz --seed 7 --cases 200 --minimize\n\
+         \x20    | lpserve fuzz --replay default"
     );
+}
+
+/// `fuzz`: seeded chaos × property fuzzing over random fleet scenarios,
+/// with axis-wise shrinking and committed-regression replay (see the
+/// `layered_prefill::harness` module docs for the invariant catalog).
+fn cmd_fuzz(args: &Args) {
+    use layered_prefill::harness;
+
+    if let Some(dir) = args.opt("replay") {
+        let path = if dir == "default" {
+            harness::regressions::default_dir()
+        } else {
+            std::path::PathBuf::from(dir)
+        };
+        match harness::regressions::replay(&path) {
+            Ok(names) => {
+                for n in &names {
+                    println!("regression '{n}': ok");
+                }
+                println!("{} committed scenarios replayed green", names.len());
+            }
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(1);
+            }
+        }
+        return;
+    }
+
+    let base_seed = args.u64("seed", 0xC0FFEE);
+    let cases = args.usize("cases", 100);
+    let minimize = args.bool("minimize");
+    let mut failures = 0usize;
+    for i in 0..cases as u64 {
+        // Same derivation as util::proptest::check_seeded, so a failing
+        // case index maps back to a reproducible scenario seed.
+        let seed = base_seed ^ i.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let sc = harness::from_seed(seed);
+        match harness::check_battery(&sc) {
+            Ok(()) => {
+                if (i + 1) % 25 == 0 {
+                    println!("{}/{} cases ok", i + 1, cases);
+                }
+            }
+            Err(msg) => {
+                failures += 1;
+                eprintln!("case {i} (seed {seed:#x}) FAILED:\n  {msg}");
+                eprintln!("scenario:\n{}", sc.to_canonical_string());
+                if minimize {
+                    let (min, min_msg) = harness::minimize(
+                        &sc,
+                        |c| harness::check_battery(c).err(),
+                        200,
+                    );
+                    eprintln!(
+                        "minimized ({} requests, {} chaos events, {} replicas):\n  {min_msg}",
+                        min.n_requests,
+                        min.chaos.len(),
+                        min.replicas
+                    );
+                    eprintln!("{}", min.to_canonical_string());
+                    eprintln!(
+                        "commit under rust/tests/regressions/ to pin the fix as a golden"
+                    );
+                }
+            }
+        }
+    }
+    if failures > 0 {
+        eprintln!("{failures}/{cases} cases failed");
+        std::process::exit(1);
+    }
+    println!("all {cases} cases passed the invariant battery");
 }
 
 /// Optional `--rate-schedule "0:2,30:8,60:2"` — piecewise-constant

@@ -1,0 +1,223 @@
+//! Plan-level audit of the normative scheduler invariants I1–I4 (see the
+//! module comment in `sched/mod.rs`):
+//!
+//!  I1  at most one group performs prefill per iteration;
+//!  I2  a prompt token visits each layer's prefill path exactly once
+//!      (token·layer conservation: exactly input_len × n_layers at
+//!      completion, never more along the way);
+//!  I3  every running decode request decodes exactly once per iteration
+//!      (scheduled in every plan, in groups tiling the full layer stack);
+//!  I4  a layer-axis admission (layered cohort / hybrid chunk) completes in
+//!      exactly G consecutive iterations, where G is its group count.
+//!
+//! [`drive_to_drain`] steps a scheduler pipeline over a request set with
+//! emulated engine effects (mirroring `engine::EngineCore::advance`) and
+//! checks all four laws on every plan plus conservation at drain. It is the
+//! single source of the laws: the `sched::properties` suite drives it over
+//! random (trace, policy) pairs, and the chaos harness
+//! ([`crate::harness::invariants`]) drives it over every policy a fuzzed
+//! scenario names.
+
+use std::collections::BTreeMap;
+
+use crate::config::{ModelDesc, SchedulerConfig};
+use crate::kvcache::KvCacheManager;
+use crate::sched::{self, EngineState, Phase};
+use crate::workload::Request;
+use crate::{prop_assert, prop_assert_eq};
+
+/// Iteration budget before the drive declares a livelock.
+pub const MAX_ITERS: usize = 5_000;
+
+/// Drive one (request set, scheduler config) pair to drain, checking I1–I4
+/// on every plan and conservation at the end. `arrivals` pairs each request
+/// with the iteration index at which it arrives (plan-level audits have no
+/// clock; staggering exercises mid-run admission). Returns the first
+/// violated law as an error string.
+pub fn drive_to_drain(
+    cfg: &SchedulerConfig,
+    model: &ModelDesc,
+    arrivals: &[(Request, usize)],
+) -> Result<(), String> {
+    let n_layers = model.n_layers;
+    let mut state = EngineState::new(model.clone(), KvCacheManager::new(200_000, 16), 64);
+    let mut policy = sched::build(cfg, n_layers);
+    let mut pending: Vec<(Request, usize)> = arrivals.to_vec();
+
+    // I4 streak tracking: (prefill ids, pos of first slice) -> group count
+    // of those plans and iterations seen so far.
+    let mut streak: Option<((Vec<u64>, u32), u32, u32)> = None;
+    let mut iter = 0usize;
+    loop {
+        // Deliver arrivals scheduled for this iteration index.
+        pending.retain(|(r, due)| {
+            if *due <= iter {
+                state.arrive(*r);
+                false
+            } else {
+                true
+            }
+        });
+
+        let Some(plan) = policy.plan(&mut state) else {
+            if pending.is_empty() {
+                break;
+            }
+            iter += 1; // idle until the next staggered arrival
+            prop_assert!(iter < MAX_ITERS, "idle livelock");
+            continue;
+        };
+        iter += 1;
+        prop_assert!(iter < MAX_ITERS, "scheduler did not drain");
+
+        // I1: at most one group prefills.
+        prop_assert!(
+            plan.prefill_groups() <= 1,
+            "I1: {} prefill groups ({})",
+            plan.prefill_groups(),
+            policy.name()
+        );
+        // Groups tile the full layer stack.
+        prop_assert_eq!(plan.total_layers(), n_layers);
+
+        // I3: every group carries the identical decode set, so each decoding
+        // request traverses exactly n_layers; and nobody is left out.
+        let first_set: Vec<u64> = plan.groups[0].decode.iter().map(|&(id, _)| id).collect();
+        for gr in &plan.groups {
+            let set: Vec<u64> = gr.decode.iter().map(|&(id, _)| id).collect();
+            prop_assert_eq!(&set, &first_set);
+        }
+        for id in &state.decoding {
+            prop_assert!(
+                first_set.contains(id),
+                "I3: decoding req {id} unscheduled ({})",
+                policy.name()
+            );
+        }
+
+        // I4: a layer-axis prefill streak — same (ids, pos) across
+        // consecutive plans — lasts exactly as many iterations as the plan
+        // has groups. Token-axis policies emit single-group plans, so every
+        // streak is trivially 1-of-1.
+        let prefill_ids: Vec<u64> = plan
+            .groups
+            .iter()
+            .flat_map(|gr| gr.prefill.iter().map(|w| w.req))
+            .collect();
+        let completes = plan
+            .groups
+            .iter()
+            .any(|gr| gr.prefill.iter().any(|w| w.completes));
+        if prefill_ids.is_empty() {
+            prop_assert!(streak.is_none(), "I4: streak interrupted by idle plan");
+        } else {
+            let pos0 = plan
+                .groups
+                .iter()
+                .find_map(|gr| gr.prefill.first())
+                .map(|w| w.pos)
+                .unwrap();
+            let key = (prefill_ids, pos0);
+            let g_expected = plan.groups.len() as u32;
+            match &mut streak {
+                Some((k, exp, seen)) if *k == key => {
+                    prop_assert_eq!(*exp, g_expected);
+                    *seen += 1;
+                }
+                Some(_) => {
+                    // A new slice may only start after the previous streak
+                    // wrapped its groups (cleared below) — changing slices
+                    // mid-streak abandons prefill work.
+                    return Err("I4: prefill streak changed before completing".into());
+                }
+                None => streak = Some((key, g_expected, 1)),
+            }
+            let (_, exp, seen) = streak.as_ref().unwrap();
+            prop_assert!(seen <= exp, "I4: streak of {seen} exceeds G={exp}");
+            if completes {
+                // Prompt done: the slice must have taken exactly G plans.
+                prop_assert_eq!(*seen, *exp);
+            }
+            if seen == exp {
+                // Streak wrapped its group cursor (chunked/orca/static wrap
+                // every iteration, G = 1); the next slice starts fresh.
+                streak = None;
+            }
+        }
+
+        // ---- emulate engine effects (mirrors EngineCore::advance) ----
+        let mut per_req: BTreeMap<u64, (u32, u32, bool)> = BTreeMap::new();
+        for gr in &plan.groups {
+            for w in &gr.prefill {
+                let e = per_req.entry(w.req).or_insert((w.tokens, 0, false));
+                e.1 += gr.n_layers;
+                e.2 |= w.completes;
+            }
+        }
+        let mut done_prefills = Vec::new();
+        for (id, (tokens, layer_sum, w_completes)) in per_req {
+            let r = state.reqs.get_mut(&id).unwrap();
+            r.token_layers_done += tokens as u64 * layer_sum as u64;
+            // I2: never exceed input_len × n_layers.
+            prop_assert!(
+                r.token_layers_done <= r.req.input_len as u64 * n_layers as u64,
+                "I2: req {id} over-prefilled ({})",
+                policy.name()
+            );
+            if w_completes {
+                // I2: exactly input_len × n_layers at completion.
+                prop_assert_eq!(
+                    r.token_layers_done,
+                    r.req.input_len as u64 * n_layers as u64
+                );
+                r.prefill_done = r.req.input_len;
+                done_prefills.push(id);
+            } else {
+                r.prefill_done = (r.token_layers_done / n_layers as u64) as u32;
+            }
+        }
+        for id in done_prefills {
+            let r = state.reqs.get_mut(&id).unwrap();
+            r.generated = 1;
+            state.prefilling.retain(|&x| x != id);
+            if r.done_decoding() {
+                r.phase = Phase::Finished;
+                let _ = state.kv.release(id);
+            } else {
+                r.phase = Phase::Decoding;
+                state.decoding.push(id);
+            }
+        }
+        // Exactly the plan's decode set emits tokens (I3: that set is every
+        // request that was decoding at plan time).
+        for id in first_set {
+            let r = state.reqs.get_mut(&id).unwrap();
+            if r.done_decoding() {
+                continue;
+            }
+            r.generated += 1;
+            if r.done_decoding() {
+                r.phase = Phase::Finished;
+                state.decoding.retain(|&x| x != id);
+                let _ = state.kv.release(id);
+            }
+        }
+    }
+
+    // Conservation at drain: every request finished with exactly its
+    // output budget and a fully-prefilled prompt.
+    for (id, r) in state.reqs.iter() {
+        prop_assert!(
+            r.phase == Phase::Finished,
+            "req {id} not finished ({})",
+            policy.name()
+        );
+        prop_assert_eq!(r.generated, r.req.output_len.max(1));
+        prop_assert_eq!(r.prefill_done, r.req.input_len);
+        prop_assert_eq!(
+            r.token_layers_done,
+            r.req.input_len as u64 * n_layers as u64
+        );
+    }
+    Ok(())
+}

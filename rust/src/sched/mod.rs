@@ -32,6 +32,7 @@ pub mod layered;
 pub mod orca;
 pub mod policy;
 pub mod static_batch;
+pub mod audit;
 pub mod state;
 
 #[cfg(test)]

@@ -11,8 +11,9 @@
 //!  I4  a layer-axis admission (layered cohort / hybrid chunk) completes in
 //!      exactly G consecutive iterations, where G is its group count.
 //!
-//! The emulation mirrors `engine::EngineCore::advance` so the plans are
-//! driven exactly as the engine core drives them.
+//! The plan auditor and engine emulation live in [`crate::sched::audit`]
+//! (shared with the chaos harness); this suite drives it over random
+//! (trace, policy) pairs.
 //!
 //! Coverage spans BOTH scheduler surfaces: legacy direct constructions,
 //! their canonical Policy-API-v2 compositions, random novel pipeline
@@ -20,18 +21,16 @@
 //! policy — I1–I4 are invariants of the pipeline contracts, not of the
 //! five presets.
 
-use std::collections::BTreeMap;
-
 use crate::config::{ModelDesc, Policy, SchedulerConfig};
 use crate::kvcache::KvCacheManager;
 use crate::sched::policy::{
     AdaptiveSpec, AdmissionSpec, ComposerSpec, FairnessSpec, PolicySpec, PreemptionSpec,
     ShaperSpec,
 };
-use crate::sched::{self, EngineState, Phase};
+use crate::sched::{self, EngineState};
 use crate::util::proptest::{check, Gen, PropResult};
 use crate::workload::Request;
-use crate::{prop_assert, prop_assert_eq};
+use crate::prop_assert_eq;
 
 const POLICIES: [Policy; 5] = [
     Policy::Static,
@@ -148,192 +147,17 @@ fn random_config(g: &mut Gen) -> SchedulerConfig {
     cfg
 }
 
-/// Drive one random (trace, policy) pair to drain, checking I1–I4 on every
-/// plan and conservation at the end.
+/// Drive one random (trace, policy) pair to drain via the shared
+/// plan-level auditor ([`crate::sched::audit`]), which checks I1-I4 on
+/// every plan and conservation at the end.
 fn drive(g: &mut Gen) -> PropResult {
     let model = ModelDesc::qwen3_30b_a3b();
-    let n_layers = model.n_layers;
     let cfg = random_config(g);
-    let mut state = EngineState::new(model, KvCacheManager::new(200_000, 16), 64);
-    let mut policy = sched::build(&cfg, n_layers);
-    let mut arrivals = random_requests(g);
-
-    // I4 streak tracking: (prefill ids, pos of first slice) -> group count
-    // of those plans and iterations seen so far.
-    let mut streak: Option<((Vec<u64>, u32), u32, u32)> = None;
-    let mut iter = 0usize;
-    loop {
-        // Deliver arrivals scheduled for this iteration index.
-        arrivals.retain(|(_, r, due)| {
-            if *due <= iter {
-                state.arrive(*r);
-                false
-            } else {
-                true
-            }
-        });
-
-        let Some(plan) = policy.plan(&mut state) else {
-            if arrivals.is_empty() {
-                break;
-            }
-            iter += 1; // idle until the next staggered arrival
-            prop_assert!(iter < 5000, "idle livelock");
-            continue;
-        };
-        iter += 1;
-        prop_assert!(iter < 5000, "scheduler did not drain");
-
-        // I1: at most one group prefills.
-        prop_assert!(
-            plan.prefill_groups() <= 1,
-            "I1: {} prefill groups ({})",
-            plan.prefill_groups(),
-            policy.name()
-        );
-        // Groups tile the full layer stack.
-        prop_assert_eq!(plan.total_layers(), n_layers);
-
-        // I3: every group carries the identical decode set, so each decoding
-        // request traverses exactly n_layers; and nobody is left out.
-        let first_set: Vec<u64> = plan.groups[0].decode.iter().map(|&(id, _)| id).collect();
-        for gr in &plan.groups {
-            let set: Vec<u64> = gr.decode.iter().map(|&(id, _)| id).collect();
-            prop_assert_eq!(&set, &first_set);
-        }
-        for id in &state.decoding {
-            prop_assert!(
-                first_set.contains(id),
-                "I3: decoding req {id} unscheduled ({})",
-                policy.name()
-            );
-        }
-
-        // I4: a layer-axis prefill streak — same (ids, pos) across
-        // consecutive plans — lasts exactly as many iterations as the plan
-        // has groups. Token-axis policies emit single-group plans, so every
-        // streak is trivially 1-of-1.
-        let prefill_ids: Vec<u64> = plan
-            .groups
-            .iter()
-            .flat_map(|gr| gr.prefill.iter().map(|w| w.req))
-            .collect();
-        let completes = plan
-            .groups
-            .iter()
-            .any(|gr| gr.prefill.iter().any(|w| w.completes));
-        if prefill_ids.is_empty() {
-            prop_assert!(streak.is_none(), "I4: streak interrupted by idle plan");
-        } else {
-            let pos0 = plan
-                .groups
-                .iter()
-                .find_map(|gr| gr.prefill.first())
-                .map(|w| w.pos)
-                .unwrap();
-            let key = (prefill_ids, pos0);
-            let g_expected = plan.groups.len() as u32;
-            match &mut streak {
-                Some((k, exp, seen)) if *k == key => {
-                    prop_assert_eq!(*exp, g_expected);
-                    *seen += 1;
-                }
-                Some(_) => {
-                    // A new slice may only start after the previous streak
-                    // wrapped its groups (cleared below) — changing slices
-                    // mid-streak abandons prefill work.
-                    return Err("I4: prefill streak changed before completing".into());
-                }
-                None => streak = Some((key, g_expected, 1)),
-            }
-            let (_, exp, seen) = streak.as_ref().unwrap();
-            prop_assert!(seen <= exp, "I4: streak of {seen} exceeds G={exp}");
-            if completes {
-                // Prompt done: the slice must have taken exactly G plans.
-                prop_assert_eq!(*seen, *exp);
-            }
-            if seen == exp {
-                // Streak wrapped its group cursor (chunked/orca/static wrap
-                // every iteration, G = 1); the next slice starts fresh.
-                streak = None;
-            }
-        }
-
-        // ---- emulate engine effects (mirrors EngineCore::advance) ----
-        let mut per_req: BTreeMap<u64, (u32, u32, bool)> = BTreeMap::new();
-        for gr in &plan.groups {
-            for w in &gr.prefill {
-                let e = per_req.entry(w.req).or_insert((w.tokens, 0, false));
-                e.1 += gr.n_layers;
-                e.2 |= w.completes;
-            }
-        }
-        let mut done_prefills = Vec::new();
-        for (id, (tokens, layer_sum, w_completes)) in per_req {
-            let r = state.reqs.get_mut(&id).unwrap();
-            r.token_layers_done += tokens as u64 * layer_sum as u64;
-            // I2: never exceed input_len × n_layers.
-            prop_assert!(
-                r.token_layers_done <= r.req.input_len as u64 * n_layers as u64,
-                "I2: req {id} over-prefilled ({})",
-                policy.name()
-            );
-            if w_completes {
-                // I2: exactly input_len × n_layers at completion.
-                prop_assert_eq!(
-                    r.token_layers_done,
-                    r.req.input_len as u64 * n_layers as u64
-                );
-                r.prefill_done = r.req.input_len;
-                done_prefills.push(id);
-            } else {
-                r.prefill_done = (r.token_layers_done / n_layers as u64) as u32;
-            }
-        }
-        for id in done_prefills {
-            let r = state.reqs.get_mut(&id).unwrap();
-            r.generated = 1;
-            state.prefilling.retain(|&x| x != id);
-            if r.done_decoding() {
-                r.phase = Phase::Finished;
-                let _ = state.kv.release(id);
-            } else {
-                r.phase = Phase::Decoding;
-                state.decoding.push(id);
-            }
-        }
-        // Exactly the plan's decode set emits tokens (I3: that set is every
-        // request that was decoding at plan time).
-        for id in first_set {
-            let r = state.reqs.get_mut(&id).unwrap();
-            if r.done_decoding() {
-                continue;
-            }
-            r.generated += 1;
-            if r.done_decoding() {
-                r.phase = Phase::Finished;
-                state.decoding.retain(|&x| x != id);
-                let _ = state.kv.release(id);
-            }
-        }
-    }
-
-    // Conservation at drain: every request finished with exactly its
-    // output budget and a fully-prefilled prompt.
-    for (id, r) in state.reqs.iter() {
-        prop_assert!(
-            r.phase == Phase::Finished,
-            "req {id} not finished ({})",
-            policy.name()
-        );
-        prop_assert_eq!(r.generated, r.req.output_len.max(1));
-        prop_assert_eq!(r.prefill_done, r.req.input_len);
-        prop_assert_eq!(
-            r.token_layers_done,
-            r.req.input_len as u64 * n_layers as u64
-        );
-    }
-    Ok(())
+    let arrivals: Vec<(Request, usize)> = random_requests(g)
+        .into_iter()
+        .map(|(_, r, due)| (r, due))
+        .collect();
+    sched::audit::drive_to_drain(&cfg, &model, &arrivals)
 }
 
 #[test]

@@ -27,7 +27,10 @@ pub struct Gen {
 }
 
 impl Gen {
-    fn new(seed: u64) -> Self {
+    /// Fresh generator from a seed. Public so callers outside `check`
+    /// (e.g. the chaos-harness scenario generator) can draw from the same
+    /// deterministic stream a property run would see.
+    pub fn new(seed: u64) -> Self {
         Gen {
             rng: Rng::new(seed),
             draws: Vec::new(),

@@ -1,0 +1,254 @@
+//! Chaos × property harness acceptance locks.
+//!
+//! * Random scenarios sampled from the seeded generator pass the FULL
+//!   invariant battery (`harness::check_battery`): conservation laws,
+//!   plan laws I1–I4, stepped == plain, thread byte-identity.
+//! * Scenario JSON round-trips byte-stably (canonical form is a fixpoint
+//!   of parse ∘ serialize) and the generator is seed-deterministic even
+//!   across spawned threads.
+//! * The battery CATCHES corruption: deliberately dropping a `Finished`
+//!   or a `TokenEmitted` from a real run's event stream, or forging a
+//!   demand ≤ free capacity rejection, each flips a law.
+//! * An injected conservation bug is caught and SHRUNK within the
+//!   acceptance bounds (≤ 4 requests, ≤ 1 chaos event, ≤ 2 replicas).
+//! * Every committed scenario under `tests/regressions/` replays green
+//!   through the battery, in canonical byte form.
+
+use layered_prefill::harness::{self, invariants, regressions, Scenario};
+use layered_prefill::serve::EngineEvent;
+use layered_prefill::tenant::RejectReason;
+use layered_prefill::util::proptest::check_seeded;
+
+// ---------------------------------------------------------------------------
+// The battery over random scenarios.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_random_scenarios_pass_the_battery() {
+    check_seeded("chaos battery over random scenarios", 12, 0xF1EE7, |g| {
+        let seed = g.int(0, 1 << 20) as u64;
+        let sc = harness::from_seed(seed);
+        harness::check_battery(&sc).map_err(|e| {
+            format!(
+                "scenario seed {seed}: {e}\nscenario (reproduce with `lpserve fuzz`, shrink \
+                 with --minimize):\n{}",
+                sc.to_canonical_string()
+            )
+        })
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Scenario JSON: byte-stable round-trip; generator: seed determinism.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn scenario_json_round_trip_is_byte_stable() {
+    for seed in 0..150u64 {
+        let sc = harness::from_seed(seed);
+        let canonical = sc.to_canonical_string();
+        let back = Scenario::parse(&canonical)
+            .unwrap_or_else(|e| panic!("seed {seed}: canonical form does not parse: {e}"));
+        assert_eq!(back, sc, "seed {seed}: value round-trip");
+        assert_eq!(
+            back.to_canonical_string(),
+            canonical,
+            "seed {seed}: byte round-trip"
+        );
+        // Whitespace-mangled input re-canonicalizes to the same bytes.
+        // Perturb only STRUCTURAL positions (adjacent to an unescaped
+        // quote or document edge) — colons/commas inside string values
+        // (policy specs, tenant grammars) are scenario content.
+        let pretty = format!(
+            "\n  {}  \n",
+            canonical
+                .replace("{\"", "{ \"")
+                .replace(",\"", ",\n  \"")
+                .replace("\":", "\" : ")
+        );
+        let reparsed = Scenario::parse(&pretty)
+            .unwrap_or_else(|e| panic!("seed {seed}: pretty form does not parse: {e}"));
+        assert_eq!(reparsed.to_canonical_string(), canonical);
+    }
+}
+
+#[test]
+fn generator_is_seed_deterministic_across_threads() {
+    let reference: Vec<String> = (0..40u64)
+        .map(|s| harness::from_seed(s).to_canonical_string())
+        .collect();
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            std::thread::spawn(|| {
+                (0..40u64)
+                    .map(|s| harness::from_seed(s).to_canonical_string())
+                    .collect::<Vec<String>>()
+            })
+        })
+        .collect();
+    for h in handles {
+        let got = h.join().expect("generator thread");
+        assert_eq!(got, reference, "generator output depends on the thread");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The battery catches corruption (the checker is not vacuously green).
+// ---------------------------------------------------------------------------
+
+/// A small, chaos-free scenario every corruption test reuses.
+fn probe_scenario() -> Scenario {
+    let mut sc = Scenario::baseline();
+    sc.n_requests = 4;
+    sc.fixed_output = 6;
+    sc
+}
+
+#[test]
+fn battery_catches_a_dropped_finished_event() {
+    let sc = probe_scenario();
+    let mut out = harness::run(&sc).expect("probe scenario runs");
+    invariants::check_outcome(&sc, &out).expect("uncorrupted run passes");
+
+    let pos = out
+        .log
+        .events
+        .iter()
+        .rposition(|(_, e)| matches!(e, EngineEvent::Finished { .. }))
+        .expect("probe run finishes requests");
+    out.log.events.remove(pos);
+    let err = invariants::check_outcome(&sc, &out)
+        .expect_err("a lost Finished must flip the battery");
+    assert!(
+        err.contains("Finished"),
+        "error should name the broken law: {err}"
+    );
+}
+
+#[test]
+fn battery_catches_a_dropped_token_event() {
+    let sc = probe_scenario();
+    let mut out = harness::run(&sc).expect("probe scenario runs");
+
+    let pos = out
+        .log
+        .events
+        .iter()
+        .position(|(_, e)| matches!(e, EngineEvent::TokenEmitted { .. }))
+        .expect("probe run emits tokens");
+    out.log.events.remove(pos);
+    let err = invariants::check_outcome(&sc, &out)
+        .expect_err("a lost TokenEmitted must flip the battery");
+    assert!(
+        err.contains("TokenEmitted"),
+        "error should name the broken law: {err}"
+    );
+}
+
+#[test]
+fn battery_catches_a_forged_capacity_rejection() {
+    let sc = probe_scenario();
+    let mut out = harness::run(&sc).expect("probe scenario runs");
+
+    // A KvCapacity rejection claiming demand <= free is a contradiction.
+    out.log.events.push((
+        0,
+        EngineEvent::KvRejected {
+            t_s: 0.5,
+            id: 0,
+            demand: 4,
+            free: 100,
+            reason: RejectReason::KvCapacity,
+        },
+    ));
+    let err = invariants::check_outcome(&sc, &out)
+        .expect_err("demand <= free under KvCapacity must flip the battery");
+    assert!(err.contains("demand"), "error should name the law: {err}");
+}
+
+#[test]
+fn battery_catches_a_dropped_prefill_group() {
+    let sc = probe_scenario();
+    let mut out = harness::run(&sc).expect("probe scenario runs");
+
+    let pos = out
+        .log
+        .events
+        .iter()
+        .position(|(_, e)| matches!(e, EngineEvent::PrefillGroupDone { .. }))
+        .expect("probe run prefills");
+    out.log.events.remove(pos);
+    let err = invariants::check_outcome(&sc, &out)
+        .expect_err("lost prefill token-layers must flip the battery");
+    assert!(
+        err.contains("token-layers"),
+        "error should name the law: {err}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Injected bug, end to end: caught by the battery, shrunk within bounds.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn injected_conservation_bug_is_caught_and_shrunk_within_bounds() {
+    // The injected bug: the "engine" silently loses the last emitted token
+    // of every run — a conservation violation in any scenario that
+    // finishes at least one request.
+    let fails = |sc: &Scenario| -> Option<String> {
+        let mut out = harness::run(sc).ok()?;
+        let pos = out
+            .log
+            .events
+            .iter()
+            .rposition(|(_, e)| matches!(e, EngineEvent::TokenEmitted { .. }))?;
+        out.log.events.remove(pos);
+        invariants::check_outcome(sc, &out).err()
+    };
+
+    // Start from a RICH scenario — multi-replica with chaos — so the
+    // shrinker has real distance to cover.
+    let seed = (0..400u64)
+        .find(|&s| {
+            let sc = harness::from_seed(s);
+            sc.replicas >= 2 && !sc.chaos.is_empty() && fails(&sc).is_some()
+        })
+        .expect("generator yields a rich failing scenario");
+    let sc = harness::from_seed(seed);
+
+    let (min, msg) = harness::minimize(&sc, fails, 80);
+    assert!(
+        msg.contains("TokenEmitted"),
+        "shrunk failure keeps the violated law: {msg}"
+    );
+    // Acceptance bounds: <= 4 requests, <= 1 chaos event, <= 2 replicas.
+    assert!(min.n_requests <= 4, "shrunk to {} requests", min.n_requests);
+    assert!(min.chaos.len() <= 1, "shrunk to {} chaos events", min.chaos.len());
+    assert!(min.replicas <= 2, "shrunk to {} replicas", min.replicas);
+    // The bug needs none of the optional features; the shrinker turns
+    // them all off.
+    assert!(min.sessions.is_none());
+    assert!(min.tenants.is_empty());
+    assert!(!min.prefix_cache);
+    min.validate().expect("shrunk scenario stays valid");
+    // And the minimal counterexample is committable as-is.
+    let replayed = Scenario::parse(&min.to_canonical_string()).expect("canonical JSON");
+    assert_eq!(replayed, min);
+}
+
+// ---------------------------------------------------------------------------
+// Committed regression goldens.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn committed_regressions_replay_green() {
+    let dir = regressions::default_dir();
+    let names = regressions::replay(&dir)
+        .unwrap_or_else(|e| panic!("regression replay failed: {e}"));
+    assert!(
+        names.len() >= 2,
+        "expected at least 2 committed scenarios under {}, found {:?}",
+        dir.display(),
+        names
+    );
+}

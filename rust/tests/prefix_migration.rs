@@ -19,6 +19,9 @@ use layered_prefill::cluster::{
     AdaptiveSpill, DrainController, PrefixAffinity, ReplicaState, ReplicaView, Router,
 };
 use layered_prefill::config::{Dataset, ModelDesc, Policy, WorkloadSpec};
+// Σ tokens×layers / Σ cached prefix tokens per request — shared with the
+// chaos harness's prefill-conservation law.
+use layered_prefill::harness::invariants::{credited_tokens, prefill_token_layers};
 use layered_prefill::prop_assert;
 use layered_prefill::serve::{EngineEvent, EventLog, Session, SessionStatus};
 use layered_prefill::util::proptest::check;
@@ -26,37 +29,6 @@ use layered_prefill::workload::{Request, Trace, WorkloadGen};
 
 fn n_layers() -> u64 {
     ModelDesc::qwen3_30b_a3b().n_layers as u64
-}
-
-/// Σ tokens×layers over every PrefillGroupDone for `id`, fleet-wide.
-fn prefill_token_layers(log: &EventLog, id: u64) -> u64 {
-    log.events
-        .iter()
-        .map(|(_, e)| match e {
-            EngineEvent::PrefillGroupDone {
-                id: i,
-                layers,
-                tokens,
-                ..
-            } if *i == id => *tokens as u64 * *layers as u64,
-            _ => 0,
-        })
-        .sum()
-}
-
-/// Σ cached_tokens over every PrefixHit for `id`.
-fn credited_tokens(log: &EventLog, id: u64) -> u64 {
-    log.events
-        .iter()
-        .map(|(_, e)| match e {
-            EngineEvent::PrefixHit {
-                id: i,
-                cached_tokens,
-                ..
-            } if *i == id => *cached_tokens as u64,
-            _ => 0,
-        })
-        .sum()
 }
 
 fn shared_prefix_trace(n: usize, rate: f64, seed: u64, prefix: u32, groups: u32) -> Trace {

@@ -3,13 +3,16 @@
 //! exactly — one `FirstToken` plus `output_len - 1` `TokenEmitted` per
 //! `Finished` request, `Admitted` + `KvRejected` covering every `Arrived`
 //! request, and one `ReplicaDrained` per replica on a drained run.
-
-use std::collections::BTreeSet;
+//!
+//! The laws themselves live in `harness::invariants` (the chaos harness
+//! checks the same battery over randomized scenarios); these tests pin
+//! them to specific hand-built workloads.
 
 use layered_prefill::cluster::{LeastOutstandingKv, ReplicaSpec};
 use layered_prefill::config::{
     Dataset, HardwareDesc, ModelDesc, Policy, SchedulerConfig, WorkloadSpec,
 };
+use layered_prefill::harness::invariants;
 use layered_prefill::kvcache::KvCacheManager;
 use layered_prefill::sched::EngineState;
 use layered_prefill::serve::{EngineEvent, EventLog, Session, SessionStatus};
@@ -41,29 +44,13 @@ fn token_conservation_per_finished_request() {
     for policy in [Policy::Layered, Policy::Chunked, Policy::Hybrid] {
         let (log, _, n) = run_logged(policy, 1, &trace);
         assert_eq!(n, 30, "{policy:?}");
-        for req in &trace.requests {
-            let evs = log.for_request(req.id);
-            let first = evs
-                .iter()
-                .filter(|e| matches!(e, EngineEvent::FirstToken { .. }))
-                .count();
-            let toks = evs
-                .iter()
-                .filter(|e| matches!(e, EngineEvent::TokenEmitted { .. }))
-                .count();
-            let fin = evs
-                .iter()
-                .filter(|e| matches!(e, EngineEvent::Finished { .. }))
-                .count();
-            assert_eq!(first, 1, "{policy:?} req {}", req.id);
-            assert_eq!(fin, 1, "{policy:?} req {}", req.id);
-            assert_eq!(
-                toks as u32,
-                req.output_len - 1,
-                "{policy:?} req {}: one FirstToken + output_len-1 decode tokens",
-                req.id
-            );
-        }
+        // Drained run: every arrival finishes exactly once, and each
+        // finished request accounts for 1 FirstToken + output_len-1
+        // TokenEmitted + 1 Finished.
+        invariants::check_event_conservation(&log, SessionStatus::Drained)
+            .unwrap_or_else(|e| panic!("{policy:?}: {e}"));
+        invariants::check_token_conservation(&log)
+            .unwrap_or_else(|e| panic!("{policy:?}: {e}"));
     }
 }
 
@@ -84,26 +71,10 @@ fn admission_accounting_covers_every_arrival() {
             admitted + rejected >= arrived,
             "{replicas} replicas: {admitted} + {rejected} < {arrived}"
         );
-        // Every Admitted id is unique and was Arrived first.
-        let mut admitted_ids = BTreeSet::new();
-        let mut arrived_ids = BTreeSet::new();
-        for (_, e) in &log.events {
-            match e {
-                EngineEvent::Arrived { req, .. } => {
-                    assert!(arrived_ids.insert(req.id), "req {} arrived twice", req.id);
-                }
-                EngineEvent::Admitted { id, .. } => {
-                    assert!(arrived_ids.contains(id), "req {id} admitted before arrival");
-                    assert!(admitted_ids.insert(*id), "req {id} admitted twice");
-                }
-                _ => {}
-            }
-        }
-        // One drain notification per replica.
-        assert_eq!(
-            log.count(|e| matches!(e, EngineEvent::ReplicaDrained { .. })),
-            replicas
-        );
+        // Unique arrivals, Admitted-after-Arrived, one Admitted per id,
+        // one ReplicaDrained per replica: the chaos-free drained law.
+        invariants::check_admission_accounting(&log, SessionStatus::Drained, true, replicas)
+            .unwrap_or_else(|e| panic!("{replicas} replicas: {e}"));
     }
 }
 
@@ -138,11 +109,8 @@ fn kv_rejections_surface_as_backpressure() {
     assert_eq!(report.fleet.requests.len(), 12);
     let rejected = log.count(|e| matches!(e, EngineEvent::KvRejected { .. }));
     assert!(rejected > 0, "tiny KV pool must produce rejections");
-    for (_, e) in &log.events {
-        if let EngineEvent::KvRejected { demand, free, .. } = e {
-            assert!(demand > free, "rejection implies demand {demand} > free {free}");
-        }
-    }
+    // Every rejection must be honest: demand strictly above free capacity.
+    invariants::check_kv_rejections(&log).unwrap_or_else(|e| panic!("{e}"));
 }
 
 #[test]

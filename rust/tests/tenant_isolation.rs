@@ -22,6 +22,7 @@
 use layered_prefill::cluster::{build_router, DrainController, ReplicaSpec};
 use layered_prefill::config::slo::SloSpec;
 use layered_prefill::config::{Dataset, HardwareDesc, ModelDesc, Policy, WorkloadSpec};
+use layered_prefill::harness::invariants;
 use layered_prefill::kvcache::KvCacheManager;
 use layered_prefill::metrics::StreamingSlo;
 use layered_prefill::sched::policy::{
@@ -428,10 +429,6 @@ fn run_single(
     (rep, log)
 }
 
-fn blocks_for(input: u32, output: u32) -> u64 {
-    ((input + output) as u64).div_ceil(16)
-}
-
 #[test]
 fn prop_quota_blocks_conserved_and_nothing_lost() {
     check("per-tenant KV charge never exceeds quota", 30, |g| {
@@ -460,34 +457,13 @@ fn prop_quota_blocks_conserved_and_nothing_lost() {
             kv_block_quota: quota,
             ..TenantSpec::new(1)
         });
-        let (rep, log) = run_single(&trace, reg, policy);
+        let (rep, log) = run_single(&trace, reg.clone(), policy);
 
         // Replay the event stream: tenant 1's concurrently-charged blocks
-        // must never exceed its quota, and a quota that every request
-        // individually fits must not strand anything.
-        let mut charged: u64 = 0;
-        let mut peak: u64 = 0;
-        for (_, ev) in &log.events {
-            match ev {
-                EngineEvent::Admitted { id, .. } => {
-                    let r = &trace.requests[*id as usize];
-                    if r.tenant == 1 {
-                        charged += blocks_for(r.input_len, r.output_len);
-                        peak = peak.max(charged);
-                    }
-                }
-                EngineEvent::Finished { id, .. } => {
-                    let r = &trace.requests[*id as usize];
-                    if r.tenant == 1 {
-                        charged -= blocks_for(r.input_len, r.output_len);
-                    }
-                }
-                _ => {}
-            }
-        }
-        if peak > quota {
-            return Err(format!("peak charge {peak} blocks > quota {quota}"));
-        }
+        // must never exceed its quota (the harness's shared quota law), and
+        // a quota that every request individually fits must not strand
+        // anything.
+        invariants::check_tenant_quota_law(&log, &trace, &reg)?;
         if rep.status != SessionStatus::Drained {
             return Err(format!("session did not drain: {:?}", rep.status));
         }
@@ -528,21 +504,11 @@ fn prop_token_bucket_bounds_admitted_prefill() {
             burst_tokens: burst,
             ..TenantSpec::new(1)
         });
-        let (rep, log) = run_single(&trace, reg, Policy::Chunked);
+        let (rep, log) = run_single(&trace, reg.clone(), Policy::Chunked);
 
-        let mut admitted_tokens = 0.0f64;
-        for (_, ev) in &log.events {
-            if let EngineEvent::Admitted { t_s, id } = ev {
-                admitted_tokens += trace.requests[*id as usize].input_len as f64;
-                let bound = burst + rate * *t_s + 0.5;
-                if admitted_tokens > bound {
-                    return Err(format!(
-                        "admitted {admitted_tokens} prefill tokens by t={t_s:.3}s, \
-                         bucket bound {bound:.1} (rate {rate}, burst {burst})"
-                    ));
-                }
-            }
-        }
+        // The harness's shared token-bucket law: cumulative admitted
+        // prefill tokens never exceed burst + rate * t.
+        invariants::check_token_bucket_law(&log, &trace, &reg)?;
         // Rate limiting paces, it must not lose: every request finishes
         // (the engine idles to the next bucket-refill instant at the
         // drain tail instead of declaring throttled work stuck).
